@@ -1,0 +1,61 @@
+//! Framework import (§4.1): load a JAX-lowered HLO artifact into Relay IR,
+//! type check + optimize it, and verify the imported program matches the
+//! PJRT execution of the original artifact bit-for-bit-ish.
+//!
+//!     make artifacts && cargo run --release --example import_jax
+
+use relay::eval::{eval_main, Value};
+use relay::runtime::Runtime;
+use relay::tensor::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let path = dir.join("mlp_jnp.hlo.txt");
+    if !path.exists() {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    }
+
+    // Import HLO text -> Relay IR.
+    let module = relay::frontend::hlo::import_hlo_file(&path)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = relay::ty::check_module(&module).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("imported @main: {}", report.def_types["main"]);
+
+    // Random inputs per the manifest.
+    let manifest = relay::runtime::manifest::load(&dir.join("manifest.json"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let entry = &manifest["mlp_jnp"];
+    let mut rng = Rng::new(3);
+    let inputs: Vec<relay::tensor::Tensor> = entry
+        .inputs
+        .iter()
+        .map(|s| rng.normal_tensor(&s.shape, 0.5))
+        .collect();
+
+    // Relay-side evaluation of the imported program.
+    let relay_out = eval_main(
+        &module,
+        inputs.iter().map(|t| Value::Tensor(t.clone())).collect(),
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let relay_t = match &relay_out {
+        Value::Tuple(vs) => vs[0].tensor().clone(),
+        Value::Tensor(t) => t.clone(),
+        other => anyhow::bail!("unexpected output {other:?}"),
+    };
+
+    // PJRT execution of the original artifact.
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_artifact(&path)?;
+    let pjrt_out = rt.execute(&exe, &inputs)?;
+
+    let diff = relay_t.max_abs_diff(&pjrt_out[0]);
+    println!(
+        "imported-Relay vs PJRT max abs diff: {diff:.2e} over {:?}",
+        relay_t.shape()
+    );
+    assert!(diff < 1e-3, "import mismatch: {diff}");
+    println!("import path verified: JAX -> HLO text -> Relay IR == PJRT execution");
+    Ok(())
+}

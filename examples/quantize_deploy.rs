@@ -1,0 +1,46 @@
+//! Push-button quantization + accelerator deployment (the Fig. 13/14
+//! story): take an fp32 ResNet, run annotate -> calibrate -> realize, and
+//! deploy to the (simulated) VTA accelerator, reporting latency and the
+//! quantization error.
+//!
+//!     cargo run --release --example quantize_deploy
+
+use relay::eval::{eval_main, Value};
+use relay::graphrt::GraphRt;
+use relay::quant::{quantize_module, QConfig};
+use relay::vta::{simulate, VtaConfig};
+use relay::zoo::{self, Model};
+
+fn main() -> anyhow::Result<()> {
+    let (m, input) = zoo::vision::build(Model::ResNet18, 42);
+    println!("model: resnet-18 (reduced), input {:?}", input.shape());
+
+    // Float reference.
+    let float_out = eval_main(&m, vec![Value::Tensor(input.clone())])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    for cfg in [QConfig::i8_i16(), QConfig::i8_i32(), QConfig::i16_i32()] {
+        let calib = vec![vec![Value::Tensor(input.clone())]];
+        let q = quantize_module(&m, cfg, &calib).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let q_out = eval_main(&q, vec![Value::Tensor(input.clone())])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let err = float_out.tensor().max_abs_diff(q_out.tensor());
+
+        let anfed = relay::pass::anf::run(&q);
+        let g = GraphRt::compile(anfed.def("main").unwrap())?;
+        let vcfg = VtaConfig::default();
+        let inputs = vec![Value::Tensor(input.clone())];
+        let (_, cpu) = simulate(&g, &inputs, &vcfg, false).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let (_, vta) = simulate(&g, &inputs, &vcfg, true).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "scheme {:>6}: max quant err {:.4}, ARM-sim {:.3} ms, VTA-sim {:.3} ms ({:.2}x, {} ops offloaded)",
+            cfg.name(),
+            err,
+            cpu.total_ms(&vcfg),
+            vta.total_ms(&vcfg),
+            cpu.total_time_s(&vcfg) / vta.total_time_s(&vcfg),
+            vta.offloaded_ops,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: parse a Relay program, type check it, optimize at -O3, and
+//! run it on all three executors (interpreter, graph runtime, XLA AoT).
+//!
+//!     cargo run --release --example quickstart
+
+use relay::eval::{eval_main, Value};
+use relay::graphrt::GraphRt;
+use relay::pass::{optimize, OptLevel};
+use relay::runtime::Runtime;
+use relay::tensor::Rng;
+
+const PROGRAM: &str = r#"
+def @main(%x: Tensor[(1, 3, 16, 16), float32],
+          %w: Tensor[(8, 3, 3, 3), float32],
+          %b: Tensor[(8), float32]) {
+  let %c = nn.conv2d(%x, %w, padding=1);
+  let %biased = nn.bias_add(%c, %b, axis=1);
+  let %act = nn.relu(%biased);
+  let %pooled = nn.max_pool2d(%act, pool_size=2);
+  nn.batch_flatten(%pooled)
+}
+"#;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Parse + type check (shape inference via type relations).
+    let module = relay::ir::parse_module(PROGRAM).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = relay::ty::check_module(&module).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("type of @main: {}", report.def_types["main"]);
+
+    // 2. Optimize: -O3 = fusion + constant folding + FoldScaleAxis +
+    //    AlterOpLayout + CSE (paper §5.2 tiers).
+    let optimized = optimize(&module, OptLevel::O3, true).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\n-O3 module:\n{}", relay::ir::print_module(&optimized));
+
+    // 3. Run on the three executors and check they agree.
+    let mut rng = Rng::new(0);
+    let x = rng.normal_tensor(&[1, 3, 16, 16], 1.0);
+    let w = rng.normal_tensor(&[8, 3, 3, 3], 0.4);
+    let b = rng.normal_tensor(&[8], 0.1);
+    let args = vec![
+        Value::Tensor(x.clone()),
+        Value::Tensor(w.clone()),
+        Value::Tensor(b.clone()),
+    ];
+
+    let interp_out = eval_main(&module, args.clone()).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("interpreter out shape: {:?}", interp_out.tensor().shape());
+
+    let anfed = relay::pass::anf::run(&optimized);
+    let graph = GraphRt::compile(anfed.def("main").unwrap())?;
+    let graph_out = graph.run(&args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "graph runtime agrees: {} ({} kernel nodes after fusion)",
+        interp_out.tensor().allclose(graph_out.tensor(), 1e-3, 1e-3),
+        graph.kernel_nodes
+    );
+
+    let rt = Runtime::cpu()?;
+    let compiled = relay::backend::xla::compile_main(&rt, &module, OptLevel::O3)?;
+    let xla_out = compiled.run(&rt, &[x, w, b])?;
+    println!(
+        "XLA AoT agrees:       {}",
+        interp_out.tensor().allclose(&xla_out[0], 1e-3, 1e-3)
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Batched inference serving demo: starts the coordinator's server over
+//! the `mlp_forward` AOT artifact, fires concurrent client requests, and
+//! reports latency/throughput — the deployment story with Python gone.
+//!
+//!     make artifacts && cargo run --release --example serve
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use relay::coordinator::server::{artifacts_available, classify, serve, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !artifacts_available(&dir) {
+        println!("artifacts missing; run `make artifacts` first");
+        return Ok(());
+    }
+    let port = 7497;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stats = serve(
+        ServerConfig { port, artifact_dir: dir, ..Default::default() },
+        stop.clone(),
+    )?;
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let clients = 8;
+    let per_client = 25;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = relay::tensor::Rng::new(c as u64);
+                let mut lat = Vec::new();
+                for _ in 0..per_client {
+                    let features: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+                    let t = Instant::now();
+                    let pred = classify(port, &features).expect("classify");
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    assert!((0..10).contains(&pred));
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    println!(
+        "served {} requests in {:.2}s  ({:.0} req/s)",
+        n,
+        total,
+        n as f64 / total
+    );
+    println!(
+        "latency p50 {:.2} ms, p95 {:.2} ms, max {:.2} ms",
+        latencies[n / 2],
+        latencies[n * 95 / 100],
+        latencies[n - 1]
+    );
+    println!(
+        "batches formed: {} (dynamic batching amortized {:.1} req/batch)",
+        stats.batches.load(Ordering::Relaxed),
+        n as f64 / stats.batches.load(Ordering::Relaxed).max(1) as f64
+    );
+    stop.store(true, Ordering::Relaxed);
+    Ok(())
+}

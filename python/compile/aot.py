@@ -1,0 +1,122 @@
+"""AOT pipeline: lower the L2 JAX models to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+results via ``HloModuleProto::from_text_file`` -> PJRT compile -> execute.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Every artifact gets a manifest entry (shapes/dtypes of inputs and outputs)
+so the Rust runtime and its tests can construct matching literals without
+re-parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+
+def _manifest_entry(args_flat, out_flat):
+    def desc(s):
+        return {"shape": list(s.shape), "dtype": str(s.dtype)}
+    return {
+        "inputs": [desc(_spec(a)) for a in args_flat],
+        "outputs": [desc(_spec(o)) for o in out_flat],
+    }
+
+
+def artifacts():
+    """name -> (fn, example_args).  All fns return tuples (return_tuple=True)."""
+    key = jax.random.PRNGKey(0)
+    B = 32
+
+    mlp_params = model.mlp_init(key)
+    x = jnp.zeros((B, model.MLP_IN), jnp.float32)
+    labels = jnp.zeros((B,), jnp.int32)
+    lr = jnp.float32(0.1)
+
+    cnn_params = model.cnn_init(key)
+    img = jnp.zeros((8, 3, model.CNN_IMG, model.CNN_IMG), jnp.float32)
+
+    rnn_params = model.rnn_init(key)
+    xs = jnp.zeros((16, 8, model.RNN_IN), jnp.float32)
+    h0 = jnp.zeros((8, model.RNN_HIDDEN), jnp.float32)
+
+    def mlp_forward(*args):
+        return (model.mlp_forward(args[:-1], args[-1]),)
+
+    def mlp_jnp(*args):
+        return (model.mlp_forward_jnp(args[:-1], args[-1]),)
+
+    def mlp_train_step(*args):
+        params, (xb, yb, lrv) = args[:-3], args[-3:]
+        return model.mlp_train_step(params, xb, yb, lrv)
+
+    def cnn_forward(*args):
+        return (model.cnn_forward(args[:-1], args[-1]),)
+
+    def rnn_forward(*args):
+        return (model.rnn_forward(args[:-2], args[-2], args[-1]),)
+
+    return {
+        "mlp_forward": (mlp_forward, (*mlp_params, x)),
+        "mlp_jnp": (mlp_jnp, (*mlp_params, x)),
+        "mlp_train_step": (mlp_train_step, (*mlp_params, x, labels, lr)),
+        "cnn_forward": (cnn_forward, (*cnn_params, img)),
+        "rnn_forward": (rnn_forward, (*rnn_params, xs, h0)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact; siblings are "
+                         "written next to it")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, ex_args) in artifacts().items():
+        lowered = jax.jit(fn).lower(*map(_spec, ex_args))
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out = jax.eval_shape(fn, *map(_spec, ex_args))
+        manifest[name] = _manifest_entry(ex_args, out)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # The Makefile's primary target: point it at the MLP forward module.
+    with open(os.path.join(outdir, "mlp_forward.hlo.txt")) as f:
+        primary = f.read()
+    with open(args.out, "w") as f:
+        f.write(primary)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

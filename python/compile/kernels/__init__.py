@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the Relay reproduction.
+
+Every kernel here is the compute hot-spot of a Relay "primitive function"
+(the output of operator fusion).  They are authored TPU-style — tiled for
+VMEM via BlockSpec, MXU-shaped accumulation — but always executed with
+``interpret=True`` so that the surrounding L2 JAX graph lowers to plain HLO
+the CPU PJRT client can run (real-TPU lowering emits Mosaic custom-calls the
+CPU plugin cannot execute; see DESIGN.md §Hardware-Adaptation).
+
+Correctness oracle: :mod:`compile.kernels.ref` (pure jnp), enforced by
+``python/tests/``.
+"""
+
+from .matmul import matmul, dense_bias_act
+from .conv2d import conv2d
+from .quant import quant_matmul
+
+__all__ = ["matmul", "dense_bias_act", "conv2d", "quant_matmul"]

@@ -1,0 +1,33 @@
+"""2-d convolution as im2col + the tiled Pallas GEMM.
+
+The paper's TVM backend lowers conv2d through loop nests scheduled per
+target; the TPU-idiomatic rethink is to turn the convolution into one big
+MXU matmul: extract the (N*OH*OW, KH*KW*C) patch matrix with an XLA
+gather-style op (cheap, fuses into the surrounding HLO) and feed it to the
+VMEM-tiled GEMM kernel from :mod:`.matmul`.  The GEMM is where essentially
+all FLOPs live, so the hot-spot stays inside the Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def conv2d(x, w, *, stride: int = 1, padding: int = 0):
+    """NCHW conv: x (N, C, H, W), w (O, C, KH, KW) -> (N, O, OH, OW)."""
+    n, c, h, wd = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2, f"conv2d channels: {c} vs {c2}"
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+    )  # (N, C*KH*KW, OH, OW)
+    _, ck, oh, ow = patches.shape
+    # (N*OH*OW, C*KH*KW) @ (C*KH*KW, O)
+    lhs = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ck)
+    rhs = w.reshape(o, ck).T
+    out = matmul(lhs, rhs)
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)

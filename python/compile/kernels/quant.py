@@ -1,0 +1,67 @@
+"""Quantized (int8 x int8 -> int32) tiled matmul Pallas kernel.
+
+This is the realized form of the paper's generic quantization flow
+(Sec. 4.5): after annotate/calibrate/realize, conv/dense operators become
+narrow-integer GEMMs with a wide accumulator.  On TPU the MXU natively
+multiplies 8-bit operands into a 32-bit accumulator; we express that with
+``preferred_element_type=int32`` over int8 tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import _ceil_to, _pad2
+
+
+def _qmm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int, acc_bits: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    prod = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        y_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if acc_bits == 16:
+        # Simulate a 16-bit accumulator (paper's "8/16" scheme): saturate
+        # the running sum to the int16 range on every step.
+        acc_ref[...] = jnp.clip(acc_ref[...] + prod, -(2**15), 2**15 - 1)
+    else:
+        acc_ref[...] += prod
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def quant_matmul(x, y, *, acc_bits: int = 32, bm: int = 128, bn: int = 128,
+                 bk: int = 128):
+    """int8 ``x @ y`` with int32 (or saturating int16-simulated) accumulate."""
+    assert x.dtype == jnp.int8 and y.dtype == jnp.int8
+    assert acc_bits in (16, 32), acc_bits
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk, acc_bits=acc_bits),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=True,
+    )(_pad2(x, mp, kp), _pad2(y, kp, np_))
+    return out[:m, :n]

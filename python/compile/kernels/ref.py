@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time ground truth)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense_bias_act_ref(x, w, b, *, act: str = "relu"):
+    r = x @ w + b
+    if act == "relu":
+        r = jnp.maximum(r, 0.0)
+    elif act == "tanh":
+        r = jnp.tanh(r)
+    elif act == "sigmoid":
+        r = jax.nn.sigmoid(r)
+    return r
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: int = 0):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def quant_matmul_ref(x, y, *, acc_bits: int = 32):
+    xi = x.astype(jnp.int32)
+    yi = y.astype(jnp.int32)
+    if acc_bits == 32:
+        return xi @ yi
+    # Saturating 16-bit accumulation over K blocks of 128 (matches the
+    # kernel's per-K-step clipping with the default block size).
+    m, k = x.shape
+    n = y.shape[1]
+    acc = jnp.zeros((m, n), jnp.int32)
+    bk = 128
+    for s in range(0, k, bk):
+        acc = jnp.clip(acc + xi[:, s:s + bk] @ yi[s:s + bk, :],
+                       -(2**15), 2**15 - 1)
+    return acc

@@ -1,0 +1,148 @@
+"""Layer-2 JAX model definitions (build-time only).
+
+These are the JAX twins of the Relay model zoo in ``rust/src/zoo/``: the
+same topologies, expressed as jit-able JAX functions whose dense/conv
+hot-spots call the Layer-1 Pallas kernels.  ``aot.py`` lowers each entry
+point to HLO text; the Rust runtime (L3) loads and executes the artifacts
+via PJRT with Python long gone.
+
+Model scale note: paper topologies at reduced width so that CI-scale
+machines regenerate every figure in minutes (DESIGN.md §5 substitutions).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, dense_bias_act, matmul
+
+# ---------------------------------------------------------------------------
+# MLP — the end-to-end training workload (EXPERIMENTS.md §E2E).
+# ---------------------------------------------------------------------------
+
+MLP_IN = 64
+MLP_HIDDEN = (128, 64)
+MLP_OUT = 10
+
+
+def mlp_init(key):
+    """He-initialised parameters as a flat tuple (w1, b1, w2, b2, w3, b3)."""
+    dims = (MLP_IN,) + MLP_HIDDEN + (MLP_OUT,)
+    params = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (din, dout), jnp.float32)
+        w = w * jnp.sqrt(2.0 / din)
+        params += [w, jnp.zeros((dout,), jnp.float32)]
+    return tuple(params)
+
+
+def mlp_forward(params, x):
+    """3-layer MLP; every layer is the fused dense_bias_act Pallas kernel."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = dense_bias_act(x, w1, b1, act="relu")
+    h = dense_bias_act(h, w2, b2, act="relu")
+    return dense_bias_act(h, w3, b3, act="none")
+
+
+def mlp_forward_jnp(params, x):
+    """Pure-jnp twin of mlp_forward (no Pallas): lowers to plain dot/add/max
+    HLO that the Rust HLO *importer* can translate into Relay IR — the
+    framework-import demo (paper §4.1)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    return h @ w3 + b3
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def mlp_loss(params, x, labels):
+    return softmax_xent(mlp_forward(params, x), labels)
+
+
+def mlp_train_step(params, x, labels, lr):
+    """One SGD step; returns (loss, *new_params).
+
+    L2's fwd/bwd: ``jax.value_and_grad`` differentiates through the Pallas
+    kernels (interpret mode is transparent to AD), so the backward pass of
+    the fused dense layers is part of the same lowered HLO module.
+    """
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, labels)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (loss,) + new_params
+
+
+# ---------------------------------------------------------------------------
+# CNN — vision-model stand-in used by runtime integration tests.
+# ---------------------------------------------------------------------------
+
+CNN_IMG = 16      # input is (N, 3, 16, 16)
+CNN_C1, CNN_C2 = 8, 16
+
+
+def cnn_init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    w1 = jax.random.normal(k1, (CNN_C1, 3, 3, 3), jnp.float32) * 0.2
+    w2 = jax.random.normal(k2, (CNN_C2, CNN_C1, 3, 3), jnp.float32) * 0.1
+    flat = CNN_C2 * (CNN_IMG // 4) * (CNN_IMG // 4)
+    w3 = jax.random.normal(k3, (flat, MLP_OUT), jnp.float32) * 0.05
+    b3 = jnp.zeros((MLP_OUT,), jnp.float32)
+    del k4
+    return (w1, w2, w3, b3)
+
+
+def _maxpool2(x):
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))
+
+
+def cnn_forward(params, x):
+    """conv-relu-pool ×2 then dense; convs run the Pallas im2col GEMM."""
+    w1, w2, w3, b3 = params
+    h = jnp.maximum(conv2d(x, w1, stride=1, padding=1), 0.0)
+    h = _maxpool2(h)
+    h = jnp.maximum(conv2d(h, w2, stride=1, padding=1), 0.0)
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    return dense_bias_act(h, w3, b3, act="none")
+
+
+# ---------------------------------------------------------------------------
+# RNN — NLP stand-in: a tanh RNN rolled with lax.scan.
+# ---------------------------------------------------------------------------
+
+RNN_IN = 32
+RNN_HIDDEN = 64
+
+
+def rnn_init(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    wx = jax.random.normal(k1, (RNN_IN, RNN_HIDDEN), jnp.float32) * 0.1
+    wh = jax.random.normal(k2, (RNN_HIDDEN, RNN_HIDDEN), jnp.float32) * 0.1
+    b = jnp.zeros((RNN_HIDDEN,), jnp.float32)
+    del k3
+    return (wx, wh, b)
+
+
+def rnn_forward(params, xs, h0):
+    """xs: (T, B, RNN_IN), h0: (B, RNN_HIDDEN) -> final hidden state.
+
+    The recurrent matmuls go through the Pallas GEMM; scan keeps the HLO
+    module size independent of sequence length (cf. paper §3.2.3: loops as
+    first-class constructs rather than unrolled graphs).
+    """
+    wx, wh, b = params
+
+    def step(h, x):
+        h = jnp.tanh(matmul(x, wx) + matmul(h, wh) + b)
+        return h, ()
+
+    hT, _ = jax.lax.scan(step, h0, xs)
+    return hT

@@ -1,0 +1,145 @@
+"""Kernel-vs-ref correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes of every Pallas kernel and asserts
+allclose against the pure-jnp oracle in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, dense_bias_act, matmul, quant_matmul
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=70)
+small_dims = st.integers(min_value=1, max_value=20)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 64),
+                                   (1, 1, 1), (8, 1024, 8), (37, 53, 29)])
+def test_matmul_shapes(m, k, n):
+    x = _rand(0, (m, k))
+    y = _rand(1, (k, n))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_nondefault_blocks():
+    x = _rand(2, (96, 160))
+    y = _rand(3, (160, 48))
+    out = matmul(x, y, bm=32, bn=16, bk=64)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_inside_jit():
+    x = _rand(4, (64, 64))
+    y = _rand(5, (64, 64))
+    out = jax.jit(matmul)(x, y)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_flows():
+    # interpret-mode pallas is differentiable: the L2 training step relies
+    # on this.
+    x = _rand(6, (16, 24))
+    y = _rand(7, (24, 8))
+    g = jax.grad(lambda a: jnp.sum(matmul(a, y) ** 2))(x)
+    g_ref = jax.grad(lambda a: jnp.sum((a @ y) ** 2))(x)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------- dense fused
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims,
+       act=st.sampled_from(["none", "relu", "tanh", "sigmoid"]),
+       seed=st.integers(0, 2**16))
+def test_dense_bias_act_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    out = dense_bias_act(x, w, b, act=act)
+    np.testing.assert_allclose(out, ref.dense_bias_act_ref(x, w, b, act=act),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dense_bias_act_relu_clamps():
+    x = -jnp.ones((4, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    assert jnp.all(dense_bias_act(x, w, b, act="relu") == 0.0)
+
+
+# -------------------------------------------------------------- conv2d
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 3), c=st.integers(1, 4), o=st.integers(1, 4),
+       hw=st.integers(4, 12), kh=st.integers(1, 3),
+       stride=st.integers(1, 2), padding=st.integers(0, 1),
+       seed=st.integers(0, 2**16))
+def test_conv2d_matches_ref(n, c, o, hw, kh, stride, padding, seed):
+    x = _rand(seed, (n, c, hw, hw))
+    w = _rand(seed + 1, (o, c, kh, kh))
+    out = conv2d(x, w, stride=stride, padding=padding)
+    expect = ref.conv2d_ref(x, w, stride=stride, padding=padding)
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 0), (1, 1), (2, 1)])
+def test_conv2d_resnet_shapes(stride, padding):
+    x = _rand(0, (2, 8, 16, 16))
+    w = _rand(1, (16, 8, 3, 3))
+    out = conv2d(x, w, stride=stride, padding=padding)
+    expect = ref.conv2d_ref(x, w, stride=stride, padding=padding)
+    assert out.shape == expect.shape
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------- quant matmul
+
+@settings(max_examples=15, deadline=None)
+@given(m=small_dims, k=small_dims, n=small_dims, seed=st.integers(0, 2**16))
+def test_quant_matmul_i32(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.randint(k1, (m, k), -128, 128, jnp.int32).astype(jnp.int8)
+    y = jax.random.randint(k2, (k, n), -128, 128, jnp.int32).astype(jnp.int8)
+    np.testing.assert_array_equal(quant_matmul(x, y, acc_bits=32),
+                                  ref.quant_matmul_ref(x, y, acc_bits=32))
+
+
+def test_quant_matmul_i16_saturates():
+    # Large positive products must clip to int16 range, not wrap.
+    x = jnp.full((4, 512), 127, jnp.int8)
+    y = jnp.full((512, 4), 127, jnp.int8)
+    out = quant_matmul(x, y, acc_bits=16)
+    assert jnp.all(out == 2**15 - 1)
+    np.testing.assert_array_equal(out, ref.quant_matmul_ref(x, y, acc_bits=16))
+
+
+def test_quant_matmul_i16_matches_ref_random():
+    key = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.randint(k1, (16, 256), -128, 128, jnp.int32).astype(jnp.int8)
+    y = jax.random.randint(k2, (256, 16), -128, 128, jnp.int32).astype(jnp.int8)
+    np.testing.assert_array_equal(quant_matmul(x, y, acc_bits=16),
+                                  ref.quant_matmul_ref(x, y, acc_bits=16))

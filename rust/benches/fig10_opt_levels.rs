@@ -1,0 +1,53 @@
+//! Fig. 10: speedup from increasing optimization level (-O1/-O2/-O3 vs
+//! -O0) on the vision models, executing on the graph runtime.
+//!
+//! Paper shape to reproduce: monotone improvement per level, up to ~2x at
+//! -O3 for dense conv nets (ResNet/VGG), flat after -O1 for DQN (simple
+//! operators, little layout benefit).
+
+use relay::bench;
+use relay::eval::Value;
+use relay::graphrt::GraphRt;
+use relay::pass::{optimize, OptLevel};
+use relay::zoo::{self, Model};
+
+fn main() {
+    let iters = 10;
+    println!("Fig 10 reproduction: graph-runtime inference time by opt level");
+    println!(
+        "{:<12} {:>6} {:>10} {:>9} {:>8}",
+        "model", "level", "mean ms", "speedup", "kernels"
+    );
+    for model in Model::vision() {
+        let (m, input) = zoo::vision::build(model, 42);
+        let mut o0_ms = None;
+        let mut reference: Option<Value> = None;
+        for level in OptLevel::all() {
+            let opt = optimize(&m, level, false).expect("optimize");
+            let anfed = relay::pass::anf::run(&opt);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).expect("graph compile");
+            // Correctness guard: every level must agree with -O0.
+            let out = g.run_tensors(&[input.clone()]).unwrap();
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert!(
+                    r.tensor().allclose(out.tensor(), 1e-2, 1e-2),
+                    "{} {level} diverged",
+                    model.name()
+                ),
+            }
+            let s = bench::bench(format!("{}-{level}", model.name()), 2, iters, || {
+                let _ = g.run_tensors(&[input.clone()]).unwrap();
+            });
+            let base = *o0_ms.get_or_insert(s.mean_ms);
+            println!(
+                "{:<12} {:>6} {:>10.3} {:>8.2}x {:>8}",
+                model.name(),
+                level.to_string(),
+                s.mean_ms,
+                base / s.mean_ms,
+                g.kernel_nodes
+            );
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig. 11: inference slowdown of framework-style executors relative to
+//! Relay (AoT) on vision models.
+//!
+//! Baseline mapping (DESIGN.md §5): the paper compares against TF,
+//! TF-XLA, PyTorch, MxNet, NNVM; on this single substrate the honest
+//! comparison axis is execution architecture:
+//!   * relay-aot   — full -O3 pipeline + XLA whole-graph compile (ours)
+//!   * nnvm-style  — fused graph runtime (-O1), reference kernels
+//!   * tf-style    — UNfused static graph runtime (define-then-run)
+//!   * eager-style — UNfused AST interpreter (define-by-run)
+//! Expected shape: relay-aot fastest; graph runtimes next; eager slowest.
+
+use relay::bench;
+use relay::eval::{env_empty, Interp};
+use relay::graphrt::GraphRt;
+use relay::pass::{optimize, OptLevel};
+use relay::runtime::Runtime;
+use relay::zoo::{self, Model};
+
+fn main() {
+    let iters = 10;
+    let rt = Runtime::cpu().expect("PJRT runtime");
+    println!("Fig 11 reproduction: executor comparison (batch 1, vision)");
+    println!(
+        "{:<12} {:<14} {:>10} {:>10}",
+        "model", "executor", "mean ms", "slowdown"
+    );
+    for model in Model::vision() {
+        let (m, input) = zoo::vision::build(model, 42);
+
+        // relay-aot: O3 + XLA whole-graph. Grouped convolutions (MobileNet)
+        // have no XLA lowering in the vendored crate; fall back to the
+        // fused graph runtime for them and note it.
+        let relay_ms: f64;
+        let mut note = "";
+        match relay::backend::xla::compile_main(&rt, &m, OptLevel::O3) {
+            Ok(compiled) => {
+                let s = bench::bench("relay-aot", 2, iters, || {
+                    let _ = compiled.run(&rt, &[input.clone()]).unwrap();
+                });
+                relay_ms = s.mean_ms;
+            }
+            Err(_) => {
+                note = " (graphrt fallback: grouped conv)";
+                let opt = optimize(&m, OptLevel::O3, false).unwrap();
+                let anfed = relay::pass::anf::run(&opt);
+                let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+                let s = bench::bench("relay-aot", 2, iters, || {
+                    let _ = g.run_tensors(&[input.clone()]).unwrap();
+                });
+                relay_ms = s.mean_ms;
+            }
+        }
+        println!(
+            "{:<12} {:<14} {:>10.3} {:>9.2}x{note}",
+            model.name(),
+            "relay-aot",
+            relay_ms,
+            1.0
+        );
+
+        // nnvm-style: fused graph runtime over reference kernels.
+        {
+            let opt = optimize(&m, OptLevel::O1, false).unwrap();
+            let anfed = relay::pass::anf::run(&opt);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+            let s = bench::bench("nnvm", 2, iters, || {
+                let _ = g.run_tensors(&[input.clone()]).unwrap();
+            });
+            println!(
+                "{:<12} {:<14} {:>10.3} {:>9.2}x",
+                model.name(),
+                "nnvm-style",
+                s.mean_ms,
+                s.mean_ms / relay_ms
+            );
+        }
+
+        // tf-style: unfused static graph runtime.
+        {
+            let anfed = relay::pass::anf::run(&m);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+            let s = bench::bench("tf", 2, iters, || {
+                let _ = g.run_tensors(&[input.clone()]).unwrap();
+            });
+            println!(
+                "{:<12} {:<14} {:>10.3} {:>9.2}x",
+                model.name(),
+                "tf-style",
+                s.mean_ms,
+                s.mean_ms / relay_ms
+            );
+        }
+
+        // eager-style: unfused tree-walk interpreter.
+        {
+            let main = m.def("main").unwrap().clone();
+            let fe = std::sync::Arc::new(relay::ir::Expr::Func(main));
+            let s = bench::bench("eager", 1, iters.min(5), || {
+                let interp = Interp::new(&m);
+                let call =
+                    relay::ir::call(fe.clone(), vec![relay::ir::constant(input.clone())]);
+                let _ = interp.eval(&call, &env_empty()).unwrap();
+            });
+            println!(
+                "{:<12} {:<14} {:>10.3} {:>9.2}x",
+                model.name(),
+                "eager-style",
+                s.mean_ms,
+                s.mean_ms / relay_ms
+            );
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig. 13: quantized inference on low-power CPUs — float32 vs int8/16 vs
+//! int8/32.
+//!
+//! The paper measures Raspberry Pi 3 / Firefly RK3399 wall-clock; we don't
+//! have ARM boards, so latency comes from the same cycle-accurate "ARM"
+//! cost model the VTA simulator uses for its host side (DESIGN.md §5):
+//! scalar MACs/cycle, with narrow-integer ops getting the 2x 8-bit-SIMD
+//! factor those cores provide. Wall-clock on this x86 host is printed as a
+//! secondary column (both i8 paths share the same naive loop nest here, so
+//! x86 wall time is NOT the headline number).
+
+use relay::bench;
+use relay::eval::Value;
+use relay::graphrt::GraphRt;
+use relay::quant::{quantize_module, QConfig};
+use relay::vta::{simulate, VtaConfig};
+use relay::zoo::{self, Model};
+
+fn main() {
+    let cfg = VtaConfig::default();
+    println!("Fig 13 reproduction: quantized inference on the ARM cost model");
+    println!(
+        "{:<12} {:<10} {:>14} {:>12} {:>10}",
+        "model", "scheme", "sim ARM ms", "wall ms", "speedup"
+    );
+    for model in [Model::ResNet18, Model::MobileNet] {
+        let (m, input) = zoo::vision::build(model, 42);
+        let calib = vec![vec![Value::Tensor(input.clone())]];
+
+        let mut base_ms = None;
+        for (label, qcfg) in [
+            ("float32", None),
+            ("int8/16", Some(QConfig::i8_i16())),
+            ("int8/32", Some(QConfig::i8_i32())),
+        ] {
+            let module = match qcfg {
+                None => m.clone(),
+                Some(c) => quantize_module(&m, c, &calib).expect("quantize"),
+            };
+            let anfed = relay::pass::anf::run(&module);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).expect("compile");
+            let inputs = vec![Value::Tensor(input.clone())];
+            let (_, report) = simulate(&g, &inputs, &cfg, false).expect("simulate");
+            let sim_ms = report.cpu_time_s(&cfg) * 1e3;
+            let wall = bench::bench(label, 1, 5, || {
+                let _ = g.run(&inputs).unwrap();
+            });
+            let base = *base_ms.get_or_insert(sim_ms);
+            println!(
+                "{:<12} {:<10} {:>14.3} {:>12.3} {:>9.2}x",
+                model.name(),
+                label,
+                sim_ms,
+                wall.mean_ms,
+                base / sim_ms
+            );
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Fig. 14: inference time on the Ultra-96-class SoC — embedded CPU vs the
+//! VTA accelerator (simulated; DESIGN.md §5). The paper reports 2.5-11.7x
+//! latency reduction from offloading conv operators, with conv-dense
+//! ResNets gaining most and DCGAN (transposed convs stay on the CPU)
+//! gaining least.
+
+use relay::eval::Value;
+use relay::graphrt::GraphRt;
+use relay::quant::{quantize_module, QConfig};
+use relay::vta::{simulate, VtaConfig};
+use relay::zoo::{self, Model};
+
+fn main() {
+    let cfg = VtaConfig::default();
+    println!("Fig 14 reproduction: CPU vs VTA (simulated cycle model)");
+    println!(
+        "{:<14} {:>12} {:>12} {:>9} {:>10}",
+        "model", "cpu ms", "vta ms", "speedup", "offloaded"
+    );
+    let workloads: Vec<(&str, relay::ir::Module, relay::tensor::Tensor)> = vec![
+        {
+            let (m, x) = zoo::vision::build(Model::ResNet18, 42);
+            ("resnet-18", m, x)
+        },
+        {
+            let (m, x) = zoo::vision::build_resnet34ish(42);
+            ("resnet-34", m, x)
+        },
+        {
+            let (m, x) = zoo::vision::build(Model::MobileNet, 42);
+            ("mobilenet-g", m, x)
+        },
+        {
+            let (m, x) = zoo::vision::build_dcgan(42);
+            ("dcgan", m, x)
+        },
+    ];
+    for (name, m, input) in workloads {
+        // Push-button quantization (fp32 -> int8), then FoldScaleAxis via
+        // the O3 pipeline is unnecessary here: quantize directly.
+        let calib = vec![vec![Value::Tensor(input.clone())]];
+        let q = quantize_module(&m, QConfig::i8_i32(), &calib).expect("quantize");
+        let anfed = relay::pass::anf::run(&q);
+        let g = GraphRt::compile(anfed.def("main").unwrap()).expect("compile");
+        let inputs = vec![Value::Tensor(input.clone())];
+        let (out_cpu, cpu) = simulate(&g, &inputs, &cfg, false).expect("cpu sim");
+        let (out_vta, vta) = simulate(&g, &inputs, &cfg, true).expect("vta sim");
+        // Offload must not change numerics.
+        if let (Value::Tensor(a), Value::Tensor(b)) = (&out_cpu, &out_vta) {
+            assert!(a.allclose(b, 1e-6, 1e-6), "{name}: offload changed results");
+        }
+        println!(
+            "{:<14} {:>12.3} {:>12.3} {:>8.2}x {:>10}",
+            name,
+            cpu.total_ms(&cfg),
+            vta.total_ms(&cfg),
+            cpu.total_time_s(&cfg) / vta.total_time_s(&cfg),
+            vta.offloaded_ops
+        );
+    }
+}

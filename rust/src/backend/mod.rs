@@ -1,0 +1,6 @@
+//! Code-generation backends. The paper lowers primitive operators through
+//! TVM; this reproduction's equivalent low-level kernel compiler is XLA,
+//! reached via [`xla::XlaBuilder`] and executed on the PJRT CPU client
+//! (DESIGN.md §Hardware-Adaptation).
+
+pub mod xla;

@@ -1,0 +1,798 @@
+//! AoT compilation of Relay functions to XLA (§4.7 analogue).
+//!
+//! A first-order, control-flow-free (post-optimization, post-fusion) Relay
+//! function is lowered to a single `XlaComputation` via `XlaBuilder`,
+//! compiled once on the PJRT client (cached by the function's structural
+//! hash — alpha-equivalent functions share executables), and executed
+//! natively. Primitive (fused) function calls are inlined into the same
+//! computation, so a fusion group becomes one contiguous region XLA can
+//! fuse into a single kernel — the §4.4.2 "lowering" step with XLA playing
+//! TVM's role.
+//!
+//! `nn.conv2d` has no wrapper in the xla crate; the pipeline runs
+//! AlterOpLayout (conv -> im2col + matmul) before lowering, and this
+//! module lowers `nn.im2col` with the strided-slice + concat construction.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{XlaBuilder, XlaOp};
+
+use crate::ir::{structural_hash, AttrValue, Attrs, Expr, Function, Module, Var, E};
+use crate::runtime::Runtime;
+use crate::tensor::{DType, Tensor};
+use crate::ty::TypeReport;
+
+/// A Relay function compiled to a PJRT executable.
+pub struct Compiled {
+    pub exe: Arc<xla::PjRtLoadedExecutable>,
+    pub param_types: Vec<crate::ir::Type>,
+}
+
+impl Compiled {
+    pub fn run(&self, rt: &Runtime, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        rt.execute(&self.exe, inputs)
+    }
+}
+
+fn prim_ty(dt: DType) -> Result<xla::ElementType> {
+    Ok(match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::F64 => xla::ElementType::F64,
+        DType::I64 => xla::ElementType::S64,
+        DType::I32 => xla::ElementType::S32,
+        DType::I16 => xla::ElementType::S16,
+        DType::I8 => xla::ElementType::S8,
+        DType::U8 => xla::ElementType::U8,
+        DType::Bool => xla::ElementType::Pred,
+    })
+}
+
+struct Lower<'m> {
+    builder: XlaBuilder,
+    module: &'m Module,
+    /// var id -> (xla op, relay type)
+    env: BTreeMap<u32, (XlaOp, crate::ir::Type)>,
+}
+
+type Val = (XlaOp, crate::ir::Type);
+
+impl<'m> Lower<'m> {
+    fn shape_of(t: &crate::ir::Type) -> Result<Vec<usize>> {
+        t.concrete_shape()
+            .ok_or_else(|| anyhow!("XLA backend needs concrete shapes, got {t}"))
+    }
+
+    fn dtype_of(t: &crate::ir::Type) -> DType {
+        t.dtype().unwrap_or(DType::F32)
+    }
+
+    fn constant(&self, t: &Tensor) -> Result<XlaOp> {
+        let lit = crate::runtime::tensor_to_literal(t)?;
+        self.builder
+            .constant_literal(&lit)
+            .map_err(|e| anyhow!("constant: {e:?}"))
+    }
+
+    /// Lower an expression in ANF (atoms + let chains + calls).
+    fn lower(&mut self, e: &E) -> Result<Val> {
+        match &**e {
+            Expr::Var(v) => self
+                .env
+                .get(&v.id)
+                .cloned()
+                .ok_or_else(|| anyhow!("unbound {v}")),
+            Expr::Const(t) => Ok((
+                self.constant(t)?,
+                crate::ir::Type::tensor(t.shape().to_vec(), t.dtype()),
+            )),
+            Expr::Let { var, value, body, .. } => {
+                let v = self.lower(value)?;
+                self.env.insert(var.id, v);
+                self.lower(body)
+            }
+            Expr::Tuple(es) => {
+                let vals: Result<Vec<Val>> = es.iter().map(|x| self.lower(x)).collect();
+                let vals = vals?;
+                let ops: Vec<&XlaOp> = vals.iter().map(|(o, _)| o).collect();
+                let tys: Vec<crate::ir::Type> = vals.iter().map(|(_, t)| t.clone()).collect();
+                let tup = self
+                    .builder
+                    .tuple(&ops.iter().map(|o| (*o).clone()).collect::<Vec<_>>())
+                    .map_err(|e| anyhow!("tuple: {e:?}"))?;
+                Ok((tup, crate::ir::Type::Tuple(tys)))
+            }
+            Expr::Proj(t, i) => {
+                let (op, ty) = self.lower(t)?;
+                let part_ty = match &ty {
+                    crate::ir::Type::Tuple(ts) => ts
+                        .get(*i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("proj .{i} out of range"))?,
+                    other => bail!("projection from {other}"),
+                };
+                let op = op
+                    .get_tuple_element(*i as i64)
+                    .map_err(|e| anyhow!("gte: {e:?}"))?;
+                Ok((op, part_ty))
+            }
+            Expr::Call { f, args, attrs } => match &**f {
+                Expr::Op(name) => self.lower_op(name, args, attrs),
+                Expr::Func(func) if func.attrs.primitive => {
+                    // Inline the fused function body.
+                    let vals: Result<Vec<Val>> = args.iter().map(|a| self.lower(a)).collect();
+                    let vals = vals?;
+                    let saved: Vec<Option<Val>> = func
+                        .params
+                        .iter()
+                        .map(|(p, _)| self.env.get(&p.id).cloned())
+                        .collect();
+                    for ((p, _), v) in func.params.iter().zip(vals) {
+                        self.env.insert(p.id, v);
+                    }
+                    let out = self.lower(&func.body);
+                    for ((p, _), s) in func.params.iter().zip(saved) {
+                        match s {
+                            Some(v) => {
+                                self.env.insert(p.id, v);
+                            }
+                            None => {
+                                self.env.remove(&p.id);
+                            }
+                        }
+                    }
+                    out
+                }
+                other => bail!("XLA backend cannot lower call to {other:?}"),
+            },
+            other => bail!("XLA backend cannot lower {other:?} (control flow runs on the interpreter)"),
+        }
+    }
+
+    fn args2(&mut self, args: &[E]) -> Result<(Val, Val)> {
+        let a = self.lower(&args[0])?;
+        let b = self.lower(&args[1])?;
+        Ok((a, b))
+    }
+
+    /// Broadcast two operands to a common shape (numpy semantics) before a
+    /// binary op — XLA only auto-broadcasts same-rank/scalar cases.
+    fn broadcast_pair(&mut self, a: Val, b: Val) -> Result<(XlaOp, XlaOp, Vec<usize>, DType)> {
+        let sa = Self::shape_of(&a.1)?;
+        let sb = Self::shape_of(&b.1)?;
+        let dt = DType::promote(Self::dtype_of(&a.1), Self::dtype_of(&b.1));
+        let out = crate::tensor::broadcast_shapes(&sa, &sb)
+            .ok_or_else(|| anyhow!("cannot broadcast {sa:?} with {sb:?}"))?;
+        let cast = |op: XlaOp, from: DType| -> Result<XlaOp> {
+            if from == dt {
+                Ok(op)
+            } else {
+                op.convert(prim_ty(dt)?.primitive_type()).map_err(|e| anyhow!("{e:?}"))
+            }
+        };
+        let bcast = |op: XlaOp, s: &[usize]| -> Result<XlaOp> {
+            if s == out.as_slice() {
+                return Ok(op);
+            }
+            let out_i: Vec<i64> = out.iter().map(|&d| d as i64).collect();
+            let offset = out.len() - s.len();
+            let bdims: Vec<i64> = (0..s.len()).map(|i| (i + offset) as i64).collect();
+            op.broadcast_in_dim(&out_i, &bdims).map_err(|e| anyhow!("{e:?}"))
+        };
+        let da = Self::dtype_of(&a.1);
+        let db = Self::dtype_of(&b.1);
+        let oa = bcast(cast(a.0, da)?, &sa)?;
+        let ob = bcast(cast(b.0, db)?, &sb)?;
+        Ok((oa, ob, out, dt))
+    }
+
+    fn out_ty(shape: Vec<usize>, dt: DType) -> crate::ir::Type {
+        crate::ir::Type::tensor(shape, dt)
+    }
+
+    fn lower_op(&mut self, name: &str, args: &[E], attrs: &Attrs) -> Result<Val> {
+        macro_rules! bin {
+            ($m:ident) => {{
+                let (a, b) = self.args2(args)?;
+                let (oa, ob, shape, dt) = self.broadcast_pair(a, b)?;
+                let op = oa.$m(&ob).map_err(|e| anyhow!("{e:?}"))?;
+                return Ok((op, Self::out_ty(shape, dt)));
+            }};
+        }
+        macro_rules! cmp {
+            ($m:ident) => {{
+                let (a, b) = self.args2(args)?;
+                let (oa, ob, shape, _) = self.broadcast_pair(a, b)?;
+                let op = oa.$m(&ob).map_err(|e| anyhow!("{e:?}"))?;
+                return Ok((op, Self::out_ty(shape, DType::Bool)));
+            }};
+        }
+        macro_rules! un {
+            ($m:ident) => {{
+                let (op, ty) = self.lower(&args[0])?;
+                let op = op.$m().map_err(|e| anyhow!("{e:?}"))?;
+                return Ok((op, ty));
+            }};
+        }
+        match name {
+            "add" => bin!(add_),
+            "subtract" => bin!(sub_),
+            "multiply" => bin!(mul_),
+            "divide" => bin!(div_),
+            "power" => bin!(pow),
+            "maximum" => bin!(max),
+            "minimum" => bin!(min),
+            "equal" => cmp!(eq),
+            "not_equal" => cmp!(ne),
+            "less" => cmp!(lt),
+            "less_equal" => cmp!(le),
+            "greater" => cmp!(gt),
+            "greater_equal" => cmp!(ge),
+            "negative" => un!(neg),
+            "exp" => un!(exp),
+            "log" => un!(log),
+            "sqrt" => un!(sqrt),
+            "rsqrt" => un!(rsqrt),
+            "tanh" => un!(tanh),
+            "sigmoid" => un!(logistic),
+            "abs" => un!(abs),
+            "floor" => un!(floor),
+            "ceil" => un!(ceil),
+            "round" => un!(round),
+            "logical_not" => un!(not),
+            "nn.relu" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let zero = self
+                    .builder
+                    .c0(0f32)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .convert(prim_ty(Self::dtype_of(&ty))?.primitive_type())
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let shape = Self::shape_of(&ty)?;
+                let shape_i: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let zb = zero.broadcast_in_dim(&shape_i, &[]).map_err(|e| anyhow!("{e:?}"))?;
+                let op = op.max(&zb).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "where" => {
+                let c = self.lower(&args[0])?;
+                let (a, b) = {
+                    let a = self.lower(&args[1])?;
+                    let b = self.lower(&args[2])?;
+                    (a, b)
+                };
+                let ty = a.1.clone();
+                let op = c.0.select(&a.0, &b.0).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "clip" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let lo = attrs.get("a_min").map(|v| v.as_float()).unwrap_or(f64::NEG_INFINITY);
+                let hi = attrs.get("a_max").map(|v| v.as_float()).unwrap_or(f64::INFINITY);
+                let lo = self.builder.c0(lo as f32).map_err(|e| anyhow!("{e:?}"))?;
+                let hi = self.builder.c0(hi as f32).map_err(|e| anyhow!("{e:?}"))?;
+                let op = lo.clamp(&op, &hi).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "cast" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let dt = DType::parse(attrs["dtype"].as_str())
+                    .ok_or_else(|| anyhow!("bad dtype"))?;
+                let op = op
+                    .convert(prim_ty(dt)?.primitive_type())
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, Self::out_ty(Self::shape_of(&ty)?, dt)))
+            }
+            "zeros_like" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let op = op.zeros_like().map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "ones_like" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let z = op.zeros_like().map_err(|e| anyhow!("{e:?}"))?;
+                let one = self
+                    .builder
+                    .c0(1f32)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .convert(prim_ty(Self::dtype_of(&ty))?.primitive_type())
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let shape = Self::shape_of(&ty)?;
+                let shape_i: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let ob = one.broadcast_in_dim(&shape_i, &[]).map_err(|e| anyhow!("{e:?}"))?;
+                let op = z.add_(&ob).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "matmul" => {
+                let (a, b) = self.args2(args)?;
+                let sa = Self::shape_of(&a.1)?;
+                let sb = Self::shape_of(&b.1)?;
+                let op = a
+                    .0
+                    .dot_general(&b.0, &[1], &[0], &[], &[])
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, Self::out_ty(vec![sa[0], sb[1]], Self::dtype_of(&a.1))))
+            }
+            "nn.dense" => {
+                // x (m,k) . w (n,k)^T: contract dim 1 with dim 1.
+                let (a, b) = self.args2(args)?;
+                let sa = Self::shape_of(&a.1)?;
+                let sb = Self::shape_of(&b.1)?;
+                let op = a
+                    .0
+                    .dot_general(&b.0, &[1], &[1], &[], &[])
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, Self::out_ty(vec![sa[0], sb[0]], Self::dtype_of(&a.1))))
+            }
+            "nn.bias_add" => {
+                let (x, b) = self.args2(args)?;
+                let sx = Self::shape_of(&x.1)?;
+                let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
+                let ax = crate::tensor::shape::norm_axis(axis, sx.len());
+                let out_i: Vec<i64> = sx.iter().map(|&d| d as i64).collect();
+                let bb = b
+                    .0
+                    .broadcast_in_dim(&out_i, &[ax as i64])
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let op = x.0.add_(&bb).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, x.1))
+            }
+            "reshape" | "nn.batch_flatten" | "expand_dims" | "squeeze" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let in_shape = Self::shape_of(&ty)?;
+                let out_shape: Vec<usize> = match name {
+                    "reshape" => {
+                        let ns = attrs["newshape"].as_int_vec();
+                        let numel: usize = in_shape.iter().product();
+                        let known: usize = ns
+                            .iter()
+                            .filter(|&&d| d != -1)
+                            .map(|&d| d as usize)
+                            .product();
+                        ns.iter()
+                            .map(|&d| if d == -1 { numel / known.max(1) } else { d as usize })
+                            .collect()
+                    }
+                    "nn.batch_flatten" => {
+                        vec![in_shape[0], in_shape[1..].iter().product()]
+                    }
+                    "expand_dims" => {
+                        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+                        let ax = if axis < 0 {
+                            (in_shape.len() as i64 + 1 + axis) as usize
+                        } else {
+                            axis as usize
+                        };
+                        let mut s = in_shape.clone();
+                        s.insert(ax, 1);
+                        s
+                    }
+                    _ => in_shape.iter().cloned().filter(|&d| d != 1).collect(),
+                };
+                let dims: Vec<i64> = out_shape.iter().map(|&d| d as i64).collect();
+                let op = op.reshape(&dims).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, Self::out_ty(out_shape, Self::dtype_of(&ty))))
+            }
+            "transpose" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let in_shape = Self::shape_of(&ty)?;
+                let axes: Vec<usize> = attrs
+                    .get("axes")
+                    .map(|v| v.as_int_vec().iter().map(|&a| a as usize).collect())
+                    .unwrap_or_else(|| (0..in_shape.len()).rev().collect());
+                let perm: Vec<i64> = axes.iter().map(|&a| a as i64).collect();
+                let out_shape: Vec<usize> = axes.iter().map(|&a| in_shape[a]).collect();
+                let op = op.transpose(&perm).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, Self::out_ty(out_shape, Self::dtype_of(&ty))))
+            }
+            "sum" | "mean" | "max" | "min" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let in_shape = Self::shape_of(&ty)?;
+                let axes: Vec<i64> = attrs
+                    .get("axis")
+                    .map(|v| v.as_int_vec().to_vec())
+                    .unwrap_or_else(|| (0..in_shape.len() as i64).collect());
+                let keep = attrs.get("keepdims").map(|v| v.as_bool()).unwrap_or(false);
+                let op = match name {
+                    "sum" => op.reduce_sum(&axes, keep),
+                    "mean" => op.reduce_mean(&axes, keep),
+                    "max" => op.reduce_max(&axes, keep),
+                    _ => op.reduce_min(&axes, keep),
+                }
+                .map_err(|e| anyhow!("{e:?}"))?;
+                let norm_axes: Vec<usize> = axes
+                    .iter()
+                    .map(|&a| crate::tensor::shape::norm_axis(a, in_shape.len()))
+                    .collect();
+                let mut out_shape = Vec::new();
+                for (i, &d) in in_shape.iter().enumerate() {
+                    if norm_axes.contains(&i) {
+                        if keep {
+                            out_shape.push(1);
+                        }
+                    } else {
+                        out_shape.push(d);
+                    }
+                }
+                Ok((op, Self::out_ty(out_shape, Self::dtype_of(&ty))))
+            }
+            "nn.softmax" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+                let op = op.softmax(axis).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "nn.log_softmax" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+                let max = op.reduce_max(&[axis], true).map_err(|e| anyhow!("{e:?}"))?;
+                let shifted = op.sub_(&max).map_err(|e| anyhow!("{e:?}"))?;
+                let lse = shifted
+                    .exp()
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .reduce_sum(&[axis], true)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .log()
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let op = shifted.sub_(&lse).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, ty))
+            }
+            "take" => {
+                let (table, idx) = self.args2(args)?;
+                let st = Self::shape_of(&table.1)?;
+                let si = Self::shape_of(&idx.1)?;
+                let op = table.0.take(&idx.0, 0).map_err(|e| anyhow!("{e:?}"))?;
+                let mut out_shape = si;
+                out_shape.push(st[1]);
+                Ok((op, Self::out_ty(out_shape, Self::dtype_of(&table.1))))
+            }
+            "concatenate" => {
+                let vals: Result<Vec<Val>> = args.iter().map(|a| self.lower(a)).collect();
+                let vals = vals?;
+                let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+                // Single tuple argument is not supported on this path; the
+                // zoo always passes N tensors.
+                let first_shape = Self::shape_of(&vals[0].1)?;
+                let ax = crate::tensor::shape::norm_axis(axis, first_shape.len());
+                let ops: Vec<XlaOp> = vals.iter().map(|(o, _)| o.clone()).collect();
+                let op = ops[0]
+                    .concat_in_dim(&ops[1..], ax as i64)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let mut out_shape = first_shape.clone();
+                out_shape[ax] = vals
+                    .iter()
+                    .map(|(_, t)| Self::shape_of(t).map(|s| s[ax]))
+                    .sum::<Result<usize>>()?;
+                Ok((op, Self::out_ty(out_shape, Self::dtype_of(&vals[0].1))))
+            }
+            "split" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let in_shape = Self::shape_of(&ty)?;
+                let sections = attrs["indices_or_sections"].as_int() as usize;
+                let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+                let ax = crate::tensor::shape::norm_axis(axis, in_shape.len());
+                let part = in_shape[ax] / sections;
+                let mut parts = Vec::new();
+                let mut tys = Vec::new();
+                for s in 0..sections {
+                    let sl = op
+                        .slice_in_dim((s * part) as i64, ((s + 1) * part) as i64, 1, ax as i64)
+                        .map_err(|e| anyhow!("{e:?}"))?;
+                    let mut ps = in_shape.clone();
+                    ps[ax] = part;
+                    tys.push(Self::out_ty(ps, Self::dtype_of(&ty)));
+                    parts.push(sl);
+                }
+                let tup = self.builder.tuple(&parts).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((tup, crate::ir::Type::Tuple(tys)))
+            }
+            "nn.im2col" => self.lower_im2col(args, attrs),
+            "nn.max_pool2d" | "nn.avg_pool2d" => self.lower_pool(name, args, attrs),
+            "nn.global_avg_pool2d" => {
+                let (op, ty) = self.lower(&args[0])?;
+                let s = Self::shape_of(&ty)?;
+                let op = op.reduce_mean(&[2, 3], true).map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, Self::out_ty(vec![s[0], s[1], 1, 1], Self::dtype_of(&ty))))
+            }
+            "nn.batch_norm" => {
+                // Inference form: (x - mean) / sqrt(var + eps) * gamma + beta
+                // with per-channel (axis 1) parameters.
+                let x = self.lower(&args[0])?;
+                let gamma = self.lower(&args[1])?;
+                let beta = self.lower(&args[2])?;
+                let mean = self.lower(&args[3])?;
+                let var = self.lower(&args[4])?;
+                let eps = attrs.get("epsilon").map(|v| v.as_float() as f32).unwrap_or(1e-5);
+                let sx = Self::shape_of(&x.1)?;
+                let out_i: Vec<i64> = sx.iter().map(|&d| d as i64).collect();
+                let chan = |v: XlaOp| -> Result<XlaOp> {
+                    v.broadcast_in_dim(&out_i, &[1]).map_err(|e| anyhow!("{e:?}"))
+                };
+                let epsv = self.builder.c0(eps).map_err(|e| anyhow!("{e:?}"))?;
+                let veps = var.0.add_(&epsv).map_err(|e| anyhow!("{e:?}"))?;
+                let scale = gamma.0.div_(&veps.sqrt().map_err(|e| anyhow!("{e:?}"))?)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let shift = beta
+                    .0
+                    .sub_(&mean.0.mul_(&scale).map_err(|e| anyhow!("{e:?}"))?)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                let op = x
+                    .0
+                    .mul_(&chan(scale)?)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .add_(&chan(shift)?)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                Ok((op, x.1))
+            }
+            "nn.dropout" | "copy" | "annotation.stop_fusion" => self.lower(&args[0]),
+            "nn.conv2d" => bail!(
+                "nn.conv2d has no direct XLA lowering here; run AlterOpLayout \
+                 (conv -> im2col + matmul) before the XLA backend"
+            ),
+            other => bail!("XLA lowering not implemented for operator {other}"),
+        }
+    }
+
+    /// im2col via strided slices + concat (see pass::alter_op_layout).
+    fn lower_im2col(&mut self, args: &[E], attrs: &Attrs) -> Result<Val> {
+        let (x, ty) = self.lower(&args[0])?;
+        let s = Self::shape_of(&ty)?;
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let ks = attrs["kernel_size"].as_int_vec();
+        let (kh, kw) = (ks[0] as usize, ks[1] as usize);
+        let p = {
+            let stride = attrs
+                .get("strides")
+                .map(|v| {
+                    let s = v.as_int_vec();
+                    (s[0] as usize, s[1] as usize)
+                })
+                .unwrap_or((1, 1));
+            let padding = attrs
+                .get("padding")
+                .map(|v| match v {
+                    AttrValue::Int(p) => (*p as usize, *p as usize),
+                    AttrValue::IntVec(p) => (p[0] as usize, p[1] as usize),
+                    _ => (0, 0),
+                })
+                .unwrap_or((0, 0));
+            crate::tensor::Conv2dParams { stride, padding, groups: 1 }
+        };
+        let (oh, ow) = crate::tensor::conv2d_out_hw(h, w, kh, kw, &p);
+
+        // Zero-pad H and W by concatenation.
+        let zeros_h = |rows: usize| -> Result<XlaOp> {
+            let t = Tensor::zeros(&[n, c, rows, w], Self::dtype_of(&ty));
+            self.constant(&t)
+        };
+        let mut padded = x;
+        let mut ph = h;
+        if p.padding.0 > 0 {
+            let z = zeros_h(p.padding.0)?;
+            padded = z
+                .concat_in_dim(&[padded, zeros_h(p.padding.0)?], 2)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            ph = h + 2 * p.padding.0;
+        }
+        if p.padding.1 > 0 {
+            let t = Tensor::zeros(&[n, c, ph, p.padding.1], Self::dtype_of(&ty));
+            let z = self.constant(&t)?;
+            let z2 = self.constant(&Tensor::zeros(&[n, c, ph, p.padding.1], Self::dtype_of(&ty)))?;
+            padded = z.concat_in_dim(&[padded, z2], 3).map_err(|e| anyhow!("{e:?}"))?;
+        }
+
+        // Gather kh*kw strided slices of shape (N, C, OH, OW).
+        let mut slices = Vec::new();
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let sl = padded
+                    .slice_in_dim(ky as i64, (ky + (oh - 1) * p.stride.0 + 1) as i64,
+                        p.stride.0 as i64, 2)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .slice_in_dim(kx as i64, (kx + (ow - 1) * p.stride.1 + 1) as i64,
+                        p.stride.1 as i64, 3)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .reshape(&[n as i64, c as i64, 1, oh as i64, ow as i64])
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                slices.push(sl);
+            }
+        }
+        // (N, C, KH*KW, OH, OW)
+        let stacked = slices[0]
+            .concat_in_dim(&slices[1..], 2)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        // -> (N, OH, OW, C, KH*KW) -> (N*OH*OW, C*KH*KW)
+        let out = stacked
+            .transpose(&[0, 3, 4, 1, 2])
+            .map_err(|e| anyhow!("{e:?}"))?
+            .reshape(&[(n * oh * ow) as i64, (c * kh * kw) as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        Ok((out, Self::out_ty(vec![n * oh * ow, c * kh * kw], Self::dtype_of(&ty))))
+    }
+
+    /// Pooling via the same strided-slice trick: max/add over k*k slices.
+    fn lower_pool(&mut self, name: &str, args: &[E], attrs: &Attrs) -> Result<Val> {
+        let (x, ty) = self.lower(&args[0])?;
+        let s = Self::shape_of(&ty)?;
+        let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+        let k = attrs.get("pool_size").map(|v| v.as_int() as usize).unwrap_or(2);
+        let stride = attrs.get("strides").map(|v| v.as_int() as usize).unwrap_or(k);
+        let pad = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+        if pad != 0 {
+            bail!("XLA pool lowering supports padding=0 only (got {pad})");
+        }
+        let oh = (h - k) / stride + 1;
+        let ow = (w - k) / stride + 1;
+        let mut acc: Option<XlaOp> = None;
+        for ky in 0..k {
+            for kx in 0..k {
+                let sl = x
+                    .slice_in_dim(ky as i64, (ky + (oh - 1) * stride + 1) as i64, stride as i64, 2)
+                    .map_err(|e| anyhow!("{e:?}"))?
+                    .slice_in_dim(kx as i64, (kx + (ow - 1) * stride + 1) as i64, stride as i64, 3)
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                acc = Some(match acc {
+                    None => sl,
+                    Some(a) => {
+                        if name == "nn.max_pool2d" {
+                            a.max(&sl).map_err(|e| anyhow!("{e:?}"))?
+                        } else {
+                            a.add_(&sl).map_err(|e| anyhow!("{e:?}"))?
+                        }
+                    }
+                });
+            }
+        }
+        let mut out = acc.unwrap();
+        if name == "nn.avg_pool2d" {
+            let denom = self
+                .builder
+                .c0((k * k) as f32)
+                .map_err(|e| anyhow!("{e:?}"))?;
+            out = out.div_(&denom).map_err(|e| anyhow!("{e:?}"))?;
+        }
+        Ok((out, Self::out_ty(vec![n, c, oh, ow], Self::dtype_of(&ty))))
+    }
+}
+
+/// Compile a Relay function (first-order, concrete param types) to XLA.
+pub fn compile_fn(rt: &Runtime, module: &Module, f: &Function) -> Result<Compiled> {
+    // Resolve parameter types (annotations required or inferable).
+    let fe: E = Arc::new(Expr::Func(f.clone()));
+    let (report, fty) = crate::ty::infer_expr(module, &fe)
+        .map_err(|e| anyhow!("typecheck before lowering: {e}"))?;
+    let _ = report;
+    let param_types: Vec<crate::ir::Type> = match fty {
+        crate::ir::Type::Func { params, .. } => params,
+        other => bail!("not a function type: {other}"),
+    };
+
+    let builder = XlaBuilder::new("relay_aot");
+    let mut lower = Lower { builder: builder.clone(), module, env: BTreeMap::new() };
+    for (i, ((p, _), ty)) in f.params.iter().zip(&param_types).enumerate() {
+        let shape = Lower::shape_of(ty)?;
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let xty = prim_ty(Lower::dtype_of(ty))?;
+        let op = builder
+            .parameter(i as i64, xty, &dims, &format!("p{i}"))
+            .map_err(|e| anyhow!("param: {e:?}"))?;
+        lower.env.insert(p.id, (op, ty.clone()));
+    }
+    let (out, _) = lower.lower(&f.body)?;
+    // Wrap in a 1-tuple to match the artifact convention.
+    let tup = builder.tuple(&[out]).map_err(|e| anyhow!("{e:?}"))?;
+    let comp = tup.build().map_err(|e| anyhow!("build: {e:?}"))?;
+    let key = format!("fn-{:016x}", structural_hash(&fe));
+    let exe = rt.compile_cached(&key, &comp)?;
+    Ok(Compiled { exe, param_types })
+}
+
+/// Optimize + compile `@main` of a module for XLA execution: the Relay
+/// AoT pipeline (inline -> O3 passes incl. AlterOpLayout -> fuse -> lower).
+pub fn compile_main(
+    rt: &Runtime,
+    module: &Module,
+    level: crate::pass::OptLevel,
+) -> Result<Compiled> {
+    let mut opt = crate::pass::optimize(module, level, false)
+        .map_err(|e| anyhow!("optimize: {e}"))?;
+    if level < crate::pass::OptLevel::O3 {
+        // The XLA backend cannot lower raw conv2d; always alter layout.
+        opt = crate::pass::alter_op_layout::run(&opt).map_err(|e| anyhow!("{e}"))?;
+        opt = crate::pass::fold_constant::run(&opt);
+    }
+    let anfed = crate::pass::anf::run(&opt);
+    let main = anfed.def("main").ok_or_else(|| anyhow!("no @main"))?;
+    compile_fn(rt, &anfed, main)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_main, Value};
+    use crate::ir::parse_module;
+    use crate::pass::OptLevel;
+    use crate::tensor::Rng;
+
+    fn rt() -> Runtime {
+        Runtime::cpu().unwrap()
+    }
+
+    #[test]
+    fn dense_relu_matches_interpreter() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(4, 8), float32], %w: Tensor[(16, 8), float32], %b: Tensor[(16), float32]) {\n\
+               nn.relu(nn.bias_add(nn.dense(%x, %w), %b))\n\
+             }",
+        )
+        .unwrap();
+        let rt = rt();
+        let c = compile_main(&rt, &m, OptLevel::O1).unwrap();
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(&[4, 8], 1.0);
+        let w = rng.normal_tensor(&[16, 8], 1.0);
+        let b = rng.normal_tensor(&[16], 1.0);
+        let expect = eval_main(
+            &m,
+            vec![Value::Tensor(x.clone()), Value::Tensor(w.clone()), Value::Tensor(b.clone())],
+        )
+        .unwrap();
+        let got = c.run(&rt, &[x, w, b]).unwrap();
+        assert!(expect.tensor().allclose(&got[0], 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn conv_via_im2col_matches() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 3, 8, 8), float32], %w: Tensor[(4, 3, 3, 3), float32]) {\n\
+               nn.relu(nn.conv2d(%x, %w, padding=1))\n\
+             }",
+        )
+        .unwrap();
+        let rt = rt();
+        let c = compile_main(&rt, &m, OptLevel::O3).unwrap();
+        let mut rng = Rng::new(1);
+        let x = rng.normal_tensor(&[2, 3, 8, 8], 1.0);
+        let w = rng.normal_tensor(&[4, 3, 3, 3], 0.5);
+        let expect =
+            eval_main(&m, vec![Value::Tensor(x.clone()), Value::Tensor(w.clone())]).unwrap();
+        let got = c.run(&rt, &[x, w]).unwrap();
+        assert_eq!(got[0].shape(), expect.tensor().shape());
+        assert!(
+            expect.tensor().allclose(&got[0], 1e-3, 1e-3),
+            "max diff {}",
+            expect.tensor().max_abs_diff(&got[0])
+        );
+    }
+
+    #[test]
+    fn pooling_and_softmax_match() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(1, 2, 4, 4), float32]) {\n\
+               nn.softmax(nn.batch_flatten(nn.max_pool2d(%x, pool_size=2)))\n\
+             }",
+        )
+        .unwrap();
+        let rt = rt();
+        let c = compile_main(&rt, &m, OptLevel::O1).unwrap();
+        let mut rng = Rng::new(2);
+        let x = rng.normal_tensor(&[1, 2, 4, 4], 1.0);
+        let expect = eval_main(&m, vec![Value::Tensor(x.clone())]).unwrap();
+        let got = c.run(&rt, &[x]).unwrap();
+        assert!(expect.tensor().allclose(&got[0], 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn executable_cache_hits_on_alpha_equal_fns() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(%x) }",
+        )
+        .unwrap();
+        let rt = rt();
+        let _c1 = compile_main(&rt, &m, OptLevel::O1).unwrap();
+        let n1 = rt.cache_len();
+        let _c2 = compile_main(&rt, &m, OptLevel::O1).unwrap();
+        assert_eq!(rt.cache_len(), n1, "alpha-equal function recompiled");
+    }
+}

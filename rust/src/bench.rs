@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (criterion is not in the vendored dep set).
+//!
+//! Reports mean / p50 / min over `iters` timed runs after `warmup` runs,
+//! and renders the per-figure tables the bench binaries print.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub min_ms: f64,
+    pub iters: usize,
+}
+
+/// Time `f` `iters` times (after `warmup` unrecorded runs).
+pub fn time_it(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<Duration> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect()
+}
+
+pub fn bench(name: impl Into<String>, warmup: usize, iters: usize, f: impl FnMut()) -> Sample {
+    let mut times = time_it(warmup, iters, f);
+    times.sort();
+    let total: Duration = times.iter().sum();
+    let ms = |d: &Duration| d.as_secs_f64() * 1e3;
+    Sample {
+        name: name.into(),
+        mean_ms: ms(&total) / times.len() as f64,
+        p50_ms: ms(&times[times.len() / 2]),
+        min_ms: ms(&times[0]),
+        iters,
+    }
+}
+
+/// Print a results table with a relative column against `baseline_ms`.
+pub fn print_table(title: &str, rows: &[(String, f64)], rel_label: &str, baseline_ms: f64) {
+    println!("\n== {title} ==");
+    println!("{:<28} {:>12} {:>12}", "config", "mean ms", rel_label);
+    for (name, ms) in rows {
+        println!("{:<28} {:>12.3} {:>11.2}x", name, ms, baseline_ms / ms);
+    }
+}
+
+/// Simple mean helper for metric summaries.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_monotone_in_work() {
+        // black_box inside the loop so release builds can't fold it away.
+        let work = |n: u64| {
+            let mut s = 0u64;
+            for i in 0..n {
+                s = s.wrapping_add(std::hint::black_box(i) * i);
+            }
+            std::hint::black_box(s);
+        };
+        let a = bench("small", 1, 5, || work(20_000));
+        let b = bench("big", 1, 5, || work(5_000_000));
+        assert!(b.min_ms > a.min_ms, "{} vs {}", b.min_ms, a.min_ms);
+    }
+
+    #[test]
+    fn mean_works() {
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

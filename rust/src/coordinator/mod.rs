@@ -1,0 +1,100 @@
+//! Layer-3 coordinator: the CLI driver and a batched inference server.
+//!
+//! The paper's contribution is the compiler, so this layer is deliberately
+//! thin (per DESIGN.md): process lifecycle, a request loop, and metrics.
+//! The server demonstrates deployment of a compiled artifact — a dynamic
+//! batcher over the PJRT executable, Python long gone.
+
+pub mod server;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::{eval_main, Value};
+use crate::pass::OptLevel;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// `relay compile <file.relay> [-O n]`: parse, typecheck, optimize, print.
+pub fn cmd_compile(path: &str, level: OptLevel) -> Result<String> {
+    let src = std::fs::read_to_string(path)?;
+    let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
+    crate::ty::check_module(&m).map_err(|e| anyhow!("{e}"))?;
+    let opt = crate::pass::optimize(&m, level, true).map_err(|e| anyhow!("{e}"))?;
+    Ok(crate::ir::print_module(&opt))
+}
+
+/// `relay run <file.relay> [-O n]`: optimize and evaluate @main() with no
+/// arguments (or random tensors for annotated params).
+pub fn cmd_run(path: &str, level: OptLevel) -> Result<String> {
+    let src = std::fs::read_to_string(path)?;
+    let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
+    let opt = crate::pass::optimize(&m, level, false).map_err(|e| anyhow!("{e}"))?;
+    let main = opt.def("main").ok_or_else(|| anyhow!("no @main"))?;
+    let mut rng = crate::tensor::Rng::new(0);
+    let args: Result<Vec<Value>> = main
+        .params
+        .iter()
+        .map(|(p, ty)| match ty {
+            Some(t) => {
+                let shape = t
+                    .concrete_shape()
+                    .ok_or_else(|| anyhow!("param {p} needs concrete type"))?;
+                Ok(Value::Tensor(rng.normal_tensor(&shape, 1.0)))
+            }
+            None => Err(anyhow!("param {p} needs a type annotation")),
+        })
+        .collect();
+    let out = eval_main(&opt, args?).map_err(|e| anyhow!("{e}"))?;
+    Ok(format!("{out:?}"))
+}
+
+/// `relay artifact <name>`: run an AOT artifact once with zero inputs and
+/// report output shapes (smoke check of the python -> rust path).
+pub fn cmd_artifact(dir: &Path, name: &str) -> Result<String> {
+    let rt = Runtime::cpu()?;
+    let manifest = crate::runtime::manifest::load(&dir.join("manifest.json"))
+        .map_err(|e| anyhow!("{e}"))?;
+    let entry = manifest
+        .get(name)
+        .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+    let exe = rt.load_artifact(&dir.join(format!("{name}.hlo.txt")))?;
+    let inputs: Vec<Tensor> = entry
+        .inputs
+        .iter()
+        .map(|spec| Tensor::zeros(&spec.shape, spec.dtype))
+        .collect();
+    let outs = rt.execute(&exe, &inputs)?;
+    let shapes: Vec<String> = outs.iter().map(|t| format!("{:?}", t.shape())).collect();
+    Ok(format!("{name}: {} outputs, shapes {shapes:?}", outs.len()))
+}
+
+pub fn usage() -> &'static str {
+    "relay — Relay IR reproduction (Roesch et al. 2019)\n\
+     \n\
+     USAGE:\n\
+       relay compile <file.relay> [-O 0|1|2|3]   parse, check, optimize, print\n\
+       relay run <file.relay> [-O 0|1|2|3]       optimize and evaluate @main\n\
+       relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
+       relay serve [--port 7474]                 batched inference server\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_and_run_roundtrip() {
+        let tmp = std::env::temp_dir().join("relay_cli_test.relay");
+        std::fs::write(
+            &tmp,
+            "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(add(%x, 1f)) }",
+        )
+        .unwrap();
+        let printed = cmd_compile(tmp.to_str().unwrap(), OptLevel::O2).unwrap();
+        assert!(printed.contains("@main"));
+        let out = cmd_run(tmp.to_str().unwrap(), OptLevel::O2).unwrap();
+        assert!(out.contains("Tensor"), "{out}");
+    }
+}

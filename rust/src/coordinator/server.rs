@@ -1,0 +1,231 @@
+//! Batched inference server over a compiled artifact.
+//!
+//! A std-thread dynamic batcher (no tokio in the vendored dep set): client
+//! connections write one request per line — comma-separated f32 features —
+//! and read back the predicted class. Requests are queued; a batcher
+//! thread drains up to `max_batch` requests (waiting at most
+//! `batch_timeout` for stragglers), pads to the artifact's batch dimension,
+//! executes one PJRT call, and fans results back out. This is the router /
+//! dynamic-batcher shape of serving systems, scaled to the thin-driver
+//! role the paper's compiler contribution leaves for L3.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub struct ServerConfig {
+    pub port: u16,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            port: 7474,
+            max_batch: 32,
+            batch_timeout: Duration::from_millis(2),
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+struct Request {
+    features: Vec<f32>,
+    respond: Sender<String>,
+}
+
+pub struct Stats {
+    pub requests: AtomicUsize,
+    pub batches: AtomicUsize,
+}
+
+/// Serve the `mlp_forward` artifact. Blocks; set `stop` to shut down.
+///
+/// Note: PJRT handles are `!Send` (the xla crate wraps raw pointers with
+/// `Rc`), so the batcher thread owns the client + executable exclusively —
+/// a single-executor design, with batching providing the throughput.
+pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
+    let stats = Arc::new(Stats {
+        requests: AtomicUsize::new(0),
+        batches: AtomicUsize::new(0),
+    });
+
+    let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+
+    // Batcher thread (owns the PJRT client + executable).
+    {
+        let stats = stats.clone();
+        let stop = stop.clone();
+        let artifact_dir = cfg.artifact_dir.clone();
+        let max_batch = cfg.max_batch;
+        let timeout = cfg.batch_timeout;
+        std::thread::spawn(move || {
+            let setup = (|| -> Result<_> {
+                let rt = Runtime::cpu()?;
+                let manifest =
+                    crate::runtime::manifest::load(&artifact_dir.join("manifest.json"))
+                        .map_err(|e| anyhow!("{e}"))?;
+                let entry = manifest
+                    .get("mlp_forward")
+                    .ok_or_else(|| anyhow!("mlp_forward not in manifest"))?
+                    .clone();
+                let exe = rt.load_artifact(&artifact_dir.join("mlp_forward.hlo.txt"))?;
+                Ok((rt, entry, exe))
+            })();
+            let (rt, entry, exe) = match setup {
+                Ok(x) => {
+                    let _ = ready_tx.send(Ok(()));
+                    x
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let x_spec = entry.inputs.last().unwrap().clone();
+            let (batch_cap, feat) = (x_spec.shape[0], x_spec.shape[1]);
+            let weights: Vec<Tensor> = entry.inputs[..entry.inputs.len() - 1]
+                .iter()
+                .map(|s| {
+                    // Deterministic weights (a real deployment would load
+                    // trained parameters; see examples/train_mlp.rs).
+                    let mut rng = crate::tensor::Rng::new(17);
+                    rng.normal_tensor(&s.shape, 0.1)
+                })
+                .collect();
+            let cfg_batch = max_batch.min(batch_cap);
+            while !stop.load(Ordering::Relaxed) {
+                let first = match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(r) => r,
+                    Err(_) => continue,
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + timeout;
+                while batch.len() < cfg_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => batch.push(r),
+                        Err(_) => break,
+                    }
+                }
+                stats.batches.fetch_add(1, Ordering::Relaxed);
+                stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
+                // Pad to the artifact's fixed batch size.
+                let mut data = vec![0f32; batch_cap * feat];
+                for (i, r) in batch.iter().enumerate() {
+                    let row = &r.features[..feat.min(r.features.len())];
+                    data[i * feat..i * feat + row.len()].copy_from_slice(row);
+                }
+                let x = Tensor::from_f32(vec![batch_cap, feat], data);
+                let mut inputs = weights.clone();
+                inputs.push(x);
+                let reply: Vec<String> = match rt.execute(&exe, &inputs) {
+                    Ok(outs) => {
+                        let logits = &outs[0];
+                        let preds = crate::tensor::argmax(logits, 1);
+                        (0..batch.len())
+                            .map(|i| format!("{}", preds.as_i64()[i]))
+                            .collect()
+                    }
+                    Err(e) => batch.iter().map(|_| format!("error: {e}")).collect(),
+                };
+                for (r, out) in batch.into_iter().zip(reply) {
+                    let _ = r.respond.send(out);
+                }
+            }
+        });
+    }
+
+    // Wait for the executor to be ready (or fail fast).
+    ready_rx
+        .recv_timeout(Duration::from_secs(60))
+        .map_err(|_| anyhow!("executor thread did not start"))??;
+
+    // Accept loop.
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+    listener.set_nonblocking(true)?;
+    let stats_out = stats.clone();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let tx = tx.clone();
+                    std::thread::spawn(move || handle_client(stream, tx));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(stats_out)
+}
+
+fn handle_client(stream: TcpStream, tx: Sender<Request>) {
+    let peer = stream.try_clone();
+    let reader = BufReader::new(stream);
+    let mut writer = match peer {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let features: Vec<f32> = line
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect();
+        let (rtx, rrx) = channel();
+        if tx.send(Request { features, respond: rtx }).is_err() {
+            break;
+        }
+        match rrx.recv_timeout(Duration::from_secs(5)) {
+            Ok(resp) => {
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Client helper (used by examples/serve.rs and tests).
+pub fn classify(port: u16, features: &[f32]) -> Result<i64> {
+    let mut stream = TcpStream::connect(("127.0.0.1", port))?;
+    let line: Vec<String> = features.iter().map(|f| f.to_string()).collect();
+    writeln!(stream, "{}", line.join(","))?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    resp.trim().parse().map_err(|e| anyhow!("bad response {resp:?}: {e}"))
+}
+
+/// Is the artifact directory present (CI guard)?
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists() && dir.join("mlp_forward.hlo.txt").exists()
+}

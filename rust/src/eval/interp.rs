@@ -1,0 +1,385 @@
+//! The reference interpreter: a tree-walk evaluator implementing the
+//! operational semantics of the paper's appendix (Semantics-*).
+//!
+//! Used as the ground truth against the graph runtime and XLA backend, as
+//! the executor for control-flow-heavy NLP models, and as the "define-by-
+//! run framework" baseline in Fig 11/12 (an unfused, interpreted execution
+//! mode, architecturally equivalent to eager frameworks).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::value::{env_bind, env_empty, env_lookup, Env, Value};
+use crate::ir::{Expr, Function, Module, Pattern, Var, E};
+use crate::op;
+
+pub struct Interp<'m> {
+    pub module: &'m Module,
+    /// Kernel-launch counter: one per operator call, or one per *primitive*
+    /// (fused) function call — the fusion benefit metric of Fig 10/11.
+    pub op_calls: RefCell<usize>,
+    /// Non-zero while executing inside a primitive function (inner op
+    /// calls don't count as separate launches).
+    in_primitive: RefCell<usize>,
+}
+
+impl<'m> Interp<'m> {
+    pub fn new(module: &'m Module) -> Interp<'m> {
+        Interp { module, op_calls: RefCell::new(0), in_primitive: RefCell::new(0) }
+    }
+
+    pub fn eval(&self, e: &E, env: &Env) -> Result<Value, String> {
+        match &**e {
+            Expr::Var(v) => {
+                env_lookup(env, v).ok_or_else(|| format!("unbound variable {v}"))
+            }
+            Expr::Global(g) => {
+                let f = self
+                    .module
+                    .def(g)
+                    .ok_or_else(|| format!("unknown global @{g}"))?;
+                Ok(Value::Closure { func: f.clone(), env: env_empty(), rec: None })
+            }
+            Expr::Const(t) => Ok(Value::Tensor(t.clone())),
+            Expr::Op(name) => Ok(Value::OpRef(name.clone())),
+            Expr::Ctor(name) => {
+                // Nullary constructors are values already (`Nil` == `Nil()`).
+                match self.module.ctor_info(name) {
+                    Some((_, fields)) if fields.is_empty() => {
+                        Ok(Value::Adt { ctor: name.clone(), fields: vec![] })
+                    }
+                    _ => Ok(Value::CtorRef(name.clone())),
+                }
+            }
+            Expr::Tuple(es) => {
+                let vs: Result<Vec<_>, _> = es.iter().map(|x| self.eval(x, env)).collect();
+                Ok(Value::Tuple(vs?))
+            }
+            Expr::Proj(t, i) => match self.eval(t, env)? {
+                Value::Tuple(vs) => vs
+                    .get(*i)
+                    .cloned()
+                    .ok_or_else(|| format!("tuple index {i} out of range")),
+                other => Err(format!("projection on non-tuple {other:?}")),
+            },
+            Expr::Let { var, value, body, .. } => {
+                // Recursive let for function values (Fig. 2's loop pattern).
+                let v = match &**value {
+                    Expr::Func(f) => Value::Closure {
+                        func: f.clone(),
+                        env: env.clone(),
+                        rec: Some(var.clone()),
+                    },
+                    _ => self.eval(value, env)?,
+                };
+                let env2 = env_bind(env, var.clone(), v);
+                self.eval(body, &env2)
+            }
+            Expr::Func(f) => {
+                Ok(Value::Closure { func: f.clone(), env: env.clone(), rec: None })
+            }
+            Expr::If { cond, then_, else_ } => {
+                let c = self.eval(cond, env)?;
+                if c.tensor().bool_value() {
+                    self.eval(then_, env)
+                } else {
+                    self.eval(else_, env)
+                }
+            }
+            Expr::Call { f, args, attrs } => {
+                // Operator / constructor calls evaluate args then dispatch.
+                match &**f {
+                    Expr::Op(name) => {
+                        let vs: Result<Vec<_>, _> =
+                            args.iter().map(|a| self.eval(a, env)).collect();
+                        self.apply_op(name, &vs?, attrs)
+                    }
+                    Expr::Ctor(name) => {
+                        let vs: Result<Vec<_>, _> =
+                            args.iter().map(|a| self.eval(a, env)).collect();
+                        Ok(Value::Adt { ctor: name.clone(), fields: vs? })
+                    }
+                    _ => {
+                        let callee = self.eval(f, env)?;
+                        let vs: Result<Vec<_>, _> =
+                            args.iter().map(|a| self.eval(a, env)).collect();
+                        self.apply(callee, vs?, attrs)
+                    }
+                }
+            }
+            Expr::Match { scrut, arms } => {
+                let sv = self.eval(scrut, env)?;
+                for (p, body) in arms {
+                    let mut env2 = env.clone();
+                    if match_pattern(p, &sv, &mut env2) {
+                        return self.eval(body, &env2);
+                    }
+                }
+                Err("non-exhaustive match".to_string())
+            }
+            Expr::Grad(f) => {
+                // AD is a macro over the AST (paper appendix): expand and
+                // evaluate the transformed function.
+                let g = crate::pass::ad::grad_expr(f)?;
+                self.eval(&g, env)
+            }
+            Expr::RefNew(v) => {
+                let val = self.eval(v, env)?;
+                Ok(Value::Ref(Rc::new(RefCell::new(val))))
+            }
+            Expr::RefRead(r) => match self.eval(r, env)? {
+                Value::Ref(cell) => Ok(cell.borrow().clone()),
+                other => Err(format!("! on non-ref {other:?}")),
+            },
+            Expr::RefWrite(r, v) => {
+                let rv = self.eval(r, env)?;
+                let vv = self.eval(v, env)?;
+                match rv {
+                    Value::Ref(cell) => {
+                        *cell.borrow_mut() = vv;
+                        Ok(Value::unit())
+                    }
+                    other => Err(format!(":= on non-ref {other:?}")),
+                }
+            }
+        }
+    }
+
+    /// Apply a callee value to arguments (Semantics-Call).
+    pub fn apply(
+        &self,
+        callee: Value,
+        args: Vec<Value>,
+        attrs: &crate::ir::Attrs,
+    ) -> Result<Value, String> {
+        match callee {
+            Value::Closure { func, env, rec } => {
+                if func.params.len() != args.len() {
+                    return Err(format!(
+                        "arity mismatch: {} params, {} args",
+                        func.params.len(),
+                        args.len()
+                    ));
+                }
+                let primitive = func.attrs.primitive;
+                if primitive {
+                    // Fused kernel: one launch regardless of inner op count.
+                    *self.op_calls.borrow_mut() += 1;
+                    *self.in_primitive.borrow_mut() += 1;
+                }
+                let mut env2 = env.clone();
+                if let Some(rv) = &rec {
+                    env2 = env_bind(
+                        &env2,
+                        rv.clone(),
+                        Value::Closure { func: func.clone(), env: env.clone(), rec: rec.clone() },
+                    );
+                }
+                for ((p, _), a) in func.params.iter().zip(args) {
+                    env2 = env_bind(&env2, p.clone(), a);
+                }
+                let out = self.eval(&func.body, &env2);
+                if primitive {
+                    *self.in_primitive.borrow_mut() -= 1;
+                }
+                out
+            }
+            Value::OpRef(name) => self.apply_op(&name, &args, attrs),
+            Value::CtorRef(name) => Ok(Value::Adt { ctor: name, fields: args }),
+            other => Err(format!("cannot call {other:?}")),
+        }
+    }
+
+    fn apply_op(
+        &self,
+        name: &str,
+        args: &[Value],
+        attrs: &crate::ir::Attrs,
+    ) -> Result<Value, String> {
+        let def = op::lookup(name).ok_or_else(|| format!("unknown operator {name}"))?;
+        if let Some(ar) = def.arity {
+            if args.len() != ar {
+                return Err(format!("operator {name} expects {ar} args, got {}", args.len()));
+            }
+        }
+        if *self.in_primitive.borrow() == 0 {
+            *self.op_calls.borrow_mut() += 1;
+        }
+        (def.eval)(args, attrs)
+    }
+}
+
+/// Try to match `p` against `v`, extending `env` with bindings.
+pub fn match_pattern(p: &Pattern, v: &Value, env: &mut Env) -> bool {
+    match (p, v) {
+        (Pattern::Wildcard, _) => true,
+        (Pattern::Var(x), _) => {
+            *env = env_bind(env, x.clone(), v.clone());
+            true
+        }
+        (Pattern::Ctor(name, ps), Value::Adt { ctor, fields }) => {
+            if name != ctor || ps.len() > fields.len() {
+                return false;
+            }
+            // Nullary patterns may omit parens; field counts must match
+            // when patterns are given.
+            if !ps.is_empty() && ps.len() != fields.len() {
+                return false;
+            }
+            ps.iter().zip(fields).all(|(p, f)| match_pattern(p, f, env))
+        }
+        (Pattern::Tuple(ps), Value::Tuple(vs)) => {
+            ps.len() == vs.len() && ps.iter().zip(vs).all(|(p, f)| match_pattern(p, f, env))
+        }
+        _ => false,
+    }
+}
+
+/// Evaluate a bare expression under a module.
+pub fn eval_expr(module: &Module, e: &E) -> Result<Value, String> {
+    Interp::new(module).eval(e, &env_empty())
+}
+
+/// Evaluate `@main(args...)`.
+pub fn eval_main(module: &Module, args: Vec<Value>) -> Result<Value, String> {
+    let interp = Interp::new(module);
+    let f = module.entry().ok_or("no @main in module")?;
+    interp.apply(
+        Value::Closure { func: f.clone(), env: env_empty(), rec: None },
+        args,
+        &crate::ir::Attrs::new(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{self, parse_expr, parse_module};
+    use crate::tensor::Tensor;
+
+    fn run(src: &str) -> Value {
+        let m = Module::with_prelude();
+        let e = parse_expr(src).unwrap();
+        eval_expr(&m, &e).unwrap()
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(run("add(1f, 2f)").tensor().f32_value(), 3.0);
+        assert_eq!(run("multiply(3f, 4f)").tensor().f32_value(), 12.0);
+    }
+
+    #[test]
+    fn let_and_tuple() {
+        let v = run("let %t = (1f, 2f); %t.1");
+        assert_eq!(v.tensor().f32_value(), 2.0);
+    }
+
+    #[test]
+    fn closures_capture() {
+        let v = run("let %x = 10f; let %f = fn (%y) { add(%x, %y) }; %f(5f)");
+        assert_eq!(v.tensor().f32_value(), 15.0);
+    }
+
+    #[test]
+    fn if_branches() {
+        assert_eq!(run("if (less(1f, 2f)) { 10f } else { 20f }").tensor().f32_value(), 10.0);
+        assert_eq!(run("if (less(3f, 2f)) { 10f } else { 20f }").tensor().f32_value(), 20.0);
+    }
+
+    #[test]
+    fn recursive_let_loop() {
+        // Fig. 2's pattern: a tail-recursive countdown summing 1..=n.
+        let v = run(
+            "let %loop = fn (%i, %acc) {\n\
+               if (greater(%i, 0f)) { %loop(subtract(%i, 1f), add(%acc, %i)) }\n\
+               else { %acc }\n\
+             };\n\
+             %loop(10f, 0f)",
+        );
+        assert_eq!(v.tensor().f32_value(), 55.0);
+    }
+
+    #[test]
+    fn adts_and_match() {
+        let v = run(
+            "let %l = Cons(1f, Cons(2f, Nil));\n\
+             match (%l) { | Cons(%h, %t) -> %h | Nil -> 0f }",
+        );
+        assert_eq!(v.tensor().f32_value(), 1.0);
+    }
+
+    #[test]
+    fn list_fold_via_recursion() {
+        let v = run(
+            "let %sum = fn (%l) {\n\
+               match (%l) { | Cons(%h, %t) -> add(%h, %sum(%t)) | Nil -> 0f }\n\
+             };\n\
+             %sum(Cons(1f, Cons(2f, Cons(3f, Nil))))",
+        );
+        assert_eq!(v.tensor().f32_value(), 6.0);
+    }
+
+    #[test]
+    fn refs_mutate() {
+        let v = run("let %r = ref(1f); %r := add(!%r, 41f); !%r");
+        assert_eq!(v.tensor().f32_value(), 42.0);
+    }
+
+    #[test]
+    fn globals_and_main() {
+        let m = parse_module(
+            "def @double(%x) { multiply(%x, 2f) }\n\
+             def @main(%x) { @double(@double(%x)) }",
+        )
+        .unwrap();
+        let out = eval_main(&m, vec![Value::Tensor(Tensor::scalar_f32(3.0))]).unwrap();
+        assert_eq!(out.tensor().f32_value(), 12.0);
+    }
+
+    #[test]
+    fn global_recursion() {
+        let m = parse_module(
+            "def @fact(%n) {\n\
+               if (greater(%n, 1f)) { multiply(%n, @fact(subtract(%n, 1f))) } else { 1f }\n\
+             }\n\
+             def @main(%n) { @fact(%n) }",
+        )
+        .unwrap();
+        let out = eval_main(&m, vec![Value::Tensor(Tensor::scalar_f32(5.0))]).unwrap();
+        assert_eq!(out.tensor().f32_value(), 120.0);
+    }
+
+    #[test]
+    fn higher_order_functions() {
+        let v = run(
+            "let %apply_twice = fn (%f, %x) { %f(%f(%x)) };\n\
+             %apply_twice(fn (%y) { add(%y, 1f) }, 0f)",
+        );
+        assert_eq!(v.tensor().f32_value(), 2.0);
+    }
+
+    #[test]
+    fn op_as_first_class_value() {
+        let v = run("let %f = add; %f(2f, 3f)");
+        assert_eq!(v.tensor().f32_value(), 5.0);
+    }
+
+    #[test]
+    fn op_call_counter() {
+        let m = Module::with_prelude();
+        let interp = Interp::new(&m);
+        let e = parse_expr("add(multiply(2f, 3f), 1f)").unwrap();
+        interp.eval(&e, &super::env_empty()).unwrap();
+        assert_eq!(*interp.op_calls.borrow(), 2);
+    }
+
+    #[test]
+    fn operator_attrs_flow_through() {
+        let v = run(
+            "sum(meta_matrix(), axis=[1])".replace("meta_matrix()", "reshape(add((0f), (0f)), newshape=[1, 1])").as_str(),
+        );
+        assert_eq!(v.tensor().shape(), &[1]);
+        let _ = ir::unit();
+    }
+}

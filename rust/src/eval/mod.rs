@@ -1,0 +1,8 @@
+//! Execution backends over the IR: runtime values and the reference
+//! interpreter (paper §3.1.3's "Relay interpreter").
+
+pub mod interp;
+pub mod value;
+
+pub use interp::{eval_expr, eval_main, Interp};
+pub use value::{env_bind, env_empty, Env, Value};

@@ -1,0 +1,186 @@
+//! Runtime values (paper appendix operational semantics): tensors, tuples,
+//! closures, references, ADT instances, and operator/constructor references.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::ir::{Function, Var, E};
+use crate::tensor::Tensor;
+
+/// Environment mapping vars to values (persistent via Rc chain).
+pub type Env = Rc<EnvNode>;
+
+#[derive(Debug)]
+pub enum EnvNode {
+    Empty,
+    Bind { var: Var, value: Value, rest: Env },
+}
+
+pub fn env_empty() -> Env {
+    Rc::new(EnvNode::Empty)
+}
+
+pub fn env_bind(env: &Env, var: Var, value: Value) -> Env {
+    Rc::new(EnvNode::Bind { var, value, rest: env.clone() })
+}
+
+pub fn env_lookup(env: &Env, var: &Var) -> Option<Value> {
+    let mut cur = env;
+    loop {
+        match &**cur {
+            EnvNode::Empty => return None,
+            EnvNode::Bind { var: v, value, rest } => {
+                if v == var {
+                    return Some(value.clone());
+                }
+                cur = rest;
+            }
+        }
+    }
+}
+
+#[derive(Clone)]
+pub enum Value {
+    Tensor(Tensor),
+    Tuple(Vec<Value>),
+    Closure {
+        func: Function,
+        env: Env,
+        /// `let %f = fn ... ;` binds recursively (the paper's Fig. 2 loop
+        /// encoding): applying the closure re-binds `rec` to itself.
+        rec: Option<Var>,
+    },
+    Ref(Rc<RefCell<Value>>),
+    Adt { ctor: String, fields: Vec<Value> },
+    /// Partially-applied constructor / operator references are represented
+    /// by the interpreter as direct call targets; these values appear when
+    /// ops/ctors are used first-class.
+    OpRef(String),
+    CtorRef(String),
+}
+
+impl Value {
+    pub fn unit() -> Value {
+        Value::Tuple(vec![])
+    }
+
+    pub fn tensor(&self) -> &Tensor {
+        match self {
+            Value::Tensor(t) => t,
+            other => panic!("expected tensor value, got {other:?}"),
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            Value::Tensor(t) => t,
+            other => panic!("expected tensor value, got {other:?}"),
+        }
+    }
+
+    pub fn tuple(&self) -> &[Value] {
+        match self {
+            Value::Tuple(vs) => vs,
+            other => panic!("expected tuple value, got {other:?}"),
+        }
+    }
+
+    /// Build a Relay `List` value from items.
+    pub fn list(items: Vec<Value>) -> Value {
+        let mut acc = Value::Adt { ctor: "Nil".into(), fields: vec![] };
+        for item in items.into_iter().rev() {
+            acc = Value::Adt { ctor: "Cons".into(), fields: vec![item, acc] };
+        }
+        acc
+    }
+
+    /// Flatten a `List` value back to a vector.
+    pub fn list_items(&self) -> Vec<Value> {
+        let mut out = Vec::new();
+        let mut cur = self.clone();
+        loop {
+            match cur {
+                Value::Adt { ref ctor, ref fields } if ctor == "Cons" => {
+                    out.push(fields[0].clone());
+                    cur = fields[1].clone();
+                }
+                Value::Adt { ref ctor, .. } if ctor == "Nil" => break,
+                other => panic!("not a list: {other:?}"),
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Debug for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Tensor(t) => write!(f, "{t:?}"),
+            Value::Tuple(vs) => f.debug_list().entries(vs).finish(),
+            Value::Closure { func, .. } => {
+                write!(f, "<closure/{}>", func.params.len())
+            }
+            Value::Ref(_) => write!(f, "<ref>"),
+            Value::Adt { ctor, fields } => {
+                write!(f, "{ctor}")?;
+                if !fields.is_empty() {
+                    f.debug_list().entries(fields).finish()?;
+                }
+                Ok(())
+            }
+            Value::OpRef(n) => write!(f, "<op {n}>"),
+            Value::CtorRef(n) => write!(f, "<ctor {n}>"),
+        }
+    }
+}
+
+/// A snapshot of values keyed by name, used at module boundaries.
+pub type Bindings = BTreeMap<String, Value>;
+
+/// Thunk used by `grad`: expression plus captured env (for debugging).
+#[derive(Clone)]
+pub struct Suspended {
+    pub expr: E,
+    pub env: Env,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_shadowing() {
+        let x = Var::fresh("x");
+        let e0 = env_empty();
+        let e1 = env_bind(&e0, x.clone(), Value::Tensor(Tensor::scalar_f32(1.0)));
+        let e2 = env_bind(&e1, x.clone(), Value::Tensor(Tensor::scalar_f32(2.0)));
+        assert_eq!(env_lookup(&e2, &x).unwrap().tensor().f32_value(), 2.0);
+        assert_eq!(env_lookup(&e1, &x).unwrap().tensor().f32_value(), 1.0);
+        assert!(env_lookup(&e0, &x).is_none());
+    }
+
+    #[test]
+    fn list_roundtrip() {
+        let v = Value::list(vec![
+            Value::Tensor(Tensor::scalar_f32(1.0)),
+            Value::Tensor(Tensor::scalar_f32(2.0)),
+        ]);
+        let items = v.list_items();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].tensor().f32_value(), 2.0);
+    }
+
+    #[test]
+    fn refs_are_shared() {
+        let r = Value::Ref(Rc::new(RefCell::new(Value::unit())));
+        if let Value::Ref(cell) = &r {
+            *cell.borrow_mut() = Value::Tensor(Tensor::scalar_f32(7.0));
+        }
+        let r2 = r.clone();
+        if let Value::Ref(cell) = &r2 {
+            assert_eq!(cell.borrow().tensor().f32_value(), 7.0);
+        }
+    }
+}

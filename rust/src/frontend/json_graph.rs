@@ -1,0 +1,252 @@
+//! NNVM-style JSON dataflow-graph importer + the Fig. 2 `while_loop`
+//! conversion.
+//!
+//! The JSON schema is the classic static computation graph: a node list
+//! (`op`, `inputs` as node indices, `attrs`), `arg_nodes` marking
+//! placeholders, and a `head` output index. Graphs of this shape are what
+//! "straightforward to translate" frameworks (§4.1) exchange; richer
+//! constructs (TF control flow) come in through [`convert_while_loop`],
+//! which rebuilds a `tf.while_loop(cond, body, loop_vars)` as a Relay
+//! tail-recursive function — the exact transformation shown in Fig. 2.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{self, Function, Var, E};
+use crate::runtime::manifest::{parse_json, Json};
+
+#[derive(Debug)]
+pub struct ImportError(pub String);
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json graph import: {}", self.0)
+    }
+}
+
+impl std::error::Error for ImportError {}
+
+type R<T> = Result<T, ImportError>;
+
+/// Import a JSON graph as a Relay function.
+pub fn import_json(src: &str) -> R<Function> {
+    let root = parse_json(src).map_err(ImportError)?;
+    let obj = match &root {
+        Json::Object(o) => o,
+        _ => return Err(ImportError("root must be an object".into())),
+    };
+    let nodes = match obj.get("nodes") {
+        Some(Json::Array(a)) => a,
+        _ => return Err(ImportError("missing nodes".into())),
+    };
+    let arg_nodes: Vec<usize> = match obj.get("arg_nodes") {
+        Some(Json::Array(a)) => a
+            .iter()
+            .map(|v| match v {
+                Json::Num(n) => Ok(*n as usize),
+                _ => Err(ImportError("bad arg node".into())),
+            })
+            .collect::<R<Vec<_>>>()?,
+        _ => vec![],
+    };
+    let head = match obj.get("head") {
+        Some(Json::Num(n)) => *n as usize,
+        _ => nodes.len() - 1,
+    };
+
+    let mut params: Vec<(Var, Option<ir::Type>)> = Vec::new();
+    let mut atoms: BTreeMap<usize, E> = BTreeMap::new();
+    let mut bindings: Vec<(Var, E)> = Vec::new();
+
+    for (i, node) in nodes.iter().enumerate() {
+        let no = match node {
+            Json::Object(o) => o,
+            _ => return Err(ImportError(format!("node {i} not an object"))),
+        };
+        let op = match no.get("op") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => return Err(ImportError(format!("node {i} missing op"))),
+        };
+        if op == "null" || arg_nodes.contains(&i) {
+            let name = match no.get("name") {
+                Some(Json::Str(s)) => s.clone(),
+                _ => format!("arg{i}"),
+            };
+            let v = Var::fresh(name);
+            params.push((v.clone(), None));
+            atoms.insert(i, ir::var(&v));
+            continue;
+        }
+        let inputs: Vec<E> = match no.get("inputs") {
+            Some(Json::Array(a)) => a
+                .iter()
+                .map(|v| match v {
+                    Json::Num(n) => atoms
+                        .get(&(*n as usize))
+                        .cloned()
+                        .ok_or_else(|| ImportError(format!("node {i}: input {n} undefined"))),
+                    _ => Err(ImportError("bad input ref".into())),
+                })
+                .collect::<R<Vec<_>>>()?,
+            _ => vec![],
+        };
+        let mut attrs = ir::Attrs::new();
+        if let Some(Json::Object(a)) = no.get("attrs") {
+            for (k, v) in a {
+                let av = match v {
+                    Json::Num(n) => {
+                        if n.fract() == 0.0 {
+                            ir::AttrValue::Int(*n as i64)
+                        } else {
+                            ir::AttrValue::Float(*n)
+                        }
+                    }
+                    Json::Str(s) => ir::AttrValue::Str(s.clone()),
+                    Json::Array(xs) => ir::AttrValue::IntVec(
+                        xs.iter()
+                            .map(|x| match x {
+                                Json::Num(n) => *n as i64,
+                                _ => 0,
+                            })
+                            .collect(),
+                    ),
+                    _ => continue,
+                };
+                attrs.insert(k.clone(), av);
+            }
+        }
+        let call = ir::op_call_attrs(&op, inputs, attrs);
+        let v = Var::fresh(format!("n{i}"));
+        bindings.push((v.clone(), call));
+        atoms.insert(i, ir::var(&v));
+    }
+
+    let rootv = atoms
+        .get(&head)
+        .cloned()
+        .ok_or_else(|| ImportError(format!("head {head} undefined")))?;
+    let body = bindings
+        .into_iter()
+        .rev()
+        .fold(rootv, |acc, (v, val)| ir::let_(v, val, acc));
+    Ok(Function::new(params, body))
+}
+
+/// Fig. 2: convert a `tf.while_loop(cond, body, loop_vars)` into a Relay
+/// tail-recursive function and an application to the initial state.
+///
+/// `cond` and `body` are builders receiving the loop variables; `init` is
+/// the initial state. The result corresponds exactly to the paper's
+/// `%while_loop` encoding.
+pub fn convert_while_loop(
+    n_vars: usize,
+    cond: impl Fn(&[E]) -> E,
+    body: impl Fn(&[E]) -> Vec<E>,
+    init: Vec<E>,
+) -> E {
+    assert_eq!(init.len(), n_vars);
+    let loop_fn = Var::fresh("while_loop");
+    let params: Vec<Var> = (0..n_vars)
+        .map(|i| Var::fresh(format!("loop_var{i}")))
+        .collect();
+    let param_atoms: Vec<E> = params.iter().map(ir::var).collect();
+    let recur = ir::call(ir::var(&loop_fn), body(&param_atoms));
+    let state = ir::tuple(param_atoms.clone());
+    let fn_body = ir::if_(cond(&param_atoms), recur, state);
+    let func = ir::func(params.into_iter().map(|p| (p, None)).collect(), fn_body);
+    ir::let_(loop_fn.clone(), func, ir::call(ir::var(&loop_fn), init))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_expr, eval_main, Value};
+    use crate::ir::Module;
+    use crate::tensor::{Rng, Tensor};
+
+    #[test]
+    fn imports_static_graph() {
+        let src = r#"{
+          "nodes": [
+            {"op": "null", "name": "x"},
+            {"op": "null", "name": "w"},
+            {"op": "nn.dense", "inputs": [0, 1]},
+            {"op": "nn.relu", "inputs": [2]}
+          ],
+          "arg_nodes": [0, 1],
+          "head": 3
+        }"#;
+        let f = import_json(src).unwrap();
+        assert_eq!(f.params.len(), 2);
+        let mut m = Module::with_prelude();
+        m.add_def("main", f);
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(&[2, 4], 1.0);
+        let w = rng.normal_tensor(&[3, 4], 1.0);
+        let out = eval_main(&m, vec![Value::Tensor(x.clone()), Value::Tensor(w.clone())])
+            .unwrap();
+        // relu(dense) reference
+        let expect = crate::tensor::unary(
+            crate::tensor::UnaryOp::Relu,
+            &crate::tensor::dense(&x, &w),
+        );
+        assert!(expect.allclose(out.tensor(), 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn fig2_while_loop_converts_and_runs() {
+        // The paper's Fig. 2 loop:
+        //   i=1, j=1, k=5
+        //   while equal(not_equal(i+j < 10, j*k < 100), k >= i+j):
+        //     i, j, k = i+j, j+k, k+1
+        let scalar = |v: f32| ir::constant(Tensor::scalar_f32(v));
+        let e = convert_while_loop(
+            3,
+            |vs| {
+                let i = vs[0].clone();
+                let j = vs[1].clone();
+                let k = vs[2].clone();
+                let c1 = ir::op_call(
+                    "less",
+                    vec![ir::op_call("add", vec![i.clone(), j.clone()]), scalar(10.0)],
+                );
+                let c2 = ir::op_call(
+                    "less",
+                    vec![ir::op_call("multiply", vec![j.clone(), k.clone()]), scalar(100.0)],
+                );
+                let c3 = ir::op_call(
+                    "greater_equal",
+                    vec![k, ir::op_call("add", vec![i, j])],
+                );
+                ir::op_call(
+                    "equal",
+                    vec![ir::op_call("not_equal", vec![c1, c2]), c3],
+                )
+            },
+            |vs| {
+                let i = vs[0].clone();
+                let j = vs[1].clone();
+                let k = vs[2].clone();
+                vec![
+                    ir::op_call("add", vec![i, j.clone()]),
+                    ir::op_call("add", vec![j, k.clone()]),
+                    ir::op_call("add", vec![k, scalar(1.0)]),
+                ]
+            },
+            vec![scalar(1.0), scalar(1.0), scalar(5.0)],
+        );
+        let s = crate::ir::print_expr(&e);
+        assert!(s.contains("while_loop"), "{s}");
+        let m = Module::with_prelude();
+        let out = eval_expr(&m, &e).unwrap();
+        let vals: Vec<f32> = out.tuple().iter().map(|v| v.tensor().f32_value()).collect();
+        // Reference simulation in Rust:
+        let (mut i, mut j, mut k) = (1f32, 1f32, 5f32);
+        while ((i + j < 10.0) != (j * k < 100.0)) == (k >= i + j) {
+            let (ni, nj, nk) = (i + j, j + k, k + 1.0);
+            i = ni;
+            j = nj;
+            k = nk;
+        }
+        assert_eq!(vals, vec![i, j, k]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Model importers (§4.1). Three frontends:
+//!
+//! * the **Relay text** format — [`crate::ir::parse_module`];
+//! * **HLO text** — [`hlo`]: imports XLA/JAX-lowered modules (this stack's
+//!   native interchange format, standing in for the paper's
+//!   TensorFlow/ONNX importers);
+//! * **JSON graphs** — [`json_graph`]: an NNVM-style static dataflow-graph
+//!   format, plus the TF-`while_loop` -> tail-recursive-function
+//!   conversion of Fig. 2 ([`json_graph::convert_while_loop`]).
+
+pub mod hlo;
+pub mod json_graph;

@@ -1,0 +1,448 @@
+//! Graph runtime (§3.1.3's "TVM graph runtime" analogue): executes fused,
+//! first-order, control-flow-free Relay functions as a flat node list over
+//! a preallocated slot arena — no environment lookups, no AST walking on
+//! the hot path.
+//!
+//! Programs with control flow / closures / ADTs don't compile here; callers
+//! fall back to the interpreter (exactly the paper's executor-selection
+//! story). A fused primitive function becomes ONE node (one "kernel
+//! launch"), with its inner op sequence flattened into the node's steps.
+
+use std::collections::BTreeMap;
+
+use crate::eval::value::Value;
+use crate::ir::{Attrs, Expr, Function, E};
+use crate::op::{self, OpDef};
+use crate::tensor::Tensor;
+
+/// One step inside a fused node: run `def` over resolved inputs.
+struct Step {
+    def: &'static OpDef,
+    attrs: Attrs,
+    inputs: Vec<SlotRef>,
+    out_temp: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum SlotRef {
+    Arena(usize),
+    Temp(usize),
+    /// Group input i (inside fused nodes).
+    Param(usize),
+    Const(usize),
+}
+
+enum NodeKind {
+    /// Single operator call.
+    Op { def: &'static OpDef, attrs: Attrs, inputs: Vec<SlotRef> },
+    /// Fused primitive function: a sequence of steps; result = last temp.
+    Fused { steps: Vec<Step>, n_temps: usize, inputs: Vec<SlotRef> },
+    /// Tuple construction / projection / copy (bookkeeping, not kernels).
+    Tuple(Vec<SlotRef>),
+    Proj(SlotRef, usize),
+    Copy(SlotRef),
+}
+
+struct Node {
+    kind: NodeKind,
+    out_slot: usize,
+}
+
+pub struct GraphRt {
+    nodes: Vec<Node>,
+    constants: Vec<Value>,
+    n_slots: usize,
+    input_slots: Vec<usize>,
+    output: SlotRef,
+    /// Number of kernel-launch nodes (Op + Fused), the Fig 10/11 metric.
+    pub kernel_nodes: usize,
+}
+
+#[derive(Debug)]
+pub struct CompileError(pub String);
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "graph runtime: {}", self.0)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+struct Compiler {
+    nodes: Vec<Node>,
+    constants: Vec<Value>,
+    slot_of_var: BTreeMap<u32, SlotRef>,
+    n_slots: usize,
+}
+
+type R<T> = Result<T, CompileError>;
+
+fn err<T>(msg: impl Into<String>) -> R<T> {
+    Err(CompileError(msg.into()))
+}
+
+impl Compiler {
+    fn fresh_slot(&mut self) -> usize {
+        let s = self.n_slots;
+        self.n_slots += 1;
+        s
+    }
+
+    fn atom(&mut self, e: &E) -> R<SlotRef> {
+        match &**e {
+            Expr::Var(v) => self
+                .slot_of_var
+                .get(&v.id)
+                .copied()
+                .ok_or_else(|| CompileError(format!("unbound {v}"))),
+            Expr::Const(t) => {
+                self.constants.push(Value::Tensor(t.clone()));
+                Ok(SlotRef::Const(self.constants.len() - 1))
+            }
+            other => err(format!("non-atomic argument {other:?}")),
+        }
+    }
+
+    fn compile_value(&mut self, value: &E, out_slot: usize) -> R<Node> {
+        match &**value {
+            Expr::Call { f, args, attrs } => match &**f {
+                Expr::Op(name) => {
+                    let def = op::lookup(name)
+                        .ok_or_else(|| CompileError(format!("unknown op {name}")))?;
+                    let inputs: R<Vec<SlotRef>> = args.iter().map(|a| self.atom(a)).collect();
+                    Ok(Node {
+                        kind: NodeKind::Op { def, attrs: attrs.clone(), inputs: inputs? },
+                        out_slot,
+                    })
+                }
+                Expr::Func(func) if func.attrs.primitive => {
+                    let inputs: R<Vec<SlotRef>> = args.iter().map(|a| self.atom(a)).collect();
+                    let (steps, n_temps) = self.compile_primitive(func)?;
+                    Ok(Node {
+                        kind: NodeKind::Fused { steps, n_temps, inputs: inputs? },
+                        out_slot,
+                    })
+                }
+                other => err(format!("cannot compile call to {other:?}")),
+            },
+            Expr::Tuple(es) => {
+                let parts: R<Vec<SlotRef>> = es.iter().map(|x| self.atom(x)).collect();
+                Ok(Node { kind: NodeKind::Tuple(parts?), out_slot })
+            }
+            Expr::Proj(t, i) => {
+                let s = self.atom(t)?;
+                Ok(Node { kind: NodeKind::Proj(s, *i), out_slot })
+            }
+            Expr::Const(_) | Expr::Var(_) => {
+                let s = self.atom(value)?;
+                Ok(Node { kind: NodeKind::Copy(s), out_slot })
+            }
+            other => err(format!("unsupported graph value {other:?}")),
+        }
+    }
+
+    /// Flatten a primitive function's body to steps over temps.
+    fn compile_primitive(&mut self, f: &Function) -> R<(Vec<Step>, usize)> {
+        let mut local: BTreeMap<u32, SlotRef> = BTreeMap::new();
+        for (i, (p, _)) in f.params.iter().enumerate() {
+            local.insert(p.id, SlotRef::Param(i));
+        }
+        let mut steps = Vec::new();
+        let mut n_temps = 0usize;
+        let mut cur = f.body.clone();
+        loop {
+            match &*cur.clone() {
+                Expr::Let { var, value, body, .. } => {
+                    let (def, attrs, args) = match &**value {
+                        Expr::Call { f: cf, args, attrs } => match &**cf {
+                            Expr::Op(name) => (
+                                op::lookup(name).ok_or_else(|| {
+                                    CompileError(format!("unknown op {name}"))
+                                })?,
+                                attrs.clone(),
+                                args,
+                            ),
+                            other => return err(format!("primitive body call {other:?}")),
+                        },
+                        other => return err(format!("primitive binding {other:?}")),
+                    };
+                    let mut inputs = Vec::new();
+                    for a in args {
+                        match &**a {
+                            Expr::Var(v) => inputs.push(
+                                *local
+                                    .get(&v.id)
+                                    .ok_or_else(|| CompileError(format!("unbound {v}")))?,
+                            ),
+                            Expr::Const(t) => {
+                                self.constants.push(Value::Tensor(t.clone()));
+                                inputs.push(SlotRef::Const(self.constants.len() - 1));
+                            }
+                            other => return err(format!("non-atom in group {other:?}")),
+                        }
+                    }
+                    let out_temp = n_temps;
+                    n_temps += 1;
+                    local.insert(var.id, SlotRef::Temp(out_temp));
+                    steps.push(Step { def, attrs, inputs, out_temp });
+                    cur = body.clone();
+                }
+                Expr::Var(v) => {
+                    match local.get(&v.id) {
+                        Some(SlotRef::Temp(t)) if *t + 1 == n_temps => {}
+                        other => {
+                            return err(format!("primitive result not last step: {other:?}"))
+                        }
+                    }
+                    break;
+                }
+                other => return err(format!("primitive tail {other:?}")),
+            }
+        }
+        Ok((steps, n_temps))
+    }
+}
+
+impl GraphRt {
+    /// Compile a first-order function (ANF, post-fusion) to a graph.
+    pub fn compile(f: &Function) -> R<GraphRt> {
+        let mut c = Compiler {
+            nodes: Vec::new(),
+            constants: Vec::new(),
+            slot_of_var: BTreeMap::new(),
+            n_slots: 0,
+        };
+        let mut input_slots = Vec::new();
+        for (p, _) in &f.params {
+            let s = c.fresh_slot();
+            c.slot_of_var.insert(p.id, SlotRef::Arena(s));
+            input_slots.push(s);
+        }
+        let mut cur = f.body.clone();
+        loop {
+            match &*cur.clone() {
+                Expr::Let { var, value, body, .. } => {
+                    let out = c.fresh_slot();
+                    let node = c.compile_value(value, out)?;
+                    c.nodes.push(node);
+                    c.slot_of_var.insert(var.id, SlotRef::Arena(out));
+                    cur = body.clone();
+                }
+                _ => break,
+            }
+        }
+        // A non-atomic tail (the common ANF case) compiles into a final node.
+        let output = if cur.is_atomic() {
+            c.atom(&cur)?
+        } else {
+            let out = c.fresh_slot();
+            let node = c.compile_value(&cur, out)?;
+            c.nodes.push(node);
+            SlotRef::Arena(out)
+        };
+        let kernel_nodes = c
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { .. } | NodeKind::Fused { .. }))
+            .count();
+        Ok(GraphRt {
+            nodes: c.nodes,
+            constants: c.constants,
+            n_slots: c.n_slots,
+            input_slots,
+            output,
+            kernel_nodes,
+        })
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.input_slots.len()
+    }
+
+    /// Execute with the given inputs.
+    pub fn run(&self, inputs: &[Value]) -> Result<Value, String> {
+        self.run_traced(inputs, &mut |_, _, _| {})
+    }
+
+    /// Execute, invoking `trace(op_name, args, out)` for every operator
+    /// application (including the steps inside fused nodes). Used by the
+    /// VTA simulator's cycle accounting.
+    pub fn run_traced(
+        &self,
+        inputs: &[Value],
+        trace: &mut dyn FnMut(&str, &[Value], &Value),
+    ) -> Result<Value, String> {
+        if inputs.len() != self.input_slots.len() {
+            return Err(format!(
+                "graph expects {} inputs, got {}",
+                self.input_slots.len(),
+                inputs.len()
+            ));
+        }
+        let mut slots: Vec<Option<Value>> = vec![None; self.n_slots];
+        for (s, v) in self.input_slots.iter().zip(inputs) {
+            slots[*s] = Some(v.clone());
+        }
+        let empty_t: Vec<Option<Value>> = Vec::new();
+        let empty_p: Vec<Value> = Vec::new();
+        for node in &self.nodes {
+            let out = match &node.kind {
+                NodeKind::Op { def, attrs, inputs } => {
+                    let args: Result<Vec<Value>, String> = inputs
+                        .iter()
+                        .map(|r| self.read(&slots, &empty_t, &empty_p, r))
+                        .collect();
+                    let args = args?;
+                    let out = (def.eval)(&args, attrs)?;
+                    trace(def.name, &args, &out);
+                    out
+                }
+                NodeKind::Fused { steps, n_temps, inputs } => {
+                    let group_inputs: Result<Vec<Value>, String> = inputs
+                        .iter()
+                        .map(|r| self.read(&slots, &empty_t, &empty_p, r))
+                        .collect();
+                    let group_inputs = group_inputs?;
+                    let mut temps: Vec<Option<Value>> = vec![None; *n_temps];
+                    for step in steps {
+                        let args: Result<Vec<Value>, String> = step
+                            .inputs
+                            .iter()
+                            .map(|r| self.read(&slots, &temps, &group_inputs, r))
+                            .collect();
+                        let args = args?;
+                        let v = (step.def.eval)(&args, &step.attrs)?;
+                        trace(step.def.name, &args, &v);
+                        temps[step.out_temp] = Some(v);
+                    }
+                    temps[*n_temps - 1].take().ok_or("empty fused result")?
+                }
+                NodeKind::Tuple(parts) => {
+                    let vs: Result<Vec<Value>, String> = parts
+                        .iter()
+                        .map(|r| self.read(&slots, &empty_t, &empty_p, r))
+                        .collect();
+                    Value::Tuple(vs?)
+                }
+                NodeKind::Proj(r, i) => {
+                    let v = self.read(&slots, &empty_t, &empty_p, r)?;
+                    v.tuple()
+                        .get(*i)
+                        .cloned()
+                        .ok_or_else(|| format!("proj .{i} out of range"))?
+                }
+                NodeKind::Copy(r) => self.read(&slots, &empty_t, &empty_p, r)?,
+            };
+            slots[node.out_slot] = Some(out);
+        }
+        self.read(&slots, &empty_t, &empty_p, &self.output)
+    }
+
+    fn read(
+        &self,
+        slots: &[Option<Value>],
+        temps: &[Option<Value>],
+        params: &[Value],
+        r: &SlotRef,
+    ) -> Result<Value, String> {
+        match r {
+            SlotRef::Arena(i) => slots[*i].clone().ok_or_else(|| format!("empty slot {i}")),
+            SlotRef::Const(i) => Ok(self.constants[*i].clone()),
+            SlotRef::Temp(t) => temps[*t].clone().ok_or_else(|| format!("empty temp {t}")),
+            SlotRef::Param(i) => Ok(params[*i].clone()),
+        }
+    }
+
+    /// Convenience: run with tensor inputs.
+    pub fn run_tensors(&self, inputs: &[Tensor]) -> Result<Value, String> {
+        let vs: Vec<Value> = inputs.iter().map(|t| Value::Tensor(t.clone())).collect();
+        self.run(&vs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_main;
+    use crate::ir::{parse_module, Module};
+    use crate::pass::{optimize, OptLevel};
+    use crate::tensor::Rng;
+
+    fn mlp_module() -> Module {
+        parse_module(
+            "def @main(%x: Tensor[(2, 4), float32], %w1: Tensor[(8, 4), float32], %w2: Tensor[(2, 8), float32]) {\n\
+               nn.dense(nn.relu(nn.dense(%x, %w1)), %w2)\n\
+             }",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matches_interpreter_across_levels() {
+        let m = mlp_module();
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(&[2, 4], 1.0);
+        let w1 = rng.normal_tensor(&[8, 4], 1.0);
+        let w2 = rng.normal_tensor(&[2, 8], 1.0);
+        let args = vec![
+            Value::Tensor(x.clone()),
+            Value::Tensor(w1.clone()),
+            Value::Tensor(w2.clone()),
+        ];
+        let expect = eval_main(&m, args).unwrap();
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O3] {
+            let opt = optimize(&m, level, false).unwrap();
+            let anfed = crate::pass::anf::run(&opt);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+            let out = g.run_tensors(&[x.clone(), w1.clone(), w2.clone()]).unwrap();
+            assert!(
+                expect.tensor().allclose(out.tensor(), 1e-4, 1e-4),
+                "level {level}"
+            );
+        }
+    }
+
+    #[test]
+    fn fusion_reduces_kernel_nodes() {
+        let m = mlp_module();
+        let unfused = crate::pass::anf::run(&m);
+        let g0 = GraphRt::compile(unfused.def("main").unwrap()).unwrap();
+        let fused = optimize(&m, OptLevel::O1, false).unwrap();
+        let g1 = GraphRt::compile(fused.def("main").unwrap()).unwrap();
+        assert!(
+            g1.kernel_nodes < g0.kernel_nodes,
+            "fused {} vs unfused {}",
+            g1.kernel_nodes,
+            g0.kernel_nodes
+        );
+        assert_eq!(g0.kernel_nodes, 3);
+        assert_eq!(g1.kernel_nodes, 2); // {dense+relu}, {dense}
+    }
+
+    #[test]
+    fn control_flow_rejected() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) { if (greater(%x, 0f)) { %x } else { negative(%x) } }",
+        )
+        .unwrap();
+        let anfed = crate::pass::anf::run(&m);
+        assert!(GraphRt::compile(anfed.def("main").unwrap()).is_err());
+    }
+
+    #[test]
+    fn tuple_outputs_work() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 4), float32]) {\n\
+               let %s = split(%x, indices_or_sections=2, axis=1);\n\
+               add(%s.0, %s.1)\n\
+             }",
+        )
+        .unwrap();
+        let anfed = crate::pass::anf::run(&m);
+        let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+        let x = Tensor::from_f32(vec![2, 4], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let out = g.run_tensors(&[x]).unwrap();
+        assert_eq!(out.tensor().as_f32(), &[4., 6., 12., 14.]);
+    }
+}

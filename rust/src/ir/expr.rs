@@ -1,0 +1,332 @@
+//! The Relay expression language (paper Fig. 1 / appendix Fig. 14).
+//!
+//! Expressions are immutable `Arc` trees; passes rewrite by rebuilding.
+//! Variables carry globally unique ids so passes never capture.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use super::types::Type;
+use crate::tensor::Tensor;
+
+pub type E = Arc<Expr>;
+
+static NEXT_VAR_ID: AtomicU32 = AtomicU32::new(1);
+
+/// A local variable (`%x`). Identity is the numeric id; the name is a hint.
+#[derive(Clone, Debug, Eq)]
+pub struct Var {
+    pub name: String,
+    pub id: u32,
+}
+
+impl Var {
+    /// Fresh variable with a unique id.
+    pub fn fresh(name: impl Into<String>) -> Var {
+        Var { name: name.into(), id: NEXT_VAR_ID.fetch_add(1, Ordering::Relaxed) }
+    }
+}
+
+impl PartialEq for Var {
+    fn eq(&self, other: &Self) -> bool {
+        self.id == other.id
+    }
+}
+
+impl std::hash::Hash for Var {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.id.hash(state);
+    }
+}
+
+impl PartialOrd for Var {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Var {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.id.cmp(&other.id)
+    }
+}
+
+impl fmt::Display for Var {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}_{}", self.name, self.id)
+    }
+}
+
+/// Attribute values on operator calls (strides, axes, dtypes, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttrValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    IntVec(Vec<i64>),
+}
+
+impl AttrValue {
+    pub fn as_int(&self) -> i64 {
+        match self {
+            AttrValue::Int(i) => *i,
+            _ => panic!("attr is not an int: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            AttrValue::Str(s) => s,
+            _ => panic!("attr is not a str: {self:?}"),
+        }
+    }
+
+    pub fn as_int_vec(&self) -> &[i64] {
+        match self {
+            AttrValue::IntVec(v) => v,
+            _ => panic!("attr is not an int vec: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> bool {
+        match self {
+            AttrValue::Bool(b) => *b,
+            _ => panic!("attr is not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> f64 {
+        match self {
+            AttrValue::Float(f) => *f,
+            AttrValue::Int(i) => *i as f64,
+            _ => panic!("attr is not a float: {self:?}"),
+        }
+    }
+}
+
+pub type Attrs = BTreeMap<String, AttrValue>;
+
+/// Pattern language for `match` (paper appendix "Pattern p").
+#[derive(Clone, Debug, PartialEq)]
+pub enum Pattern {
+    Wildcard,
+    Var(Var),
+    /// Constructor pattern `Cons(p1, p2)`.
+    Ctor(String, Vec<Pattern>),
+    Tuple(Vec<Pattern>),
+}
+
+impl Pattern {
+    /// Variables bound by this pattern, in order.
+    pub fn bound_vars(&self) -> Vec<Var> {
+        match self {
+            Pattern::Wildcard => vec![],
+            Pattern::Var(v) => vec![v.clone()],
+            Pattern::Ctor(_, ps) | Pattern::Tuple(ps) => {
+                ps.iter().flat_map(|p| p.bound_vars()).collect()
+            }
+        }
+    }
+}
+
+/// Function attribute: the fusion pass marks extracted functions primitive
+/// so backends compile them as single fused kernels (paper §4.4.1).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FnAttrs {
+    pub primitive: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Function {
+    pub params: Vec<(Var, Option<Type>)>,
+    pub ret: Option<Type>,
+    pub body: E,
+    pub attrs: FnAttrs,
+}
+
+impl Function {
+    pub fn new(params: Vec<(Var, Option<Type>)>, body: E) -> Function {
+        Function { params, ret: None, body, attrs: FnAttrs::default() }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// `%x` — local variable.
+    Var(Var),
+    /// `@f` — global definition reference.
+    Global(String),
+    /// Constant tensor.
+    Const(Tensor),
+    /// Operator reference by registry name (`add`, `nn.conv2d`, ...).
+    Op(String),
+    /// ADT constructor reference (`Cons`, `Nil`, ...).
+    Ctor(String),
+    /// `f(a1, ..., an)` — attrs carry operator options.
+    Call { f: E, args: Vec<E>, attrs: Attrs },
+    /// `let %x (: T)? = v; body`.
+    Let { var: Var, ty: Option<Type>, value: E, body: E },
+    /// `fn (params) (-> T)? { body }`.
+    Func(Function),
+    /// `(e1, ..., en)`; unit is the empty tuple.
+    Tuple(Vec<E>),
+    /// `e.n` — tuple projection.
+    Proj(E, usize),
+    /// `if (c) { t } else { e }` — guard is a rank-0 bool tensor.
+    If { cond: E, then_: E, else_: E },
+    /// `match (e) { p -> e, ... }`.
+    Match { scrut: E, arms: Vec<(Pattern, E)> },
+    /// `grad(f)` — reverse-mode AD macro (paper §4.2).
+    Grad(E),
+    /// `ref(e)`, `!e`, `lhs := rhs` — ML-style references.
+    RefNew(E),
+    RefRead(E),
+    RefWrite(E, E),
+}
+
+impl Expr {
+    pub fn is_atomic(&self) -> bool {
+        matches!(
+            self,
+            Expr::Var(_) | Expr::Global(_) | Expr::Const(_) | Expr::Op(_) | Expr::Ctor(_)
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Constructors
+// ---------------------------------------------------------------------------
+
+pub fn var(v: &Var) -> E {
+    Arc::new(Expr::Var(v.clone()))
+}
+
+pub fn global(name: impl Into<String>) -> E {
+    Arc::new(Expr::Global(name.into()))
+}
+
+pub fn constant(t: Tensor) -> E {
+    Arc::new(Expr::Const(t))
+}
+
+pub fn scalar(v: f32) -> E {
+    constant(Tensor::scalar_f32(v))
+}
+
+pub fn op(name: impl Into<String>) -> E {
+    Arc::new(Expr::Op(name.into()))
+}
+
+pub fn ctor(name: impl Into<String>) -> E {
+    Arc::new(Expr::Ctor(name.into()))
+}
+
+pub fn call(f: E, args: Vec<E>) -> E {
+    Arc::new(Expr::Call { f, args, attrs: Attrs::new() })
+}
+
+pub fn call_attrs(f: E, args: Vec<E>, attrs: Attrs) -> E {
+    Arc::new(Expr::Call { f, args, attrs })
+}
+
+/// Call an operator by name.
+pub fn op_call(name: &str, args: Vec<E>) -> E {
+    call(op(name), args)
+}
+
+pub fn op_call_attrs(name: &str, args: Vec<E>, attrs: Attrs) -> E {
+    call_attrs(op(name), args, attrs)
+}
+
+pub fn let_(v: Var, value: E, body: E) -> E {
+    Arc::new(Expr::Let { var: v, ty: None, value, body })
+}
+
+pub fn func(params: Vec<(Var, Option<Type>)>, body: E) -> E {
+    Arc::new(Expr::Func(Function::new(params, body)))
+}
+
+pub fn tuple(es: Vec<E>) -> E {
+    Arc::new(Expr::Tuple(es))
+}
+
+pub fn unit() -> E {
+    tuple(vec![])
+}
+
+pub fn proj(e: E, i: usize) -> E {
+    Arc::new(Expr::Proj(e, i))
+}
+
+pub fn if_(cond: E, then_: E, else_: E) -> E {
+    Arc::new(Expr::If { cond, then_, else_ })
+}
+
+pub fn match_(scrut: E, arms: Vec<(Pattern, E)>) -> E {
+    Arc::new(Expr::Match { scrut, arms })
+}
+
+pub fn grad(e: E) -> E {
+    Arc::new(Expr::Grad(e))
+}
+
+pub fn ref_new(e: E) -> E {
+    Arc::new(Expr::RefNew(e))
+}
+
+pub fn ref_read(e: E) -> E {
+    Arc::new(Expr::RefRead(e))
+}
+
+pub fn ref_write(r: E, v: E) -> E {
+    Arc::new(Expr::RefWrite(r, v))
+}
+
+/// Helper to build attrs inline.
+pub fn attrs(pairs: &[(&str, AttrValue)]) -> Attrs {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_vars_are_unique() {
+        let a = Var::fresh("x");
+        let b = Var::fresh("x");
+        assert_ne!(a, b);
+        assert_eq!(a, a.clone());
+    }
+
+    #[test]
+    fn pattern_bound_vars() {
+        let v1 = Var::fresh("a");
+        let v2 = Var::fresh("b");
+        let p = Pattern::Ctor(
+            "Cons".into(),
+            vec![Pattern::Var(v1.clone()), Pattern::Tuple(vec![Pattern::Var(v2.clone()), Pattern::Wildcard])],
+        );
+        assert_eq!(p.bound_vars(), vec![v1, v2]);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let x = Var::fresh("x");
+        let e = let_(x.clone(), scalar(1.0), op_call("add", vec![var(&x), var(&x)]));
+        match &*e {
+            Expr::Let { var: v, .. } => assert_eq!(*v, x),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn attr_accessors() {
+        let a = attrs(&[("axis", AttrValue::Int(1)), ("name", AttrValue::Str("s".into()))]);
+        assert_eq!(a["axis"].as_int(), 1);
+        assert_eq!(a["name"].as_str(), "s");
+    }
+}

@@ -1,0 +1,328 @@
+//! Structural (alpha-invariant) hashing and equality.
+//!
+//! Bound variables hash by binder-occurrence index, free variables by id,
+//! so alpha-equivalent functions collide — the key for CSE and for the XLA
+//! backend's compiled-kernel cache (same fused function => same executable).
+
+use std::collections::BTreeMap;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+use super::expr::{Expr, Pattern, Var, E};
+
+struct Ctx {
+    binders: BTreeMap<u32, u64>,
+    next: u64,
+}
+
+impl Ctx {
+    fn new() -> Ctx {
+        Ctx { binders: BTreeMap::new(), next: 0 }
+    }
+
+    fn bind(&mut self, v: &Var) -> u64 {
+        let n = self.next;
+        self.next += 1;
+        self.binders.insert(v.id, n);
+        n
+    }
+
+    fn unbind(&mut self, v: &Var) {
+        self.binders.remove(&v.id);
+    }
+
+    fn lookup(&self, v: &Var) -> Option<u64> {
+        self.binders.get(&v.id).copied()
+    }
+}
+
+fn hash_pattern<H: Hasher>(p: &Pattern, ctx: &mut Ctx, h: &mut H) {
+    match p {
+        Pattern::Wildcard => 0u8.hash(h),
+        Pattern::Var(v) => {
+            1u8.hash(h);
+            ctx.bind(v).hash(h);
+        }
+        Pattern::Ctor(name, ps) => {
+            2u8.hash(h);
+            name.hash(h);
+            ps.iter().for_each(|p| hash_pattern(p, ctx, h));
+        }
+        Pattern::Tuple(ps) => {
+            3u8.hash(h);
+            ps.iter().for_each(|p| hash_pattern(p, ctx, h));
+        }
+    }
+}
+
+fn hash_expr<H: Hasher>(e: &E, ctx: &mut Ctx, h: &mut H) {
+    match &**e {
+        Expr::Var(v) => {
+            0u8.hash(h);
+            match ctx.lookup(v) {
+                Some(ix) => {
+                    0u8.hash(h);
+                    ix.hash(h);
+                }
+                None => {
+                    1u8.hash(h);
+                    v.id.hash(h);
+                }
+            }
+        }
+        Expr::Global(g) => {
+            1u8.hash(h);
+            g.hash(h);
+        }
+        Expr::Const(t) => {
+            2u8.hash(h);
+            t.shape().hash(h);
+            format!("{:?}", t.dtype()).hash(h);
+            // Hash contents bitwise via the f64 view (stable and cheap for
+            // the small constants that appear in programs).
+            for i in 0..t.numel().min(64) {
+                t.get_f64(i).to_bits().hash(h);
+            }
+            t.numel().hash(h);
+        }
+        Expr::Op(name) => {
+            3u8.hash(h);
+            name.hash(h);
+        }
+        Expr::Ctor(name) => {
+            4u8.hash(h);
+            name.hash(h);
+        }
+        Expr::Call { f, args, attrs } => {
+            5u8.hash(h);
+            hash_expr(f, ctx, h);
+            args.len().hash(h);
+            args.iter().for_each(|a| hash_expr(a, ctx, h));
+            for (k, v) in attrs {
+                k.hash(h);
+                format!("{v:?}").hash(h);
+            }
+        }
+        Expr::Let { var, value, body, .. } => {
+            6u8.hash(h);
+            hash_expr(value, ctx, h);
+            ctx.bind(var).hash(h);
+            hash_expr(body, ctx, h);
+            ctx.unbind(var);
+        }
+        Expr::Func(f) => {
+            7u8.hash(h);
+            f.params.len().hash(h);
+            for (p, _) in &f.params {
+                ctx.bind(p).hash(h);
+            }
+            f.attrs.primitive.hash(h);
+            hash_expr(&f.body, ctx, h);
+            for (p, _) in &f.params {
+                ctx.unbind(p);
+            }
+        }
+        Expr::Tuple(es) => {
+            8u8.hash(h);
+            es.len().hash(h);
+            es.iter().for_each(|x| hash_expr(x, ctx, h));
+        }
+        Expr::Proj(t, i) => {
+            9u8.hash(h);
+            hash_expr(t, ctx, h);
+            i.hash(h);
+        }
+        Expr::If { cond, then_, else_ } => {
+            10u8.hash(h);
+            hash_expr(cond, ctx, h);
+            hash_expr(then_, ctx, h);
+            hash_expr(else_, ctx, h);
+        }
+        Expr::Match { scrut, arms } => {
+            11u8.hash(h);
+            hash_expr(scrut, ctx, h);
+            arms.len().hash(h);
+            for (p, a) in arms {
+                hash_pattern(p, ctx, h);
+                hash_expr(a, ctx, h);
+                for v in p.bound_vars() {
+                    ctx.unbind(&v);
+                }
+            }
+        }
+        Expr::Grad(g) => {
+            12u8.hash(h);
+            hash_expr(g, ctx, h);
+        }
+        Expr::RefNew(v) => {
+            13u8.hash(h);
+            hash_expr(v, ctx, h);
+        }
+        Expr::RefRead(r) => {
+            14u8.hash(h);
+            hash_expr(r, ctx, h);
+        }
+        Expr::RefWrite(r, v) => {
+            15u8.hash(h);
+            hash_expr(r, ctx, h);
+            hash_expr(v, ctx, h);
+        }
+    }
+}
+
+/// Alpha-invariant structural hash.
+pub fn structural_hash(e: &E) -> u64 {
+    let mut h = DefaultHasher::new();
+    hash_expr(e, &mut Ctx::new(), &mut h);
+    h.finish()
+}
+
+/// Alpha-equivalence (hash-based fast path + full recursive check).
+pub fn alpha_eq(a: &E, b: &E) -> bool {
+    structural_hash(a) == structural_hash(b) && eq(a, b, &mut BTreeMap::new())
+}
+
+fn eq(a: &E, b: &E, map: &mut BTreeMap<u32, u32>) -> bool {
+    use Expr::*;
+    match (&**a, &**b) {
+        (Var(x), Var(y)) => map.get(&x.id).map(|m| *m == y.id).unwrap_or(x.id == y.id),
+        (Global(x), Global(y)) => x == y,
+        (Const(x), Const(y)) => x == y,
+        (Op(x), Op(y)) => x == y,
+        (Ctor(x), Ctor(y)) => x == y,
+        (
+            Call { f: f1, args: a1, attrs: at1 },
+            Call { f: f2, args: a2, attrs: at2 },
+        ) => {
+            at1 == at2
+                && eq(f1, f2, map)
+                && a1.len() == a2.len()
+                && a1.iter().zip(a2).all(|(x, y)| eq(x, y, map))
+        }
+        (
+            Let { var: v1, value: val1, body: b1, .. },
+            Let { var: v2, value: val2, body: b2, .. },
+        ) => {
+            if !eq(val1, val2, map) {
+                return false;
+            }
+            map.insert(v1.id, v2.id);
+            let r = eq(b1, b2, map);
+            map.remove(&v1.id);
+            r
+        }
+        (Func(f1), Func(f2)) => {
+            if f1.params.len() != f2.params.len() || f1.attrs != f2.attrs {
+                return false;
+            }
+            for ((p1, _), (p2, _)) in f1.params.iter().zip(&f2.params) {
+                map.insert(p1.id, p2.id);
+            }
+            let r = eq(&f1.body, &f2.body, map);
+            for (p1, _) in &f1.params {
+                map.remove(&p1.id);
+            }
+            r
+        }
+        (Tuple(x), Tuple(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(a, b)| eq(a, b, map))
+        }
+        (Proj(x, i), Proj(y, j)) => i == j && eq(x, y, map),
+        (
+            If { cond: c1, then_: t1, else_: e1 },
+            If { cond: c2, then_: t2, else_: e2 },
+        ) => eq(c1, c2, map) && eq(t1, t2, map) && eq(e1, e2, map),
+        (Match { scrut: s1, arms: ar1 }, Match { scrut: s2, arms: ar2 }) => {
+            if !eq(s1, s2, map) || ar1.len() != ar2.len() {
+                return false;
+            }
+            ar1.iter().zip(ar2).all(|((p1, a1), (p2, a2))| {
+                if !pat_eq(p1, p2, map) {
+                    return false;
+                }
+                let r = eq(a1, a2, map);
+                for v in p1.bound_vars() {
+                    map.remove(&v.id);
+                }
+                r
+            })
+        }
+        (Grad(x), Grad(y)) => eq(x, y, map),
+        (RefNew(x), RefNew(y)) => eq(x, y, map),
+        (RefRead(x), RefRead(y)) => eq(x, y, map),
+        (RefWrite(r1, v1), RefWrite(r2, v2)) => eq(r1, r2, map) && eq(v1, v2, map),
+        _ => false,
+    }
+}
+
+fn pat_eq(a: &Pattern, b: &Pattern, map: &mut BTreeMap<u32, u32>) -> bool {
+    match (a, b) {
+        (Pattern::Wildcard, Pattern::Wildcard) => true,
+        (Pattern::Var(x), Pattern::Var(y)) => {
+            map.insert(x.id, y.id);
+            true
+        }
+        (Pattern::Ctor(n1, p1), Pattern::Ctor(n2, p2)) => {
+            n1 == n2 && p1.len() == p2.len() && p1.iter().zip(p2).all(|(x, y)| pat_eq(x, y, map))
+        }
+        (Pattern::Tuple(p1), Pattern::Tuple(p2)) => {
+            p1.len() == p2.len() && p1.iter().zip(p2).all(|(x, y)| pat_eq(x, y, map))
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::expr::*;
+    use super::*;
+
+    #[test]
+    fn alpha_equivalent_functions_collide() {
+        let x = Var::fresh("x");
+        let y = Var::fresh("y");
+        let f = func(vec![(x.clone(), None)], op_call("add", vec![var(&x), var(&x)]));
+        let g = func(vec![(y.clone(), None)], op_call("add", vec![var(&y), var(&y)]));
+        assert_eq!(structural_hash(&f), structural_hash(&g));
+        assert!(alpha_eq(&f, &g));
+    }
+
+    #[test]
+    fn different_ops_differ() {
+        let x = Var::fresh("x");
+        let f = func(vec![(x.clone(), None)], op_call("add", vec![var(&x), var(&x)]));
+        let g = func(vec![(x.clone(), None)], op_call("multiply", vec![var(&x), var(&x)]));
+        assert!(!alpha_eq(&f, &g));
+    }
+
+    #[test]
+    fn free_vars_matter() {
+        let x = Var::fresh("x");
+        let y = Var::fresh("y");
+        // Free vars hash by identity: x and y are distinct free vars.
+        assert_ne!(structural_hash(&var(&x)), structural_hash(&var(&y)));
+        assert!(!alpha_eq(&var(&x), &var(&y)));
+    }
+
+    #[test]
+    fn const_values_matter() {
+        assert!(!alpha_eq(&scalar(1.0), &scalar(2.0)));
+        assert!(alpha_eq(&scalar(1.0), &scalar(1.0)));
+    }
+
+    #[test]
+    fn attrs_matter() {
+        let a = op_call_attrs("sum", vec![scalar(1.0)], attrs(&[("axis", AttrValue::Int(0))]));
+        let b = op_call_attrs("sum", vec![scalar(1.0)], attrs(&[("axis", AttrValue::Int(1))]));
+        assert!(!alpha_eq(&a, &b));
+    }
+
+    #[test]
+    fn let_alpha_equivalence() {
+        let x = Var::fresh("x");
+        let y = Var::fresh("y");
+        let e1 = let_(x.clone(), scalar(1.0), var(&x));
+        let e2 = let_(y.clone(), scalar(1.0), var(&y));
+        assert!(alpha_eq(&e1, &e2));
+    }
+}

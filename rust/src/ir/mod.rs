@@ -1,0 +1,26 @@
+//! The Relay IR (paper §3.2): a functional, statically-typed, differentiable
+//! expression language with tensors, tuples, `let`, first-class functions,
+//! `if`/`match` control flow, ADTs, and ML-style references.
+
+pub mod expr;
+pub mod hash;
+pub mod module;
+pub mod parser;
+pub mod printer;
+pub mod types;
+pub mod visit;
+
+pub use expr::{
+    attrs, call, call_attrs, constant, ctor, func, global, grad, if_, let_, match_, op,
+    op_call, op_call_attrs, proj, ref_new, ref_read, ref_write, scalar, tuple, unit, var,
+    AttrValue, Attrs, Expr, FnAttrs, Function, Pattern, Var, E,
+};
+pub use hash::{alpha_eq, structural_hash};
+pub use module::{list_expr, Module, TypeDef};
+pub use parser::{parse_expr, parse_module, ParseError};
+pub use printer::{print_expr, print_module};
+pub use types::{Dim, Type};
+pub use visit::{
+    collect, count_nodes, free_vars, map_children, refresh, rewrite_postorder, subst,
+    subst1, visit_children,
+};

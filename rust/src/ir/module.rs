@@ -1,0 +1,175 @@
+//! Module: global function definitions + ADT declarations, plus the prelude
+//! (List, Option, Tree — the data types the paper's NLP workloads need).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::expr::{Expr, Function, E};
+use super::types::Type;
+
+/// An algebraic data type declaration (paper §3.2.5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TypeDef {
+    pub name: String,
+    /// Type parameter names, e.g. `["a"]` for `List[a]`.
+    pub params: Vec<String>,
+    /// Constructor name -> field types (may mention params as `Adt` with
+    /// empty args or via `TypeParam` spelled as Adt{name: param}).
+    pub constructors: Vec<(String, Vec<Type>)>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Module {
+    pub defs: BTreeMap<String, Function>,
+    pub types: BTreeMap<String, TypeDef>,
+    /// Constructor name -> (ADT name, field types).
+    pub ctors: BTreeMap<String, (String, Vec<Type>)>,
+}
+
+impl Module {
+    pub fn new() -> Module {
+        Module::default()
+    }
+
+    /// A module preloaded with the prelude ADTs.
+    pub fn with_prelude() -> Module {
+        let mut m = Module::new();
+        m.add_prelude();
+        m
+    }
+
+    pub fn add_def(&mut self, name: impl Into<String>, f: Function) {
+        self.defs.insert(name.into(), f);
+    }
+
+    pub fn def(&self, name: &str) -> Option<&Function> {
+        self.defs.get(name)
+    }
+
+    pub fn add_type(&mut self, td: TypeDef) {
+        for (cname, fields) in &td.constructors {
+            self.ctors
+                .insert(cname.clone(), (td.name.clone(), fields.clone()));
+        }
+        self.types.insert(td.name.clone(), td);
+    }
+
+    /// ADT + field types for a constructor.
+    pub fn ctor_info(&self, ctor: &str) -> Option<&(String, Vec<Type>)> {
+        self.ctors.get(ctor)
+    }
+
+    /// The paper's prelude: List, Option, and (for TreeLSTM) Rose trees.
+    pub fn add_prelude(&mut self) {
+        let a = || Type::Adt { name: "a".into(), args: vec![] };
+        self.add_type(TypeDef {
+            name: "List".into(),
+            params: vec!["a".into()],
+            constructors: vec![
+                ("Nil".into(), vec![]),
+                (
+                    "Cons".into(),
+                    vec![a(), Type::Adt { name: "List".into(), args: vec![a()] }],
+                ),
+            ],
+        });
+        self.add_type(TypeDef {
+            name: "Option".into(),
+            params: vec!["a".into()],
+            constructors: vec![("None".into(), vec![]), ("Some".into(), vec![a()])],
+        });
+        // Rose tree: a node payload and a list of children.
+        self.add_type(TypeDef {
+            name: "Tree".into(),
+            params: vec!["a".into()],
+            constructors: vec![(
+                "Rose".into(),
+                vec![
+                    a(),
+                    Type::Adt {
+                        name: "List".into(),
+                        args: vec![Type::Adt { name: "Tree".into(), args: vec![a()] }],
+                    },
+                ],
+            )],
+        });
+    }
+
+    /// Main entry function, conventionally `main`.
+    pub fn entry(&self) -> Option<&Function> {
+        self.def("main")
+    }
+
+    /// Wrap a bare expression as `@main` with no params.
+    pub fn from_expr(e: E) -> Module {
+        let mut m = Module::with_prelude();
+        let f = match &*e {
+            Expr::Func(f) => f.clone(),
+            _ => Function::new(vec![], e),
+        };
+        m.add_def("main", f);
+        m
+    }
+
+    /// Apply `f` to every definition body, rebuilding the module.
+    pub fn map_defs(&self, mut f: impl FnMut(&str, &Function) -> Function) -> Module {
+        let mut m = self.clone();
+        m.defs = self
+            .defs
+            .iter()
+            .map(|(name, func)| (name.clone(), f(name, func)))
+            .collect();
+        m
+    }
+}
+
+/// Convenience: build a `List` expression from a vector of elements.
+pub fn list_expr(items: Vec<E>) -> E {
+    let mut acc: E = super::expr::call(super::expr::ctor("Nil"), vec![]);
+    for item in items.into_iter().rev() {
+        acc = super::expr::call(super::expr::ctor("Cons"), vec![item, acc]);
+    }
+    acc
+}
+
+/// Unit expression helper for module-level code.
+pub fn unit_expr() -> E {
+    Arc::new(Expr::Tuple(vec![]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::expr::*;
+    use super::*;
+
+    #[test]
+    fn prelude_has_list_option_tree() {
+        let m = Module::with_prelude();
+        assert!(m.types.contains_key("List"));
+        assert!(m.types.contains_key("Option"));
+        assert!(m.types.contains_key("Tree"));
+        assert_eq!(m.ctor_info("Cons").unwrap().0, "List");
+        assert_eq!(m.ctor_info("None").unwrap().0, "Option");
+        assert_eq!(m.ctor_info("Rose").unwrap().0, "Tree");
+    }
+
+    #[test]
+    fn from_expr_wraps_main() {
+        let m = Module::from_expr(scalar(1.0));
+        assert!(m.entry().is_some());
+        assert!(m.entry().unwrap().params.is_empty());
+    }
+
+    #[test]
+    fn list_expr_builds_cons_chain() {
+        let e = list_expr(vec![scalar(1.0), scalar(2.0)]);
+        // Cons(1, Cons(2, Nil))
+        match &*e {
+            Expr::Call { f, args, .. } => {
+                assert!(matches!(&**f, Expr::Ctor(c) if c == "Cons"));
+                assert_eq!(args.len(), 2);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Pretty-printer for the Relay text format (inverse of [`super::parser`]).
+
+use std::fmt::Write;
+
+use super::expr::{AttrValue, Expr, Function, Pattern, E};
+use super::module::Module;
+
+pub fn print_expr(e: &E) -> String {
+    let mut p = Printer::new();
+    p.expr(e);
+    p.out
+}
+
+pub fn print_module(m: &Module) -> String {
+    let mut p = Printer::new();
+    for (name, td) in &m.types {
+        // Skip prelude types when printing (they are implicit).
+        if matches!(name.as_str(), "List" | "Option" | "Tree") {
+            continue;
+        }
+        p.typedef(td);
+    }
+    for (name, f) in &m.defs {
+        p.def(name, f);
+    }
+    p.out
+}
+
+struct Printer {
+    out: String,
+    indent: usize,
+}
+
+impl Printer {
+    fn new() -> Printer {
+        Printer { out: String::new(), indent: 0 }
+    }
+
+    fn nl(&mut self) {
+        self.out.push('\n');
+        for _ in 0..self.indent {
+            self.out.push_str("  ");
+        }
+    }
+
+    fn typedef(&mut self, td: &super::module::TypeDef) {
+        let params = if td.params.is_empty() {
+            String::new()
+        } else {
+            format!("<{}>", td.params.join(", "))
+        };
+        write!(self.out, "type {}{} {{", td.name, params).unwrap();
+        self.indent += 1;
+        for (c, fields) in &td.constructors {
+            self.nl();
+            if fields.is_empty() {
+                write!(self.out, "{c}").unwrap();
+            } else {
+                let fs: Vec<String> = fields.iter().map(|t| t.to_string()).collect();
+                write!(self.out, "{c}({})", fs.join(", ")).unwrap();
+            }
+            self.out.push(',');
+        }
+        self.indent -= 1;
+        self.nl();
+        self.out.push_str("}\n");
+    }
+
+    fn def(&mut self, name: &str, f: &Function) {
+        write!(self.out, "def @{name}").unwrap();
+        self.fn_sig_body(f);
+        self.out.push('\n');
+    }
+
+    fn fn_sig_body(&mut self, f: &Function) {
+        self.out.push('(');
+        for (i, (p, t)) in f.params.iter().enumerate() {
+            if i > 0 {
+                self.out.push_str(", ");
+            }
+            write!(self.out, "{p}").unwrap();
+            if let Some(t) = t {
+                write!(self.out, ": {t}").unwrap();
+            }
+        }
+        self.out.push(')');
+        if let Some(r) = &f.ret {
+            write!(self.out, " -> {r}").unwrap();
+        }
+        if f.attrs.primitive {
+            self.out.push_str(" /* primitive */");
+        }
+        self.out.push_str(" {");
+        self.indent += 1;
+        self.nl();
+        self.expr(&f.body);
+        self.indent -= 1;
+        self.nl();
+        self.out.push('}');
+    }
+
+    fn attrs(&mut self, attrs: &super::expr::Attrs) {
+        if attrs.is_empty() {
+            return;
+        }
+        self.out.push_str(", ");
+        let parts: Vec<String> = attrs
+            .iter()
+            .map(|(k, v)| {
+                let vs = match v {
+                    AttrValue::Int(i) => i.to_string(),
+                    AttrValue::Float(f) => format!("{f}f"),
+                    AttrValue::Bool(b) => b.to_string(),
+                    AttrValue::Str(s) => format!("\"{s}\""),
+                    AttrValue::IntVec(v) => format!(
+                        "[{}]",
+                        v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(", ")
+                    ),
+                };
+                format!("{k}={vs}")
+            })
+            .collect();
+        write!(self.out, "{}", parts.join(", ")).unwrap();
+    }
+
+    fn pattern(&mut self, p: &Pattern) {
+        match p {
+            Pattern::Wildcard => self.out.push('_'),
+            Pattern::Var(v) => write!(self.out, "{v}").unwrap(),
+            Pattern::Ctor(name, ps) => {
+                write!(self.out, "{name}").unwrap();
+                if !ps.is_empty() {
+                    self.out.push('(');
+                    for (i, p) in ps.iter().enumerate() {
+                        if i > 0 {
+                            self.out.push_str(", ");
+                        }
+                        self.pattern(p);
+                    }
+                    self.out.push(')');
+                }
+            }
+            Pattern::Tuple(ps) => {
+                self.out.push('(');
+                for (i, p) in ps.iter().enumerate() {
+                    if i > 0 {
+                        self.out.push_str(", ");
+                    }
+                    self.pattern(p);
+                }
+                self.out.push(')');
+            }
+        }
+    }
+
+    /// Print a subexpression in argument position: binding/control forms
+    /// are parenthesized so the text round-trips through the parser.
+    fn arg_expr(&mut self, e: &E) {
+        match &**e {
+            Expr::Let { .. } | Expr::If { .. } | Expr::Match { .. } | Expr::RefWrite(..) => {
+                self.out.push('(');
+                self.expr(e);
+                self.out.push(')');
+            }
+            _ => self.expr(e),
+        }
+    }
+
+    fn expr(&mut self, e: &E) {
+        match &**e {
+            Expr::Var(v) => write!(self.out, "{v}").unwrap(),
+            Expr::Global(g) => write!(self.out, "@{g}").unwrap(),
+            Expr::Const(t) => {
+                if t.numel() == 1 && t.rank() == 0 {
+                    match t.dtype() {
+                        crate::tensor::DType::Bool => {
+                            write!(self.out, "{}", t.bool_value()).unwrap()
+                        }
+                        d if d.is_float() => {
+                            write!(self.out, "{}f", t.get_f64(0)).unwrap()
+                        }
+                        _ => write!(self.out, "{}", t.get_f64(0) as i64).unwrap(),
+                    }
+                } else {
+                    // Non-scalar constants print as a meta reference with
+                    // shape info (cf. the paper's constant pool, Fig. 2).
+                    write!(
+                        self.out,
+                        "meta[Constant][{:?}, {}]",
+                        t.shape(),
+                        t.dtype()
+                    )
+                    .unwrap()
+                }
+            }
+            Expr::Op(name) => write!(self.out, "{name}").unwrap(),
+            Expr::Ctor(name) => write!(self.out, "{name}").unwrap(),
+            Expr::Call { f, args, attrs } => {
+                self.expr(f);
+                self.out.push('(');
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        self.out.push_str(", ");
+                    }
+                    self.arg_expr(a);
+                }
+                self.attrs(attrs);
+                self.out.push(')');
+            }
+            Expr::Let { var, ty, value, body } => {
+                write!(self.out, "let {var}").unwrap();
+                if let Some(t) = ty {
+                    write!(self.out, ": {t}").unwrap();
+                }
+                self.out.push_str(" = ");
+                self.arg_expr(value);
+                self.out.push(';');
+                self.nl();
+                self.expr(body);
+            }
+            Expr::Func(f) => {
+                self.out.push_str("fn ");
+                self.fn_sig_body(f);
+            }
+            Expr::Tuple(es) => {
+                self.out.push('(');
+                for (i, x) in es.iter().enumerate() {
+                    if i > 0 {
+                        self.out.push_str(", ");
+                    }
+                    self.arg_expr(x);
+                }
+                if es.len() == 1 {
+                    self.out.push(',');
+                }
+                self.out.push(')');
+            }
+            Expr::Proj(t, i) => {
+                self.arg_expr(t);
+                write!(self.out, ".{i}").unwrap();
+            }
+            Expr::If { cond, then_, else_ } => {
+                self.out.push_str("if (");
+                self.expr(cond);
+                self.out.push_str(") {");
+                self.indent += 1;
+                self.nl();
+                self.expr(then_);
+                self.indent -= 1;
+                self.nl();
+                self.out.push_str("} else {");
+                self.indent += 1;
+                self.nl();
+                self.expr(else_);
+                self.indent -= 1;
+                self.nl();
+                self.out.push('}');
+            }
+            Expr::Match { scrut, arms } => {
+                self.out.push_str("match (");
+                self.expr(scrut);
+                self.out.push_str(") {");
+                self.indent += 1;
+                for (p, a) in arms {
+                    self.nl();
+                    self.out.push_str("| ");
+                    self.pattern(p);
+                    self.out.push_str(" -> ");
+                    self.expr(a);
+                }
+                self.indent -= 1;
+                self.nl();
+                self.out.push('}');
+            }
+            Expr::Grad(g) => {
+                self.out.push_str("grad(");
+                self.expr(g);
+                self.out.push(')');
+            }
+            Expr::RefNew(v) => {
+                self.out.push_str("ref(");
+                self.expr(v);
+                self.out.push(')');
+            }
+            Expr::RefRead(r) => {
+                self.out.push('!');
+                self.expr(r);
+            }
+            Expr::RefWrite(r, v) => {
+                self.expr(r);
+                self.out.push_str(" := ");
+                self.expr(v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::expr::*;
+    use super::*;
+
+    #[test]
+    fn prints_let_chain() {
+        let x = Var::fresh("x");
+        let e = let_(x.clone(), scalar(1.0), op_call("add", vec![var(&x), var(&x)]));
+        let s = print_expr(&e);
+        assert!(s.contains("let %x_"));
+        assert!(s.contains("add("));
+    }
+
+    #[test]
+    fn prints_if_and_match() {
+        let e = if_(
+            constant(crate::tensor::Tensor::scalar_bool(true)),
+            scalar(1.0),
+            scalar(2.0),
+        );
+        let s = print_expr(&e);
+        assert!(s.contains("if (true)"));
+        let m = match_(
+            unit(),
+            vec![(Pattern::Wildcard, scalar(0.0))],
+        );
+        assert!(print_expr(&m).contains("| _ ->"));
+    }
+
+    #[test]
+    fn prints_refs() {
+        let e = ref_write(ref_new(scalar(0.0)), scalar(1.0));
+        let s = print_expr(&e);
+        assert!(s.contains("ref(0f)"));
+        assert!(s.contains(":="));
+    }
+}

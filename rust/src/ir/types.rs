@@ -1,0 +1,168 @@
+//! Relay's type language (paper Fig. 1 / appendix Fig. 14 "Type τ").
+//!
+//! Tensor types carry a shape whose dimensions may be concrete, `Any`
+//! (paper §3.3.1), or inference variables; function types may carry type
+//! relations (§3.3.2) attached during operator typing.
+
+use std::fmt;
+
+pub use crate::tensor::DType;
+
+/// A single tensor dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dim {
+    /// Statically known extent.
+    Known(usize),
+    /// `Any`: statically unknown, checked at runtime (paper §3.3.1).
+    Any,
+    /// Shape-inference variable (solved by the relation solver).
+    Var(u32),
+}
+
+impl Dim {
+    pub fn known(self) -> Option<usize> {
+        match self {
+            Dim::Known(d) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::Known(d) => write!(f, "{d}"),
+            Dim::Any => write!(f, "?"),
+            Dim::Var(v) => write!(f, "'d{v}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Type {
+    /// `Tensor[(d1, ..., dn), bt]`.
+    Tensor { shape: Vec<Dim>, dtype: DType },
+    /// Unification variable introduced by inference.
+    Var(u32),
+    /// `fn (T1, ..., Tn) -> O`.
+    Func { params: Vec<Type>, ret: Box<Type> },
+    /// `(T1, ..., Tn)`; unit is the empty tuple.
+    Tuple(Vec<Type>),
+    /// `Ref[T]`.
+    Ref(Box<Type>),
+    /// Named ADT instantiated with type arguments, e.g. `List[T]`.
+    Adt { name: String, args: Vec<Type> },
+}
+
+impl Type {
+    pub fn unit() -> Type {
+        Type::Tuple(vec![])
+    }
+
+    pub fn tensor(shape: Vec<usize>, dtype: DType) -> Type {
+        Type::Tensor { shape: shape.into_iter().map(Dim::Known).collect(), dtype }
+    }
+
+    pub fn scalar(dtype: DType) -> Type {
+        Type::Tensor { shape: vec![], dtype }
+    }
+
+    pub fn scalar_bool() -> Type {
+        Type::scalar(DType::Bool)
+    }
+
+    /// Concrete shape if every dim is `Known`.
+    pub fn concrete_shape(&self) -> Option<Vec<usize>> {
+        match self {
+            Type::Tensor { shape, .. } => {
+                shape.iter().map(|d| d.known()).collect::<Option<Vec<_>>>()
+            }
+            _ => None,
+        }
+    }
+
+    pub fn dtype(&self) -> Option<DType> {
+        match self {
+            Type::Tensor { dtype, .. } => Some(*dtype),
+            _ => None,
+        }
+    }
+
+    /// Does this type contain any inference variable (type or dim)?
+    pub fn has_vars(&self) -> bool {
+        match self {
+            Type::Var(_) => true,
+            Type::Tensor { shape, .. } => shape.iter().any(|d| matches!(d, Dim::Var(_))),
+            Type::Func { params, ret } => {
+                params.iter().any(Type::has_vars) || ret.has_vars()
+            }
+            Type::Tuple(ts) => ts.iter().any(Type::has_vars),
+            Type::Ref(t) => t.has_vars(),
+            Type::Adt { args, .. } => args.iter().any(Type::has_vars),
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Tensor { shape, dtype } => {
+                if shape.is_empty() {
+                    write!(f, "Tensor[(), {dtype}]")
+                } else {
+                    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+                    write!(f, "Tensor[({}), {dtype}]", dims.join(", "))
+                }
+            }
+            Type::Var(v) => write!(f, "'t{v}"),
+            Type::Func { params, ret } => {
+                let ps: Vec<String> = params.iter().map(|p| p.to_string()).collect();
+                write!(f, "fn ({}) -> {ret}", ps.join(", "))
+            }
+            Type::Tuple(ts) => {
+                let ps: Vec<String> = ts.iter().map(|p| p.to_string()).collect();
+                write!(f, "({})", ps.join(", "))
+            }
+            Type::Ref(t) => write!(f, "Ref[{t}]"),
+            Type::Adt { name, args } => {
+                if args.is_empty() {
+                    write!(f, "{name}")
+                } else {
+                    let ps: Vec<String> = args.iter().map(|p| p.to_string()).collect();
+                    write!(f, "{name}[{}]", ps.join(", "))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        let t = Type::tensor(vec![2, 3], DType::F32);
+        assert_eq!(t.to_string(), "Tensor[(2, 3), float32]");
+        assert_eq!(Type::unit().to_string(), "()");
+        assert_eq!(Type::scalar_bool().to_string(), "Tensor[(), bool]");
+        let f = Type::Func { params: vec![t.clone()], ret: Box::new(t) };
+        assert!(f.to_string().starts_with("fn ("));
+    }
+
+    #[test]
+    fn concrete_shape_extraction() {
+        let t = Type::tensor(vec![4, 5], DType::F32);
+        assert_eq!(t.concrete_shape(), Some(vec![4, 5]));
+        let t2 = Type::Tensor { shape: vec![Dim::Known(4), Dim::Any], dtype: DType::F32 };
+        assert_eq!(t2.concrete_shape(), None);
+    }
+
+    #[test]
+    fn has_vars_detection() {
+        assert!(Type::Var(0).has_vars());
+        let t = Type::Tensor { shape: vec![Dim::Var(1)], dtype: DType::F32 };
+        assert!(t.has_vars());
+        assert!(!Type::tensor(vec![1], DType::F32).has_vars());
+    }
+}

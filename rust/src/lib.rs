@@ -1,0 +1,38 @@
+//! # relay — a reproduction of "Relay: A High-Level IR for Deep Learning"
+//!
+//! Roesch et al., 2019. A functional, statically-typed compiler IR for deep
+//! learning, rebuilt as a Rust compiler stack over an XLA/PJRT execution
+//! backend, with build-time JAX + Pallas kernels supplying the AOT artifact
+//! path (see DESIGN.md for the full mapping).
+//!
+//! Layer map:
+//! * [`ir`], [`ty`], [`pass`], [`eval`], [`quant`], [`graphrt`] — the Relay
+//!   compiler itself (the paper's contribution).
+//! * [`tensor`], [`vta`] — substrates: reference kernels and the simulated
+//!   accelerator.
+//! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT
+//!   execution, and model importers.
+//! * [`zoo`] — the evaluation model suite (vision + NLP).
+//! * [`coordinator`] — CLI + batched inference server (thin L3 driver).
+
+pub mod bench;
+pub mod tensor;
+
+pub mod ir;
+pub mod op;
+pub mod ty;
+
+pub mod eval;
+pub mod pass;
+
+pub mod graphrt;
+pub mod quant;
+
+pub mod backend;
+pub mod frontend;
+pub mod runtime;
+
+pub mod vta;
+pub mod zoo;
+
+pub mod coordinator;

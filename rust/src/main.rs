@@ -1,0 +1,76 @@
+//! `relay` CLI: the Layer-3 leader entrypoint.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use relay::coordinator::{self, server};
+use relay::pass::OptLevel;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(out) => {
+            println!("{out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn opt_of(args: &[String]) -> OptLevel {
+    args.windows(2)
+        .find(|w| w[0] == "-O")
+        .and_then(|w| OptLevel::parse(&w[1]))
+        .unwrap_or(OptLevel::O3)
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.windows(2)
+        .find(|w| w[0] == name)
+        .map(|w| w[1].as_str())
+}
+
+fn run(args: &[String]) -> anyhow::Result<String> {
+    match args.first().map(|s| s.as_str()) {
+        Some("compile") => {
+            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
+            coordinator::cmd_compile(path, opt_of(args))
+        }
+        Some("run") => {
+            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
+            coordinator::cmd_run(path, opt_of(args))
+        }
+        Some("artifact") => {
+            let name = args.get(1).ok_or_else(|| anyhow::anyhow!("missing name"))?;
+            let dir = flag_value(args, "--dir").unwrap_or("artifacts");
+            coordinator::cmd_artifact(std::path::Path::new(dir), name)
+        }
+        Some("serve") => {
+            let port: u16 = flag_value(args, "--port")
+                .and_then(|p| p.parse().ok())
+                .unwrap_or(7474);
+            let dir = flag_value(args, "--dir").unwrap_or("artifacts");
+            let cfg = server::ServerConfig {
+                port,
+                artifact_dir: dir.into(),
+                ..Default::default()
+            };
+            let stop = Arc::new(AtomicBool::new(false));
+            let stats = server::serve(cfg, stop)?;
+            println!("serving mlp_forward on 127.0.0.1:{port} (ctrl-c to stop)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(10));
+                println!(
+                    "requests={} batches={}",
+                    stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+                    stats.batches.load(std::sync::atomic::Ordering::Relaxed)
+                );
+            }
+        }
+        _ => Ok(coordinator::usage().to_string()),
+    }
+}

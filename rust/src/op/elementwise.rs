@@ -1,0 +1,307 @@
+//! Elementwise / broadcast operators + comparisons + casts + constants-like.
+
+use std::collections::BTreeMap;
+
+use super::{broadcast_rel, def, identity_rel, set_grad, OpDef, OpPattern, RelResult};
+use crate::eval::value::Value;
+use crate::ir::types::Dim;
+use crate::ir::{self, Attrs, Type, E};
+use crate::tensor::{self, BinOp, CmpOp, DType, Tensor, UnaryOp};
+
+fn t0(args: &[Value]) -> &Tensor {
+    args[0].tensor()
+}
+
+fn bin_eval(op: BinOp) -> impl Fn(&[Value], &Attrs) -> Result<Value, String> {
+    move |args, _| {
+        Ok(Value::Tensor(tensor::binary(op, args[0].tensor(), args[1].tensor())))
+    }
+}
+
+fn cmp_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    // Comparison: broadcast shape, bool dtype.
+    match broadcast_rel(types, attrs)? {
+        Some(Type::Tensor { shape, .. }) => {
+            Ok(Some(Type::Tensor { shape, dtype: DType::Bool }))
+        }
+        Some(other) => Ok(Some(other)),
+        None => Ok(None),
+    }
+}
+
+macro_rules! bin_op {
+    ($m:expr, $name:literal, $op:expr) => {
+        def($m, $name, Some(2), OpPattern::Injective, broadcast_rel, |args, _| {
+            Ok(Value::Tensor(tensor::binary($op, args[0].tensor(), args[1].tensor())))
+        });
+    };
+}
+
+macro_rules! cmp_op {
+    ($m:expr, $name:literal, $op:expr) => {
+        def($m, $name, Some(2), OpPattern::Injective, cmp_rel, |args, _| {
+            Ok(Value::Tensor(tensor::compare($op, args[0].tensor(), args[1].tensor())))
+        });
+    };
+}
+
+macro_rules! unary_op {
+    ($m:expr, $name:literal, $op:expr) => {
+        def($m, $name, Some(1), OpPattern::Injective, identity_rel, |args, _| {
+            Ok(Value::Tensor(tensor::unary($op, t0(args))))
+        });
+    };
+}
+
+pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
+    bin_op!(m, "add", BinOp::Add);
+    bin_op!(m, "subtract", BinOp::Sub);
+    bin_op!(m, "multiply", BinOp::Mul);
+    bin_op!(m, "divide", BinOp::Div);
+    bin_op!(m, "power", BinOp::Pow);
+    bin_op!(m, "maximum", BinOp::Maximum);
+    bin_op!(m, "minimum", BinOp::Minimum);
+    bin_op!(m, "logical_and", BinOp::Mul);
+    bin_op!(m, "logical_or", BinOp::Add);
+
+    cmp_op!(m, "equal", CmpOp::Eq);
+    cmp_op!(m, "not_equal", CmpOp::Ne);
+    cmp_op!(m, "less", CmpOp::Lt);
+    cmp_op!(m, "less_equal", CmpOp::Le);
+    cmp_op!(m, "greater", CmpOp::Gt);
+    cmp_op!(m, "greater_equal", CmpOp::Ge);
+
+    unary_op!(m, "negative", UnaryOp::Neg);
+    unary_op!(m, "exp", UnaryOp::Exp);
+    unary_op!(m, "log", UnaryOp::Log);
+    unary_op!(m, "sqrt", UnaryOp::Sqrt);
+    unary_op!(m, "rsqrt", UnaryOp::Rsqrt);
+    unary_op!(m, "tanh", UnaryOp::Tanh);
+    unary_op!(m, "sigmoid", UnaryOp::Sigmoid);
+    unary_op!(m, "abs", UnaryOp::Abs);
+    unary_op!(m, "floor", UnaryOp::Floor);
+    unary_op!(m, "ceil", UnaryOp::Ceil);
+    unary_op!(m, "round", UnaryOp::Round);
+    unary_op!(m, "erf", UnaryOp::Erf);
+    unary_op!(m, "logical_not", UnaryOp::LogicalNot);
+
+    // where(cond, a, b)
+    def(m, "where", Some(3), OpPattern::Injective, where_rel, |args, _| {
+        Ok(Value::Tensor(tensor::select(
+            args[0].tensor(),
+            args[1].tensor(),
+            args[2].tensor(),
+        )))
+    });
+
+    // clip(x, a_min=, a_max=)
+    def(m, "clip", Some(1), OpPattern::Injective, identity_rel, |args, attrs| {
+        let lo = attrs.get("a_min").map(|v| v.as_float()).unwrap_or(f64::NEG_INFINITY);
+        let hi = attrs.get("a_max").map(|v| v.as_float()).unwrap_or(f64::INFINITY);
+        Ok(Value::Tensor(tensor::clip(t0(args), lo, hi)))
+    });
+
+    // cast(x, dtype=)
+    def(m, "cast", Some(1), OpPattern::Injective, cast_rel, |args, attrs| {
+        let dt = DType::parse(attrs["dtype"].as_str())
+            .ok_or_else(|| format!("bad dtype {:?}", attrs["dtype"]))?;
+        Ok(Value::Tensor(tensor::cast(t0(args), dt)))
+    });
+
+    def(m, "zeros_like", Some(1), OpPattern::Injective, identity_rel, |args, _| {
+        Ok(Value::Tensor(Tensor::zeros(t0(args).shape(), t0(args).dtype())))
+    });
+    def(m, "ones_like", Some(1), OpPattern::Injective, identity_rel, |args, _| {
+        Ok(Value::Tensor(Tensor::ones(t0(args).shape(), t0(args).dtype())))
+    });
+
+    // zeros/ones/full with shape attr
+    def(m, "zeros", Some(0), OpPattern::Opaque, shape_attr_rel, |_, attrs| {
+        let (shape, dt) = shape_attr(attrs)?;
+        Ok(Value::Tensor(Tensor::zeros(&shape, dt)))
+    });
+    def(m, "ones", Some(0), OpPattern::Opaque, shape_attr_rel, |_, attrs| {
+        let (shape, dt) = shape_attr(attrs)?;
+        Ok(Value::Tensor(Tensor::ones(&shape, dt)))
+    });
+    def(m, "full", Some(0), OpPattern::Opaque, shape_attr_rel, |_, attrs| {
+        let (shape, _) = shape_attr(attrs)?;
+        Ok(Value::Tensor(Tensor::full_f32(&shape, attrs["value"].as_float() as f32)))
+    });
+
+    // copy: identity (used as a fusion barrier in tests)
+    def(m, "copy", Some(1), OpPattern::Opaque, identity_rel, |args, _| {
+        Ok(args[0].clone())
+    });
+
+    // ---------------- gradients (used by the AD pass, §4.2) ----------------
+    // Broadcasting binary ops collapse the adjoint back to each operand's
+    // shape via collapse_sum_like (the adjoint of broadcasting).
+    fn csl(g: ir::E, like: &ir::E) -> ir::E {
+        ir::op_call("collapse_sum_like", vec![g, like.clone()])
+    }
+    set_grad(m, "add", |args, _out, og, _| {
+        vec![csl(og.clone(), &args[0]), csl(og.clone(), &args[1])]
+    });
+    set_grad(m, "subtract", |args, _out, og, _| {
+        vec![
+            csl(og.clone(), &args[0]),
+            csl(ir::op_call("negative", vec![og.clone()]), &args[1]),
+        ]
+    });
+    set_grad(m, "multiply", |args, _out, og, _| {
+        vec![
+            csl(ir::op_call("multiply", vec![og.clone(), args[1].clone()]), &args[0]),
+            csl(ir::op_call("multiply", vec![og.clone(), args[0].clone()]), &args[1]),
+        ]
+    });
+    set_grad(m, "divide", |args, _out, og, _| {
+        // d/dx (x/y) = 1/y;  d/dy (x/y) = -x/y^2
+        let dy = ir::op_call(
+            "negative",
+            vec![ir::op_call(
+                "divide",
+                vec![
+                    ir::op_call("multiply", vec![og.clone(), args[0].clone()]),
+                    ir::op_call("multiply", vec![args[1].clone(), args[1].clone()]),
+                ],
+            )],
+        );
+        vec![
+            csl(ir::op_call("divide", vec![og.clone(), args[1].clone()]), &args[0]),
+            csl(dy, &args[1]),
+        ]
+    });
+    set_grad(m, "negative", |_args, _out, og, _| {
+        vec![ir::op_call("negative", vec![og.clone()])]
+    });
+    set_grad(m, "exp", |_args, out, og, _| {
+        vec![ir::op_call("multiply", vec![og.clone(), out.clone()])]
+    });
+    set_grad(m, "log", |args, _out, og, _| {
+        vec![ir::op_call("divide", vec![og.clone(), args[0].clone()])]
+    });
+    set_grad(m, "sqrt", |_args, out, og, _| {
+        // d sqrt = og / (2 * out)
+        vec![ir::op_call(
+            "divide",
+            vec![
+                og.clone(),
+                ir::op_call("multiply", vec![ir::scalar(2.0), out.clone()]),
+            ],
+        )]
+    });
+    set_grad(m, "tanh", |_args, out, og, _| {
+        // og * (1 - out^2)
+        vec![ir::op_call(
+            "multiply",
+            vec![
+                og.clone(),
+                ir::op_call(
+                    "subtract",
+                    vec![ir::scalar(1.0), ir::op_call("multiply", vec![out.clone(), out.clone()])],
+                ),
+            ],
+        )]
+    });
+    set_grad(m, "sigmoid", |_args, out, og, _| {
+        // og * out * (1 - out)
+        vec![ir::op_call(
+            "multiply",
+            vec![
+                og.clone(),
+                ir::op_call(
+                    "multiply",
+                    vec![
+                        out.clone(),
+                        ir::op_call("subtract", vec![ir::scalar(1.0), out.clone()]),
+                    ],
+                ),
+            ],
+        )]
+    });
+}
+
+fn where_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    // Result: broadcast of the two branches.
+    broadcast_rel(&types[1..3], attrs)
+}
+
+fn cast_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    let dt = DType::parse(attrs["dtype"].as_str())
+        .ok_or_else(|| format!("bad dtype {:?}", attrs.get("dtype")))?;
+    match &types[0] {
+        Type::Var(_) => Ok(None),
+        Type::Tensor { shape, .. } => Ok(Some(Type::Tensor { shape: shape.clone(), dtype: dt })),
+        other => Err(format!("cast expects tensor, got {other}")),
+    }
+}
+
+fn shape_attr(attrs: &Attrs) -> Result<(Vec<usize>, DType), String> {
+    let shape: Vec<usize> = attrs["shape"].as_int_vec().iter().map(|&d| d as usize).collect();
+    let dt = attrs
+        .get("dtype")
+        .map(|v| DType::parse(v.as_str()).unwrap())
+        .unwrap_or(DType::F32);
+    Ok((shape, dt))
+}
+
+fn shape_attr_rel(_types: &[Type], attrs: &Attrs) -> RelResult {
+    let (shape, dt) = shape_attr(attrs)?;
+    Ok(Some(Type::Tensor { shape: shape.into_iter().map(Dim::Known).collect(), dtype: dt }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lookup;
+    use super::*;
+    use crate::ir::AttrValue;
+
+    fn tv(t: Tensor) -> Value {
+        Value::Tensor(t)
+    }
+
+    #[test]
+    fn add_eval() {
+        let op = lookup("add").unwrap();
+        let out = (op.eval)(
+            &[tv(Tensor::scalar_f32(1.0)), tv(Tensor::scalar_f32(2.0))],
+            &Attrs::new(),
+        )
+        .unwrap();
+        assert_eq!(out.tensor().f32_value(), 3.0);
+    }
+
+    #[test]
+    fn cast_eval_and_rel() {
+        let op = lookup("cast").unwrap();
+        let attrs = ir::attrs(&[("dtype", AttrValue::Str("int8".into()))]);
+        let out = (op.eval)(&[tv(Tensor::scalar_f32(3.7))], &attrs).unwrap();
+        assert_eq!(out.tensor().dtype(), DType::I8);
+        let rel = (op.rel)(&[Type::tensor(vec![2], DType::F32)], &attrs).unwrap().unwrap();
+        assert_eq!(rel.dtype(), Some(DType::I8));
+    }
+
+    #[test]
+    fn comparison_rel_is_bool() {
+        let op = lookup("less").unwrap();
+        let t = Type::tensor(vec![2, 3], DType::F32);
+        let out = (op.rel)(&[t.clone(), t], &Attrs::new()).unwrap().unwrap();
+        assert_eq!(out.dtype(), Some(DType::Bool));
+    }
+
+    #[test]
+    fn grad_rules_exist_for_core_math() {
+        for name in ["add", "multiply", "tanh", "sigmoid", "exp", "divide"] {
+            assert!(lookup(name).unwrap().grad.is_some(), "no grad for {name}");
+        }
+    }
+
+    #[test]
+    fn zeros_with_shape_attr() {
+        let op = lookup("zeros").unwrap();
+        let attrs = ir::attrs(&[("shape", AttrValue::IntVec(vec![2, 2]))]);
+        let out = (op.eval)(&[], &attrs).unwrap();
+        assert_eq!(out.tensor().shape(), &[2, 2]);
+    }
+}

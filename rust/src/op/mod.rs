@@ -1,0 +1,250 @@
+//! Operator registry (paper §3.3.2).
+//!
+//! Every operator registers:
+//! * a **type relation** — the constraint between input and output types the
+//!   inference engine enforces at each call site;
+//! * an **interpreter implementation** over the tensor substrate;
+//! * optionally a **gradient rule** (an IR-to-IR construction used by the
+//!   reverse-mode AD source transform, §4.2);
+//! * an **operator pattern** driving fusion (§4.4), and VTA-offload
+//!   eligibility (Fig. 14 path).
+//!
+//! Relations are implemented in the meta-language (Rust) and registered with
+//! operators, exactly as the paper prescribes; they are opaque to the IR.
+
+mod elementwise;
+mod nn;
+mod qnn;
+mod reduce;
+mod transform;
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use crate::eval::value::Value;
+use crate::ir::{Attrs, Type, E};
+
+/// Result of running a type relation:
+/// * `Ok(Some(ty))` — the relation solved the output type;
+/// * `Ok(None)` — not enough concrete information yet, requeue (§3.3.3
+///   case 2);
+/// * `Err(msg)` — the relation is unsatisfiable, type checking fails.
+pub type RelResult = Result<Option<Type>, String>;
+
+pub type RelFn = fn(&[Type], &Attrs) -> RelResult;
+pub type EvalFn = fn(&[Value], &Attrs) -> Result<Value, String>;
+
+/// Gradient rule: given the forward arguments (as ANF atoms), the forward
+/// output, and the output adjoint, build adjoint expressions per argument.
+pub type GradFn = fn(args: &[E], out: &E, out_grad: &E, attrs: &Attrs) -> Vec<E>;
+
+pub struct OpDef {
+    pub name: &'static str,
+    /// Fixed arity if Some.
+    pub arity: Option<usize>,
+    pub rel: RelFn,
+    pub eval: EvalFn,
+    pub grad: Option<GradFn>,
+    /// How the fusion pass treats this op (§4.4): injective ops are
+    /// absorbed, OutEWiseFusable ops anchor groups, opaque ops break them.
+    pub pattern: OpPattern,
+    /// Eligible for VTA offload after quantization (conv-like GEMM ops).
+    pub vta_offloadable: bool,
+}
+
+/// TVM-style operator pattern classification driving fusion (§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpPattern {
+    /// Elementwise / broadcast / injective: freely fusable.
+    Injective,
+    /// Reductions: fusable as group tails.
+    Reduction,
+    /// conv2d/dense/matmul: anchor a fusion group, absorb injective ops.
+    OutEWiseFusable,
+    /// Never fused (control, allocation, debug ops).
+    Opaque,
+}
+
+static REGISTRY: OnceLock<BTreeMap<&'static str, OpDef>> = OnceLock::new();
+
+fn registry() -> &'static BTreeMap<&'static str, OpDef> {
+    REGISTRY.get_or_init(|| {
+        let mut m = BTreeMap::new();
+        elementwise::register(&mut m);
+        nn::register(&mut m);
+        reduce::register(&mut m);
+        transform::register(&mut m);
+        qnn::register(&mut m);
+        m
+    })
+}
+
+/// Look up an operator definition by registry name.
+pub fn lookup(name: &str) -> Option<&'static OpDef> {
+    registry().get(name)
+}
+
+pub fn all_ops() -> impl Iterator<Item = &'static OpDef> {
+    registry().values()
+}
+
+pub(crate) fn def(
+    m: &mut BTreeMap<&'static str, OpDef>,
+    name: &'static str,
+    arity: Option<usize>,
+    pattern: OpPattern,
+    rel: RelFn,
+    eval: EvalFn,
+) {
+    m.insert(
+        name,
+        OpDef { name, arity, rel, eval, grad: None, pattern, vta_offloadable: false },
+    );
+}
+
+pub(crate) fn set_grad(m: &mut BTreeMap<&'static str, OpDef>, name: &str, g: GradFn) {
+    m.get_mut(name).expect("grad for unknown op").grad = Some(g);
+}
+
+pub(crate) fn set_vta(m: &mut BTreeMap<&'static str, OpDef>, name: &str) {
+    m.get_mut(name).expect("vta for unknown op").vta_offloadable = true;
+}
+
+// ---------------------------------------------------------------------------
+// Shared relation helpers (reused across operators — the paper's point about
+// relation reuse, e.g. one broadcast relation for all elementwise ops).
+// ---------------------------------------------------------------------------
+
+use crate::ir::types::Dim;
+
+/// Broadcast two dim lists (numpy rules) at the type level. `Any` stays
+/// `Any`; inference vars defer.
+pub fn broadcast_dims(a: &[Dim], b: &[Dim]) -> Result<Option<Vec<Dim>>, String> {
+    let rank = a.len().max(b.len());
+    let mut out = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let da = if i < rank - a.len() { Dim::Known(1) } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { Dim::Known(1) } else { b[i - (rank - b.len())] };
+        let d = match (da, db) {
+            (Dim::Var(_), _) | (_, Dim::Var(_)) => return Ok(None),
+            (Dim::Known(x), Dim::Known(y)) => {
+                if x == y {
+                    Dim::Known(x)
+                } else if x == 1 {
+                    Dim::Known(y)
+                } else if y == 1 {
+                    Dim::Known(x)
+                } else {
+                    return Err(format!("cannot broadcast dims {x} and {y}"));
+                }
+            }
+            (Dim::Any, Dim::Known(1)) | (Dim::Known(1), Dim::Any) => Dim::Any,
+            (Dim::Any, d) | (d, Dim::Any) => match d {
+                Dim::Known(k) if k != 1 => Dim::Known(k),
+                _ => Dim::Any,
+            },
+        };
+        out.push(d);
+    }
+    Ok(Some(out))
+}
+
+/// The `Broadcast` relation: both inputs tensors, output their broadcast
+/// with promoted dtype.
+pub fn broadcast_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match (&types[0], &types[1]) {
+        (Type::Tensor { shape: s1, dtype: d1 }, Type::Tensor { shape: s2, dtype: d2 }) => {
+            match broadcast_dims(s1, s2)? {
+                Some(shape) => Ok(Some(Type::Tensor {
+                    shape,
+                    dtype: crate::tensor::DType::promote(*d1, *d2),
+                })),
+                None => Ok(None),
+            }
+        }
+        (Type::Var(_), _) | (_, Type::Var(_)) => Ok(None),
+        (a, b) => Err(format!("broadcast relation needs tensors, got {a} and {b}")),
+    }
+}
+
+/// The `Identity` relation: output type equals the (single) input type.
+pub fn identity_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match &types[0] {
+        Type::Var(_) => Ok(None),
+        t => Ok(Some(t.clone())),
+    }
+}
+
+/// Expect a tensor type with concrete-or-Any dims; defer on vars.
+pub fn as_tensor(t: &Type) -> Result<Option<(&[Dim], crate::tensor::DType)>, String> {
+    match t {
+        Type::Tensor { shape, dtype } => {
+            if shape.iter().any(|d| matches!(d, Dim::Var(_))) {
+                Ok(None)
+            } else {
+                Ok(Some((shape, *dtype)))
+            }
+        }
+        Type::Var(_) => Ok(None),
+        other => Err(format!("expected tensor type, got {other}")),
+    }
+}
+
+/// Concrete dims or defer/error.
+pub fn known_dims(t: &Type) -> Result<Option<Vec<usize>>, String> {
+    match as_tensor(t)? {
+        None => Ok(None),
+        Some((dims, _)) => {
+            let mut out = Vec::with_capacity(dims.len());
+            for d in dims {
+                match d {
+                    Dim::Known(k) => out.push(*k),
+                    Dim::Any | Dim::Var(_) => return Ok(None),
+                }
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_core_ops() {
+        for name in [
+            "add", "multiply", "nn.conv2d", "nn.dense", "nn.relu", "nn.softmax",
+            "reshape", "sum", "matmul", "qnn.quantize", "where", "concatenate",
+        ] {
+            assert!(lookup(name).is_some(), "missing op {name}");
+        }
+        assert!(lookup("no.such.op").is_none());
+    }
+
+    #[test]
+    fn broadcast_dims_rules() {
+        use Dim::*;
+        assert_eq!(
+            broadcast_dims(&[Known(2), Known(1)], &[Known(3)]).unwrap().unwrap(),
+            vec![Known(2), Known(3)]
+        );
+        assert!(broadcast_dims(&[Known(2)], &[Known(3)]).is_err());
+        assert_eq!(broadcast_dims(&[Var(0)], &[Known(3)]).unwrap(), None);
+        assert_eq!(broadcast_dims(&[Any], &[Known(3)]).unwrap().unwrap(), vec![Known(3)]);
+    }
+
+    #[test]
+    fn fusion_patterns_assigned() {
+        assert_eq!(lookup("add").unwrap().pattern, OpPattern::Injective);
+        assert_eq!(lookup("nn.conv2d").unwrap().pattern, OpPattern::OutEWiseFusable);
+        assert_eq!(lookup("sum").unwrap().pattern, OpPattern::Reduction);
+    }
+
+    #[test]
+    fn vta_flags() {
+        assert!(lookup("qnn.conv2d").unwrap().vta_offloadable);
+        assert!(lookup("qnn.dense").unwrap().vta_offloadable);
+        assert!(!lookup("add").unwrap().vta_offloadable);
+    }
+}

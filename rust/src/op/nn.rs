@@ -1,0 +1,446 @@
+//! Neural-network operators: dense, conv2d (+transpose, grouped), pooling,
+//! activations with shape-changing semantics, batch_norm (inference),
+//! bias_add, batch_flatten, dropout.
+
+use std::collections::BTreeMap;
+
+use super::{def, identity_rel, known_dims, set_grad, OpDef, OpPattern, RelResult};
+use crate::eval::value::Value;
+use crate::ir::types::Dim;
+use crate::ir::{self, Attrs, Type};
+use crate::tensor::{self, Conv2dParams, PoolKind, Tensor};
+
+fn t(args: &[Value], i: usize) -> &Tensor {
+    args[i].tensor()
+}
+
+pub(crate) fn conv2d_params(attrs: &Attrs) -> Conv2dParams {
+    let stride = attrs
+        .get("strides")
+        .map(|v| {
+            let s = v.as_int_vec();
+            (s[0] as usize, s[1] as usize)
+        })
+        .unwrap_or((1, 1));
+    let padding = attrs
+        .get("padding")
+        .map(|v| match v {
+            ir::AttrValue::Int(p) => (*p as usize, *p as usize),
+            ir::AttrValue::IntVec(p) => (p[0] as usize, p[1] as usize),
+            _ => (0, 0),
+        })
+        .unwrap_or((0, 0));
+    let groups = attrs.get("groups").map(|v| v.as_int() as usize).unwrap_or(1);
+    Conv2dParams { stride, padding, groups }
+}
+
+fn dense_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    // x: (m, k), w: (n, k) -> (m, n)
+    let (x, w) = (known_dims(&types[0])?, known_dims(&types[1])?);
+    match (x, w) {
+        (Some(x), Some(w)) => {
+            if x.len() != 2 || w.len() != 2 {
+                return Err(format!("dense expects 2-d inputs, got {x:?} {w:?}"));
+            }
+            if x[1] != w[1] {
+                return Err(format!("dense inner dims {} vs {}", x[1], w[1]));
+            }
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(x[0]), Dim::Known(w[0])],
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn matmul_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    let (x, y) = (known_dims(&types[0])?, known_dims(&types[1])?);
+    match (x, y) {
+        (Some(x), Some(y)) => {
+            if x.len() != 2 || y.len() != 2 {
+                return Err("matmul expects 2-d inputs".to_string());
+            }
+            if x[1] != y[0] {
+                return Err(format!("matmul inner dims {} vs {}", x[1], y[0]));
+            }
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(x[0]), Dim::Known(y[1])],
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+        _ => Ok(None),
+    }
+}
+
+pub(crate) fn conv2d_rel_impl(types: &[Type], attrs: &Attrs) -> Result<Option<Vec<usize>>, String> {
+    let (x, w) = (known_dims(&types[0])?, known_dims(&types[1])?);
+    match (x, w) {
+        (Some(x), Some(w)) => {
+            if x.len() != 4 || w.len() != 4 {
+                return Err("conv2d expects 4-d input and weight".to_string());
+            }
+            let p = conv2d_params(attrs);
+            if x[1] != w[1] * p.groups {
+                return Err(format!(
+                    "conv2d channel mismatch: input {} vs weight {}x{}",
+                    x[1], w[1], p.groups
+                ));
+            }
+            let (oh, ow) = tensor::conv2d_out_hw(x[2], x[3], w[2], w[3], &p);
+            Ok(Some(vec![x[0], w[0], oh, ow]))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn conv2d_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match conv2d_rel_impl(types, attrs)? {
+        Some(s) => Ok(Some(Type::Tensor {
+            shape: s.into_iter().map(Dim::Known).collect(),
+            dtype: types[0].dtype().unwrap(),
+        })),
+        None => Ok(None),
+    }
+}
+
+fn pool_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        Some(x) => {
+            if x.len() != 4 {
+                return Err("pool2d expects 4-d input".to_string());
+            }
+            let k = attrs.get("pool_size").map(|v| v.as_int() as usize).unwrap_or(2);
+            let s = attrs.get("strides").map(|v| v.as_int() as usize).unwrap_or(k);
+            let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+            let oh = (x[2] + 2 * p - k) / s + 1;
+            let ow = (x[3] + 2 * p - k) / s + 1;
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(x[0]), Dim::Known(x[1]), Dim::Known(oh), Dim::Known(ow)],
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+        None => Ok(None),
+    }
+}
+
+pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
+    def(m, "nn.relu", Some(1), OpPattern::Injective, identity_rel, |args, _| {
+        Ok(Value::Tensor(tensor::unary(tensor::UnaryOp::Relu, t(args, 0))))
+    });
+    def(m, "nn.leaky_relu", Some(1), OpPattern::Injective, identity_rel, |args, attrs| {
+        let alpha = attrs.get("alpha").map(|v| v.as_float() as f32).unwrap_or(0.01);
+        let x = t(args, 0);
+        let out: Vec<f32> = x.as_f32().iter().map(|&v| if v > 0.0 { v } else { alpha * v }).collect();
+        Ok(Value::Tensor(Tensor::from_f32(x.shape().to_vec(), out)))
+    });
+    def(m, "nn.softmax", Some(1), OpPattern::Opaque, identity_rel, |args, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+        Ok(Value::Tensor(tensor::softmax(t(args, 0), axis)))
+    });
+    def(m, "nn.log_softmax", Some(1), OpPattern::Opaque, identity_rel, |args, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+        Ok(Value::Tensor(tensor::log_softmax(t(args, 0), axis)))
+    });
+    def(m, "nn.dense", Some(2), OpPattern::OutEWiseFusable, dense_rel, |args, _| {
+        Ok(Value::Tensor(tensor::dense(t(args, 0), t(args, 1))))
+    });
+    def(m, "matmul", Some(2), OpPattern::OutEWiseFusable, matmul_rel, |args, _| {
+        Ok(Value::Tensor(tensor::matmul(t(args, 0), t(args, 1))))
+    });
+    def(m, "nn.batch_matmul", Some(2), OpPattern::OutEWiseFusable, batch_matmul_rel, |args, _| {
+        Ok(Value::Tensor(tensor::batch_matmul(t(args, 0), t(args, 1))))
+    });
+    def(m, "nn.bias_add", Some(2), OpPattern::Injective, bias_add_rel, |args, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
+        Ok(Value::Tensor(tensor::bias_add(t(args, 0), t(args, 1), axis)))
+    });
+    def(m, "nn.conv2d", Some(2), OpPattern::OutEWiseFusable, conv2d_rel, |args, attrs| {
+        let p = conv2d_params(attrs);
+        Ok(Value::Tensor(tensor::conv2d(t(args, 0), t(args, 1), &p)))
+    });
+    def(
+        m,
+        "nn.conv2d_transpose",
+        Some(2),
+        OpPattern::OutEWiseFusable,
+        conv2d_transpose_rel,
+        |args, attrs| {
+            let s = attrs.get("strides").map(|v| v.as_int_vec()[0] as usize).unwrap_or(1);
+            let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+            Ok(Value::Tensor(tensor::conv2d_transpose(t(args, 0), t(args, 1), s, p)))
+        },
+    );
+    def(m, "nn.max_pool2d", Some(1), OpPattern::Reduction, pool_rel, |args, attrs| {
+        let k = attrs.get("pool_size").map(|v| v.as_int() as usize).unwrap_or(2);
+        let s = attrs.get("strides").map(|v| v.as_int() as usize).unwrap_or(k);
+        let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+        Ok(Value::Tensor(tensor::pool2d(t(args, 0), PoolKind::Max, k, s, p)))
+    });
+    def(m, "nn.avg_pool2d", Some(1), OpPattern::Reduction, pool_rel, |args, attrs| {
+        let k = attrs.get("pool_size").map(|v| v.as_int() as usize).unwrap_or(2);
+        let s = attrs.get("strides").map(|v| v.as_int() as usize).unwrap_or(k);
+        let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+        Ok(Value::Tensor(tensor::pool2d(t(args, 0), PoolKind::Avg, k, s, p)))
+    });
+    def(
+        m,
+        "nn.global_avg_pool2d",
+        Some(1),
+        OpPattern::Reduction,
+        global_pool_rel,
+        |args, _| Ok(Value::Tensor(tensor::global_avg_pool2d(t(args, 0)))),
+    );
+    def(m, "nn.batch_flatten", Some(1), OpPattern::Injective, batch_flatten_rel, |args, _| {
+        Ok(Value::Tensor(tensor::batch_flatten(t(args, 0))))
+    });
+    // Inference-mode batch_norm: y = (x - mean) / sqrt(var + eps) * gamma + beta,
+    // returns the normalized tensor (single output form).
+    def(m, "nn.batch_norm", Some(5), OpPattern::Injective, batch_norm_rel, |args, attrs| {
+        let eps = attrs.get("epsilon").map(|v| v.as_float() as f32).unwrap_or(1e-5);
+        let (x, gamma, beta, mean, var) =
+            (t(args, 0), t(args, 1), t(args, 2), t(args, 3), t(args, 4));
+        let c = x.shape()[1];
+        let xv = x.as_f32();
+        let inner: usize = x.shape()[2..].iter().product();
+        let n = x.shape()[0];
+        let mut out = vec![0f32; x.numel()];
+        for ni in 0..n {
+            for ci in 0..c {
+                let scale = gamma.as_f32()[ci] / (var.as_f32()[ci] + eps).sqrt();
+                let shift = beta.as_f32()[ci] - mean.as_f32()[ci] * scale;
+                let base = (ni * c + ci) * inner;
+                for i in 0..inner {
+                    out[base + i] = xv[base + i] * scale + shift;
+                }
+            }
+        }
+        Ok(Value::Tensor(Tensor::from_f32(x.shape().to_vec(), out)))
+    });
+    // Dropout at inference is the identity (paper evaluates inference).
+    def(m, "nn.dropout", Some(1), OpPattern::Injective, identity_rel, |args, _| {
+        Ok(args[0].clone())
+    });
+
+    // -------- gradients --------
+    set_grad(m, "nn.relu", |args, _out, og, _| {
+        // og * (x > 0)
+        vec![ir::op_call(
+            "multiply",
+            vec![
+                og.clone(),
+                ir::op_call_attrs(
+                    "cast",
+                    vec![ir::op_call("greater", vec![args[0].clone(), ir::scalar(0.0)])],
+                    ir::attrs(&[("dtype", ir::AttrValue::Str("float32".into()))]),
+                ),
+            ],
+        )]
+    });
+    set_grad(m, "nn.dense", |args, _out, og, _| {
+        // x: (m,k), w: (n,k), og: (m,n)
+        // dx = og @ w          (m,k)
+        // dw = og^T @ x        (n,k)
+        vec![
+            ir::op_call("matmul", vec![og.clone(), args[1].clone()]),
+            ir::op_call(
+                "matmul",
+                vec![ir::op_call("transpose", vec![og.clone()]), args[0].clone()],
+            ),
+        ]
+    });
+    set_grad(m, "matmul", |args, _out, og, _| {
+        // dx = og @ y^T ; dy = x^T @ og
+        vec![
+            ir::op_call(
+                "matmul",
+                vec![og.clone(), ir::op_call("transpose", vec![args[1].clone()])],
+            ),
+            ir::op_call(
+                "matmul",
+                vec![ir::op_call("transpose", vec![args[0].clone()]), og.clone()],
+            ),
+        ]
+    });
+    set_grad(m, "nn.bias_add", |_args, _out, og, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
+        // db sums og over all axes except `axis`; for the common 2-d case
+        // axis=1 -> sum over axis 0.
+        let sum_axes = if axis == 1 || axis == -1 {
+            vec![0i64]
+        } else {
+            vec![axis + 1]
+        };
+        vec![
+            og.clone(),
+            ir::op_call_attrs(
+                "sum",
+                vec![og.clone()],
+                ir::attrs(&[("axis", ir::AttrValue::IntVec(sum_axes))]),
+            ),
+        ]
+    });
+    set_grad(m, "nn.batch_flatten", |args, _out, og, _| {
+        vec![ir::op_call_attrs(
+            "reshape_like",
+            vec![og.clone(), args[0].clone()],
+            ir::Attrs::new(),
+        )]
+    });
+    set_grad(m, "nn.log_softmax", |_args, out, og, attrs| {
+        // d = og - softmax(x) * sum(og, axis, keepdims)
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+        let sm = ir::op_call("exp", vec![out.clone()]);
+        let s = ir::op_call_attrs(
+            "sum",
+            vec![og.clone()],
+            ir::attrs(&[
+                ("axis", ir::AttrValue::IntVec(vec![axis])),
+                ("keepdims", ir::AttrValue::Bool(true)),
+            ]),
+        );
+        vec![ir::op_call(
+            "subtract",
+            vec![og.clone(), ir::op_call("multiply", vec![sm, s])],
+        )]
+    });
+}
+
+fn batch_matmul_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match (known_dims(&types[0])?, known_dims(&types[1])?) {
+        (Some(x), Some(y)) => {
+            if x.len() != 3 || y.len() != 3 || x[0] != y[0] || x[2] != y[1] {
+                return Err(format!("batch_matmul shapes {x:?} {y:?}"));
+            }
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(x[0]), Dim::Known(x[1]), Dim::Known(y[2])],
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn bias_add_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match (known_dims(&types[0])?, known_dims(&types[1])?) {
+        (Some(x), Some(b)) => {
+            let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
+            let ax = crate::tensor::shape::norm_axis(axis, x.len());
+            if b.len() != 1 || x.get(ax) != Some(&b[0]) {
+                return Err(format!("bias_add: bias {b:?} vs input {x:?} axis {axis}"));
+            }
+            Ok(Some(types[0].clone()))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn conv2d_transpose_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match (known_dims(&types[0])?, known_dims(&types[1])?) {
+        (Some(x), Some(w)) => {
+            let s = attrs.get("strides").map(|v| v.as_int_vec()[0] as usize).unwrap_or(1);
+            let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+            let oh = (x[2] - 1) * s + w[2] - 2 * p;
+            let ow = (x[3] - 1) * s + w[3] - 2 * p;
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(x[0]), Dim::Known(w[1]), Dim::Known(oh), Dim::Known(ow)],
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn global_pool_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        Some(x) => Ok(Some(Type::Tensor {
+            shape: vec![Dim::Known(x[0]), Dim::Known(x[1]), Dim::Known(1), Dim::Known(1)],
+            dtype: types[0].dtype().unwrap(),
+        })),
+        None => Ok(None),
+    }
+}
+
+fn batch_flatten_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        Some(x) => Ok(Some(Type::Tensor {
+            shape: vec![Dim::Known(x[0]), Dim::Known(x[1..].iter().product())],
+            dtype: types[0].dtype().unwrap(),
+        })),
+        None => Ok(None),
+    }
+}
+
+fn batch_norm_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match &types[0] {
+        Type::Var(_) => Ok(None),
+        t => Ok(Some(t.clone())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lookup;
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn dense_rel_shapes() {
+        let op = lookup("nn.dense").unwrap();
+        let x = Type::tensor(vec![4, 8], DType::F32);
+        let w = Type::tensor(vec![16, 8], DType::F32);
+        let out = (op.rel)(&[x, w], &Attrs::new()).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![4, 16]));
+    }
+
+    #[test]
+    fn dense_rel_rejects_mismatch() {
+        let op = lookup("nn.dense").unwrap();
+        let x = Type::tensor(vec![4, 8], DType::F32);
+        let w = Type::tensor(vec![16, 9], DType::F32);
+        assert!((op.rel)(&[x, w], &Attrs::new()).is_err());
+    }
+
+    #[test]
+    fn conv2d_rel_shapes() {
+        let op = lookup("nn.conv2d").unwrap();
+        let x = Type::tensor(vec![1, 3, 8, 8], DType::F32);
+        let w = Type::tensor(vec![16, 3, 3, 3], DType::F32);
+        let attrs = ir::attrs(&[
+            ("strides", ir::AttrValue::IntVec(vec![1, 1])),
+            ("padding", ir::AttrValue::Int(1)),
+        ]);
+        let out = (op.rel)(&[x, w], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![1, 16, 8, 8]));
+    }
+
+    #[test]
+    fn conv2d_rel_defers_on_var() {
+        let op = lookup("nn.conv2d").unwrap();
+        let x = Type::Var(0);
+        let w = Type::tensor(vec![16, 3, 3, 3], DType::F32);
+        assert_eq!((op.rel)(&[x, w], &Attrs::new()).unwrap(), None);
+    }
+
+    #[test]
+    fn batch_norm_eval_normalizes() {
+        let op = lookup("nn.batch_norm").unwrap();
+        let x = Value::Tensor(Tensor::from_f32(vec![1, 1, 1, 2], vec![2.0, 4.0]));
+        let gamma = Value::Tensor(Tensor::from_f32(vec![1], vec![1.0]));
+        let beta = Value::Tensor(Tensor::from_f32(vec![1], vec![0.0]));
+        let mean = Value::Tensor(Tensor::from_f32(vec![1], vec![3.0]));
+        let var = Value::Tensor(Tensor::from_f32(vec![1], vec![1.0]));
+        let out = (op.eval)(&[x, gamma, beta, mean, var], &Attrs::new()).unwrap();
+        let v = out.tensor().as_f32();
+        assert!((v[0] + 1.0).abs() < 1e-3 && (v[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pool_rel_shape() {
+        let op = lookup("nn.max_pool2d").unwrap();
+        let x = Type::tensor(vec![1, 4, 8, 8], DType::F32);
+        let attrs = ir::attrs(&[("pool_size", ir::AttrValue::Int(2))]);
+        let out = (op.rel)(&[x], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![1, 4, 4, 4]));
+    }
+}

@@ -1,0 +1,239 @@
+//! Quantization operators (paper §4.5):
+//!
+//! * `qnn.simulated_quantize` (simQ) — inserted by the *annotate* step;
+//!   simulates rounding/saturation error in float32 so *calibration* can
+//!   tune its parameters;
+//! * `qnn.quantize` / `qnn.dequantize` / `qnn.requantize` — the realized
+//!   fine-grained integer ops produced by the *realize* step;
+//! * `qnn.conv2d` / `qnn.dense` — narrow-integer compute with a wide
+//!   accumulator (i16 or i32), the Fig 13 measurement kernels; both are
+//!   VTA-offloadable (Fig 14).
+
+use std::collections::BTreeMap;
+
+use super::nn::{conv2d_params, conv2d_rel_impl};
+use super::{def, identity_rel, known_dims, set_vta, OpDef, OpPattern, RelResult};
+use crate::eval::value::Value;
+use crate::ir::types::Dim;
+use crate::ir::{Attrs, Type};
+use crate::tensor::{self, AccBits, DType, Tensor};
+
+fn t(args: &[Value], i: usize) -> &Tensor {
+    args[i].tensor()
+}
+
+fn acc_bits(attrs: &Attrs) -> AccBits {
+    match attrs.get("acc_bits").map(|v| v.as_int()).unwrap_or(32) {
+        16 => AccBits::I16,
+        _ => AccBits::I32,
+    }
+}
+
+fn acc_dtype(attrs: &Attrs) -> DType {
+    // The accumulator materializes as i32 storage either way; the i16 mode
+    // saturates during accumulation. Output dtype is i32 for uniformity.
+    let _ = attrs;
+    DType::I32
+}
+
+pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
+    // simQ(x): float-in/float-out simulation of quantization error.
+    // attrs: bits (default 8), scale (power of two), sign, rounding.
+    def(m, "qnn.simulated_quantize", Some(1), OpPattern::Injective, identity_rel, |args, attrs| {
+        let bits = attrs.get("bits").map(|v| v.as_int()).unwrap_or(8);
+        let scale = attrs.get("scale").map(|v| v.as_float() as f32).unwrap_or(1.0 / 16.0);
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        let x = t(args, 0);
+        let out: Vec<f32> = x
+            .as_f32()
+            .iter()
+            .map(|&v| {
+                let q = (v / scale).round().clamp(-qmax - 1.0, qmax);
+                q * scale
+            })
+            .collect();
+        Ok(Value::Tensor(Tensor::from_f32(x.shape().to_vec(), out)))
+    });
+
+    // quantize(x): f32 -> i8 (bits<=8) or i16 (bits=16) with scale attr.
+    def(m, "qnn.quantize", Some(1), OpPattern::Injective, quant_rel, |args, attrs| {
+        let scale = attrs.get("scale").map(|v| v.as_float() as f32).unwrap_or(1.0 / 16.0);
+        let bits = attrs.get("bits").map(|v| v.as_int()).unwrap_or(8);
+        if bits <= 8 {
+            Ok(Value::Tensor(tensor::quantize_i8(t(args, 0), scale)))
+        } else {
+            let x = t(args, 0);
+            let v: Vec<i16> = x
+                .as_f32()
+                .iter()
+                .map(|&f| (f / scale).round().clamp(-32768.0, 32767.0) as i16)
+                .collect();
+            Ok(Value::Tensor(tensor::Tensor::from_i16(x.shape().to_vec(), v)))
+        }
+    });
+
+    // dequantize(x): int -> f32 with scale attr.
+    def(m, "qnn.dequantize", Some(1), OpPattern::Injective, dequant_rel, |args, attrs| {
+        let scale = attrs.get("scale").map(|v| v.as_float() as f32).unwrap_or(1.0 / 16.0);
+        Ok(Value::Tensor(tensor::dequantize(t(args, 0), scale)))
+    });
+
+    // requantize(acc): i32 -> i8 via right shift (power-of-two rescale).
+    def(m, "qnn.requantize", Some(1), OpPattern::Injective, requant_rel, |args, attrs| {
+        let shift = attrs.get("shift").map(|v| v.as_int() as u32).unwrap_or(8);
+        Ok(Value::Tensor(tensor::requantize_shift(t(args, 0), shift)))
+    });
+
+    // qnn.dense(xq, wq): narrow-int x narrow-int -> i32 accumulate
+    // (w in (n,k) dense convention). i8 inputs take the fast kernel;
+    // i16 inputs (the 16/32 scheme) run a generic i32-accumulate loop.
+    def(m, "qnn.dense", Some(2), OpPattern::OutEWiseFusable, qdense_rel, |args, attrs| {
+        let x = t(args, 0);
+        let w = t(args, 1);
+        if x.dtype() == DType::I8 {
+            let wt = tensor::transpose(w, &[]);
+            return Ok(Value::Tensor(tensor::quant_matmul(x, &wt, acc_bits(attrs))));
+        }
+        // Generic narrow-int dense with a wide accumulator.
+        let (mdim, k) = (x.shape()[0], x.shape()[1]);
+        let n = w.shape()[0];
+        let xi = tensor::cast(x, DType::I32);
+        let wi = tensor::cast(w, DType::I32);
+        let (xv, wv) = (xi.as_i32(), wi.as_i32());
+        let mut out = vec![0i32; mdim * n];
+        for i in 0..mdim {
+            for j in 0..n {
+                let mut acc: i64 = 0;
+                for kk in 0..k {
+                    acc += xv[i * k + kk] as i64 * wv[j * k + kk] as i64;
+                }
+                out[i * n + j] = acc.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+            }
+        }
+        Ok(Value::Tensor(tensor::Tensor::from_i32(vec![mdim, n], out)))
+    });
+
+    // qnn.conv2d(xq, wq): i8 NCHW conv -> i32.
+    def(m, "qnn.conv2d", Some(2), OpPattern::OutEWiseFusable, qconv_rel, |args, attrs| {
+        let p = conv2d_params(attrs);
+        Ok(Value::Tensor(tensor::quant_conv2d(t(args, 0), t(args, 1), &p, acc_bits(attrs))))
+    });
+
+    // Annotation barriers used by the quantize flow / fusion:
+    def(m, "annotation.stop_fusion", Some(1), OpPattern::Opaque, identity_rel, |args, _| {
+        Ok(args[0].clone())
+    });
+
+    set_vta(m, "qnn.dense");
+    set_vta(m, "qnn.conv2d");
+}
+
+fn quant_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match &types[0] {
+        Type::Var(_) => Ok(None),
+        Type::Tensor { shape, .. } => {
+            Ok(Some(Type::Tensor { shape: shape.clone(), dtype: DType::I8 }))
+        }
+        other => Err(format!("qnn.quantize expects tensor, got {other}")),
+    }
+}
+
+fn dequant_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match &types[0] {
+        Type::Var(_) => Ok(None),
+        Type::Tensor { shape, .. } => {
+            Ok(Some(Type::Tensor { shape: shape.clone(), dtype: DType::F32 }))
+        }
+        other => Err(format!("qnn.dequantize expects tensor, got {other}")),
+    }
+}
+
+fn requant_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match &types[0] {
+        Type::Var(_) => Ok(None),
+        Type::Tensor { shape, .. } => {
+            Ok(Some(Type::Tensor { shape: shape.clone(), dtype: DType::I8 }))
+        }
+        other => Err(format!("qnn.requantize expects tensor, got {other}")),
+    }
+}
+
+fn qdense_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match (known_dims(&types[0])?, known_dims(&types[1])?) {
+        (Some(x), Some(w)) => {
+            if x[1] != w[1] {
+                return Err(format!("qnn.dense inner dims {} vs {}", x[1], w[1]));
+            }
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(x[0]), Dim::Known(w[0])],
+                dtype: acc_dtype(attrs),
+            }))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn qconv_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match conv2d_rel_impl(types, attrs)? {
+        Some(s) => Ok(Some(Type::Tensor {
+            shape: s.into_iter().map(Dim::Known).collect(),
+            dtype: acc_dtype(attrs),
+        })),
+        None => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lookup;
+    use super::*;
+    use crate::ir::{self, AttrValue};
+
+    #[test]
+    fn simq_is_float_to_float() {
+        let op = lookup("qnn.simulated_quantize").unwrap();
+        let attrs = ir::attrs(&[
+            ("bits", AttrValue::Int(8)),
+            ("scale", AttrValue::Float(0.5)),
+        ]);
+        let x = Value::Tensor(Tensor::from_f32(vec![3], vec![0.3, 0.6, 100.0]));
+        let out = (op.eval)(&[x], &attrs).unwrap();
+        let v = out.tensor().as_f32();
+        assert_eq!(out.tensor().dtype(), DType::F32);
+        assert_eq!(v[0], 0.5); // 0.3/0.5 rounds to 1
+        assert_eq!(v[1], 0.5); // 0.6/0.5 rounds to 1
+        assert_eq!(v[2], 63.5); // saturates at 127 * 0.5
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let q = lookup("qnn.quantize").unwrap();
+        let d = lookup("qnn.dequantize").unwrap();
+        let attrs = ir::attrs(&[("scale", AttrValue::Float(0.25))]);
+        let x = Value::Tensor(Tensor::from_f32(vec![2], vec![1.0, -0.5]));
+        let qv = (q.eval)(&[x], &attrs).unwrap();
+        assert_eq!(qv.tensor().dtype(), DType::I8);
+        let back = (d.eval)(&[qv], &attrs).unwrap();
+        assert_eq!(back.tensor().as_f32(), &[1.0, -0.5]);
+    }
+
+    #[test]
+    fn qdense_matches_float_dense() {
+        let qd = lookup("qnn.dense").unwrap();
+        let x = Value::Tensor(Tensor::from_i8(vec![1, 2], vec![2, 3]));
+        let w = Value::Tensor(Tensor::from_i8(vec![2, 2], vec![1, 0, 0, 1]));
+        let out = (qd.eval)(&[x, w], &Attrs::new()).unwrap();
+        assert_eq!(out.tensor().as_i32(), &[2, 3]);
+    }
+
+    #[test]
+    fn qconv_rel_types() {
+        let op = lookup("qnn.conv2d").unwrap();
+        let x = Type::tensor(vec![1, 3, 4, 4], DType::I8);
+        let w = Type::tensor(vec![8, 3, 3, 3], DType::I8);
+        let attrs = ir::attrs(&[("padding", AttrValue::Int(1))]);
+        let out = (op.rel)(&[x, w], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![1, 8, 4, 4]));
+        assert_eq!(out.dtype(), Some(DType::I32));
+    }
+}

@@ -1,0 +1,188 @@
+//! Reduction operators: sum/mean/max/min/prod/all/any, argmax.
+
+use std::collections::BTreeMap;
+
+use super::{as_tensor, def, set_grad, OpDef, OpPattern, RelResult};
+use crate::eval::value::Value;
+use crate::ir::types::Dim;
+use crate::ir::{self, Attrs, Type};
+use crate::tensor::{self, DType, ReduceKind};
+
+fn axes_of(attrs: &Attrs) -> Vec<i64> {
+    attrs.get("axis").map(|v| v.as_int_vec().to_vec()).unwrap_or_default()
+}
+
+fn keepdims_of(attrs: &Attrs) -> bool {
+    attrs.get("keepdims").map(|v| v.as_bool()).unwrap_or(false)
+}
+
+fn reduce_rel_with(dtype_override: Option<DType>) -> impl Fn(&[Type], &Attrs) -> RelResult {
+    move |types, attrs| {
+        match as_tensor(&types[0])? {
+            None => Ok(None),
+            Some((dims, dt)) => {
+                let rank = dims.len();
+                let axes = axes_of(attrs);
+                let axes: Vec<usize> = if axes.is_empty() {
+                    (0..rank).collect()
+                } else {
+                    axes.iter()
+                        .map(|&a| crate::tensor::shape::norm_axis(a, rank))
+                        .collect()
+                };
+                let keep = keepdims_of(attrs);
+                let mut shape = Vec::new();
+                for (i, d) in dims.iter().enumerate() {
+                    if axes.contains(&i) {
+                        if keep {
+                            shape.push(Dim::Known(1));
+                        }
+                    } else {
+                        shape.push(*d);
+                    }
+                }
+                Ok(Some(Type::Tensor { shape, dtype: dtype_override.unwrap_or(dt) }))
+            }
+        }
+    }
+}
+
+macro_rules! reduce_op {
+    ($m:expr, $name:literal, $kind:expr) => {
+        def(
+            $m,
+            $name,
+            Some(1),
+            OpPattern::Reduction,
+            |t, a| reduce_rel_with(None)(t, a),
+            |args, attrs| {
+                Ok(Value::Tensor(tensor::reduce(
+                    args[0].tensor(),
+                    $kind,
+                    &axes_of(attrs),
+                    keepdims_of(attrs),
+                )))
+            },
+        );
+    };
+}
+
+pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
+    reduce_op!(m, "sum", ReduceKind::Sum);
+    reduce_op!(m, "mean", ReduceKind::Mean);
+    reduce_op!(m, "max", ReduceKind::Max);
+    reduce_op!(m, "min", ReduceKind::Min);
+    reduce_op!(m, "prod", ReduceKind::Prod);
+    reduce_op!(m, "all", ReduceKind::All);
+    reduce_op!(m, "any", ReduceKind::Any);
+
+    def(
+        m,
+        "argmax",
+        Some(1),
+        OpPattern::Reduction,
+        |types, attrs| {
+            match as_tensor(&types[0])? {
+                None => Ok(None),
+                Some((dims, _)) => {
+                    let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+                    let ax = crate::tensor::shape::norm_axis(axis, dims.len());
+                    let mut shape = dims.to_vec();
+                    shape.remove(ax);
+                    Ok(Some(Type::Tensor { shape, dtype: DType::I64 }))
+                }
+            }
+        },
+        |args, attrs| {
+            let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(-1);
+            Ok(Value::Tensor(tensor::argmax(args[0].tensor(), axis)))
+        },
+    );
+
+    set_grad(m, "sum", |args, _out, og, attrs| {
+        // Re-expand reduced axes (unless keepdims), then broadcast back.
+        vec![ir::op_call(
+            "broadcast_to_like",
+            vec![reexpand(og, attrs), args[0].clone()],
+        )]
+    });
+    set_grad(m, "mean", |args, _out, og, attrs| {
+        // og / count, broadcast back; count = numel(x)/numel(og).
+        let b = ir::op_call(
+            "broadcast_to_like",
+            vec![reexpand(og, attrs), args[0].clone()],
+        );
+        let ratio = ir::op_call("mean_count_like", vec![args[0].clone(), og.clone()]);
+        vec![ir::op_call("divide", vec![b, ratio])]
+    });
+}
+
+/// For a reduction without keepdims, re-insert size-1 dims at the reduced
+/// axes so the adjoint broadcasts against the input shape.
+fn reexpand(og: &crate::ir::E, attrs: &Attrs) -> crate::ir::E {
+    if keepdims_of(attrs) {
+        return og.clone();
+    }
+    let mut axes = axes_of(attrs);
+    if axes.is_empty() {
+        // Full reduction -> og is rank 0 and broadcasts as-is.
+        return og.clone();
+    }
+    axes.sort_unstable();
+    let mut out = og.clone();
+    for &a in &axes {
+        out = ir::op_call_attrs(
+            "expand_dims",
+            vec![out],
+            ir::attrs(&[("axis", crate::ir::AttrValue::Int(a))]),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lookup;
+    use super::*;
+    use crate::ir::AttrValue;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn sum_rel_removes_axes() {
+        let op = lookup("sum").unwrap();
+        let t = Type::tensor(vec![2, 3, 4], DType::F32);
+        let attrs = ir::attrs(&[("axis", AttrValue::IntVec(vec![1]))]);
+        let out = (op.rel)(&[t], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![2, 4]));
+    }
+
+    #[test]
+    fn sum_rel_keepdims() {
+        let op = lookup("sum").unwrap();
+        let t = Type::tensor(vec![2, 3], DType::F32);
+        let attrs = ir::attrs(&[
+            ("axis", AttrValue::IntVec(vec![1])),
+            ("keepdims", AttrValue::Bool(true)),
+        ]);
+        let out = (op.rel)(&[t], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![2, 1]));
+    }
+
+    #[test]
+    fn mean_eval() {
+        let op = lookup("mean").unwrap();
+        let v = Value::Tensor(Tensor::from_f32(vec![4], vec![1., 2., 3., 4.]));
+        let out = (op.eval)(&[v], &Attrs::new()).unwrap();
+        assert_eq!(out.tensor().f32_value(), 2.5);
+    }
+
+    #[test]
+    fn argmax_rel_dtype() {
+        let op = lookup("argmax").unwrap();
+        let t = Type::tensor(vec![2, 5], DType::F32);
+        let attrs = ir::attrs(&[("axis", AttrValue::Int(1))]);
+        let out = (op.rel)(&[t], &attrs).unwrap().unwrap();
+        assert_eq!(out.dtype(), Some(DType::I64));
+        assert_eq!(out.concrete_shape(), Some(vec![2]));
+    }
+}

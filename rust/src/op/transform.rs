@@ -1,0 +1,462 @@
+//! Tensor transformation operators: reshape, transpose, concat, split,
+//! take, one_hot, layout_transform, plus AD helper ops
+//! (`broadcast_to_like`, `reshape_like`, `mean_count_like`).
+
+use std::collections::BTreeMap;
+
+use super::{as_tensor, def, known_dims, set_grad, OpDef, OpPattern, RelResult};
+use crate::eval::value::Value;
+use crate::ir::types::Dim;
+use crate::ir::{self, Attrs, Type};
+use crate::tensor::{self, DType, Tensor};
+
+fn t(args: &[Value], i: usize) -> &Tensor {
+    args[i].tensor()
+}
+
+pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
+    def(m, "reshape", Some(1), OpPattern::Injective, reshape_rel, |args, attrs| {
+        let ns = attrs["newshape"].as_int_vec();
+        Ok(Value::Tensor(tensor::reshape(t(args, 0), ns)))
+    });
+    def(m, "reshape_like", Some(2), OpPattern::Injective, like_rel, |args, _| {
+        let shape: Vec<i64> = t(args, 1).shape().iter().map(|&d| d as i64).collect();
+        Ok(Value::Tensor(tensor::reshape(t(args, 0), &shape)))
+    });
+    // collapse_sum_like(g, x): sum g over the axes x was broadcast along —
+    // the adjoint of broadcasting (used by binary-op gradient rules).
+    def(m, "collapse_sum_like", Some(2), OpPattern::Reduction, like_rel, |args, _| {
+        let g = t(args, 0);
+        let like = t(args, 1);
+        if g.shape() == like.shape() {
+            return Ok(Value::Tensor(g.clone()));
+        }
+        // Sum leading extra axes.
+        let extra = g.rank() - like.rank();
+        let mut cur = g.clone();
+        for _ in 0..extra {
+            cur = tensor::reduce(&cur, tensor::ReduceKind::Sum, &[0], false);
+        }
+        // Sum axes where the target dim is 1.
+        for (i, &d) in like.shape().iter().enumerate() {
+            if d == 1 && cur.shape()[i] != 1 {
+                cur = tensor::reduce(&cur, tensor::ReduceKind::Sum, &[i as i64], true);
+            }
+        }
+        Ok(Value::Tensor(cur))
+    });
+    def(m, "broadcast_to_like", Some(2), OpPattern::Injective, like_rel, |args, _| {
+        // Multiply by ones_like: correct and simple broadcast-to.
+        let ones = Tensor::ones(t(args, 1).shape(), t(args, 0).dtype());
+        Ok(Value::Tensor(tensor::binary(tensor::BinOp::Mul, t(args, 0), &ones)))
+    });
+    // mean_count_like(x, o): scalar ratio numel(x)/numel(o), broadcast as a
+    // rank-0 tensor — the denominator for mean's gradient.
+    def(m, "mean_count_like", Some(2), OpPattern::Injective, scalar_f32_rel, |args, _| {
+        let ratio = t(args, 0).numel() as f32 / t(args, 1).numel().max(1) as f32;
+        Ok(Value::Tensor(Tensor::scalar_f32(ratio)))
+    });
+    def(m, "transpose", Some(1), OpPattern::Injective, transpose_rel, |args, attrs| {
+        let axes: Vec<usize> = attrs
+            .get("axes")
+            .map(|v| v.as_int_vec().iter().map(|&a| a as usize).collect())
+            .unwrap_or_default();
+        Ok(Value::Tensor(tensor::transpose(t(args, 0), &axes)))
+    });
+    def(m, "squeeze", Some(1), OpPattern::Injective, squeeze_rel, |args, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int());
+        Ok(Value::Tensor(tensor::squeeze(t(args, 0), axis)))
+    });
+    def(m, "expand_dims", Some(1), OpPattern::Injective, expand_rel, |args, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+        Ok(Value::Tensor(tensor::expand_dims(t(args, 0), axis)))
+    });
+    def(m, "concatenate", None, OpPattern::Injective, concat_rel, |args, attrs| {
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+        // Arguments arrive either as a single tuple value or as N tensors.
+        let parts: Vec<Tensor> = if args.len() == 1 {
+            match &args[0] {
+                Value::Tuple(vs) => vs.iter().map(|v| v.tensor().clone()).collect(),
+                Value::Tensor(t) => vec![t.clone()],
+                other => return Err(format!("concatenate on {other:?}")),
+            }
+        } else {
+            args.iter().map(|v| v.tensor().clone()).collect()
+        };
+        Ok(Value::Tensor(tensor::concat(&parts, axis)))
+    });
+    def(m, "split", Some(1), OpPattern::Injective, split_rel, |args, attrs| {
+        let sections = attrs["indices_or_sections"].as_int() as usize;
+        let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+        let parts = tensor::split(t(args, 0), sections, axis);
+        Ok(Value::Tuple(parts.into_iter().map(Value::Tensor).collect()))
+    });
+    def(m, "take", Some(2), OpPattern::Injective, take_rel, |args, _| {
+        Ok(Value::Tensor(tensor::take_rows(t(args, 0), t(args, 1))))
+    });
+    def(m, "one_hot", Some(1), OpPattern::Injective, one_hot_rel, |args, attrs| {
+        let depth = attrs["depth"].as_int() as usize;
+        Ok(Value::Tensor(tensor::one_hot(t(args, 0), depth)))
+    });
+    def(m, "layout_transform", Some(1), OpPattern::Injective, layout_rel, |args, attrs| {
+        let src = attrs["src_layout"].as_str();
+        let dst = attrs["dst_layout"].as_str();
+        let x = t(args, 0);
+        let out = match (src, dst) {
+            ("NCHW", "NHWC") => tensor::nchw_to_nhwc(x),
+            ("NHWC", "NCHW") => tensor::nhwc_to_nchw(x),
+            ("NCHW", "NCHW4c") => tensor::nchw_to_nchwc(x, 4),
+            ("NCHW", "NCHW8c") => tensor::nchw_to_nchwc(x, 8),
+            ("NCHW4c", "NCHW") | ("NCHW8c", "NCHW") => tensor::nchwc_to_nchw(x),
+            other => return Err(format!("unsupported layout transform {other:?}")),
+        };
+        Ok(Value::Tensor(out))
+    });
+
+    // im2col: the AlterOpLayout helper (conv-as-GEMM patch extraction).
+    def(m, "nn.im2col", Some(1), OpPattern::Injective, im2col_rel, |args, attrs| {
+        let p = super::nn::conv2d_params(attrs);
+        let ks = attrs["kernel_size"].as_int_vec();
+        Ok(Value::Tensor(tensor::im2col(
+            t(args, 0),
+            ks[0] as usize,
+            ks[1] as usize,
+            &p,
+        )))
+    });
+
+    set_grad(m, "reshape", |args, _out, og, _| {
+        vec![ir::op_call("reshape_like", vec![og.clone(), args[0].clone()])]
+    });
+    set_grad(m, "reshape_like", |args, _out, og, _| {
+        vec![
+            ir::op_call("reshape_like", vec![og.clone(), args[0].clone()]),
+            ir::op_call("zeros_like", vec![args[1].clone()]),
+        ]
+    });
+    set_grad(m, "expand_dims", |args, _out, og, _| {
+        vec![ir::op_call("reshape_like", vec![og.clone(), args[0].clone()])]
+    });
+    set_grad(m, "squeeze", |args, _out, og, _| {
+        vec![ir::op_call("reshape_like", vec![og.clone(), args[0].clone()])]
+    });
+    // Broadcasting and its adjoint are mutual adjoints — registering both
+    // keeps higher-order AD (grad-of-grad) exact.
+    set_grad(m, "broadcast_to_like", |args, _out, og, _| {
+        vec![
+            ir::op_call("collapse_sum_like", vec![og.clone(), args[0].clone()]),
+            ir::op_call("zeros_like", vec![args[1].clone()]),
+        ]
+    });
+    set_grad(m, "collapse_sum_like", |args, _out, og, _| {
+        vec![
+            ir::op_call("broadcast_to_like", vec![og.clone(), args[0].clone()]),
+            ir::op_call("zeros_like", vec![args[1].clone()]),
+        ]
+    });
+    set_grad(m, "transpose", |_args, _out, og, attrs| {
+        // Gradient transposes by the inverse permutation.
+        let inv: Option<Vec<i64>> = attrs.get("axes").map(|v| {
+            let ax = v.as_int_vec();
+            let mut inv = vec![0i64; ax.len()];
+            for (i, &a) in ax.iter().enumerate() {
+                inv[a as usize] = i as i64;
+            }
+            inv
+        });
+        let a = match inv {
+            Some(inv) => ir::attrs(&[("axes", ir::AttrValue::IntVec(inv))]),
+            None => ir::Attrs::new(),
+        };
+        vec![ir::op_call_attrs("transpose", vec![og.clone()], a)]
+    });
+}
+
+fn im2col_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        None => Ok(None),
+        Some(d) => {
+            let p = super::nn::conv2d_params(attrs);
+            let ks = attrs["kernel_size"].as_int_vec();
+            let (kh, kw) = (ks[0] as usize, ks[1] as usize);
+            let (oh, ow) = tensor::conv2d_out_hw(d[2], d[3], kh, kw, &p);
+            Ok(Some(Type::Tensor {
+                shape: vec![Dim::Known(d[0] * oh * ow), Dim::Known(d[1] * kh * kw)],
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+    }
+}
+
+fn reshape_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        Some(dims) => {
+            let numel: usize = dims.iter().product();
+            let ns = attrs["newshape"].as_int_vec();
+            let known: usize =
+                ns.iter().filter(|&&d| d != -1).map(|&d| d as usize).product();
+            let shape: Vec<Dim> = ns
+                .iter()
+                .map(|&d| {
+                    Dim::Known(if d == -1 { numel / known.max(1) } else { d as usize })
+                })
+                .collect();
+            let out: usize = shape.iter().map(|d| d.known().unwrap()).product();
+            if out != numel {
+                return Err(format!("reshape {dims:?} -> {ns:?}: numel mismatch"));
+            }
+            Ok(Some(Type::Tensor { shape, dtype: types[0].dtype().unwrap() }))
+        }
+        None => Ok(None),
+    }
+}
+
+fn like_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    // Output type = type of the second ("like") argument with the first's
+    // dtype kept.
+    match (&types[0], &types[1]) {
+        (Type::Var(_), _) | (_, Type::Var(_)) => Ok(None),
+        (Type::Tensor { dtype, .. }, Type::Tensor { shape, .. }) => {
+            Ok(Some(Type::Tensor { shape: shape.clone(), dtype: *dtype }))
+        }
+        (a, b) => Err(format!("like-op expects tensors, got {a} and {b}")),
+    }
+}
+
+fn scalar_f32_rel(_types: &[Type], _attrs: &Attrs) -> RelResult {
+    Ok(Some(Type::scalar(DType::F32)))
+}
+
+fn transpose_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match as_tensor(&types[0])? {
+        None => Ok(None),
+        Some((dims, dt)) => {
+            let axes: Vec<usize> = attrs
+                .get("axes")
+                .map(|v| v.as_int_vec().iter().map(|&a| a as usize).collect())
+                .unwrap_or_else(|| (0..dims.len()).rev().collect());
+            if axes.len() != dims.len() {
+                return Err("transpose axes rank mismatch".to_string());
+            }
+            Ok(Some(Type::Tensor {
+                shape: axes.iter().map(|&a| dims[a]).collect(),
+                dtype: dt,
+            }))
+        }
+    }
+}
+
+fn squeeze_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        None => Ok(None),
+        Some(dims) => {
+            let shape: Vec<Dim> = match attrs.get("axis").map(|v| v.as_int()) {
+                Some(a) => {
+                    let ax = crate::tensor::shape::norm_axis(a, dims.len());
+                    dims.iter()
+                        .enumerate()
+                        .filter(|(i, _)| *i != ax)
+                        .map(|(_, &d)| Dim::Known(d))
+                        .collect()
+                }
+                None => dims.iter().filter(|&&d| d != 1).map(|&d| Dim::Known(d)).collect(),
+            };
+            Ok(Some(Type::Tensor { shape, dtype: types[0].dtype().unwrap() }))
+        }
+    }
+}
+
+fn expand_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match as_tensor(&types[0])? {
+        None => Ok(None),
+        Some((dims, dt)) => {
+            let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+            let ax = if axis < 0 {
+                (dims.len() as i64 + 1 + axis) as usize
+            } else {
+                axis as usize
+            };
+            let mut shape = dims.to_vec();
+            shape.insert(ax, Dim::Known(1));
+            Ok(Some(Type::Tensor { shape, dtype: dt }))
+        }
+    }
+}
+
+fn concat_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    // Single tuple-typed arg or N tensor args.
+    let parts: Vec<&Type> = if types.len() == 1 {
+        match &types[0] {
+            Type::Tuple(ts) => ts.iter().collect(),
+            Type::Var(_) => return Ok(None),
+            t => vec![t],
+        }
+    } else {
+        types.iter().collect()
+    };
+    let mut dims_list = Vec::new();
+    for p in &parts {
+        match known_dims(p)? {
+            Some(d) => dims_list.push(d),
+            None => return Ok(None),
+        }
+    }
+    let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+    let ax = crate::tensor::shape::norm_axis(axis, dims_list[0].len());
+    let mut out = dims_list[0].clone();
+    out[ax] = dims_list.iter().map(|d| d[ax]).sum();
+    for d in &dims_list[1..] {
+        for i in 0..out.len() {
+            if i != ax && d[i] != dims_list[0][i] {
+                return Err(format!("concat dim {i} mismatch"));
+            }
+        }
+    }
+    Ok(Some(Type::Tensor {
+        shape: out.into_iter().map(Dim::Known).collect(),
+        dtype: parts[0].dtype().unwrap(),
+    }))
+}
+
+fn split_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        None => Ok(None),
+        Some(dims) => {
+            let sections = attrs["indices_or_sections"].as_int() as usize;
+            let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(0);
+            let ax = crate::tensor::shape::norm_axis(axis, dims.len());
+            if dims[ax] % sections != 0 {
+                return Err(format!("split {} into {sections}", dims[ax]));
+            }
+            let mut part = dims.clone();
+            part[ax] = dims[ax] / sections;
+            let pt = Type::Tensor {
+                shape: part.into_iter().map(Dim::Known).collect(),
+                dtype: types[0].dtype().unwrap(),
+            };
+            Ok(Some(Type::Tuple(vec![pt; sections])))
+        }
+    }
+}
+
+fn take_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    match (known_dims(&types[0])?, known_dims(&types[1])?) {
+        (Some(table), Some(idx)) => {
+            if table.len() != 2 {
+                return Err("take expects 2-d table".to_string());
+            }
+            let mut shape: Vec<Dim> = idx.into_iter().map(Dim::Known).collect();
+            shape.push(Dim::Known(table[1]));
+            Ok(Some(Type::Tensor { shape, dtype: types[0].dtype().unwrap() }))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn one_hot_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        None => Ok(None),
+        Some(dims) => {
+            let depth = attrs["depth"].as_int() as usize;
+            let mut shape: Vec<Dim> = dims.into_iter().map(Dim::Known).collect();
+            shape.push(Dim::Known(depth));
+            Ok(Some(Type::Tensor { shape, dtype: DType::F32 }))
+        }
+    }
+}
+
+fn layout_rel(types: &[Type], attrs: &Attrs) -> RelResult {
+    match known_dims(&types[0])? {
+        None => Ok(None),
+        Some(d) => {
+            let src = attrs["src_layout"].as_str();
+            let dst = attrs["dst_layout"].as_str();
+            let dims: Vec<usize> = match (src, dst) {
+                ("NCHW", "NHWC") => vec![d[0], d[2], d[3], d[1]],
+                ("NHWC", "NCHW") => vec![d[0], d[3], d[1], d[2]],
+                ("NCHW", "NCHW4c") => vec![d[0], d[1] / 4, d[2], d[3], 4],
+                ("NCHW", "NCHW8c") => vec![d[0], d[1] / 8, d[2], d[3], 8],
+                ("NCHW4c", "NCHW") | ("NCHW8c", "NCHW") => {
+                    vec![d[0], d[1] * d[4], d[2], d[3]]
+                }
+                other => return Err(format!("unsupported layout transform {other:?}")),
+            };
+            Ok(Some(Type::Tensor {
+                shape: dims.into_iter().map(Dim::Known).collect(),
+                dtype: types[0].dtype().unwrap(),
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lookup;
+    use super::*;
+    use crate::ir::AttrValue;
+
+    #[test]
+    fn reshape_rel_infers() {
+        let op = lookup("reshape").unwrap();
+        let t = Type::tensor(vec![2, 6], DType::F32);
+        let attrs = ir::attrs(&[("newshape", AttrValue::IntVec(vec![3, -1]))]);
+        let out = (op.rel)(&[t], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![3, 4]));
+    }
+
+    #[test]
+    fn split_rel_tuple() {
+        let op = lookup("split").unwrap();
+        let t = Type::tensor(vec![2, 6], DType::F32);
+        let attrs = ir::attrs(&[
+            ("indices_or_sections", AttrValue::Int(3)),
+            ("axis", AttrValue::Int(1)),
+        ]);
+        let out = (op.rel)(&[t], &attrs).unwrap().unwrap();
+        match out {
+            Type::Tuple(ts) => {
+                assert_eq!(ts.len(), 3);
+                assert_eq!(ts[0].concrete_shape(), Some(vec![2, 2]));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn concat_rel_sums_axis() {
+        let op = lookup("concatenate").unwrap();
+        let a = Type::tensor(vec![2, 3], DType::F32);
+        let b = Type::tensor(vec![2, 5], DType::F32);
+        let attrs = ir::attrs(&[("axis", AttrValue::Int(1))]);
+        let out = (op.rel)(&[Type::Tuple(vec![a, b])], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![2, 8]));
+    }
+
+    #[test]
+    fn split_then_concat_eval() {
+        let sp = lookup("split").unwrap();
+        let attrs = ir::attrs(&[
+            ("indices_or_sections", AttrValue::Int(2)),
+            ("axis", AttrValue::Int(1)),
+        ]);
+        let x = Value::Tensor(Tensor::from_f32(vec![1, 4], vec![1., 2., 3., 4.]));
+        let parts = (sp.eval)(&[x], &attrs).unwrap();
+        assert_eq!(parts.tuple().len(), 2);
+        let cc = lookup("concatenate").unwrap();
+        let cattrs = ir::attrs(&[("axis", AttrValue::Int(1))]);
+        let back = (cc.eval)(&[parts], &cattrs).unwrap();
+        assert_eq!(back.tensor().as_f32(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn layout_transform_rel() {
+        let op = lookup("layout_transform").unwrap();
+        let t = Type::tensor(vec![1, 8, 4, 4], DType::F32);
+        let attrs = ir::attrs(&[
+            ("src_layout", AttrValue::Str("NCHW".into())),
+            ("dst_layout", AttrValue::Str("NCHW4c".into())),
+        ]);
+        let out = (op.rel)(&[t], &attrs).unwrap().unwrap();
+        assert_eq!(out.concrete_shape(), Some(vec![1, 2, 4, 4, 4]));
+    }
+}

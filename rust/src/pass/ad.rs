@@ -1,0 +1,366 @@
+//! Reverse-mode automatic differentiation as a source-code transformation
+//! (paper §4.2, Fig. 4).
+//!
+//! Every tensor-typed value is lifted to a pair `(T, Ref[T])` whose second
+//! component accumulates the partial derivative. A single backpropagator
+//! reference `Δ` holds a closure chain; each operator call composes its
+//! update closure `δ` onto `Δ` (`Δ := !Δ ∘ δ`), so executing `!Δ()` after
+//! seeding the output adjoint propagates gradients output-to-input. No
+//! delimited continuations required — closures + references suffice, and
+//! higher-order functions / control flow / ADTs / mutation work untouched
+//! because the transform is purely structural outside operator calls.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::ir::{
+    self, func, let_, op_call, proj, ref_new, ref_read, ref_write, tuple, var, Expr,
+    Function, Var, E,
+};
+use crate::op;
+
+struct AdCtx {
+    /// The backpropagator reference Δ.
+    delta: Var,
+}
+
+/// Expand `grad(f)`: produce a function with the same parameters that
+/// returns `(f(args), (d/darg_0, ..., d/darg_n))` (Type-Gradient rule).
+pub fn grad_expr(f: &E) -> Result<E, String> {
+    let function = match &**f {
+        Expr::Func(func) => func.clone(),
+        _ => return Err("grad expects a function expression".to_string()),
+    };
+    let params: Vec<Var> = function.params.iter().map(|(p, _)| p.clone()).collect();
+
+    // Fresh outer params (original tensor types erased — AD output is
+    // re-inferred afterwards).
+    let outer: Vec<Var> = params.iter().map(|p| Var::fresh(&p.name)).collect();
+
+    // Lift each param to a pair and substitute into the body.
+    let mut subst_map = BTreeMap::new();
+    let pairs: Vec<Var> = params
+        .iter()
+        .map(|p| Var::fresh(format!("{}_ad", p.name)))
+        .collect();
+    for (p, pv) in params.iter().zip(&pairs) {
+        subst_map.insert(p.clone(), var(pv));
+    }
+    let body = ir::subst(&function.body, &subst_map);
+
+    let delta = Var::fresh("bp");
+    let ctx = AdCtx { delta: delta.clone() };
+    let tbody = ad_term(&ctx, &body)?;
+
+    // Assemble:
+    // fn (outer...) {
+    //   let pair_i = (outer_i, ref(zeros_like(outer_i)));
+    //   let Δ = ref(fn () { () });
+    //   let out = tbody;
+    //   out.1 := ones_like(out.0);
+    //   (!Δ)();
+    //   (out.0, (!pair_0.1, ..., !pair_n.1))
+    // }
+    let out_v = Var::fresh("out");
+    let grads: Vec<E> = pairs.iter().map(|p| ref_read(proj(var(p), 1))).collect();
+    let result = tuple(vec![proj(var(&out_v), 0), tuple(grads)]);
+
+    let run_bp = let_(
+        Var::fresh("_"),
+        ir::call(ref_read(var(&delta)), vec![]),
+        result,
+    );
+    let seed = let_(
+        Var::fresh("_"),
+        ref_write(
+            proj(var(&out_v), 1),
+            op_call("ones_like", vec![proj(var(&out_v), 0)]),
+        ),
+        run_bp,
+    );
+    let mut inner = let_(out_v.clone(), tbody, seed);
+    inner = let_(
+        delta.clone(),
+        ref_new(func(vec![], ir::unit())),
+        inner,
+    );
+    for (outer_p, pair) in outer.iter().zip(&pairs).rev() {
+        inner = let_(
+            pair.clone(),
+            tuple(vec![
+                var(outer_p),
+                ref_new(op_call("zeros_like", vec![var(outer_p)])),
+            ]),
+            inner,
+        );
+    }
+    Ok(func(outer.into_iter().map(|p| (p, None)).collect(), inner))
+}
+
+/// The ADTerm transformation of Fig. 4.
+fn ad_term(ctx: &AdCtx, e: &E) -> Result<E, String> {
+    Ok(match &**e {
+        // Variables already hold transformed values.
+        Expr::Var(_) | Expr::Global(_) | Expr::Op(_) | Expr::Ctor(_) => e.clone(),
+        // Lit l -> (l, ref(zeros_like l))
+        Expr::Const(_) => tuple(vec![
+            e.clone(),
+            ref_new(op_call("zeros_like", vec![e.clone()])),
+        ]),
+        Expr::Tuple(es) => {
+            let ts: Result<Vec<_>, _> = es.iter().map(|x| ad_term(ctx, x)).collect();
+            tuple(ts?)
+        }
+        Expr::Proj(t, i) => proj(ad_term(ctx, t)?, *i),
+        Expr::Let { var: v, value, body, .. } => let_(
+            v.clone(),
+            ad_term(ctx, value)?,
+            ad_term(ctx, body)?,
+        ),
+        Expr::Func(f) => {
+            // Closure params receive transformed (pair) values at runtime;
+            // drop stale type annotations.
+            let params = f.params.iter().map(|(p, _)| (p.clone(), None)).collect();
+            let body = ad_term(ctx, &f.body)?;
+            func(params, body)
+        }
+        Expr::If { cond, then_, else_ } => ir::if_(
+            proj(ad_term(ctx, cond)?, 0),
+            ad_term(ctx, then_)?,
+            ad_term(ctx, else_)?,
+        ),
+        Expr::Match { scrut, arms } => {
+            let s = ad_term(ctx, scrut)?;
+            let as_: Result<Vec<_>, _> = arms
+                .iter()
+                .map(|(p, a)| ad_term(ctx, a).map(|a| (p.clone(), a)))
+                .collect();
+            ir::match_(s, as_?)
+        }
+        // Mutation is supported "for free" (paper §4.2).
+        Expr::RefNew(v) => ref_new(ad_term(ctx, v)?),
+        Expr::RefRead(r) => ref_read(ad_term(ctx, r)?),
+        Expr::RefWrite(r, v) => ref_write(ad_term(ctx, r)?, ad_term(ctx, v)?),
+        // Nested grad: expand first (enables higher-order gradients).
+        Expr::Grad(f) => {
+            let g = grad_expr(f)?;
+            ad_term(ctx, &g)?
+        }
+        Expr::Call { f, args, attrs } => match &**f {
+            Expr::Op(name) => ad_op_call(ctx, name, args, attrs)?,
+            Expr::Ctor(_) => {
+                let ts: Result<Vec<_>, _> = args.iter().map(|a| ad_term(ctx, a)).collect();
+                ir::call_attrs(f.clone(), ts?, attrs.clone())
+            }
+            _ => {
+                // Closure call: callee and args are transformed values.
+                let cf = ad_term(ctx, f)?;
+                let ts: Result<Vec<_>, _> = args.iter().map(|a| ad_term(ctx, a)).collect();
+                ir::call_attrs(cf, ts?, attrs.clone())
+            }
+        },
+    })
+}
+
+/// Fig. 4's operator-call case: the heart of the transform.
+fn ad_op_call(
+    ctx: &AdCtx,
+    name: &str,
+    args: &[E],
+    attrs: &ir::Attrs,
+) -> Result<E, String> {
+    let def = op::lookup(name).ok_or_else(|| format!("unknown operator {name}"))?;
+
+    // let a_i = ADTerm(arg_i);
+    let arg_vars: Vec<Var> = (0..args.len()).map(|i| Var::fresh(format!("a{i}"))).collect();
+    // let v = op(a_0.0, ..., a_n.0);
+    let raw_args: Vec<E> = arg_vars.iter().map(|a| proj(var(a), 0)).collect();
+    let v = Var::fresh("v");
+    let vbar = Var::fresh("vb");
+
+    // Build δ: fn () { g = !vbar; a_i.1 := !a_i.1 + grad_i; () }
+    let delta_body = if let Some(grad_rule) = def.grad {
+        let g = Var::fresh("g");
+        let grads = grad_rule(&raw_args, &var(&v), &var(&g), attrs);
+        if grads.len() != args.len() {
+            return Err(format!("grad rule for {name} returned {} grads for {} args",
+                grads.len(), args.len()));
+        }
+        let mut body: E = ir::unit();
+        for (a, gexpr) in arg_vars.iter().zip(grads).rev() {
+            let acc = ref_write(
+                proj(var(a), 1),
+                op_call("add", vec![ref_read(proj(var(a), 1)), gexpr]),
+            );
+            body = let_(Var::fresh("_"), acc, body);
+        }
+        let_(g.clone(), ref_read(var(&vbar)), body)
+    } else {
+        // Non-differentiable op (comparison, cast, argmax...): no updates.
+        ir::unit()
+    };
+    let delta_fn = func(vec![], delta_body);
+
+    // Δ := !Δ ∘ δ  — i.e. new Δ runs δ first, then the old chain.
+    let old = Var::fresh("old_bp");
+    let dvar = Var::fresh("d");
+    let compose = func(
+        vec![],
+        let_(
+            Var::fresh("_"),
+            ir::call(var(&dvar), vec![]),
+            ir::call(var(&old), vec![]),
+        ),
+    );
+
+    // Assemble the whole let chain, innermost first.
+    let result = tuple(vec![var(&v), var(&vbar)]);
+    let update = let_(
+        Var::fresh("_"),
+        ref_write(var(&ctx.delta), compose),
+        result,
+    );
+    let bind_old = let_(old.clone(), ref_read(var(&ctx.delta)), update);
+    let bind_delta = let_(dvar.clone(), delta_fn, bind_old);
+    let bind_vbar = let_(
+        vbar.clone(),
+        ref_new(op_call("zeros_like", vec![var(&v)])),
+        bind_delta,
+    );
+    let bind_v = let_(
+        v.clone(),
+        Arc::new(Expr::Call {
+            f: ir::op(name),
+            args: raw_args.clone(),
+            attrs: attrs.clone(),
+        }),
+        bind_vbar,
+    );
+    // Outermost: evaluate transformed args.
+    let mut out = bind_v;
+    for (avar, arg) in arg_vars.iter().zip(args).rev() {
+        out = let_(avar.clone(), ad_term(ctx, arg)?, out);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_expr, Value};
+    use crate::ir::{parse_expr, Module};
+    use crate::tensor::Tensor;
+
+    fn grad_of(src: &str, inputs: &[f32]) -> (f32, Vec<f32>) {
+        let m = Module::with_prelude();
+        let f = parse_expr(src).unwrap();
+        let g = grad_expr(&f).unwrap();
+        let args: Vec<E> = inputs.iter().map(|&x| ir::scalar(x)).collect();
+        let call = ir::call(g, args);
+        let out = eval_expr(&m, &call).unwrap();
+        let loss = out.tuple()[0].tensor().f32_value();
+        let grads: Vec<f32> = out.tuple()[1]
+            .tuple()
+            .iter()
+            .map(|v| v.tensor().f32_value())
+            .collect();
+        (loss, grads)
+    }
+
+    #[test]
+    fn grad_of_square() {
+        // d/dx x^2 = 2x at x=3 -> 6
+        let (loss, grads) = grad_of("fn (%x) { multiply(%x, %x) }", &[3.0]);
+        assert_eq!(loss, 9.0);
+        assert_eq!(grads, vec![6.0]);
+    }
+
+    #[test]
+    fn grad_of_identity_fig5() {
+        // Fig. 5's running example: grad of identity is 1.
+        let (loss, grads) = grad_of("fn (%x) { %x }", &[5.0]);
+        assert_eq!(loss, 5.0);
+        assert_eq!(grads, vec![1.0]);
+    }
+
+    #[test]
+    fn grad_two_args() {
+        // f(x, y) = x*y + x  => df/dx = y + 1, df/dy = x
+        let (loss, grads) =
+            grad_of("fn (%x, %y) { add(multiply(%x, %y), %x) }", &[2.0, 3.0]);
+        assert_eq!(loss, 8.0);
+        assert_eq!(grads, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn grad_through_let_sharing() {
+        // z = x + x; loss = z * z  => d/dx = 2z * 2 = 8x at x=1 -> 8
+        let (loss, grads) =
+            grad_of("fn (%x) { let %z = add(%x, %x); multiply(%z, %z) }", &[1.0]);
+        assert_eq!(loss, 4.0);
+        assert_eq!(grads, vec![8.0]);
+    }
+
+    #[test]
+    fn grad_through_control_flow() {
+        // f(x) = if x > 0 then x*x else -x : at 2 -> grad 4; at -3 -> grad -1
+        let src = "fn (%x) { if (greater(%x, 0f)) { multiply(%x, %x) } else { negative(%x) } }";
+        let (_, g1) = grad_of(src, &[2.0]);
+        assert_eq!(g1, vec![4.0]);
+        let (_, g2) = grad_of(src, &[-3.0]);
+        assert_eq!(g2, vec![-1.0]);
+    }
+
+    #[test]
+    fn grad_of_tanh_chain() {
+        // d/dx tanh(2x) = 2 * (1 - tanh(2x)^2)
+        let (_, grads) = grad_of("fn (%x) { tanh(multiply(2f, %x)) }", &[0.5]);
+        let t: f32 = 1.0f32.tanh();
+        assert!((grads[0] - 2.0 * (1.0 - t * t)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn grad_through_closure() {
+        // Higher-order: apply a locally-defined square function.
+        let (_, grads) = grad_of(
+            "fn (%x) { let %sq = fn (%y) { multiply(%y, %y) }; %sq(%sq(%x)) }",
+            &[2.0],
+        );
+        // d/dx x^4 = 4x^3 = 32
+        assert_eq!(grads, vec![32.0]);
+    }
+
+    #[test]
+    fn second_order_gradient() {
+        // g = grad(x^3) = (x^3, (3x^2,)); h = grad(fn x -> proj(g(x),1).0)
+        // d/dx 3x^2 = 6x at x=2 -> 12.
+        let m = Module::with_prelude();
+        let f = parse_expr("fn (%x) { multiply(%x, multiply(%x, %x)) }").unwrap();
+        let inner = grad_expr(&f).unwrap();
+        // fn (%y) { inner(%y).1.0 }
+        let y = Var::fresh("y");
+        let outer_f = func(
+            vec![(y.clone(), None)],
+            proj(proj(ir::call(inner, vec![var(&y)]), 1), 0),
+        );
+        let outer = grad_expr(&outer_f).unwrap();
+        let out = eval_expr(&m, &ir::call(outer, vec![ir::scalar(2.0)])).unwrap();
+        let second = out.tuple()[1].tuple()[0].tensor().f32_value();
+        assert!((second - 12.0).abs() < 1e-4, "got {second}");
+    }
+
+    #[test]
+    fn grad_vector_dense_like() {
+        // Vector case: f(x) = sum(x * x) over a 3-vector; grad = 2x.
+        let m = Module::with_prelude();
+        let f = parse_expr("fn (%x) { sum(multiply(%x, %x)) }").unwrap();
+        let g = grad_expr(&f).unwrap();
+        let x = Tensor::from_f32(vec![3], vec![1.0, -2.0, 0.5]);
+        let out = eval_expr(&m, &ir::call(g, vec![ir::constant(x)])).unwrap();
+        let grads = out.tuple()[1].tuple()[0].tensor().as_f32().to_vec();
+        assert_eq!(grads, vec![2.0, -4.0, 1.0]);
+        let loss = out.tuple()[0].tensor().f32_value();
+        assert!((loss - 5.25).abs() < 1e-6);
+        let _ = Value::unit();
+    }
+}

@@ -1,0 +1,271 @@
+//! Forward-mode AD via dual numbers (§4.2: "we also implemented a
+//! forward-mode AD algorithm using the traditional method of dual
+//! numbers"). Every tensor value becomes a `(primal, tangent)` pair; no
+//! references or backpropagators are needed, and the transform composes
+//! with reverse mode (both produce ordinary Relay functions), enabling
+//! e.g. Hessian-vector products for DARTS-style workloads.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{self, func, op_call, proj, tuple, var, AttrValue, Expr, Var, E};
+
+type R<T> = Result<T, String>;
+
+/// `jvp(f)`: for `f : fn(x_1..x_n) -> y`, build
+/// `fn(x_1..x_n, dx_1..dx_n) -> (y, dy)`.
+pub fn jvp_expr(f: &E) -> R<E> {
+    let function = match &**f {
+        Expr::Func(fun) => fun.clone(),
+        _ => return Err("jvp expects a function expression".into()),
+    };
+    let params: Vec<Var> = function.params.iter().map(|(p, _)| p.clone()).collect();
+    let primals: Vec<Var> = params.iter().map(|p| Var::fresh(&p.name)).collect();
+    let tangents: Vec<Var> = params.iter().map(|p| Var::fresh(format!("d{}", p.name))).collect();
+
+    // Substitute each param with a dual tuple var.
+    let duals: Vec<Var> = params.iter().map(|p| Var::fresh(format!("{}_dual", p.name))).collect();
+    let mut sub = BTreeMap::new();
+    for (p, d) in params.iter().zip(&duals) {
+        sub.insert(p.clone(), var(d));
+    }
+    let body = ir::subst(&function.body, &sub);
+    let tbody = dual_term(&body)?;
+
+    let mut inner = tbody;
+    for ((d, p), t) in duals.iter().zip(&primals).zip(&tangents).rev() {
+        inner = ir::let_(d.clone(), tuple(vec![var(p), var(t)]), inner);
+    }
+    let all_params: Vec<(Var, Option<ir::Type>)> = primals
+        .into_iter()
+        .chain(tangents)
+        .map(|p| (p, None))
+        .collect();
+    Ok(func(all_params, inner))
+}
+
+/// Structural dual-number transform.
+fn dual_term(e: &E) -> R<E> {
+    Ok(match &**e {
+        Expr::Var(_) | Expr::Global(_) | Expr::Op(_) | Expr::Ctor(_) => e.clone(),
+        Expr::Const(_) => tuple(vec![e.clone(), op_call("zeros_like", vec![e.clone()])]),
+        Expr::Tuple(es) => {
+            let ts: R<Vec<E>> = es.iter().map(dual_term).collect();
+            tuple(ts?)
+        }
+        Expr::Proj(t, i) => proj(dual_term(t)?, *i),
+        Expr::Let { var: v, value, body, .. } => {
+            ir::let_(v.clone(), dual_term(value)?, dual_term(body)?)
+        }
+        Expr::Func(f) => {
+            let params = f.params.iter().map(|(p, _)| (p.clone(), None)).collect();
+            func(params, dual_term(&f.body)?)
+        }
+        Expr::If { cond, then_, else_ } => {
+            ir::if_(proj(dual_term(cond)?, 0), dual_term(then_)?, dual_term(else_)?)
+        }
+        Expr::Match { scrut, arms } => {
+            let s = dual_term(scrut)?;
+            let arms: R<Vec<_>> = arms
+                .iter()
+                .map(|(p, a)| dual_term(a).map(|a| (p.clone(), a)))
+                .collect();
+            ir::match_(s, arms?)
+        }
+        Expr::RefNew(v) => ir::ref_new(dual_term(v)?),
+        Expr::RefRead(r) => ir::ref_read(dual_term(r)?),
+        Expr::RefWrite(r, v) => ir::ref_write(dual_term(r)?, dual_term(v)?),
+        Expr::Grad(g) => {
+            // Compose modes: expand reverse AD first, then dualize.
+            let rev = super::ad::grad_expr(g)?;
+            dual_term(&rev)?
+        }
+        Expr::Call { f, args, attrs } => match &**f {
+            Expr::Op(name) => {
+                let dargs: R<Vec<E>> = args.iter().map(dual_term).collect();
+                let dargs = dargs?;
+                // Bind each dual arg so primal/tangent can be used twice.
+                let avars: Vec<Var> =
+                    (0..dargs.len()).map(|i| Var::fresh(format!("fa{i}"))).collect();
+                let prim: Vec<E> = avars.iter().map(|a| proj(var(a), 0)).collect();
+                let tang: Vec<E> = avars.iter().map(|a| proj(var(a), 1)).collect();
+                let primal = ir::call_attrs(ir::op(name), prim.clone(), attrs.clone());
+                let pv = Var::fresh("pv");
+                let tangent = fwd_rule(name, &prim, &tang, &var(&pv), attrs)?;
+                let result = tuple(vec![var(&pv), tangent]);
+                let mut out = ir::let_(pv, primal, result);
+                for (a, d) in avars.into_iter().zip(dargs).rev() {
+                    out = ir::let_(a, d, out);
+                }
+                out
+            }
+            Expr::Ctor(_) => {
+                let dargs: R<Vec<E>> = args.iter().map(dual_term).collect();
+                ir::call_attrs(f.clone(), dargs?, attrs.clone())
+            }
+            _ => {
+                let df = dual_term(f)?;
+                let dargs: R<Vec<E>> = args.iter().map(dual_term).collect();
+                ir::call_attrs(df, dargs?, attrs.clone())
+            }
+        },
+    })
+}
+
+/// Forward derivative rules: tangent of `op(prim...)` given tangents.
+fn fwd_rule(name: &str, prim: &[E], tang: &[E], out: &E, attrs: &ir::Attrs) -> R<E> {
+    let t = |i: usize| tang[i].clone();
+    let p = |i: usize| prim[i].clone();
+    Ok(match name {
+        "add" => op_call("add", vec![t(0), t(1)]),
+        "subtract" => op_call("subtract", vec![t(0), t(1)]),
+        "multiply" => op_call(
+            "add",
+            vec![
+                op_call("multiply", vec![t(0), p(1)]),
+                op_call("multiply", vec![p(0), t(1)]),
+            ],
+        ),
+        "divide" => {
+            // (t0*y - x*t1) / y^2
+            let num = op_call(
+                "subtract",
+                vec![
+                    op_call("multiply", vec![t(0), p(1)]),
+                    op_call("multiply", vec![p(0), t(1)]),
+                ],
+            );
+            op_call("divide", vec![num, op_call("multiply", vec![p(1), p(1)])])
+        }
+        "negative" => op_call("negative", vec![t(0)]),
+        "exp" => op_call("multiply", vec![t(0), out.clone()]),
+        "log" => op_call("divide", vec![t(0), p(0)]),
+        "sqrt" => op_call(
+            "divide",
+            vec![t(0), op_call("multiply", vec![ir::scalar(2.0), out.clone()])],
+        ),
+        "tanh" => op_call(
+            "multiply",
+            vec![
+                t(0),
+                op_call(
+                    "subtract",
+                    vec![ir::scalar(1.0), op_call("multiply", vec![out.clone(), out.clone()])],
+                ),
+            ],
+        ),
+        "sigmoid" => op_call(
+            "multiply",
+            vec![
+                t(0),
+                op_call(
+                    "multiply",
+                    vec![out.clone(), op_call("subtract", vec![ir::scalar(1.0), out.clone()])],
+                ),
+            ],
+        ),
+        "nn.relu" => op_call(
+            "multiply",
+            vec![
+                t(0),
+                ir::op_call_attrs(
+                    "cast",
+                    vec![op_call("greater", vec![p(0), ir::scalar(0.0)])],
+                    ir::attrs(&[("dtype", AttrValue::Str("float32".into()))]),
+                ),
+            ],
+        ),
+        "matmul" => op_call(
+            "add",
+            vec![
+                op_call("matmul", vec![t(0), p(1)]),
+                op_call("matmul", vec![p(0), t(1)]),
+            ],
+        ),
+        "nn.dense" => op_call(
+            "add",
+            vec![
+                op_call("nn.dense", vec![t(0), p(1)]),
+                op_call("nn.dense", vec![p(0), t(1)]),
+            ],
+        ),
+        "sum" | "mean" | "reshape" | "transpose" | "nn.batch_flatten" => {
+            ir::call_attrs(ir::op(name), vec![t(0)], attrs.clone())
+        }
+        "nn.bias_add" => ir::call_attrs(ir::op(name), vec![t(0), t(1)], attrs.clone()),
+        // Linear shape ops: tangent follows the primal's second operand.
+        "broadcast_to_like" | "collapse_sum_like" | "reshape_like" => {
+            ir::call_attrs(ir::op(name), vec![t(0), p(1)], attrs.clone())
+        }
+        "mean_count_like" | "zeros_like" | "ones_like" => {
+            op_call("zeros_like", vec![out.clone()])
+        }
+        // Non-differentiable (comparisons etc.): zero tangent.
+        _ => op_call("zeros_like", vec![out.clone()]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_expr;
+    use crate::ir::{parse_expr, Module};
+
+    fn jvp_scalar(src: &str, x: f32, dx: f32) -> (f32, f32) {
+        let m = Module::with_prelude();
+        let f = parse_expr(src).unwrap();
+        let j = jvp_expr(&f).unwrap();
+        let call = ir::call(j, vec![ir::scalar(x), ir::scalar(dx)]);
+        let out = eval_expr(&m, &call).unwrap();
+        (
+            out.tuple()[0].tensor().f32_value(),
+            out.tuple()[1].tensor().f32_value(),
+        )
+    }
+
+    #[test]
+    fn jvp_of_square() {
+        let (y, dy) = jvp_scalar("fn (%x) { multiply(%x, %x) }", 3.0, 1.0);
+        assert_eq!(y, 9.0);
+        assert_eq!(dy, 6.0);
+    }
+
+    #[test]
+    fn jvp_direction_scales() {
+        let (_, dy) = jvp_scalar("fn (%x) { multiply(%x, %x) }", 3.0, 2.0);
+        assert_eq!(dy, 12.0);
+    }
+
+    #[test]
+    fn jvp_of_tanh_chain() {
+        let (_, dy) = jvp_scalar("fn (%x) { tanh(multiply(2f, %x)) }", 0.5, 1.0);
+        let t = 1.0f32.tanh();
+        assert!((dy - 2.0 * (1.0 - t * t)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn jvp_through_control_flow() {
+        let src = "fn (%x) { if (greater(%x, 0f)) { multiply(%x, %x) } else { negative(%x) } }";
+        let (_, d1) = jvp_scalar(src, 2.0, 1.0);
+        assert_eq!(d1, 4.0);
+        let (_, d2) = jvp_scalar(src, -3.0, 1.0);
+        assert_eq!(d2, -1.0);
+    }
+
+    #[test]
+    fn forward_over_reverse_second_order() {
+        // h(x) = d/dx (x^3) = 3x^2 via reverse; jvp of h gives 6x.
+        let m = Module::with_prelude();
+        let f = parse_expr("fn (%x) { multiply(%x, multiply(%x, %x)) }").unwrap();
+        let rev = crate::pass::ad::grad_expr(&f).unwrap();
+        // wrap: fn(y) { rev(y).1.0 }
+        let y = Var::fresh("y");
+        let h = func(
+            vec![(y.clone(), None)],
+            proj(proj(ir::call(rev, vec![var(&y)]), 1), 0),
+        );
+        let j = jvp_expr(&h).unwrap();
+        let out = eval_expr(&m, &ir::call(j, vec![ir::scalar(2.0), ir::scalar(1.0)])).unwrap();
+        let second = out.tuple()[1].tensor().f32_value();
+        assert!((second - 12.0).abs() < 1e-4, "got {second}");
+    }
+}

@@ -1,0 +1,199 @@
+//! AlterOpLayout (§5.2 -O3 item 2): change the data layout / implementation
+//! of convolutions for better cache behaviour.
+//!
+//! The paper's TVM backend switches conv2d to blocked NCHWc layouts; on
+//! this substrate the equivalent locality win is conv-as-GEMM: rewrite
+//! `nn.conv2d(x, W)` into `im2col(x) @ W_matrix` so the inner loops run
+//! through the cache-blocked matmul kernel instead of the direct
+//! convolution's strided accesses. Weights are reshaped at compile time
+//! (constant-folded away for constant weights).
+
+use crate::ir::{op_call_attrs, rewrite_postorder, AttrValue, Expr, Module, E};
+use crate::ty::TypeReport;
+
+/// Rewrite conv2d calls whose input/weight shapes are known in `report`.
+pub fn alter_op_layout(e: &E, report: &TypeReport) -> E {
+    rewrite_postorder(e, &mut |n| {
+        let (f, args, attrs) = match &**n {
+            Expr::Call { f, args, attrs } => (f, args, attrs),
+            _ => return None,
+        };
+        if !matches!(&**f, Expr::Op(name) if name == "nn.conv2d") {
+            return None;
+        }
+        let groups = attrs.get("groups").map(|v| v.as_int()).unwrap_or(1);
+        if groups != 1 {
+            return None; // grouped convs keep the direct kernel
+        }
+        // Need static shapes for both operands.
+        let x_shape = report.type_of(&args[0]).and_then(|t| t.concrete_shape());
+        let w_shape = match &*args[1] {
+            Expr::Const(t) => Some(t.shape().to_vec()),
+            _ => report.type_of(&args[1]).and_then(|t| t.concrete_shape()),
+        };
+        let (x_shape, w_shape) = match (x_shape, w_shape) {
+            (Some(a), Some(b)) => (a, b),
+            _ => return None,
+        };
+        let (n_, o, c, kh, kw) = (x_shape[0], w_shape[0], w_shape[1], w_shape[2], w_shape[3]);
+        let p = conv_params(attrs);
+        let (oh, ow) = crate::tensor::conv2d_out_hw(x_shape[2], x_shape[3], kh, kw, &p);
+
+        // patches: (N*OH*OW, C*KH*KW)
+        let mut im2col_attrs = attrs.clone();
+        im2col_attrs.insert(
+            "kernel_size".into(),
+            AttrValue::IntVec(vec![kh as i64, kw as i64]),
+        );
+        let patches = op_call_attrs("nn.im2col", vec![args[0].clone()], im2col_attrs);
+        // weight matrix: (O, C*KH*KW) -> transpose -> (C*KH*KW, O)
+        let wmat = op_call_attrs(
+            "reshape",
+            vec![args[1].clone()],
+            crate::ir::attrs(&[(
+                "newshape",
+                AttrValue::IntVec(vec![o as i64, (c * kh * kw) as i64]),
+            )]),
+        );
+        let wt = crate::ir::op_call("transpose", vec![wmat]);
+        let gemm = crate::ir::op_call("matmul", vec![patches, wt]);
+        // (N*OH*OW, O) -> (N, OH, OW, O) -> (N, O, OH, OW)
+        let r = op_call_attrs(
+            "reshape",
+            vec![gemm],
+            crate::ir::attrs(&[(
+                "newshape",
+                AttrValue::IntVec(vec![n_ as i64, oh as i64, ow as i64, o as i64]),
+            )]),
+        );
+        Some(op_call_attrs(
+            "transpose",
+            vec![r],
+            crate::ir::attrs(&[("axes", AttrValue::IntVec(vec![0, 3, 1, 2]))]),
+        ))
+    })
+}
+
+fn conv_params(attrs: &crate::ir::Attrs) -> crate::tensor::Conv2dParams {
+    let stride = attrs
+        .get("strides")
+        .map(|v| {
+            let s = v.as_int_vec();
+            (s[0] as usize, s[1] as usize)
+        })
+        .unwrap_or((1, 1));
+    let padding = attrs
+        .get("padding")
+        .map(|v| match v {
+            AttrValue::Int(p) => (*p as usize, *p as usize),
+            AttrValue::IntVec(p) => (p[0] as usize, p[1] as usize),
+            _ => (0, 0),
+        })
+        .unwrap_or((0, 0));
+    crate::tensor::Conv2dParams { stride, padding, groups: 1 }
+}
+
+/// Module-level driver: type-checks first (the pass needs shapes), then
+/// rewrites every def. Rewriting a conv invalidates the address-keyed type
+/// report for its consumers, so we iterate typecheck+rewrite to fixpoint —
+/// each round converts at least the earliest remaining conv.
+pub fn run(m: &Module) -> Result<Module, String> {
+    let mut cur = m.clone();
+    for _ in 0..64 {
+        let report = crate::ty::check_module(&cur).map_err(|e| e.to_string())?;
+        let next = cur.map_defs(|_, f| {
+            let mut nf = f.clone();
+            nf.body = alter_op_layout(&f.body, &report);
+            nf
+        });
+        let changed = next.defs.iter().any(|(name, f)| {
+            cur.def(name)
+                .map(|old| !crate::ir::alpha_eq(
+                    &std::sync::Arc::new(crate::ir::Expr::Func(old.clone())),
+                    &std::sync::Arc::new(crate::ir::Expr::Func(f.clone())),
+                ))
+                .unwrap_or(true)
+        });
+        cur = next;
+        if !changed {
+            break;
+        }
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_expr;
+    use crate::ir::{self, print_expr};
+    use crate::tensor::{Rng, Tensor};
+
+    #[test]
+    fn conv_becomes_gemm_and_matches() {
+        let mut rng = Rng::new(7);
+        let x = rng.normal_tensor(&[2, 3, 8, 8], 1.0);
+        let w = rng.normal_tensor(&[4, 3, 3, 3], 0.5);
+        let e = ir::op_call_attrs(
+            "nn.conv2d",
+            vec![ir::constant(x), ir::constant(w)],
+            ir::attrs(&[
+                ("padding", AttrValue::Int(1)),
+                ("strides", AttrValue::IntVec(vec![1, 1])),
+            ]),
+        );
+        let m = ir::Module::with_prelude();
+        let before = eval_expr(&m, &e).unwrap();
+
+        let report = crate::ty::infer_expr(&m, &e).unwrap().0;
+        let altered = alter_op_layout(&e, &report);
+        let s = print_expr(&altered);
+        assert!(s.contains("im2col"), "{s}");
+        assert!(s.contains("matmul"), "{s}");
+        assert!(!s.contains("nn.conv2d"), "{s}");
+
+        let after = eval_expr(&m, &altered).unwrap();
+        assert_eq!(after.tensor().shape(), before.tensor().shape());
+        assert!(
+            before.tensor().allclose(after.tensor(), 1e-3, 1e-3),
+            "max diff {}",
+            before.tensor().max_abs_diff(after.tensor())
+        );
+    }
+
+    #[test]
+    fn strided_conv_matches() {
+        let mut rng = Rng::new(8);
+        let x = rng.normal_tensor(&[1, 2, 9, 9], 1.0);
+        let w = rng.normal_tensor(&[5, 2, 3, 3], 0.5);
+        let e = ir::op_call_attrs(
+            "nn.conv2d",
+            vec![ir::constant(x), ir::constant(w)],
+            ir::attrs(&[
+                ("padding", AttrValue::Int(0)),
+                ("strides", AttrValue::IntVec(vec![2, 2])),
+            ]),
+        );
+        let m = ir::Module::with_prelude();
+        let before = eval_expr(&m, &e).unwrap();
+        let report = crate::ty::infer_expr(&m, &e).unwrap().0;
+        let after = eval_expr(&m, &alter_op_layout(&e, &report)).unwrap();
+        assert!(before.tensor().allclose(after.tensor(), 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn grouped_conv_untouched() {
+        let e = ir::op_call_attrs(
+            "nn.conv2d",
+            vec![
+                ir::constant(Tensor::ones(&[1, 2, 4, 4], crate::tensor::DType::F32)),
+                ir::constant(Tensor::ones(&[2, 1, 1, 1], crate::tensor::DType::F32)),
+            ],
+            ir::attrs(&[("groups", AttrValue::Int(2))]),
+        );
+        let m = ir::Module::with_prelude();
+        let report = crate::ty::infer_expr(&m, &e).unwrap().0;
+        let out = alter_op_layout(&e, &report);
+        assert!(print_expr(&out).contains("nn.conv2d"));
+    }
+}

@@ -1,0 +1,203 @@
+//! A-normal form conversion (used by the partial evaluator to keep effects
+//! ordered — §4.3 — and by the backends, which require operator arguments
+//! to be atoms).
+
+use std::sync::Arc;
+
+use crate::ir::{let_, var, Expr, Function, Var, E};
+
+/// Convert an expression to ANF: every non-atomic subexpression of a call,
+/// tuple, projection, etc. is let-bound first.
+///
+/// Arc-shared subtrees (the paper's §3.2.2 *implicit sharing* — zoo models
+/// build residual blocks by reusing the same node) are bound once per
+/// block via a pointer-keyed memo table, turning graph sharing into
+/// explicit `let` sharing instead of exponential duplication.
+pub fn to_anf(e: &E) -> E {
+    let mut ctx = Ctx { bindings: Vec::new(), memo: std::collections::HashMap::new() };
+    let body = anf_expr(e, &mut ctx, /*tail=*/ true);
+    wrap(ctx.bindings, body)
+}
+
+struct Ctx {
+    bindings: Vec<(Var, E)>,
+    /// Arc address -> atom already bound in this block (pure exprs only).
+    memo: std::collections::HashMap<usize, E>,
+}
+
+fn wrap(bindings: Vec<(Var, E)>, body: E) -> E {
+    bindings
+        .into_iter()
+        .rev()
+        .fold(body, |acc, (v, val)| let_(v, val, acc))
+}
+
+/// Return an atom for `e`, emitting bindings.
+fn atomize(e: &E, ctx: &mut Ctx) -> E {
+    let key = std::sync::Arc::as_ptr(e) as usize;
+    let sharable = crate::pass::purity::is_pure(e);
+    if sharable {
+        if let Some(atom) = ctx.memo.get(&key) {
+            return atom.clone();
+        }
+    }
+    let v = anf_expr(e, ctx, false);
+    let atom = if v.is_atomic() {
+        v
+    } else {
+        let fresh = Var::fresh("t");
+        ctx.bindings.push((fresh.clone(), v));
+        var(&fresh)
+    };
+    if sharable {
+        ctx.memo.insert(key, atom.clone());
+    }
+    atom
+}
+
+/// `tail` = this expression's value is returned directly (may stay compound).
+fn anf_expr(e: &E, ctx: &mut Ctx, tail: bool) -> E {
+    match &**e {
+        Expr::Var(_) | Expr::Global(_) | Expr::Const(_) | Expr::Op(_) | Expr::Ctor(_) => {
+            e.clone()
+        }
+        Expr::Let { var: v, value, body, .. } => {
+            let value = anf_expr(value, ctx, false);
+            ctx.bindings.push((v.clone(), value));
+            anf_expr(body, ctx, tail)
+        }
+        Expr::Call { f, args, attrs } => {
+            let f = match &**f {
+                Expr::Op(_) | Expr::Ctor(_) => f.clone(),
+                // Keep primitive (fused) callees in place: backends compile
+                // `(fn primitive ...)(args)` as one kernel node.
+                Expr::Func(func) if func.attrs.primitive => {
+                    anf_expr(f, ctx, false)
+                }
+                _ => atomize(f, ctx),
+            };
+            let args = args.iter().map(|a| atomize(a, ctx)).collect();
+            Arc::new(Expr::Call { f, args, attrs: attrs.clone() })
+        }
+        Expr::Tuple(es) => {
+            Arc::new(Expr::Tuple(es.iter().map(|x| atomize(x, ctx)).collect()))
+        }
+        Expr::Proj(t, i) => Arc::new(Expr::Proj(atomize(t, ctx), *i)),
+        Expr::If { cond, then_, else_ } => {
+            let cond = atomize(cond, ctx);
+            // Branches get their own binding scopes (they execute
+            // conditionally — hoisting would change effects).
+            Arc::new(Expr::If { cond, then_: to_anf(then_), else_: to_anf(else_) })
+        }
+        Expr::Match { scrut, arms } => {
+            let scrut = atomize(scrut, ctx);
+            let arms = arms.iter().map(|(p, a)| (p.clone(), to_anf(a))).collect();
+            Arc::new(Expr::Match { scrut, arms })
+        }
+        Expr::Func(f) => Arc::new(Expr::Func(Function {
+            params: f.params.clone(),
+            ret: f.ret.clone(),
+            body: to_anf(&f.body),
+            attrs: f.attrs.clone(),
+        })),
+        Expr::Grad(g) => Arc::new(Expr::Grad(atomize(g, ctx))),
+        Expr::RefNew(v) => Arc::new(Expr::RefNew(atomize(v, ctx))),
+        Expr::RefRead(r) => Arc::new(Expr::RefRead(atomize(r, ctx))),
+        Expr::RefWrite(r, v) => {
+            let r = atomize(r, ctx);
+            let v = atomize(v, ctx);
+            Arc::new(Expr::RefWrite(r, v))
+        }
+    }
+}
+
+/// Is the expression already in ANF? (test helper / pass invariant check)
+pub fn is_anf(e: &E) -> bool {
+    fn atoms_only(args: &[E]) -> bool {
+        args.iter().all(|a| a.is_atomic())
+    }
+    fn check(e: &E, tail: bool) -> bool {
+        match &**e {
+            Expr::Var(_) | Expr::Global(_) | Expr::Const(_) | Expr::Op(_) | Expr::Ctor(_) => true,
+            Expr::Let { value, body, .. } => check(value, false) && check(body, tail),
+            Expr::Call { f, args, .. } => {
+                (f.is_atomic()) && atoms_only(args)
+            }
+            Expr::Tuple(es) => atoms_only(es),
+            Expr::Proj(t, _) => t.is_atomic(),
+            Expr::If { cond, then_, else_ } => {
+                cond.is_atomic() && check(then_, true) && check(else_, true)
+            }
+            Expr::Match { scrut, arms } => {
+                scrut.is_atomic() && arms.iter().all(|(_, a)| check(a, true))
+            }
+            Expr::Func(f) => check(&f.body, true),
+            Expr::Grad(g) => g.is_atomic(),
+            Expr::RefNew(v) => v.is_atomic(),
+            Expr::RefRead(r) => r.is_atomic(),
+            Expr::RefWrite(r, v) => r.is_atomic() && v.is_atomic(),
+        }
+    }
+    check(e, true)
+}
+
+pub fn run(m: &crate::ir::Module) -> crate::ir::Module {
+    m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = to_anf(&f.body);
+        nf
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_expr, Value};
+    use crate::ir::{parse_expr, Module};
+
+    fn same_value(src: &str) {
+        let m = Module::with_prelude();
+        let e = parse_expr(src).unwrap();
+        let a = eval_expr(&m, &e).unwrap();
+        let n = to_anf(&e);
+        assert!(is_anf(&n), "not ANF: {}", crate::ir::print_expr(&n));
+        let b = eval_expr(&m, &n).unwrap();
+        match (&a, &b) {
+            (Value::Tensor(x), Value::Tensor(y)) => assert_eq!(x, y),
+            _ => {}
+        }
+    }
+
+    #[test]
+    fn nested_calls_flattened() {
+        same_value("add(multiply(2f, 3f), add(1f, 1f))");
+    }
+
+    #[test]
+    fn tuples_and_projections() {
+        same_value("(add(1f, 2f), 4f).0");
+    }
+
+    #[test]
+    fn if_branches_scoped() {
+        same_value("if (less(1f, 2f)) { add(1f, 1f) } else { multiply(2f, 2f) }");
+    }
+
+    #[test]
+    fn effects_stay_ordered() {
+        // The write must still happen before the read.
+        let m = Module::with_prelude();
+        let e = parse_expr("let %r = ref(1f); %r := add(!%r, 1f); !%r").unwrap();
+        let n = to_anf(&e);
+        let out = eval_expr(&m, &n).unwrap();
+        assert_eq!(out.tensor().f32_value(), 2.0);
+    }
+
+    #[test]
+    fn recursion_preserved() {
+        same_value(
+            "let %f = fn (%i) { if (greater(%i, 0f)) { %f(subtract(%i, 1f)) } else { %i } };\n\
+             %f(3f)",
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! CombineParallelConv2d (§4.6): fuse sibling convolutions that share an
+//! input (Inception-style blocks) into one wider convolution plus a split,
+//! reducing kernel-launch count.
+//!
+//! Pattern (over let chains): several `let %ci = nn.conv2d(%x, Wi)` with
+//! identical attrs and kernel HW, constant weights -> one
+//! `nn.conv2d(%x, concat(Wi))` followed by `split`, with each `%ci`
+//! replaced by the corresponding tuple projection.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::ir::{
+    constant, map_children, op_call_attrs, proj, AttrValue, Expr, Module, Var, E,
+};
+use crate::tensor::Tensor;
+
+pub fn combine_parallel_conv2d(e: &E) -> E {
+    match &**e {
+        Expr::Let { .. } => rewrite_chain(e),
+        _ => map_children(e, |c| combine_parallel_conv2d(c)),
+    }
+}
+
+struct ConvBinding {
+    var: Var,
+    weight: Tensor,
+    attrs: crate::ir::Attrs,
+}
+
+fn rewrite_chain(e: &E) -> E {
+    // Collect the let chain.
+    let mut bindings: Vec<(Var, Option<crate::ir::Type>, E)> = Vec::new();
+    let mut cur = e.clone();
+    loop {
+        match &*cur.clone() {
+            Expr::Let { var, ty, value, body } => {
+                bindings.push((var.clone(), ty.clone(), value.clone()));
+                cur = body.clone();
+            }
+            _ => break,
+        }
+    }
+    let tail = cur;
+
+    // Group conv bindings by (input var, attrs, kernel hw).
+    let mut groups: BTreeMap<(u32, String, usize, usize), Vec<ConvBinding>> = BTreeMap::new();
+    for (var, _, value) in &bindings {
+        if let Expr::Call { f, args, attrs } = &**value {
+            if matches!(&**f, Expr::Op(n) if n == "nn.conv2d") {
+                if let (Expr::Var(x), Expr::Const(w)) = (&*args[0], &*args[1]) {
+                    if w.shape().len() == 4 {
+                        let key = (
+                            x.id,
+                            format!("{attrs:?}"),
+                            w.shape()[2],
+                            w.shape()[3],
+                        );
+                        groups.entry(key).or_default().push(ConvBinding {
+                            var: var.clone(),
+                            weight: w.clone(),
+                            attrs: attrs.clone(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // For each group of >= 2, build the combined conv + split.
+    let mut replace: BTreeMap<u32, E> = BTreeMap::new(); // var id -> replacement expr
+    let mut emitted: Vec<(Var, E)> = Vec::new();
+    for ((xid, _, _, _), convs) in groups {
+        if convs.len() < 2 {
+            continue;
+        }
+        // channel counts must match on the input side; output channels must
+        // be equal for an even split (keep it simple: require equal O).
+        let o0 = convs[0].weight.shape()[0];
+        if !convs.iter().all(|c| c.weight.shape()[0] == o0)
+            || !convs
+                .iter()
+                .all(|c| c.weight.shape()[1..] == convs[0].weight.shape()[1..])
+        {
+            continue;
+        }
+        let big_w = crate::tensor::concat(
+            &convs.iter().map(|c| c.weight.clone()).collect::<Vec<_>>(),
+            0,
+        );
+        let xvar = Var { name: "x".into(), id: xid };
+        let combined_var = Var::fresh("combined_conv");
+        let combined = op_call_attrs(
+            "nn.conv2d",
+            vec![crate::ir::var(&xvar), constant(big_w)],
+            convs[0].attrs.clone(),
+        );
+        let split_var = Var::fresh("split");
+        let split = op_call_attrs(
+            "split",
+            vec![crate::ir::var(&combined_var)],
+            crate::ir::attrs(&[
+                ("indices_or_sections", AttrValue::Int(convs.len() as i64)),
+                ("axis", AttrValue::Int(1)),
+            ]),
+        );
+        emitted.push((combined_var, combined));
+        for (i, c) in convs.iter().enumerate() {
+            replace.insert(c.var.id, proj(crate::ir::var(&split_var), i));
+        }
+        emitted.push((split_var, split));
+    }
+
+    if replace.is_empty() {
+        // Nothing to do at this level; recurse into values and tail.
+        let mut out = map_children(&tail, |c| combine_parallel_conv2d(c));
+        if !matches!(&*tail, Expr::Let { .. }) {
+            out = combine_parallel_conv2d(&tail);
+        }
+        return bindings.into_iter().rev().fold(out, |acc, (v, ty, val)| {
+            Arc::new(Expr::Let {
+                var: v,
+                ty,
+                value: combine_parallel_conv2d(&val),
+                body: acc,
+            })
+        });
+    }
+
+    // Rebuild: emit combined bindings at the position of the first replaced
+    // conv; replaced convs become projections.
+    let mut out = combine_parallel_conv2d(&tail);
+    let mut emitted_done = false;
+    for (v, ty, val) in bindings.into_iter().rev() {
+        if let Some(repl) = replace.get(&v.id) {
+            out = Arc::new(Expr::Let { var: v, ty, value: repl.clone(), body: out });
+            continue;
+        }
+        out = Arc::new(Expr::Let {
+            var: v,
+            ty,
+            value: combine_parallel_conv2d(&val),
+            body: out,
+        });
+        let _ = emitted_done;
+    }
+    // Prepend combined conv + split bindings at the front (their only input
+    // is %x, bound further out).
+    for (v, val) in emitted.into_iter().rev() {
+        out = Arc::new(Expr::Let { var: v, ty: None, value: val, body: out });
+    }
+    out
+}
+
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = combine_parallel_conv2d(&f.body);
+        nf
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_expr, Value};
+    use crate::ir::{self, print_expr};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn inception_like_block_combined() {
+        let mut rng = Rng::new(3);
+        let w1 = rng.normal_tensor(&[4, 2, 3, 3], 0.5);
+        let w2 = rng.normal_tensor(&[4, 2, 3, 3], 0.5);
+        let x = Var::fresh("x");
+        // let %c1 = conv(x, w1); let %c2 = conv(x, w2); (c1, c2)
+        let attrs = ir::attrs(&[("padding", AttrValue::Int(1))]);
+        let body = ir::let_(
+            Var::fresh("c1_outer"),
+            ir::unit(),
+            ir::unit(),
+        );
+        let _ = body;
+        let c1 = Var::fresh("c1");
+        let c2 = Var::fresh("c2");
+        let e = ir::let_(
+            c1.clone(),
+            ir::op_call_attrs(
+                "nn.conv2d",
+                vec![ir::var(&x), ir::constant(w1.clone())],
+                attrs.clone(),
+            ),
+            ir::let_(
+                c2.clone(),
+                ir::op_call_attrs(
+                    "nn.conv2d",
+                    vec![ir::var(&x), ir::constant(w2.clone())],
+                    attrs.clone(),
+                ),
+                ir::tuple(vec![ir::var(&c1), ir::var(&c2)]),
+            ),
+        );
+        let f = ir::func(vec![(x.clone(), None)], e);
+
+        let combined = combine_parallel_conv2d(&f);
+        let s = print_expr(&combined);
+        assert_eq!(s.matches("nn.conv2d").count(), 1, "{s}");
+        assert!(s.contains("split"), "{s}");
+
+        // Numerics: run both on a random input.
+        let m = ir::Module::with_prelude();
+        let input = rng.normal_tensor(&[1, 2, 5, 5], 1.0);
+        let run = |fe: &E| -> Vec<Value> {
+            let call = ir::call(fe.clone(), vec![ir::constant(input.clone())]);
+            eval_expr(&m, &call).unwrap().tuple().to_vec()
+        };
+        let before = run(&f);
+        let after = run(&combined);
+        for (b, a) in before.iter().zip(&after) {
+            assert!(b.tensor().allclose(a.tensor(), 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn different_kernels_not_combined() {
+        let mut rng = Rng::new(4);
+        let w1 = rng.normal_tensor(&[4, 2, 3, 3], 0.5);
+        let w2 = rng.normal_tensor(&[4, 2, 1, 1], 0.5);
+        let x = Var::fresh("x");
+        let c1 = Var::fresh("c1");
+        let c2 = Var::fresh("c2");
+        let e = ir::let_(
+            c1.clone(),
+            ir::op_call("nn.conv2d", vec![ir::var(&x), ir::constant(w1)]),
+            ir::let_(
+                c2.clone(),
+                ir::op_call("nn.conv2d", vec![ir::var(&x), ir::constant(w2)]),
+                ir::tuple(vec![ir::var(&c1), ir::var(&c2)]),
+            ),
+        );
+        let f = ir::func(vec![(x, None)], e);
+        let out = combine_parallel_conv2d(&f);
+        assert_eq!(print_expr(&out).matches("nn.conv2d").count(), 2);
+    }
+}

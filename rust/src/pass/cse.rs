@@ -1,0 +1,112 @@
+//! Common-subexpression elimination over let-bound pure values (the
+//! CommonSubexprElim of the -O3 tier, §5.2).
+//!
+//! Walks let chains keeping a scope-stacked table from structural hash to
+//! the first variable bound to an alpha-equivalent pure value; later
+//! bindings are replaced by references to the first.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+use super::purity::is_pure;
+use crate::ir::{alpha_eq, map_children, structural_hash, var, Expr, Module, Var, E};
+
+pub fn cse(e: &E) -> E {
+    let mut table: HashMap<u64, Vec<(E, Var)>> = HashMap::new();
+    go(e, &mut table)
+}
+
+fn go(e: &E, table: &mut HashMap<u64, Vec<(E, Var)>>) -> E {
+    match &**e {
+        Expr::Let { var: v, ty, value, body } => {
+            let value = go(value, table);
+            if is_pure(&value) && !value.is_atomic() {
+                let h = structural_hash(&value);
+                if let Some(entries) = table.get(&h) {
+                    for (prev, pv) in entries {
+                        if alpha_eq(prev, &value) {
+                            // Replace v with pv in the body.
+                            let mut m = BTreeMap::new();
+                            m.insert(v.clone(), var(pv));
+                            let body = crate::ir::subst(&body.clone(), &m);
+                            return go(&body, table);
+                        }
+                    }
+                }
+                table.entry(h).or_default().push((value.clone(), v.clone()));
+                let body = go(body, table);
+                // Pop the entry on scope exit.
+                if let Some(entries) = table.get_mut(&structural_hash(&value)) {
+                    entries.pop();
+                }
+                return std::sync::Arc::new(Expr::Let {
+                    var: v.clone(),
+                    ty: ty.clone(),
+                    value,
+                    body,
+                });
+            }
+            let body = go(body, table);
+            std::sync::Arc::new(Expr::Let { var: v.clone(), ty: ty.clone(), value, body })
+        }
+        // Don't share across function boundaries (evaluation counts could
+        // change); start a fresh table inside.
+        Expr::Func(_) => map_children(e, |c| {
+            let mut inner = HashMap::new();
+            go(c, &mut inner)
+        }),
+        _ => map_children(e, |c| go(c, table)),
+    }
+}
+
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = cse(&f.body);
+        nf
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{parse_expr, print_expr};
+
+    #[test]
+    fn shares_identical_bindings() {
+        let e = parse_expr(
+            "fn (%x) {\n\
+               let %a = add(%x, 1f);\n\
+               let %b = add(%x, 1f);\n\
+               multiply(%a, %b)\n\
+             }",
+        )
+        .unwrap();
+        let out = super::super::dce::dce(&cse(&e));
+        let s = print_expr(&out);
+        // Only one add remains.
+        assert_eq!(s.matches("add(").count(), 1, "{s}");
+    }
+
+    #[test]
+    fn different_values_not_shared() {
+        let e = parse_expr(
+            "fn (%x) { let %a = add(%x, 1f); let %b = add(%x, 2f); multiply(%a, %b) }",
+        )
+        .unwrap();
+        let out = cse(&e);
+        let s = print_expr(&out);
+        assert_eq!(s.matches("add(").count(), 2, "{s}");
+    }
+
+    #[test]
+    fn impure_not_shared() {
+        let e = parse_expr(
+            "let %a = ref(1f); let %b = ref(1f); (!%a, !%b)",
+        )
+        .unwrap();
+        let out = cse(&e);
+        let s = print_expr(&out);
+        assert_eq!(s.matches("ref(").count(), 2, "{s}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Dead-code elimination: remove pure let bindings whose variable is never
+//! used. Run after AD + PE to crunch away the bindings the partial
+//! evaluator conservatively kept (paper Fig. 5's post-DCE step).
+
+use std::collections::BTreeSet;
+
+use super::purity::is_pure;
+use crate::ir::{free_vars, map_children, Expr, Module, Var, E};
+
+pub fn dce(e: &E) -> E {
+    // Iterate to fixpoint: removing one binding can make another dead.
+    let mut cur = e.clone();
+    loop {
+        let next = dce_once(&cur);
+        if std::sync::Arc::ptr_eq(&next, &cur) || crate::ir::alpha_eq(&next, &cur) {
+            return next;
+        }
+        cur = next;
+    }
+}
+
+fn dce_once(e: &E) -> E {
+    match &**e {
+        Expr::Let { var, ty, value, body } => {
+            let value = dce_once(value);
+            let body = dce_once(body);
+            let used: BTreeSet<Var> = free_vars(&body);
+            if !used.contains(var) && is_pure(&value) {
+                body
+            } else {
+                std::sync::Arc::new(Expr::Let {
+                    var: var.clone(),
+                    ty: ty.clone(),
+                    value,
+                    body,
+                })
+            }
+        }
+        _ => map_children(e, |c| dce_once(c)),
+    }
+}
+
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = dce(&f.body);
+        nf
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{parse_expr, print_expr};
+
+    #[test]
+    fn removes_unused_pure_binding() {
+        let e = parse_expr("let %x = add(1f, 2f); 5f").unwrap();
+        let out = dce(&e);
+        assert!(!print_expr(&out).contains("let"), "{}", print_expr(&out));
+    }
+
+    #[test]
+    fn keeps_used_binding() {
+        let e = parse_expr("let %x = add(1f, 2f); %x").unwrap();
+        let out = dce(&e);
+        assert!(print_expr(&out).contains("let"));
+    }
+
+    #[test]
+    fn keeps_impure_binding() {
+        let e = parse_expr("let %r = ref(1f); let %_ = %r := 2f; 5f").unwrap();
+        let out = dce(&e);
+        let s = print_expr(&out);
+        assert!(s.contains("ref("), "{s}");
+        assert!(s.contains(":="), "{s}");
+    }
+
+    #[test]
+    fn cascading_removal() {
+        // y depends on x; both dead.
+        let e = parse_expr("let %x = 1f; let %y = add(%x, 1f); 7f").unwrap();
+        let out = dce(&e);
+        assert!(!print_expr(&out).contains("let"), "{}", print_expr(&out));
+    }
+
+    #[test]
+    fn removes_inside_functions() {
+        let e = parse_expr("fn (%a) { let %dead = multiply(%a, 2f); %a }").unwrap();
+        let out = dce(&e);
+        assert!(!print_expr(&out).contains("dead"), "{}", print_expr(&out));
+    }
+}

@@ -1,0 +1,117 @@
+//! Constant folding: operator calls on constant tensors are evaluated at
+//! compile time with the interpreter (the -O2 tier of §5.2 — "using Relay's
+//! interpreter to evaluate away operations on constants").
+
+use crate::eval::value::Value;
+use crate::ir::{constant, Expr, Module, E};
+use crate::op;
+
+pub fn fold_constants(e: &E) -> E {
+    crate::ir::rewrite_postorder(e, &mut |n| match &**n {
+        Expr::Call { f, args, attrs } => {
+            let name = match &**f {
+                Expr::Op(name) => name,
+                _ => return None,
+            };
+            // Don't fold ops whose output should stay symbolic (constants
+            // with shape attrs are fine to fold; barriers are not).
+            if name == "copy" || name.starts_with("annotation.") {
+                return None;
+            }
+            let consts: Option<Vec<Value>> = args
+                .iter()
+                .map(|a| match &**a {
+                    Expr::Const(t) => Some(Value::Tensor(t.clone())),
+                    _ => None,
+                })
+                .collect();
+            let consts = consts?;
+            let def = op::lookup(name)?;
+            if let Some(ar) = def.arity {
+                if consts.len() != ar {
+                    return None;
+                }
+            }
+            match (def.eval)(&consts, attrs) {
+                Ok(Value::Tensor(t)) => Some(constant(t)),
+                Ok(Value::Tuple(vs)) => {
+                    let ts: Option<Vec<E>> = vs
+                        .into_iter()
+                        .map(|v| match v {
+                            Value::Tensor(t) => Some(constant(t)),
+                            _ => None,
+                        })
+                        .collect();
+                    ts.map(crate::ir::tuple)
+                }
+                _ => None,
+            }
+        }
+        // if on a constant guard folds to the taken branch.
+        Expr::If { cond, then_, else_ } => match &**cond {
+            Expr::Const(t) if t.dtype() == crate::tensor::DType::Bool => {
+                Some(if t.bool_value() { then_.clone() } else { else_.clone() })
+            }
+            _ => None,
+        },
+        // Projection of a tuple literal.
+        Expr::Proj(t, i) => match &**t {
+            Expr::Tuple(es) => es.get(*i).cloned(),
+            _ => None,
+        },
+        _ => None,
+    })
+}
+
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = fold_constants(&f.body);
+        nf
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{parse_expr, print_expr};
+
+    #[test]
+    fn folds_scalar_arithmetic() {
+        let e = parse_expr("add(multiply(2f, 3f), 4f)").unwrap();
+        let f = fold_constants(&e);
+        match &*f {
+            Expr::Const(t) => assert_eq!(t.f32_value(), 10.0),
+            other => panic!("not folded: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn folds_constant_if() {
+        let e = parse_expr("if (less(1f, 2f)) { 10f } else { 20f }").unwrap();
+        let f = fold_constants(&e);
+        match &*f {
+            Expr::Const(t) => assert_eq!(t.f32_value(), 10.0),
+            other => panic!("not folded: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn leaves_variables_alone() {
+        let e = parse_expr("fn (%x) { add(%x, add(1f, 2f)) }").unwrap();
+        let f = fold_constants(&e);
+        let s = print_expr(&f);
+        assert!(s.contains("3f"), "{s}");
+        assert!(s.contains("add(%x"), "{s}");
+    }
+
+    #[test]
+    fn folds_tuple_projection() {
+        let e = parse_expr("(1f, 2f).1").unwrap();
+        let f = fold_constants(&e);
+        match &*f {
+            Expr::Const(t) => assert_eq!(t.f32_value(), 2.0),
+            other => panic!("not folded: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! FoldScaleAxis (§4.6): fold constant channel-wise scales surrounding a
+//! convolution / dense layer into the weights. Required by accelerators
+//! like VTA that have no scalar multiplier — after this pass (plus
+//! constant folding) no standalone scale multiply remains.
+
+use crate::ir::{call_attrs, constant, op_call, rewrite_postorder, Expr, Module, E};
+use crate::tensor::Tensor;
+
+pub fn fold_scale_axis(e: &E) -> E {
+    rewrite_postorder(e, &mut |n| {
+        let (f, args) = match &**n {
+            Expr::Call { f, args, .. } => (f, args),
+            _ => return None,
+        };
+        if !matches!(&**f, Expr::Op(name) if name == "multiply") {
+            return None;
+        }
+        // multiply(conv_like(x, W_const), scale_const)  — either order.
+        let (producer, scale) = if is_const(&args[1]) {
+            (&args[0], &args[1])
+        } else if is_const(&args[0]) {
+            (&args[1], &args[0])
+        } else {
+            return None;
+        };
+        let scale_t = as_const(scale)?;
+        let (pf, pargs, pattrs) = match &**producer {
+            Expr::Call { f, args, attrs } => (f, args, attrs),
+            _ => return None,
+        };
+        let op_name = match &**pf {
+            Expr::Op(name) => name.as_str(),
+            _ => return None,
+        };
+        let w = as_const(pargs.get(1)?)?;
+        let new_w = match op_name {
+            "nn.conv2d" => {
+                // Scale must be per-output-channel: shapes (O,1,1), (1,O,1,1)
+                // or scalar.
+                let o = w.shape()[0];
+                let per_chan = scale_per_channel(&scale_t, o)?;
+                let wv = w.as_f32();
+                let block: usize = w.shape()[1..].iter().product();
+                let mut out = Vec::with_capacity(wv.len());
+                for oc in 0..o {
+                    let s = per_chan[oc];
+                    out.extend(wv[oc * block..(oc + 1) * block].iter().map(|v| v * s));
+                }
+                Tensor::from_f32(w.shape().to_vec(), out)
+            }
+            "nn.dense" => {
+                // w is (n, k); scale per output feature (n,) or scalar.
+                let nfeat = w.shape()[0];
+                let per = scale_per_channel(&scale_t, nfeat)?;
+                let wv = w.as_f32();
+                let k = w.shape()[1];
+                let mut out = Vec::with_capacity(wv.len());
+                for i in 0..nfeat {
+                    out.extend(wv[i * k..(i + 1) * k].iter().map(|v| v * per[i]));
+                }
+                Tensor::from_f32(w.shape().to_vec(), out)
+            }
+            _ => return None,
+        };
+        Some(call_attrs(
+            op_call(op_name, vec![]).as_call_f(),
+            vec![pargs[0].clone(), constant(new_w)],
+            pattrs.clone(),
+        ))
+    })
+}
+
+/// Extract per-channel scale factors; `None` if the scale is not a
+/// per-channel (or scalar) constant.
+fn scale_per_channel(scale: &Tensor, channels: usize) -> Option<Vec<f32>> {
+    let n = scale.numel();
+    if n == 1 {
+        return Some(vec![scale.get_f64(0) as f32; channels]);
+    }
+    if n == channels {
+        // Accept shapes (O,), (O,1,1), (1,O,1,1).
+        let nontrivial: Vec<usize> =
+            scale.shape().iter().cloned().filter(|&d| d != 1).collect();
+        if nontrivial == vec![channels] || nontrivial.is_empty() {
+            return Some(scale.to_f32_vec());
+        }
+    }
+    None
+}
+
+fn is_const(e: &E) -> bool {
+    matches!(&**e, Expr::Const(_))
+}
+
+fn as_const(e: &E) -> Option<Tensor> {
+    match &**e {
+        Expr::Const(t) => Some(t.clone()),
+        _ => None,
+    }
+}
+
+// Small helper so we can rebuild `op(...)` heads cleanly.
+trait AsCallF {
+    fn as_call_f(&self) -> E;
+}
+
+impl AsCallF for E {
+    fn as_call_f(&self) -> E {
+        match &**self {
+            Expr::Call { f, .. } => f.clone(),
+            _ => self.clone(),
+        }
+    }
+}
+
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = fold_scale_axis(&f.body);
+        nf
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_expr;
+    use crate::ir::{self, print_expr, Module, Var};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn folds_post_conv_scale() {
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(&[1, 2, 4, 4], 1.0);
+        let w = rng.normal_tensor(&[3, 2, 3, 3], 1.0);
+        let scale = Tensor::from_f32(vec![3, 1, 1], vec![0.5, 2.0, 1.5]);
+        let conv = ir::op_call_attrs(
+            "nn.conv2d",
+            vec![ir::constant(x), ir::constant(w)],
+            ir::attrs(&[("padding", ir::AttrValue::Int(1))]),
+        );
+        let e = ir::op_call("multiply", vec![conv, ir::constant(scale)]);
+        let m = Module::with_prelude();
+        let before = eval_expr(&m, &e).unwrap();
+        let folded = fold_scale_axis(&e);
+        assert!(!print_expr(&folded).contains("multiply"), "{}", print_expr(&folded));
+        let after = eval_expr(&m, &folded).unwrap();
+        assert!(before.tensor().allclose(after.tensor(), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn folds_dense_scale() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_tensor(&[2, 4], 1.0);
+        let w = rng.normal_tensor(&[3, 4], 1.0);
+        let scale = Tensor::from_f32(vec![3], vec![2.0, 0.5, 1.0]);
+        let dense = ir::op_call("nn.dense", vec![ir::constant(x), ir::constant(w)]);
+        let e = ir::op_call("multiply", vec![dense, ir::constant(scale)]);
+        let m = Module::with_prelude();
+        let before = eval_expr(&m, &e).unwrap();
+        let folded = fold_scale_axis(&e);
+        assert!(!print_expr(&folded).contains("multiply"));
+        let after = eval_expr(&m, &folded).unwrap();
+        assert!(before.tensor().allclose(after.tensor(), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn non_constant_scale_untouched() {
+        let sv = Var::fresh("s");
+        let conv = ir::op_call(
+            "nn.conv2d",
+            vec![
+                ir::constant(Tensor::zeros(&[1, 1, 2, 2], crate::tensor::DType::F32)),
+                ir::constant(Tensor::zeros(&[1, 1, 1, 1], crate::tensor::DType::F32)),
+            ],
+        );
+        let e = ir::op_call("multiply", vec![conv, ir::var(&sv)]);
+        let folded = fold_scale_axis(&e);
+        assert!(print_expr(&folded).contains("multiply"));
+    }
+
+    #[test]
+    fn non_channel_scale_untouched() {
+        // A full-tensor scale (wrong shape) must not fold.
+        let conv = ir::op_call(
+            "nn.conv2d",
+            vec![
+                ir::constant(Tensor::ones(&[1, 1, 2, 2], crate::tensor::DType::F32)),
+                ir::constant(Tensor::ones(&[2, 1, 1, 1], crate::tensor::DType::F32)),
+            ],
+        );
+        let scale = Tensor::ones(&[2, 2, 2], crate::tensor::DType::F32);
+        let e = ir::op_call("multiply", vec![conv, ir::constant(scale)]);
+        let folded = fold_scale_axis(&e);
+        assert!(print_expr(&folded).contains("multiply"));
+    }
+}

@@ -1,0 +1,481 @@
+//! Operator fusion (§4.4): group chains of operator calls into *primitive*
+//! functions that backends compile as single fused kernels.
+//!
+//! Extraction (§4.4.1): the def body is converted to ANF, giving one
+//! binding per operator call; the dataflow DAG over bindings is grouped by
+//! a union-find guided by the post-dominator condition — a producer joins
+//! its consumer's group only when *every* consumer lands in that same
+//! group (the producer's immediate post-dominator lies inside the group),
+//! which also handles diamond-shaped branches. Operator patterns constrain
+//! groups: at most one OutEWiseFusable anchor (conv/dense/matmul) per
+//! group, Injective ops fuse freely, Reductions may close a group, Opaque
+//! ops never fuse.
+//!
+//! Lowering happens in the backends: the interpreter executes a primitive
+//! function as one "kernel launch" (its op-call counter increments once),
+//! the graph runtime allocates one node, and the XLA backend compiles one
+//! module per primitive function (§4.4.2's "master schedule" role).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::anf::to_anf;
+use crate::ir::{
+    func, let_, map_children, var, Expr, FnAttrs, Function, Module, Var, E,
+};
+use crate::op::{self, OpPattern};
+
+struct Binding {
+    var: Var,
+    value: E,
+    pattern: Option<OpPattern>,
+    /// Var ids of op-binding arguments.
+    deps: Vec<usize>,
+}
+
+struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n).collect() }
+    }
+
+    fn find(&mut self, i: usize) -> usize {
+        if self.parent[i] != i {
+            let r = self.find(self.parent[i]);
+            self.parent[i] = r;
+            r
+        } else {
+            i
+        }
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra] = rb;
+        }
+    }
+}
+
+/// Fuse one (already-ANF) let chain.
+fn fuse_chain(e: &E) -> E {
+    // Bind an operator-call tail so it can participate in grouping.
+    let e = match &**e {
+        Expr::Call { f, .. } if matches!(&**f, Expr::Op(_)) => {
+            let v = Var::fresh("tail");
+            let_(v.clone(), e.clone(), var(&v))
+        }
+        Expr::Let { .. } => {
+            // Rebind the chain's final expression if it is an op call.
+            rebind_tail(e)
+        }
+        _ => e.clone(),
+    };
+    let e = &e;
+    // 1. Split the chain.
+    let mut bindings: Vec<Binding> = Vec::new();
+    let mut var_to_idx: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut cur = e.clone();
+    loop {
+        let next = match &*cur {
+            Expr::Let { var: v, value, body, .. } => {
+                let value = fuse_subexprs(value);
+                let pattern = op_pattern(&value);
+                let deps = match &*value {
+                    Expr::Call { args, .. } => args
+                        .iter()
+                        .filter_map(|a| match &**a {
+                            Expr::Var(av) => var_to_idx.get(&av.id).copied(),
+                            _ => None,
+                        })
+                        .collect(),
+                    _ => vec![],
+                };
+                var_to_idx.insert(v.id, bindings.len());
+                bindings.push(Binding { var: v.clone(), value, pattern, deps });
+                body.clone()
+            }
+            _ => break,
+        };
+        cur = next;
+    }
+    let tail = fuse_subexprs(&cur);
+
+    // 2. Consumers per binding. The tail and any non-op use counts as an
+    // external consumer (usize::MAX).
+    let n = bindings.len();
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, b) in bindings.iter().enumerate() {
+        if b.pattern.is_some() {
+            for &d in &b.deps {
+                consumers[d].push(i);
+            }
+        } else {
+            // Non-op binding: every var it references is externally used.
+            for v in crate::ir::free_vars(&b.value) {
+                if let Some(&d) = var_to_idx.get(&v.id) {
+                    consumers[d].push(usize::MAX);
+                }
+            }
+        }
+    }
+    for v in crate::ir::free_vars(&tail) {
+        if let Some(&d) = var_to_idx.get(&v.id) {
+            consumers[d].push(usize::MAX);
+        }
+    }
+
+    // 3. Group: merge producer into consumers' group when all consumers
+    // share one group and patterns allow. Iterate to fixpoint (handles
+    // diamonds whose join fuses first).
+    let mut uf = UnionFind::new(n);
+    loop {
+        let mut changed = false;
+        for i in (0..n).rev() {
+            let pat = match bindings[i].pattern {
+                Some(p) if p != OpPattern::Opaque => p,
+                _ => continue,
+            };
+            if consumers[i].is_empty() || consumers[i].contains(&usize::MAX) {
+                continue;
+            }
+            let groups: Vec<usize> = consumers[i].iter().map(|&c| uf.find(c)).collect();
+            let g0 = groups[0];
+            if !groups.iter().all(|&g| g == g0) {
+                continue;
+            }
+            if uf.find(i) == g0 {
+                continue;
+            }
+            // Consumers must all be fusable ops.
+            if !consumers[i].iter().all(|&c| {
+                matches!(
+                    bindings[c].pattern,
+                    Some(OpPattern::Injective)
+                        | Some(OpPattern::Reduction)
+                        | Some(OpPattern::OutEWiseFusable)
+                )
+            }) {
+                continue;
+            }
+            // Anchor constraint: at most one OutEWiseFusable per group;
+            // reductions only close groups (nothing fuses past them).
+            let group_members: Vec<usize> =
+                (0..n).filter(|&j| uf.find(j) == g0).collect();
+            let anchors = group_members
+                .iter()
+                .chain(std::iter::once(&i))
+                .filter(|&&j| bindings[j].pattern == Some(OpPattern::OutEWiseFusable))
+                .count();
+            if anchors > 1 {
+                continue;
+            }
+            // A reduction may not appear as a producer inside a group
+            // (it closes its own group).
+            if pat == OpPattern::Reduction {
+                continue;
+            }
+            uf.union(i, g0);
+            changed = true;
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // 4. Rebuild. Each group emits one binding at its last member, either
+    // the bare value (singleton non-op / opaque) or a primitive function
+    // call over the group's external inputs.
+    let mut group_members: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for i in 0..n {
+        group_members.entry(uf.find(i)).or_default().push(i);
+    }
+
+    let mut out = tail;
+    // Iterate bindings in reverse order, emitting groups at their last
+    // member.
+    for i in (0..n).rev() {
+        let root = uf.find(i);
+        let members = &group_members[&root];
+        let last = *members.iter().max().unwrap();
+        if i != last {
+            continue; // emitted with the group
+        }
+        if members.len() == 1 && bindings[i].pattern.is_none() {
+            // Plain (non-op) binding.
+            out = let_(bindings[i].var.clone(), bindings[i].value.clone(), out);
+            continue;
+        }
+        if members.len() == 1
+            && bindings[i].pattern == Some(OpPattern::Opaque)
+        {
+            out = let_(bindings[i].var.clone(), bindings[i].value.clone(), out);
+            continue;
+        }
+        // Build the primitive function for this group.
+        let member_vars: Vec<u32> = members.iter().map(|&j| bindings[j].var.id).collect();
+        // External inputs: free vars of member values not defined by members.
+        let mut inputs: Vec<Var> = Vec::new();
+        for &j in members {
+            for v in crate::ir::free_vars(&bindings[j].value) {
+                if !member_vars.contains(&v.id) && !inputs.contains(&v) {
+                    inputs.push(v);
+                }
+            }
+        }
+        // Fresh params mirroring inputs.
+        let params: Vec<Var> = inputs.iter().map(|v| Var::fresh(&v.name)).collect();
+        let mut sub: BTreeMap<Var, E> = BTreeMap::new();
+        for (iv, pv) in inputs.iter().zip(&params) {
+            sub.insert(iv.clone(), var(pv));
+        }
+        // Body: member bindings in order, returning the last member's var.
+        let mut body: E = var(&bindings[last].var);
+        for &j in members.iter().rev() {
+            body = let_(
+                bindings[j].var.clone(),
+                crate::ir::subst(&bindings[j].value, &sub),
+                body,
+            );
+        }
+        let mut fused = Function::new(params.into_iter().map(|p| (p, None)).collect(), body);
+        fused.attrs = FnAttrs { primitive: true };
+        let call = crate::ir::call(
+            Arc::new(Expr::Func(fused)),
+            inputs.iter().map(var).collect(),
+        );
+        out = let_(bindings[last].var.clone(), call, out);
+        // Emit any *non-member* bindings... (members are contiguous groups
+        // in dependency order; non-member bindings are emitted at their own
+        // index positions by this loop.)
+    }
+    out
+}
+
+/// Rebuild a let chain with its tail bound when the tail is an op call.
+fn rebind_tail(e: &E) -> E {
+    match &**e {
+        Expr::Let { var: v, ty, value, body } => Arc::new(Expr::Let {
+            var: v.clone(),
+            ty: ty.clone(),
+            value: value.clone(),
+            body: rebind_tail(body),
+        }),
+        Expr::Call { f, .. } if matches!(&**f, Expr::Op(_)) => {
+            let v = Var::fresh("tail");
+            let_(v.clone(), e.clone(), var(&v))
+        }
+        _ => e.clone(),
+    }
+}
+
+/// Pattern of a binding value if it is a direct operator call.
+fn op_pattern(value: &E) -> Option<OpPattern> {
+    match &**value {
+        Expr::Call { f, .. } => match &**f {
+            Expr::Op(name) => op::lookup(name).map(|d| d.pattern),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Recurse into nested functions / branches.
+fn fuse_subexprs(e: &E) -> E {
+    match &**e {
+        Expr::Func(f) if !f.attrs.primitive => {
+            let body = fuse_expr_anf(&f.body);
+            Arc::new(Expr::Func(Function {
+                params: f.params.clone(),
+                ret: f.ret.clone(),
+                body,
+                attrs: f.attrs.clone(),
+            }))
+        }
+        Expr::If { cond, then_, else_ } => Arc::new(Expr::If {
+            cond: cond.clone(),
+            then_: fuse_expr_anf(then_),
+            else_: fuse_expr_anf(else_),
+        }),
+        Expr::Match { scrut, arms } => Arc::new(Expr::Match {
+            scrut: scrut.clone(),
+            arms: arms.iter().map(|(p, a)| (p.clone(), fuse_expr_anf(a))).collect(),
+        }),
+        _ => map_children(e, |c| fuse_subexprs(c)),
+    }
+}
+
+/// ANF-convert then fuse a block.
+pub fn fuse_expr_anf(e: &E) -> E {
+    fuse_chain(&to_anf(e))
+}
+
+/// Fuse every definition in the module.
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|_, f| {
+        if f.attrs.primitive {
+            return f.clone();
+        }
+        let mut nf = f.clone();
+        nf.body = fuse_expr_anf(&f.body);
+        nf
+    })
+}
+
+/// Count primitive-function call sites (test/bench metric: "kernel
+/// launches" after fusion).
+pub fn count_kernel_calls(e: &E) -> usize {
+    let mut count = 0;
+    fn go(e: &E, count: &mut usize) {
+        match &**e {
+            Expr::Call { f, args, .. } => {
+                match &**f {
+                    Expr::Func(func) if func.attrs.primitive => *count += 1,
+                    Expr::Op(_) => *count += 1,
+                    _ => {}
+                }
+                go(f, count);
+                args.iter().for_each(|a| go(a, count));
+            }
+            Expr::Func(f) if f.attrs.primitive => {
+                // Don't count ops inside primitive bodies.
+                let _ = f;
+            }
+            _ => crate::ir::visit_children(e, |c| go(c, count)),
+        }
+    }
+    go(e, &mut count);
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_expr, eval_main, Value};
+    use crate::ir::{self, parse_expr, parse_module, print_expr};
+    use crate::tensor::Rng;
+
+    fn fused_fn_count(e: &E) -> usize {
+        let mut v = Vec::new();
+        crate::ir::collect(
+            e,
+            &|n| matches!(&**n, Expr::Func(f) if f.attrs.primitive),
+            &mut v,
+        );
+        v.len()
+    }
+
+    #[test]
+    fn chain_fuses_into_one_kernel() {
+        // dense -> add -> relu: one group anchored by dense.
+        let e = parse_expr(
+            "fn (%x: Tensor[(2, 4), float32], %w: Tensor[(8, 4), float32], %b: Tensor[(8), float32]) {\n\
+               nn.relu(add(nn.dense(%x, %w), %b))\n\
+             }",
+        )
+        .unwrap();
+        let fused = fuse_subexprs(&e);
+        assert_eq!(fused_fn_count(&fused), 1, "{}", print_expr(&fused));
+        assert_eq!(count_kernel_calls(&fused), 1);
+    }
+
+    #[test]
+    fn two_anchors_stay_separate() {
+        // dense -> dense: two groups (one anchor each).
+        let e = parse_expr(
+            "fn (%x: Tensor[(2, 4), float32], %w1: Tensor[(8, 4), float32], %w2: Tensor[(8, 8), float32]) {\n\
+               nn.dense(nn.dense(%x, %w1), %w2)\n\
+             }",
+        )
+        .unwrap();
+        let fused = fuse_subexprs(&e);
+        assert_eq!(fused_fn_count(&fused), 2, "{}", print_expr(&fused));
+    }
+
+    #[test]
+    fn diamond_fuses_completely() {
+        // x -> (exp, tanh) -> add: the join post-dominates both branches.
+        let e = parse_expr("fn (%x: Tensor[(4), float32]) { add(exp(%x), tanh(%x)) }")
+            .unwrap();
+        let fused = fuse_subexprs(&e);
+        assert_eq!(fused_fn_count(&fused), 1, "{}", print_expr(&fused));
+    }
+
+    #[test]
+    fn opaque_breaks_groups() {
+        // softmax is opaque: relu | softmax | relu -> 3 kernels (2 fused fns
+        // + 1 bare opaque call).
+        let e = parse_expr(
+            "fn (%x: Tensor[(2, 4), float32]) { nn.relu(nn.softmax(nn.relu(%x))) }",
+        )
+        .unwrap();
+        let fused = fuse_subexprs(&e);
+        assert_eq!(fused_fn_count(&fused), 2, "{}", print_expr(&fused));
+        assert_eq!(count_kernel_calls(&fused), 3);
+    }
+
+    #[test]
+    fn multi_consumer_not_absorbed_when_groups_differ() {
+        // y = relu(x) consumed by two different anchors: y cannot join both.
+        let e = parse_expr(
+            "fn (%x: Tensor[(4, 4), float32], %w1: Tensor[(4, 4), float32], %w2: Tensor[(4, 4), float32]) {\n\
+               let %y = nn.relu(%x);\n\
+               add(nn.dense(%y, %w1), nn.dense(%y, %w2))\n\
+             }",
+        )
+        .unwrap();
+        let fused = fuse_subexprs(&e);
+        // groups: relu alone OR fused with one?; two dense anchors; add
+        // joins one of the dense groups. Verify semantics + ≥2 groups.
+        assert!(fused_fn_count(&fused) >= 2, "{}", print_expr(&fused));
+        let m = ir::Module::with_prelude();
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(&[4, 4], 1.0);
+        let w1 = rng.normal_tensor(&[4, 4], 1.0);
+        let w2 = rng.normal_tensor(&[4, 4], 1.0);
+        let args = vec![
+            ir::constant(x.clone()),
+            ir::constant(w1.clone()),
+            ir::constant(w2.clone()),
+        ];
+        let before = eval_expr(&m, &ir::call(e, args.clone())).unwrap();
+        let after = eval_expr(&m, &ir::call(fused, args)).unwrap();
+        assert!(before.tensor().allclose(after.tensor(), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn fused_module_preserves_semantics() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 3, 6, 6), float32], %w: Tensor[(4, 3, 3, 3), float32]) {\n\
+               let %c = nn.conv2d(%x, %w, padding=1);\n\
+               let %r = nn.relu(%c);\n\
+               nn.max_pool2d(%r, pool_size=2)\n\
+             }",
+        )
+        .unwrap();
+        let fused = run(&m);
+        let mut rng = Rng::new(1);
+        let x = rng.normal_tensor(&[2, 3, 6, 6], 1.0);
+        let w = rng.normal_tensor(&[4, 3, 3, 3], 0.5);
+        let args = vec![Value::Tensor(x), Value::Tensor(w)];
+        let a = eval_main(&m, args.clone()).unwrap();
+        let b = eval_main(&fused, args).unwrap();
+        assert!(a.tensor().allclose(b.tensor(), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn reduction_closes_group() {
+        // relu -> sum: sum absorbs the injective producer, nothing fuses
+        // after the reduction.
+        let e = parse_expr(
+            "fn (%x: Tensor[(4), float32]) { add(sum(nn.relu(%x)), 1f) }",
+        )
+        .unwrap();
+        let fused = fuse_subexprs(&e);
+        // Groups: {relu, sum} and {add}: 2 primitive fns.
+        assert_eq!(fused_fn_count(&fused), 2, "{}", print_expr(&fused));
+    }
+}

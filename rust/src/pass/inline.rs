@@ -1,0 +1,109 @@
+//! Global inlining: replace `@f(args)` calls with the (alpha-refreshed)
+//! body of `@f`. Used before fusion so operator chains cross function
+//! boundaries, and by the AoT path which compiles one flat `@main`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::ir::{map_children, refresh, Expr, Function, Module, E};
+
+/// Inline all global calls in `e` up to `depth` levels (recursion-safe).
+pub fn inline_globals(m: &Module, e: &E, depth: usize) -> E {
+    if depth == 0 {
+        return e.clone();
+    }
+    let rebuilt = map_children(e, |c| inline_globals(m, c, depth));
+    match &*rebuilt {
+        Expr::Call { f, args, attrs } => {
+            if let Expr::Global(g) = &**f {
+                if let Some(def) = m.def(g) {
+                    // Don't inline self-recursive functions.
+                    if !calls_global(&def.body, g) && def.params.len() == args.len() {
+                        let fresh = refresh(&Arc::new(Expr::Func(def.clone())));
+                        if let Expr::Func(Function { params, body, .. }) = &*fresh {
+                            let mut sub = BTreeMap::new();
+                            for ((p, _), a) in params.iter().zip(args) {
+                                sub.insert(p.clone(), a.clone());
+                            }
+                            let inlined = crate::ir::subst(body, &sub);
+                            return inline_globals(m, &inlined, depth - 1);
+                        }
+                    }
+                }
+            }
+            let _ = attrs;
+            rebuilt
+        }
+        _ => rebuilt,
+    }
+}
+
+fn calls_global(e: &E, name: &str) -> bool {
+    let mut found = false;
+    crate::ir::collect(
+        e,
+        &|n| matches!(&**n, Expr::Global(g) if g == name),
+        &mut Vec::new(),
+    );
+    // collect() already walked; cheaper variant:
+    fn go(e: &E, name: &str, found: &mut bool) {
+        if *found {
+            return;
+        }
+        if matches!(&**e, Expr::Global(g) if g == name) {
+            *found = true;
+            return;
+        }
+        crate::ir::visit_children(e, |c| go(c, name, found));
+    }
+    go(e, name, &mut found);
+    found
+}
+
+/// Inline every non-main def into main; returns the new module.
+pub fn run(m: &Module) -> Module {
+    m.map_defs(|name, f| {
+        if name == "main" {
+            let mut nf = f.clone();
+            nf.body = inline_globals(m, &f.body, 8);
+            nf
+        } else {
+            f.clone()
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_main;
+    use crate::eval::Value;
+    use crate::ir::{parse_module, print_expr};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn inlines_simple_global() {
+        let m = parse_module(
+            "def @double(%x) { multiply(%x, 2f) }\n\
+             def @main(%x) { @double(@double(%x)) }",
+        )
+        .unwrap();
+        let out = run(&m);
+        let s = print_expr(&out.def("main").unwrap().body);
+        assert!(!s.contains("@double"), "{s}");
+        let r = eval_main(&out, vec![Value::Tensor(Tensor::scalar_f32(3.0))]).unwrap();
+        assert_eq!(r.tensor().f32_value(), 12.0);
+    }
+
+    #[test]
+    fn recursive_global_not_inlined() {
+        let m = parse_module(
+            "def @fact(%n) { if (greater(%n, 1f)) { multiply(%n, @fact(subtract(%n, 1f))) } else { 1f } }\n\
+             def @main(%n) { @fact(%n) }",
+        )
+        .unwrap();
+        let out = run(&m);
+        let s = print_expr(&out.def("main").unwrap().body);
+        assert!(s.contains("@fact"), "{s}");
+    }
+}

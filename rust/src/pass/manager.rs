@@ -1,0 +1,156 @@
+//! Pass manager (§3.1.2): sequences Relay-to-Relay passes, re-running type
+//! inference between passes to reject malformed output and repopulate
+//! shape information. Defines the -O0..-O3 tiers measured in Fig. 10.
+
+use crate::ir::Module;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    O0,
+    O1,
+    O2,
+    O3,
+}
+
+impl OptLevel {
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        Some(match s {
+            "O0" | "0" => OptLevel::O0,
+            "O1" | "1" => OptLevel::O1,
+            "O2" | "2" => OptLevel::O2,
+            "O3" | "3" => OptLevel::O3,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [OptLevel; 4] {
+        [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3]
+    }
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            OptLevel::O0 => "-O0",
+            OptLevel::O1 => "-O1",
+            OptLevel::O2 => "-O2",
+            OptLevel::O3 => "-O3",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A named module-to-module pass.
+pub struct Pass {
+    pub name: &'static str,
+    pub run: fn(&Module) -> Result<Module, String>,
+}
+
+/// The pass pipeline for an optimization level (§5.2):
+/// * -O0: none
+/// * -O1: operator fusion
+/// * -O2: + constant folding
+/// * -O3: + FoldScaleAxis, AlterOpLayout, CanonicalizeOps, CSE
+pub fn passes(level: OptLevel) -> Vec<Pass> {
+    let mut v: Vec<Pass> = Vec::new();
+    // Inlining runs at every level >= O1 so fusion sees whole chains.
+    if level >= OptLevel::O1 {
+        v.push(Pass { name: "Inline", run: |m| Ok(super::inline::run(m)) });
+    }
+    if level >= OptLevel::O3 {
+        v.push(Pass {
+            name: "CanonicalizeOps",
+            run: |m| Ok(super::canonicalize::run(m)),
+        });
+        v.push(Pass {
+            name: "FoldScaleAxis",
+            run: |m| Ok(super::fold_scale_axis::run(m)),
+        });
+        v.push(Pass {
+            name: "CombineParallelConv2d",
+            run: |m| Ok(super::combine_parallel_conv2d::run(m)),
+        });
+    }
+    if level >= OptLevel::O2 {
+        v.push(Pass { name: "FoldConstant", run: |m| Ok(super::fold_constant::run(m)) });
+    }
+    if level >= OptLevel::O3 {
+        v.push(Pass { name: "AlterOpLayout", run: super::alter_op_layout::run });
+        v.push(Pass { name: "FoldConstant2", run: |m| Ok(super::fold_constant::run(m)) });
+        v.push(Pass { name: "ToANF", run: |m| Ok(super::anf::run(m)) });
+        v.push(Pass { name: "CommonSubexprElim", run: |m| Ok(super::cse::run(m)) });
+        v.push(Pass { name: "DeadCodeElim", run: |m| Ok(super::dce::run(m)) });
+    }
+    if level >= OptLevel::O1 {
+        v.push(Pass { name: "FuseOps", run: |m| Ok(super::fusion::run(m)) });
+    }
+    v
+}
+
+/// Run the pipeline for `level`, type checking between passes
+/// ("Between each pass, Relay performs type inference and checking").
+pub fn optimize(m: &Module, level: OptLevel, typecheck: bool) -> Result<Module, String> {
+    let mut cur = m.clone();
+    for pass in passes(level) {
+        cur = (pass.run)(&cur).map_err(|e| format!("pass {}: {e}", pass.name))?;
+        if typecheck {
+            crate::ty::check_module(&cur)
+                .map_err(|e| format!("after pass {}: {e}", pass.name))?;
+        }
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_main, Value};
+    use crate::ir::parse_module;
+    use crate::tensor::{Rng, Tensor};
+
+    fn mlp_module() -> Module {
+        parse_module(
+            "def @main(%x: Tensor[(2, 4), float32]) {\n\
+               let %w1 = ones(shape=[8, 4]);\n\
+               let %h = nn.relu(nn.dense(%x, %w1));\n\
+               let %w2 = ones(shape=[2, 8]);\n\
+               nn.dense(%h, %w2)\n\
+             }",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tiers_are_ordered() {
+        assert!(OptLevel::O0 < OptLevel::O3);
+        assert_eq!(OptLevel::parse("2"), Some(OptLevel::O2));
+        assert!(passes(OptLevel::O0).is_empty());
+        assert!(passes(OptLevel::O3).len() > passes(OptLevel::O1).len());
+    }
+
+    #[test]
+    fn optimize_preserves_semantics_all_levels() {
+        let m = mlp_module();
+        let mut rng = Rng::new(5);
+        let x = rng.normal_tensor(&[2, 4], 1.0);
+        let reference = eval_main(&m, vec![Value::Tensor(x.clone())]).unwrap();
+        for level in OptLevel::all() {
+            let opt = optimize(&m, level, true).unwrap();
+            let out = eval_main(&opt, vec![Value::Tensor(x.clone())]).unwrap();
+            assert!(
+                reference.tensor().allclose(out.tensor(), 1e-3, 1e-3),
+                "level {level} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn o2_folds_weight_constants() {
+        // zeros/ones with const-foldable shapes become literal tensors.
+        let m = mlp_module();
+        let opt = optimize(&m, OptLevel::O2, true).unwrap();
+        let s = crate::ir::print_expr(&opt.def("main").unwrap().body);
+        assert!(!s.contains("ones("), "{s}");
+        let _ = Tensor::scalar_f32(0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Compiler passes (paper §3.1.2, §4): traditional optimizations, AD, the
+//! partial evaluator, fusion, quantization hooks, and the pass manager with
+//! the -O0..-O3 tiers of §5.2.
+
+pub mod ad;
+pub mod ad_fwd;
+pub mod alter_op_layout;
+pub mod anf;
+pub mod canonicalize;
+pub mod combine_parallel_conv2d;
+pub mod cse;
+pub mod dce;
+pub mod fold_constant;
+pub mod fold_scale_axis;
+pub mod fusion;
+pub mod inline;
+pub mod manager;
+pub mod partial_eval;
+pub mod purity;
+
+pub use ad::grad_expr;
+pub use manager::{optimize, OptLevel};

@@ -1,0 +1,618 @@
+//! Partial evaluation (§4.3 + appendix): an interpreter whose value domain
+//! is *partially static* values — each carries an optional static part and
+//! a dynamic (residual) atom. The store is reified and threaded through
+//! evaluation for flow-sensitive handling of references; output stays in
+//! ANF so effects remain correctly ordered. Unknown code (dynamic calls,
+//! dynamic branches) contaminates the store, which is then cleared.
+//!
+//! PE's primary client is the AD pass: it evaluates away the references
+//! and backpropagator closures AD introduces (Fig. 5's AD -> PE -> DCE
+//! pipeline), leaving first-order code that fusion can chew on.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::eval::value::Value;
+use crate::ir::{
+    let_, var, Expr, Function, Module, Pattern, Var, E,
+};
+use crate::op;
+use crate::tensor::Tensor;
+
+type PEnv = BTreeMap<u32, PValue>;
+
+/// Static part of a partially-static value (the appendix's `sValue`).
+#[derive(Clone)]
+enum SValue {
+    Tensor(Tensor),
+    Tuple(Vec<PValue>),
+    /// Non-recursive closure evaluated at PE time.
+    Fun { params: Vec<Var>, body: E, env: PEnv },
+    Ref(u64),
+    Adt { ctor: String, fields: Vec<PValue> },
+}
+
+/// The appendix's `pValue`: optional static part + residual atom.
+#[derive(Clone)]
+struct PValue {
+    stat: Option<SValue>,
+    dynv: E,
+}
+
+fn dynamic(e: E) -> PValue {
+    PValue { stat: None, dynv: e }
+}
+
+fn stat(s: SValue, e: E) -> PValue {
+    PValue { stat: Some(s), dynv: e }
+}
+
+struct Pe<'m> {
+    module: &'m Module,
+    bindings: Vec<(Var, E)>,
+    store: BTreeMap<u64, PValue>,
+    next_store: u64,
+    /// Remaining static function applications (prevents divergence on
+    /// recursive programs — beyond the fuel, calls residualize).
+    fuel: u32,
+}
+
+type R<T> = Result<T, String>;
+
+impl<'m> Pe<'m> {
+    fn new(module: &'m Module) -> Pe<'m> {
+        Pe { module, bindings: Vec::new(), store: BTreeMap::new(), next_store: 0, fuel: 512 }
+    }
+
+    /// Emit a residual binding, returning an atom.
+    fn push(&mut self, e: E) -> E {
+        if e.is_atomic() {
+            return e;
+        }
+        let v = Var::fresh("p");
+        self.bindings.push((v.clone(), e));
+        var(&v)
+    }
+
+    fn wrap(&mut self, from: usize, body: E) -> E {
+        let tail = self.bindings.split_off(from);
+        tail.into_iter().rev().fold(body, |acc, (v, val)| let_(v, val, acc))
+    }
+
+    fn clear_store(&mut self) {
+        self.store.clear();
+    }
+
+    fn peval(&mut self, e: &E, env: &PEnv) -> R<PValue> {
+        match &**e {
+            Expr::Var(v) => env
+                .get(&v.id)
+                .cloned()
+                .ok_or_else(|| format!("PE: unbound {v}")),
+            Expr::Global(_) => Ok(dynamic(e.clone())),
+            Expr::Const(t) => Ok(stat(SValue::Tensor(t.clone()), e.clone())),
+            Expr::Op(_) => Ok(dynamic(e.clone())),
+            Expr::Ctor(name) => {
+                match self.module.ctor_info(name) {
+                    Some((_, fields)) if fields.is_empty() => Ok(stat(
+                        SValue::Adt { ctor: name.clone(), fields: vec![] },
+                        e.clone(),
+                    )),
+                    _ => Ok(dynamic(e.clone())),
+                }
+            }
+            Expr::Tuple(es) => {
+                let ps: R<Vec<PValue>> = es.iter().map(|x| self.peval(x, env)).collect();
+                let ps = ps?;
+                let d = self.push(Arc::new(Expr::Tuple(
+                    ps.iter().map(|p| p.dynv.clone()).collect(),
+                )));
+                Ok(stat(SValue::Tuple(ps), d))
+            }
+            Expr::Proj(t, i) => {
+                let pt = self.peval(t, env)?;
+                match &pt.stat {
+                    Some(SValue::Tuple(ps)) =>
+
+                        ps.get(*i).cloned().ok_or_else(|| format!("PE: .{i} range")),
+                    _ => {
+                        let d = self.push(Arc::new(Expr::Proj(pt.dynv.clone(), *i)));
+                        Ok(dynamic(d))
+                    }
+                }
+            }
+            Expr::Let { var: v, value, body, .. } => {
+                // Recursive function lets stay dynamic (see fuel note).
+                let recursive = matches!(&**value, Expr::Func(_))
+                    && crate::ir::free_vars(value).contains(v);
+                let pv = if recursive {
+                    // Self-reference stays dynamic inside the body.
+                    let mut env_rec = env.clone();
+                    env_rec.insert(v.id, dynamic(var(v)));
+                    let resid = self.residualize_fn(value, &env_rec)?;
+                    let d = self.push_named(v, resid);
+                    dynamic(d)
+                } else {
+                    let p = self.peval(value, env)?;
+                    // Name the binding for readability of residual code.
+                    PValue { stat: p.stat, dynv: self.push_named(v, p.dynv) }
+                };
+                let mut env2 = env.clone();
+                env2.insert(v.id, pv);
+                self.peval(body, &env2)
+            }
+            Expr::Func(f) => {
+                let resid = self.residualize_fn(e, env)?;
+                let d = self.push(resid);
+                Ok(stat(
+                    SValue::Fun {
+                        params: f.params.iter().map(|(p, _)| p.clone()).collect(),
+                        body: f.body.clone(),
+                        env: env.clone(),
+                    },
+                    d,
+                ))
+            }
+            Expr::If { cond, then_, else_ } => {
+                let pc = self.peval(cond, env)?;
+                match &pc.stat {
+                    Some(SValue::Tensor(t)) if t.dtype() == crate::tensor::DType::Bool => {
+                        if t.bool_value() {
+                            self.peval(then_, env)
+                        } else {
+                            self.peval(else_, env)
+                        }
+                    }
+                    _ => {
+                        // Dynamic branch: PE each side in its own scope with
+                        // a copy of the store, then contaminate.
+                        let saved = self.store.clone();
+                        let from_t = self.bindings.len();
+                        let tv = self.peval(then_, env)?;
+                        let tbody = self.wrap(from_t, tv.dynv);
+                        self.store = saved.clone();
+                        let from_e = self.bindings.len();
+                        let ev = self.peval(else_, env)?;
+                        let ebody = self.wrap(from_e, ev.dynv);
+                        self.store = saved;
+                        self.clear_store();
+                        let d = self.push(Arc::new(Expr::If {
+                            cond: pc.dynv.clone(),
+                            then_: tbody,
+                            else_: ebody,
+                        }));
+                        Ok(dynamic(d))
+                    }
+                }
+            }
+            Expr::Match { scrut, arms } => {
+                let ps = self.peval(scrut, env)?;
+                if let Some(SValue::Adt { ctor, fields }) = &ps.stat {
+                    for (p, a) in arms {
+                        let mut env2 = env.clone();
+                        if match_static(p, ctor, fields, &ps, &mut env2) {
+                            return self.peval(a, &env2);
+                        }
+                    }
+                    return Err("PE: non-exhaustive static match".into());
+                }
+                // Dynamic scrutinee.
+                let mut new_arms = Vec::new();
+                let saved = self.store.clone();
+                for (p, a) in arms {
+                    let mut env2 = env.clone();
+                    for bv in p.bound_vars() {
+                        env2.insert(bv.id, dynamic(var(&bv)));
+                    }
+                    self.store = saved.clone();
+                    let from = self.bindings.len();
+                    let av = self.peval(a, &env2)?;
+                    let abody = self.wrap(from, av.dynv);
+                    new_arms.push((p.clone(), abody));
+                }
+                self.store = saved;
+                self.clear_store();
+                let d = self.push(Arc::new(Expr::Match {
+                    scrut: ps.dynv.clone(),
+                    arms: new_arms,
+                }));
+                Ok(dynamic(d))
+            }
+            Expr::Grad(f) => {
+                // Expand AD then partially evaluate the result: the Fig. 5
+                // pipeline happens transparently.
+                let g = super::ad::grad_expr(f)?;
+                self.peval(&g, env)
+            }
+            Expr::RefNew(v) => {
+                let pv = self.peval(v, env)?;
+                let id = self.next_store;
+                self.next_store += 1;
+                self.store.insert(id, pv.clone());
+                let d = self.push(Arc::new(Expr::RefNew(pv.dynv.clone())));
+                Ok(stat(SValue::Ref(id), d))
+            }
+            Expr::RefRead(r) => {
+                let pr = self.peval(r, env)?;
+                if let Some(SValue::Ref(id)) = &pr.stat {
+                    if let Some(v) = self.store.get(id) {
+                        return Ok(v.clone());
+                    }
+                }
+                let d = self.push(Arc::new(Expr::RefRead(pr.dynv.clone())));
+                Ok(dynamic(d))
+            }
+            Expr::RefWrite(r, v) => {
+                let pr = self.peval(r, env)?;
+                let pv = self.peval(v, env)?;
+                self.push(Arc::new(Expr::RefWrite(pr.dynv.clone(), pv.dynv.clone())));
+                match &pr.stat {
+                    Some(SValue::Ref(id)) => {
+                        self.store.insert(*id, pv);
+                    }
+                    _ => self.clear_store(),
+                }
+                Ok(stat(SValue::Tuple(vec![]), crate::ir::unit()))
+            }
+            Expr::Call { f, args, attrs } => {
+                let pargs: R<Vec<PValue>> =
+                    args.iter().map(|a| self.peval(a, env)).collect();
+                let pargs = pargs?;
+                match &**f {
+                    Expr::Op(name) => {
+                        // All-static tensor args: fold at PE time.
+                        let statics: Option<Vec<Value>> = pargs
+                            .iter()
+                            .map(|p| match &p.stat {
+                                Some(SValue::Tensor(t)) => Some(Value::Tensor(t.clone())),
+                                _ => None,
+                            })
+                            .collect();
+                        if let (Some(vals), Some(def)) = (statics, op::lookup(name)) {
+                            if let Ok(Value::Tensor(t)) = (def.eval)(&vals, attrs) {
+                                let c = crate::ir::constant(t.clone());
+                                return Ok(stat(SValue::Tensor(t), c));
+                            }
+                        }
+                        let d = self.push(Arc::new(Expr::Call {
+                            f: f.clone(),
+                            args: pargs.iter().map(|p| p.dynv.clone()).collect(),
+                            attrs: attrs.clone(),
+                        }));
+                        Ok(dynamic(d))
+                    }
+                    Expr::Ctor(name) => {
+                        let d = self.push(Arc::new(Expr::Call {
+                            f: f.clone(),
+                            args: pargs.iter().map(|p| p.dynv.clone()).collect(),
+                            attrs: attrs.clone(),
+                        }));
+                        Ok(stat(
+                            SValue::Adt { ctor: name.clone(), fields: pargs },
+                            d,
+                        ))
+                    }
+                    _ => {
+                        let pf = self.peval(f, env)?;
+                        if let Some(SValue::Fun { params, body, env: fenv }) = &pf.stat {
+                            if self.fuel > 0 && params.len() == pargs.len() {
+                                self.fuel -= 1;
+                                let mut env2 = fenv.clone();
+                                for (p, a) in params.iter().zip(&pargs) {
+                                    env2.insert(p.id, a.clone());
+                                }
+                                let body = body.clone();
+                                return self.peval(&body, &env2);
+                            }
+                        }
+                        // Unknown call: contaminate the store.
+                        self.clear_store();
+                        let d = self.push(Arc::new(Expr::Call {
+                            f: pf.dynv.clone(),
+                            args: pargs.iter().map(|p| p.dynv.clone()).collect(),
+                            attrs: attrs.clone(),
+                        }));
+                        Ok(dynamic(d))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Emit a named binding (reuses the source variable for readability).
+    fn push_named(&mut self, v: &Var, e: E) -> E {
+        if e.is_atomic() {
+            return e;
+        }
+        self.bindings.push((v.clone(), e));
+        var(v)
+    }
+
+    /// Residualize a function: PE its body under dynamic params with a
+    /// fresh (empty) store — the appendix's `Abs` case.
+    fn residualize_fn(&mut self, e: &E, env: &PEnv) -> R<E> {
+        let f = match &**e {
+            Expr::Func(f) => f,
+            _ => return Err("residualize_fn on non-function".into()),
+        };
+        let mut env2 = env.clone();
+        for (p, _) in &f.params {
+            env2.insert(p.id, dynamic(var(p)));
+        }
+        let saved_store = std::mem::take(&mut self.store);
+        let from = self.bindings.len();
+        let bv = self.peval(&f.body, &env2)?;
+        let body = self.wrap(from, bv.dynv);
+        self.store = saved_store;
+        Ok(Arc::new(Expr::Func(Function {
+            params: f.params.clone(),
+            ret: f.ret.clone(),
+            body,
+            attrs: f.attrs.clone(),
+        })))
+    }
+}
+
+fn match_static(
+    p: &Pattern,
+    ctor: &str,
+    fields: &[PValue],
+    whole: &PValue,
+    env: &mut PEnv,
+) -> bool {
+    match p {
+        Pattern::Wildcard => true,
+        Pattern::Var(v) => {
+            env.insert(v.id, whole.clone());
+            true
+        }
+        Pattern::Ctor(name, ps) => {
+            if name != ctor {
+                return false;
+            }
+            if ps.is_empty() {
+                return true;
+            }
+            if ps.len() != fields.len() {
+                return false;
+            }
+            ps.iter().zip(fields).all(|(sp, f)| match &f.stat {
+                Some(SValue::Adt { ctor: c2, fields: f2 }) => {
+                    match_static(sp, c2, f2, f, env)
+                }
+                _ => match sp {
+                    Pattern::Wildcard => true,
+                    Pattern::Var(v) => {
+                        env.insert(v.id, f.clone());
+                        true
+                    }
+                    _ => false,
+                },
+            })
+        }
+        Pattern::Tuple(_) => false,
+    }
+}
+
+/// Partially evaluate an expression (usually a function).
+pub fn partial_eval(module: &Module, e: &E) -> Result<E, String> {
+    let mut pe = Pe::new(module);
+    match &**e {
+        Expr::Func(_) => pe.residualize_fn(e, &PEnv::new()),
+        _ => {
+            let v = pe.peval(e, &PEnv::new())?;
+            Ok(pe.wrap(0, v.dynv))
+        }
+    }
+}
+
+/// Dead-reference elimination: remove `ref` bindings that are only ever
+/// written (never read, never escaping), together with their writes. This
+/// is the cleanup that lets DCE crunch AD->PE output down to Fig. 5's
+/// post-DCE form. Iterates to fixpoint (a removed write can orphan another
+/// ref).
+pub fn eliminate_dead_refs(e: &E) -> E {
+    let mut cur = e.clone();
+    loop {
+        let next = eliminate_dead_refs_once(&cur);
+        if crate::ir::structural_hash(&next) == crate::ir::structural_hash(&cur) {
+            return next;
+        }
+        cur = next;
+    }
+}
+
+fn eliminate_dead_refs_once(e: &E) -> E {
+    use std::collections::BTreeSet;
+    // Find let-bound RefNew vars.
+    fn ref_vars(e: &E, out: &mut Vec<Var>) {
+        if let Expr::Let { var, value, .. } = &**e {
+            if matches!(&**value, Expr::RefNew(_)) {
+                out.push(var.clone());
+            }
+        }
+        crate::ir::visit_children(e, |c| ref_vars(c, out));
+    }
+    // A ref var is dead if every occurrence is as the target of a write.
+    fn non_write_uses(e: &E, v: &Var, count: &mut usize) {
+        match &**e {
+            Expr::RefWrite(r, val) => {
+                if !matches!(&**r, Expr::Var(rv) if rv == v) {
+                    non_write_uses(r, v, count);
+                }
+                non_write_uses(val, v, count);
+            }
+            Expr::Var(x) if x == v => *count += 1,
+            Expr::Let { var, value, body, .. } if var == v => {
+                // The binding itself (skip); value may still use it.
+                let _ = var;
+                non_write_uses(value, v, count);
+                non_write_uses(body, v, count);
+            }
+            _ => crate::ir::visit_children(e, |c| non_write_uses(c, v, count)),
+        }
+    }
+    let mut rvars = Vec::new();
+    ref_vars(e, &mut rvars);
+    let mut dead: BTreeSet<u32> = BTreeSet::new();
+    for v in &rvars {
+        let mut uses = 0;
+        // Count uses in the whole tree minus the defining binding's value.
+        non_write_uses(e, v, &mut uses);
+        // One "use" is the binding body reference... count only reads:
+        if uses == 0 {
+            dead.insert(v.id);
+        }
+    }
+    if dead.is_empty() {
+        return e.clone();
+    }
+    // Remove writes to dead refs and their bindings.
+    fn strip(e: &E, dead: &BTreeSet<u32>) -> E {
+        match &**e {
+            Expr::Let { var, ty, value, body } => {
+                let body = strip(body, dead);
+                if dead.contains(&var.id) && matches!(&**value, Expr::RefNew(_)) {
+                    return body;
+                }
+                let value = strip(value, dead);
+                // A binding whose value was a now-removed write becomes unit.
+                Arc::new(Expr::Let {
+                    var: var.clone(),
+                    ty: ty.clone(),
+                    value,
+                    body,
+                })
+            }
+            Expr::RefWrite(r, _) => match &**r {
+                Expr::Var(v) if dead.contains(&v.id) => crate::ir::unit(),
+                _ => crate::ir::map_children(e, |c| strip(c, dead)),
+            },
+            _ => crate::ir::map_children(e, |c| strip(c, dead)),
+        }
+    }
+    strip(e, &dead)
+}
+
+/// The Fig. 5 pipeline: AD -> PE -> (DCE <-> dead-ref elim to fixpoint).
+pub fn ad_pe_dce(module: &Module, f: &E) -> Result<E, String> {
+    let g = super::ad::grad_expr(f)?;
+    let p = partial_eval(module, &g)?;
+    Ok(cleanup(&p))
+}
+
+/// Alternate DCE and dead-ref elimination until stable (DCE removes the
+/// pure consumers that keep a ref's var alive; dead-ref elim then removes
+/// the ref and its writes, exposing more dead code).
+pub fn cleanup(e: &E) -> E {
+    let mut cur = e.clone();
+    loop {
+        let next = eliminate_dead_refs(&super::dce::dce(&cur));
+        if crate::ir::structural_hash(&next) == crate::ir::structural_hash(&cur) {
+            return next;
+        }
+        cur = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_expr;
+    use crate::ir::{self, count_nodes, parse_expr, print_expr};
+
+    fn pe(src: &str) -> E {
+        let m = Module::with_prelude();
+        let e = parse_expr(src).unwrap();
+        partial_eval(&m, &e).unwrap()
+    }
+
+    #[test]
+    fn folds_static_arithmetic() {
+        let out = pe("add(multiply(2f, 3f), 4f)");
+        let s = print_expr(&out);
+        assert!(s.contains("10f"), "{s}");
+    }
+
+    #[test]
+    fn static_closure_applied() {
+        let out = pe("let %f = fn (%x) { add(%x, 1f) }; %f(2f)");
+        let s = print_expr(&super::super::dce::dce(&out));
+        assert!(s.contains("3f"), "{s}");
+        assert!(!s.contains("fn ("), "{s}");
+    }
+
+    #[test]
+    fn static_if_taken() {
+        let out = pe("if (less(1f, 2f)) { 10f } else { 20f }");
+        assert!(print_expr(&out).contains("10f"));
+        assert!(!print_expr(&out).contains("20f"));
+    }
+
+    #[test]
+    fn static_ref_reads_resolved() {
+        // The read resolves statically even though the ref stays residual.
+        let out = pe("let %r = ref(1f); %r := 41f; add(!%r, 1f)");
+        let s = print_expr(&super::super::dce::dce(&eliminate_dead_refs(&out)));
+        assert!(s.contains("42f"), "{s}");
+        assert!(!s.contains("ref("), "{s}");
+    }
+
+    #[test]
+    fn dynamic_code_residualizes() {
+        let out = pe("fn (%x) { add(%x, add(1f, 2f)) }");
+        let s = print_expr(&out);
+        assert!(s.contains("3f"), "{s}");
+        assert!(s.contains("add(%x"), "{s}");
+    }
+
+    #[test]
+    fn static_match_selected() {
+        let out = pe("match (Cons(5f, Nil)) { | Cons(%h, %t) -> %h | Nil -> 0f }");
+        assert!(print_expr(&out).contains("5f"));
+    }
+
+    #[test]
+    fn fig5_identity_pipeline() {
+        // AD(identity) -> PE -> DCE must crunch to (d, (ones_like(d),))
+        // with no refs or closures left.
+        let m = Module::with_prelude();
+        let f = parse_expr("fn (%d) { %d }").unwrap();
+        let out = ad_pe_dce(&m, &f).unwrap();
+        let s = print_expr(&out);
+        assert!(s.contains("ones_like"), "{s}");
+        assert!(!s.contains("ref("), "{s}");
+        assert!(!s.contains(":="), "{s}");
+        // Semantics: returns (x, (1,)).
+        let r = eval_expr(&m, &ir::call(out.clone(), vec![ir::scalar(7.0)])).unwrap();
+        assert_eq!(r.tuple()[0].tensor().f32_value(), 7.0);
+        assert_eq!(r.tuple()[1].tuple()[0].tensor().f32_value(), 1.0);
+        // And it is small (Fig 5's post-DCE is 2 ops).
+        assert!(count_nodes(&out) < 25, "residual too big ({}): {s}", count_nodes(&out));
+    }
+
+    #[test]
+    fn fig5_square_pipeline_is_first_order() {
+        let m = Module::with_prelude();
+        let f = parse_expr("fn (%x) { multiply(%x, %x) }").unwrap();
+        let out = ad_pe_dce(&m, &f).unwrap();
+        let s = print_expr(&out);
+        assert!(!s.contains("ref("), "{s}");
+        assert!(!s.contains("grad"), "{s}");
+        let r = eval_expr(&m, &ir::call(out, vec![ir::scalar(3.0)])).unwrap();
+        assert_eq!(r.tuple()[0].tensor().f32_value(), 9.0);
+        assert_eq!(r.tuple()[1].tuple()[0].tensor().f32_value(), 6.0);
+    }
+
+    #[test]
+    fn recursion_does_not_diverge() {
+        let out = pe(
+            "let %loop = fn (%i) { if (greater(%i, 0f)) { %loop(subtract(%i, 1f)) } else { %i } };\n\
+             %loop(3f)",
+        );
+        // Recursive fn residualizes; result still evaluates correctly.
+        let m = Module::with_prelude();
+        let r = eval_expr(&m, &out).unwrap();
+        assert_eq!(r.tensor().f32_value(), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Purity analysis shared by CSE / DCE / constant folding / PE.
+//!
+//! Relay is pure by default; effects come only from references (and
+//! potential non-termination of closure calls, which we conservatively
+//! treat as impure for elimination purposes).
+
+use crate::ir::{visit_children, Expr, E};
+
+/// Is it safe to delete / duplicate / reorder this expression?
+pub fn is_pure(e: &E) -> bool {
+    match &**e {
+        Expr::RefNew(_) | Expr::RefRead(_) | Expr::RefWrite(..) => false,
+        // Calls to operators and constructors are pure; calls to anything
+        // else (closures, globals) may diverge or touch refs.
+        Expr::Call { f, args, .. } => {
+            matches!(&**f, Expr::Op(_) | Expr::Ctor(_)) && args.iter().all(is_pure)
+        }
+        // A function VALUE is pure (its body runs later); grad likewise.
+        Expr::Func(_) | Expr::Grad(_) => true,
+        _ => {
+            let mut ok = true;
+            visit_children(e, |c| ok &= is_pure(c));
+            ok
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::*;
+
+    #[test]
+    fn op_calls_are_pure() {
+        assert!(is_pure(&op_call("add", vec![scalar(1.0), scalar(2.0)])));
+    }
+
+    #[test]
+    fn ref_ops_are_impure() {
+        assert!(!is_pure(&ref_new(scalar(1.0))));
+        let r = Var::fresh("r");
+        assert!(!is_pure(&ref_read(var(&r))));
+        assert!(!is_pure(&ref_write(var(&r), scalar(1.0))));
+    }
+
+    #[test]
+    fn closure_calls_are_impure() {
+        let f = Var::fresh("f");
+        assert!(!is_pure(&call(var(&f), vec![scalar(1.0)])));
+    }
+
+    #[test]
+    fn function_values_are_pure_even_with_impure_bodies() {
+        let r = Var::fresh("r");
+        let f = func(vec![], ref_write(var(&r), scalar(1.0)));
+        assert!(is_pure(&f));
+    }
+
+    #[test]
+    fn let_propagates() {
+        let x = Var::fresh("x");
+        let pure = let_(x.clone(), scalar(1.0), var(&x));
+        assert!(is_pure(&pure));
+        let impure = let_(x.clone(), ref_new(scalar(1.0)), var(&x));
+        assert!(!is_pure(&impure));
+    }
+}

@@ -1,0 +1,420 @@
+//! Generic quantization flow (§4.5): **annotate -> calibrate -> realize**.
+//!
+//! * *Annotate* rewrites the graph, inserting `qnn.simulated_quantize`
+//!   (simQ) around the inputs of conv-like operators according to each
+//!   operator's (overridable) annotate rule — Fig. 9's customization point.
+//! * *Calibrate* runs the simulated graph on a calibration set, observing
+//!   per-simQ activation ranges, and chooses power-of-two scales.
+//! * *Realize* replaces the simulated ops with real narrow-integer ops
+//!   (`qnn.quantize`, `qnn.conv2d`/`qnn.dense` with i16/i32 accumulation,
+//!   `qnn.requantize`, `qnn.dequantize`).
+//!
+//! The scheme is parameterized by [`QConfig`] (input bits / accumulator
+//! bits / rounding), reproducing Table 2's 8/16, 8/32, 16/32 design points.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::eval::value::Value;
+use crate::eval::Interp;
+use crate::ir::{
+    self, op_call_attrs, rewrite_postorder, AttrValue, Attrs, Expr, Module, E,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QConfig {
+    /// Bit width of quantized operands (8 or 16).
+    pub input_bits: i64,
+    /// Accumulator width (16 or 32).
+    pub acc_bits: i64,
+    /// Rounding mode for weight quantization ("round" | "stochastic_round").
+    pub rounding: Rounding,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    Nearest,
+    Stochastic,
+}
+
+impl QConfig {
+    /// The paper's Table 2 design points.
+    pub fn i8_i16() -> QConfig {
+        QConfig { input_bits: 8, acc_bits: 16, rounding: Rounding::Nearest }
+    }
+
+    pub fn i8_i32() -> QConfig {
+        QConfig { input_bits: 8, acc_bits: 32, rounding: Rounding::Nearest }
+    }
+
+    pub fn i16_i32() -> QConfig {
+        QConfig { input_bits: 16, acc_bits: 32, rounding: Rounding::Nearest }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.input_bits, self.acc_bits)
+    }
+}
+
+/// Annotate rule: given the two inputs of a conv-like call, wrap them in
+/// simQ ops. Overridable per operator (Fig. 9); the default treats both
+/// operands as signed with nearest rounding.
+pub type AnnotateFn = fn(&QConfig, E, E, &Attrs) -> (E, E);
+
+fn default_annotate(cfg: &QConfig, lhs: E, rhs: E, _attrs: &Attrs) -> (E, E) {
+    (sim_q(cfg, lhs, "round"), sim_q(cfg, rhs, "round"))
+}
+
+fn sim_q(cfg: &QConfig, e: E, rounding: &str) -> E {
+    op_call_attrs(
+        "qnn.simulated_quantize",
+        vec![e],
+        ir::attrs(&[
+            ("bits", AttrValue::Int(cfg.input_bits)),
+            // Scale is a placeholder until calibration assigns one.
+            ("scale", AttrValue::Float(1.0 / 16.0)),
+            ("rounding", AttrValue::Str(rounding.into())),
+        ]),
+    )
+}
+
+/// Registry of per-op annotate rules; `with_rule` overrides (Fig. 9's
+/// `register_annotate_function(..., override=True)`).
+pub struct Annotator {
+    pub cfg: QConfig,
+    rules: BTreeMap<&'static str, AnnotateFn>,
+}
+
+impl Annotator {
+    pub fn new(cfg: QConfig) -> Annotator {
+        let mut rules: BTreeMap<&'static str, AnnotateFn> = BTreeMap::new();
+        rules.insert("nn.conv2d", default_annotate);
+        rules.insert("nn.dense", default_annotate);
+        Annotator { cfg, rules }
+    }
+
+    pub fn with_rule(mut self, op: &'static str, f: AnnotateFn) -> Annotator {
+        self.rules.insert(op, f);
+        self
+    }
+
+    /// Step 1: insert simQ ops.
+    pub fn annotate(&self, e: &E) -> E {
+        rewrite_postorder(&e.clone(), &mut |n| match &**n {
+            Expr::Call { f, args, attrs } => {
+                let name = match &**f {
+                    Expr::Op(name) => name.as_str(),
+                    _ => return None,
+                };
+                let rule = self.rules.get(name)?;
+                if args.len() != 2 {
+                    return None;
+                }
+                // Don't re-annotate.
+                if is_simq(&args[0]) || is_simq(&args[1]) {
+                    return None;
+                }
+                let (l, r) = rule(&self.cfg, args[0].clone(), args[1].clone(), attrs);
+                Some(Arc::new(Expr::Call {
+                    f: f.clone(),
+                    args: vec![l, r],
+                    attrs: attrs.clone(),
+                }))
+            }
+            _ => None,
+        })
+    }
+}
+
+fn is_simq(e: &E) -> bool {
+    matches!(&**e, Expr::Call { f, .. }
+        if matches!(&**f, Expr::Op(n) if n == "qnn.simulated_quantize"))
+}
+
+/// Step 2: calibration. Runs the annotated expression on calibration
+/// inputs with an instrumented interpreter that records the max-abs value
+/// flowing into every simQ, then assigns each simQ the smallest
+/// power-of-two scale covering the observed range.
+pub fn calibrate(
+    module: &Module,
+    annotated: &E,
+    calib_inputs: &[Vec<Value>],
+) -> Result<E, String> {
+    // Identify simQ sites by a stable numbering (post-order).
+    let mut sites = Vec::new();
+    number_simq(annotated, &mut sites);
+
+    // Observe: evaluate with each calibration input; simQ is float->float,
+    // so running the annotated graph directly works. We instrument by
+    // rewriting each simQ site input through an observer op is avoided —
+    // instead we simply evaluate the *argument* of each simQ site.
+    // Practical approach: evaluate subexpressions via the interpreter per
+    // site (costly but calibration is offline).
+    let interp = Interp::new(module);
+    let mut max_abs: Vec<f64> = vec![1e-9; sites.len()];
+    for input in calib_inputs {
+        // Bind function parameters if the annotated expr is a function.
+        let env = match &**annotated {
+            Expr::Func(f) => {
+                let mut env = crate::eval::value::env_empty();
+                for ((p, _), v) in f.params.iter().zip(input) {
+                    env = crate::eval::value::env_bind(&env, p.clone(), v.clone());
+                }
+                env
+            }
+            _ => crate::eval::value::env_empty(),
+        };
+        for (i, site) in sites.iter().enumerate() {
+            if let Expr::Call { args, .. } = &**site {
+                let v = interp.eval(&args[0], &env)?;
+                if let Value::Tensor(t) = v {
+                    for j in 0..t.numel() {
+                        max_abs[i] = max_abs[i].max(t.get_f64(j).abs());
+                    }
+                }
+            }
+        }
+    }
+
+    // Assign power-of-two scales: scale = 2^ceil(log2(max / qmax)).
+    let mut idx = 0usize;
+    let out = rewrite_simq(annotated, &mut |attrs| {
+        let bits = attrs.get("bits").map(|v| v.as_int()).unwrap_or(8);
+        let qmax = ((1i64 << (bits - 1)) - 1) as f64;
+        let scale = (max_abs[idx] / qmax).log2().ceil().exp2();
+        idx += 1;
+        let mut a = attrs.clone();
+        a.insert("scale".into(), AttrValue::Float(scale));
+        a
+    });
+    Ok(out)
+}
+
+fn number_simq(e: &E, out: &mut Vec<E>) {
+    // Post-order with a seen-set so shared subtrees number once, matching
+    // rewrite_postorder's memoized visit order.
+    fn go(e: &E, out: &mut Vec<E>, seen: &mut std::collections::BTreeSet<usize>) {
+        let key = Arc::as_ptr(e) as usize;
+        if !seen.insert(key) {
+            return;
+        }
+        crate::ir::visit_children(e, |c| go(c, out, seen));
+        if is_simq(e) {
+            out.push(e.clone());
+        }
+    }
+    go(e, out, &mut std::collections::BTreeSet::new());
+}
+
+fn rewrite_simq(e: &E, f: &mut dyn FnMut(&Attrs) -> Attrs) -> E {
+    rewrite_postorder(&e.clone(), &mut |n| match &**n {
+        Expr::Call { f: cf, args, attrs }
+            if matches!(&**cf, Expr::Op(name) if name == "qnn.simulated_quantize") =>
+        {
+            Some(Arc::new(Expr::Call {
+                f: cf.clone(),
+                args: args.clone(),
+                attrs: f(attrs),
+            }))
+        }
+        _ => None,
+    })
+}
+
+/// Step 3: realization — turn the simulated graph into a real
+/// narrow-integer graph. Each annotated conv-like call becomes:
+/// `dequantize(requantize-free accumulate(quantize(lhs), quantize(rhs)))`
+/// with the combined scale folded into the final dequantize.
+pub fn realize(e: &E, cfg: &QConfig) -> E {
+    rewrite_postorder(&e.clone(), &mut |n| {
+        let (f, args, attrs) = match &**n {
+            Expr::Call { f, args, attrs } => (f, args, attrs),
+            _ => return None,
+        };
+        let name = match &**f {
+            Expr::Op(name) => name.as_str(),
+            _ => return None,
+        };
+        if !matches!(name, "nn.conv2d" | "nn.dense") || args.len() != 2 {
+            return None;
+        }
+        let (l_scale, lhs) = strip_simq(&args[0])?;
+        let (r_scale, rhs) = strip_simq(&args[1])?;
+        let ql = op_call_attrs(
+            "qnn.quantize",
+            vec![lhs],
+            ir::attrs(&[
+                ("scale", AttrValue::Float(l_scale)),
+                ("bits", AttrValue::Int(cfg.input_bits)),
+            ]),
+        );
+        let qr = op_call_attrs(
+            "qnn.quantize",
+            vec![rhs],
+            ir::attrs(&[
+                ("scale", AttrValue::Float(r_scale)),
+                ("bits", AttrValue::Int(cfg.input_bits)),
+            ]),
+        );
+        let qop = if name == "nn.conv2d" { "qnn.conv2d" } else { "qnn.dense" };
+        let mut qattrs = attrs.clone();
+        qattrs.insert("acc_bits".into(), AttrValue::Int(cfg.acc_bits));
+        let acc = op_call_attrs(qop, vec![ql, qr], qattrs);
+        // Combined scale: product of operand scales.
+        Some(op_call_attrs(
+            "qnn.dequantize",
+            vec![acc],
+            ir::attrs(&[("scale", AttrValue::Float(l_scale * r_scale))]),
+        ))
+    })
+}
+
+fn strip_simq(e: &E) -> Option<(f64, E)> {
+    match &**e {
+        Expr::Call { f, args, attrs }
+            if matches!(&**f, Expr::Op(n) if n == "qnn.simulated_quantize") =>
+        {
+            let scale = attrs.get("scale").map(|v| v.as_float()).unwrap_or(1.0 / 16.0);
+            Some((scale, args[0].clone()))
+        }
+        _ => None,
+    }
+}
+
+/// The whole flow over a module's `main`: annotate -> calibrate -> realize.
+pub fn quantize_module(
+    module: &Module,
+    cfg: QConfig,
+    calib_inputs: &[Vec<Value>],
+) -> Result<Module, String> {
+    let main = module.def("main").ok_or("no @main")?.clone();
+    let fe = Arc::new(Expr::Func(main));
+    let annotator = Annotator::new(cfg);
+    let annotated = annotator.annotate(&fe);
+    let calibrated = calibrate(module, &annotated, calib_inputs)?;
+    let realized = realize(&calibrated, &cfg);
+    let mut out = module.clone();
+    if let Expr::Func(f) = &*realized {
+        out.add_def("main", f.clone());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_main;
+    use crate::ir::{parse_module, print_expr};
+    use crate::tensor::{Rng, Tensor};
+
+    fn dense_module() -> Module {
+        parse_module(
+            "def @main(%x: Tensor[(4, 16), float32], %w: Tensor[(8, 16), float32]) {\n\
+               nn.dense(%x, %w)\n\
+             }",
+        )
+        .unwrap()
+    }
+
+    fn calib(rng: &mut Rng) -> Vec<Vec<Value>> {
+        (0..4)
+            .map(|_| {
+                vec![
+                    Value::Tensor(rng.normal_tensor(&[4, 16], 1.0)),
+                    Value::Tensor(rng.normal_tensor(&[8, 16], 0.5)),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn annotate_inserts_simq() {
+        let m = dense_module();
+        let fe = Arc::new(Expr::Func(m.def("main").unwrap().clone()));
+        let a = Annotator::new(QConfig::i8_i32()).annotate(&fe);
+        let s = print_expr(&a);
+        assert_eq!(s.matches("qnn.simulated_quantize").count(), 2, "{s}");
+    }
+
+    #[test]
+    fn calibrate_sets_power_of_two_scales() {
+        let m = dense_module();
+        let fe = Arc::new(Expr::Func(m.def("main").unwrap().clone()));
+        let a = Annotator::new(QConfig::i8_i32()).annotate(&fe);
+        let mut rng = Rng::new(0);
+        let c = calibrate(&m, &a, &calib(&mut rng)).unwrap();
+        let s = print_expr(&c);
+        // Scales must be powers of two and not the placeholder.
+        let mut found = 0;
+        for cap in s.split("scale=").skip(1) {
+            let num: String = cap
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-' || *c == 'e')
+                .collect();
+            let v: f64 = num.trim_end_matches('f').parse().unwrap();
+            let l = v.log2();
+            assert!((l - l.round()).abs() < 1e-9, "scale {v} not power of two");
+            found += 1;
+        }
+        assert_eq!(found, 2);
+    }
+
+    #[test]
+    fn realized_graph_is_integer_and_close() {
+        let m = dense_module();
+        let mut rng = Rng::new(1);
+        let q = quantize_module(&m, QConfig::i8_i32(), &calib(&mut rng)).unwrap();
+        let s = print_expr(&q.def("main").unwrap().body);
+        assert!(s.contains("qnn.dense"), "{s}");
+        assert!(s.contains("qnn.quantize"), "{s}");
+        assert!(s.contains("qnn.dequantize"), "{s}");
+        assert!(!s.contains("simulated"), "{s}");
+
+        let x = rng.normal_tensor(&[4, 16], 1.0);
+        let w = rng.normal_tensor(&[8, 16], 0.5);
+        let exact = eval_main(&m, vec![Value::Tensor(x.clone()), Value::Tensor(w.clone())])
+            .unwrap();
+        let quant = eval_main(&q, vec![Value::Tensor(x), Value::Tensor(w)]).unwrap();
+        // Quantized result approximates the float result.
+        let diff = exact.tensor().max_abs_diff(quant.tensor());
+        assert!(diff < 0.5, "quantization error too large: {diff}");
+        assert!(diff > 0.0, "suspiciously exact");
+    }
+
+    #[test]
+    fn acc16_saturates_but_acc32_does_not() {
+        // Large K makes the i16 accumulator saturate.
+        let m = parse_module(
+            "def @main(%x: Tensor[(1, 512), float32], %w: Tensor[(1, 512), float32]) {\n\
+               nn.dense(%x, %w)\n\
+             }",
+        )
+        .unwrap();
+        let big = Tensor::full_f32(&[1, 512], 3.0);
+        let calib: Vec<Vec<Value>> =
+            vec![vec![Value::Tensor(big.clone()), Value::Tensor(big.clone())]];
+        let q32 = quantize_module(&m, QConfig::i8_i32(), &calib).unwrap();
+        let q16 = quantize_module(&m, QConfig::i8_i16(), &calib).unwrap();
+        let args = vec![Value::Tensor(big.clone()), Value::Tensor(big.clone())];
+        let exact = eval_main(&m, args.clone()).unwrap().tensor().f32_value();
+        let v32 = eval_main(&q32, args.clone()).unwrap().tensor().f32_value();
+        let v16 = eval_main(&q16, args).unwrap().tensor().f32_value();
+        assert!((v32 - exact).abs() / exact < 0.05, "i32 acc {v32} vs {exact}");
+        assert!(v16 < v32 * 0.5, "i16 acc should saturate: {v16} vs {v32}");
+    }
+
+    #[test]
+    fn custom_annotate_rule_overrides() {
+        // Fig. 9: override conv2d's rule to stochastic-round the weights.
+        fn custom(cfg: &QConfig, l: E, r: E, _a: &Attrs) -> (E, E) {
+            (super::sim_q(cfg, l, "round"), super::sim_q(cfg, r, "stochastic_round"))
+        }
+        let m = dense_module();
+        let fe = Arc::new(Expr::Func(m.def("main").unwrap().clone()));
+        let a = Annotator::new(QConfig::i8_i32())
+            .with_rule("nn.dense", custom)
+            .annotate(&fe);
+        let s = print_expr(&a);
+        assert!(s.contains("stochastic_round"), "{s}");
+    }
+}

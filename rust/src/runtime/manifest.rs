@@ -1,0 +1,192 @@
+//! Minimal parser for `artifacts/manifest.json` (written by aot.py).
+//!
+//! The build environment vendors no JSON crate, and the schema is tiny and
+//! fixed, so this is a purpose-built recursive-descent parser for exactly
+//! the subset aot.py emits: objects, arrays, strings, integers.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::tensor::DType;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Entry {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+pub type Manifest = BTreeMap<String, Entry>;
+
+#[derive(Debug)]
+pub enum Json {
+    Object(BTreeMap<String, Json>),
+    Array(Vec<Json>),
+    Str(String),
+    Num(f64),
+}
+
+pub fn parse_json(src: &str) -> Result<Json, String> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&chars, &mut pos)?;
+    Ok(v)
+}
+
+fn skip_ws(c: &[char], p: &mut usize) {
+    while *p < c.len() && c[*p].is_whitespace() {
+        *p += 1;
+    }
+}
+
+fn parse_value(c: &[char], p: &mut usize) -> Result<Json, String> {
+    skip_ws(c, p);
+    match c.get(*p) {
+        Some('{') => {
+            *p += 1;
+            let mut map = BTreeMap::new();
+            loop {
+                skip_ws(c, p);
+                if c.get(*p) == Some(&'}') {
+                    *p += 1;
+                    break;
+                }
+                let key = match parse_value(c, p)? {
+                    Json::Str(s) => s,
+                    other => return Err(format!("object key {other:?}")),
+                };
+                skip_ws(c, p);
+                if c.get(*p) != Some(&':') {
+                    return Err("expected ':'".into());
+                }
+                *p += 1;
+                let v = parse_value(c, p)?;
+                map.insert(key, v);
+                skip_ws(c, p);
+                if c.get(*p) == Some(&',') {
+                    *p += 1;
+                }
+            }
+            Ok(Json::Object(map))
+        }
+        Some('[') => {
+            *p += 1;
+            let mut arr = Vec::new();
+            loop {
+                skip_ws(c, p);
+                if c.get(*p) == Some(&']') {
+                    *p += 1;
+                    break;
+                }
+                arr.push(parse_value(c, p)?);
+                skip_ws(c, p);
+                if c.get(*p) == Some(&',') {
+                    *p += 1;
+                }
+            }
+            Ok(Json::Array(arr))
+        }
+        Some('"') => {
+            *p += 1;
+            let mut s = String::new();
+            while *p < c.len() && c[*p] != '"' {
+                s.push(c[*p]);
+                *p += 1;
+            }
+            *p += 1;
+            Ok(Json::Str(s))
+        }
+        Some(ch) if ch.is_ascii_digit() || *ch == '-' => {
+            let start = *p;
+            while *p < c.len()
+                && (c[*p].is_ascii_digit() || c[*p] == '.' || c[*p] == '-' || c[*p] == 'e')
+            {
+                *p += 1;
+            }
+            let text: String = c[start..*p].iter().collect();
+            text.parse::<f64>().map(Json::Num).map_err(|e| e.to_string())
+        }
+        other => Err(format!("unexpected {other:?} at {p}")),
+    }
+}
+
+fn spec_of(j: &Json) -> Result<TensorSpec, String> {
+    let obj = match j {
+        Json::Object(o) => o,
+        _ => return Err("spec not object".into()),
+    };
+    let shape = match obj.get("shape") {
+        Some(Json::Array(a)) => a
+            .iter()
+            .map(|v| match v {
+                Json::Num(n) => Ok(*n as usize),
+                _ => Err("bad dim".to_string()),
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+        _ => return Err("missing shape".into()),
+    };
+    let dtype = match obj.get("dtype") {
+        Some(Json::Str(s)) => DType::parse(s).ok_or(format!("bad dtype {s}"))?,
+        _ => return Err("missing dtype".into()),
+    };
+    Ok(TensorSpec { shape, dtype })
+}
+
+pub fn load(path: &Path) -> Result<Manifest, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let root = parse_json(&src)?;
+    let obj = match root {
+        Json::Object(o) => o,
+        _ => return Err("manifest root not an object".into()),
+    };
+    let mut m = Manifest::new();
+    for (name, entry) in obj {
+        let eo = match entry {
+            Json::Object(o) => o,
+            _ => continue,
+        };
+        let get_specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+            match eo.get(key) {
+                Some(Json::Array(a)) => a.iter().map(spec_of).collect(),
+                _ => Ok(vec![]),
+            }
+        };
+        m.insert(name, Entry { inputs: get_specs("inputs")?, outputs: get_specs("outputs")? });
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_schema() {
+        let src = r#"{
+          "mlp_forward": {
+            "inputs": [{"shape": [64, 128], "dtype": "float32"},
+                       {"shape": [], "dtype": "int32"}],
+            "outputs": [{"shape": [32, 10], "dtype": "float32"}]
+          }
+        }"#;
+        let j = parse_json(src).unwrap();
+        let obj = match j {
+            Json::Object(o) => o,
+            _ => panic!(),
+        };
+        assert!(obj.contains_key("mlp_forward"));
+        let tmp = std::env::temp_dir().join("relay_manifest_test.json");
+        std::fs::write(&tmp, src).unwrap();
+        let m = load(&tmp).unwrap();
+        let e = &m["mlp_forward"];
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![64, 128]);
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        assert_eq!(e.outputs[0].shape, vec![32, 10]);
+    }
+}

@@ -1,0 +1,244 @@
+//! 2-d convolution (NCHW / OIHW), with grouped support for MobileNet-style
+//! depthwise blocks, plus transposed conv for the DCGAN workload of Fig 14.
+
+use std::sync::Arc;
+
+use super::{Storage, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dParams {
+    pub stride: (usize, usize),
+    pub padding: (usize, usize),
+    pub groups: usize,
+}
+
+impl Default for Conv2dParams {
+    fn default() -> Self {
+        Conv2dParams { stride: (1, 1), padding: (0, 0), groups: 1 }
+    }
+}
+
+pub fn conv2d_out_hw(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    p: &Conv2dParams,
+) -> (usize, usize) {
+    (
+        (h + 2 * p.padding.0 - kh) / p.stride.0 + 1,
+        (w + 2 * p.padding.1 - kw) / p.stride.1 + 1,
+    )
+}
+
+/// Direct NCHW conv: x (N,C,H,W), w (O, C/groups, KH, KW) -> (N,O,OH,OW).
+pub fn conv2d(x: &Tensor, w: &Tensor, p: &Conv2dParams) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv2d input rank");
+    assert_eq!(w.rank(), 4, "conv2d weight rank");
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (o, cg, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(c, cg * p.groups, "conv2d channels {c} vs {cg}x{}", p.groups);
+    assert_eq!(o % p.groups, 0, "out channels divisible by groups");
+    let (oh, ow) = conv2d_out_hw(h, wd, kh, kw, p);
+    let og = o / p.groups;
+
+    let xv = x.as_f32();
+    let wv = w.as_f32();
+    let mut out = vec![0f32; n * o * oh * ow];
+
+    for ni in 0..n {
+        for g in 0..p.groups {
+            for oc in 0..og {
+                let ocabs = g * og + oc;
+                for ic in 0..cg {
+                    let icabs = g * cg + ic;
+                    let xbase = (ni * c + icabs) * h * wd;
+                    let wbase = (ocabs * cg + ic) * kh * kw;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let wval = wv[wbase + ky * kw + kx];
+                            if wval == 0.0 {
+                                continue;
+                            }
+                            for oy in 0..oh {
+                                let iy = (oy * p.stride.0 + ky) as isize
+                                    - p.padding.0 as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                let obase = ((ni * o + ocabs) * oh + oy) * ow;
+                                let xrow = xbase + iy as usize * wd;
+                                for ox in 0..ow {
+                                    let ix = (ox * p.stride.1 + kx) as isize
+                                        - p.padding.1 as isize;
+                                    if ix < 0 || ix >= wd as isize {
+                                        continue;
+                                    }
+                                    out[obase + ox] += wval * xv[xrow + ix as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, o, oh, ow], Storage::F32(Arc::new(out)))
+}
+
+/// im2col: extract conv patches of x (N,C,H,W) into a GEMM-ready matrix
+/// (N*OH*OW, C*KH*KW). Pairing this with the cache-blocked matmul is the
+/// AlterOpLayout strategy used at -O3 (see pass::alter_op_layout): the
+/// same data-layout-change-for-locality idea the paper applies, realized
+/// as conv-as-GEMM.
+pub fn im2col(x: &Tensor, kh: usize, kw: usize, p: &Conv2dParams) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (oh, ow) = conv2d_out_hw(h, wd, kh, kw, p);
+    let xv = x.as_f32();
+    let cols = c * kh * kw;
+    let mut out = vec![0f32; n * oh * ow * cols];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ci in 0..c {
+                    let xbase = (ni * c + ci) * h * wd;
+                    for ky in 0..kh {
+                        let iy = (oy * p.stride.0 + ky) as isize - p.padding.0 as isize;
+                        for kx in 0..kw {
+                            let ix =
+                                (ox * p.stride.1 + kx) as isize - p.padding.1 as isize;
+                            let v = if iy < 0 || iy >= h as isize || ix < 0 || ix >= wd as isize
+                            {
+                                0.0
+                            } else {
+                                xv[xbase + iy as usize * wd + ix as usize]
+                            };
+                            out[row + (ci * kh + ky) * kw + kx] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n * oh * ow, cols], Storage::F32(Arc::new(out)))
+}
+
+/// Transposed conv (stride-s upsampling), NCHW / IOHW weight layout.
+pub fn conv2d_transpose(x: &Tensor, w: &Tensor, stride: usize, padding: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (c2, o, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(c, c2);
+    let oh = (h - 1) * stride + kh - 2 * padding;
+    let ow = (wd - 1) * stride + kw - 2 * padding;
+    let xv = x.as_f32();
+    let wv = w.as_f32();
+    let mut out = vec![0f32; n * o * oh * ow];
+    for ni in 0..n {
+        for ic in 0..c {
+            for oc in 0..o {
+                let wbase = (ic * o + oc) * kh * kw;
+                for iy in 0..h {
+                    for ix in 0..wd {
+                        let xval = xv[((ni * c + ic) * h + iy) * wd + ix];
+                        if xval == 0.0 {
+                            continue;
+                        }
+                        for ky in 0..kh {
+                            let oy = iy * stride + ky;
+                            if oy < padding || oy - padding >= oh {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ox = ix * stride + kx;
+                                if ox < padding || ox - padding >= ow {
+                                    continue;
+                                }
+                                out[((ni * o + oc) * oh + (oy - padding)) * ow
+                                    + (ox - padding)] += xval * wv[wbase + ky * kw + kx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, o, oh, ow], Storage::F32(Arc::new(out)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(stride: usize, padding: usize) -> Conv2dParams {
+        Conv2dParams { stride: (stride, stride), padding: (padding, padding), groups: 1 }
+    }
+
+    #[test]
+    fn identity_kernel() {
+        // 1x1 kernel of 1.0 copies the input.
+        let x = Tensor::from_f32(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::from_f32(vec![1, 1, 1, 1], vec![1.]);
+        assert_eq!(conv2d(&x, &w, &params(1, 0)).as_f32(), x.as_f32());
+    }
+
+    #[test]
+    fn box_filter_3x3() {
+        let x = Tensor::from_f32(vec![1, 1, 3, 3], vec![1.; 9]);
+        let w = Tensor::from_f32(vec![1, 1, 3, 3], vec![1.; 9]);
+        let out = conv2d(&x, &w, &params(1, 0));
+        assert_eq!(out.shape(), &[1, 1, 1, 1]);
+        assert_eq!(out.as_f32(), &[9.0]);
+    }
+
+    #[test]
+    fn padding_same() {
+        let x = Tensor::from_f32(vec![1, 1, 3, 3], vec![1.; 9]);
+        let w = Tensor::from_f32(vec![1, 1, 3, 3], vec![1.; 9]);
+        let out = conv2d(&x, &w, &params(1, 1));
+        assert_eq!(out.shape(), &[1, 1, 3, 3]);
+        // Center sees 9 ones, corner sees 4.
+        assert_eq!(out.as_f32()[4], 9.0);
+        assert_eq!(out.as_f32()[0], 4.0);
+    }
+
+    #[test]
+    fn stride_two() {
+        let x = Tensor::from_f32(vec![1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let w = Tensor::from_f32(vec![1, 1, 1, 1], vec![1.]);
+        let out = conv2d(&x, &w, &params(2, 0));
+        assert_eq!(out.shape(), &[1, 1, 2, 2]);
+        assert_eq!(out.as_f32(), &[0., 2., 8., 10.]);
+    }
+
+    #[test]
+    fn multi_channel_sum() {
+        // Two input channels, kernel of ones sums them.
+        let x = Tensor::from_f32(vec![1, 2, 1, 1], vec![3., 4.]);
+        let w = Tensor::from_f32(vec![1, 2, 1, 1], vec![1., 1.]);
+        assert_eq!(conv2d(&x, &w, &params(1, 0)).as_f32(), &[7.]);
+    }
+
+    #[test]
+    fn grouped_is_blockwise() {
+        // groups=2: each output channel sees only its group's input channel.
+        let x = Tensor::from_f32(vec![1, 2, 1, 1], vec![3., 4.]);
+        let w = Tensor::from_f32(vec![2, 1, 1, 1], vec![10., 100.]);
+        let p = Conv2dParams { stride: (1, 1), padding: (0, 0), groups: 2 };
+        assert_eq!(conv2d(&x, &w, &p).as_f32(), &[30., 400.]);
+    }
+
+    #[test]
+    fn transpose_upsamples() {
+        let x = Tensor::from_f32(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::from_f32(vec![1, 1, 2, 2], vec![1.; 4]);
+        let out = conv2d_transpose(&x, &w, 2, 0);
+        assert_eq!(out.shape(), &[1, 1, 4, 4]);
+        // Each input pixel stamps a 2x2 block of its value.
+        assert_eq!(out.as_f32()[0], 1.0);
+        assert_eq!(out.as_f32()[15], 4.0);
+    }
+}

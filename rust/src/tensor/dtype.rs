@@ -1,0 +1,133 @@
+//! Base types (paper §3.3.1): floats / ints of specific bit widths + bool.
+//!
+//! The paper parameterizes base types by lanes for vectorized dtypes; we fix
+//! lanes = 1 (scalar elements) and note where the grammar would extend.
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    F64,
+    I64,
+    I32,
+    I16,
+    I8,
+    U8,
+    Bool,
+}
+
+impl DType {
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+
+    pub fn is_int(self) -> bool {
+        matches!(
+            self,
+            DType::I64 | DType::I32 | DType::I16 | DType::I8 | DType::U8
+        )
+    }
+
+    pub fn bits(self) -> usize {
+        match self {
+            DType::F64 | DType::I64 => 64,
+            DType::F32 | DType::I32 => 32,
+            DType::I16 => 16,
+            DType::I8 | DType::U8 | DType::Bool => 8,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        self.bits() / 8
+    }
+
+    /// Parse the Relay-text spelling (`float32`, `int8`, `uint8`, `bool`).
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "float32" => DType::F32,
+            "float64" => DType::F64,
+            "int64" => DType::I64,
+            "int32" => DType::I32,
+            "int16" => DType::I16,
+            "int8" => DType::I8,
+            "uint8" => DType::U8,
+            "bool" => DType::Bool,
+            _ => return None,
+        })
+    }
+
+    /// Type-promotion lattice for mixed binary ops (numpy-like, restricted
+    /// to the pairs the operator registry actually produces).
+    pub fn promote(a: DType, b: DType) -> DType {
+        use DType::*;
+        if a == b {
+            return a;
+        }
+        match (a, b) {
+            (F64, _) | (_, F64) => F64,
+            (F32, _) | (_, F32) => F32,
+            (I64, _) | (_, I64) => I64,
+            (I32, _) | (_, I32) => I32,
+            (I16, _) | (_, I16) => I16,
+            (I8, U8) | (U8, I8) => I16,
+            (I8, _) | (_, I8) => I8,
+            (U8, _) | (_, U8) => U8,
+            (Bool, Bool) => Bool,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "float32",
+            DType::F64 => "float64",
+            DType::I64 => "int64",
+            DType::I32 => "int32",
+            DType::I16 => "int16",
+            DType::I8 => "int8",
+            DType::U8 => "uint8",
+            DType::Bool => "bool",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for dt in [
+            DType::F32,
+            DType::F64,
+            DType::I64,
+            DType::I32,
+            DType::I16,
+            DType::I8,
+            DType::U8,
+            DType::Bool,
+        ] {
+            assert_eq!(DType::parse(&dt.to_string()), Some(dt));
+        }
+        assert_eq!(DType::parse("float16"), None);
+    }
+
+    #[test]
+    fn promotion_lattice() {
+        assert_eq!(DType::promote(DType::I8, DType::I32), DType::I32);
+        assert_eq!(DType::promote(DType::F32, DType::I64), DType::F32);
+        assert_eq!(DType::promote(DType::I8, DType::U8), DType::I16);
+        assert_eq!(DType::promote(DType::Bool, DType::Bool), DType::Bool);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I8.bits(), 8);
+        assert!(DType::F32.is_float() && !DType::F32.is_int());
+        assert!(DType::I16.is_int());
+    }
+}

@@ -1,0 +1,369 @@
+//! Broadcasting elementwise operators (unary + binary + comparisons + select).
+
+use std::sync::Arc;
+
+use super::shape::{broadcast_shapes, BroadcastIter};
+use super::{DType, Storage, Tensor};
+
+/// Binary arithmetic op tags shared by the runtime and the XLA lowering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Maximum,
+    Minimum,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnaryOp {
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Abs,
+    Floor,
+    Ceil,
+    Round,
+    Erf,
+    LogicalNot,
+}
+
+fn apply_f64(op: BinOp, a: f64, b: f64) -> f64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Pow => a.powf(b),
+        BinOp::Maximum => a.max(b),
+        BinOp::Minimum => a.min(b),
+    }
+}
+
+fn apply_i64(op: BinOp, a: i64, b: i64) -> i64 {
+    match op {
+        BinOp::Add => a.wrapping_add(b),
+        BinOp::Sub => a.wrapping_sub(b),
+        BinOp::Mul => a.wrapping_mul(b),
+        BinOp::Div => {
+            if b == 0 {
+                0
+            } else {
+                a / b
+            }
+        }
+        BinOp::Pow => (a as f64).powf(b as f64) as i64,
+        BinOp::Maximum => a.max(b),
+        BinOp::Minimum => a.min(b),
+    }
+}
+
+macro_rules! bin_same_dtype {
+    ($op:expr, $la:expr, $lb:expr, $ia:expr, $ib:expr, $ctor:path, $conv:ident, $back:expr) => {{
+        let out: Vec<_> = $ia
+            .zip($ib)
+            .map(|(i, j)| {
+                let r = $conv($op, $la[i] as _, $lb[j] as _);
+                ($back)(r)
+            })
+            .collect();
+        $ctor(Arc::new(out))
+    }};
+}
+
+/// Broadcasting binary arithmetic. Operands are cast to their promoted
+/// dtype first (the `Broadcast` type relation guarantees this is legal).
+pub fn binary(op: BinOp, a: &Tensor, b: &Tensor) -> Tensor {
+    let dt = DType::promote(a.dtype(), b.dtype());
+    let a = cast(a, dt);
+    let b = cast(b, dt);
+    let out_shape = broadcast_shapes(a.shape(), b.shape())
+        .unwrap_or_else(|| panic!("cannot broadcast {:?} with {:?}", a.shape(), b.shape()));
+    let ia = BroadcastIter::new(a.shape(), &out_shape);
+    let ib = BroadcastIter::new(b.shape(), &out_shape);
+    let data = match (a.storage(), b.storage()) {
+        (Storage::F32(la), Storage::F32(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::F32, apply_f64, |r: f64| r as f32)
+        }
+        (Storage::F64(la), Storage::F64(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::F64, apply_f64, |r: f64| r)
+        }
+        (Storage::I64(la), Storage::I64(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::I64, apply_i64, |r: i64| r)
+        }
+        (Storage::I32(la), Storage::I32(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::I32, apply_i64, |r: i64| r as i32)
+        }
+        (Storage::I16(la), Storage::I16(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::I16, apply_i64, |r: i64| r as i16)
+        }
+        (Storage::I8(la), Storage::I8(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::I8, apply_i64, |r: i64| r as i8)
+        }
+        (Storage::U8(la), Storage::U8(lb)) => {
+            bin_same_dtype!(op, la, lb, ia, ib, Storage::U8, apply_i64, |r: i64| r as u8)
+        }
+        (Storage::Bool(la), Storage::Bool(lb)) => {
+            // Bool arithmetic: And for Mul/Minimum, Or for Add/Maximum.
+            let out: Vec<bool> = ia
+                .zip(ib)
+                .map(|(i, j)| match op {
+                    BinOp::Mul | BinOp::Minimum => la[i] && lb[j],
+                    BinOp::Add | BinOp::Maximum => la[i] || lb[j],
+                    _ => panic!("unsupported bool arithmetic {op:?}"),
+                })
+                .collect();
+            Storage::Bool(Arc::new(out))
+        }
+        _ => unreachable!("operands were cast to a common dtype"),
+    };
+    Tensor::new(out_shape, data)
+}
+
+/// Broadcasting comparison -> bool tensor.
+pub fn compare(op: CmpOp, a: &Tensor, b: &Tensor) -> Tensor {
+    let dt = DType::promote(a.dtype(), b.dtype());
+    let a = cast(a, dt);
+    let b = cast(b, dt);
+    let out_shape = broadcast_shapes(a.shape(), b.shape())
+        .unwrap_or_else(|| panic!("cannot broadcast {:?} with {:?}", a.shape(), b.shape()));
+    let ia = BroadcastIter::new(a.shape(), &out_shape);
+    let ib = BroadcastIter::new(b.shape(), &out_shape);
+    let out: Vec<bool> = ia
+        .zip(ib)
+        .map(|(i, j)| {
+            let (x, y) = (a.get_f64(i), b.get_f64(j));
+            match op {
+                CmpOp::Eq => x == y,
+                CmpOp::Ne => x != y,
+                CmpOp::Lt => x < y,
+                CmpOp::Le => x <= y,
+                CmpOp::Gt => x > y,
+                CmpOp::Ge => x >= y,
+            }
+        })
+        .collect();
+    Tensor::new(out_shape, Storage::Bool(Arc::new(out)))
+}
+
+/// Unary elementwise.
+pub fn unary(op: UnaryOp, a: &Tensor) -> Tensor {
+    if op == UnaryOp::LogicalNot {
+        let out: Vec<bool> = a.as_bool().iter().map(|&b| !b).collect();
+        return Tensor::new(a.shape().to_vec(), Storage::Bool(Arc::new(out)));
+    }
+    match a.storage() {
+        Storage::F32(v) => {
+            let out: Vec<f32> = v.iter().map(|&x| unary_f64(op, x as f64) as f32).collect();
+            Tensor::new(a.shape().to_vec(), Storage::F32(Arc::new(out)))
+        }
+        Storage::F64(v) => {
+            let out: Vec<f64> = v.iter().map(|&x| unary_f64(op, x)).collect();
+            Tensor::new(a.shape().to_vec(), Storage::F64(Arc::new(out)))
+        }
+        _ if op == UnaryOp::Neg || op == UnaryOp::Abs || op == UnaryOp::Relu => {
+            let out: Vec<f64> = (0..a.numel())
+                .map(|i| {
+                    let x = a.get_f64(i);
+                    match op {
+                        UnaryOp::Neg => -x,
+                        UnaryOp::Abs => x.abs(),
+                        UnaryOp::Relu => x.max(0.0),
+                        _ => unreachable!(),
+                    }
+                })
+                .collect();
+            from_f64_as(a.dtype(), a.shape().to_vec(), &out)
+        }
+        other => panic!("unary {op:?} unsupported on {:?}", other.dtype()),
+    }
+}
+
+fn unary_f64(op: UnaryOp, x: f64) -> f64 {
+    match op {
+        UnaryOp::Neg => -x,
+        UnaryOp::Exp => x.exp(),
+        UnaryOp::Log => x.ln(),
+        UnaryOp::Sqrt => x.sqrt(),
+        UnaryOp::Rsqrt => 1.0 / x.sqrt(),
+        UnaryOp::Tanh => x.tanh(),
+        UnaryOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        UnaryOp::Relu => x.max(0.0),
+        UnaryOp::Abs => x.abs(),
+        UnaryOp::Floor => x.floor(),
+        UnaryOp::Ceil => x.ceil(),
+        UnaryOp::Round => x.round(),
+        UnaryOp::Erf => erf(x),
+        UnaryOp::LogicalNot => unreachable!(),
+    }
+}
+
+/// Abramowitz & Stegun 7.1.26 rational approximation (|err| < 1.5e-7).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// `where(cond, a, b)` with broadcasting.
+pub fn select(cond: &Tensor, a: &Tensor, b: &Tensor) -> Tensor {
+    let dt = DType::promote(a.dtype(), b.dtype());
+    let a = cast(a, dt);
+    let b = cast(b, dt);
+    let s1 = broadcast_shapes(cond.shape(), a.shape()).expect("select broadcast");
+    let out_shape = broadcast_shapes(&s1, b.shape()).expect("select broadcast");
+    let ic = BroadcastIter::new(cond.shape(), &out_shape);
+    let ia = BroadcastIter::new(a.shape(), &out_shape);
+    let ib = BroadcastIter::new(b.shape(), &out_shape);
+    let cv = cond.as_bool();
+    let out: Vec<f64> = ic
+        .zip(ia.zip(ib))
+        .map(|(c, (i, j))| if cv[c] { a.get_f64(i) } else { b.get_f64(j) })
+        .collect();
+    from_f64_as(dt, out_shape, &out)
+}
+
+/// Cast to another dtype (saturating for narrow ints, like the realized
+/// quantization ops of §4.5).
+pub fn cast(a: &Tensor, dt: DType) -> Tensor {
+    if a.dtype() == dt {
+        return a.clone();
+    }
+    let n = a.numel();
+    let vals: Vec<f64> = (0..n).map(|i| a.get_f64(i)).collect();
+    from_f64_as(dt, a.shape().to_vec(), &vals)
+}
+
+pub(crate) fn from_f64_as(dt: DType, shape: Vec<usize>, vals: &[f64]) -> Tensor {
+    let data = match dt {
+        DType::F32 => Storage::F32(Arc::new(vals.iter().map(|&v| v as f32).collect())),
+        DType::F64 => Storage::F64(Arc::new(vals.to_vec())),
+        DType::I64 => Storage::I64(Arc::new(vals.iter().map(|&v| v as i64).collect())),
+        DType::I32 => Storage::I32(Arc::new(
+            vals.iter().map(|&v| v.clamp(i32::MIN as f64, i32::MAX as f64) as i32).collect(),
+        )),
+        DType::I16 => Storage::I16(Arc::new(
+            vals.iter().map(|&v| v.clamp(i16::MIN as f64, i16::MAX as f64) as i16).collect(),
+        )),
+        DType::I8 => Storage::I8(Arc::new(
+            vals.iter().map(|&v| v.clamp(i8::MIN as f64, i8::MAX as f64) as i8).collect(),
+        )),
+        DType::U8 => Storage::U8(Arc::new(
+            vals.iter().map(|&v| v.clamp(0.0, u8::MAX as f64) as u8).collect(),
+        )),
+        DType::Bool => Storage::Bool(Arc::new(vals.iter().map(|&v| v != 0.0).collect())),
+    };
+    Tensor::new(shape, data)
+}
+
+/// Clip every element into `[lo, hi]`.
+pub fn clip(a: &Tensor, lo: f64, hi: f64) -> Tensor {
+    let vals: Vec<f64> = (0..a.numel()).map(|i| a.get_f64(i).clamp(lo, hi)).collect();
+    from_f64_as(a.dtype(), a.shape().to_vec(), &vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_broadcast_row() {
+        let a = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_f32(vec![3], vec![10., 20., 30.]);
+        let c = binary(BinOp::Add, &a, &b);
+        assert_eq!(c.as_f32(), &[11., 22., 33., 14., 25., 36.]);
+    }
+
+    #[test]
+    fn mixed_dtype_promotes() {
+        let a = Tensor::from_i32(vec![2], vec![1, 2]);
+        let b = Tensor::from_f32(vec![2], vec![0.5, 0.5]);
+        let c = binary(BinOp::Mul, &a, &b);
+        assert_eq!(c.dtype(), DType::F32);
+        assert_eq!(c.as_f32(), &[0.5, 1.0]);
+    }
+
+    #[test]
+    fn compare_produces_bool() {
+        let a = Tensor::from_f32(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::from_f32(vec![3], vec![2., 2., 2.]);
+        assert_eq!(compare(CmpOp::Lt, &a, &b).as_bool(), &[true, false, false]);
+        assert_eq!(compare(CmpOp::Ge, &a, &b).as_bool(), &[false, true, true]);
+    }
+
+    #[test]
+    fn unary_ops() {
+        let a = Tensor::from_f32(vec![3], vec![-1., 0., 4.]);
+        assert_eq!(unary(UnaryOp::Relu, &a).as_f32(), &[0., 0., 4.]);
+        assert_eq!(unary(UnaryOp::Neg, &a).as_f32(), &[1., 0., -4.]);
+        let s = unary(UnaryOp::Sqrt, &Tensor::from_f32(vec![1], vec![16.0]));
+        assert_eq!(s.as_f32(), &[4.0]);
+    }
+
+    #[test]
+    fn sigmoid_tanh_sane() {
+        let a = Tensor::from_f32(vec![1], vec![0.0]);
+        assert!((unary(UnaryOp::Sigmoid, &a).as_f32()[0] - 0.5).abs() < 1e-6);
+        assert!(unary(UnaryOp::Tanh, &a).as_f32()[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        assert!(erf(0.0).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cast_saturates_to_i8() {
+        let a = Tensor::from_f32(vec![3], vec![300.0, -300.0, 7.0]);
+        let c = cast(&a, DType::I8);
+        assert_eq!(c.as_i8(), &[127, -128, 7]);
+    }
+
+    #[test]
+    fn select_broadcasts() {
+        let c = Tensor::from_bool(vec![2], vec![true, false]);
+        let a = Tensor::from_f32(vec![2], vec![1., 1.]);
+        let b = Tensor::from_f32(vec![2], vec![9., 9.]);
+        assert_eq!(select(&c, &a, &b).as_f32(), &[1., 9.]);
+    }
+
+    #[test]
+    fn clip_clamps() {
+        let a = Tensor::from_f32(vec![4], vec![-5., 0., 5., 10.]);
+        assert_eq!(clip(&a, -1.0, 6.0).as_f32(), &[-1., 0., 5., 6.]);
+    }
+
+    #[test]
+    fn bool_logic() {
+        let a = Tensor::from_bool(vec![2], vec![true, false]);
+        let b = Tensor::from_bool(vec![2], vec![true, true]);
+        assert_eq!(binary(BinOp::Mul, &a, &b).as_bool(), &[true, false]); // and
+        assert_eq!(binary(BinOp::Add, &a, &b).as_bool(), &[true, true]); // or
+        assert_eq!(unary(UnaryOp::LogicalNot, &a).as_bool(), &[false, true]);
+    }
+}

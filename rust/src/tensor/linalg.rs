@@ -1,0 +1,187 @@
+//! Dense linear algebra: matmul, dense (w transposed), bias add.
+//!
+//! The f32 matmul is the interpreter's hot loop, so it is cache-blocked
+//! (i-k-j loop order over 64x64x64 tiles) — the same schedule idea the
+//! paper's TVM backend derives, hand-applied.
+
+use std::sync::Arc;
+
+use super::{Storage, Tensor};
+
+const TILE: usize = 64;
+
+/// `a (m,k) @ b (k,n) -> (m,n)` for f32.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2, "matmul lhs rank");
+    assert_eq!(b.rank(), 2, "matmul rhs rank");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let av = a.as_f32();
+    let bv = b.as_f32();
+    let mut out = vec![0f32; m * n];
+    // i-k-j over tiles: the innermost j loop is a contiguous FMA that the
+    // compiler auto-vectorizes.
+    for i0 in (0..m).step_by(TILE) {
+        let i1 = (i0 + TILE).min(m);
+        for k0 in (0..k).step_by(TILE) {
+            let k1 = (k0 + TILE).min(k);
+            for i in i0..i1 {
+                let arow = &av[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bv[kk * n..(kk + 1) * n];
+                    for (o, &bj) in orow.iter_mut().zip(brow.iter()) {
+                        *o += aik * bj;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], Storage::F32(Arc::new(out)))
+}
+
+/// Batched matmul `a (b,m,k) @ w (b,k,n)`.
+pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 3);
+    assert_eq!(b.rank(), 3);
+    let (bs, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+    let (bs2, k2, n) = (b.shape()[0], b.shape()[1], b.shape()[2]);
+    assert_eq!(bs, bs2);
+    assert_eq!(k, k2);
+    let mut out = Vec::with_capacity(bs * m * n);
+    for i in 0..bs {
+        let sa = Tensor::from_f32(
+            vec![m, k],
+            a.as_f32()[i * m * k..(i + 1) * m * k].to_vec(),
+        );
+        let sb = Tensor::from_f32(
+            vec![k, n],
+            b.as_f32()[i * k * n..(i + 1) * k * n].to_vec(),
+        );
+        out.extend_from_slice(matmul(&sa, &sb).as_f32());
+    }
+    Tensor::new(vec![bs, m, n], Storage::F32(Arc::new(out)))
+}
+
+/// `nn.dense`: `x (m,k) @ w^T` where `w` is `(n,k)` — TVM/Relay convention.
+pub fn dense(x: &Tensor, w: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2, "dense input rank");
+    assert_eq!(w.rank(), 2, "dense weight rank");
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (n, k2) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "dense inner dims {k} vs {k2}");
+    let xv = x.as_f32();
+    let wv = w.as_f32();
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let xrow = &xv[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wrow = &wv[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (xk, wk) in xrow.iter().zip(wrow.iter()) {
+                acc += xk * wk;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], Storage::F32(Arc::new(out)))
+}
+
+/// `nn.bias_add`: add a 1-d bias along `axis` of `x`.
+pub fn bias_add(x: &Tensor, bias: &Tensor, axis: i64) -> Tensor {
+    assert_eq!(bias.rank(), 1, "bias rank");
+    let axis = super::shape::norm_axis(axis, x.rank());
+    assert_eq!(x.shape()[axis], bias.shape()[0], "bias length");
+    let xv = x.as_f32();
+    let bv = bias.as_f32();
+    let outer: usize = x.shape()[..axis].iter().product();
+    let mid = x.shape()[axis];
+    let inner: usize = x.shape()[axis + 1..].iter().product();
+    let mut out = Vec::with_capacity(x.numel());
+    for o in 0..outer {
+        for m in 0..mid {
+            let base = (o * mid + m) * inner;
+            let b = bv[m];
+            out.extend(xv[base..base + inner].iter().map(|&v| v + b));
+        }
+    }
+    Tensor::new(x.shape().to_vec(), Storage::F32(Arc::new(out)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_2x2() {
+        let a = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_f32(vec![2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(matmul(&a, &b).as_f32(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // (1x3) @ (3x2)
+        let a = Tensor::from_f32(vec![1, 3], vec![1., 2., 3.]);
+        let b = Tensor::from_f32(vec![3, 2], vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(matmul(&a, &b).as_f32(), &[14., 32.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_large() {
+        // Exercise the tiling path (dims > TILE).
+        let m = 70;
+        let k = 65;
+        let n = 80;
+        let av: Vec<f32> = (0..m * k).map(|i| ((i * 7 % 13) as f32) - 6.0).collect();
+        let bv: Vec<f32> = (0..k * n).map(|i| ((i * 5 % 11) as f32) - 5.0).collect();
+        let a = Tensor::from_f32(vec![m, k], av.clone());
+        let b = Tensor::from_f32(vec![k, n], bv.clone());
+        let got = matmul(&a, &b);
+        for i in [0, 1, m - 1] {
+            for j in [0, n / 2, n - 1] {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += av[i * k + kk] * bv[kk * n + j];
+                }
+                assert!((got.as_f32()[i * n + j] - acc).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_is_matmul_transposed() {
+        let x = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w = Tensor::from_f32(vec![2, 3], vec![1., 0., 0., 0., 1., 0.]);
+        // w rows pick out columns 0 and 1 of x.
+        assert_eq!(dense(&x, &w).as_f32(), &[1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn bias_add_axis1() {
+        let x = Tensor::from_f32(vec![2, 3], vec![0.; 6]);
+        let b = Tensor::from_f32(vec![3], vec![1., 2., 3.]);
+        assert_eq!(bias_add(&x, &b, 1).as_f32(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn bias_add_nchw_channel_axis() {
+        // (1, 2, 2, 2) with bias on axis 1.
+        let x = Tensor::from_f32(vec![1, 2, 2, 2], vec![0.; 8]);
+        let b = Tensor::from_f32(vec![2], vec![1., 2.]);
+        let out = bias_add(&x, &b, 1);
+        assert_eq!(out.as_f32(), &[1., 1., 1., 1., 2., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn batch_matmul_two_batches() {
+        let a = Tensor::from_f32(vec![2, 1, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_f32(vec![2, 2, 1], vec![1., 1., 1., 1.]);
+        assert_eq!(batch_matmul(&a, &b).as_f32(), &[3., 7.]);
+    }
+}

@@ -1,0 +1,358 @@
+//! Shape/layout manipulation: reshape, transpose, concat, split, pad, take,
+//! one_hot, layout transforms (NCHW <-> NHWC <-> NCHWc), flatten.
+
+use std::sync::Arc;
+
+use super::elementwise::from_f64_as;
+use super::shape::{norm_axis, row_major_strides};
+use super::{Storage, Tensor};
+
+/// Reshape (numel must match; -1 infers one dim).
+pub fn reshape(x: &Tensor, new_shape: &[i64]) -> Tensor {
+    let numel = x.numel();
+    let neg = new_shape.iter().filter(|&&d| d == -1).count();
+    assert!(neg <= 1, "at most one -1 in reshape");
+    let known: usize = new_shape.iter().filter(|&&d| d != -1).map(|&d| d as usize).product();
+    let shape: Vec<usize> = new_shape
+        .iter()
+        .map(|&d| if d == -1 { numel / known.max(1) } else { d as usize })
+        .collect();
+    assert_eq!(shape.iter().product::<usize>(), numel, "reshape numel");
+    Tensor::new(shape, x.storage().clone())
+}
+
+/// Transpose with explicit axis permutation (empty = reverse).
+pub fn transpose(x: &Tensor, axes: &[usize]) -> Tensor {
+    let rank = x.rank();
+    let perm: Vec<usize> = if axes.is_empty() {
+        (0..rank).rev().collect()
+    } else {
+        axes.to_vec()
+    };
+    assert_eq!(perm.len(), rank);
+    let out_shape: Vec<usize> = perm.iter().map(|&p| x.shape()[p]).collect();
+    let in_strides = row_major_strides(x.shape());
+    let perm_strides: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+    let n = x.numel();
+    let mut src = Vec::with_capacity(n);
+    // Odometer over the output shape, accumulating the source offset.
+    let mut counter = vec![0usize; rank];
+    let mut off = 0usize;
+    for _ in 0..n {
+        src.push(off);
+        for ax in (0..rank).rev() {
+            counter[ax] += 1;
+            off += perm_strides[ax];
+            if counter[ax] < out_shape[ax] {
+                break;
+            }
+            off -= perm_strides[ax] * out_shape[ax];
+            counter[ax] = 0;
+        }
+    }
+    gather_flat(x, out_shape, &src)
+}
+
+/// Build a tensor by gathering flat source indices (dtype-preserving).
+pub(crate) fn gather_flat(x: &Tensor, shape: Vec<usize>, idx: &[usize]) -> Tensor {
+    macro_rules! go {
+        ($v:expr, $ctor:path) => {
+            $ctor(Arc::new(idx.iter().map(|&i| $v[i]).collect()))
+        };
+    }
+    let data = match x.storage() {
+        Storage::F32(v) => go!(v, Storage::F32),
+        Storage::F64(v) => go!(v, Storage::F64),
+        Storage::I64(v) => go!(v, Storage::I64),
+        Storage::I32(v) => go!(v, Storage::I32),
+        Storage::I16(v) => go!(v, Storage::I16),
+        Storage::I8(v) => go!(v, Storage::I8),
+        Storage::U8(v) => go!(v, Storage::U8),
+        Storage::Bool(v) => go!(v, Storage::Bool),
+    };
+    Tensor::new(shape, data)
+}
+
+/// Concatenate along `axis`.
+pub fn concat(parts: &[Tensor], axis: i64) -> Tensor {
+    assert!(!parts.is_empty());
+    let rank = parts[0].rank();
+    let ax = norm_axis(axis, rank);
+    let mut out_shape = parts[0].shape().to_vec();
+    out_shape[ax] = parts.iter().map(|p| p.shape()[ax]).sum();
+    for p in parts {
+        assert_eq!(p.rank(), rank);
+        for d in 0..rank {
+            if d != ax {
+                assert_eq!(p.shape()[d], parts[0].shape()[d], "concat dim {d}");
+            }
+        }
+    }
+    let outer: usize = out_shape[..ax].iter().product();
+    let inner: usize = out_shape[ax + 1..].iter().product();
+    // Gather indices per output element.
+    let mut src_part = Vec::with_capacity(out_shape.iter().product());
+    let mut src_idx = Vec::with_capacity(src_part.capacity());
+    for o in 0..outer {
+        for (pi, p) in parts.iter().enumerate() {
+            let d = p.shape()[ax];
+            for j in 0..d * inner {
+                src_part.push(pi);
+                src_idx.push(o * d * inner + j);
+            }
+        }
+    }
+    // Materialize as f64 only if dtypes differ; otherwise preserve.
+    let dt = parts[0].dtype();
+    if parts.iter().all(|p| p.dtype() == dt) {
+        // Per-part gather then splice; simple two-pass construction.
+        let total: usize = out_shape.iter().product();
+        let vals: Vec<f64> = (0..total)
+            .map(|i| parts[src_part[i]].get_f64(src_idx[i]))
+            .collect();
+        from_f64_as(dt, out_shape, &vals)
+    } else {
+        panic!("concat dtype mismatch");
+    }
+}
+
+/// Split into `sections` equal parts along `axis`.
+pub fn split(x: &Tensor, sections: usize, axis: i64) -> Vec<Tensor> {
+    let ax = norm_axis(axis, x.rank());
+    let d = x.shape()[ax];
+    assert_eq!(d % sections, 0, "split must be even");
+    let part = d / sections;
+    let outer: usize = x.shape()[..ax].iter().product();
+    let inner: usize = x.shape()[ax + 1..].iter().product();
+    let mut out_shape = x.shape().to_vec();
+    out_shape[ax] = part;
+    (0..sections)
+        .map(|s| {
+            let mut idx = Vec::with_capacity(outer * part * inner);
+            for o in 0..outer {
+                let base = (o * d + s * part) * inner;
+                idx.extend(base..base + part * inner);
+            }
+            gather_flat(x, out_shape.clone(), &idx)
+        })
+        .collect()
+}
+
+/// Zero-pad: `pads` is (before, after) per axis.
+pub fn pad(x: &Tensor, pads: &[(usize, usize)]) -> Tensor {
+    assert_eq!(pads.len(), x.rank());
+    let out_shape: Vec<usize> = x
+        .shape()
+        .iter()
+        .zip(pads)
+        .map(|(&d, &(b, a))| d + b + a)
+        .collect();
+    let out_n: usize = out_shape.iter().product();
+    let in_strides = row_major_strides(x.shape());
+    let mut vals = vec![0f64; out_n];
+    let out_strides = row_major_strides(&out_shape);
+    for i in 0..x.numel() {
+        // Decompose input index, shift by pads, recompose in output space.
+        let mut rem = i;
+        let mut oi = 0usize;
+        for ax in 0..x.rank() {
+            let coord = rem / in_strides[ax];
+            rem %= in_strides[ax];
+            oi += (coord + pads[ax].0) * out_strides[ax];
+        }
+        vals[oi] = x.get_f64(i);
+    }
+    from_f64_as(x.dtype(), out_shape, &vals)
+}
+
+/// `take` rows of `x` (2-d: (v, d)) by i64 `indices` (any shape) -> shape
+/// indices.shape + [d]. This is `embedding lookup`.
+pub fn take_rows(x: &Tensor, indices: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let d = x.shape()[1];
+    let idx = indices.as_i64();
+    let mut flat = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        let i = i as usize;
+        flat.extend((i * d)..(i * d + d));
+    }
+    let mut shape = indices.shape().to_vec();
+    shape.push(d);
+    gather_flat(x, shape, &flat)
+}
+
+/// One-hot encode i64 `labels` to (len, depth) f32.
+pub fn one_hot(labels: &Tensor, depth: usize) -> Tensor {
+    let idx = labels.as_i64();
+    let mut out = vec![0f32; idx.len() * depth];
+    for (r, &i) in idx.iter().enumerate() {
+        out[r * depth + i as usize] = 1.0;
+    }
+    let mut shape = labels.shape().to_vec();
+    shape.push(depth);
+    Tensor::from_f32(shape, out)
+}
+
+/// Flatten to 2-d (batch, features).
+pub fn batch_flatten(x: &Tensor) -> Tensor {
+    let b = x.shape()[0];
+    let f: usize = x.shape()[1..].iter().product();
+    Tensor::new(vec![b, f], x.storage().clone())
+}
+
+/// Expand dims at `axis`.
+pub fn expand_dims(x: &Tensor, axis: i64) -> Tensor {
+    let ax = if axis < 0 {
+        (x.rank() as i64 + 1 + axis) as usize
+    } else {
+        axis as usize
+    };
+    let mut shape = x.shape().to_vec();
+    shape.insert(ax, 1);
+    Tensor::new(shape, x.storage().clone())
+}
+
+/// Squeeze all size-1 dims (or a specific axis).
+pub fn squeeze(x: &Tensor, axis: Option<i64>) -> Tensor {
+    let shape: Vec<usize> = match axis {
+        Some(a) => {
+            let ax = norm_axis(a, x.rank());
+            assert_eq!(x.shape()[ax], 1);
+            let mut s = x.shape().to_vec();
+            s.remove(ax);
+            s
+        }
+        None => x.shape().iter().cloned().filter(|&d| d != 1).collect(),
+    };
+    Tensor::new(shape, x.storage().clone())
+}
+
+/// NCHW -> NHWC.
+pub fn nchw_to_nhwc(x: &Tensor) -> Tensor {
+    transpose(x, &[0, 2, 3, 1])
+}
+
+/// NHWC -> NCHW.
+pub fn nhwc_to_nchw(x: &Tensor) -> Tensor {
+    transpose(x, &[0, 3, 1, 2])
+}
+
+/// NCHW -> NCHWc: split the channel axis into blocks of `c` (the
+/// AlterOpLayout target layout; also VTA's packed layout).
+pub fn nchw_to_nchwc(x: &Tensor, c: usize) -> Tensor {
+    let (n, ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    assert_eq!(ch % c, 0, "channels {ch} not divisible by block {c}");
+    let r = reshape(x, &[n as i64, (ch / c) as i64, c as i64, h as i64, w as i64]);
+    transpose(&r, &[0, 1, 3, 4, 2])
+}
+
+/// NCHWc -> NCHW.
+pub fn nchwc_to_nchw(x: &Tensor) -> Tensor {
+    let (n, cb, h, w, c) = (
+        x.shape()[0],
+        x.shape()[1],
+        x.shape()[2],
+        x.shape()[3],
+        x.shape()[4],
+    );
+    let t = transpose(x, &[0, 1, 4, 2, 3]);
+    reshape(&t, &[n as i64, (cb * c) as i64, h as i64, w as i64])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_infers() {
+        let x = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = reshape(&x, &[3, -1]);
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let x = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = transpose(&x, &[]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.as_f32(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn transpose_permutation() {
+        let x = Tensor::from_f32(vec![1, 2, 3], (0..6).map(|i| i as f32).collect());
+        let t = transpose(&x, &[2, 0, 1]);
+        assert_eq!(t.shape(), &[3, 1, 2]);
+        assert_eq!(t.as_f32(), &[0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn concat_axis0_and_1() {
+        let a = Tensor::from_f32(vec![1, 2], vec![1., 2.]);
+        let b = Tensor::from_f32(vec![1, 2], vec![3., 4.]);
+        assert_eq!(concat(&[a.clone(), b.clone()], 0).shape(), &[2, 2]);
+        let c = concat(&[a, b], 1);
+        assert_eq!(c.shape(), &[1, 4]);
+        assert_eq!(c.as_f32(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn split_round_trips_concat() {
+        let x = Tensor::from_f32(vec![2, 4], (0..8).map(|i| i as f32).collect());
+        let parts = split(&x, 2, 1);
+        assert_eq!(parts[0].shape(), &[2, 2]);
+        assert_eq!(parts[0].as_f32(), &[0., 1., 4., 5.]);
+        let back = concat(&parts, 1);
+        assert_eq!(back.as_f32(), x.as_f32());
+    }
+
+    #[test]
+    fn pad_2d() {
+        let x = Tensor::from_f32(vec![1, 1], vec![5.]);
+        let p = pad(&x, &[(1, 0), (0, 1)]);
+        assert_eq!(p.shape(), &[2, 2]);
+        assert_eq!(p.as_f32(), &[0., 0., 5., 0.]);
+    }
+
+    #[test]
+    fn take_rows_embedding() {
+        let table = Tensor::from_f32(vec![3, 2], vec![0., 0., 1., 1., 2., 2.]);
+        let idx = Tensor::from_i64(vec![2], vec![2, 0]);
+        let e = take_rows(&table, &idx);
+        assert_eq!(e.shape(), &[2, 2]);
+        assert_eq!(e.as_f32(), &[2., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn one_hot_encodes() {
+        let l = Tensor::from_i64(vec![2], vec![1, 0]);
+        let o = one_hot(&l, 3);
+        assert_eq!(o.shape(), &[2, 3]);
+        assert_eq!(o.as_f32(), &[0., 1., 0., 1., 0., 0.]);
+    }
+
+    #[test]
+    fn layout_nchw_nhwc_roundtrip() {
+        let x = Tensor::from_f32(vec![1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let y = nhwc_to_nchw(&nchw_to_nhwc(&x));
+        assert_eq!(y.as_f32(), x.as_f32());
+    }
+
+    #[test]
+    fn layout_nchwc_roundtrip() {
+        let x = Tensor::from_f32(vec![1, 4, 2, 2], (0..16).map(|i| i as f32).collect());
+        let packed = nchw_to_nchwc(&x, 2);
+        assert_eq!(packed.shape(), &[1, 2, 2, 2, 2]);
+        let back = nchwc_to_nchw(&packed);
+        assert_eq!(back.as_f32(), x.as_f32());
+    }
+
+    #[test]
+    fn squeeze_expand() {
+        let x = Tensor::from_f32(vec![1, 3, 1], vec![1., 2., 3.]);
+        assert_eq!(squeeze(&x, None).shape(), &[3]);
+        assert_eq!(squeeze(&x, Some(0)).shape(), &[3, 1]);
+        assert_eq!(expand_dims(&x, 0).shape(), &[1, 1, 3, 1]);
+        assert_eq!(expand_dims(&x, -1).shape(), &[1, 3, 1, 1]);
+    }
+}

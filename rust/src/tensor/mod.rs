@@ -1,0 +1,371 @@
+//! Dense tensor substrate: the "operator library" under the Relay compiler.
+//!
+//! The paper delegates kernels to TVM; this reproduction has two kernel
+//! providers — the XLA backend ([`crate::backend::xla`]) for compiled
+//! execution and this module for the reference interpreter, the quantized
+//! ("ARM") path of Fig. 13, and the VTA simulator's host-side compute.
+//!
+//! Tensors are contiguous row-major buffers tagged with a shape and a dtype.
+//! The dtype set mirrors the paper's base types (§3.3.1): floats and
+//! integers of specific bit widths plus bool.
+
+mod conv;
+mod dtype;
+mod elementwise;
+mod linalg;
+mod manip;
+mod pool;
+mod quantized;
+mod random;
+mod reduce;
+pub mod shape;
+
+pub use conv::*;
+pub use dtype::DType;
+pub use elementwise::*;
+pub use linalg::*;
+pub use manip::*;
+pub use pool::*;
+pub use quantized::*;
+pub use random::Rng;
+pub use reduce::*;
+pub use shape::{broadcast_shapes, Shape};
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Raw buffer behind a tensor. `Arc` makes clones O(1); all mutating ops
+/// produce fresh buffers (value semantics, like Relay's pure fragment).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Arc<Vec<f32>>),
+    F64(Arc<Vec<f64>>),
+    I64(Arc<Vec<i64>>),
+    I32(Arc<Vec<i32>>),
+    I16(Arc<Vec<i16>>),
+    I8(Arc<Vec<i8>>),
+    U8(Arc<Vec<u8>>),
+    Bool(Arc<Vec<bool>>),
+}
+
+impl Storage {
+    pub fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I64(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I16(v) => v.len(),
+            Storage::I8(v) => v.len(),
+            Storage::U8(v) => v.len(),
+            Storage::Bool(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Storage::F32(_) => DType::F32,
+            Storage::F64(_) => DType::F64,
+            Storage::I64(_) => DType::I64,
+            Storage::I32(_) => DType::I32,
+            Storage::I16(_) => DType::I16,
+            Storage::I8(_) => DType::I8,
+            Storage::U8(_) => DType::U8,
+            Storage::Bool(_) => DType::Bool,
+        }
+    }
+}
+
+/// A dense, row-major tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Storage,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Storage) -> Self {
+        let numel: usize = shape.iter().product();
+        assert_eq!(
+            numel,
+            data.len(),
+            "shape {:?} does not match buffer length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, v: Vec<f32>) -> Self {
+        Tensor::new(shape, Storage::F32(Arc::new(v)))
+    }
+
+    pub fn from_i32(shape: Vec<usize>, v: Vec<i32>) -> Self {
+        Tensor::new(shape, Storage::I32(Arc::new(v)))
+    }
+
+    pub fn from_i64(shape: Vec<usize>, v: Vec<i64>) -> Self {
+        Tensor::new(shape, Storage::I64(Arc::new(v)))
+    }
+
+    pub fn from_i16(shape: Vec<usize>, v: Vec<i16>) -> Self {
+        Tensor::new(shape, Storage::I16(Arc::new(v)))
+    }
+
+    pub fn from_i8(shape: Vec<usize>, v: Vec<i8>) -> Self {
+        Tensor::new(shape, Storage::I8(Arc::new(v)))
+    }
+
+    pub fn from_bool(shape: Vec<usize>, v: Vec<bool>) -> Self {
+        Tensor::new(shape, Storage::Bool(Arc::new(v)))
+    }
+
+    /// Rank-0 f32 scalar.
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::from_f32(vec![], vec![v])
+    }
+
+    /// Rank-0 boolean (Relay `if` guards are rank-0 bool tensors, §3.2.3).
+    pub fn scalar_bool(v: bool) -> Self {
+        Tensor::from_bool(vec![], vec![v])
+    }
+
+    pub fn scalar_i64(v: i64) -> Self {
+        Tensor::from_i64(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Storage::F32(Arc::new(vec![0.0; n])),
+            DType::F64 => Storage::F64(Arc::new(vec![0.0; n])),
+            DType::I64 => Storage::I64(Arc::new(vec![0; n])),
+            DType::I32 => Storage::I32(Arc::new(vec![0; n])),
+            DType::I16 => Storage::I16(Arc::new(vec![0; n])),
+            DType::I8 => Storage::I8(Arc::new(vec![0; n])),
+            DType::U8 => Storage::U8(Arc::new(vec![0; n])),
+            DType::Bool => Storage::Bool(Arc::new(vec![false; n])),
+        };
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    pub fn ones(shape: &[usize], dtype: DType) -> Self {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Storage::F32(Arc::new(vec![1.0; n])),
+            DType::F64 => Storage::F64(Arc::new(vec![1.0; n])),
+            DType::I64 => Storage::I64(Arc::new(vec![1; n])),
+            DType::I32 => Storage::I32(Arc::new(vec![1; n])),
+            DType::I16 => Storage::I16(Arc::new(vec![1; n])),
+            DType::I8 => Storage::I8(Arc::new(vec![1; n])),
+            DType::U8 => Storage::U8(Arc::new(vec![1; n])),
+            DType::Bool => Storage::Bool(Arc::new(vec![true; n])),
+        };
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    pub fn full_f32(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::from_f32(shape.to_vec(), vec![v; n])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn storage(&self) -> &Storage {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Storage::F32(v) => v,
+            other => panic!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f64(&self) -> &[f64] {
+        match &self.data {
+            Storage::F64(v) => v,
+            other => panic!("expected f64 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i64(&self) -> &[i64] {
+        match &self.data {
+            Storage::I64(v) => v,
+            other => panic!("expected i64 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Storage::I32(v) => v,
+            other => panic!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i16(&self) -> &[i16] {
+        match &self.data {
+            Storage::I16(v) => v,
+            other => panic!("expected i16 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        match &self.data {
+            Storage::I8(v) => v,
+            other => panic!("expected i8 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_bool(&self) -> &[bool] {
+        match &self.data {
+            Storage::Bool(v) => v,
+            other => panic!("expected bool tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// The single element of a rank-0 bool tensor.
+    pub fn bool_value(&self) -> bool {
+        assert!(self.numel() == 1, "bool_value on non-scalar {:?}", self.shape);
+        self.as_bool()[0]
+    }
+
+    pub fn f32_value(&self) -> f32 {
+        assert!(self.numel() == 1, "f32_value on non-scalar {:?}", self.shape);
+        self.as_f32()[0]
+    }
+
+    pub fn i64_value(&self) -> i64 {
+        assert!(self.numel() == 1, "i64_value on non-scalar {:?}", self.shape);
+        self.as_i64()[0]
+    }
+
+    /// Lossy conversion of any element to f64 (for printing / calibration).
+    pub fn get_f64(&self, idx: usize) -> f64 {
+        match &self.data {
+            Storage::F32(v) => v[idx] as f64,
+            Storage::F64(v) => v[idx],
+            Storage::I64(v) => v[idx] as f64,
+            Storage::I32(v) => v[idx] as f64,
+            Storage::I16(v) => v[idx] as f64,
+            Storage::I8(v) => v[idx] as f64,
+            Storage::U8(v) => v[idx] as f64,
+            Storage::Bool(v) => v[idx] as u8 as f64,
+        }
+    }
+
+    /// Row-major strides for this tensor's shape.
+    pub fn strides(&self) -> Vec<usize> {
+        shape::row_major_strides(&self.shape)
+    }
+
+    /// All elements as f32 (casting), used by calibration and tests.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        (0..self.numel()).map(|i| self.get_f64(i) as f32).collect()
+    }
+
+    /// Maximum absolute difference against another tensor (f32 semantics).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        (0..self.numel())
+            .map(|i| (self.get_f64(i) - other.get_f64(i)).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f64, rtol: f64) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        (0..self.numel()).all(|i| {
+            let a = self.get_f64(i);
+            let b = other.get_f64(i);
+            (a - b).abs() <= atol + rtol * b.abs()
+        })
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor[{:?}, {}]", self.shape, self.dtype())?;
+        if self.numel() <= 8 {
+            let vals: Vec<String> = (0..self.numel())
+                .map(|i| format!("{:.4}", self.get_f64(i)))
+                .collect();
+            write!(f, " {{{}}}", vals.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_inspect() {
+        let t = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.strides(), vec![3, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match buffer length")]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros_ones_all_dtypes() {
+        for dt in [
+            DType::F32,
+            DType::F64,
+            DType::I64,
+            DType::I32,
+            DType::I16,
+            DType::I8,
+            DType::U8,
+            DType::Bool,
+        ] {
+            let z = Tensor::zeros(&[2, 2], dt);
+            let o = Tensor::ones(&[2, 2], dt);
+            assert_eq!(z.dtype(), dt);
+            assert_eq!(o.get_f64(3), 1.0);
+            assert_eq!(z.get_f64(0), 0.0);
+        }
+    }
+
+    #[test]
+    fn scalar_bool_roundtrip() {
+        assert!(Tensor::scalar_bool(true).bool_value());
+        assert!(!Tensor::scalar_bool(false).bool_value());
+    }
+
+    #[test]
+    fn allclose_works() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::from_f32(vec![2], vec![1.0 + 1e-7, 2.0]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::from_f32(vec![2], vec![1.5, 2.0]);
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+    }
+}

@@ -1,0 +1,117 @@
+//! Spatial pooling (NCHW): max / avg / global-avg.
+
+use std::sync::Arc;
+
+use super::{Storage, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Pool x (N,C,H,W) with a (k,k) window and given stride/padding.
+pub fn pool2d(x: &Tensor, kind: PoolKind, k: usize, stride: usize, padding: usize) -> Tensor {
+    assert_eq!(x.rank(), 4, "pool2d input rank");
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = (h + 2 * padding - k) / stride + 1;
+    let ow = (w + 2 * padding - k) / stride + 1;
+    let xv = x.as_f32();
+    let mut out = Vec::with_capacity(n * c * oh * ow);
+    for img in 0..n * c {
+        let base = img * h * w;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = match kind {
+                    PoolKind::Max => f32::NEG_INFINITY,
+                    PoolKind::Avg => 0.0,
+                };
+                let mut count = 0usize;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - padding as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - padding as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let v = xv[base + iy as usize * w + ix as usize];
+                        match kind {
+                            PoolKind::Max => acc = acc.max(v),
+                            PoolKind::Avg => acc += v,
+                        }
+                        count += 1;
+                    }
+                }
+                out.push(match kind {
+                    PoolKind::Max => acc,
+                    // TVM convention: divide by window size incl. padding?
+                    // We divide by the number of *valid* elements (count),
+                    // matching count_include_pad=False.
+                    PoolKind::Avg => acc / count.max(1) as f32,
+                });
+            }
+        }
+    }
+    Tensor::new(vec![n, c, oh, ow], Storage::F32(Arc::new(out)))
+}
+
+/// Global average pool (N,C,H,W) -> (N,C,1,1).
+pub fn global_avg_pool2d(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let xv = x.as_f32();
+    let mut out = Vec::with_capacity(n * c);
+    for img in 0..n * c {
+        let base = img * h * w;
+        let s: f32 = xv[base..base + h * w].iter().sum();
+        out.push(s / (h * w) as f32);
+    }
+    Tensor::new(vec![n, c, 1, 1], Storage::F32(Arc::new(out)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Tensor::from_f32(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let out = pool2d(&x, PoolKind::Max, 2, 2, 0);
+        assert_eq!(out.shape(), &[1, 1, 1, 1]);
+        assert_eq!(out.as_f32(), &[4.0]);
+    }
+
+    #[test]
+    fn avg_pool_2x2() {
+        let x = Tensor::from_f32(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let out = pool2d(&x, PoolKind::Avg, 2, 2, 0);
+        assert_eq!(out.as_f32(), &[2.5]);
+    }
+
+    #[test]
+    fn max_pool_stride() {
+        let x = Tensor::from_f32(vec![1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let out = pool2d(&x, PoolKind::Max, 2, 2, 0);
+        assert_eq!(out.shape(), &[1, 1, 2, 2]);
+        assert_eq!(out.as_f32(), &[5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn avg_pool_padding_excludes_pad() {
+        // 1x1 input, 3x3 window with padding 1: only one valid element.
+        let x = Tensor::from_f32(vec![1, 1, 1, 1], vec![6.0]);
+        let out = pool2d(&x, PoolKind::Avg, 3, 1, 1);
+        assert_eq!(out.as_f32(), &[6.0]);
+    }
+
+    #[test]
+    fn global_avg() {
+        let x = Tensor::from_f32(vec![1, 2, 2, 2], vec![1., 1., 1., 1., 2., 2., 2., 2.]);
+        let out = global_avg_pool2d(&x);
+        assert_eq!(out.shape(), &[1, 2, 1, 1]);
+        assert_eq!(out.as_f32(), &[1.0, 2.0]);
+    }
+}

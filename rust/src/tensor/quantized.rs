@@ -1,0 +1,212 @@
+//! Narrow-integer kernels: the realized form of the quantization flow
+//! (paper §4.5) and the "ARM" measurement substrate for Fig 13.
+//!
+//! i8 x i8 matmul/conv with a choice of i16 (saturating) or i32 accumulator;
+//! requantization (scale shift back to i8); dequantize.
+
+use std::sync::Arc;
+
+use super::conv::{conv2d_out_hw, Conv2dParams};
+use super::{Storage, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccBits {
+    I16,
+    I32,
+}
+
+/// Quantize f32 -> i8 with power-of-two `scale` (value = round(x / scale)).
+pub fn quantize_i8(x: &Tensor, scale: f32) -> Tensor {
+    let out: Vec<i8> = x
+        .as_f32()
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-128.0, 127.0) as i8)
+        .collect();
+    Tensor::new(x.shape().to_vec(), Storage::I8(Arc::new(out)))
+}
+
+/// Dequantize an integer tensor back to f32 with `scale`.
+pub fn dequantize(x: &Tensor, scale: f32) -> Tensor {
+    let out: Vec<f32> = (0..x.numel()).map(|i| x.get_f64(i) as f32 * scale).collect();
+    Tensor::from_f32(x.shape().to_vec(), out)
+}
+
+/// Requantize a wide accumulator to i8 by a right shift (power-of-2 scale),
+/// rounding to nearest, saturating — VTA's only rescaling primitive.
+pub fn requantize_shift(x: &Tensor, shift: u32) -> Tensor {
+    let half = if shift == 0 { 0 } else { 1i64 << (shift - 1) };
+    let out: Vec<i8> = (0..x.numel())
+        .map(|i| {
+            let v = x.get_f64(i) as i64;
+            (((v + half) >> shift).clamp(-128, 127)) as i8
+        })
+        .collect();
+    Tensor::new(x.shape().to_vec(), Storage::I8(Arc::new(out)))
+}
+
+#[inline]
+fn sat16(v: i32) -> i32 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32)
+}
+
+/// i8 matmul with i32 or saturating-i16 accumulation.
+pub fn quant_matmul(a: &Tensor, b: &Tensor, acc: AccBits) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let av = a.as_i8();
+    let bv = b.as_i8();
+    let mut out = vec![0i32; m * n];
+    match acc {
+        AccBits::I32 => {
+            for i in 0..m {
+                let arow = &av[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik == 0 {
+                        continue;
+                    }
+                    let aik = aik as i32;
+                    let brow = &bv[kk * n..(kk + 1) * n];
+                    for (o, &bj) in orow.iter_mut().zip(brow.iter()) {
+                        *o += aik * bj as i32;
+                    }
+                }
+            }
+        }
+        AccBits::I16 => {
+            // Saturate after every partial product (hardware-faithful i16
+            // accumulator; matches the Pallas quant kernel's per-step clip).
+            for i in 0..m {
+                let arow = &av[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    let aik = aik as i32;
+                    let brow = &bv[kk * n..(kk + 1) * n];
+                    for (o, &bj) in orow.iter_mut().zip(brow.iter()) {
+                        *o = sat16(*o + aik * bj as i32);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_i32(vec![m, n], out)
+}
+
+/// i8 NCHW conv with i32 or saturating-i16 accumulation.
+pub fn quant_conv2d(x: &Tensor, w: &Tensor, p: &Conv2dParams, acc: AccBits) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (o, cg, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(c, cg * p.groups);
+    let (oh, ow) = conv2d_out_hw(h, wd, kh, kw, p);
+    let og = o / p.groups;
+    let xv = x.as_i8();
+    let wv = w.as_i8();
+    let mut out = vec![0i32; n * o * oh * ow];
+    for ni in 0..n {
+        for g in 0..p.groups {
+            for oc in 0..og {
+                let ocabs = g * og + oc;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc_v: i32 = 0;
+                        for ic in 0..cg {
+                            let icabs = g * cg + ic;
+                            for ky in 0..kh {
+                                let iy = (oy * p.stride.0 + ky) as isize
+                                    - p.padding.0 as isize;
+                                if iy < 0 || iy >= h as isize {
+                                    continue;
+                                }
+                                for kx in 0..kw {
+                                    let ix = (ox * p.stride.1 + kx) as isize
+                                        - p.padding.1 as isize;
+                                    if ix < 0 || ix >= wd as isize {
+                                        continue;
+                                    }
+                                    let xval = xv
+                                        [((ni * c + icabs) * h + iy as usize) * wd
+                                            + ix as usize]
+                                        as i32;
+                                    let wval =
+                                        wv[((ocabs * cg + ic) * kh + ky) * kw + kx] as i32;
+                                    acc_v += xval * wval;
+                                    if acc == AccBits::I16 {
+                                        acc_v = sat16(acc_v);
+                                    }
+                                }
+                            }
+                        }
+                        out[((ni * o + ocabs) * oh + oy) * ow + ox] = acc_v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_i32(vec![n, o, oh, ow], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip() {
+        let x = Tensor::from_f32(vec![4], vec![0.5, -0.25, 1.0, -1.0]);
+        let q = quantize_i8(&x, 0.25);
+        assert_eq!(q.as_i8(), &[2, -1, 4, -4]);
+        let d = dequantize(&q, 0.25);
+        assert_eq!(d.as_f32(), x.as_f32());
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let x = Tensor::from_f32(vec![2], vec![100.0, -100.0]);
+        let q = quantize_i8(&x, 0.5);
+        assert_eq!(q.as_i8(), &[127, -128]);
+    }
+
+    #[test]
+    fn qmatmul_i32_exact() {
+        let a = Tensor::from_i8(vec![1, 3], vec![1, 2, 3]);
+        let b = Tensor::from_i8(vec![3, 1], vec![4, 5, 6]);
+        let out = quant_matmul(&a, &b, AccBits::I32);
+        assert_eq!(out.as_i32(), &[32]);
+    }
+
+    #[test]
+    fn qmatmul_i16_saturates() {
+        // 127*127*4 = 64516 > 32767: i16 accumulation must clip.
+        let a = Tensor::from_i8(vec![1, 4], vec![127; 4]);
+        let b = Tensor::from_i8(vec![4, 1], vec![127; 4]);
+        let out = quant_matmul(&a, &b, AccBits::I16);
+        assert_eq!(out.as_i32(), &[32767]);
+        let exact = quant_matmul(&a, &b, AccBits::I32);
+        assert_eq!(exact.as_i32(), &[64516]);
+    }
+
+    #[test]
+    fn qconv_matches_float_conv_small() {
+        use super::super::conv::conv2d;
+        let xq = Tensor::from_i8(vec![1, 1, 2, 2], vec![1, 2, 3, 4]);
+        let wq = Tensor::from_i8(vec![1, 1, 2, 2], vec![1, 1, 1, 1]);
+        let p = Conv2dParams::default();
+        let qo = quant_conv2d(&xq, &wq, &p, AccBits::I32);
+        assert_eq!(qo.as_i32(), &[10]);
+        // float path agrees
+        let xf = Tensor::from_f32(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let wf = Tensor::from_f32(vec![1, 1, 2, 2], vec![1.; 4]);
+        assert_eq!(conv2d(&xf, &wf, &p).as_f32(), &[10.0]);
+    }
+
+    #[test]
+    fn requantize_shift_rounds() {
+        let x = Tensor::from_i32(vec![3], vec![256, 300, -300]);
+        let q = requantize_shift(&x, 8); // divide by 256, round
+        assert_eq!(q.as_i8(), &[1, 1, -1]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Reductions, softmax family, argmax.
+
+use std::sync::Arc;
+
+use super::shape::norm_axis;
+use super::{Storage, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceKind {
+    Sum,
+    Mean,
+    Max,
+    Min,
+    Prod,
+    All,
+    Any,
+}
+
+/// Reduce over `axes` (empty = all axes). `keepdims` keeps size-1 dims.
+pub fn reduce(x: &Tensor, kind: ReduceKind, axes: &[i64], keepdims: bool) -> Tensor {
+    let rank = x.rank();
+    let axes: Vec<usize> = if axes.is_empty() {
+        (0..rank).collect()
+    } else {
+        axes.iter().map(|&a| norm_axis(a, rank)).collect()
+    };
+    let reduce_mask: Vec<bool> = (0..rank).map(|i| axes.contains(&i)).collect();
+    let out_shape_full: Vec<usize> = x
+        .shape()
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| if reduce_mask[i] { 1 } else { d })
+        .collect();
+    let out_numel: usize = out_shape_full.iter().product();
+    let reduced_count: usize = x
+        .shape()
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| reduce_mask[*i])
+        .map(|(_, &d)| d)
+        .product();
+
+    // Bool reductions.
+    if matches!(kind, ReduceKind::All | ReduceKind::Any) {
+        let xv = x.as_bool();
+        let mut acc = vec![matches!(kind, ReduceKind::All); out_numel];
+        let strides = super::shape::row_major_strides(&out_shape_full);
+        for (i, &v) in xv.iter().enumerate() {
+            let oi = out_index(i, x.shape(), &reduce_mask, &strides);
+            acc[oi] = match kind {
+                ReduceKind::All => acc[oi] && v,
+                ReduceKind::Any => acc[oi] || v,
+                _ => unreachable!(),
+            };
+        }
+        let shape = final_shape(&out_shape_full, &reduce_mask, keepdims);
+        return Tensor::new(shape, Storage::Bool(Arc::new(acc)));
+    }
+
+    let init = match kind {
+        ReduceKind::Sum | ReduceKind::Mean => 0.0,
+        ReduceKind::Max => f64::NEG_INFINITY,
+        ReduceKind::Min => f64::INFINITY,
+        ReduceKind::Prod => 1.0,
+        _ => unreachable!(),
+    };
+    let mut acc = vec![init; out_numel];
+    let strides = super::shape::row_major_strides(&out_shape_full);
+    for i in 0..x.numel() {
+        let v = x.get_f64(i);
+        let oi = out_index(i, x.shape(), &reduce_mask, &strides);
+        acc[oi] = match kind {
+            ReduceKind::Sum | ReduceKind::Mean => acc[oi] + v,
+            ReduceKind::Max => acc[oi].max(v),
+            ReduceKind::Min => acc[oi].min(v),
+            ReduceKind::Prod => acc[oi] * v,
+            _ => unreachable!(),
+        };
+    }
+    if kind == ReduceKind::Mean {
+        for a in acc.iter_mut() {
+            *a /= reduced_count as f64;
+        }
+    }
+    let shape = final_shape(&out_shape_full, &reduce_mask, keepdims);
+    super::elementwise::from_f64_as(x.dtype(), shape, &acc)
+}
+
+fn out_index(flat: usize, in_shape: &[usize], mask: &[bool], out_strides: &[usize]) -> usize {
+    let mut rem = flat;
+    let mut oi = 0;
+    // Decompose flat index; reduced axes contribute 0.
+    for ax in (0..in_shape.len()).rev() {
+        let d = in_shape[ax];
+        let coord = rem % d;
+        rem /= d;
+        if !mask[ax] {
+            oi += coord * out_strides[ax];
+        }
+    }
+    oi
+}
+
+fn final_shape(full: &[usize], mask: &[bool], keepdims: bool) -> Vec<usize> {
+    if keepdims {
+        full.to_vec()
+    } else {
+        full.iter()
+            .enumerate()
+            .filter(|(i, _)| !mask[*i])
+            .map(|(_, &d)| d)
+            .collect()
+    }
+}
+
+/// Numerically-stable softmax along `axis`.
+pub fn softmax(x: &Tensor, axis: i64) -> Tensor {
+    let ax = norm_axis(axis, x.rank());
+    map_lanes(x, ax, |lane, out| {
+        let m = lane.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for (o, &v) in out.iter_mut().zip(lane.iter()) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    })
+}
+
+/// `log_softmax` along `axis`.
+pub fn log_softmax(x: &Tensor, axis: i64) -> Tensor {
+    let ax = norm_axis(axis, x.rank());
+    map_lanes(x, ax, |lane, out| {
+        let m = lane.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = lane.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+        for (o, &v) in out.iter_mut().zip(lane.iter()) {
+            *o = v - lse;
+        }
+    })
+}
+
+/// Apply `f` to each 1-d lane along `axis` of an f32 tensor.
+fn map_lanes(x: &Tensor, axis: usize, f: impl Fn(&[f32], &mut [f32])) -> Tensor {
+    let xv = x.as_f32();
+    let d = x.shape()[axis];
+    let inner: usize = x.shape()[axis + 1..].iter().product();
+    let outer: usize = x.shape()[..axis].iter().product();
+    let mut out = vec![0f32; x.numel()];
+    let mut lane = vec![0f32; d];
+    let mut res = vec![0f32; d];
+    for o in 0..outer {
+        for i in 0..inner {
+            for j in 0..d {
+                lane[j] = xv[(o * d + j) * inner + i];
+            }
+            f(&lane, &mut res);
+            for j in 0..d {
+                out[(o * d + j) * inner + i] = res[j];
+            }
+        }
+    }
+    Tensor::new(x.shape().to_vec(), Storage::F32(Arc::new(out)))
+}
+
+/// Argmax along `axis` -> i64 tensor with that axis removed.
+pub fn argmax(x: &Tensor, axis: i64) -> Tensor {
+    let ax = norm_axis(axis, x.rank());
+    let d = x.shape()[ax];
+    let inner: usize = x.shape()[ax + 1..].iter().product();
+    let outer: usize = x.shape()[..ax].iter().product();
+    let mut out = Vec::with_capacity(outer * inner);
+    for o in 0..outer {
+        for i in 0..inner {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = 0i64;
+            for j in 0..d {
+                let v = x.get_f64((o * d + j) * inner + i);
+                if v > best {
+                    best = v;
+                    arg = j as i64;
+                }
+            }
+            out.push(arg);
+        }
+    }
+    let mut shape = x.shape().to_vec();
+    shape.remove(ax);
+    Tensor::new(shape, Storage::I64(Arc::new(out)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_all() {
+        let x = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let s = reduce(&x, ReduceKind::Sum, &[], false);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.f32_value(), 10.0);
+    }
+
+    #[test]
+    fn sum_axis0_and_1() {
+        let x = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(reduce(&x, ReduceKind::Sum, &[0], false).as_f32(), &[5., 7., 9.]);
+        assert_eq!(reduce(&x, ReduceKind::Sum, &[1], false).as_f32(), &[6., 15.]);
+        assert_eq!(reduce(&x, ReduceKind::Sum, &[-1], false).as_f32(), &[6., 15.]);
+    }
+
+    #[test]
+    fn mean_keepdims() {
+        let x = Tensor::from_f32(vec![2, 2], vec![1., 3., 5., 7.]);
+        let m = reduce(&x, ReduceKind::Mean, &[1], true);
+        assert_eq!(m.shape(), &[2, 1]);
+        assert_eq!(m.as_f32(), &[2., 6.]);
+    }
+
+    #[test]
+    fn max_min_prod() {
+        let x = Tensor::from_f32(vec![3], vec![2., 8., 4.]);
+        assert_eq!(reduce(&x, ReduceKind::Max, &[], false).f32_value(), 8.0);
+        assert_eq!(reduce(&x, ReduceKind::Min, &[], false).f32_value(), 2.0);
+        assert_eq!(reduce(&x, ReduceKind::Prod, &[], false).f32_value(), 64.0);
+    }
+
+    #[test]
+    fn bool_all_any() {
+        let x = Tensor::from_bool(vec![3], vec![true, false, true]);
+        assert!(!reduce(&x, ReduceKind::All, &[], false).bool_value());
+        assert!(reduce(&x, ReduceKind::Any, &[], false).bool_value());
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 0., 0., 0.]);
+        let s = softmax(&x, -1);
+        let v = s.as_f32();
+        assert!((v[0] + v[1] + v[2] - 1.0).abs() < 1e-6);
+        assert!((v[3] - 1.0 / 3.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn log_softmax_matches_log_of_softmax() {
+        let x = Tensor::from_f32(vec![1, 4], vec![0.5, -1., 2., 0.]);
+        let a = log_softmax(&x, -1);
+        let b = softmax(&x, -1);
+        for i in 0..4 {
+            assert!((a.as_f32()[i] - b.as_f32()[i].ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_extreme_values_stable() {
+        let x = Tensor::from_f32(vec![1, 2], vec![1000.0, 1000.0]);
+        let s = softmax(&x, -1);
+        assert!((s.as_f32()[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_axis() {
+        let x = Tensor::from_f32(vec![2, 3], vec![1., 5., 2., 9., 0., 3.]);
+        let a = argmax(&x, 1);
+        assert_eq!(a.shape(), &[2]);
+        assert_eq!(a.as_i64(), &[1, 0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! Shape utilities: strides, broadcasting (numpy rules), index math.
+//!
+//! The broadcast rule implemented here is the same one registered as the
+//! `Broadcast` *type relation* in [`crate::ty::relations`]; keeping a single
+//! authoritative implementation shared by runtime and type checker is
+//! exactly the paper's argument for relations as reusable constraints.
+
+pub type Shape = Vec<usize>;
+
+/// Row-major strides for `shape`.
+pub fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![0; shape.len()];
+    let mut acc = 1;
+    for (i, &d) in shape.iter().enumerate().rev() {
+        strides[i] = acc;
+        acc *= d;
+    }
+    strides
+}
+
+/// Numpy-style broadcast of two shapes; `None` if incompatible.
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Option<Shape> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            return None;
+        };
+    }
+    Some(out)
+}
+
+/// Strides of `shape` when broadcast up to `out_shape`: broadcast axes get
+/// stride 0 so the same element is re-read.
+pub fn broadcast_strides(shape: &[usize], out_shape: &[usize]) -> Vec<usize> {
+    let strides = row_major_strides(shape);
+    let offset = out_shape.len() - shape.len();
+    let mut out = vec![0; out_shape.len()];
+    for i in 0..shape.len() {
+        out[offset + i] = if shape[i] == 1 && out_shape[offset + i] != 1 {
+            0
+        } else {
+            strides[i]
+        };
+    }
+    out
+}
+
+/// Iterate the flat source offsets of a broadcast operand across the output
+/// iteration space. Linear-time, no per-element div/mod: maintains a
+/// multi-dimensional counter.
+pub struct BroadcastIter {
+    counter: Vec<usize>,
+    out_shape: Vec<usize>,
+    strides: Vec<usize>,
+    offset: usize,
+    remaining: usize,
+}
+
+impl BroadcastIter {
+    pub fn new(shape: &[usize], out_shape: &[usize]) -> Self {
+        let strides = broadcast_strides(shape, out_shape);
+        let remaining = out_shape.iter().product();
+        BroadcastIter {
+            counter: vec![0; out_shape.len()],
+            out_shape: out_shape.to_vec(),
+            strides,
+            offset: 0,
+            remaining,
+        }
+    }
+}
+
+impl Iterator for BroadcastIter {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let cur = self.offset;
+        self.remaining -= 1;
+        // Increment the odometer from the innermost axis.
+        for ax in (0..self.out_shape.len()).rev() {
+            self.counter[ax] += 1;
+            self.offset += self.strides[ax];
+            if self.counter[ax] < self.out_shape[ax] {
+                break;
+            }
+            self.offset -= self.strides[ax] * self.out_shape[ax];
+            self.counter[ax] = 0;
+        }
+        Some(cur)
+    }
+}
+
+/// Flat index for multi-index `idx` under `strides`.
+pub fn flat_index(idx: &[usize], strides: &[usize]) -> usize {
+    idx.iter().zip(strides).map(|(i, s)| i * s).sum()
+}
+
+/// Normalize a possibly-negative axis.
+pub fn norm_axis(axis: i64, rank: usize) -> usize {
+    if axis < 0 {
+        (rank as i64 + axis) as usize
+    } else {
+        axis as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(row_major_strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(row_major_strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn broadcast_basic() {
+        assert_eq!(broadcast_shapes(&[2, 3], &[3]), Some(vec![2, 3]));
+        assert_eq!(broadcast_shapes(&[2, 1], &[1, 4]), Some(vec![2, 4]));
+        assert_eq!(broadcast_shapes(&[], &[5]), Some(vec![5]));
+        assert_eq!(broadcast_shapes(&[2, 3], &[4]), None);
+    }
+
+    #[test]
+    fn broadcast_iter_scalar() {
+        let offs: Vec<usize> = BroadcastIter::new(&[], &[2, 2]).collect();
+        assert_eq!(offs, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn broadcast_iter_row() {
+        // shape [3] broadcast to [2,3]: offsets 0,1,2,0,1,2
+        let offs: Vec<usize> = BroadcastIter::new(&[3], &[2, 3]).collect();
+        assert_eq!(offs, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn broadcast_iter_col() {
+        // shape [2,1] broadcast to [2,3]: offsets 0,0,0,1,1,1
+        let offs: Vec<usize> = BroadcastIter::new(&[2, 1], &[2, 3]).collect();
+        assert_eq!(offs, vec![0, 0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn broadcast_iter_identity() {
+        let offs: Vec<usize> = BroadcastIter::new(&[2, 2], &[2, 2]).collect();
+        assert_eq!(offs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn axis_normalization() {
+        assert_eq!(norm_axis(-1, 3), 2);
+        assert_eq!(norm_axis(1, 3), 1);
+    }
+}

@@ -1,0 +1,638 @@
+//! Type inference and checking (paper §3.3).
+//!
+//! A Hindley–Milner-style inference algorithm enriched with a constraint
+//! solver for *type relations* (§3.3.3). Inference proceeds in three steps:
+//!
+//! 1. a pass over the AST generates types (introducing type variables) and
+//!    populates the relation queue — one pending relation per operator call
+//!    site;
+//! 2. the solver iterates the queue: a relation whose inputs are concrete
+//!    enough is discharged by calling its meta-language implementation
+//!    (from the operator registry) and unifying the result with the call's
+//!    output variable; relations that cannot make progress are requeued;
+//! 3. final types are read back through the union-find substitution.
+//!
+//! If the queue stops making progress while non-empty, at least one
+//! variable is under-constrained and inference fails — exactly the paper's
+//! §3.3.3 failure condition.
+
+pub mod unify;
+
+use std::collections::HashMap;
+
+use crate::ir::{Attrs, Expr, Function, Module, Pattern, Type, E};
+use crate::op;
+use unify::Unifier;
+
+#[derive(Debug)]
+pub struct TypeError(pub String);
+
+impl std::fmt::Display for TypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "type error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TypeError {}
+
+type Result<T> = std::result::Result<T, TypeError>;
+
+/// One pending relation instance at a call site (§3.3.2).
+struct PendingRel {
+    op: &'static op::OpDef,
+    arg_tys: Vec<Type>,
+    out: Type,
+    attrs: Attrs,
+    site: String,
+}
+
+/// The result of inference: a map from expression node (by Arc address) to
+/// its inferred type, plus the module-level function types.
+pub struct TypeReport {
+    types: HashMap<usize, Type>,
+    pub def_types: HashMap<String, Type>,
+}
+
+impl TypeReport {
+    /// Type of a specific expression node (same Arc as was inferred).
+    pub fn type_of(&self, e: &E) -> Option<&Type> {
+        self.types.get(&(std::sync::Arc::as_ptr(e) as usize))
+    }
+}
+
+pub struct InferCtx<'m> {
+    module: &'m Module,
+    uni: Unifier,
+    queue: Vec<PendingRel>,
+    types: HashMap<usize, Type>,
+    env: HashMap<u32, Type>,
+    def_types: HashMap<String, Type>,
+}
+
+impl<'m> InferCtx<'m> {
+    pub fn new(module: &'m Module) -> Self {
+        InferCtx {
+            module,
+            uni: Unifier::new(),
+            queue: Vec::new(),
+            types: HashMap::new(),
+            env: HashMap::new(),
+            def_types: HashMap::new(),
+        }
+    }
+
+    fn fresh(&mut self) -> Type {
+        self.uni.fresh_var()
+    }
+
+    fn unify(&mut self, a: &Type, b: &Type, site: &str) -> Result<()> {
+        self.uni
+            .unify(a, b)
+            .map_err(|e| TypeError(format!("{site}: {e}")))
+    }
+
+    fn record(&mut self, e: &E, t: Type) -> Type {
+        self.types.insert(std::sync::Arc::as_ptr(e) as usize, t.clone());
+        t
+    }
+
+    // ---------------------------------------------------------- generation
+
+    pub fn infer_function(&mut self, f: &Function) -> Result<Type> {
+        let mut params = Vec::new();
+        for (p, ann) in &f.params {
+            let t = ann.clone().unwrap_or_else(|| self.fresh());
+            self.env.insert(p.id, t.clone());
+            params.push(t);
+        }
+        let body_t = self.infer(&f.body)?;
+        if let Some(r) = &f.ret {
+            self.unify(&body_t, r, "function return annotation")?;
+        }
+        Ok(Type::Func { params, ret: Box::new(body_t) })
+    }
+
+    pub fn infer(&mut self, e: &E) -> Result<Type> {
+        let t = match &**e {
+            Expr::Var(v) => self
+                .env
+                .get(&v.id)
+                .cloned()
+                .ok_or_else(|| TypeError(format!("unbound variable {v}")))?,
+            Expr::Global(g) => self
+                .def_types
+                .get(g)
+                .cloned()
+                .ok_or_else(|| TypeError(format!("unknown global @{g}")))?,
+            Expr::Const(t) => Type::Tensor {
+                shape: t.shape().iter().map(|&d| crate::ir::Dim::Known(d)).collect(),
+                dtype: t.dtype(),
+            },
+            Expr::Op(name) => {
+                // Operator references used first-class get an opaque type
+                // variable; direct calls go through relations instead.
+                let _ = op::lookup(name)
+                    .ok_or_else(|| TypeError(format!("unknown operator {name}")))?;
+                self.fresh()
+            }
+            Expr::Ctor(name) => {
+                let (adt, fields) = self
+                    .module
+                    .ctor_info(name)
+                    .ok_or_else(|| TypeError(format!("unknown constructor {name}")))?
+                    .clone();
+                let (inst_fields, inst_ty) = self.instantiate_adt(&adt, &fields);
+                if inst_fields.is_empty() {
+                    inst_ty
+                } else {
+                    Type::Func { params: inst_fields, ret: Box::new(inst_ty) }
+                }
+            }
+            Expr::Tuple(es) => {
+                let ts: Result<Vec<_>> = es.iter().map(|x| self.infer(x)).collect();
+                Type::Tuple(ts?)
+            }
+            Expr::Proj(t, i) => {
+                let tt = self.infer(t)?;
+                match self.uni.resolve(&tt) {
+                    Type::Tuple(ts) => ts
+                        .get(*i)
+                        .cloned()
+                        .ok_or_else(|| TypeError(format!("projection .{i} out of range")))?,
+                    Type::Var(_) => {
+                        return Err(TypeError(
+                            "cannot project from unresolved tuple type (annotate)".into(),
+                        ))
+                    }
+                    other => {
+                        return Err(TypeError(format!("projection from non-tuple {other}")))
+                    }
+                }
+            }
+            Expr::Let { var, ty, value, body } => {
+                // Recursive function lets: pre-bind with a fresh var.
+                let vt = if matches!(&**value, Expr::Func(_)) {
+                    let pre = ty.clone().unwrap_or_else(|| self.fresh());
+                    self.env.insert(var.id, pre.clone());
+                    let actual = self.infer(value)?;
+                    self.unify(&pre, &actual, "recursive let")?;
+                    pre
+                } else {
+                    let actual = self.infer(value)?;
+                    if let Some(ann) = ty {
+                        self.unify(&actual, ann, "let annotation")?;
+                    }
+                    actual
+                };
+                self.env.insert(var.id, vt);
+                self.infer(body)?
+            }
+            Expr::Func(f) => self.infer_function(f)?,
+            Expr::If { cond, then_, else_ } => {
+                let ct = self.infer(cond)?;
+                self.unify(&ct, &Type::scalar_bool(), "if guard")?;
+                let tt = self.infer(then_)?;
+                let et = self.infer(else_)?;
+                self.unify(&tt, &et, "if branches")?;
+                tt
+            }
+            Expr::Match { scrut, arms } => {
+                let st = self.infer(scrut)?;
+                let mut out: Option<Type> = None;
+                for (p, a) in arms {
+                    self.bind_pattern(p, &st)?;
+                    let at = self.infer(a)?;
+                    match &out {
+                        Some(o) => self.unify(o, &at, "match arms")?,
+                        None => out = Some(at),
+                    }
+                }
+                out.ok_or_else(|| TypeError("empty match".into()))?
+            }
+            Expr::Grad(f) => {
+                // Type-Gradient: fn(T...) -> O  =>  fn(T...) -> (O, (T...)).
+                let ft = self.infer(f)?;
+                match self.uni.resolve(&ft) {
+                    Type::Func { params, ret } => Type::Func {
+                        params: params.clone(),
+                        ret: Box::new(Type::Tuple(vec![*ret, Type::Tuple(params)])),
+                    },
+                    other => return Err(TypeError(format!("grad of non-function {other}"))),
+                }
+            }
+            Expr::RefNew(v) => Type::Ref(Box::new(self.infer(v)?)),
+            Expr::RefRead(r) => {
+                let rt = self.infer(r)?;
+                let inner = self.fresh();
+                self.unify(&rt, &Type::Ref(Box::new(inner.clone())), "ref read")?;
+                inner
+            }
+            Expr::RefWrite(r, v) => {
+                let rt = self.infer(r)?;
+                let vt = self.infer(v)?;
+                self.unify(&rt, &Type::Ref(Box::new(vt)), "ref write")?;
+                Type::unit()
+            }
+            Expr::Call { f, args, attrs } => self.infer_call(f, args, attrs)?,
+        };
+        Ok(self.record(e, t))
+    }
+
+    fn infer_call(&mut self, f: &E, args: &[E], attrs: &Attrs) -> Result<Type> {
+        match &**f {
+            Expr::Op(name) => {
+                let def = op::lookup(name)
+                    .ok_or_else(|| TypeError(format!("unknown operator {name}")))?;
+                if let Some(ar) = def.arity {
+                    if args.len() != ar {
+                        return Err(TypeError(format!(
+                            "operator {name} expects {ar} args, got {}",
+                            args.len()
+                        )));
+                    }
+                }
+                let arg_tys: Result<Vec<_>> = args.iter().map(|a| self.infer(a)).collect();
+                let out = self.fresh();
+                // Queue the relation (Type-Call rule: relations must hold
+                // at each call site).
+                self.queue.push(PendingRel {
+                    op: def,
+                    arg_tys: arg_tys?,
+                    out: out.clone(),
+                    attrs: attrs.clone(),
+                    site: name.to_string(),
+                });
+                Ok(out)
+            }
+            Expr::Ctor(name) => {
+                let (adt, fields) = self
+                    .module
+                    .ctor_info(name)
+                    .ok_or_else(|| TypeError(format!("unknown constructor {name}")))?
+                    .clone();
+                let (inst_fields, inst_ty) = self.instantiate_adt(&adt, &fields);
+                if inst_fields.len() != args.len() {
+                    return Err(TypeError(format!(
+                        "constructor {name} expects {} fields, got {}",
+                        inst_fields.len(),
+                        args.len()
+                    )));
+                }
+                for (a, ft) in args.iter().zip(&inst_fields) {
+                    let at = self.infer(a)?;
+                    self.unify(&at, ft, &format!("constructor {name}"))?;
+                }
+                Ok(inst_ty)
+            }
+            _ => {
+                let ft = self.infer(f)?;
+                let arg_tys: Result<Vec<_>> = args.iter().map(|a| self.infer(a)).collect();
+                let out = self.fresh();
+                let expect = Type::Func { params: arg_tys?, ret: Box::new(out.clone()) };
+                self.unify(&ft, &expect, "call")?;
+                Ok(out)
+            }
+        }
+    }
+
+    /// Instantiate an ADT's constructor field types with fresh vars for its
+    /// type parameters.
+    fn instantiate_adt(&mut self, adt: &str, fields: &[Type]) -> (Vec<Type>, Type) {
+        let td = self.module.types.get(adt).cloned();
+        let params: Vec<String> = td.as_ref().map(|t| t.params.clone()).unwrap_or_default();
+        let inst: Vec<Type> = params.iter().map(|_| self.fresh()).collect();
+        let inst_fields: Vec<Type> =
+            fields.iter().map(|t| subst_params(t, &params, &inst)).collect();
+        let inst_ty = Type::Adt { name: adt.to_string(), args: inst };
+        (inst_fields, inst_ty)
+    }
+
+    fn bind_pattern(&mut self, p: &Pattern, scrut_ty: &Type) -> Result<()> {
+        match p {
+            Pattern::Wildcard => Ok(()),
+            Pattern::Var(v) => {
+                self.env.insert(v.id, scrut_ty.clone());
+                Ok(())
+            }
+            Pattern::Tuple(ps) => {
+                let parts: Vec<Type> = (0..ps.len()).map(|_| self.fresh()).collect();
+                self.unify(scrut_ty, &Type::Tuple(parts.clone()), "tuple pattern")?;
+                for (p, t) in ps.iter().zip(&parts) {
+                    self.bind_pattern(p, t)?;
+                }
+                Ok(())
+            }
+            Pattern::Ctor(name, ps) => {
+                let (adt, fields) = self
+                    .module
+                    .ctor_info(name)
+                    .ok_or_else(|| TypeError(format!("unknown constructor {name}")))?
+                    .clone();
+                let (inst_fields, inst_ty) = self.instantiate_adt(&adt, &fields);
+                self.unify(scrut_ty, &inst_ty, &format!("pattern {name}"))?;
+                if !ps.is_empty() {
+                    if ps.len() != inst_fields.len() {
+                        return Err(TypeError(format!(
+                            "pattern {name}: {} subpatterns for {} fields",
+                            ps.len(),
+                            inst_fields.len()
+                        )));
+                    }
+                    for (p, t) in ps.iter().zip(&inst_fields) {
+                        self.bind_pattern(p, t)?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- solving
+
+    /// §3.3.3: iterate the relation queue to fixpoint.
+    fn solve(&mut self) -> Result<()> {
+        let mut queue = std::mem::take(&mut self.queue);
+        loop {
+            let mut progress = false;
+            let mut next = Vec::new();
+            for rel in queue.drain(..) {
+                let arg_tys: Vec<Type> =
+                    rel.arg_tys.iter().map(|t| self.uni.resolve(t)).collect();
+                match (rel.op.rel)(&arg_tys, &rel.attrs) {
+                    Ok(Some(out_ty)) => {
+                        self.uni.unify(&rel.out, &out_ty).map_err(|e| {
+                            TypeError(format!("at call of {}: {e}", rel.site))
+                        })?;
+                        progress = true;
+                    }
+                    Ok(None) => next.push(rel),
+                    Err(e) => {
+                        return Err(TypeError(format!("at call of {}: {e}", rel.site)))
+                    }
+                }
+            }
+            if next.is_empty() {
+                return Ok(());
+            }
+            if !progress {
+                let names: Vec<&str> = next.iter().map(|r| r.site.as_str()).collect();
+                return Err(TypeError(format!(
+                    "type inference under-constrained; unsolved relations: {names:?}"
+                )));
+            }
+            queue = next;
+        }
+    }
+
+    fn finish(mut self) -> Result<TypeReport> {
+        self.solve()?;
+        let types = self
+            .types
+            .iter()
+            .map(|(k, v)| (*k, self.uni.resolve(v)))
+            .collect();
+        let def_types = self
+            .def_types
+            .iter()
+            .map(|(k, v)| (k.clone(), self.uni.resolve(v)))
+            .collect();
+        Ok(TypeReport { types, def_types })
+    }
+}
+
+/// Substitute named ADT type parameters by instantiations.
+fn subst_params(t: &Type, params: &[String], inst: &[Type]) -> Type {
+    match t {
+        Type::Adt { name, args } => {
+            if args.is_empty() {
+                if let Some(i) = params.iter().position(|p| p == name) {
+                    return inst[i].clone();
+                }
+            }
+            Type::Adt {
+                name: name.clone(),
+                args: args.iter().map(|a| subst_params(a, params, inst)).collect(),
+            }
+        }
+        Type::Func { params: ps, ret } => Type::Func {
+            params: ps.iter().map(|p| subst_params(p, params, inst)).collect(),
+            ret: Box::new(subst_params(ret, params, inst)),
+        },
+        Type::Tuple(ts) => {
+            Type::Tuple(ts.iter().map(|x| subst_params(x, params, inst)).collect())
+        }
+        Type::Ref(r) => Type::Ref(Box::new(subst_params(r, params, inst))),
+        _ => t.clone(),
+    }
+}
+
+/// Infer types for an expression under a module. Returns the report and
+/// the expression's overall type.
+pub fn infer_expr(module: &Module, e: &E) -> Result<(TypeReport, Type)> {
+    let mut ctx = InferCtx::new(module);
+    // Pre-declare module defs so globals resolve (mutual recursion).
+    let def_names: Vec<String> = module.defs.keys().cloned().collect();
+    for name in &def_names {
+        let v = ctx.fresh();
+        ctx.def_types.insert(name.clone(), v);
+    }
+    for name in &def_names {
+        let f = module.def(name).unwrap().clone();
+        let ft = ctx.infer_function(&f)?;
+        let pre = ctx.def_types[name].clone();
+        ctx.unify(&pre, &ft, &format!("def @{name}"))?;
+    }
+    let t = ctx.infer(e)?;
+    let report = ctx.finish()?;
+    let t = report.type_of(e).cloned().unwrap_or(t);
+    Ok((report, t))
+}
+
+/// Type-check a whole module (all defs).
+pub fn check_module(module: &Module) -> Result<TypeReport> {
+    let e = crate::ir::unit();
+    infer_expr(module, &e).map(|(r, _)| r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{parse_expr, parse_module};
+    use crate::tensor::DType;
+
+    fn ty_of(src: &str) -> Type {
+        let m = Module::with_prelude();
+        let e = parse_expr(src).unwrap();
+        infer_expr(&m, &e).unwrap().1
+    }
+
+    fn ty_err(src: &str) -> String {
+        let m = Module::with_prelude();
+        let e = parse_expr(src).unwrap();
+        match infer_expr(&m, &e) {
+            Err(TypeError(msg)) => msg,
+            Ok((_, t)) => panic!("expected type error, got {t}"),
+        }
+    }
+
+    #[test]
+    fn scalar_arithmetic_types() {
+        assert_eq!(ty_of("add(1f, 2f)"), Type::scalar(DType::F32));
+    }
+
+    #[test]
+    fn broadcast_shapes_via_relation() {
+        let t = ty_of(
+            "fn (%x: Tensor[(2, 3), float32], %y: Tensor[(3), float32]) { add(%x, %y) }",
+        );
+        match t {
+            Type::Func { ret, .. } => {
+                assert_eq!(ret.concrete_shape(), Some(vec![2, 3]));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dense_shape_inference_through_vars() {
+        let t = ty_of(
+            "fn (%x: Tensor[(4, 8), float32], %w: Tensor[(16, 8), float32]) {\n\
+               let %h = nn.dense(%x, %w);\n\
+               nn.relu(%h)\n\
+             }",
+        );
+        match t {
+            Type::Func { ret, .. } => assert_eq!(ret.concrete_shape(), Some(vec![4, 16])),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let msg = ty_err(
+            "fn (%x: Tensor[(4, 8), float32], %w: Tensor[(16, 9), float32]) { nn.dense(%x, %w) }",
+        );
+        assert!(msg.contains("dense"), "{msg}");
+    }
+
+    #[test]
+    fn broadcast_mismatch_rejected() {
+        let msg = ty_err(
+            "fn (%x: Tensor[(2), float32], %y: Tensor[(3), float32]) { add(%x, %y) }",
+        );
+        assert!(msg.contains("broadcast"), "{msg}");
+    }
+
+    #[test]
+    fn if_guard_must_be_bool() {
+        let msg = ty_err("if (1f) { 2f } else { 3f }");
+        assert!(msg.contains("if guard"), "{msg}");
+    }
+
+    #[test]
+    fn if_branches_must_agree() {
+        let m = Module::with_prelude();
+        let e = parse_expr(
+            "fn (%x: Tensor[(2), float32], %y: Tensor[(3), float32]) {\n\
+               if (true) { %x } else { %y } }",
+        )
+        .unwrap();
+        assert!(infer_expr(&m, &e).is_err());
+    }
+
+    #[test]
+    fn adt_constructor_types() {
+        let t = ty_of("Cons(1f, Nil)");
+        match t {
+            Type::Adt { name, args } => {
+                assert_eq!(name, "List");
+                assert_eq!(args[0], Type::scalar(DType::F32));
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn match_refines_pattern_vars() {
+        let t = ty_of("match (Cons(1f, Nil)) { | Cons(%h, %t) -> %h | Nil -> 0f }");
+        assert_eq!(t, Type::scalar(DType::F32));
+    }
+
+    #[test]
+    fn recursive_function_types() {
+        let t = ty_of(
+            "let %sum = fn (%l) {\n\
+               match (%l) { | Cons(%h, %t) -> add(%h, %sum(%t)) | Nil -> 0f }\n\
+             };\n\
+             %sum(Cons(1f, Cons(2f, Nil)))",
+        );
+        assert_eq!(t, Type::scalar(DType::F32));
+    }
+
+    #[test]
+    fn refs_type_check() {
+        assert_eq!(ty_of("let %r = ref(1f); %r := 2f; !%r"), Type::scalar(DType::F32));
+    }
+
+    #[test]
+    fn grad_type_rule() {
+        let t = ty_of("grad(fn (%x: Tensor[(), float32]) { multiply(%x, %x) })");
+        match t {
+            Type::Func { params, ret } => {
+                assert_eq!(params.len(), 1);
+                match *ret {
+                    Type::Tuple(ts) => {
+                        assert_eq!(ts.len(), 2);
+                        assert_eq!(ts[0], Type::scalar(DType::F32));
+                    }
+                    other => panic!("{other}"),
+                }
+            }
+            other => panic!("{other}"),
+        }
+    }
+
+    #[test]
+    fn conv_stack_shapes() {
+        let t = ty_of(
+            "fn (%x: Tensor[(1, 3, 8, 8), float32], %w: Tensor[(16, 3, 3, 3), float32]) {\n\
+               let %c = nn.conv2d(%x, %w, padding=1);\n\
+               let %r = nn.relu(%c);\n\
+               nn.max_pool2d(%r, pool_size=2)\n\
+             }",
+        );
+        match t {
+            Type::Func { ret, .. } => {
+                assert_eq!(ret.concrete_shape(), Some(vec![1, 16, 4, 4]));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn module_defs_check() {
+        let m = parse_module(
+            "def @double(%x: Tensor[(2), float32]) { multiply(%x, 2f) }\n\
+             def @main(%x: Tensor[(2), float32]) { @double(@double(%x)) }",
+        )
+        .unwrap();
+        let rep = check_module(&m).unwrap();
+        let t = &rep.def_types["main"];
+        match t {
+            Type::Func { ret, .. } => assert_eq!(ret.concrete_shape(), Some(vec![2])),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn polymorphic_identity_via_inference() {
+        let t = ty_of("let %id = fn (%x) { %x }; %id(1f)");
+        assert_eq!(t, Type::scalar(DType::F32));
+    }
+
+    #[test]
+    fn underconstrained_fails() {
+        let msg = ty_err("fn (%x) { nn.dense(%x, %x) }");
+        assert!(msg.contains("under-constrained") || msg.contains("unsolved"), "{msg}");
+    }
+}

@@ -1,0 +1,237 @@
+//! Union-find unification over types and dimensions (the "modified
+//! union-find structure" of §3.3.3).
+
+use std::collections::HashMap;
+
+use crate::ir::types::{Dim, Type};
+
+pub struct Unifier {
+    next_var: u32,
+    /// Type var -> representative type.
+    ty_bind: HashMap<u32, Type>,
+    /// Dim var -> representative dim.
+    dim_bind: HashMap<u32, Dim>,
+}
+
+impl Unifier {
+    pub fn new() -> Unifier {
+        Unifier { next_var: 0, ty_bind: HashMap::new(), dim_bind: HashMap::new() }
+    }
+
+    pub fn fresh_var(&mut self) -> Type {
+        let v = self.next_var;
+        self.next_var += 1;
+        Type::Var(v)
+    }
+
+    pub fn fresh_dim(&mut self) -> Dim {
+        let v = self.next_var;
+        self.next_var += 1;
+        Dim::Var(v)
+    }
+
+    /// Follow bindings to the representative, applying the substitution
+    /// recursively (path-compression-lite: we re-resolve each time; fine at
+    /// these program sizes, see EXPERIMENTS.md §Perf).
+    pub fn resolve(&self, t: &Type) -> Type {
+        match t {
+            Type::Var(v) => match self.ty_bind.get(v) {
+                Some(b) => self.resolve(b),
+                None => t.clone(),
+            },
+            Type::Tensor { shape, dtype } => Type::Tensor {
+                shape: shape.iter().map(|d| self.resolve_dim(*d)).collect(),
+                dtype: *dtype,
+            },
+            Type::Func { params, ret } => Type::Func {
+                params: params.iter().map(|p| self.resolve(p)).collect(),
+                ret: Box::new(self.resolve(ret)),
+            },
+            Type::Tuple(ts) => Type::Tuple(ts.iter().map(|x| self.resolve(x)).collect()),
+            Type::Ref(r) => Type::Ref(Box::new(self.resolve(r))),
+            Type::Adt { name, args } => Type::Adt {
+                name: name.clone(),
+                args: args.iter().map(|a| self.resolve(a)).collect(),
+            },
+        }
+    }
+
+    pub fn resolve_dim(&self, d: Dim) -> Dim {
+        match d {
+            Dim::Var(v) => match self.dim_bind.get(&v) {
+                Some(b) => self.resolve_dim(*b),
+                None => d,
+            },
+            _ => d,
+        }
+    }
+
+    /// Does type var `v` occur in `t`? (occurs check)
+    fn occurs(&self, v: u32, t: &Type) -> bool {
+        match self.resolve(t) {
+            Type::Var(w) => w == v,
+            Type::Func { params, ret } => {
+                params.iter().any(|p| self.occurs(v, p)) || self.occurs(v, &ret)
+            }
+            Type::Tuple(ts) => ts.iter().any(|x| self.occurs(v, x)),
+            Type::Ref(r) => self.occurs(v, &r),
+            Type::Adt { args, .. } => args.iter().any(|a| self.occurs(v, a)),
+            Type::Tensor { .. } => false,
+        }
+    }
+
+    pub fn unify(&mut self, a: &Type, b: &Type) -> Result<(), String> {
+        let a = self.resolve(a);
+        let b = self.resolve(b);
+        match (&a, &b) {
+            (Type::Var(x), Type::Var(y)) if x == y => Ok(()),
+            (Type::Var(x), _) => {
+                if self.occurs(*x, &b) {
+                    return Err(format!("occurs check: 't{x} in {b}"));
+                }
+                self.ty_bind.insert(*x, b);
+                Ok(())
+            }
+            (_, Type::Var(y)) => {
+                if self.occurs(*y, &a) {
+                    return Err(format!("occurs check: 't{y} in {a}"));
+                }
+                self.ty_bind.insert(*y, a);
+                Ok(())
+            }
+            (
+                Type::Tensor { shape: s1, dtype: d1 },
+                Type::Tensor { shape: s2, dtype: d2 },
+            ) => {
+                if d1 != d2 {
+                    return Err(format!("dtype mismatch: {d1} vs {d2}"));
+                }
+                if s1.len() != s2.len() {
+                    return Err(format!("rank mismatch: {a} vs {b}"));
+                }
+                for (x, y) in s1.iter().zip(s2) {
+                    self.unify_dim(*x, *y)?;
+                }
+                Ok(())
+            }
+            (Type::Func { params: p1, ret: r1 }, Type::Func { params: p2, ret: r2 }) => {
+                if p1.len() != p2.len() {
+                    return Err(format!("function arity mismatch: {a} vs {b}"));
+                }
+                for (x, y) in p1.iter().zip(p2) {
+                    self.unify(x, y)?;
+                }
+                self.unify(r1, r2)
+            }
+            (Type::Tuple(t1), Type::Tuple(t2)) => {
+                if t1.len() != t2.len() {
+                    return Err(format!("tuple arity mismatch: {a} vs {b}"));
+                }
+                for (x, y) in t1.iter().zip(t2) {
+                    self.unify(x, y)?;
+                }
+                Ok(())
+            }
+            (Type::Ref(x), Type::Ref(y)) => self.unify(x, y),
+            (Type::Adt { name: n1, args: a1 }, Type::Adt { name: n2, args: a2 }) => {
+                if n1 != n2 || a1.len() != a2.len() {
+                    return Err(format!("ADT mismatch: {a} vs {b}"));
+                }
+                for (x, y) in a1.iter().zip(a2) {
+                    self.unify(x, y)?;
+                }
+                Ok(())
+            }
+            _ => Err(format!("cannot unify {a} with {b}")),
+        }
+    }
+
+    pub fn unify_dim(&mut self, a: Dim, b: Dim) -> Result<(), String> {
+        let a = self.resolve_dim(a);
+        let b = self.resolve_dim(b);
+        match (a, b) {
+            (Dim::Var(x), Dim::Var(y)) if x == y => Ok(()),
+            (Dim::Var(x), d) => {
+                self.dim_bind.insert(x, d);
+                Ok(())
+            }
+            (d, Dim::Var(y)) => {
+                self.dim_bind.insert(y, d);
+                Ok(())
+            }
+            (Dim::Known(x), Dim::Known(y)) => {
+                if x == y {
+                    Ok(())
+                } else {
+                    Err(format!("dimension mismatch: {x} vs {y}"))
+                }
+            }
+            // `Any` unifies with anything (checked at runtime, §3.3.1).
+            (Dim::Any, _) | (_, Dim::Any) => Ok(()),
+        }
+    }
+}
+
+impl Default for Unifier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn var_binds_to_tensor() {
+        let mut u = Unifier::new();
+        let v = u.fresh_var();
+        let t = Type::tensor(vec![2, 3], DType::F32);
+        u.unify(&v, &t).unwrap();
+        assert_eq!(u.resolve(&v), t);
+    }
+
+    #[test]
+    fn transitive_binding() {
+        let mut u = Unifier::new();
+        let a = u.fresh_var();
+        let b = u.fresh_var();
+        u.unify(&a, &b).unwrap();
+        let t = Type::scalar(DType::F32);
+        u.unify(&b, &t).unwrap();
+        assert_eq!(u.resolve(&a), t);
+    }
+
+    #[test]
+    fn dim_mismatch_fails() {
+        let mut u = Unifier::new();
+        let a = Type::tensor(vec![2], DType::F32);
+        let b = Type::tensor(vec![3], DType::F32);
+        assert!(u.unify(&a, &b).is_err());
+    }
+
+    #[test]
+    fn any_dim_is_wild() {
+        let mut u = Unifier::new();
+        let a = Type::Tensor { shape: vec![Dim::Any], dtype: DType::F32 };
+        let b = Type::tensor(vec![3], DType::F32);
+        assert!(u.unify(&a, &b).is_ok());
+    }
+
+    #[test]
+    fn occurs_check_rejects_infinite_type() {
+        let mut u = Unifier::new();
+        let v = u.fresh_var();
+        let f = Type::Func { params: vec![v.clone()], ret: Box::new(v.clone()) };
+        assert!(u.unify(&v, &f).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_fails() {
+        let mut u = Unifier::new();
+        let a = Type::scalar(DType::F32);
+        let b = Type::scalar(DType::I32);
+        assert!(u.unify(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! VTA accelerator **simulator** (Fig. 14 substrate).
+//!
+//! The paper measures an Ultra-96 FPGA running VTA [Moreau et al. 2018]: a
+//! 16×16 matrix-vector 8-bit tensor core at 333 MHz fed by DMA from shared
+//! DRAM, with the ARM Cortex-A53 executing everything the accelerator
+//! cannot. We don't have the FPGA, so we reproduce the *compilation path*
+//! (quantize → pack → offload) and the *latency shape* with a cycle-cost
+//! model (DESIGN.md §5 substitution table):
+//!
+//! * GEMM core: one 16×16×16 int8 MAC block per cycle @ 333 MHz;
+//! * DMA: `DRAM_BYTES_PER_CYCLE` bytes/cycle for loads/stores (weights,
+//!   activations, and the bit-packing marshalling);
+//! * ALU: 16-lane vector unit for elementwise epilogues;
+//! * host CPU: a scalar in-order core model (`CPU_OPS_PER_CYCLE` MACs per
+//!   cycle @ 1.2 GHz) for all non-offloaded operators — the "ARM" side.
+//!
+//! Offload rule: `qnn.conv2d` / `qnn.dense` (the registry's
+//! `vta_offloadable` ops) run on the accelerator; everything else on the
+//! host. Grouped convolutions offload per-group (lower utilization), and
+//! transposed convolutions stay on the host — which is exactly why
+//! DCGAN-style models gain less in Fig. 14.
+
+use crate::eval::value::Value;
+use crate::graphrt::GraphRt;
+use crate::op;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct VtaConfig {
+    /// GEMM tile (16x16 in the paper's instantiation).
+    pub tile: usize,
+    pub clock_hz: f64,
+    pub dram_bytes_per_cycle: f64,
+    pub alu_lanes: usize,
+    /// Host CPU model: scalar MACs per cycle and clock.
+    pub cpu_clock_hz: f64,
+    pub cpu_macs_per_cycle: f64,
+}
+
+impl Default for VtaConfig {
+    fn default() -> Self {
+        VtaConfig {
+            tile: 16,
+            clock_hz: 333e6,
+            dram_bytes_per_cycle: 8.0,
+            alu_lanes: 16,
+            cpu_clock_hz: 1.2e9,
+            // In-order A53-class scalar f32 MAC throughput (incl. loads).
+            cpu_macs_per_cycle: 0.5,
+        }
+    }
+}
+
+/// Per-run cycle accounting.
+#[derive(Clone, Debug, Default)]
+pub struct CycleReport {
+    pub vta_gemm_cycles: f64,
+    pub vta_dma_cycles: f64,
+    pub vta_alu_cycles: f64,
+    pub cpu_cycles: f64,
+    pub offloaded_ops: usize,
+    pub host_ops: usize,
+}
+
+impl CycleReport {
+    pub fn vta_time_s(&self, cfg: &VtaConfig) -> f64 {
+        (self.vta_gemm_cycles + self.vta_dma_cycles + self.vta_alu_cycles) / cfg.clock_hz
+    }
+
+    pub fn cpu_time_s(&self, cfg: &VtaConfig) -> f64 {
+        self.cpu_cycles / cfg.cpu_clock_hz
+    }
+
+    /// Total simulated latency (host and accelerator serialized — VTA's
+    /// single-queue dependency model).
+    pub fn total_time_s(&self, cfg: &VtaConfig) -> f64 {
+        self.vta_time_s(cfg) + self.cpu_time_s(cfg)
+    }
+
+    pub fn total_ms(&self, cfg: &VtaConfig) -> f64 {
+        self.total_time_s(cfg) * 1e3
+    }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// MAC count + tile count for a conv/dense given actual runtime shapes.
+fn gemm_dims(op_name: &str, args: &[Value], out: &Value) -> Option<(usize, usize, usize, usize)> {
+    // Returns (M, N, K, groups).
+    match op_name {
+        "qnn.dense" | "nn.dense" => {
+            let x = args[0].tensor().shape();
+            let w = args[1].tensor().shape();
+            Some((x[0], w[0], x[1], 1))
+        }
+        "qnn.conv2d" | "nn.conv2d" => {
+            let x = args[0].tensor().shape();
+            let w = args[1].tensor().shape();
+            let o = out.tensor().shape();
+            let groups = x[1] / w[1];
+            // Per group: M = N*OH*OW, N = O/groups, K = (C/groups)*KH*KW
+            Some((o[0] * o[2] * o[3], w[0] / groups, w[1] * w[2] * w[3], groups))
+        }
+        "matmul" => {
+            let x = args[0].tensor().shape();
+            let y = args[1].tensor().shape();
+            Some((x[0], y[1], x[1], 1))
+        }
+        _ => None,
+    }
+}
+
+fn bytes_of(t: &Tensor) -> f64 {
+    (t.numel() * t.dtype().size_bytes()) as f64
+}
+
+/// Account one operator application.
+pub fn account(
+    cfg: &VtaConfig,
+    report: &mut CycleReport,
+    op_name: &str,
+    args: &[Value],
+    out: &Value,
+    offload: bool,
+) {
+    let offloadable = op::lookup(op_name).map(|d| d.vta_offloadable).unwrap_or(false);
+    if offload && offloadable {
+        if let Some((m, n, k, groups)) = gemm_dims(op_name, args, out) {
+            let t = cfg.tile;
+            // One t×t×t block per cycle; grouped convs run per group and
+            // waste lanes when n < tile (MobileNet-G's penalty).
+            let blocks = ceil_div(m, t) * ceil_div(n, t) * ceil_div(k, t) * groups;
+            report.vta_gemm_cycles += blocks as f64;
+            // DMA: stream weights + activations in (bit-packed), result out.
+            let in_bytes: f64 = args.iter().map(|a| bytes_of(a.tensor())).sum();
+            let out_bytes = bytes_of(out.tensor());
+            report.vta_dma_cycles += (in_bytes + out_bytes) / cfg.dram_bytes_per_cycle;
+            report.offloaded_ops += 1;
+            return;
+        }
+    }
+    // Host CPU path.
+    report.host_ops += 1;
+    let cycles = match gemm_dims(op_name, args, out) {
+        Some((m, n, k, groups)) => {
+            // MACs on the scalar core. Quantized ops get ~2x the f32
+            // throughput (8-bit SIMD-lite), matching Fig 13's gains.
+            let macs = (m * n * k * groups) as f64;
+            let per_cycle = if op_name.starts_with("qnn.") {
+                cfg.cpu_macs_per_cycle * 2.0
+            } else {
+                cfg.cpu_macs_per_cycle
+            };
+            macs / per_cycle
+        }
+        None => {
+            // Elementwise / memory ops: 1 elem per cycle + DRAM traffic.
+            match out {
+                Value::Tensor(t) => t.numel() as f64,
+                _ => 16.0,
+            }
+        }
+    };
+    report.cpu_cycles += cycles;
+}
+
+/// Simulate a compiled graph: returns (output, cycle report).
+pub fn simulate(
+    g: &GraphRt,
+    inputs: &[Value],
+    cfg: &VtaConfig,
+    offload: bool,
+) -> Result<(Value, CycleReport), String> {
+    let mut report = CycleReport::default();
+    let out = g.run_traced(inputs, &mut |name, args, out| {
+        account(cfg, &mut report, name, args, out, offload)
+    })?;
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_module;
+    use crate::tensor::Rng;
+
+    fn qconv_graph() -> GraphRt {
+        let m = parse_module(
+            "def @main(%x: Tensor[(1, 16, 16, 16), float32], %w: Tensor[(32, 16, 3, 3), float32]) {\n\
+               qnn.dequantize(qnn.conv2d(qnn.quantize(%x, scale=0.0625f), qnn.quantize(%w, scale=0.0625f), padding=1), scale=0.00390625f)\n\
+             }",
+        )
+        .unwrap();
+        let anfed = crate::pass::anf::run(&m);
+        GraphRt::compile(anfed.def("main").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn offload_beats_host() {
+        let g = qconv_graph();
+        let mut rng = Rng::new(0);
+        let x = rng.normal_tensor(&[1, 16, 16, 16], 1.0);
+        let w = rng.normal_tensor(&[32, 16, 3, 3], 0.3);
+        let cfg = VtaConfig::default();
+        let inputs: Vec<Value> =
+            vec![Value::Tensor(x), Value::Tensor(w)];
+        let (out_a, rep_a) = simulate(&g, &inputs, &cfg, true).unwrap();
+        let (out_b, rep_b) = simulate(&g, &inputs, &cfg, false).unwrap();
+        // Same numerics either way.
+        assert!(out_a.tensor().allclose(out_b.tensor(), 1e-6, 1e-6));
+        assert_eq!(rep_a.offloaded_ops, 1);
+        assert_eq!(rep_b.offloaded_ops, 0);
+        let speedup = rep_b.total_time_s(&cfg) / rep_a.total_time_s(&cfg);
+        assert!(speedup > 2.0, "offload speedup only {speedup:.2}x");
+    }
+
+    #[test]
+    fn grouped_conv_gets_less_speedup() {
+        // groups=16 depthwise-ish conv underutilizes the 16x16 core.
+        let make = |groups: usize| -> (GraphRt, Vec<Value>) {
+            let src = format!(
+                "def @main(%x: Tensor[(1, 16, 16, 16), float32], %w: Tensor[(16, {}, 3, 3), float32]) {{\n\
+                   qnn.dequantize(qnn.conv2d(qnn.quantize(%x, scale=0.0625f), qnn.quantize(%w, scale=0.0625f), padding=1, groups={groups}), scale=0.00390625f)\n\
+                 }}",
+                16 / groups
+            );
+            let m = parse_module(&src).unwrap();
+            let anfed = crate::pass::anf::run(&m);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+            let mut rng = Rng::new(1);
+            let x = rng.normal_tensor(&[1, 16, 16, 16], 1.0);
+            let w = rng.normal_tensor(&[16, 16 / groups, 3, 3], 0.3);
+            (g, vec![Value::Tensor(x), Value::Tensor(w)])
+        };
+        let cfg = VtaConfig::default();
+        let speedup = |groups: usize| {
+            let (g, inputs) = make(groups);
+            let (_, a) = simulate(&g, &inputs, &cfg, true).unwrap();
+            let (_, b) = simulate(&g, &inputs, &cfg, false).unwrap();
+            b.total_time_s(&cfg) / a.total_time_s(&cfg)
+        };
+        let dense_speedup = speedup(1);
+        let grouped_speedup = speedup(16);
+        assert!(
+            dense_speedup > grouped_speedup,
+            "dense {dense_speedup:.2}x vs grouped {grouped_speedup:.2}x"
+        );
+    }
+
+    #[test]
+    fn cycle_model_scales_with_work() {
+        let cfg = VtaConfig::default();
+        let mut small = CycleReport::default();
+        let mut big = CycleReport::default();
+        let x16 = Value::Tensor(Tensor::zeros(&[16, 16], crate::tensor::DType::I8));
+        let x64 = Value::Tensor(Tensor::zeros(&[64, 64], crate::tensor::DType::I8));
+        let o16 = Value::Tensor(Tensor::zeros(&[16, 16], crate::tensor::DType::I32));
+        let o64 = Value::Tensor(Tensor::zeros(&[64, 64], crate::tensor::DType::I32));
+        account(&cfg, &mut small, "matmul", &[x16.clone(), x16], &o16, false);
+        account(&cfg, &mut big, "matmul", &[x64.clone(), x64], &o64, false);
+        assert!(big.cpu_cycles > small.cpu_cycles * 30.0);
+    }
+}

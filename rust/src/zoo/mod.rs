@@ -1,0 +1,118 @@
+//! The evaluation model zoo (§5): the paper's vision and NLP workloads at
+//! reduced width so every figure regenerates on a laptop-class CPU in
+//! minutes (DESIGN.md §5 substitution). Topologies follow the originals:
+//! DQN's three convs + two dense; MobileNet's depthwise-separable blocks;
+//! ResNet-18's residual stages; VGG's conv-conv-pool stacks; RNN/GRU/LSTM
+//! cells rolled with Relay's recursive-function loop encoding; CharRNN
+//! generation; TreeLSTM recursion over the `Tree` ADT.
+//!
+//! Weights are seeded constants so runs are reproducible (the paper also
+//! evaluates inference with random inputs, §5.1).
+
+pub mod nlp;
+pub mod vision;
+
+pub use nlp::*;
+pub use vision::*;
+
+use crate::ir::{self, E};
+use crate::tensor::{Rng, Tensor};
+
+/// Weight factory with a deterministic seed per model.
+pub struct Weights {
+    rng: Rng,
+}
+
+impl Weights {
+    pub fn new(seed: u64) -> Weights {
+        Weights { rng: Rng::new(seed) }
+    }
+
+    pub fn tensor(&mut self, shape: &[usize], scale: f32) -> Tensor {
+        self.rng.normal_tensor(shape, scale)
+    }
+
+    /// He-style scale for a conv/dense weight.
+    pub fn he(&mut self, shape: &[usize]) -> E {
+        let fan_in: usize = shape[1..].iter().product::<usize>().max(1);
+        let scale = (2.0 / fan_in as f32).sqrt();
+        ir::constant(self.rng.normal_tensor(shape, scale))
+    }
+
+    pub fn zeros(&mut self, shape: &[usize]) -> E {
+        ir::constant(Tensor::zeros(shape, crate::tensor::DType::F32))
+    }
+}
+
+/// Every benchmarked model, by paper name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    NatureDqn,
+    MobileNet,
+    ResNet18,
+    Vgg16,
+    Rnn,
+    Gru,
+    Lstm,
+    CharRnn,
+    TreeLstm,
+}
+
+impl Model {
+    pub fn vision() -> [Model; 4] {
+        [Model::NatureDqn, Model::MobileNet, Model::ResNet18, Model::Vgg16]
+    }
+
+    pub fn nlp() -> [Model; 5] {
+        [Model::Rnn, Model::Gru, Model::Lstm, Model::CharRnn, Model::TreeLstm]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::NatureDqn => "nature-dqn",
+            Model::MobileNet => "mobilenet",
+            Model::ResNet18 => "resnet-18",
+            Model::Vgg16 => "vgg-16",
+            Model::Rnn => "rnn",
+            Model::Gru => "gru",
+            Model::Lstm => "lstm",
+            Model::CharRnn => "char-rnn",
+            Model::TreeLstm => "treelstm",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_main, Value};
+    use crate::ty::check_module;
+
+    #[test]
+    fn all_vision_models_typecheck_and_run() {
+        for model in Model::vision() {
+            let (m, input) = vision::build(model, 42);
+            check_module(&m).unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+            let out = eval_main(&m, vec![Value::Tensor(input)]).unwrap();
+            let t = out.tensor();
+            assert_eq!(t.shape()[0], 1, "{}", model.name());
+            assert!(t.as_f32().iter().all(|v| v.is_finite()), "{}", model.name());
+        }
+    }
+
+    #[test]
+    fn vision_models_have_distinct_depths() {
+        let n_ops = |model| {
+            let (m, _) = vision::build(model, 0);
+            let mut v = Vec::new();
+            crate::ir::collect(
+                &m.def("main").unwrap().body,
+                &|e| matches!(&**e, crate::ir::Expr::Call { f, .. } if matches!(&**f, crate::ir::Expr::Op(_))),
+                &mut v,
+            );
+            v.len()
+        };
+        assert!(n_ops(Model::Vgg16) > n_ops(Model::NatureDqn));
+        assert!(n_ops(Model::ResNet18) > n_ops(Model::NatureDqn));
+    }
+}

@@ -1,0 +1,468 @@
+//! NLP models (Fig. 12): recurrent cells rolled with Relay's
+//! tail-recursive loop encoding over `List` ADTs — the exact expressivity
+//! the paper's §3.2.3-3.2.5 features exist to provide. CharRNN generates
+//! characters autoregressively; TreeLSTM recurses over the `Tree` ADT.
+
+use super::{Model, Weights};
+use crate::eval::value::Value;
+use crate::ir::{self, AttrValue, Module, Pattern, Type, Var, E};
+use crate::tensor::{DType, Rng, Tensor};
+
+pub const HIDDEN: usize = 32;
+pub const EMBED: usize = 16;
+pub const VOCAB: usize = 26;
+pub const SEQ_LEN: usize = 8;
+
+fn dense(w: &mut Weights, x: E, cin: usize, cout: usize) -> E {
+    let weight = w.he(&[cout, cin]);
+    ir::op_call("nn.dense", vec![x, weight])
+}
+
+/// One step of the chosen cell: (x_t, h) -> h'.
+fn cell(model: Model, w: &mut Weights, x: E, h: E, input: usize) -> E {
+    match model {
+        Model::Rnn | Model::CharRnn => {
+            // h' = tanh(Wx x + Wh h)
+            let a = dense(w, x, input, HIDDEN);
+            let b = dense(w, h, HIDDEN, HIDDEN);
+            ir::op_call("tanh", vec![ir::op_call("add", vec![a, b])])
+        }
+        Model::Gru => {
+            // z = sig(Wz x + Uz h); r = sig(Wr x + Ur h);
+            // n = tanh(Wn x + Un (r*h)); h' = (1-z)*n + z*h
+            let z = ir::op_call(
+                "sigmoid",
+                vec![ir::op_call(
+                    "add",
+                    vec![dense(w, x.clone(), input, HIDDEN), dense(w, h.clone(), HIDDEN, HIDDEN)],
+                )],
+            );
+            let r = ir::op_call(
+                "sigmoid",
+                vec![ir::op_call(
+                    "add",
+                    vec![dense(w, x.clone(), input, HIDDEN), dense(w, h.clone(), HIDDEN, HIDDEN)],
+                )],
+            );
+            let rh = ir::op_call("multiply", vec![r, h.clone()]);
+            let n = ir::op_call(
+                "tanh",
+                vec![ir::op_call(
+                    "add",
+                    vec![dense(w, x, input, HIDDEN), dense(w, rh, HIDDEN, HIDDEN)],
+                )],
+            );
+            let one_minus_z =
+                ir::op_call("subtract", vec![ir::scalar(1.0), z.clone()]);
+            ir::op_call(
+                "add",
+                vec![
+                    ir::op_call("multiply", vec![one_minus_z, n]),
+                    ir::op_call("multiply", vec![z, h]),
+                ],
+            )
+        }
+        Model::Lstm | Model::TreeLstm => {
+            // State is a tuple (h, c); returns a tuple.
+            unreachable!("LSTM uses cell_lstm")
+        }
+        other => panic!("{} has no recurrent cell", other.name()),
+    }
+}
+
+/// LSTM step over state tuple (h, c).
+fn cell_lstm(w: &mut Weights, x: E, h: E, c: E, input: usize) -> (E, E) {
+    let gate = |w: &mut Weights, x: &E, h: &E, act: &str| -> E {
+        ir::op_call(
+            act,
+            vec![ir::op_call(
+                "add",
+                vec![dense(w, x.clone(), input, HIDDEN), dense(w, h.clone(), HIDDEN, HIDDEN)],
+            )],
+        )
+    };
+    let i = gate(w, &x, &h, "sigmoid");
+    let f = gate(w, &x, &h, "sigmoid");
+    let o = gate(w, &x, &h, "sigmoid");
+    let g = gate(w, &x, &h, "tanh");
+    let c2 = ir::op_call(
+        "add",
+        vec![
+            ir::op_call("multiply", vec![f, c]),
+            ir::op_call("multiply", vec![i, g]),
+        ],
+    );
+    let h2 = ir::op_call("multiply", vec![o, ir::op_call("tanh", vec![c2.clone()])]);
+    (h2, c2)
+}
+
+/// Build `(module, args)` where `@main` consumes a `List` of step inputs
+/// and an initial hidden state, returning the final state. The loop is a
+/// recursive Relay function over the list — runs on the interpreter.
+pub fn build_recurrent(model: Model, seed: u64) -> (Module, Vec<Value>) {
+    let mut w = Weights::new(seed);
+    let mut m = Module::with_prelude();
+    let xs = Var::fresh("xs");
+    let h0 = Var::fresh("h0");
+
+    let body = match model {
+        Model::Lstm => {
+            let loop_v = Var::fresh("loop");
+            let l = Var::fresh("l");
+            let hc = Var::fresh("hc");
+            let head = Var::fresh("x");
+            let tail = Var::fresh("rest");
+            let (h2, c2) = cell_lstm(
+                &mut w,
+                ir::var(&head),
+                ir::proj(ir::var(&hc), 0),
+                ir::proj(ir::var(&hc), 1),
+                EMBED,
+            );
+            let step = ir::call(ir::var(&loop_v), vec![ir::var(&tail), ir::tuple(vec![h2, c2])]);
+            let fn_body = ir::match_(
+                ir::var(&l),
+                vec![
+                    (
+                        Pattern::Ctor("Cons".into(), vec![Pattern::Var(head), Pattern::Var(tail)]),
+                        step,
+                    ),
+                    (Pattern::Ctor("Nil".into(), vec![]), ir::var(&hc)),
+                ],
+            );
+            let func = ir::func(
+                vec![(l.clone(), None), (hc.clone(), None)],
+                fn_body,
+            );
+            ir::let_(
+                loop_v.clone(),
+                func,
+                ir::call(
+                    ir::var(&loop_v),
+                    vec![
+                        ir::var(&xs),
+                        ir::tuple(vec![ir::var(&h0), ir::var(&h0)]),
+                    ],
+                ),
+            )
+        }
+        _ => {
+            let loop_v = Var::fresh("loop");
+            let l = Var::fresh("l");
+            let h = Var::fresh("h");
+            let head = Var::fresh("x");
+            let tail = Var::fresh("rest");
+            let h2 = cell(model, &mut w, ir::var(&head), ir::var(&h), EMBED);
+            let step = ir::call(ir::var(&loop_v), vec![ir::var(&tail), h2]);
+            let fn_body = ir::match_(
+                ir::var(&l),
+                vec![
+                    (
+                        Pattern::Ctor("Cons".into(), vec![Pattern::Var(head), Pattern::Var(tail)]),
+                        step,
+                    ),
+                    (Pattern::Ctor("Nil".into(), vec![]), ir::var(&h)),
+                ],
+            );
+            let func = ir::func(vec![(l.clone(), None), (h.clone(), None)], fn_body);
+            ir::let_(
+                loop_v.clone(),
+                func,
+                ir::call(ir::var(&loop_v), vec![ir::var(&xs), ir::var(&h0)]),
+            )
+        }
+    };
+    let list_ty = Type::Adt {
+        name: "List".into(),
+        args: vec![Type::tensor(vec![1, EMBED], DType::F32)],
+    };
+    let h_ty = Type::tensor(vec![1, HIDDEN], DType::F32);
+    m.add_def(
+        "main",
+        ir::Function::new(vec![(xs, Some(list_ty)), (h0, Some(h_ty))], body),
+    );
+
+    // Inputs: a SEQ_LEN list of (1, EMBED) tensors + zero hidden state.
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let items: Vec<Value> = (0..SEQ_LEN)
+        .map(|_| Value::Tensor(rng.normal_tensor(&[1, EMBED], 1.0)))
+        .collect();
+    let args = vec![
+        Value::list(items),
+        Value::Tensor(Tensor::zeros(&[1, HIDDEN], DType::F32)),
+    ];
+    (m, args)
+}
+
+/// CharRNN generation: embed -> RNN cell -> logits -> argmax, looped for a
+/// fixed number of steps; returns the final hidden state and last logits.
+pub fn build_char_rnn(seed: u64) -> (Module, Vec<Value>) {
+    let mut w = Weights::new(seed);
+    let mut m = Module::with_prelude();
+    let embed_table = w.he(&[VOCAB, EMBED]);
+    let steps = Var::fresh("steps");
+    let tok0 = Var::fresh("tok");
+    let h0 = Var::fresh("h0");
+
+    let loop_v = Var::fresh("gen");
+    let n = Var::fresh("n");
+    let tok = Var::fresh("t");
+    let h = Var::fresh("h");
+    // x = take(table, tok) reshaped to (1, EMBED)
+    let x = ir::op_call_attrs(
+        "reshape",
+        vec![ir::op_call("take", vec![embed_table, ir::var(&tok)])],
+        ir::attrs(&[("newshape", AttrValue::IntVec(vec![1, EMBED as i64]))]),
+    );
+    let h2 = cell(Model::CharRnn, &mut w, x, ir::var(&h), EMBED);
+    let logits = dense(&mut w, h2.clone(), HIDDEN, VOCAB);
+    let next_tok = ir::op_call_attrs(
+        "argmax",
+        vec![logits.clone()],
+        ir::attrs(&[("axis", AttrValue::Int(1))]),
+    );
+    let recur = ir::call(
+        ir::var(&loop_v),
+        vec![
+            ir::op_call("subtract", vec![ir::var(&n), ir::constant(Tensor::scalar_f32(1.0))]),
+            next_tok,
+            h2.clone(),
+        ],
+    );
+    let fn_body = ir::if_(
+        ir::op_call("greater", vec![ir::var(&n), ir::constant(Tensor::scalar_f32(0.0))]),
+        recur,
+        ir::tuple(vec![ir::var(&h), logits]),
+    );
+    let func = ir::func(
+        vec![(n.clone(), None), (tok.clone(), None), (h.clone(), None)],
+        fn_body,
+    );
+    let body = ir::let_(
+        loop_v.clone(),
+        func,
+        ir::call(
+            ir::var(&loop_v),
+            vec![ir::var(&steps), ir::var(&tok0), ir::var(&h0)],
+        ),
+    );
+    m.add_def(
+        "main",
+        ir::Function::new(vec![(steps, None), (tok0, None), (h0, None)], body),
+    );
+    let args = vec![
+        Value::Tensor(Tensor::scalar_f32(SEQ_LEN as f32)),
+        Value::Tensor(Tensor::from_i64(vec![1], vec![0])),
+        Value::Tensor(Tensor::zeros(&[1, HIDDEN], DType::F32)),
+    ];
+    (m, args)
+}
+
+/// TreeLSTM (childsum-lite): recurse over a `Tree`, combining children
+/// states by summation before the cell.
+pub fn build_treelstm(seed: u64) -> (Module, Vec<Value>) {
+    let mut w = Weights::new(seed);
+    let mut m = Module::with_prelude();
+    let tree = Var::fresh("tree");
+
+    // sum_children: List[Tensor h] fold with add.
+    let sum_v = Var::fresh("sum_h");
+    let l = Var::fresh("l");
+    let head = Var::fresh("hd");
+    let tail = Var::fresh("tl");
+    let sum_body = ir::match_(
+        ir::var(&l),
+        vec![
+            (
+                Pattern::Ctor("Cons".into(), vec![Pattern::Var(head.clone()), Pattern::Var(tail.clone())]),
+                ir::op_call(
+                    "add",
+                    vec![ir::var(&head), ir::call(ir::var(&sum_v), vec![ir::var(&tail)])],
+                ),
+            ),
+            (
+                Pattern::Ctor("Nil".into(), vec![]),
+                ir::constant(Tensor::zeros(&[1, HIDDEN], DType::F32)),
+            ),
+        ],
+    );
+    let sum_fn = ir::func(vec![(l.clone(), None)], sum_body);
+
+    // encode: Tree[Tensor] -> h. Children encoded recursively via a
+    // map-style inner recursion.
+    let enc_v = Var::fresh("encode");
+    let t = Var::fresh("t");
+    let payload = Var::fresh("x");
+    let kids = Var::fresh("kids");
+    // map encode over children list
+    let map_v = Var::fresh("map_enc");
+    let ml = Var::fresh("ml");
+    let mh = Var::fresh("mh");
+    let mt = Var::fresh("mt");
+    let map_body = ir::match_(
+        ir::var(&ml),
+        vec![
+            (
+                Pattern::Ctor("Cons".into(), vec![Pattern::Var(mh.clone()), Pattern::Var(mt.clone())]),
+                ir::call(
+                    ir::ctor("Cons"),
+                    vec![
+                        ir::call(ir::var(&enc_v), vec![ir::var(&mh)]),
+                        ir::call(ir::var(&map_v), vec![ir::var(&mt)]),
+                    ],
+                ),
+            ),
+            (Pattern::Ctor("Nil".into(), vec![]), ir::ctor("Nil")),
+        ],
+    );
+    let hsum = Var::fresh("hsum");
+    let (h2, _c2) = {
+        let x = ir::var(&payload);
+        let h = ir::var(&hsum);
+        let c = ir::constant(Tensor::zeros(&[1, HIDDEN], DType::F32));
+        cell_lstm(&mut w, x, h, c, EMBED)
+    };
+    let enc_body = ir::match_(
+        ir::var(&t),
+        vec![(
+            Pattern::Ctor("Rose".into(), vec![Pattern::Var(payload.clone()), Pattern::Var(kids.clone())]),
+            ir::let_(
+                map_v.clone(),
+                ir::func(vec![(ml.clone(), None)], map_body),
+                ir::let_(
+                    hsum.clone(),
+                    ir::call(
+                        ir::global("sum_h"),
+                        vec![ir::call(ir::var(&map_v), vec![ir::var(&kids)])],
+                    ),
+                    h2,
+                ),
+            ),
+        )],
+    );
+    // Register sum_h as a global so both recursions can see it.
+    if let crate::ir::Expr::Func(f) = &*sum_fn {
+        let mut f = f.clone();
+        // make it self-recursive through the global name
+        f.body = replace_var_with_global(&f.body, &sum_v, "sum_h");
+        m.add_def("sum_h", f);
+    }
+    let enc_fn = {
+        let body = replace_var_with_global(&enc_body, &enc_v, "encode");
+        ir::Function::new(vec![(t.clone(), None)], body)
+    };
+    m.add_def("encode", enc_fn);
+    m.add_def(
+        "main",
+        ir::Function::new(
+            vec![(tree.clone(), None)],
+            ir::call(ir::global("encode"), vec![ir::var(&tree)]),
+        ),
+    );
+
+    // Random tree input.
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let tree_v = random_tree(&mut rng, 3, 2);
+    (m, vec![tree_v])
+}
+
+fn replace_var_with_global(e: &E, v: &Var, name: &str) -> E {
+    crate::ir::rewrite_postorder(e, &mut |n| match &**n {
+        crate::ir::Expr::Var(x) if x == v => Some(ir::global(name)),
+        _ => None,
+    })
+}
+
+/// Random Rose tree of tensors with the given depth/branching.
+pub fn random_tree(rng: &mut Rng, depth: usize, branch: usize) -> Value {
+    let payload = Value::Tensor(rng.normal_tensor(&[1, EMBED], 1.0));
+    let children = if depth == 0 {
+        Value::list(vec![])
+    } else {
+        Value::list(
+            (0..branch)
+                .map(|_| random_tree(rng, depth - 1, branch))
+                .collect(),
+        )
+    };
+    Value::Adt { ctor: "Rose".into(), fields: vec![payload, children] }
+}
+
+/// Dispatch: build any NLP model.
+pub fn build_nlp(model: Model, seed: u64) -> (Module, Vec<Value>) {
+    match model {
+        Model::Rnn | Model::Gru | Model::Lstm => build_recurrent(model, seed),
+        Model::CharRnn => build_char_rnn(seed),
+        Model::TreeLstm => build_treelstm(seed),
+        other => panic!("{} is not an NLP model", other.name()),
+    }
+}
+
+/// The "hand-optimized C cell" baseline of Fig. 12: the same recurrence
+/// computed directly against the tensor substrate, no IR interpretation.
+pub fn hand_rnn_baseline(seed: u64, steps: usize) -> Tensor {
+    let mut w = Weights::new(seed);
+    let wx = w.tensor(&[HIDDEN, EMBED], 0.25);
+    let wh = w.tensor(&[HIDDEN, HIDDEN], 0.25);
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let mut h = Tensor::zeros(&[1, HIDDEN], DType::F32);
+    for _ in 0..steps {
+        let x = rng.normal_tensor(&[1, EMBED], 1.0);
+        let a = crate::tensor::dense(&x, &wx);
+        let b = crate::tensor::dense(&h, &wh);
+        h = crate::tensor::unary(
+            crate::tensor::UnaryOp::Tanh,
+            &crate::tensor::binary(crate::tensor::BinOp::Add, &a, &b),
+        );
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::eval_main;
+
+    #[test]
+    fn rnn_gru_run_and_produce_hidden() {
+        for model in [Model::Rnn, Model::Gru] {
+            let (m, args) = build_nlp(model, 7);
+            let out = eval_main(&m, args).unwrap();
+            assert_eq!(out.tensor().shape(), &[1, HIDDEN], "{}", model.name());
+            assert!(out.tensor().as_f32().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn lstm_returns_state_tuple() {
+        let (m, args) = build_nlp(Model::Lstm, 7);
+        let out = eval_main(&m, args).unwrap();
+        assert_eq!(out.tuple().len(), 2);
+        assert_eq!(out.tuple()[0].tensor().shape(), &[1, HIDDEN]);
+    }
+
+    #[test]
+    fn char_rnn_generates() {
+        let (m, args) = build_nlp(Model::CharRnn, 7);
+        let out = eval_main(&m, args).unwrap();
+        let logits = &out.tuple()[1];
+        assert_eq!(logits.tensor().shape(), &[1, VOCAB]);
+    }
+
+    #[test]
+    fn treelstm_encodes_tree() {
+        let (m, args) = build_nlp(Model::TreeLstm, 7);
+        let out = eval_main(&m, args).unwrap();
+        assert_eq!(out.tensor().shape(), &[1, HIDDEN]);
+        assert!(out.tensor().as_f32().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nlp_models_typecheck() {
+        // Type inference over recursion + ADTs (TreeLSTM exercises both).
+        for model in [Model::Rnn, Model::Gru] {
+            let (m, _) = build_nlp(model, 7);
+            crate::ty::check_module(&m).unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Vision models (Fig. 10/11/13/14 workloads), batch 1, NCHW.
+
+use super::{Model, Weights};
+use crate::ir::{self, AttrValue, Module, Type, Var, E};
+use crate::tensor::{DType, Tensor};
+
+fn conv(
+    w: &mut Weights,
+    x: E,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> E {
+    let weight = w.he(&[cout, cin / groups, k, k]);
+    let mut attrs = ir::attrs(&[
+        ("strides", AttrValue::IntVec(vec![stride as i64, stride as i64])),
+        ("padding", AttrValue::Int(pad as i64)),
+    ]);
+    if groups != 1 {
+        attrs.insert("groups".into(), AttrValue::Int(groups as i64));
+    }
+    ir::op_call_attrs("nn.conv2d", vec![x, weight], attrs)
+}
+
+fn conv_bn_relu(
+    w: &mut Weights,
+    x: E,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> E {
+    let c = conv(w, x, cin, cout, k, stride, pad, groups);
+    // Inference-mode BN folds to a channel scale+shift: emit it as a
+    // multiply by a constant scale (exercising FoldScaleAxis at -O3) plus
+    // a bias add.
+    let scale = ir::constant(w.tensor(&[cout, 1, 1], 0.05).clone());
+    let scaled = ir::op_call("multiply", vec![c, map_abs(scale)]);
+    let bias = ir::constant(Tensor::zeros(&[cout], DType::F32));
+    let biased = ir::op_call_attrs(
+        "nn.bias_add",
+        vec![scaled, bias],
+        ir::attrs(&[("axis", AttrValue::Int(1))]),
+    );
+    ir::op_call("nn.relu", vec![biased])
+}
+
+/// abs() at build time so scales stay positive (BN gammas).
+fn map_abs(e: E) -> E {
+    match &*e {
+        ir::Expr::Const(t) => {
+            let v: Vec<f32> = t.as_f32().iter().map(|x| x.abs() + 0.5).collect();
+            ir::constant(Tensor::from_f32(t.shape().to_vec(), v))
+        }
+        _ => e,
+    }
+}
+
+fn maxpool(x: E, k: usize) -> E {
+    ir::op_call_attrs(
+        "nn.max_pool2d",
+        vec![x],
+        ir::attrs(&[("pool_size", AttrValue::Int(k as i64))]),
+    )
+}
+
+fn dense_bias_relu(w: &mut Weights, x: E, cin: usize, cout: usize, relu: bool) -> E {
+    let weight = w.he(&[cout, cin]);
+    let bias = w.zeros(&[cout]);
+    let d = ir::op_call("nn.dense", vec![x, weight]);
+    let b = ir::op_call_attrs(
+        "nn.bias_add",
+        vec![d, bias],
+        ir::attrs(&[("axis", AttrValue::Int(1))]),
+    );
+    if relu {
+        ir::op_call("nn.relu", vec![b])
+    } else {
+        b
+    }
+}
+
+/// Build `(module, example_input)` for a vision model.
+pub fn build(model: Model, seed: u64) -> (Module, Tensor) {
+    let mut w = Weights::new(seed);
+    let mut rng = crate::tensor::Rng::new(seed ^ 0xDEAD);
+    match model {
+        Model::NatureDqn => {
+            // Paper topology: conv8x8/4, conv4x4/2, conv3x3/1, fc512, fc_out.
+            // Reduced: 16x16 input, channels 8/16/16, fc 64.
+            let input_shape = vec![1usize, 4, 16, 16];
+            let x = Var::fresh("x");
+            let mut h: E = ir::var(&x);
+            h = ir::op_call("nn.relu", vec![conv(&mut w, h, 4, 8, 4, 2, 1, 1)]);
+            h = ir::op_call("nn.relu", vec![conv(&mut w, h, 8, 16, 3, 2, 1, 1)]);
+            h = ir::op_call("nn.relu", vec![conv(&mut w, h, 16, 16, 3, 1, 1, 1)]);
+            h = ir::op_call("nn.batch_flatten", vec![h]);
+            h = dense_bias_relu(&mut w, h, 16 * 4 * 4, 64, true);
+            h = dense_bias_relu(&mut w, h, 64, 6, false);
+            (finish(x, input_shape.clone(), h), rng.normal_tensor(&input_shape, 1.0))
+        }
+        Model::MobileNet => {
+            // Depthwise-separable blocks.
+            let input_shape = vec![1usize, 3, 32, 32];
+            let x = Var::fresh("x");
+            let mut h: E = ir::var(&x);
+            h = conv_bn_relu(&mut w, h, 3, 8, 3, 2, 1, 1); // 16x16
+            let mut c = 8;
+            for (cout, stride) in [(16, 1), (32, 2), (32, 1)] {
+                // depthwise
+                h = conv_bn_relu(&mut w, h, c, c, 3, stride, 1, c);
+                // pointwise
+                h = conv_bn_relu(&mut w, h, c, cout, 1, 1, 0, 1);
+                c = cout;
+            }
+            h = ir::op_call("nn.global_avg_pool2d", vec![h]);
+            h = ir::op_call("nn.batch_flatten", vec![h]);
+            h = dense_bias_relu(&mut w, h, c, 10, false);
+            (finish(x, input_shape.clone(), h), rng.normal_tensor(&input_shape, 1.0))
+        }
+        Model::ResNet18 => {
+            // Stem + 4 stages x 2 basic blocks (reduced widths).
+            let input_shape = vec![1usize, 3, 32, 32];
+            let x = Var::fresh("x");
+            let mut h: E = ir::var(&x);
+            h = conv_bn_relu(&mut w, h, 3, 8, 3, 1, 1, 1);
+            let widths = [8usize, 16, 24, 32];
+            let mut c = 8;
+            for (stage, &cout) in widths.iter().enumerate() {
+                let stride = if stage == 0 { 1 } else { 2 };
+                // block 1 (may downsample)
+                let shortcut = if stride != 1 || c != cout {
+                    conv(&mut w, h.clone(), c, cout, 1, stride, 0, 1)
+                } else {
+                    h.clone()
+                };
+                let mut b = conv_bn_relu(&mut w, h, c, cout, 3, stride, 1, 1);
+                b = conv(&mut w, b, cout, cout, 3, 1, 1, 1);
+                h = ir::op_call("nn.relu", vec![ir::op_call("add", vec![b, shortcut])]);
+                // block 2 (identity)
+                let shortcut = h.clone();
+                let mut b = conv_bn_relu(&mut w, h, cout, cout, 3, 1, 1, 1);
+                b = conv(&mut w, b, cout, cout, 3, 1, 1, 1);
+                h = ir::op_call("nn.relu", vec![ir::op_call("add", vec![b, shortcut])]);
+                c = cout;
+            }
+            h = ir::op_call("nn.global_avg_pool2d", vec![h]);
+            h = ir::op_call("nn.batch_flatten", vec![h]);
+            h = dense_bias_relu(&mut w, h, c, 10, false);
+            (finish(x, input_shape.clone(), h), rng.normal_tensor(&input_shape, 1.0))
+        }
+        Model::Vgg16 => {
+            // conv-conv-pool stacks + two dense layers (reduced).
+            let input_shape = vec![1usize, 3, 32, 32];
+            let x = Var::fresh("x");
+            let mut h: E = ir::var(&x);
+            let mut c = 3;
+            for cout in [8usize, 16, 32] {
+                h = ir::op_call("nn.relu", vec![conv(&mut w, h, c, cout, 3, 1, 1, 1)]);
+                h = ir::op_call("nn.relu", vec![conv(&mut w, h, cout, cout, 3, 1, 1, 1)]);
+                h = maxpool(h, 2);
+                c = cout;
+            }
+            h = ir::op_call("nn.batch_flatten", vec![h]);
+            h = dense_bias_relu(&mut w, h, c * 4 * 4, 64, true);
+            h = dense_bias_relu(&mut w, h, 64, 10, false);
+            (finish(x, input_shape.clone(), h), rng.normal_tensor(&input_shape, 1.0))
+        }
+        other => panic!("{} is not a vision model", other.name()),
+    }
+}
+
+/// DCGAN-style generator (Fig. 14 workload): dense projection + stacked
+/// transposed convolutions. VTA cannot offload transposed convs, so this
+/// model gains the least from the accelerator — the paper's spread.
+pub fn build_dcgan(seed: u64) -> (Module, Tensor) {
+    let mut w = Weights::new(seed);
+    let mut rng = crate::tensor::Rng::new(seed ^ 0xDC6A);
+    let z_shape = vec![1usize, 16];
+    let x = Var::fresh("z");
+    let mut h: E = ir::var(&x);
+    h = dense_bias_relu(&mut w, h, 16, 32 * 4 * 4, true);
+    h = ir::op_call_attrs(
+        "reshape",
+        vec![h],
+        ir::attrs(&[("newshape", AttrValue::IntVec(vec![1, 32, 4, 4]))]),
+    );
+    let mut c = 32;
+    for cout in [16usize, 8, 3] {
+        let weight = w.he(&[c, cout, 4, 4]);
+        h = ir::op_call_attrs(
+            "nn.conv2d_transpose",
+            vec![h, weight],
+            ir::attrs(&[
+                ("strides", AttrValue::IntVec(vec![2, 2])),
+                ("padding", AttrValue::Int(1)),
+            ]),
+        );
+        if cout != 3 {
+            h = ir::op_call("nn.relu", vec![h]);
+        } else {
+            h = ir::op_call("tanh", vec![h]);
+        }
+        c = cout;
+    }
+    (finish(x, z_shape.clone(), h), rng.normal_tensor(&z_shape, 1.0))
+}
+
+/// Deeper ResNet variant for Fig. 14 (three blocks per stage ~ ResNet-34's
+/// extra depth, reduced widths).
+pub fn build_resnet34ish(seed: u64) -> (Module, Tensor) {
+    let mut w = Weights::new(seed);
+    let mut rng = crate::tensor::Rng::new(seed ^ 0x34);
+    let input_shape = vec![1usize, 3, 32, 32];
+    let x = Var::fresh("x");
+    let mut h: E = ir::var(&x);
+    h = conv_bn_relu(&mut w, h, 3, 8, 3, 1, 1, 1);
+    let widths = [8usize, 16, 24, 32];
+    let mut c = 8;
+    for (stage, &cout) in widths.iter().enumerate() {
+        let stride = if stage == 0 { 1 } else { 2 };
+        for block in 0..3 {
+            let s = if block == 0 { stride } else { 1 };
+            let shortcut = if s != 1 || c != cout {
+                conv(&mut w, h.clone(), c, cout, 1, s, 0, 1)
+            } else {
+                h.clone()
+            };
+            let mut b = conv_bn_relu(&mut w, h, c, cout, 3, s, 1, 1);
+            b = conv(&mut w, b, cout, cout, 3, 1, 1, 1);
+            h = ir::op_call("nn.relu", vec![ir::op_call("add", vec![b, shortcut])]);
+            c = cout;
+        }
+    }
+    h = ir::op_call("nn.global_avg_pool2d", vec![h]);
+    h = ir::op_call("nn.batch_flatten", vec![h]);
+    h = dense_bias_relu(&mut w, h, c, 10, false);
+    (finish(x, input_shape.clone(), h), rng.normal_tensor(&input_shape, 1.0))
+}
+
+fn finish(x: Var, input_shape: Vec<usize>, body: E) -> Module {
+    let mut m = Module::with_prelude();
+    m.add_def(
+        "main",
+        ir::Function::new(
+            vec![(x, Some(Type::tensor(input_shape, DType::F32)))],
+            body,
+        ),
+    );
+    m
+}

@@ -1,0 +1,261 @@
+//! Property-based tests (hand-rolled generator — proptest is not in the
+//! vendored dep set; randomness comes from the deterministic xoshiro Rng).
+//!
+//! Invariants checked across many random instances:
+//! * parser/printer round-trip is alpha-stable;
+//! * every optimization level preserves random-MLP semantics;
+//! * ANF conversion preserves semantics and establishes the ANF predicate;
+//! * broadcasting matches a naive reference on random shapes;
+//! * quantize/dequantize error is bounded by the scale;
+//! * structural hashing respects alpha-equivalence under refresh.
+
+use relay::eval::{eval_expr, eval_main, Value};
+use relay::ir::{self, Module};
+use relay::pass::{optimize, OptLevel};
+use relay::tensor::{self, Rng, Tensor};
+
+const CASES: usize = 30;
+
+#[test]
+fn parser_printer_roundtrip_on_random_programs() {
+    let mut rng = Rng::new(100);
+    for case in 0..CASES {
+        let e = random_expr(&mut rng, 3);
+        let printed = ir::print_expr(&e);
+        let reparsed = ir::parse_expr(&printed)
+            .unwrap_or_else(|err| panic!("case {case}: {err}\n{printed}"));
+        assert!(
+            ir::alpha_eq(&e, &reparsed),
+            "case {case} round-trip changed:\n{printed}\nvs\n{}",
+            ir::print_expr(&reparsed)
+        );
+    }
+}
+
+/// Random closed scalar-f32 expressions in the printable/parsable subset.
+fn random_expr(rng: &mut Rng, depth: usize) -> ir::E {
+    if depth == 0 {
+        return ir::scalar((rng.randint(-4, 5) as f32) / 2.0);
+    }
+    match rng.randint(0, 6) {
+        0 => ir::op_call(
+            "add",
+            vec![random_expr(rng, depth - 1), random_expr(rng, depth - 1)],
+        ),
+        1 => ir::op_call(
+            "multiply",
+            vec![random_expr(rng, depth - 1), random_expr(rng, depth - 1)],
+        ),
+        2 => {
+            let v = ir::Var::fresh("x");
+            ir::let_(
+                v.clone(),
+                random_expr(rng, depth - 1),
+                ir::op_call("add", vec![ir::var(&v), ir::var(&v)]),
+            )
+        }
+        3 => ir::if_(
+            ir::op_call(
+                "less",
+                vec![random_expr(rng, depth - 1), random_expr(rng, depth - 1)],
+            ),
+            random_expr(rng, depth - 1),
+            random_expr(rng, depth - 1),
+        ),
+        // (all cases below stay scalar-typed so ops compose well-typed)
+        4 | 5 => ir::proj(
+            ir::tuple(vec![
+                random_expr(rng, depth - 1),
+                random_expr(rng, depth - 1),
+            ]),
+            rng.randint(0, 2) as usize,
+        ),
+        _ => ir::op_call("tanh", vec![random_expr(rng, depth - 1)]),
+    }
+}
+
+#[test]
+fn optimization_preserves_random_mlp_semantics() {
+    let mut rng = Rng::new(200);
+    for case in 0..10 {
+        // Random 2-layer MLP with random dims.
+        let b = rng.randint(1, 5) as usize;
+        let din = rng.randint(2, 9) as usize;
+        let dh = rng.randint(2, 9) as usize;
+        let dout = rng.randint(2, 9) as usize;
+        let src = format!(
+            "def @main(%x: Tensor[({b}, {din}), float32]) {{\n\
+               let %w1 = ones(shape=[{dh}, {din}]);\n\
+               let %h = tanh(nn.dense(%x, %w1));\n\
+               let %w2 = ones(shape=[{dout}, {dh}]);\n\
+               nn.dense(%h, %w2)\n\
+             }}"
+        );
+        let m = ir::parse_module(&src).unwrap();
+        let x = rng.normal_tensor(&[b, din], 1.0);
+        let reference = eval_main(&m, vec![Value::Tensor(x.clone())]).unwrap();
+        for level in OptLevel::all() {
+            let opt = optimize(&m, level, true).unwrap();
+            let out = eval_main(&opt, vec![Value::Tensor(x.clone())]).unwrap();
+            assert!(
+                reference.tensor().allclose(out.tensor(), 1e-3, 1e-3),
+                "case {case} level {level}"
+            );
+        }
+    }
+}
+
+#[test]
+fn anf_preserves_semantics_and_shape() {
+    let mut rng = Rng::new(300);
+    let m = Module::with_prelude();
+    for case in 0..CASES {
+        let e = random_expr(&mut rng, 3);
+        let n = relay::pass::anf::to_anf(&e);
+        assert!(relay::pass::anf::is_anf(&n), "case {case} not ANF");
+        let a = eval_expr(&m, &e).unwrap();
+        let b = eval_expr(&m, &n).unwrap();
+        assert_value_eq(&a, &b, case);
+    }
+}
+
+fn assert_value_eq(a: &Value, b: &Value, case: usize) {
+    match (a, b) {
+        (Value::Tensor(x), Value::Tensor(y)) => {
+            assert!(x.allclose(y, 1e-5, 1e-5), "case {case}: {x:?} vs {y:?}")
+        }
+        (Value::Tuple(xs), Value::Tuple(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "case {case}");
+            for (x, y) in xs.iter().zip(ys) {
+                assert_value_eq(x, y, case);
+            }
+        }
+        _ => panic!("case {case}: kinds differ"),
+    }
+}
+
+#[test]
+fn broadcasting_matches_naive_reference() {
+    let mut rng = Rng::new(400);
+    for _ in 0..CASES {
+        // Random pair of broadcastable shapes up to rank 3.
+        let rank = rng.randint(1, 4) as usize;
+        let full: Vec<usize> = (0..rank).map(|_| rng.randint(1, 5) as usize).collect();
+        let degrade = |rng: &mut Rng, s: &[usize]| -> Vec<usize> {
+            s.iter()
+                .map(|&d| if rng.randint(0, 3) == 0 { 1 } else { d })
+                .collect()
+        };
+        let sa = degrade(&mut rng, &full);
+        let sb = degrade(&mut rng, &full);
+        let a = rng.normal_tensor(&sa, 1.0);
+        let b = rng.normal_tensor(&sb, 1.0);
+        let out = tensor::binary(tensor::BinOp::Add, &a, &b);
+        let expect = tensor::broadcast_shapes(&sa, &sb).unwrap();
+        assert_eq!(out.shape(), expect.as_slice());
+        // Check a handful of positions against manual indexing.
+        let strides_a = tensor::shape::broadcast_strides(&sa, &expect);
+        let strides_b = tensor::shape::broadcast_strides(&sb, &expect);
+        let out_strides = tensor::shape::row_major_strides(&expect);
+        for _ in 0..5 {
+            let idx: Vec<usize> = expect.iter().map(|&d| rng.randint(0, d as i64) as usize).collect();
+            let oi = tensor::shape::flat_index(&idx, &out_strides);
+            let ai = tensor::shape::flat_index(&idx, &strides_a);
+            let bi = tensor::shape::flat_index(&idx, &strides_b);
+            let got = out.as_f32()[oi];
+            let want = a.as_f32()[ai] + b.as_f32()[bi];
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn quantize_roundtrip_error_bounded_by_scale() {
+    let mut rng = Rng::new(500);
+    for _ in 0..CASES {
+        let n = rng.randint(1, 65) as usize;
+        let x = rng.uniform_tensor(&[n], -3.0, 3.0);
+        let scale = 1.0 / 32.0;
+        let q = tensor::quantize_i8(&x, scale);
+        let d = tensor::dequantize(&q, scale);
+        for (orig, back) in x.as_f32().iter().zip(d.as_f32()) {
+            let clipped = orig.clamp(-128.0 * scale, 127.0 * scale);
+            assert!(
+                (clipped - back).abs() <= scale / 2.0 + 1e-6,
+                "{orig} -> {back} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn structural_hash_stable_under_refresh() {
+    let mut rng = Rng::new(600);
+    for case in 0..CASES {
+        let v = ir::Var::fresh("p");
+        let body = ir::op_call(
+            "add",
+            vec![ir::var(&v), random_expr(&mut rng, 2)],
+        );
+        let f = ir::func(vec![(v, None)], body);
+        let g = ir::refresh(&f);
+        assert_eq!(
+            ir::structural_hash(&f),
+            ir::structural_hash(&g),
+            "case {case}: refresh changed hash"
+        );
+        assert!(ir::alpha_eq(&f, &g), "case {case}");
+    }
+}
+
+#[test]
+fn grad_matches_finite_differences_on_random_scalar_programs() {
+    let m = Module::with_prelude();
+    let mut rng = Rng::new(700);
+    for case in 0..10 {
+        // f(x) = random smooth expression of x.
+        let x = ir::Var::fresh("x");
+        let body = random_smooth(&mut rng, 3, &x);
+        let f = ir::func(vec![(x, None)], body);
+        let g = relay::pass::ad::grad_expr(&f).unwrap();
+        let x0 = 0.3 + 0.1 * case as f32;
+        let out = eval_expr(&m, &ir::call(g.clone(), vec![ir::scalar(x0)])).unwrap();
+        let grad = out.tuple()[1].tuple()[0].tensor().f32_value();
+        let eval_at = |v: f32| -> f32 {
+            let out = eval_expr(&m, &ir::call(f.clone(), vec![ir::scalar(v)])).unwrap();
+            out.tensor().f32_value()
+        };
+        let eps = 1e-3;
+        let fd = (eval_at(x0 + eps) - eval_at(x0 - eps)) / (2.0 * eps);
+        assert!(
+            (grad - fd).abs() < 1e-2 * (1.0 + fd.abs()),
+            "case {case}: AD {grad} vs FD {fd}"
+        );
+    }
+}
+
+fn random_smooth(rng: &mut Rng, depth: usize, x: &ir::Var) -> ir::E {
+    if depth == 0 {
+        return if rng.randint(0, 2) == 0 {
+            ir::var(x)
+        } else {
+            ir::scalar((rng.randint(1, 4) as f32) / 2.0)
+        };
+    }
+    match rng.randint(0, 5) {
+        0 => ir::op_call(
+            "add",
+            vec![random_smooth(rng, depth - 1, x), random_smooth(rng, depth - 1, x)],
+        ),
+        1 => ir::op_call(
+            "multiply",
+            vec![random_smooth(rng, depth - 1, x), random_smooth(rng, depth - 1, x)],
+        ),
+        2 => ir::op_call("tanh", vec![random_smooth(rng, depth - 1, x)]),
+        3 => ir::op_call("sigmoid", vec![random_smooth(rng, depth - 1, x)]),
+        _ => ir::op_call("exp", vec![ir::op_call(
+            "multiply",
+            vec![ir::scalar(0.3), random_smooth(rng, depth - 1, x)],
+        )]),
+    }
+}
