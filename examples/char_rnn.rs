@@ -1,25 +1,41 @@
 //! CharRNN generation (Fig. 12 workload): autoregressive character
-//! generation through the interpreter — data-dependent control flow the
-//! computation-graph IRs of §2.2 cannot express directly.
+//! generation — data-dependent control flow the computation-graph IRs of
+//! §2.2 cannot express directly. Runs the same program on the reference
+//! interpreter and the bytecode VM (the executors `eval::run_auto` picks
+//! between) and reports both.
 //!
 //!     cargo run --release --example char_rnn
 
-use relay::eval::eval_main;
+use relay::eval::{run_with, Executor};
 use relay::zoo::{self, Model};
 
 fn main() -> anyhow::Result<()> {
     let (m, args) = zoo::nlp::build_nlp(Model::CharRnn, 1234);
+
     let t0 = std::time::Instant::now();
-    let out = eval_main(&m, args).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let dt = t0.elapsed();
-    let logits = out.tuple()[1].tensor().clone();
-    println!(
-        "generated {} steps in {:.2} ms ({:.3} ms/char)",
-        zoo::nlp::SEQ_LEN,
-        dt.as_secs_f64() * 1e3,
-        dt.as_secs_f64() * 1e3 / zoo::nlp::SEQ_LEN as f64
-    );
-    // Greedy decode of the final distribution, mapped to letters.
+    let interp = run_with(&m, Executor::Interp, args.clone())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let interp_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t1 = std::time::Instant::now();
+    let vm = run_with(&m, Executor::Vm, args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let vm_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    for (name, ms, launches) in [
+        ("interp", interp_ms, interp.launches),
+        ("vm", vm_ms, vm.launches),
+    ] {
+        println!(
+            "{name:<7} generated {} steps in {ms:.2} ms ({:.3} ms/char, {launches} launches)",
+            zoo::nlp::SEQ_LEN,
+            ms / zoo::nlp::SEQ_LEN as f64,
+        );
+    }
+
+    // Greedy decode of the final distribution, mapped to letters; both
+    // executors must agree bit-for-bit.
+    let logits = interp.value.tuple()[1].tensor().clone();
+    assert_eq!(&logits, vm.value.tuple()[1].tensor(), "executors diverged");
     let probs = relay::tensor::softmax(&logits, -1);
     let best = relay::tensor::argmax(&probs, 1).as_i64()[0] as u8;
     println!("final char distribution peak: '{}'", (b'a' + best) as char);

@@ -26,8 +26,7 @@ fn run_model(m: &relay::ir::Module, args: &[Value]) -> usize {
             &relay::ir::Attrs::new(),
         )
         .unwrap();
-    let launches = *interp.op_calls.borrow();
-    launches
+    interp.op_calls()
 }
 
 fn main() {

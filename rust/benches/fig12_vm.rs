@@ -1,0 +1,99 @@
+//! Fig. 12, executor edition: tree-walk interpreter vs bytecode VM on the
+//! NLP suite (the control-flow-heavy models where executor choice is the
+//! whole game). The VM compiles once and re-dispatches per inference —
+//! the serving shape — so the comparison is AST-walk dispatch vs bytecode
+//! dispatch over identical kernels.
+//!
+//! Results are appended to the BENCH trajectory as `BENCH_fig12_vm.json`
+//! (repo root when run via cargo, cwd otherwise).
+
+use std::fmt::Write as _;
+
+use relay::bench;
+use relay::eval::{run_with, Executor};
+use relay::pass::{optimize, OptLevel};
+use relay::vm;
+use relay::zoo::{self, Model};
+
+fn main() {
+    let iters = 20;
+    println!("Fig 12 (VM): NLP inference, interpreter vs bytecode VM");
+    println!(
+        "{:<12} {:>12} {:>12} {:>9} {:>10} {:>11}",
+        "model", "interp ms", "vm ms", "speedup", "launches", "compile ms"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for model in Model::nlp() {
+        let (m, args) = zoo::nlp::build_nlp(model, 42);
+        let fused = optimize(&m, OptLevel::O1, false).expect("optimize");
+
+        // Correctness + metric parity guards: identical results, identical
+        // kernel-launch counts on both executors.
+        let a = run_with(&fused, Executor::Interp, args.clone()).unwrap();
+        let b = run_with(&fused, Executor::Vm, args.clone()).unwrap();
+        assert!(
+            a.value.bits_eq(&b.value),
+            "{}: VM diverged from interpreter",
+            model.name()
+        );
+        assert_eq!(
+            a.launches,
+            b.launches,
+            "{}: launch counts diverged",
+            model.name()
+        );
+
+        let interp_s = bench::bench(format!("{}-interp", model.name()), 2, iters, || {
+            let _ = run_with(&fused, Executor::Interp, args.clone()).unwrap();
+        });
+
+        let t0 = std::time::Instant::now();
+        let program = vm::compile(&fused).expect("vm compile");
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let vm_s = bench::bench(format!("{}-vm", model.name()), 2, iters, || {
+            let _ = vm::Vm::new(&program).run(args.clone()).unwrap();
+        });
+
+        let speedup = interp_s.mean_ms / vm_s.mean_ms;
+        println!(
+            "{:<12} {:>12.3} {:>12.3} {:>8.2}x {:>10} {:>11.3}",
+            model.name(),
+            interp_s.mean_ms,
+            vm_s.mean_ms,
+            speedup,
+            b.launches,
+            compile_ms
+        );
+        let mut row = String::new();
+        write!(
+            row,
+            "    {{\"model\": \"{}\", \"interp_ms\": {:.4}, \"vm_ms\": {:.4}, \
+             \"speedup\": {:.3}, \"launches\": {}, \"vm_compile_ms\": {:.4}}}",
+            model.name(),
+            interp_s.mean_ms,
+            vm_s.mean_ms,
+            speedup,
+            b.launches,
+            compile_ms
+        )
+        .unwrap();
+        json_rows.push(row);
+    }
+
+    let json = format!(
+        "{{\n  \"figure\": \"12-vm\",\n  \"description\": \"NLP inference: \
+         interpreter vs bytecode VM (mean ms over {iters} iters)\",\n  \
+         \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    // Package root is the usual cwd under cargo; prefer the repo root.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_fig12_vm.json"
+    } else {
+        "BENCH_fig12_vm.json"
+    };
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -3,4 +3,5 @@
 //! reached via [`xla::XlaBuilder`] and executed on the PJRT CPU client
 //! (DESIGN.md §Hardware-Adaptation).
 
+#[cfg(feature = "xla")]
 pub mod xla;

@@ -11,7 +11,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::eval::{eval_main, Value};
+use crate::eval::{run_with, Executor, Value};
 use crate::pass::OptLevel;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -25,9 +25,10 @@ pub fn cmd_compile(path: &str, level: OptLevel) -> Result<String> {
     Ok(crate::ir::print_module(&opt))
 }
 
-/// `relay run <file.relay> [-O n]`: optimize and evaluate @main() with no
-/// arguments (or random tensors for annotated params).
-pub fn cmd_run(path: &str, level: OptLevel) -> Result<String> {
+/// `relay run <file.relay> [-O n] [--executor interp|graph|vm|auto]`:
+/// optimize and evaluate @main() with random tensors for annotated params,
+/// routed through the executor-selection layer ([`crate::eval::run_with`]).
+pub fn cmd_run(path: &str, level: OptLevel, executor: Executor) -> Result<String> {
     let src = std::fs::read_to_string(path)?;
     let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
     let opt = crate::pass::optimize(&m, level, false).map_err(|e| anyhow!("{e}"))?;
@@ -46,8 +47,11 @@ pub fn cmd_run(path: &str, level: OptLevel) -> Result<String> {
             None => Err(anyhow!("param {p} needs a type annotation")),
         })
         .collect();
-    let out = eval_main(&opt, args?).map_err(|e| anyhow!("{e}"))?;
-    Ok(format!("{out:?}"))
+    let out = run_with(&opt, executor, args?).map_err(|e| anyhow!("{e}"))?;
+    Ok(format!(
+        "{:?}  [executor={}, launches={}]",
+        out.value, out.executor, out.launches
+    ))
 }
 
 /// `relay artifact <name>`: run an AOT artifact once with zero inputs and
@@ -75,7 +79,8 @@ pub fn usage() -> &'static str {
      \n\
      USAGE:\n\
        relay compile <file.relay> [-O 0|1|2|3]   parse, check, optimize, print\n\
-       relay run <file.relay> [-O 0|1|2|3]       optimize and evaluate @main\n\
+       relay run <file.relay> [-O 0|1|2|3] [--executor interp|graph|vm|auto]\n\
+                                                 optimize and evaluate @main\n\
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
        relay serve [--port 7474]                 batched inference server\n"
 }
@@ -94,7 +99,13 @@ mod tests {
         .unwrap();
         let printed = cmd_compile(tmp.to_str().unwrap(), OptLevel::O2).unwrap();
         assert!(printed.contains("@main"));
-        let out = cmd_run(tmp.to_str().unwrap(), OptLevel::O2).unwrap();
+        let out = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, Executor::Auto).unwrap();
         assert!(out.contains("Tensor"), "{out}");
+        assert!(out.contains("executor=graphrt"), "{out}");
+        // Same program forced onto each tier agrees.
+        for exec in [Executor::Interp, Executor::Vm] {
+            let o = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, exec).unwrap();
+            assert!(o.contains(&format!("executor={}", exec.name())), "{o}");
+        }
     }
 }

@@ -8,6 +8,11 @@
 //! executes one PJRT call, and fans results back out. This is the router /
 //! dynamic-batcher shape of serving systems, scaled to the thin-driver
 //! role the paper's compiler contribution leaves for L3.
+//!
+//! Backends: the PJRT executable when the AOT artifact directory exists,
+//! otherwise a compiled-relay MLP routed through the executor-selection
+//! layer ([`crate::eval::Executor`]) — graph runtime, bytecode VM, or
+//! interpreter — so serving works without the `xla` feature.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -19,14 +24,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::eval::{run_with, Executor, Value};
+use crate::ir::{self, Module, Type, Var};
 use crate::runtime::Runtime;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 
 pub struct ServerConfig {
     pub port: u16,
     pub max_batch: usize,
     pub batch_timeout: Duration,
     pub artifact_dir: std::path::PathBuf,
+    /// Execution tier for the compiled-relay backend, used when the AOT
+    /// artifact directory is missing (so the server works — batching and
+    /// all — without the `xla` feature / Python build path).
+    pub executor: Executor,
 }
 
 impl Default for ServerConfig {
@@ -36,8 +47,31 @@ impl Default for ServerConfig {
             max_batch: 32,
             batch_timeout: Duration::from_millis(2),
             artifact_dir: "artifacts".into(),
+            executor: Executor::Auto,
         }
     }
+}
+
+/// Fallback model dims for the compiled-relay backend.
+const FALLBACK_FEAT: usize = 16;
+const FALLBACK_HIDDEN: usize = 32;
+const FALLBACK_CLASSES: usize = 4;
+
+/// A small MLP classifier with baked-in deterministic weights, served when
+/// no AOT artifact is available. Batch size is fixed so requests pad to
+/// one executable shape, like the artifact path.
+fn fallback_module(batch: usize) -> Module {
+    let mut w = crate::zoo::Weights::new(17);
+    let x = Var::fresh("x");
+    let h = ir::op_call(
+        "nn.relu",
+        vec![ir::op_call("nn.dense", vec![ir::var(&x), w.he(&[FALLBACK_HIDDEN, FALLBACK_FEAT])])],
+    );
+    let logits = ir::op_call("nn.dense", vec![h, w.he(&[FALLBACK_CLASSES, FALLBACK_HIDDEN])]);
+    let mut m = Module::with_prelude();
+    let ty = Type::tensor(vec![batch, FALLBACK_FEAT], DType::F32);
+    m.add_def("main", ir::Function::new(vec![(x, Some(ty))], logits));
+    m
 }
 
 struct Request {
@@ -71,20 +105,96 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
         let artifact_dir = cfg.artifact_dir.clone();
         let max_batch = cfg.max_batch;
         let timeout = cfg.batch_timeout;
+        let executor = cfg.executor;
         std::thread::spawn(move || {
-            let setup = (|| -> Result<_> {
-                let rt = Runtime::cpu()?;
-                let manifest =
-                    crate::runtime::manifest::load(&artifact_dir.join("manifest.json"))
-                        .map_err(|e| anyhow!("{e}"))?;
-                let entry = manifest
-                    .get("mlp_forward")
-                    .ok_or_else(|| anyhow!("mlp_forward not in manifest"))?
-                    .clone();
-                let exe = rt.load_artifact(&artifact_dir.join("mlp_forward.hlo.txt"))?;
-                Ok((rt, entry, exe))
+            // Backend setup: PJRT over the AOT artifact when present,
+            // otherwise a compiled-relay MLP routed through the
+            // executor-selection layer (graph runtime / VM / interpreter).
+            type ExecFn = Box<dyn FnMut(Tensor) -> Result<Vec<i64>>>;
+            let setup = (|| -> Result<(usize, usize, ExecFn)> {
+                if artifacts_available(&artifact_dir) {
+                    let rt = Runtime::cpu()?;
+                    let manifest =
+                        crate::runtime::manifest::load(&artifact_dir.join("manifest.json"))
+                            .map_err(|e| anyhow!("{e}"))?;
+                    let entry = manifest
+                        .get("mlp_forward")
+                        .ok_or_else(|| anyhow!("mlp_forward not in manifest"))?
+                        .clone();
+                    let exe = rt.load_artifact(&artifact_dir.join("mlp_forward.hlo.txt"))?;
+                    let x_spec = entry.inputs.last().unwrap().clone();
+                    let (batch_cap, feat) = (x_spec.shape[0], x_spec.shape[1]);
+                    let weights: Vec<Tensor> = entry.inputs[..entry.inputs.len() - 1]
+                        .iter()
+                        .map(|s| {
+                            // Deterministic weights (a real deployment would
+                            // load trained parameters; see
+                            // examples/train_mlp.rs).
+                            let mut rng = crate::tensor::Rng::new(17);
+                            rng.normal_tensor(&s.shape, 0.1)
+                        })
+                        .collect();
+                    let f: ExecFn = Box::new(move |x: Tensor| {
+                        let mut inputs = weights.clone();
+                        inputs.push(x);
+                        let outs = rt.execute(&exe, &inputs)?;
+                        Ok(crate::tensor::argmax(&outs[0], 1).as_i64().to_vec())
+                    });
+                    Ok((batch_cap, feat, f))
+                } else {
+                    let batch_cap = max_batch.max(1);
+                    let module = fallback_module(batch_cap);
+                    // Executor selection happens ONCE here; per-batch work
+                    // is pure dispatch on the precompiled backend.
+                    enum Backend {
+                        Graph(crate::graphrt::GraphRt),
+                        Prog(crate::vm::Program),
+                        Interp,
+                    }
+                    let backend = match executor {
+                        Executor::Interp => Backend::Interp,
+                        Executor::Vm => Backend::Prog(
+                            crate::vm::compile(&module).map_err(|e| anyhow!("{e}"))?,
+                        ),
+                        Executor::GraphRt | Executor::Auto => {
+                            let anfed = crate::pass::anf::run(&module);
+                            let main = anfed
+                                .def("main")
+                                .ok_or_else(|| anyhow!("fallback module lost @main"))?;
+                            match crate::graphrt::GraphRt::compile(main) {
+                                Ok(g) => Backend::Graph(g),
+                                Err(e) if executor == Executor::GraphRt => {
+                                    return Err(anyhow!("{e}"))
+                                }
+                                // Mirror run_with's Auto chain exactly:
+                                // graphrt -> vm -> interpreter.
+                                Err(_) => match crate::vm::compile_normalized(&anfed) {
+                                    Ok(p) => Backend::Prog(p),
+                                    Err(_) => Backend::Interp,
+                                },
+                            }
+                        }
+                    };
+                    let f: ExecFn = Box::new(move |x: Tensor| {
+                        let v = match &backend {
+                            Backend::Graph(g) => g
+                                .run(&[Value::Tensor(x)])
+                                .map_err(|e| anyhow!("{e}"))?,
+                            Backend::Prog(p) => crate::vm::Vm::new(p)
+                                .run(vec![Value::Tensor(x)])
+                                .map_err(|e| anyhow!("{e}"))?,
+                            Backend::Interp => {
+                                run_with(&module, Executor::Interp, vec![Value::Tensor(x)])
+                                    .map_err(|e| anyhow!("{e}"))?
+                                    .value
+                            }
+                        };
+                        Ok(crate::tensor::argmax(v.tensor(), 1).as_i64().to_vec())
+                    });
+                    Ok((batch_cap, FALLBACK_FEAT, f))
+                }
             })();
-            let (rt, entry, exe) = match setup {
+            let (batch_cap, feat, mut exec_fn) = match setup {
                 Ok(x) => {
                     let _ = ready_tx.send(Ok(()));
                     x
@@ -94,17 +204,6 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                     return;
                 }
             };
-            let x_spec = entry.inputs.last().unwrap().clone();
-            let (batch_cap, feat) = (x_spec.shape[0], x_spec.shape[1]);
-            let weights: Vec<Tensor> = entry.inputs[..entry.inputs.len() - 1]
-                .iter()
-                .map(|s| {
-                    // Deterministic weights (a real deployment would load
-                    // trained parameters; see examples/train_mlp.rs).
-                    let mut rng = crate::tensor::Rng::new(17);
-                    rng.normal_tensor(&s.shape, 0.1)
-                })
-                .collect();
             let cfg_batch = max_batch.min(batch_cap);
             while !stop.load(Ordering::Relaxed) {
                 let first = match rx.recv_timeout(Duration::from_millis(50)) {
@@ -132,15 +231,9 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                     data[i * feat..i * feat + row.len()].copy_from_slice(row);
                 }
                 let x = Tensor::from_f32(vec![batch_cap, feat], data);
-                let mut inputs = weights.clone();
-                inputs.push(x);
-                let reply: Vec<String> = match rt.execute(&exe, &inputs) {
-                    Ok(outs) => {
-                        let logits = &outs[0];
-                        let preds = crate::tensor::argmax(logits, 1);
-                        (0..batch.len())
-                            .map(|i| format!("{}", preds.as_i64()[i]))
-                            .collect()
+                let reply: Vec<String> = match exec_fn(x) {
+                    Ok(preds) => {
+                        (0..batch.len()).map(|i| format!("{}", preds[i])).collect()
                     }
                     Err(e) => batch.iter().map(|_| format!("error: {e}")).collect(),
                 };
@@ -228,4 +321,41 @@ pub fn classify(port: u16, features: &[f32]) -> Result<i64> {
 /// Is the artifact directory present (CI guard)?
 pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("manifest.json").exists() && dir.join("mlp_forward.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn fallback_backend_serves_through_the_vm() {
+        let port = 7981;
+        let cfg = ServerConfig {
+            port,
+            artifact_dir: "definitely-missing-artifacts".into(),
+            executor: Executor::Vm,
+            max_batch: 4,
+            ..Default::default()
+        };
+        // Skip only when this exact address is unusable (no loopback, or
+        // the port is held by another process); any serve() error past
+        // that (e.g. a backend compile regression) must fail the test.
+        match std::net::TcpListener::bind(("127.0.0.1", port)) {
+            Ok(probe) => drop(probe),
+            Err(_) => return,
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = serve(cfg, stop.clone()).expect("serve failed to start");
+        for i in 0..4i64 {
+            let features: Vec<f32> = (0..FALLBACK_FEAT)
+                .map(|j| ((i as usize * 7 + j) % 5) as f32 - 2.0)
+                .collect();
+            let pred = classify(port, &features).expect("classify");
+            assert!((0..FALLBACK_CLASSES as i64).contains(&pred), "pred {pred}");
+        }
+        assert!(stats.requests.load(Ordering::Relaxed) >= 4);
+        stop.store(true, Ordering::Relaxed);
+    }
 }

@@ -6,10 +6,11 @@
 //! run framework" baseline in Fig 11/12 (an unfused, interpreted execution
 //! mode, architecturally equivalent to eager frameworks).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 use super::value::{env_bind, env_empty, env_lookup, Env, Value};
+use super::LaunchCounter;
 use crate::ir::{Expr, Function, Module, Pattern, Var, E};
 use crate::op;
 
@@ -17,15 +18,27 @@ pub struct Interp<'m> {
     pub module: &'m Module,
     /// Kernel-launch counter: one per operator call, or one per *primitive*
     /// (fused) function call — the fusion benefit metric of Fig 10/11.
-    pub op_calls: RefCell<usize>,
+    /// Shared/resettable ([`LaunchCounter`]) so the same handle can count
+    /// across all three executors.
+    pub launches: LaunchCounter,
     /// Non-zero while executing inside a primitive function (inner op
     /// calls don't count as separate launches).
-    in_primitive: RefCell<usize>,
+    in_primitive: Cell<usize>,
 }
 
 impl<'m> Interp<'m> {
     pub fn new(module: &'m Module) -> Interp<'m> {
-        Interp { module, op_calls: RefCell::new(0), in_primitive: RefCell::new(0) }
+        Interp::with_counter(module, LaunchCounter::new())
+    }
+
+    /// Share an existing counter (e.g. with a graph runtime or VM run).
+    pub fn with_counter(module: &'m Module, launches: LaunchCounter) -> Interp<'m> {
+        Interp { module, launches, in_primitive: Cell::new(0) }
+    }
+
+    /// Kernel launches recorded so far (compatibility accessor).
+    pub fn op_calls(&self) -> usize {
+        self.launches.get()
     }
 
     pub fn eval(&self, e: &E, env: &Env) -> Result<Value, String> {
@@ -164,8 +177,8 @@ impl<'m> Interp<'m> {
                 let primitive = func.attrs.primitive;
                 if primitive {
                     // Fused kernel: one launch regardless of inner op count.
-                    *self.op_calls.borrow_mut() += 1;
-                    *self.in_primitive.borrow_mut() += 1;
+                    self.launches.bump();
+                    self.in_primitive.set(self.in_primitive.get() + 1);
                 }
                 let mut env2 = env.clone();
                 if let Some(rv) = &rec {
@@ -180,7 +193,7 @@ impl<'m> Interp<'m> {
                 }
                 let out = self.eval(&func.body, &env2);
                 if primitive {
-                    *self.in_primitive.borrow_mut() -= 1;
+                    self.in_primitive.set(self.in_primitive.get() - 1);
                 }
                 out
             }
@@ -202,8 +215,8 @@ impl<'m> Interp<'m> {
                 return Err(format!("operator {name} expects {ar} args, got {}", args.len()));
             }
         }
-        if *self.in_primitive.borrow() == 0 {
-            *self.op_calls.borrow_mut() += 1;
+        if self.in_primitive.get() == 0 {
+            self.launches.bump();
         }
         (def.eval)(args, attrs)
     }
@@ -371,7 +384,9 @@ mod tests {
         let interp = Interp::new(&m);
         let e = parse_expr("add(multiply(2f, 3f), 1f)").unwrap();
         interp.eval(&e, &super::env_empty()).unwrap();
-        assert_eq!(*interp.op_calls.borrow(), 2);
+        assert_eq!(interp.op_calls(), 2);
+        interp.launches.reset();
+        assert_eq!(interp.op_calls(), 0);
     }
 
     #[test]

@@ -1,8 +1,252 @@
-//! Execution backends over the IR: runtime values and the reference
-//! interpreter (paper §3.1.3's "Relay interpreter").
+//! Execution backends over the IR and the layer that selects among them.
+//!
+//! Three executors share one value domain ([`value::Value`]) and one
+//! kernel-launch metric ([`LaunchCounter`]):
+//!
+//! * [`Interp`] — the reference tree-walk interpreter (paper §3.1.3's
+//!   "Relay interpreter"); ground truth, runs everything.
+//! * [`crate::graphrt::GraphRt`] — flat node-list runtime for first-order,
+//!   control-flow-free programs.
+//! * [`crate::vm::Vm`] — the bytecode VM for control-flow-heavy programs
+//!   (closures, ADTs, recursion) at much lower dispatch cost than the
+//!   interpreter.
+//!
+//! [`run_with`] / [`run_auto`] are the single entry point call sites use
+//! (CLI, server, benches, zoo) instead of hand-rolled fallback chains.
 
 pub mod interp;
 pub mod value;
 
+use std::cell::Cell;
+use std::rc::Rc;
+
 pub use interp::{eval_expr, eval_main, Interp};
 pub use value::{env_bind, env_empty, Env, Value};
+
+use crate::ir::Module;
+
+// ---------------------------------------------------------------------------
+// Shared kernel-launch counting.
+// ---------------------------------------------------------------------------
+
+/// A shared, resettable kernel-launch counter.
+///
+/// One operator call — or one *fused primitive function* call — counts as
+/// one launch; this is the fusion-benefit metric of Fig 10–12. All three
+/// executors bump a `LaunchCounter`, and clones share state, so a single
+/// counter can be threaded through an entire pipeline regardless of which
+/// tier executes.
+#[derive(Clone, Debug, Default)]
+pub struct LaunchCounter(Rc<Cell<usize>>);
+
+impl LaunchCounter {
+    pub fn new() -> LaunchCounter {
+        LaunchCounter::default()
+    }
+
+    /// Record one kernel launch.
+    pub fn bump(&self) {
+        self.0.set(self.0.get() + 1);
+    }
+
+    pub fn get(&self) -> usize {
+        self.0.get()
+    }
+
+    pub fn reset(&self) {
+        self.0.set(0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor selection (paper §3.1.3: interpreter vs graph runtime, extended
+// with the bytecode VM tier).
+// ---------------------------------------------------------------------------
+
+/// Which execution tier to run a module on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Executor {
+    /// Reference tree-walk interpreter.
+    Interp,
+    /// Graph runtime (first-order, control-flow-free programs only).
+    GraphRt,
+    /// Bytecode VM (any program).
+    Vm,
+    /// Pick automatically: graph runtime if the program compiles to it,
+    /// else the VM, else the interpreter.
+    Auto,
+}
+
+impl Executor {
+    pub fn parse(s: &str) -> Option<Executor> {
+        Some(match s {
+            "interp" | "interpreter" => Executor::Interp,
+            "graph" | "graphrt" => Executor::GraphRt,
+            "vm" => Executor::Vm,
+            "auto" => Executor::Auto,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Interp => "interp",
+            Executor::GraphRt => "graphrt",
+            Executor::Vm => "vm",
+            Executor::Auto => "auto",
+        }
+    }
+}
+
+impl std::fmt::Display for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The result of [`run_with`]: the value plus which tier actually ran and
+/// how many kernel launches it performed.
+#[derive(Debug)]
+pub struct Execution {
+    pub value: Value,
+    /// Tier that executed (never "auto").
+    pub executor: &'static str,
+    pub launches: usize,
+}
+
+/// Run `@main(args...)` of an (already optimized) module on the chosen
+/// executor. ANF conversion for the graph runtime / VM happens internally.
+pub fn run_with(
+    module: &Module,
+    executor: Executor,
+    args: Vec<Value>,
+) -> Result<Execution, String> {
+    match executor {
+        Executor::Interp => {
+            let interp = Interp::new(module);
+            let f = module.entry().ok_or("no @main in module")?.clone();
+            let value = interp.apply(
+                Value::Closure { func: f, env: env_empty(), rec: None },
+                args,
+                &crate::ir::Attrs::new(),
+            )?;
+            Ok(Execution { value, executor: "interp", launches: interp.op_calls() })
+        }
+        Executor::GraphRt => {
+            let anfed = crate::pass::anf::run(module);
+            let main = anfed.def("main").ok_or("no @main in module")?;
+            let g = crate::graphrt::GraphRt::compile(main).map_err(|e| e.to_string())?;
+            let value = g.run(&args)?;
+            Ok(Execution { value, executor: "graphrt", launches: g.launches.get() })
+        }
+        Executor::Vm => {
+            let program = crate::vm::compile(module).map_err(|e| e.to_string())?;
+            let vm = crate::vm::Vm::new(&program);
+            let value = vm.run(args)?;
+            Ok(Execution { value, executor: "vm", launches: vm.launches.get() })
+        }
+        Executor::Auto => {
+            // Cheapest applicable tier first: the graph runtime rejects
+            // control flow / closures / ADTs at compile time, which is
+            // exactly the paper's executor-selection criterion. The ANF
+            // pass is shared between the graphrt attempt and the VM
+            // compile (normalization runs once).
+            let anfed = crate::pass::anf::run(module);
+            if let Some(main) = anfed.def("main") {
+                if let Ok(g) = crate::graphrt::GraphRt::compile(main) {
+                    let value = g.run(&args)?;
+                    return Ok(Execution {
+                        value,
+                        executor: "graphrt",
+                        launches: g.launches.get(),
+                    });
+                }
+            }
+            match crate::vm::compile_normalized(&anfed) {
+                Ok(program) => {
+                    let vm = crate::vm::Vm::new(&program);
+                    let value = vm.run(args)?;
+                    Ok(Execution { value, executor: "vm", launches: vm.launches.get() })
+                }
+                // The VM compiles everything the interpreter runs; the
+                // fallback is belt-and-braces for exotic inputs.
+                Err(_) => run_with(module, Executor::Interp, args),
+            }
+        }
+    }
+}
+
+/// [`run_with`] with automatic tier selection.
+pub fn run_auto(module: &Module, args: Vec<Value>) -> Result<Execution, String> {
+    run_with(module, Executor::Auto, args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_module;
+    use crate::tensor::Tensor;
+
+    fn tensor_arg(v: f32) -> Vec<Value> {
+        vec![Value::Tensor(Tensor::scalar_f32(v))]
+    }
+
+    #[test]
+    fn launch_counter_is_shared_and_resettable() {
+        let a = LaunchCounter::new();
+        let b = a.clone();
+        a.bump();
+        b.bump();
+        assert_eq!(a.get(), 2);
+        a.reset();
+        assert_eq!(b.get(), 0);
+    }
+
+    #[test]
+    fn auto_picks_graphrt_for_first_order_programs() {
+        let m = parse_module("def @main(%x: Tensor[(), float32]) { add(%x, 1f) }").unwrap();
+        let out = run_auto(&m, tensor_arg(1.0)).unwrap();
+        assert_eq!(out.executor, "graphrt");
+        assert_eq!(out.value.tensor().f32_value(), 2.0);
+        assert_eq!(out.launches, 1);
+    }
+
+    #[test]
+    fn auto_picks_vm_for_control_flow() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               if (greater(%x, 0f)) { %x } else { negative(%x) }\n\
+             }",
+        )
+        .unwrap();
+        let out = run_auto(&m, tensor_arg(-3.0)).unwrap();
+        assert_eq!(out.executor, "vm");
+        assert_eq!(out.value.tensor().f32_value(), 3.0);
+    }
+
+    #[test]
+    fn all_three_tiers_agree_where_they_apply() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(add(%x, 1f)) }",
+        )
+        .unwrap();
+        let x = Tensor::from_f32(vec![2, 2], vec![-3.0, -1.0, 0.5, 2.0]);
+        let args = vec![Value::Tensor(x)];
+        let a = run_with(&m, Executor::Interp, args.clone()).unwrap();
+        let b = run_with(&m, Executor::GraphRt, args.clone()).unwrap();
+        let c = run_with(&m, Executor::Vm, args).unwrap();
+        assert_eq!(a.value.tensor().as_f32(), b.value.tensor().as_f32());
+        assert_eq!(a.value.tensor().as_f32(), c.value.tensor().as_f32());
+        // Same launch count on every tier.
+        assert_eq!(a.launches, b.launches);
+        assert_eq!(a.launches, c.launches);
+    }
+
+    #[test]
+    fn executor_parse_roundtrip() {
+        for e in [Executor::Interp, Executor::GraphRt, Executor::Vm, Executor::Auto] {
+            assert_eq!(Executor::parse(e.name()), Some(e));
+        }
+        assert_eq!(Executor::parse("tpu"), None);
+    }
+}

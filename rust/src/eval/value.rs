@@ -59,11 +59,48 @@ pub enum Value {
     /// ops/ctors are used first-class.
     OpRef(String),
     CtorRef(String),
+    /// A closure created by the bytecode VM ([`crate::vm`]): an index into
+    /// the program's function table plus the captured environment, flat —
+    /// no linked env chain. Self-reference for recursion is re-supplied at
+    /// call time (no `Rc` cycles).
+    VmClosure(Rc<VmClosure>),
+}
+
+/// Payload of [`Value::VmClosure`].
+#[derive(Debug)]
+pub struct VmClosure {
+    /// Index into [`crate::vm::Program::funcs`].
+    pub func: u32,
+    /// Captured free-variable values, in the function's capture order.
+    pub captures: Vec<Value>,
 }
 
 impl Value {
     pub fn unit() -> Value {
         Value::Tuple(vec![])
+    }
+
+    /// Structural equality over data values (tensors, tuples, ADTs),
+    /// comparing tensors element-for-element with no tolerance — the
+    /// differential-executor guarantee (interpreter vs graph runtime vs
+    /// VM run identical kernels in identical order). Closures, refs, and
+    /// op/ctor references compare `false`.
+    pub fn bits_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Tensor(a), Value::Tensor(b)) => a == b,
+            (Value::Tuple(a), Value::Tuple(b)) => {
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.bits_eq(y))
+            }
+            (
+                Value::Adt { ctor: c1, fields: f1 },
+                Value::Adt { ctor: c2, fields: f2 },
+            ) => {
+                c1 == c2
+                    && f1.len() == f2.len()
+                    && f1.iter().zip(f2).all(|(x, y)| x.bits_eq(y))
+            }
+            _ => false,
+        }
     }
 
     pub fn tensor(&self) -> &Tensor {
@@ -132,6 +169,9 @@ impl fmt::Debug for Value {
             }
             Value::OpRef(n) => write!(f, "<op {n}>"),
             Value::CtorRef(n) => write!(f, "<ctor {n}>"),
+            Value::VmClosure(c) => {
+                write!(f, "<vmclosure #{}/{}>", c.func, c.captures.len())
+            }
         }
     }
 }

@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::eval::value::Value;
+use crate::eval::LaunchCounter;
 use crate::ir::{Attrs, Expr, Function, E};
 use crate::op::{self, OpDef};
 use crate::tensor::Tensor;
@@ -54,8 +55,13 @@ pub struct GraphRt {
     n_slots: usize,
     input_slots: Vec<usize>,
     output: SlotRef,
-    /// Number of kernel-launch nodes (Op + Fused), the Fig 10/11 metric.
+    /// Number of kernel-launch nodes (Op + Fused), the Fig 10/11 metric
+    /// (static count per execution).
     pub kernel_nodes: usize,
+    /// Dynamic launch counter, bumped once per executed kernel node —
+    /// shared/resettable so metrics are comparable across the three
+    /// executors ([`crate::eval::Executor`]).
+    pub launches: LaunchCounter,
 }
 
 #[derive(Debug)]
@@ -253,6 +259,7 @@ impl GraphRt {
             input_slots,
             output,
             kernel_nodes,
+            launches: LaunchCounter::new(),
         })
     }
 
@@ -289,6 +296,7 @@ impl GraphRt {
         for node in &self.nodes {
             let out = match &node.kind {
                 NodeKind::Op { def, attrs, inputs } => {
+                    self.launches.bump();
                     let args: Result<Vec<Value>, String> = inputs
                         .iter()
                         .map(|r| self.read(&slots, &empty_t, &empty_p, r))
@@ -299,6 +307,7 @@ impl GraphRt {
                     out
                 }
                 NodeKind::Fused { steps, n_temps, inputs } => {
+                    self.launches.bump();
                     let group_inputs: Result<Vec<Value>, String> = inputs
                         .iter()
                         .map(|r| self.read(&slots, &empty_t, &empty_p, r))

@@ -6,12 +6,20 @@
 //! path (see DESIGN.md for the full mapping).
 //!
 //! Layer map:
-//! * [`ir`], [`ty`], [`pass`], [`eval`], [`quant`], [`graphrt`] — the Relay
-//!   compiler itself (the paper's contribution).
+//! * [`ir`], [`ty`], [`pass`], [`eval`], [`quant`], [`graphrt`], [`vm`] —
+//!   the Relay compiler itself (the paper's contribution). Three execution
+//!   tiers share one value domain and launch metric:
+//!   - `eval::Interp` — reference tree-walk interpreter (ground truth);
+//!   - `graphrt::GraphRt` — flat node-list runtime for first-order,
+//!     control-flow-free programs;
+//!   - `vm::Vm` — register-based bytecode VM for control-flow-heavy
+//!     programs (closures, ADTs, recursion);
+//!   selected via `eval::Executor` / `eval::run_auto` (§3.1.3's
+//!   executor-selection story; see rust/src/vm/README.md).
 //! * [`tensor`], [`vta`] — substrates: reference kernels and the simulated
 //!   accelerator.
 //! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT
-//!   execution, and model importers.
+//!   execution, and model importers (PJRT/XLA behind the `xla` feature).
 //! * [`zoo`] — the evaluation model suite (vision + NLP).
 //! * [`coordinator`] — CLI + batched inference server (thin L3 driver).
 
@@ -27,6 +35,7 @@ pub mod pass;
 
 pub mod graphrt;
 pub mod quant;
+pub mod vm;
 
 pub mod backend;
 pub mod frontend;

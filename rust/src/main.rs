@@ -4,6 +4,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use relay::coordinator::{self, server};
+use relay::eval::Executor;
 use relay::pass::OptLevel;
 
 fn main() {
@@ -34,6 +35,15 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|w| w[1].as_str())
 }
 
+fn executor_of(args: &[String]) -> anyhow::Result<Executor> {
+    match flag_value(args, "--executor") {
+        None => Ok(Executor::Auto),
+        Some(s) => Executor::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown executor {s:?} (expected interp|graph|vm|auto)")
+        }),
+    }
+}
+
 fn run(args: &[String]) -> anyhow::Result<String> {
     match args.first().map(|s| s.as_str()) {
         Some("compile") => {
@@ -42,7 +52,7 @@ fn run(args: &[String]) -> anyhow::Result<String> {
         }
         Some("run") => {
             let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
-            coordinator::cmd_run(path, opt_of(args))
+            coordinator::cmd_run(path, opt_of(args), executor_of(args)?)
         }
         Some("artifact") => {
             let name = args.get(1).ok_or_else(|| anyhow::anyhow!("missing name"))?;

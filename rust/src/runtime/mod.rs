@@ -7,157 +7,229 @@
 //! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! The real implementation needs the `xla` bindings crate and is gated
+//! behind the off-by-default `xla` cargo feature. Without the feature a
+//! stub [`Runtime`] with the same method surface is compiled instead; it
+//! fails at construction time ([`Runtime::cpu`]) with a clear error, so
+//! callers (the coordinator's artifact path, the serving batcher's PJRT
+//! branch) degrade gracefully while the rest of the compiler — including
+//! the interpreter, graph runtime, and bytecode VM — stays fully usable.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+    use anyhow::{anyhow, Context, Result};
 
-use crate::tensor::{DType, Tensor};
+    use crate::tensor::{DType, Tensor};
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    /// Compiled-executable cache keyed by artifact path or structural hash.
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        /// Compiled-executable cache keyed by artifact path or structural hash.
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact (cached by path).
+        pub fn load_artifact(
+            &self,
+            path: &Path,
+        ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            let key = path.display().to_string();
+            if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+                return Ok(exe.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("parsing {key}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = std::sync::Arc::new(
+                self.client.compile(&comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?,
+            );
+            self.cache.lock().unwrap().insert(key, exe.clone());
+            Ok(exe)
+        }
+
+        /// Compile an in-memory computation (cached by caller-provided key).
+        pub fn compile_cached(
+            &self,
+            key: &str,
+            comp: &xla::XlaComputation,
+        ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(key) {
+                return Ok(exe.clone());
+            }
+            let exe = std::sync::Arc::new(
+                self.client.compile(comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?,
+            );
+            self.cache.lock().unwrap().insert(key.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        pub fn cache_len(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        /// Execute with tensor inputs; returns the flattened outputs.
+        /// jax artifacts are lowered with `return_tuple=True`, so a 1-tuple
+        /// result is unwrapped into its elements.
+        pub fn execute(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>> {
+            let literals: Result<Vec<xla::Literal>> =
+                inputs.iter().map(tensor_to_literal).collect();
+            let result = exe
+                .execute::<xla::Literal>(&literals?)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| anyhow!("detuple: {e:?}"))?;
+            if parts.is_empty() {
+                return Ok(vec![]);
+            }
+            parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+        }
+    }
+
+    /// Convert our Tensor into an xla Literal.
+    pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        let lit = match t.dtype() {
+            DType::F32 => xla::Literal::vec1(t.as_f32()),
+            DType::F64 => xla::Literal::vec1(t.as_f64()),
+            DType::I64 => xla::Literal::vec1(t.as_i64()),
+            DType::I32 => xla::Literal::vec1(t.as_i32()),
+            DType::Bool => {
+                // No direct bool vec; go through i32 + convert to PRED.
+                let v: Vec<i32> = t.as_bool().iter().map(|&b| b as i32).collect();
+                xla::Literal::vec1(&v)
+                    .convert(xla::PrimitiveType::Pred)
+                    .map_err(|e| anyhow!("bool convert: {e:?}"))?
+            }
+            other => return Err(anyhow!("unsupported literal dtype {other}")),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("literal reshape: {e:?}"))
+    }
+
+    /// Convert an xla Literal back into our Tensor.
+    pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+        let shape = l.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let t = match shape.ty() {
+            xla::ElementType::F32 => {
+                Tensor::from_f32(dims, l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            xla::ElementType::S64 => {
+                Tensor::from_i64(dims, l.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            xla::ElementType::S32 => {
+                Tensor::from_i32(dims, l.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            xla::ElementType::Pred => {
+                let l2 = l.convert(xla::PrimitiveType::S32).map_err(|e| anyhow!("{e:?}"))?;
+                let v: Vec<i32> = l2.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                Tensor::from_bool(dims, v.into_iter().map(|b| b != 0).collect())
+            }
+            other => return Err(anyhow!("unsupported output element type {other:?}")),
+        };
+        Ok(t)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn literal_roundtrip_f32() {
+            let t = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]);
+            let l = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&l).unwrap();
+            assert_eq!(back.shape(), t.shape());
+            assert_eq!(back.as_f32(), t.as_f32());
+        }
+
+        #[test]
+        fn literal_roundtrip_i64() {
+            let t = Tensor::from_i64(vec![3], vec![1, -2, 3]);
+            let l = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&l).unwrap();
+            assert_eq!(back.as_i64(), t.as_i64());
+        }
+    }
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+#[cfg(feature = "xla")]
+pub use pjrt::*;
+
+#[cfg(not(feature = "xla"))]
+mod pjrt_stub {
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, Result};
+
+    use crate::tensor::Tensor;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: relay was built without the `xla` feature \
+         (enable it with the xla bindings crate patched into the workspace)";
+
+    /// Opaque stand-in for `xla::PjRtLoadedExecutable`; never constructed.
+    pub struct LoadedExecutable {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Stub runtime with the same method surface as the PJRT-backed one.
+    /// [`Runtime::cpu`] always fails, so the other methods are never
+    /// reachable — they exist so feature-independent callers typecheck.
+    pub struct Runtime {
+        _private: (),
     }
 
-    /// Load + compile an HLO text artifact (cached by path).
-    pub fn load_artifact(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        let key = path.display().to_string();
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
-            return Ok(exe.clone());
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(anyhow!(UNAVAILABLE))
         }
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow!("parsing {key}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client.compile(&comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?,
-        );
-        self.cache.lock().unwrap().insert(key, exe.clone());
-        Ok(exe)
-    }
 
-    /// Compile an in-memory computation (cached by caller-provided key).
-    pub fn compile_cached(
-        &self,
-        key: &str,
-        comp: &xla::XlaComputation,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(key) {
-            return Ok(exe.clone());
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
         }
-        let exe = std::sync::Arc::new(
-            self.client.compile(comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?,
-        );
-        self.cache.lock().unwrap().insert(key.to_string(), exe.clone());
-        Ok(exe)
-    }
 
-    pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-
-    /// Execute with tensor inputs; returns the flattened outputs.
-    /// jax artifacts are lowered with `return_tuple=True`, so a 1-tuple
-    /// result is unwrapped into its elements.
-    pub fn execute(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[Tensor],
-    ) -> Result<Vec<Tensor>> {
-        let literals: Result<Vec<xla::Literal>> =
-            inputs.iter().map(tensor_to_literal).collect();
-        let result = exe
-            .execute::<xla::Literal>(&literals?)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("detuple: {e:?}"))?;
-        if parts.is_empty() {
-            return Ok(vec![]);
+        pub fn load_artifact(&self, _path: &Path) -> Result<Arc<LoadedExecutable>> {
+            Err(anyhow!(UNAVAILABLE))
         }
-        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+
+        pub fn cache_len(&self) -> usize {
+            0
+        }
+
+        pub fn execute(
+            &self,
+            _exe: &LoadedExecutable,
+            _inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>> {
+            Err(anyhow!(UNAVAILABLE))
+        }
     }
 }
 
-/// Convert our Tensor into an xla Literal.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    let lit = match t.dtype() {
-        DType::F32 => xla::Literal::vec1(t.as_f32()),
-        DType::F64 => xla::Literal::vec1(t.as_f64()),
-        DType::I64 => xla::Literal::vec1(t.as_i64()),
-        DType::I32 => xla::Literal::vec1(t.as_i32()),
-        DType::Bool => {
-            // No direct bool vec; go through i32 + convert to PRED.
-            let v: Vec<i32> = t.as_bool().iter().map(|&b| b as i32).collect();
-            xla::Literal::vec1(&v)
-                .convert(xla::PrimitiveType::Pred)
-                .map_err(|e| anyhow!("bool convert: {e:?}"))?
-        }
-        other => return Err(anyhow!("unsupported literal dtype {other}")),
-    };
-    lit.reshape(&dims).map_err(|e| anyhow!("literal reshape: {e:?}"))
-}
-
-/// Convert an xla Literal back into our Tensor.
-pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let t = match shape.ty() {
-        xla::ElementType::F32 => {
-            Tensor::from_f32(dims, l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
-        }
-        xla::ElementType::S64 => {
-            Tensor::from_i64(dims, l.to_vec::<i64>().map_err(|e| anyhow!("{e:?}"))?)
-        }
-        xla::ElementType::S32 => {
-            Tensor::from_i32(dims, l.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?)
-        }
-        xla::ElementType::Pred => {
-            let l2 = l.convert(xla::PrimitiveType::S32).map_err(|e| anyhow!("{e:?}"))?;
-            let v: Vec<i32> = l2.to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            Tensor::from_bool(dims, v.into_iter().map(|b| b != 0).collect())
-        }
-        other => return Err(anyhow!("unsupported output element type {other:?}")),
-    };
-    Ok(t)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn literal_roundtrip_f32() {
-        let t = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]);
-        let l = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&l).unwrap();
-        assert_eq!(back.shape(), t.shape());
-        assert_eq!(back.as_f32(), t.as_f32());
-    }
-
-    #[test]
-    fn literal_roundtrip_i64() {
-        let t = Tensor::from_i64(vec![3], vec![1, -2, 3]);
-        let l = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&l).unwrap();
-        assert_eq!(back.as_i64(), t.as_i64());
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use pjrt_stub::*;

@@ -1,0 +1,357 @@
+//! The VM instruction set: a compact register-based bytecode with a
+//! constant pool, a packed-kernel table, and per-function register frames.
+//!
+//! Design points (mirroring the Relay VM of Roesch et al. 2019 and TVM's
+//! `relay.vm`):
+//! * **Registers, not a stack** — every instruction names its operand and
+//!   destination registers directly; a function executes in a flat frame
+//!   of `nregs` value slots, so the hot loop is vector indexing instead of
+//!   environment-chain walking.
+//! * **Packed kernels** — a fused primitive function (or a single operator
+//!   call) compiles to one [`PackedFunc`]; executing it is ONE
+//!   `InvokePacked`, i.e. one "kernel launch" in the Fig 10–12 metric,
+//!   regardless of how many ops were fused inside.
+//! * **Forward-only branches** — `If`/`Goto`/`Match` targets always point
+//!   forward; loops are expressed as (self-)recursive function calls. The
+//!   register allocator's linear liveness scan relies on this invariant.
+
+use std::fmt;
+
+use crate::eval::value::Value;
+use crate::ir::Attrs;
+use crate::op::OpDef;
+use crate::tensor::DType;
+
+/// A register index within the current frame.
+pub type Reg = u16;
+
+/// Where a packed-kernel step reads an input from.
+#[derive(Clone, Copy, Debug)]
+pub enum PackedRef {
+    /// The i-th argument of the `InvokePacked` call.
+    Arg(u16),
+    /// An intermediate produced by an earlier step of the same kernel.
+    Temp(u16),
+    /// An entry of the program constant pool.
+    Const(u32),
+}
+
+/// One operator application inside a packed kernel.
+pub struct PackedStep {
+    pub def: &'static OpDef,
+    pub attrs: Attrs,
+    pub inputs: Vec<PackedRef>,
+    pub out_temp: u16,
+}
+
+/// A fused kernel: an operator sequence over scratch temps. Executing one
+/// counts as a single launch (the fusion benefit of §4.4 shows up as fewer
+/// `InvokePacked` executions).
+pub struct PackedFunc {
+    pub name: String,
+    pub steps: Vec<PackedStep>,
+    pub n_temps: u16,
+    /// Temp holding the kernel result.
+    pub out_temp: u16,
+}
+
+/// The instruction set. `dst`/`src` are frame registers; `pc` targets are
+/// absolute instruction indices within the owning function's code.
+pub enum Instr {
+    /// `dst <- consts[idx]` (cheap: tensors are Arc-backed).
+    LoadConst { dst: Reg, idx: u32 },
+    /// `dst <- zeros(shape, dtype)` — fresh tensor storage allocation.
+    AllocTensor { dst: Reg, shape: Vec<usize>, dtype: DType },
+    /// `dst <- (items...)`.
+    AllocTuple { dst: Reg, items: Vec<Reg> },
+    /// `dst <- Ctor(fields...)`; `ctor` indexes [`Program::ctor_names`].
+    AllocAdt { dst: Reg, ctor: u32, fields: Vec<Reg> },
+    /// `dst <- closure(funcs[func], captures...)`.
+    AllocClosure { dst: Reg, func: u32, captures: Vec<Reg> },
+    /// `dst <- src.index` (tuple projection).
+    Proj { dst: Reg, src: Reg, index: u16 },
+    /// `dst <- src.fields[index]` (ADT field extraction, post-`Match`).
+    GetField { dst: Reg, src: Reg, index: u16 },
+    /// Tag dispatch: fall through when `src` is an ADT built by `ctor`
+    /// (and, when `arity` is set, has exactly that many fields); otherwise
+    /// jump to `on_fail`. `arity: None` mirrors the interpreter's rule
+    /// that nullary patterns may omit field patterns.
+    Match { src: Reg, ctor: u32, arity: Option<u16>, on_fail: u32 },
+    /// Fall through when `src` is a tuple of exactly `arity` elements.
+    MatchTuple { src: Reg, arity: u16, on_fail: u32 },
+    /// Branch on a rank-0 bool tensor: fall through to the then-block,
+    /// jump to `on_false` for the else-block.
+    If { cond: Reg, on_false: u32 },
+    /// Unconditional forward jump (join points of `If`/`Match` arms).
+    Goto { target: u32 },
+    /// `dst <- src`.
+    Move { dst: Reg, src: Reg },
+    /// Launch a packed kernel: `dst <- packed[p](args...)`. Counts one
+    /// kernel launch.
+    InvokePacked { dst: Reg, packed: u32, args: Vec<Reg> },
+    /// Direct call of a global VM function (no captures).
+    InvokeFunc { dst: Reg, func: u32, args: Vec<Reg> },
+    /// Indirect call through a closure/op/constructor value in `clos`.
+    InvokeClosure { dst: Reg, clos: Reg, args: Vec<Reg> },
+    /// `dst <- ref(src)`.
+    RefNew { dst: Reg, src: Reg },
+    /// `dst <- !src`.
+    RefRead { dst: Reg, src: Reg },
+    /// `*r <- v; dst <- ()`.
+    RefWrite { dst: Reg, r: Reg, v: Reg },
+    /// Return `src` to the caller (or finish the program).
+    Ret { src: Reg },
+    /// Raise a runtime error (e.g. non-exhaustive match).
+    Fault { msg: String },
+}
+
+impl Instr {
+    /// Visit every register this instruction *reads*.
+    pub fn for_each_use(&self, mut f: impl FnMut(Reg)) {
+        match self {
+            Instr::LoadConst { .. }
+            | Instr::AllocTensor { .. }
+            | Instr::Goto { .. }
+            | Instr::Fault { .. } => {}
+            Instr::AllocTuple { items, .. } => items.iter().for_each(|r| f(*r)),
+            Instr::AllocAdt { fields, .. } => fields.iter().for_each(|r| f(*r)),
+            Instr::AllocClosure { captures, .. } => captures.iter().for_each(|r| f(*r)),
+            Instr::Proj { src, .. }
+            | Instr::GetField { src, .. }
+            | Instr::Match { src, .. }
+            | Instr::MatchTuple { src, .. }
+            | Instr::Move { src, .. }
+            | Instr::RefNew { src, .. }
+            | Instr::RefRead { src, .. }
+            | Instr::Ret { src } => f(*src),
+            Instr::If { cond, .. } => f(*cond),
+            Instr::InvokePacked { args, .. } | Instr::InvokeFunc { args, .. } => {
+                args.iter().for_each(|r| f(*r))
+            }
+            Instr::InvokeClosure { clos, args, .. } => {
+                f(*clos);
+                args.iter().for_each(|r| f(*r));
+            }
+            Instr::RefWrite { r, v, .. } => {
+                f(*r);
+                f(*v);
+            }
+        }
+    }
+
+    /// Visit every register this instruction *writes*.
+    pub fn for_each_def(&self, mut f: impl FnMut(Reg)) {
+        match self {
+            Instr::LoadConst { dst, .. }
+            | Instr::AllocTensor { dst, .. }
+            | Instr::AllocTuple { dst, .. }
+            | Instr::AllocAdt { dst, .. }
+            | Instr::AllocClosure { dst, .. }
+            | Instr::Proj { dst, .. }
+            | Instr::GetField { dst, .. }
+            | Instr::Move { dst, .. }
+            | Instr::InvokePacked { dst, .. }
+            | Instr::InvokeFunc { dst, .. }
+            | Instr::InvokeClosure { dst, .. }
+            | Instr::RefNew { dst, .. }
+            | Instr::RefRead { dst, .. }
+            | Instr::RefWrite { dst, .. } => f(*dst),
+            Instr::Match { .. }
+            | Instr::MatchTuple { .. }
+            | Instr::If { .. }
+            | Instr::Goto { .. }
+            | Instr::Ret { .. }
+            | Instr::Fault { .. } => {}
+        }
+    }
+
+    /// Remap read registers in place (used by the register allocator;
+    /// defs are remapped separately because a def may *create* a mapping).
+    pub fn remap_uses(&mut self, mut f: impl FnMut(Reg) -> Reg) {
+        match self {
+            Instr::LoadConst { .. }
+            | Instr::AllocTensor { .. }
+            | Instr::Goto { .. }
+            | Instr::Fault { .. } => {}
+            Instr::AllocTuple { items, .. } => items.iter_mut().for_each(|r| *r = f(*r)),
+            Instr::AllocAdt { fields, .. } => fields.iter_mut().for_each(|r| *r = f(*r)),
+            Instr::AllocClosure { captures, .. } => {
+                captures.iter_mut().for_each(|r| *r = f(*r))
+            }
+            Instr::Proj { src, .. }
+            | Instr::GetField { src, .. }
+            | Instr::Match { src, .. }
+            | Instr::MatchTuple { src, .. }
+            | Instr::Move { src, .. }
+            | Instr::RefNew { src, .. }
+            | Instr::RefRead { src, .. }
+            | Instr::Ret { src } => *src = f(*src),
+            Instr::If { cond, .. } => *cond = f(*cond),
+            Instr::InvokePacked { args, .. } | Instr::InvokeFunc { args, .. } => {
+                args.iter_mut().for_each(|r| *r = f(*r))
+            }
+            Instr::InvokeClosure { clos, args, .. } => {
+                *clos = f(*clos);
+                args.iter_mut().for_each(|r| *r = f(*r));
+            }
+            Instr::RefWrite { r, v, .. } => {
+                *r = f(*r);
+                *v = f(*v);
+            }
+        }
+    }
+
+    /// Remap written registers in place.
+    pub fn remap_defs(&mut self, mut f: impl FnMut(Reg) -> Reg) {
+        match self {
+            Instr::LoadConst { dst, .. }
+            | Instr::AllocTensor { dst, .. }
+            | Instr::AllocTuple { dst, .. }
+            | Instr::AllocAdt { dst, .. }
+            | Instr::AllocClosure { dst, .. }
+            | Instr::Proj { dst, .. }
+            | Instr::GetField { dst, .. }
+            | Instr::Move { dst, .. }
+            | Instr::InvokePacked { dst, .. }
+            | Instr::InvokeFunc { dst, .. }
+            | Instr::InvokeClosure { dst, .. }
+            | Instr::RefNew { dst, .. }
+            | Instr::RefRead { dst, .. }
+            | Instr::RefWrite { dst, .. } => *dst = f(*dst),
+            Instr::Match { .. }
+            | Instr::MatchTuple { .. }
+            | Instr::If { .. }
+            | Instr::Goto { .. }
+            | Instr::Ret { .. }
+            | Instr::Fault { .. } => {}
+        }
+    }
+}
+
+/// A compiled function.
+///
+/// Calling convention: on entry, registers `0..params` hold the call
+/// arguments, `params..params+captures` hold the closure's captured
+/// values, and — when `has_self` — register `params+captures` holds the
+/// closure value itself (how `let %f = fn ...` recursion re-enters without
+/// an `Rc` cycle). Remaining registers up to `nregs` are scratch, reused
+/// across dead values by the liveness pass.
+pub struct VmFunc {
+    pub name: String,
+    pub params: u16,
+    pub captures: u16,
+    pub has_self: bool,
+    pub nregs: u16,
+    pub code: Vec<Instr>,
+}
+
+/// A compiled program: function table, constant pool, packed-kernel table,
+/// interned constructor names, and the `@main` entry index.
+pub struct Program {
+    pub funcs: Vec<VmFunc>,
+    pub consts: Vec<Value>,
+    pub packed: Vec<PackedFunc>,
+    pub ctor_names: Vec<String>,
+    pub entry: u32,
+}
+
+impl Program {
+    /// Total instruction count (metric used by tests / disassembly).
+    pub fn num_instrs(&self) -> usize {
+        self.funcs.iter().map(|f| f.code.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Disassembly
+// ---------------------------------------------------------------------------
+
+fn regs(rs: &[Reg]) -> String {
+    rs.iter().map(|r| format!("r{r}")).collect::<Vec<_>>().join(", ")
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Instr::LoadConst { dst, idx } => write!(f, "r{dst} = const[{idx}]"),
+            Instr::AllocTensor { dst, shape, dtype } => {
+                write!(f, "r{dst} = alloc_tensor {shape:?} {dtype}")
+            }
+            Instr::AllocTuple { dst, items } => {
+                write!(f, "r{dst} = tuple({})", regs(items))
+            }
+            Instr::AllocAdt { dst, ctor, fields } => {
+                write!(f, "r{dst} = adt#{ctor}({})", regs(fields))
+            }
+            Instr::AllocClosure { dst, func, captures } => {
+                write!(f, "r{dst} = closure fn#{func} [{}]", regs(captures))
+            }
+            Instr::Proj { dst, src, index } => write!(f, "r{dst} = r{src}.{index}"),
+            Instr::GetField { dst, src, index } => {
+                write!(f, "r{dst} = field(r{src}, {index})")
+            }
+            Instr::Match { src, ctor, arity, on_fail } => {
+                write!(f, "match r{src} tag#{ctor}")?;
+                if let Some(a) = arity {
+                    write!(f, "/{a}")?;
+                }
+                write!(f, " else -> {on_fail}")
+            }
+            Instr::MatchTuple { src, arity, on_fail } => {
+                write!(f, "match r{src} tuple/{arity} else -> {on_fail}")
+            }
+            Instr::If { cond, on_false } => write!(f, "if !r{cond} -> {on_false}"),
+            Instr::Goto { target } => write!(f, "goto {target}"),
+            Instr::Move { dst, src } => write!(f, "r{dst} = r{src}"),
+            Instr::InvokePacked { dst, packed, args } => {
+                write!(f, "r{dst} = invoke_packed k#{packed}({})", regs(args))
+            }
+            Instr::InvokeFunc { dst, func, args } => {
+                write!(f, "r{dst} = invoke fn#{func}({})", regs(args))
+            }
+            Instr::InvokeClosure { dst, clos, args } => {
+                write!(f, "r{dst} = invoke_closure r{clos}({})", regs(args))
+            }
+            Instr::RefNew { dst, src } => write!(f, "r{dst} = ref(r{src})"),
+            Instr::RefRead { dst, src } => write!(f, "r{dst} = !r{src}"),
+            Instr::RefWrite { dst, r, v } => write!(f, "r{dst} = (r{r} := r{v})"),
+            Instr::Ret { src } => write!(f, "ret r{src}"),
+            Instr::Fault { msg } => write!(f, "fault {msg:?}"),
+        }
+    }
+}
+
+impl fmt::Display for VmFunc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "fn {} (params={}, captures={}{}, regs={})",
+            self.name,
+            self.params,
+            self.captures,
+            if self.has_self { ", self" } else { "" },
+            self.nregs
+        )?;
+        for (i, ins) in self.code.iter().enumerate() {
+            writeln!(f, "  {i:>4}: {ins}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "program: {} funcs, {} consts, {} packed kernels, entry fn#{}",
+            self.funcs.len(),
+            self.consts.len(),
+            self.packed.len(),
+            self.entry
+        )?;
+        for (i, func) in self.funcs.iter().enumerate() {
+            writeln!(f, "fn#{i} {func}")?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,845 @@
+//! Compiler from (post-fusion, ANF-normalized) Relay IR to VM bytecode.
+//!
+//! Three jobs beyond straightforward instruction selection:
+//!
+//! * **Closure conversion** — every `Expr::Func` is lifted to a top-level
+//!   [`VmFunc`]; its free variables become an explicit capture list passed
+//!   through `AllocClosure`. `let %f = fn ...` recursion is handled with a
+//!   call-time self register (`VmFunc::has_self`), not an `Rc` cycle.
+//! * **Match lowering** — nested patterns become chains of `Match` /
+//!   `MatchTuple` tag tests with `GetField` / `Proj` destructuring; arm
+//!   bodies jump to a common join. All branches are forward.
+//! * **Register planning** — codegen uses unbounded virtual registers;
+//!   [`allocate_registers`] then runs a linear liveness scan (sound
+//!   because branches only jump forward) and rewrites them onto a small
+//!   physical frame, reusing registers whose values are dead — the VM's
+//!   analogue of the graph runtime's memory planning.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::bytecode::{Instr, PackedFunc, PackedRef, PackedStep, Program, Reg, VmFunc};
+use crate::eval::value::Value;
+use crate::ir::{Expr, Function, Module, Pattern, Var, E};
+use crate::op;
+use crate::tensor::Tensor;
+
+#[derive(Debug)]
+pub struct CompileError(pub String);
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm compile: {}", self.0)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+type R<T> = Result<T, CompileError>;
+
+fn err<T>(msg: impl Into<String>) -> R<T> {
+    Err(CompileError(msg.into()))
+}
+
+/// Compile a whole module. The module is ANF-normalized first (idempotent
+/// if already normal); `@main` becomes the program entry.
+pub fn compile(m: &Module) -> R<Program> {
+    let anfed = crate::pass::anf::run(m);
+    compile_normalized(&anfed)
+}
+
+/// Compile a module that is already in ANF (e.g. when the caller ran
+/// `pass::anf::run` for executor selection and wants to avoid a second
+/// normalization pass).
+pub fn compile_normalized(m: &Module) -> R<Program> {
+    let anfed = m;
+    let mut b = Builder::new(m);
+    // Pre-assign indices for every global so bodies can call each other
+    // (and themselves) directly.
+    let names: Vec<String> = anfed.defs.keys().cloned().collect();
+    for name in &names {
+        let idx = b.reserve_func();
+        b.func_index.insert(name.clone(), idx);
+    }
+    for name in &names {
+        let f = &anfed.defs[name];
+        let idx = b.func_index[name];
+        let vmf = compile_function(&mut b, format!("@{name}"), f, &[], None)?;
+        b.fill_func(idx, vmf);
+    }
+    let entry = *b
+        .func_index
+        .get("main")
+        .ok_or_else(|| CompileError("no @main in module".into()))?;
+    b.finish(entry)
+}
+
+/// Compile a bare expression as a zero-argument `@main` (test helper).
+pub fn compile_expr(m: &Module, e: &E) -> R<Program> {
+    let mut with_main = m.clone();
+    with_main.add_def("main", Function::new(vec![], e.clone()));
+    compile(&with_main)
+}
+
+// ---------------------------------------------------------------------------
+// Builder: program-level pools shared across function compilations.
+// ---------------------------------------------------------------------------
+
+struct Builder<'m> {
+    module: &'m Module,
+    funcs: Vec<Option<VmFunc>>,
+    func_index: BTreeMap<String, u32>,
+    consts: Vec<Value>,
+    packed: Vec<PackedFunc>,
+    ctor_names: Vec<String>,
+    ctor_index: HashMap<String, u32>,
+}
+
+impl<'m> Builder<'m> {
+    fn new(module: &'m Module) -> Builder<'m> {
+        Builder {
+            module,
+            funcs: Vec::new(),
+            func_index: BTreeMap::new(),
+            consts: Vec::new(),
+            packed: Vec::new(),
+            ctor_names: Vec::new(),
+            ctor_index: HashMap::new(),
+        }
+    }
+
+    fn reserve_func(&mut self) -> u32 {
+        self.funcs.push(None);
+        (self.funcs.len() - 1) as u32
+    }
+
+    fn fill_func(&mut self, idx: u32, f: VmFunc) {
+        self.funcs[idx as usize] = Some(f);
+    }
+
+    fn const_idx(&mut self, v: Value) -> u32 {
+        self.consts.push(v);
+        (self.consts.len() - 1) as u32
+    }
+
+    fn ctor_idx(&mut self, name: &str) -> u32 {
+        if let Some(i) = self.ctor_index.get(name) {
+            return *i;
+        }
+        self.ctor_names.push(name.to_string());
+        let i = (self.ctor_names.len() - 1) as u32;
+        self.ctor_index.insert(name.to_string(), i);
+        i
+    }
+
+    fn add_packed(&mut self, p: PackedFunc) -> u32 {
+        self.packed.push(p);
+        (self.packed.len() - 1) as u32
+    }
+
+    fn finish(self, entry: u32) -> R<Program> {
+        let mut funcs = Vec::with_capacity(self.funcs.len());
+        for (i, f) in self.funcs.into_iter().enumerate() {
+            match f {
+                Some(f) => funcs.push(f),
+                None => return err(format!("function slot {i} never filled")),
+            }
+        }
+        Ok(Program {
+            funcs,
+            consts: self.consts,
+            packed: self.packed,
+            ctor_names: self.ctor_names,
+            entry,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-function compilation.
+// ---------------------------------------------------------------------------
+
+fn compile_function(
+    b: &mut Builder,
+    name: String,
+    func: &Function,
+    captures: &[Var],
+    rec: Option<&Var>,
+) -> R<VmFunc> {
+    let mut ctx = FnCtx {
+        b,
+        code: Vec::new(),
+        env: HashMap::new(),
+        next: 0,
+    };
+    for (p, _) in &func.params {
+        let r = ctx.fresh()?;
+        ctx.env.insert(p.id, r);
+    }
+    for c in captures {
+        let r = ctx.fresh()?;
+        ctx.env.insert(c.id, r);
+    }
+    let has_self = rec.is_some();
+    if let Some(rv) = rec {
+        let r = ctx.fresh()?;
+        ctx.env.insert(rv.id, r);
+    }
+    let fixed = ctx.next;
+    let out = ctx.compile(&func.body)?;
+    ctx.emit(Instr::Ret { src: out });
+    let mut code = ctx.code;
+    let nregs = allocate_registers(&mut code, fixed)?;
+    Ok(VmFunc {
+        name,
+        params: func.params.len() as u16,
+        captures: captures.len() as u16,
+        has_self,
+        nregs,
+        code,
+    })
+}
+
+struct FnCtx<'b, 'm> {
+    b: &'b mut Builder<'m>,
+    code: Vec<Instr>,
+    /// var id -> virtual register holding its value.
+    env: HashMap<u32, Reg>,
+    next: Reg,
+}
+
+impl FnCtx<'_, '_> {
+    fn fresh(&mut self) -> R<Reg> {
+        if self.next == Reg::MAX {
+            return err("function needs more than 65534 virtual registers");
+        }
+        let r = self.next;
+        self.next += 1;
+        Ok(r)
+    }
+
+    fn emit(&mut self, i: Instr) -> usize {
+        self.code.push(i);
+        self.code.len() - 1
+    }
+
+    fn here(&self) -> u32 {
+        self.code.len() as u32
+    }
+
+    /// Patch the jump target of a previously emitted branch.
+    fn patch(&mut self, at: usize, target: u32) {
+        match &mut self.code[at] {
+            Instr::If { on_false, .. } => *on_false = target,
+            Instr::Goto { target: t } => *t = target,
+            Instr::Match { on_fail, .. } => *on_fail = target,
+            Instr::MatchTuple { on_fail, .. } => *on_fail = target,
+            other => panic!("patching non-branch instruction {other}"),
+        }
+    }
+
+    fn lookup(&self, v: &Var) -> R<Reg> {
+        self.env
+            .get(&v.id)
+            .copied()
+            .ok_or_else(|| CompileError(format!("unbound variable {v}")))
+    }
+
+    /// Compile `e`, returning the register holding its value.
+    fn compile(&mut self, e: &E) -> R<Reg> {
+        match &**e {
+            Expr::Var(v) => self.lookup(v),
+            Expr::Const(t) => {
+                let dst = self.fresh()?;
+                if tensor_is_zero(t) {
+                    // Zero constants become explicit storage allocation —
+                    // the VM's AllocTensor role (initial states, zero
+                    // cells) — instead of occupying the constant pool.
+                    self.emit(Instr::AllocTensor {
+                        dst,
+                        shape: t.shape().to_vec(),
+                        dtype: t.dtype(),
+                    });
+                } else {
+                    let idx = self.b.const_idx(Value::Tensor(t.clone()));
+                    self.emit(Instr::LoadConst { dst, idx });
+                }
+                Ok(dst)
+            }
+            Expr::Global(g) => {
+                // First-class global: a captureless closure.
+                let func = self.global_idx(g)?;
+                let dst = self.fresh()?;
+                self.emit(Instr::AllocClosure { dst, func, captures: vec![] });
+                Ok(dst)
+            }
+            Expr::Op(name) => {
+                let idx = self.b.const_idx(Value::OpRef(name.clone()));
+                let dst = self.fresh()?;
+                self.emit(Instr::LoadConst { dst, idx });
+                Ok(dst)
+            }
+            Expr::Ctor(name) => {
+                // Nullary constructors are values already (`Nil` == `Nil()`),
+                // mirroring the interpreter.
+                let v = match self.b.module.ctor_info(name) {
+                    Some((_, fields)) if fields.is_empty() => {
+                        Value::Adt { ctor: name.clone(), fields: vec![] }
+                    }
+                    _ => Value::CtorRef(name.clone()),
+                };
+                let idx = self.b.const_idx(v);
+                let dst = self.fresh()?;
+                self.emit(Instr::LoadConst { dst, idx });
+                Ok(dst)
+            }
+            Expr::Tuple(es) => {
+                let items: R<Vec<Reg>> = es.iter().map(|x| self.compile(x)).collect();
+                let items = items?;
+                let dst = self.fresh()?;
+                self.emit(Instr::AllocTuple { dst, items });
+                Ok(dst)
+            }
+            Expr::Proj(t, i) => {
+                let src = self.compile(t)?;
+                let dst = self.fresh()?;
+                self.emit(Instr::Proj { dst, src, index: *i as u16 });
+                Ok(dst)
+            }
+            Expr::Let { var, value, body, .. } => {
+                let r = match &**value {
+                    // Recursive let for function values (Fig. 2's loop
+                    // pattern): the closure sees itself through the self
+                    // register.
+                    Expr::Func(f) => self.compile_closure(value, f, Some(var))?,
+                    _ => self.compile(value)?,
+                };
+                self.env.insert(var.id, r);
+                self.compile(body)
+            }
+            Expr::Func(f) => self.compile_closure(e, f, None),
+            Expr::If { cond, then_, else_ } => {
+                let cond = self.compile(cond)?;
+                let dst = self.fresh()?;
+                let branch = self.emit(Instr::If { cond, on_false: u32::MAX });
+                let t = self.compile(then_)?;
+                self.emit(Instr::Move { dst, src: t });
+                let skip = self.emit(Instr::Goto { target: u32::MAX });
+                let else_start = self.here();
+                self.patch(branch, else_start);
+                let f = self.compile(else_)?;
+                self.emit(Instr::Move { dst, src: f });
+                let join = self.here();
+                self.patch(skip, join);
+                Ok(dst)
+            }
+            Expr::Match { scrut, arms } => {
+                let s = self.compile(scrut)?;
+                let dst = self.fresh()?;
+                let mut end_jumps = Vec::new();
+                for (p, body) in arms {
+                    let mut fails = Vec::new();
+                    self.compile_pattern(p, s, &mut fails)?;
+                    let r = self.compile(body)?;
+                    self.emit(Instr::Move { dst, src: r });
+                    end_jumps.push(self.emit(Instr::Goto { target: u32::MAX }));
+                    let next_arm = self.here();
+                    for at in fails {
+                        self.patch(at, next_arm);
+                    }
+                }
+                self.emit(Instr::Fault { msg: "non-exhaustive match".into() });
+                let join = self.here();
+                for at in end_jumps {
+                    self.patch(at, join);
+                }
+                Ok(dst)
+            }
+            Expr::Call { f, args, attrs } => self.compile_call(f, args, attrs),
+            Expr::Grad(g) => {
+                // AD is a macro over the AST (as in the interpreter):
+                // expand, re-normalize, compile the transformed function.
+                let expanded = crate::pass::ad::grad_expr(g).map_err(CompileError)?;
+                let normal = crate::pass::anf::to_anf(&expanded);
+                self.compile(&normal)
+            }
+            Expr::RefNew(v) => {
+                let src = self.compile(v)?;
+                let dst = self.fresh()?;
+                self.emit(Instr::RefNew { dst, src });
+                Ok(dst)
+            }
+            Expr::RefRead(r) => {
+                let src = self.compile(r)?;
+                let dst = self.fresh()?;
+                self.emit(Instr::RefRead { dst, src });
+                Ok(dst)
+            }
+            Expr::RefWrite(r, v) => {
+                let r = self.compile(r)?;
+                let v = self.compile(v)?;
+                let dst = self.fresh()?;
+                self.emit(Instr::RefWrite { dst, r, v });
+                Ok(dst)
+            }
+        }
+    }
+
+    fn global_idx(&self, g: &str) -> R<u32> {
+        self.b
+            .func_index
+            .get(g)
+            .copied()
+            .ok_or_else(|| CompileError(format!("unknown global @{g}")))
+    }
+
+    fn compile_call(&mut self, f: &E, args: &[E], attrs: &crate::ir::Attrs) -> R<Reg> {
+        match &**f {
+            Expr::Op(name) => {
+                let def = op::lookup(name)
+                    .ok_or_else(|| CompileError(format!("unknown operator {name}")))?;
+                if let Some(ar) = def.arity {
+                    if args.len() != ar {
+                        return err(format!(
+                            "operator {name} expects {ar} args, got {}",
+                            args.len()
+                        ));
+                    }
+                }
+                let argr: R<Vec<Reg>> = args.iter().map(|a| self.compile(a)).collect();
+                let argr = argr?;
+                let step = PackedStep {
+                    def,
+                    attrs: attrs.clone(),
+                    inputs: (0..args.len()).map(|i| PackedRef::Arg(i as u16)).collect(),
+                    out_temp: 0,
+                };
+                let packed = self.b.add_packed(PackedFunc {
+                    name: name.clone(),
+                    steps: vec![step],
+                    n_temps: 1,
+                    out_temp: 0,
+                });
+                let dst = self.fresh()?;
+                self.emit(Instr::InvokePacked { dst, packed, args: argr });
+                Ok(dst)
+            }
+            Expr::Ctor(name) => {
+                let argr: R<Vec<Reg>> = args.iter().map(|a| self.compile(a)).collect();
+                let fields = argr?;
+                let ctor = self.b.ctor_idx(name);
+                let dst = self.fresh()?;
+                self.emit(Instr::AllocAdt { dst, ctor, fields });
+                Ok(dst)
+            }
+            Expr::Func(pf) if pf.attrs.primitive => {
+                // Fused kernel called in place: one InvokePacked.
+                let argr: R<Vec<Reg>> = args.iter().map(|a| self.compile(a)).collect();
+                let argr = argr?;
+                let packed = compile_packed(self.b, pf, "fused")?;
+                let dst = self.fresh()?;
+                self.emit(Instr::InvokePacked { dst, packed, args: argr });
+                Ok(dst)
+            }
+            Expr::Global(g) => {
+                let func = self.global_idx(g)?;
+                let argr: R<Vec<Reg>> = args.iter().map(|a| self.compile(a)).collect();
+                let dst = self.fresh()?;
+                self.emit(Instr::InvokeFunc { dst, func, args: argr? });
+                Ok(dst)
+            }
+            _ => {
+                let clos = self.compile(f)?;
+                let argr: R<Vec<Reg>> = args.iter().map(|a| self.compile(a)).collect();
+                let dst = self.fresh()?;
+                self.emit(Instr::InvokeClosure { dst, clos, args: argr? });
+                Ok(dst)
+            }
+        }
+    }
+
+    /// Closure-convert a function expression: lift to a top-level VmFunc
+    /// and emit `AllocClosure` over its free variables.
+    fn compile_closure(&mut self, f_expr: &E, f: &Function, rec: Option<&Var>) -> R<Reg> {
+        // A let-bound *primitive* (fused) function stays one kernel: wrap
+        // its flattened body in a trivial VmFunc so first-class uses keep
+        // launch parity with direct calls.
+        if f.attrs.primitive {
+            if let Ok(packed) = compile_packed(self.b, f, "fused") {
+                let nparams = f.params.len() as u16;
+                let dstp: Reg = nparams; // first scratch register
+                let code = vec![
+                    Instr::InvokePacked {
+                        dst: dstp,
+                        packed,
+                        args: (0..nparams).collect(),
+                    },
+                    Instr::Ret { src: dstp },
+                ];
+                let idx = self.b.reserve_func();
+                self.b.fill_func(
+                    idx,
+                    VmFunc {
+                        name: "fused-closure".into(),
+                        params: nparams,
+                        captures: 0,
+                        has_self: false,
+                        nregs: nparams + 1,
+                        code,
+                    },
+                );
+                let dst = self.fresh()?;
+                self.emit(Instr::AllocClosure { dst, func: idx, captures: vec![] });
+                if let Some(rv) = rec {
+                    self.env.insert(rv.id, dst);
+                }
+                return Ok(dst);
+            }
+            // Unexpected primitive shape: fall through to a normal closure
+            // (semantics preserved; launch counting becomes per-op).
+        }
+        let mut caps: Vec<Var> = crate::ir::free_vars(f_expr).into_iter().collect();
+        if let Some(rv) = rec {
+            caps.retain(|v| v != rv);
+        }
+        let cap_regs: R<Vec<Reg>> = caps.iter().map(|v| self.lookup(v)).collect();
+        let cap_regs = cap_regs?;
+        let name = match rec {
+            Some(rv) => format!("closure:{}", rv.name),
+            None => "closure".to_string(),
+        };
+        let idx = self.b.reserve_func();
+        let vmf = compile_function(self.b, name, f, &caps, rec)?;
+        self.b.fill_func(idx, vmf);
+        let dst = self.fresh()?;
+        self.emit(Instr::AllocClosure { dst, func: idx, captures: cap_regs });
+        if let Some(rv) = rec {
+            self.env.insert(rv.id, dst);
+        }
+        Ok(dst)
+    }
+
+    /// Emit the test+bind sequence for one pattern; every failing check
+    /// records a patch site that the caller points at the next arm.
+    fn compile_pattern(&mut self, p: &Pattern, reg: Reg, fails: &mut Vec<usize>) -> R<()> {
+        match p {
+            Pattern::Wildcard => Ok(()),
+            Pattern::Var(v) => {
+                self.env.insert(v.id, reg);
+                Ok(())
+            }
+            Pattern::Ctor(name, ps) => {
+                let ctor = self.b.ctor_idx(name);
+                let arity = if ps.is_empty() { None } else { Some(ps.len() as u16) };
+                fails.push(self.emit(Instr::Match {
+                    src: reg,
+                    ctor,
+                    arity,
+                    on_fail: u32::MAX,
+                }));
+                for (i, sub) in ps.iter().enumerate() {
+                    let field = self.fresh()?;
+                    self.emit(Instr::GetField { dst: field, src: reg, index: i as u16 });
+                    self.compile_pattern(sub, field, fails)?;
+                }
+                Ok(())
+            }
+            Pattern::Tuple(ps) => {
+                fails.push(self.emit(Instr::MatchTuple {
+                    src: reg,
+                    arity: ps.len() as u16,
+                    on_fail: u32::MAX,
+                }));
+                for (i, sub) in ps.iter().enumerate() {
+                    let field = self.fresh()?;
+                    self.emit(Instr::Proj { dst: field, src: reg, index: i as u16 });
+                    self.compile_pattern(sub, field, fails)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-kernel flattening (fused primitive functions).
+// ---------------------------------------------------------------------------
+
+/// Flatten a primitive function's let-chain body into a step sequence over
+/// temps, exactly the graph runtime's fused-node shape.
+fn compile_packed(b: &mut Builder, f: &Function, name: &str) -> R<u32> {
+    let mut local: HashMap<u32, PackedRef> = HashMap::new();
+    for (i, (p, _)) in f.params.iter().enumerate() {
+        local.insert(p.id, PackedRef::Arg(i as u16));
+    }
+    let mut steps: Vec<PackedStep> = Vec::new();
+    let mut n_temps: u16 = 0;
+    let mut cur = f.body.clone();
+    let out_temp;
+    loop {
+        let next = match &*cur {
+            Expr::Let { var, value, body, .. } => {
+                match &**value {
+                    Expr::Var(v) => {
+                        let r = *local
+                            .get(&v.id)
+                            .ok_or_else(|| CompileError(format!("unbound {v}")))?;
+                        local.insert(var.id, r);
+                    }
+                    Expr::Const(t) => {
+                        let c = b.const_idx(Value::Tensor(t.clone()));
+                        local.insert(var.id, PackedRef::Const(c));
+                    }
+                    _ => {
+                        let step = packed_step(b, &local, value, n_temps)?;
+                        local.insert(var.id, PackedRef::Temp(n_temps));
+                        n_temps += 1;
+                        steps.push(step);
+                    }
+                }
+                body.clone()
+            }
+            Expr::Var(v) => {
+                match local.get(&v.id) {
+                    Some(PackedRef::Temp(t)) => out_temp = *t,
+                    other => {
+                        return err(format!("primitive result is not a step: {other:?}"))
+                    }
+                }
+                break;
+            }
+            Expr::Call { .. } => {
+                // Bare tail op call: one final step.
+                let step = packed_step(b, &local, &cur, n_temps)?;
+                out_temp = n_temps;
+                n_temps += 1;
+                steps.push(step);
+                break;
+            }
+            other => return err(format!("unsupported primitive tail {other:?}")),
+        };
+        cur = next;
+    }
+    if steps.is_empty() {
+        return err("empty primitive function");
+    }
+    Ok(b.add_packed(PackedFunc { name: name.into(), steps, n_temps, out_temp }))
+}
+
+fn packed_step(
+    b: &mut Builder,
+    local: &HashMap<u32, PackedRef>,
+    value: &E,
+    out_temp: u16,
+) -> R<PackedStep> {
+    let (def, attrs, args) = match &**value {
+        Expr::Call { f, args, attrs } => match &**f {
+            Expr::Op(name) => (
+                op::lookup(name)
+                    .ok_or_else(|| CompileError(format!("unknown operator {name}")))?,
+                attrs.clone(),
+                args,
+            ),
+            other => return err(format!("primitive body calls {other:?}")),
+        },
+        other => return err(format!("primitive binding {other:?}")),
+    };
+    if let Some(ar) = def.arity {
+        if args.len() != ar {
+            return err(format!("operator {} expects {ar} args", def.name));
+        }
+    }
+    let mut inputs = Vec::with_capacity(args.len());
+    for a in args {
+        match &**a {
+            Expr::Var(v) => inputs.push(
+                *local
+                    .get(&v.id)
+                    .ok_or_else(|| CompileError(format!("unbound {v}")))?,
+            ),
+            Expr::Const(t) => {
+                let c = b.const_idx(Value::Tensor(t.clone()));
+                inputs.push(PackedRef::Const(c));
+            }
+            other => return err(format!("non-atom argument in fused kernel {other:?}")),
+        }
+    }
+    Ok(PackedStep { def, attrs, inputs, out_temp })
+}
+
+// ---------------------------------------------------------------------------
+// Register allocation: linear liveness scan + free-list reuse.
+// ---------------------------------------------------------------------------
+
+/// Rewrite virtual registers onto a compact physical frame.
+///
+/// Soundness rests on the compiler's forward-branch invariant: instruction
+/// order is an execution-order over-approximation, so the last textual use
+/// of a register bounds its live range. Registers `0..fixed` are the
+/// calling convention (args, captures, self) and keep their indices, but
+/// become reusable after their last read like any other register.
+fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<Reg> {
+    debug_assert!(forward_branches_only(code), "backward branch in VM code");
+    let mut last_use: HashMap<Reg, usize> = HashMap::new();
+    for (i, ins) in code.iter().enumerate() {
+        ins.for_each_use(|r| {
+            last_use.insert(r, i);
+        });
+    }
+    let mut expiry: Vec<Vec<Reg>> = vec![Vec::new(); code.len()];
+    for (&v, &i) in &last_use {
+        expiry[i].push(v);
+    }
+    let mut map: HashMap<Reg, Reg> = (0..fixed).map(|r| (r, r)).collect();
+    let mut free: Vec<Reg> = Vec::new();
+    let mut high: Reg = fixed;
+    let mut overflow = false;
+    for (i, ins) in code.iter_mut().enumerate() {
+        ins.remap_uses(|r| map[&r]);
+        // Free registers dying here *before* assigning the destination, so
+        // an output can reuse the slot of an input consumed by the same
+        // instruction (the executor reads all inputs before writing).
+        for v in &expiry[i] {
+            free.push(map[v]);
+        }
+        ins.remap_defs(|r| {
+            *map.entry(r).or_insert_with(|| {
+                free.pop().unwrap_or_else(|| {
+                    if high == Reg::MAX {
+                        overflow = true;
+                        return Reg::MAX;
+                    }
+                    let p = high;
+                    high += 1;
+                    p
+                })
+            })
+        });
+    }
+    if overflow {
+        return err("register frame exceeds 65534 slots");
+    }
+    Ok(high)
+}
+
+fn forward_branches_only(code: &[Instr]) -> bool {
+    code.iter().enumerate().all(|(i, ins)| match ins {
+        Instr::If { on_false: t, .. }
+        | Instr::Goto { target: t }
+        | Instr::Match { on_fail: t, .. }
+        | Instr::MatchTuple { on_fail: t, .. } => *t as usize > i,
+        _ => true,
+    })
+}
+
+fn tensor_is_zero(t: &Tensor) -> bool {
+    // Bit-level zero test: -0.0 must NOT count (AllocTensor materializes
+    // +0.0, which would break interpreter/VM sign parity under division).
+    (0..t.numel()).all(|i| t.get_f64(i).to_bits() == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_module;
+
+    #[test]
+    fn straight_line_program_compiles_and_plans_registers() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) {\n\
+               let %a = add(%x, %x);\n\
+               let %b = multiply(%a, %a);\n\
+               let %c = add(%b, %b);\n\
+               let %d = multiply(%c, %c);\n\
+               %d\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let main = &p.funcs[p.entry as usize];
+        // Four ops -> four InvokePacked.
+        let launches = main
+            .code
+            .iter()
+            .filter(|i| matches!(i, Instr::InvokePacked { .. }))
+            .count();
+        assert_eq!(launches, 4);
+        // Liveness reuse: %a dies at %b, %b at %c, ... so the frame needs
+        // far fewer registers than one per binding.
+        assert!(
+            main.nregs <= 3,
+            "expected dead-register reuse, frame has {} slots:\n{main}",
+            main.nregs
+        );
+    }
+
+    #[test]
+    fn control_flow_and_adts_compile() {
+        let m = parse_module(
+            "def @len(%l) {\n\
+               match (%l) { | Cons(%h, %t) -> add(1f, @len(%t)) | Nil -> 0f }\n\
+             }\n\
+             def @main(%l) { @len(%l) }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        assert_eq!(p.funcs.len(), 2);
+        let len = p.funcs.iter().find(|f| f.name == "@len").unwrap();
+        assert!(len.code.iter().any(|i| matches!(i, Instr::Match { .. })));
+        assert!(len.code.iter().any(|i| matches!(i, Instr::GetField { .. })));
+    }
+
+    #[test]
+    fn closures_are_lifted_with_captures() {
+        let m = parse_module(
+            "def @main(%x) {\n\
+               let %f = fn (%y) { add(%x, %y) };\n\
+               %f(%x)\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        // main + lifted closure.
+        assert_eq!(p.funcs.len(), 2);
+        let lifted = p.funcs.iter().find(|f| f.name.starts_with("closure")).unwrap();
+        assert_eq!(lifted.params, 1);
+        assert_eq!(lifted.captures, 1);
+        let main = &p.funcs[p.entry as usize];
+        assert!(main
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::AllocClosure { captures, .. } if captures.len() == 1)));
+    }
+
+    #[test]
+    fn branches_are_forward_only() {
+        let m = parse_module(
+            "def @main(%n) {\n\
+               if (greater(%n, 0f)) {\n\
+                 match (Cons(%n, Nil)) { | Cons(%h, %t) -> %h | Nil -> 0f }\n\
+               } else { negative(%n) }\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        for f in &p.funcs {
+            assert!(super::forward_branches_only(&f.code), "{f}");
+        }
+    }
+
+    #[test]
+    fn zero_constants_become_alloc_tensor() {
+        let mut m = Module::with_prelude();
+        let body = crate::ir::op_call(
+            "add",
+            vec![
+                crate::ir::constant(Tensor::zeros(&[2, 2], crate::tensor::DType::F32)),
+                crate::ir::constant(Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.])),
+            ],
+        );
+        m.add_def("main", Function::new(vec![], body));
+        let p = compile(&m).unwrap();
+        let main = &p.funcs[p.entry as usize];
+        assert!(main.code.iter().any(|i| matches!(i, Instr::AllocTensor { .. })));
+        assert!(main.code.iter().any(|i| matches!(i, Instr::LoadConst { .. })));
+    }
+}

@@ -1,0 +1,501 @@
+//! The dispatch-loop executor: runs [`Program`] bytecode over
+//! [`crate::eval::value::Value`] frames.
+//!
+//! The loop owns an explicit frame stack, so VM-to-VM calls (including the
+//! recursive loops NLP models compile to) consume heap, not Rust stack —
+//! recursion depth is bounded by memory, unlike the tree-walk interpreter.
+//! Kernels dispatch through the same operator registry as the interpreter
+//! and graph runtime, and every `InvokePacked` bumps the shared
+//! [`LaunchCounter`], so the Fig 10–12 launch metric is comparable across
+//! all three executors.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::bytecode::{Instr, PackedFunc, PackedRef, Program, Reg};
+use crate::eval::value::{Value, VmClosure};
+use crate::eval::LaunchCounter;
+use crate::op;
+use crate::tensor::Tensor;
+
+/// A VM instance executing one compiled [`Program`].
+pub struct Vm<'p> {
+    pub program: &'p Program,
+    /// Kernel-launch counter, shared across executors for Fig 10–12.
+    pub launches: LaunchCounter,
+}
+
+struct Frame {
+    func: u32,
+    pc: usize,
+    regs: Vec<Value>,
+    /// Caller register receiving this frame's return value.
+    ret_dst: Reg,
+}
+
+impl<'p> Vm<'p> {
+    pub fn new(program: &'p Program) -> Vm<'p> {
+        Vm { program, launches: LaunchCounter::new() }
+    }
+
+    pub fn with_counter(program: &'p Program, launches: LaunchCounter) -> Vm<'p> {
+        Vm { program, launches }
+    }
+
+    /// Run the program entry (`@main`) with the given arguments.
+    pub fn run(&self, args: Vec<Value>) -> Result<Value, String> {
+        self.invoke(self.program.entry, args)
+    }
+
+    /// Invoke a capture-free function by table index.
+    pub fn invoke(&self, func: u32, args: Vec<Value>) -> Result<Value, String> {
+        let f = self
+            .program
+            .funcs
+            .get(func as usize)
+            .ok_or_else(|| format!("bad function index {func}"))?;
+        if args.len() != f.params as usize {
+            return Err(format!(
+                "{}: arity mismatch: {} params, {} args",
+                f.name,
+                f.params,
+                args.len()
+            ));
+        }
+        if f.captures != 0 {
+            return Err(format!("{}: cannot invoke capturing function directly", f.name));
+        }
+        let mut regs = vec![Value::unit(); f.nregs as usize];
+        for (i, a) in args.into_iter().enumerate() {
+            regs[i] = a;
+        }
+        self.dispatch(vec![Frame { func, pc: 0, regs, ret_dst: 0 }])
+    }
+
+    /// The dispatch loop. Instruction fetch is two vector indexes; all
+    /// control flow (branches, calls, returns) mutates `pc` / the frame
+    /// stack — no recursion into Rust.
+    fn dispatch(&self, mut frames: Vec<Frame>) -> Result<Value, String> {
+        loop {
+            let frame = frames.last_mut().expect("frame stack empty");
+            let code = &self.program.funcs[frame.func as usize].code;
+            let Some(ins) = code.get(frame.pc) else {
+                return Err("pc ran off the end of a function".to_string());
+            };
+            frame.pc += 1;
+            match ins {
+                Instr::LoadConst { dst, idx } => {
+                    frame.regs[*dst as usize] = self.program.consts[*idx as usize].clone();
+                }
+                Instr::AllocTensor { dst, shape, dtype } => {
+                    frame.regs[*dst as usize] = Value::Tensor(Tensor::zeros(shape, *dtype));
+                }
+                Instr::AllocTuple { dst, items } => {
+                    let vs: Vec<Value> =
+                        items.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    frame.regs[*dst as usize] = Value::Tuple(vs);
+                }
+                Instr::AllocAdt { dst, ctor, fields } => {
+                    let vs: Vec<Value> =
+                        fields.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    frame.regs[*dst as usize] = Value::Adt {
+                        ctor: self.program.ctor_names[*ctor as usize].clone(),
+                        fields: vs,
+                    };
+                }
+                Instr::AllocClosure { dst, func, captures } => {
+                    let captures: Vec<Value> =
+                        captures.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    frame.regs[*dst as usize] =
+                        Value::VmClosure(Rc::new(VmClosure { func: *func, captures }));
+                }
+                Instr::Proj { dst, src, index } => {
+                    let v = match &frame.regs[*src as usize] {
+                        Value::Tuple(vs) => vs.get(*index as usize).cloned().ok_or_else(
+                            || format!("tuple index {index} out of range"),
+                        )?,
+                        other => return Err(format!("projection on non-tuple {other:?}")),
+                    };
+                    frame.regs[*dst as usize] = v;
+                }
+                Instr::GetField { dst, src, index } => {
+                    let v = match &frame.regs[*src as usize] {
+                        Value::Adt { fields, .. } => {
+                            fields.get(*index as usize).cloned().ok_or_else(|| {
+                                format!("constructor field {index} out of range")
+                            })?
+                        }
+                        other => return Err(format!("field access on non-ADT {other:?}")),
+                    };
+                    frame.regs[*dst as usize] = v;
+                }
+                Instr::Match { src, ctor, arity, on_fail } => {
+                    let hit = match &frame.regs[*src as usize] {
+                        Value::Adt { ctor: c, fields } => {
+                            *c == self.program.ctor_names[*ctor as usize]
+                                && arity.map_or(true, |a| fields.len() == a as usize)
+                        }
+                        _ => false,
+                    };
+                    if !hit {
+                        frame.pc = *on_fail as usize;
+                    }
+                }
+                Instr::MatchTuple { src, arity, on_fail } => {
+                    let hit = match &frame.regs[*src as usize] {
+                        Value::Tuple(vs) => vs.len() == *arity as usize,
+                        _ => false,
+                    };
+                    if !hit {
+                        frame.pc = *on_fail as usize;
+                    }
+                }
+                Instr::If { cond, on_false } => {
+                    let taken = match &frame.regs[*cond as usize] {
+                        Value::Tensor(t) => t.bool_value(),
+                        other => {
+                            return Err(format!("if condition is not a tensor: {other:?}"))
+                        }
+                    };
+                    if !taken {
+                        frame.pc = *on_false as usize;
+                    }
+                }
+                Instr::Goto { target } => {
+                    frame.pc = *target as usize;
+                }
+                Instr::Move { dst, src } => {
+                    frame.regs[*dst as usize] = frame.regs[*src as usize].clone();
+                }
+                Instr::InvokePacked { dst, packed, args } => {
+                    self.launches.bump();
+                    let p = &self.program.packed[*packed as usize];
+                    let v = self.run_packed(p, &frame.regs, args)?;
+                    frame.regs[*dst as usize] = v;
+                }
+                Instr::InvokeFunc { dst, func, args } => {
+                    let callee = self
+                        .program
+                        .funcs
+                        .get(*func as usize)
+                        .ok_or_else(|| format!("bad function index {func}"))?;
+                    if args.len() != callee.params as usize {
+                        return Err(format!(
+                            "{}: arity mismatch: {} params, {} args",
+                            callee.name,
+                            callee.params,
+                            args.len()
+                        ));
+                    }
+                    let mut regs = vec![Value::unit(); callee.nregs as usize];
+                    for (i, r) in args.iter().enumerate() {
+                        regs[i] = frame.regs[*r as usize].clone();
+                    }
+                    let next = Frame { func: *func, pc: 0, regs, ret_dst: *dst };
+                    frames.push(next);
+                }
+                Instr::InvokeClosure { dst, clos, args } => {
+                    let callee = frame.regs[*clos as usize].clone();
+                    match callee {
+                        Value::VmClosure(c) => {
+                            let f = self
+                                .program
+                                .funcs
+                                .get(c.func as usize)
+                                .ok_or_else(|| format!("bad function index {}", c.func))?;
+                            if args.len() != f.params as usize {
+                                return Err(format!(
+                                    "{}: arity mismatch: {} params, {} args",
+                                    f.name,
+                                    f.params,
+                                    args.len()
+                                ));
+                            }
+                            if c.captures.len() != f.captures as usize {
+                                return Err(format!(
+                                    "{}: capture count mismatch",
+                                    f.name
+                                ));
+                            }
+                            let mut regs = vec![Value::unit(); f.nregs as usize];
+                            for (i, r) in args.iter().enumerate() {
+                                regs[i] = frame.regs[*r as usize].clone();
+                            }
+                            let base = f.params as usize;
+                            for (i, v) in c.captures.iter().enumerate() {
+                                regs[base + i] = v.clone();
+                            }
+                            if f.has_self {
+                                regs[base + c.captures.len()] =
+                                    Value::VmClosure(c.clone());
+                            }
+                            let next =
+                                Frame { func: c.func, pc: 0, regs, ret_dst: *dst };
+                            frames.push(next);
+                        }
+                        Value::OpRef(name) => {
+                            let def = op::lookup(&name)
+                                .ok_or_else(|| format!("unknown operator {name}"))?;
+                            if let Some(ar) = def.arity {
+                                if args.len() != ar {
+                                    return Err(format!(
+                                        "operator {name} expects {ar} args, got {}",
+                                        args.len()
+                                    ));
+                                }
+                            }
+                            let argv: Vec<Value> = args
+                                .iter()
+                                .map(|r| frame.regs[*r as usize].clone())
+                                .collect();
+                            self.launches.bump();
+                            frame.regs[*dst as usize] =
+                                (def.eval)(&argv, &crate::ir::Attrs::new())?;
+                        }
+                        Value::CtorRef(name) => {
+                            let fields: Vec<Value> = args
+                                .iter()
+                                .map(|r| frame.regs[*r as usize].clone())
+                                .collect();
+                            frame.regs[*dst as usize] = Value::Adt { ctor: name, fields };
+                        }
+                        Value::Closure { .. } => {
+                            return Err(
+                                "interpreter closure cannot be called by the VM".to_string()
+                            )
+                        }
+                        other => return Err(format!("cannot call {other:?}")),
+                    }
+                }
+                Instr::RefNew { dst, src } => {
+                    let v = frame.regs[*src as usize].clone();
+                    frame.regs[*dst as usize] = Value::Ref(Rc::new(RefCell::new(v)));
+                }
+                Instr::RefRead { dst, src } => {
+                    let v = match &frame.regs[*src as usize] {
+                        Value::Ref(cell) => cell.borrow().clone(),
+                        other => return Err(format!("! on non-ref {other:?}")),
+                    };
+                    frame.regs[*dst as usize] = v;
+                }
+                Instr::RefWrite { dst, r, v } => {
+                    let val = frame.regs[*v as usize].clone();
+                    match &frame.regs[*r as usize] {
+                        Value::Ref(cell) => *cell.borrow_mut() = val,
+                        other => return Err(format!(":= on non-ref {other:?}")),
+                    }
+                    frame.regs[*dst as usize] = Value::unit();
+                }
+                Instr::Ret { src } => {
+                    let v = frame.regs[*src as usize].clone();
+                    let done = frames.pop().expect("frame stack empty");
+                    match frames.last_mut() {
+                        None => return Ok(v),
+                        Some(caller) => caller.regs[done.ret_dst as usize] = v,
+                    }
+                }
+                Instr::Fault { msg } => return Err(msg.clone()),
+            }
+        }
+    }
+
+    /// Execute a packed kernel (one launch): run its steps over scratch
+    /// temps, reading call arguments directly out of the caller's frame.
+    fn run_packed(
+        &self,
+        p: &PackedFunc,
+        regs: &[Value],
+        args: &[Reg],
+    ) -> Result<Value, String> {
+        let mut temps: Vec<Option<Value>> = vec![None; p.n_temps as usize];
+        for step in &p.steps {
+            let mut argv: Vec<Value> = Vec::with_capacity(step.inputs.len());
+            for input in &step.inputs {
+                argv.push(match input {
+                    PackedRef::Arg(i) => regs[args[*i as usize] as usize].clone(),
+                    PackedRef::Temp(t) => temps[*t as usize]
+                        .clone()
+                        .ok_or_else(|| format!("empty kernel temp {t}"))?,
+                    PackedRef::Const(c) => self.program.consts[*c as usize].clone(),
+                });
+            }
+            let out = (step.def.eval)(&argv, &step.attrs)?;
+            temps[step.out_temp as usize] = Some(out);
+        }
+        temps[p.out_temp as usize]
+            .take()
+            .ok_or_else(|| "empty kernel result".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::{compile, compile_expr};
+    use super::*;
+    use crate::ir::{parse_expr, parse_module, Module};
+
+    fn run_src(src: &str) -> Value {
+        let m = Module::with_prelude();
+        let e = parse_expr(src).unwrap();
+        let p = compile_expr(&m, &e).unwrap();
+        Vm::new(&p).run(vec![]).unwrap()
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(run_src("add(1f, 2f)").tensor().f32_value(), 3.0);
+        assert_eq!(run_src("multiply(3f, 4f)").tensor().f32_value(), 12.0);
+    }
+
+    #[test]
+    fn let_and_tuple() {
+        let v = run_src("let %t = (1f, 2f); %t.1");
+        assert_eq!(v.tensor().f32_value(), 2.0);
+    }
+
+    #[test]
+    fn closures_capture() {
+        let v = run_src("let %x = 10f; let %f = fn (%y) { add(%x, %y) }; %f(5f)");
+        assert_eq!(v.tensor().f32_value(), 15.0);
+    }
+
+    #[test]
+    fn if_branches() {
+        assert_eq!(
+            run_src("if (less(1f, 2f)) { 10f } else { 20f }").tensor().f32_value(),
+            10.0
+        );
+        assert_eq!(
+            run_src("if (less(3f, 2f)) { 10f } else { 20f }").tensor().f32_value(),
+            20.0
+        );
+    }
+
+    #[test]
+    fn recursive_let_loop() {
+        let v = run_src(
+            "let %loop = fn (%i, %acc) {\n\
+               if (greater(%i, 0f)) { %loop(subtract(%i, 1f), add(%acc, %i)) }\n\
+               else { %acc }\n\
+             };\n\
+             %loop(10f, 0f)",
+        );
+        assert_eq!(v.tensor().f32_value(), 55.0);
+    }
+
+    #[test]
+    fn deep_recursion_does_not_overflow_rust_stack() {
+        // 1000 frames live on the VM's heap-allocated frame stack.
+        let v = run_src(
+            "let %loop = fn (%i, %acc) {\n\
+               if (greater(%i, 0f)) { %loop(subtract(%i, 1f), add(%acc, %i)) }\n\
+               else { %acc }\n\
+             };\n\
+             %loop(1000f, 0f)",
+        );
+        assert_eq!(v.tensor().f32_value(), 500500.0);
+    }
+
+    #[test]
+    fn adts_and_match() {
+        let v = run_src(
+            "let %l = Cons(1f, Cons(2f, Nil));\n\
+             match (%l) { | Cons(%h, %t) -> %h | Nil -> 0f }",
+        );
+        assert_eq!(v.tensor().f32_value(), 1.0);
+    }
+
+    #[test]
+    fn list_fold_via_recursion() {
+        let v = run_src(
+            "let %sum = fn (%l) {\n\
+               match (%l) { | Cons(%h, %t) -> add(%h, %sum(%t)) | Nil -> 0f }\n\
+             };\n\
+             %sum(Cons(1f, Cons(2f, Cons(3f, Nil))))",
+        );
+        assert_eq!(v.tensor().f32_value(), 6.0);
+    }
+
+    #[test]
+    fn refs_mutate() {
+        let v = run_src("let %r = ref(1f); %r := add(!%r, 41f); !%r");
+        assert_eq!(v.tensor().f32_value(), 42.0);
+    }
+
+    #[test]
+    fn globals_and_recursion() {
+        let m = parse_module(
+            "def @fact(%n) {\n\
+               if (greater(%n, 1f)) { multiply(%n, @fact(subtract(%n, 1f))) } else { 1f }\n\
+             }\n\
+             def @main(%n) { @fact(%n) }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let out = Vm::new(&p)
+            .run(vec![Value::Tensor(Tensor::scalar_f32(5.0))])
+            .unwrap();
+        assert_eq!(out.tensor().f32_value(), 120.0);
+    }
+
+    #[test]
+    fn higher_order_functions() {
+        let v = run_src(
+            "let %apply_twice = fn (%f, %x) { %f(%f(%x)) };\n\
+             %apply_twice(fn (%y) { add(%y, 1f) }, 0f)",
+        );
+        assert_eq!(v.tensor().f32_value(), 2.0);
+    }
+
+    #[test]
+    fn op_as_first_class_value() {
+        let v = run_src("let %f = add; %f(2f, 3f)");
+        assert_eq!(v.tensor().f32_value(), 5.0);
+    }
+
+    #[test]
+    fn launch_counter_matches_interpreter_semantics() {
+        let m = Module::with_prelude();
+        let e = parse_expr("add(multiply(2f, 3f), 1f)").unwrap();
+        let p = compile_expr(&m, &e).unwrap();
+        let vm = Vm::new(&p);
+        vm.run(vec![]).unwrap();
+        assert_eq!(vm.launches.get(), 2);
+        vm.launches.reset();
+        assert_eq!(vm.launches.get(), 0);
+    }
+
+    #[test]
+    fn non_exhaustive_match_faults() {
+        let m = Module::with_prelude();
+        let e = parse_expr("match (Nil) { | Cons(%h, %t) -> %h }").unwrap();
+        let p = compile_expr(&m, &e).unwrap();
+        let err = Vm::new(&p).run(vec![]).unwrap_err();
+        assert!(err.contains("non-exhaustive"), "{err}");
+    }
+
+    #[test]
+    fn matches_interpreter_on_the_whole_interp_test_suite() {
+        // Differential spot-check over the interpreter's own corpus.
+        for src in [
+            "add(1f, 2f)",
+            "let %t = (1f, add(2f, 3f)); %t.1",
+            "let %x = 10f; let %f = fn (%y) { add(%x, %y) }; %f(5f)",
+            "if (less(1f, 2f)) { add(1f, 1f) } else { multiply(2f, 2f) }",
+            "let %l = Cons(1f, Cons(2f, Nil));\n\
+             match (%l) { | Cons(%h, %t) -> %h | Nil -> 0f }",
+            "let %r = ref(1f); %r := add(!%r, 1f); !%r",
+        ] {
+            let m = Module::with_prelude();
+            let e = parse_expr(src).unwrap();
+            let expect = crate::eval::eval_expr(&m, &e).unwrap();
+            let p = compile_expr(&m, &e).unwrap();
+            let got = Vm::new(&p).run(vec![]).unwrap();
+            assert_eq!(
+                expect.tensor().as_f32(),
+                got.tensor().as_f32(),
+                "VM diverged on {src}"
+            );
+        }
+    }
+}

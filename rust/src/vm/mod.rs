@@ -1,0 +1,29 @@
+//! The Relay bytecode VM (the third execution tier, after the tree-walk
+//! interpreter and the graph runtime): a register-based virtual machine
+//! for control-flow-heavy models — closures, ADTs, recursion — where the
+//! graph runtime cannot go and the interpreter is slow.
+//!
+//! Pipeline: post-fusion IR -> [`compile`] (ANF normalize, closure-convert,
+//! lower matches to tag dispatch, liveness-plan registers) ->
+//! [`bytecode::Program`] -> [`exec::Vm`] dispatch loop.
+//!
+//! See `rust/src/vm/README.md` for the instruction set, the calling
+//! convention, and the executor-selection story
+//! ([`crate::eval::Executor`]).
+
+pub mod bytecode;
+pub mod compile;
+pub mod exec;
+
+pub use bytecode::{Instr, PackedFunc, Program, Reg, VmFunc};
+pub use compile::{compile, compile_expr, compile_normalized, CompileError};
+pub use exec::Vm;
+
+use crate::eval::value::Value;
+use crate::ir::Module;
+
+/// One-shot convenience: compile `m` and run `@main(args...)`.
+pub fn run_main(m: &Module, args: Vec<Value>) -> Result<Value, String> {
+    let program = compile(m).map_err(|e| e.to_string())?;
+    Vm::new(&program).run(args)
+}

@@ -458,6 +458,27 @@ mod tests {
     }
 
     #[test]
+    fn vm_executes_every_nlp_model_and_matches_the_interpreter() {
+        // The executor-selection layer routes these to the VM (control
+        // flow + ADTs reject the graph runtime), and results bit-match
+        // the reference interpreter.
+        for model in Model::nlp() {
+            let (m, args) = build_nlp(model, 7);
+            let reference = eval_main(&m, args.clone()).unwrap();
+            let out = crate::eval::run_with(&m, crate::eval::Executor::Vm, args.clone())
+                .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+            assert!(
+                reference.bits_eq(&out.value),
+                "{}: VM diverged from interpreter: {reference:?} vs {:?}",
+                model.name(),
+                out.value
+            );
+            let auto = crate::eval::run_auto(&m, args).unwrap();
+            assert_eq!(auto.executor, "vm", "{}", model.name());
+        }
+    }
+
+    #[test]
     fn nlp_models_typecheck() {
         // Type inference over recursion + ADTs (TreeLSTM exercises both).
         for model in [Model::Rnn, Model::Gru] {

@@ -7,7 +7,10 @@
 //! * ANF conversion preserves semantics and establishes the ANF predicate;
 //! * broadcasting matches a naive reference on random shapes;
 //! * quantize/dequantize error is bounded by the scale;
-//! * structural hashing respects alpha-equivalence under refresh.
+//! * structural hashing respects alpha-equivalence under refresh;
+//! * the bytecode VM bit-matches the interpreter on random programs with
+//!   `if`/`match`/recursion, and its kernel-launch count equals the graph
+//!   runtime's `kernel_nodes` on fused first-order programs.
 
 use relay::eval::{eval_expr, eval_main, Value};
 use relay::ir::{self, Module};
@@ -230,6 +233,162 @@ fn grad_matches_finite_differences_on_random_scalar_programs() {
         assert!(
             (grad - fd).abs() < 1e-2 * (1.0 + fd.abs()),
             "case {case}: AD {grad} vs FD {fd}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bytecode VM differential tests.
+// ---------------------------------------------------------------------------
+
+/// Random closed programs exercising the VM's control-flow surface:
+/// `if`, `match` over lists and tuples, and tail recursion.
+fn random_cf_program(rng: &mut Rng, depth: usize) -> ir::E {
+    if depth == 0 {
+        return random_expr(rng, 1);
+    }
+    match rng.randint(0, 5) {
+        0 => random_expr(rng, depth),
+        1 => {
+            // match over a random-length list: head + noise, or a default.
+            let n = rng.randint(0, 4);
+            let items: Vec<ir::E> = (0..n).map(|_| random_expr(rng, 1)).collect();
+            let l = ir::Var::fresh("l");
+            let h = ir::Var::fresh("h");
+            let t = ir::Var::fresh("t");
+            ir::let_(
+                l.clone(),
+                ir::list_expr(items),
+                ir::match_(
+                    ir::var(&l),
+                    vec![
+                        (
+                            ir::Pattern::Ctor(
+                                "Cons".into(),
+                                vec![
+                                    ir::Pattern::Var(h.clone()),
+                                    ir::Pattern::Var(t.clone()),
+                                ],
+                            ),
+                            ir::op_call("add", vec![ir::var(&h), random_expr(rng, 1)]),
+                        ),
+                        (ir::Pattern::Ctor("Nil".into(), vec![]), random_expr(rng, 1)),
+                    ],
+                ),
+            )
+        }
+        2 => {
+            // Tail-recursive countdown (Fig. 2's loop encoding) with a
+            // random accumulator update and a random trip count.
+            let f = ir::Var::fresh("loop");
+            let i = ir::Var::fresh("i");
+            let acc = ir::Var::fresh("acc");
+            let trips = rng.randint(0, 6) as f32;
+            let step = ir::op_call("add", vec![ir::var(&acc), random_expr(rng, 1)]);
+            let body = ir::if_(
+                ir::op_call("greater", vec![ir::var(&i), ir::scalar(0.0)]),
+                ir::call(
+                    ir::var(&f),
+                    vec![
+                        ir::op_call("subtract", vec![ir::var(&i), ir::scalar(1.0)]),
+                        step,
+                    ],
+                ),
+                ir::var(&acc),
+            );
+            ir::let_(
+                f.clone(),
+                ir::func(vec![(i, None), (acc, None)], body),
+                ir::call(ir::var(&f), vec![ir::scalar(trips), random_expr(rng, 1)]),
+            )
+        }
+        3 => {
+            // Tuple pattern match.
+            let s = ir::Var::fresh("s");
+            let x = ir::Var::fresh("x");
+            let y = ir::Var::fresh("y");
+            ir::let_(
+                s.clone(),
+                ir::tuple(vec![random_expr(rng, 1), random_expr(rng, 1)]),
+                ir::match_(
+                    ir::var(&s),
+                    vec![(
+                        ir::Pattern::Tuple(vec![
+                            ir::Pattern::Var(x.clone()),
+                            ir::Pattern::Var(y.clone()),
+                        ]),
+                        ir::op_call("multiply", vec![ir::var(&x), ir::var(&y)]),
+                    )],
+                ),
+            )
+        }
+        _ => ir::if_(
+            ir::op_call("less", vec![random_expr(rng, 1), random_expr(rng, 1)]),
+            random_cf_program(rng, depth - 1),
+            random_cf_program(rng, depth - 1),
+        ),
+    }
+}
+
+#[test]
+fn vm_bit_matches_interpreter_on_random_control_flow_programs() {
+    let mut rng = Rng::new(800);
+    let m = Module::with_prelude();
+    for case in 0..CASES {
+        let e = random_cf_program(&mut rng, 3);
+        let expect = eval_expr(&m, &e)
+            .unwrap_or_else(|err| panic!("case {case}: interp failed: {err}"));
+        let p = relay::vm::compile_expr(&m, &e)
+            .unwrap_or_else(|err| panic!("case {case}: vm compile failed: {err}"));
+        let got = relay::vm::Vm::new(&p)
+            .run(vec![])
+            .unwrap_or_else(|err| panic!("case {case}: vm run failed: {err}"));
+        // Bit-match, not allclose: both executors run the same kernels in
+        // the same order on the same inputs.
+        assert!(
+            expect.bits_eq(&got),
+            "case {case}: VM diverged: {expect:?} vs {got:?}"
+        );
+    }
+}
+
+#[test]
+fn vm_launches_equal_graphrt_kernel_nodes_on_fused_first_order_programs() {
+    use relay::eval::Executor;
+    use relay::graphrt::GraphRt;
+
+    let mut rng = Rng::new(900);
+    for case in 0..10 {
+        let b = rng.randint(1, 5) as usize;
+        let din = rng.randint(2, 9) as usize;
+        let dh = rng.randint(2, 9) as usize;
+        let dout = rng.randint(2, 9) as usize;
+        let src = format!(
+            "def @main(%x: Tensor[({b}, {din}), float32]) {{\n\
+               let %w1 = ones(shape=[{dh}, {din}]);\n\
+               let %h = tanh(nn.dense(%x, %w1));\n\
+               let %w2 = ones(shape=[{dout}, {dh}]);\n\
+               nn.dense(%h, %w2)\n\
+             }}"
+        );
+        let m = ir::parse_module(&src).unwrap();
+        let fused = optimize(&m, OptLevel::O1, true).unwrap();
+        let x = rng.normal_tensor(&[b, din], 1.0);
+
+        let anfed = relay::pass::anf::run(&fused);
+        let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+        g.run_tensors(&[x.clone()]).unwrap();
+        assert_eq!(
+            g.launches.get(),
+            g.kernel_nodes,
+            "case {case}: dynamic graphrt launches != static kernel nodes"
+        );
+
+        let out = relay::eval::run_with(&fused, Executor::Vm, vec![Value::Tensor(x)])
+            .unwrap();
+        assert_eq!(
+            out.launches, g.kernel_nodes,
+            "case {case}: VM launches != graphrt kernel nodes"
         );
     }
 }

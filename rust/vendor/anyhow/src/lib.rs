@@ -1,0 +1,155 @@
+//! A vendored, API-compatible subset of the `anyhow` crate
+//! (https://github.com/dtolnay/anyhow), just large enough for this
+//! workspace: the boxed [`Error`] type, the [`anyhow!`] / [`bail!`]
+//! macros, the [`Context`] extension trait, and the [`Result`] alias.
+//!
+//! Vendored so the repository builds with no network access and no
+//! registry; the real crate is a drop-in replacement if it is ever
+//! available.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A trait-object error wrapper with an optional chain of context
+/// messages. Like the real `anyhow::Error`, it deliberately does *not*
+/// implement `std::error::Error` (that is what makes the blanket
+/// `From<E: Error>` conversion below coherent).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Build an error from an underlying cause.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause, when the error wraps a std error.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad thing: {}", 42);
+        assert_eq!(e.to_string(), "bad thing: 42");
+        let e2 = anyhow!("plain");
+        assert_eq!(e2.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}
