@@ -1,0 +1,125 @@
+//! Fig. 12, serving edition: cold-compile vs program-cache-hit `run_auto`
+//! latency on the NLP suite. This is the amortization the paper's serving
+//! story rests on (compile once, dispatch millions of times): a cold call
+//! pays ANF + executor selection + bytecode compilation on every request,
+//! a cached call is pure dispatch on the compiled program.
+//!
+//! Also reports compiles-per-call on each path via the cache's hit/miss
+//! counters — the warm path must show exactly ONE compile total.
+//!
+//! Results are appended to the BENCH trajectory as `BENCH_fig12_cache.json`
+//! (repo root when run via cargo, cwd otherwise).
+//!
+//! Two assertion tiers: the deterministic properties (cache-hit results
+//! bit-match cold compiles; the warm path compiles exactly once) always
+//! hard-fail. The latency comparison (cached mean < cold mean) also
+//! hard-fails by default, but with `RELAY_BENCH_SMOKE=1` (set by the CI
+//! smoke step) it only warns — wall-clock comparisons on shared CI runners
+//! are too noisy to gate unrelated PRs on.
+
+use std::fmt::Write as _;
+
+use relay::bench;
+use relay::eval::{run_with_cache, Executor, ProgramCache};
+use relay::pass::{optimize, OptLevel};
+use relay::zoo::{self, Model};
+
+fn main() {
+    let iters = 20;
+    let strict_latency = std::env::var_os("RELAY_BENCH_SMOKE").is_none();
+    println!("Fig 12 (cache): NLP run_auto, cold compile vs program-cache hit");
+    println!(
+        "{:<12} {:>12} {:>12} {:>9} {:>14}",
+        "model", "cold ms", "cached ms", "speedup", "compiles(warm)"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for model in Model::nlp() {
+        let (m, args) = zoo::nlp::build_nlp(model, 42);
+        let fused = optimize(&m, OptLevel::O1, false).expect("optimize");
+
+        // Correctness guard: the cache-hit path must produce bit-identical
+        // results to a cold compile.
+        let cold_cache = ProgramCache::new();
+        let a = run_with_cache(&fused, Executor::Auto, args.clone(), &cold_cache).unwrap();
+        let warm_cache = ProgramCache::new();
+        run_with_cache(&fused, Executor::Auto, args.clone(), &warm_cache).unwrap();
+        let b = run_with_cache(&fused, Executor::Auto, args.clone(), &warm_cache).unwrap();
+        assert!(
+            a.value.bits_eq(&b.value),
+            "{}: cached path diverged from cold path",
+            model.name()
+        );
+
+        // Cold: a fresh cache every call — every call compiles.
+        let cold_s = bench::bench(format!("{}-cold", model.name()), 1, iters, || {
+            let cache = ProgramCache::new();
+            let _ = run_with_cache(&fused, Executor::Auto, args.clone(), &cache).unwrap();
+        });
+
+        // Cached: one shared cache — the first (warmup) call compiles,
+        // everything after is dispatch.
+        let cache = ProgramCache::new();
+        let cached_s = bench::bench(format!("{}-cached", model.name()), 2, iters, || {
+            let _ = run_with_cache(&fused, Executor::Auto, args.clone(), &cache).unwrap();
+        });
+        let calls = cache.hits() + cache.misses();
+        assert_eq!(
+            cache.misses(),
+            1,
+            "{}: warm path compiled more than once",
+            model.name()
+        );
+        if cached_s.mean_ms >= cold_s.mean_ms {
+            let msg = format!(
+                "{}: cached call ({:.3} ms) not faster than cold call ({:.3} ms)",
+                model.name(),
+                cached_s.mean_ms,
+                cold_s.mean_ms
+            );
+            assert!(!strict_latency, "{msg}");
+            eprintln!("warning (smoke mode, not fatal): {msg}");
+        }
+
+        let speedup = cold_s.mean_ms / cached_s.mean_ms;
+        println!(
+            "{:<12} {:>12.3} {:>12.3} {:>8.2}x {:>10}/{:<3}",
+            model.name(),
+            cold_s.mean_ms,
+            cached_s.mean_ms,
+            speedup,
+            cache.misses(),
+            calls
+        );
+        let mut row = String::new();
+        write!(
+            row,
+            "    {{\"model\": \"{}\", \"cold_ms\": {:.4}, \"cached_ms\": {:.4}, \
+             \"speedup\": {:.3}, \"warm_compiles\": {}, \"warm_calls\": {}}}",
+            model.name(),
+            cold_s.mean_ms,
+            cached_s.mean_ms,
+            speedup,
+            cache.misses(),
+            calls
+        )
+        .unwrap();
+        json_rows.push(row);
+    }
+
+    let json = format!(
+        "{{\n  \"figure\": \"12-cache\",\n  \"description\": \"NLP run_auto: \
+         cold compile-per-call vs program-cache hit (mean ms over {iters} \
+         iters)\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    // Package root is the usual cwd under cargo; prefer the repo root.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_fig12_cache.json"
+    } else {
+        "BENCH_fig12_cache.json"
+    };
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -13,6 +13,13 @@
 //! otherwise a compiled-relay MLP routed through the executor-selection
 //! layer ([`crate::eval::Executor`]) — graph runtime, bytecode VM, or
 //! interpreter — so serving works without the `xla` feature.
+//!
+//! The compiled-relay backend batches into *bucketed* shapes (1, 2, 4, 8,
+//! ... up to `max_batch`) instead of padding every batch to the maximum:
+//! a lone request at low load runs the batch-1 program, not a padded
+//! batch-32 one, cutting tail latency. Each bucket is one entry in a
+//! [`crate::eval::ProgramCache`], so every shape compiles exactly once
+//! over the server's lifetime (`Stats::compiles` tracks this).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::eval::{run_with, Executor, Value};
+use crate::eval::{run_compiled, Compiled, Executor, ProgramCache, Value};
 use crate::ir::{self, Module, Type, Var};
 use crate::runtime::Runtime;
 use crate::tensor::{DType, Tensor};
@@ -79,9 +86,38 @@ struct Request {
     respond: Sender<String>,
 }
 
+/// Zero-pad feature rows into a `(batch, feat)` input tensor. Rows longer
+/// than `feat` are truncated, shorter ones zero-filled. Takes borrowed
+/// slices so the batcher's hot path copies each row exactly once.
+fn pad_rows(rows: &[&[f32]], batch: usize, feat: usize) -> Tensor {
+    let mut data = vec![0f32; batch * feat];
+    for (i, r) in rows.iter().enumerate().take(batch) {
+        let row = &r[..feat.min(r.len())];
+        data[i * feat..i * feat + row.len()].copy_from_slice(row);
+    }
+    Tensor::from_f32(vec![batch, feat], data)
+}
+
 pub struct Stats {
     pub requests: AtomicUsize,
     pub batches: AtomicUsize,
+    /// Backend compiles performed so far (compiled-relay backend: program-
+    /// cache misses — at most one per batch bucket over the server's life).
+    pub compiles: AtomicUsize,
+}
+
+/// Batch-shape buckets: powers of two up to (and always including) `cap`.
+/// A batch of n requests pads to the smallest bucket >= n.
+fn bucket_sizes(cap: usize) -> Vec<usize> {
+    let cap = cap.max(1);
+    let mut out = Vec::new();
+    let mut b = 1usize;
+    while b < cap {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(cap);
+    out
 }
 
 /// Serve the `mlp_forward` artifact. Blocks; set `stop` to shut down.
@@ -93,6 +129,7 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
     let stats = Arc::new(Stats {
         requests: AtomicUsize::new(0),
         batches: AtomicUsize::new(0),
+        compiles: AtomicUsize::new(0),
     });
 
     let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
@@ -108,10 +145,14 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
         let executor = cfg.executor;
         std::thread::spawn(move || {
             // Backend setup: PJRT over the AOT artifact when present,
-            // otherwise a compiled-relay MLP routed through the
-            // executor-selection layer (graph runtime / VM / interpreter).
-            type ExecFn = Box<dyn FnMut(Tensor) -> Result<Vec<i64>>>;
-            let setup = (|| -> Result<(usize, usize, ExecFn)> {
+            // otherwise a compiled-relay MLP compiled through the shared
+            // executor-selection + program-cache chain ([`crate::eval`]).
+            // Each backend consumes the raw feature rows of a batch and
+            // returns one prediction per row (padding is backend-specific:
+            // PJRT pads to the artifact's fixed batch, the relay backend
+            // pads to the nearest bucket).
+            type ExecFn = Box<dyn FnMut(&[&[f32]]) -> Result<Vec<i64>>>;
+            let setup = (|| -> Result<(usize, ExecFn)> {
                 if artifacts_available(&artifact_dir) {
                     let rt = Runtime::cpu()?;
                     let manifest =
@@ -134,67 +175,63 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                             rng.normal_tensor(&s.shape, 0.1)
                         })
                         .collect();
-                    let f: ExecFn = Box::new(move |x: Tensor| {
+                    let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
+                        let x = pad_rows(rows, batch_cap, feat);
                         let mut inputs = weights.clone();
                         inputs.push(x);
                         let outs = rt.execute(&exe, &inputs)?;
                         Ok(crate::tensor::argmax(&outs[0], 1).as_i64().to_vec())
                     });
-                    Ok((batch_cap, feat, f))
+                    Ok((batch_cap, f))
                 } else {
                     let batch_cap = max_batch.max(1);
-                    let module = fallback_module(batch_cap);
-                    // Executor selection happens ONCE here; per-batch work
-                    // is pure dispatch on the precompiled backend.
-                    enum Backend {
-                        Graph(crate::graphrt::GraphRt),
-                        Prog(crate::vm::Program),
-                        Interp,
-                    }
-                    let backend = match executor {
-                        Executor::Interp => Backend::Interp,
-                        Executor::Vm => Backend::Prog(
-                            crate::vm::compile(&module).map_err(|e| anyhow!("{e}"))?,
-                        ),
-                        Executor::GraphRt | Executor::Auto => {
-                            let anfed = crate::pass::anf::run(&module);
-                            let main = anfed
-                                .def("main")
-                                .ok_or_else(|| anyhow!("fallback module lost @main"))?;
-                            match crate::graphrt::GraphRt::compile(main) {
-                                Ok(g) => Backend::Graph(g),
-                                Err(e) if executor == Executor::GraphRt => {
-                                    return Err(anyhow!("{e}"))
-                                }
-                                // Mirror run_with's Auto chain exactly:
-                                // graphrt -> vm -> interpreter.
-                                Err(_) => match crate::vm::compile_normalized(&anfed) {
-                                    Ok(p) => Backend::Prog(p),
-                                    Err(_) => Backend::Interp,
-                                },
-                            }
+                    // One module per batch bucket, all sharing one program
+                    // cache: a bucket compiles on first use, then every
+                    // batch of that shape is pure dispatch. This is the
+                    // same selection+cache chain `run_auto` uses — the
+                    // server no longer hand-rolls its own backend enum.
+                    let cache = ProgramCache::new();
+                    let modules: Vec<(usize, Module)> = bucket_sizes(batch_cap)
+                        .into_iter()
+                        .map(|b| (b, fallback_module(b)))
+                        .collect();
+                    // Fail fast at startup: compile the smallest bucket so
+                    // a backend regression surfaces before serving.
+                    cache
+                        .get_or_compile(&modules[0].1, executor)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    let stats = stats.clone();
+                    // Per-bucket memo of the resolved program: the cache
+                    // lookup (hash + structural verify) runs once per
+                    // bucket; every later batch of that shape is pure
+                    // dispatch on the compiled artifact.
+                    let mut resolved: Vec<Option<Compiled>> = vec![None; modules.len()];
+                    let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
+                        let bi = modules
+                            .iter()
+                            .position(|(b, _)| *b >= rows.len())
+                            .unwrap_or(modules.len() - 1);
+                        let (bucket, module) = &modules[bi];
+                        if resolved[bi].is_none() {
+                            resolved[bi] = Some(
+                                cache
+                                    .get_or_compile(module, executor)
+                                    .map_err(|e| anyhow!("{e}"))?,
+                            );
+                            stats.compiles.store(cache.misses(), Ordering::Relaxed);
                         }
-                    };
-                    let f: ExecFn = Box::new(move |x: Tensor| {
-                        let v = match &backend {
-                            Backend::Graph(g) => g
-                                .run(&[Value::Tensor(x)])
-                                .map_err(|e| anyhow!("{e}"))?,
-                            Backend::Prog(p) => crate::vm::Vm::new(p)
-                                .run(vec![Value::Tensor(x)])
-                                .map_err(|e| anyhow!("{e}"))?,
-                            Backend::Interp => {
-                                run_with(&module, Executor::Interp, vec![Value::Tensor(x)])
-                                    .map_err(|e| anyhow!("{e}"))?
-                                    .value
-                            }
-                        };
-                        Ok(crate::tensor::argmax(v.tensor(), 1).as_i64().to_vec())
+                        let compiled =
+                            resolved[bi].as_ref().expect("bucket resolved above");
+                        let x = pad_rows(rows, *bucket, FALLBACK_FEAT);
+                        let out =
+                            run_compiled(compiled, module, vec![Value::Tensor(x)])
+                                .map_err(|e| anyhow!("{e}"))?;
+                        Ok(crate::tensor::argmax(out.value.tensor(), 1).as_i64().to_vec())
                     });
-                    Ok((batch_cap, FALLBACK_FEAT, f))
+                    Ok((batch_cap, f))
                 }
             })();
-            let (batch_cap, feat, mut exec_fn) = match setup {
+            let (batch_cap, mut exec_fn) = match setup {
                 Ok(x) => {
                     let _ = ready_tx.send(Ok(()));
                     x
@@ -204,7 +241,7 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                     return;
                 }
             };
-            let cfg_batch = max_batch.min(batch_cap);
+            let cfg_batch = max_batch.min(batch_cap).max(1);
             while !stop.load(Ordering::Relaxed) {
                 let first = match rx.recv_timeout(Duration::from_millis(50)) {
                     Ok(r) => r,
@@ -224,14 +261,9 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                 }
                 stats.batches.fetch_add(1, Ordering::Relaxed);
                 stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
-                // Pad to the artifact's fixed batch size.
-                let mut data = vec![0f32; batch_cap * feat];
-                for (i, r) in batch.iter().enumerate() {
-                    let row = &r.features[..feat.min(r.features.len())];
-                    data[i * feat..i * feat + row.len()].copy_from_slice(row);
-                }
-                let x = Tensor::from_f32(vec![batch_cap, feat], data);
-                let reply: Vec<String> = match exec_fn(x) {
+                let rows: Vec<&[f32]> =
+                    batch.iter().map(|r| r.features.as_slice()).collect();
+                let reply: Vec<String> = match exec_fn(&rows) {
                     Ok(preds) => {
                         (0..batch.len()).map(|i| format!("{}", preds[i])).collect()
                     }
@@ -330,6 +362,26 @@ mod tests {
     use std::sync::Arc;
 
     #[test]
+    fn bucket_sizes_are_powers_of_two_up_to_cap() {
+        assert_eq!(bucket_sizes(1), vec![1]);
+        assert_eq!(bucket_sizes(4), vec![1, 2, 4]);
+        assert_eq!(bucket_sizes(8), vec![1, 2, 4, 8]);
+        // Non-power-of-two cap is kept as the final bucket.
+        assert_eq!(bucket_sizes(6), vec![1, 2, 4, 6]);
+        assert_eq!(bucket_sizes(0), vec![1]);
+    }
+
+    #[test]
+    fn pad_rows_pads_and_truncates() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        let t = pad_rows(&rows, 4, 2);
+        assert_eq!(t.shape(), &[4, 2]);
+        assert_eq!(t.as_f32(), &[1.0, 2.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
     fn fallback_backend_serves_through_the_vm() {
         let port = 7981;
         let cfg = ServerConfig {
@@ -356,6 +408,10 @@ mod tests {
             assert!((0..FALLBACK_CLASSES as i64).contains(&pred), "pred {pred}");
         }
         assert!(stats.requests.load(Ordering::Relaxed) >= 4);
+        // Sequential clients mean every batch had size 1, so only the
+        // batch-1 bucket compiled: 4 requests, exactly 1 compile — the
+        // compile-once serving property of the program cache.
+        assert_eq!(stats.compiles.load(Ordering::Relaxed), 1);
         stop.store(true, Ordering::Relaxed);
     }
 }

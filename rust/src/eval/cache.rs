@@ -1,0 +1,331 @@
+//! Compile-once execution: a compiled-program cache keyed by the
+//! alpha-invariant module structural hash ([`crate::ir::module_structural_hash`]).
+//!
+//! The serving story of the paper (and of TVM / nGraph's cached-executable
+//! layer) is that compilation cost is paid once and the lean artifact runs
+//! millions of times. [`ProgramCache`] makes the executor-selection layer
+//! behave that way: `run_auto` / `run_with` on an unchanged module performs
+//! exactly one ANF normalization + compile, and every later call is pure
+//! dispatch on the cached [`crate::graphrt::GraphRt`] / [`crate::vm::Program`].
+//!
+//! Keys are verified on hit with full structural equality
+//! ([`crate::ir::modules_structurally_eq`]), so a 64-bit hash collision can
+//! never route a module to the wrong artifact — it just recompiles.
+//!
+//! Compiled programs hold `Rc`-backed values (not `Send`), so a cache is a
+//! single-thread object: each thread gets its own default cache
+//! ([`with_default_cache`]), and long-lived loops like the serving batcher
+//! own an explicit instance.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::{env_empty, Execution, Executor, Interp, Value};
+use crate::ir::{self, Module};
+
+/// What executor-selection resolved a module to, compiled and ready to run.
+#[derive(Clone)]
+pub enum Compiled {
+    /// First-order, control-flow-free: the graph runtime.
+    Graph(Rc<crate::graphrt::GraphRt>),
+    /// Everything else the VM compiles (closures, ADTs, recursion).
+    Vm(Rc<crate::vm::Program>),
+    /// Neither compiled (exotic input under `Auto`): tree-walk per call.
+    Interp,
+}
+
+impl Compiled {
+    /// The tier this entry executes on (never "auto").
+    pub fn executor_name(&self) -> &'static str {
+        match self {
+            Compiled::Graph(_) => "graphrt",
+            Compiled::Vm(_) => "vm",
+            Compiled::Interp => "interp",
+        }
+    }
+}
+
+struct Entry {
+    /// Snapshot of the source module, for exact hit verification.
+    module: Module,
+    compiled: Compiled,
+}
+
+/// Bound on resident entries; eviction is FIFO (oldest compile first).
+const CACHE_CAP: usize = 128;
+
+/// A bounded map from (module structural hash, requested executor) to a
+/// compiled program, with hit/miss counters. One miss == one compile.
+#[derive(Default)]
+pub struct ProgramCache {
+    entries: RefCell<HashMap<(u64, &'static str), Entry>>,
+    order: RefCell<VecDeque<(u64, &'static str)>>,
+    hits: Cell<usize>,
+    misses: Cell<usize>,
+}
+
+impl ProgramCache {
+    pub fn new() -> ProgramCache {
+        ProgramCache::default()
+    }
+
+    /// Cache hits so far (calls served without compiling).
+    pub fn hits(&self) -> usize {
+        self.hits.get()
+    }
+
+    /// Cache misses so far — equivalently, the number of compiles.
+    pub fn misses(&self) -> usize {
+        self.misses.get()
+    }
+
+    /// Resident compiled programs.
+    pub fn len(&self) -> usize {
+        self.entries.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.borrow().is_empty()
+    }
+
+    /// Drop all entries and reset the counters.
+    pub fn clear(&self) {
+        self.entries.borrow_mut().clear();
+        self.order.borrow_mut().clear();
+        self.hits.set(0);
+        self.misses.set(0);
+    }
+
+    /// Look up (or compile and insert) the program for `module` under the
+    /// given executor request. `Executor::Interp` needs no compilation and
+    /// bypasses the map entirely.
+    pub fn get_or_compile(
+        &self,
+        module: &Module,
+        executor: Executor,
+    ) -> Result<Compiled, String> {
+        if executor == Executor::Interp {
+            return Ok(Compiled::Interp);
+        }
+        let key = (ir::module_structural_hash(module), executor.name());
+        if let Some(entry) = self.entries.borrow().get(&key) {
+            if ir::modules_structurally_eq(&entry.module, module) {
+                self.hits.set(self.hits.get() + 1);
+                return Ok(entry.compiled.clone());
+            }
+        }
+        self.misses.set(self.misses.get() + 1);
+        let compiled = compile_for(module, executor)?;
+        let mut entries = self.entries.borrow_mut();
+        let mut order = self.order.borrow_mut();
+        while entries.len() >= CACHE_CAP {
+            match order.pop_front() {
+                Some(old) => {
+                    entries.remove(&old);
+                }
+                None => break,
+            }
+        }
+        // A replaced entry (hash collision verified unequal) keeps its
+        // original queue position — pushing again would grow `order`
+        // without bound under alternating colliding modules.
+        if entries
+            .insert(key, Entry { module: module.clone(), compiled: compiled.clone() })
+            .is_none()
+        {
+            order.push_back(key);
+        }
+        Ok(compiled)
+    }
+}
+
+/// Compile `module` for the requested tier — the one place the selection
+/// chain (graph runtime -> VM -> interpreter) lives. The ANF pass runs
+/// once and is shared between the graphrt attempt and the VM compile.
+fn compile_for(module: &Module, executor: Executor) -> Result<Compiled, String> {
+    match executor {
+        Executor::Interp => Ok(Compiled::Interp),
+        Executor::GraphRt => {
+            let anfed = crate::pass::anf::run(module);
+            let main = anfed.def("main").ok_or("no @main in module")?;
+            let g = crate::graphrt::GraphRt::compile(main).map_err(|e| e.to_string())?;
+            Ok(Compiled::Graph(Rc::new(g)))
+        }
+        Executor::Vm => {
+            let program = crate::vm::compile(module).map_err(|e| e.to_string())?;
+            Ok(Compiled::Vm(Rc::new(program)))
+        }
+        Executor::Auto => {
+            let anfed = crate::pass::anf::run(module);
+            if let Some(main) = anfed.def("main") {
+                if let Ok(g) = crate::graphrt::GraphRt::compile(main) {
+                    return Ok(Compiled::Graph(Rc::new(g)));
+                }
+            }
+            match crate::vm::compile_normalized(&anfed) {
+                Ok(program) => Ok(Compiled::Vm(Rc::new(program))),
+                // The VM compiles everything the interpreter runs; the
+                // fallback is belt-and-braces for exotic inputs.
+                Err(_) => Ok(Compiled::Interp),
+            }
+        }
+    }
+}
+
+/// Run `@main(args...)` on an already-compiled program. `module` is only
+/// consulted on the interpreter tier (which has no compiled artifact).
+pub fn run_compiled(
+    compiled: &Compiled,
+    module: &Module,
+    args: Vec<Value>,
+) -> Result<Execution, String> {
+    match compiled {
+        Compiled::Graph(g) => {
+            // The cached runtime's launch counter accumulates across
+            // calls; report the per-call delta.
+            let before = g.launches.get();
+            let value = g.run(&args)?;
+            Ok(Execution {
+                value,
+                executor: "graphrt",
+                launches: g.launches.get() - before,
+            })
+        }
+        Compiled::Vm(p) => {
+            let vm = crate::vm::Vm::new(p);
+            let value = vm.run(args)?;
+            Ok(Execution { value, executor: "vm", launches: vm.launches.get() })
+        }
+        Compiled::Interp => {
+            let interp = Interp::new(module);
+            let f = module.entry().ok_or("no @main in module")?.clone();
+            let value = interp.apply(
+                Value::Closure { func: f, env: env_empty(), rec: None },
+                args,
+                &crate::ir::Attrs::new(),
+            )?;
+            Ok(Execution { value, executor: "interp", launches: interp.op_calls() })
+        }
+    }
+}
+
+thread_local! {
+    static DEFAULT_CACHE: ProgramCache = ProgramCache::new();
+}
+
+/// Access this thread's default program cache (what [`super::run_with`] and
+/// [`super::run_auto`] compile into).
+pub fn with_default_cache<R>(f: impl FnOnce(&ProgramCache) -> R) -> R {
+    DEFAULT_CACHE.with(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_with_cache, Executor};
+    use super::*;
+    use crate::ir::parse_module;
+    use crate::tensor::Tensor;
+
+    fn tensor_arg(v: f32) -> Vec<Value> {
+        vec![Value::Tensor(Tensor::scalar_f32(v))]
+    }
+
+    const CF_SRC: &str = "def @main(%x: Tensor[(), float32]) {\n\
+                            if (greater(%x, 0f)) { %x } else { negative(%x) }\n\
+                          }";
+
+    #[test]
+    fn repeated_auto_calls_compile_exactly_once() {
+        let cache = ProgramCache::new();
+        let m = parse_module(CF_SRC).unwrap();
+        for i in 0..5 {
+            let out = run_with_cache(&m, Executor::Auto, tensor_arg(-2.0 - i as f32), &cache)
+                .unwrap();
+            assert_eq!(out.executor, "vm");
+            assert_eq!(out.value.tensor().f32_value(), 2.0 + i as f32);
+        }
+        assert_eq!(cache.misses(), 1, "exactly one compile across 5 calls");
+        assert_eq!(cache.hits(), 4);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn alpha_renamed_module_shares_the_entry() {
+        let cache = ProgramCache::new();
+        let a = parse_module(CF_SRC).unwrap();
+        // Re-parsing mints fresh variable ids: alpha-equivalent, not
+        // identical — still one cache entry.
+        let b = parse_module(&CF_SRC.replace("%x", "%renamed")).unwrap();
+        run_with_cache(&a, Executor::Auto, tensor_arg(1.0), &cache).unwrap();
+        run_with_cache(&b, Executor::Auto, tensor_arg(1.0), &cache).unwrap();
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn cached_path_is_differentially_equal_to_cold_path() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(add(%x, 1f)) }",
+        )
+        .unwrap();
+        let x = Tensor::from_f32(vec![2, 2], vec![-3.0, -1.0, 0.5, 2.0]);
+        let args = vec![Value::Tensor(x)];
+        let cache = ProgramCache::new();
+        let cold = run_with_cache(&m, Executor::Auto, args.clone(), &cache).unwrap();
+        let warm = run_with_cache(&m, Executor::Auto, args, &cache).unwrap();
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert!(cold.value.bits_eq(&warm.value), "cache hit changed the result");
+        assert_eq!(cold.executor, warm.executor);
+        // Per-call launch deltas, not the shared counter's running total.
+        assert_eq!(cold.launches, warm.launches);
+    }
+
+    #[test]
+    fn executors_get_distinct_entries_and_interp_bypasses() {
+        let cache = ProgramCache::new();
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) { add(%x, 1f) }",
+        )
+        .unwrap();
+        let a = run_with_cache(&m, Executor::GraphRt, tensor_arg(1.0), &cache).unwrap();
+        let b = run_with_cache(&m, Executor::Vm, tensor_arg(1.0), &cache).unwrap();
+        let c = run_with_cache(&m, Executor::Interp, tensor_arg(1.0), &cache).unwrap();
+        assert_eq!(a.executor, "graphrt");
+        assert_eq!(b.executor, "vm");
+        assert_eq!(c.executor, "interp");
+        assert_eq!(a.value.tensor().f32_value(), 2.0);
+        assert!(a.value.bits_eq(&b.value) && a.value.bits_eq(&c.value));
+        // Interp compiles nothing and takes no slot.
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn different_modules_do_not_collide() {
+        let cache = ProgramCache::new();
+        let a = parse_module("def @main(%x: Tensor[(), float32]) { add(%x, 1f) }").unwrap();
+        let b =
+            parse_module("def @main(%x: Tensor[(), float32]) { multiply(%x, 3f) }").unwrap();
+        let ra = run_with_cache(&a, Executor::Auto, tensor_arg(2.0), &cache).unwrap();
+        let rb = run_with_cache(&b, Executor::Auto, tensor_arg(2.0), &cache).unwrap();
+        assert_eq!(ra.value.tensor().f32_value(), 3.0);
+        assert_eq!(rb.value.tensor().f32_value(), 6.0);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn clear_resets_entries_and_counters() {
+        let cache = ProgramCache::new();
+        let m = parse_module("def @main(%x: Tensor[(), float32]) { add(%x, 1f) }").unwrap();
+        run_with_cache(&m, Executor::Auto, tensor_arg(0.0), &cache).unwrap();
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.misses(), 0);
+        run_with_cache(&m, Executor::Auto, tensor_arg(0.0), &cache).unwrap();
+        assert_eq!(cache.misses(), 1);
+    }
+}

@@ -13,13 +13,18 @@
 //!
 //! [`run_with`] / [`run_auto`] are the single entry point call sites use
 //! (CLI, server, benches, zoo) instead of hand-rolled fallback chains.
+//! Both compile through a per-thread [`ProgramCache`] keyed by the module's
+//! alpha-invariant structural hash, so repeated calls on an unchanged
+//! module compile exactly once ([`cache`] module docs).
 
+pub mod cache;
 pub mod interp;
 pub mod value;
 
 use std::cell::Cell;
 use std::rc::Rc;
 
+pub use cache::{run_compiled, with_default_cache, Compiled, ProgramCache};
 pub use interp::{eval_expr, eval_main, Interp};
 pub use value::{env_bind, env_empty, Env, Value};
 
@@ -115,68 +120,33 @@ pub struct Execution {
 }
 
 /// Run `@main(args...)` of an (already optimized) module on the chosen
-/// executor. ANF conversion for the graph runtime / VM happens internally.
+/// executor, compiling through an explicit [`ProgramCache`]: the first
+/// call on a module compiles (ANF + tier selection + codegen), every
+/// later call on a structurally-equal module is pure dispatch.
+pub fn run_with_cache(
+    module: &Module,
+    executor: Executor,
+    args: Vec<Value>,
+    cache: &ProgramCache,
+) -> Result<Execution, String> {
+    let compiled = cache.get_or_compile(module, executor)?;
+    run_compiled(&compiled, module, args)
+}
+
+/// Run `@main(args...)` of an (already optimized) module on the chosen
+/// executor. ANF conversion for the graph runtime / VM happens internally,
+/// and the compiled program is cached in this thread's default
+/// [`ProgramCache`] — repeated calls on an unchanged module compile once.
 pub fn run_with(
     module: &Module,
     executor: Executor,
     args: Vec<Value>,
 ) -> Result<Execution, String> {
-    match executor {
-        Executor::Interp => {
-            let interp = Interp::new(module);
-            let f = module.entry().ok_or("no @main in module")?.clone();
-            let value = interp.apply(
-                Value::Closure { func: f, env: env_empty(), rec: None },
-                args,
-                &crate::ir::Attrs::new(),
-            )?;
-            Ok(Execution { value, executor: "interp", launches: interp.op_calls() })
-        }
-        Executor::GraphRt => {
-            let anfed = crate::pass::anf::run(module);
-            let main = anfed.def("main").ok_or("no @main in module")?;
-            let g = crate::graphrt::GraphRt::compile(main).map_err(|e| e.to_string())?;
-            let value = g.run(&args)?;
-            Ok(Execution { value, executor: "graphrt", launches: g.launches.get() })
-        }
-        Executor::Vm => {
-            let program = crate::vm::compile(module).map_err(|e| e.to_string())?;
-            let vm = crate::vm::Vm::new(&program);
-            let value = vm.run(args)?;
-            Ok(Execution { value, executor: "vm", launches: vm.launches.get() })
-        }
-        Executor::Auto => {
-            // Cheapest applicable tier first: the graph runtime rejects
-            // control flow / closures / ADTs at compile time, which is
-            // exactly the paper's executor-selection criterion. The ANF
-            // pass is shared between the graphrt attempt and the VM
-            // compile (normalization runs once).
-            let anfed = crate::pass::anf::run(module);
-            if let Some(main) = anfed.def("main") {
-                if let Ok(g) = crate::graphrt::GraphRt::compile(main) {
-                    let value = g.run(&args)?;
-                    return Ok(Execution {
-                        value,
-                        executor: "graphrt",
-                        launches: g.launches.get(),
-                    });
-                }
-            }
-            match crate::vm::compile_normalized(&anfed) {
-                Ok(program) => {
-                    let vm = crate::vm::Vm::new(&program);
-                    let value = vm.run(args)?;
-                    Ok(Execution { value, executor: "vm", launches: vm.launches.get() })
-                }
-                // The VM compiles everything the interpreter runs; the
-                // fallback is belt-and-braces for exotic inputs.
-                Err(_) => run_with(module, Executor::Interp, args),
-            }
-        }
-    }
+    with_default_cache(|cache| run_with_cache(module, executor, args, cache))
 }
 
-/// [`run_with`] with automatic tier selection.
+/// [`run_with`] with automatic tier selection: graph runtime if the
+/// program compiles to it, else the VM, else the interpreter.
 pub fn run_auto(module: &Module, args: Vec<Value>) -> Result<Execution, String> {
     run_with(module, Executor::Auto, args)
 }
@@ -240,6 +210,25 @@ mod tests {
         // Same launch count on every tier.
         assert_eq!(a.launches, b.launches);
         assert_eq!(a.launches, c.launches);
+    }
+
+    #[test]
+    fn run_auto_compiles_once_via_the_thread_default_cache() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               if (greater(%x, 0f)) { %x } else { negative(%x) }\n\
+             }",
+        )
+        .unwrap();
+        // Tests run one per thread, but be robust to other helpers having
+        // touched this thread's cache: measure deltas.
+        let (h0, m0) = with_default_cache(|c| (c.hits(), c.misses()));
+        for _ in 0..4 {
+            run_auto(&m, tensor_arg(-1.0)).unwrap();
+        }
+        let (h1, m1) = with_default_cache(|c| (c.hits(), c.misses()));
+        assert_eq!(m1 - m0, 1, "4 run_auto calls must compile exactly once");
+        assert_eq!(h1 - h0, 3);
     }
 
     #[test]

@@ -7,8 +7,10 @@
 use std::collections::BTreeMap;
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::sync::Arc;
 
 use super::expr::{Expr, Pattern, Var, E};
+use super::module::Module;
 
 struct Ctx {
     binders: BTreeMap<u32, u64>,
@@ -177,9 +179,86 @@ pub fn structural_hash(e: &E) -> u64 {
     h.finish()
 }
 
+/// Alpha-invariant structural hash of a whole module: definition names,
+/// parameter/return type annotations, definition bodies, and ADT
+/// declarations. Two modules that hash equal are (with overwhelming
+/// probability) interchangeable compilation inputs — the key of the
+/// compiled-program cache ([`crate::eval::ProgramCache`]).
+///
+/// Unlike [`structural_hash`] on a bare function expression, type
+/// annotations DO contribute here: the executors specialize on shapes
+/// (e.g. the serving batcher's per-bucket batch dimension), so modules
+/// differing only in a parameter type must not collide.
+pub fn module_structural_hash(m: &Module) -> u64 {
+    let mut h = DefaultHasher::new();
+    m.defs.len().hash(&mut h);
+    for (name, f) in &m.defs {
+        name.hash(&mut h);
+        f.params.len().hash(&mut h);
+        for (_, ty) in &f.params {
+            format!("{ty:?}").hash(&mut h);
+        }
+        format!("{:?}", f.ret).hash(&mut h);
+        structural_hash(&Arc::new(Expr::Func(f.clone()))).hash(&mut h);
+    }
+    m.types.len().hash(&mut h);
+    for (name, td) in &m.types {
+        name.hash(&mut h);
+        td.params.hash(&mut h);
+        td.constructors.len().hash(&mut h);
+        for (cname, fields) in &td.constructors {
+            cname.hash(&mut h);
+            fields.len().hash(&mut h);
+            // Field types participate: the verifier compares them, so a
+            // hash that ignored them would let two such modules collide
+            // permanently and thrash the cache entry.
+            for fty in fields {
+                format!("{fty:?}").hash(&mut h);
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Full structural module equality: same definitions (alpha-equivalent
+/// bodies, equal type annotations) and same ADT declarations. Used by the
+/// program cache to verify a [`module_structural_hash`] hit, so a 64-bit
+/// collision (or the constant-hash truncation in [`structural_hash`])
+/// can never alias two different programs to one compiled artifact.
+///
+/// This runs on the cache's per-call hit path, so it goes straight to the
+/// recursive equality check — [`alpha_eq`]'s hash fast-path would just
+/// re-traverse both modules to recompute hashes the caller already matched.
+pub fn modules_structurally_eq(a: &Module, b: &Module) -> bool {
+    a.defs.len() == b.defs.len()
+        && a.types == b.types
+        && a.defs.iter().zip(&b.defs).all(|((n1, f1), (n2, f2))| {
+            n1 == n2
+                && f1.params.len() == f2.params.len()
+                && f1
+                    .params
+                    .iter()
+                    .zip(&f2.params)
+                    .all(|((_, t1), (_, t2))| t1 == t2)
+                && f1.ret == f2.ret
+                && alpha_eq_unhashed(
+                    &Arc::new(Expr::Func(f1.clone())),
+                    &Arc::new(Expr::Func(f2.clone())),
+                )
+        })
+}
+
 /// Alpha-equivalence (hash-based fast path + full recursive check).
 pub fn alpha_eq(a: &E, b: &E) -> bool {
     structural_hash(a) == structural_hash(b) && eq(a, b, &mut BTreeMap::new())
+}
+
+/// Alpha-equivalence without the hash fast-path: the recursive check only.
+/// For callers that already matched the operands' structural hashes (the
+/// program cache, the fused-kernel interner) — [`alpha_eq`] would re-walk
+/// both trees just to recompute hashes known to be equal.
+pub fn alpha_eq_unhashed(a: &E, b: &E) -> bool {
+    eq(a, b, &mut BTreeMap::new())
 }
 
 fn eq(a: &E, b: &E, map: &mut BTreeMap<u32, u32>) -> bool {
@@ -315,6 +394,29 @@ mod tests {
         let a = op_call_attrs("sum", vec![scalar(1.0)], attrs(&[("axis", AttrValue::Int(0))]));
         let b = op_call_attrs("sum", vec![scalar(1.0)], attrs(&[("axis", AttrValue::Int(1))]));
         assert!(!alpha_eq(&a, &b));
+    }
+
+    #[test]
+    fn module_hash_is_alpha_invariant_and_type_sensitive() {
+        use super::super::parse_module;
+        let a = parse_module("def @main(%x: Tensor[(2, 2), float32]) { add(%x, %x) }")
+            .unwrap();
+        // Re-parse: same program, fresh var ids.
+        let b = parse_module("def @main(%y: Tensor[(2, 2), float32]) { add(%y, %y) }")
+            .unwrap();
+        assert_eq!(module_structural_hash(&a), module_structural_hash(&b));
+        assert!(modules_structurally_eq(&a, &b));
+        // A different param type (e.g. a different batch bucket) must not
+        // collide: the cache would otherwise serve a wrongly-shaped program.
+        let c = parse_module("def @main(%x: Tensor[(4, 2), float32]) { add(%x, %x) }")
+            .unwrap();
+        assert_ne!(module_structural_hash(&a), module_structural_hash(&c));
+        assert!(!modules_structurally_eq(&a, &c));
+        // A different body must not collide either.
+        let d = parse_module("def @main(%x: Tensor[(2, 2), float32]) { multiply(%x, %x) }")
+            .unwrap();
+        assert_ne!(module_structural_hash(&a), module_structural_hash(&d));
+        assert!(!modules_structurally_eq(&a, &d));
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub use expr::{
     op_call, op_call_attrs, proj, ref_new, ref_read, ref_write, scalar, tuple, unit, var,
     AttrValue, Attrs, Expr, FnAttrs, Function, Pattern, Var, E,
 };
-pub use hash::{alpha_eq, structural_hash};
+pub use hash::{alpha_eq, module_structural_hash, modules_structurally_eq, structural_hash};
 pub use module::{list_expr, Module, TypeDef};
 pub use parser::{parse_expr, parse_module, ParseError};
 pub use printer::{print_expr, print_module};

@@ -54,6 +54,10 @@ fn run(args: &[String]) -> anyhow::Result<String> {
             let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
             coordinator::cmd_run(path, opt_of(args), executor_of(args)?)
         }
+        Some("dump-bytecode") => {
+            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
+            coordinator::cmd_dump_bytecode(path, opt_of(args))
+        }
         Some("artifact") => {
             let name = args.get(1).ok_or_else(|| anyhow::anyhow!("missing name"))?;
             let dir = flag_value(args, "--dir").unwrap_or("artifacts");
@@ -75,9 +79,10 @@ fn run(args: &[String]) -> anyhow::Result<String> {
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(10));
                 println!(
-                    "requests={} batches={}",
+                    "requests={} batches={} compiles={}",
                     stats.requests.load(std::sync::atomic::Ordering::Relaxed),
-                    stats.batches.load(std::sync::atomic::Ordering::Relaxed)
+                    stats.batches.load(std::sync::atomic::Ordering::Relaxed),
+                    stats.compiles.load(std::sync::atomic::Ordering::Relaxed)
                 );
             }
         }

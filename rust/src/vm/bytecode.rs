@@ -20,7 +20,7 @@ use std::fmt;
 use crate::eval::value::Value;
 use crate::ir::Attrs;
 use crate::op::OpDef;
-use crate::tensor::DType;
+use crate::tensor::{CmpOp, DType};
 
 /// A register index within the current frame.
 pub type Reg = u16;
@@ -82,6 +82,12 @@ pub enum Instr {
     /// Branch on a rank-0 bool tensor: fall through to the then-block,
     /// jump to `on_false` for the else-block.
     If { cond: Reg, on_false: u32 },
+    /// Fused compare-and-branch (`if (greater(%a, %b))` and friends): run
+    /// the comparison directly on the operand registers and branch, never
+    /// materializing the intermediate rank-0 bool tensor. Still counts as
+    /// one kernel launch so the Fig 10–12 metric stays comparable with the
+    /// unfused executors.
+    IfCmp { cmp: CmpOp, lhs: Reg, rhs: Reg, on_false: u32 },
     /// Unconditional forward jump (join points of `If`/`Match` arms).
     Goto { target: u32 },
     /// `dst <- src`.
@@ -93,6 +99,16 @@ pub enum Instr {
     InvokeFunc { dst: Reg, func: u32, args: Vec<Reg> },
     /// Indirect call through a closure/op/constructor value in `clos`.
     InvokeClosure { dst: Reg, clos: Reg, args: Vec<Reg> },
+    /// Tail call of a global function: the current frame is *replaced*
+    /// (args re-seeded, pc reset) instead of pushing a new one, so
+    /// recursive loops run in O(1) frame-stack depth. Emitted by the
+    /// tail-call peephole ([`super::compile`]) for calls whose result
+    /// flows straight to `Ret`.
+    TailInvokeFunc { func: u32, args: Vec<Reg> },
+    /// Tail call through a closure value: frame replacement when the
+    /// callee is a VM closure (the self-recursive `let %loop = fn ...`
+    /// pattern); op/constructor callees evaluate and return directly.
+    TailInvokeClosure { clos: Reg, args: Vec<Reg> },
     /// `dst <- ref(src)`.
     RefNew { dst: Reg, src: Reg },
     /// `dst <- !src`.
@@ -125,10 +141,15 @@ impl Instr {
             | Instr::RefRead { src, .. }
             | Instr::Ret { src } => f(*src),
             Instr::If { cond, .. } => f(*cond),
-            Instr::InvokePacked { args, .. } | Instr::InvokeFunc { args, .. } => {
-                args.iter().for_each(|r| f(*r))
+            Instr::IfCmp { lhs, rhs, .. } => {
+                f(*lhs);
+                f(*rhs);
             }
-            Instr::InvokeClosure { clos, args, .. } => {
+            Instr::InvokePacked { args, .. }
+            | Instr::InvokeFunc { args, .. }
+            | Instr::TailInvokeFunc { args, .. } => args.iter().for_each(|r| f(*r)),
+            Instr::InvokeClosure { clos, args, .. }
+            | Instr::TailInvokeClosure { clos, args } => {
                 f(*clos);
                 args.iter().for_each(|r| f(*r));
             }
@@ -159,7 +180,10 @@ impl Instr {
             Instr::Match { .. }
             | Instr::MatchTuple { .. }
             | Instr::If { .. }
+            | Instr::IfCmp { .. }
             | Instr::Goto { .. }
+            | Instr::TailInvokeFunc { .. }
+            | Instr::TailInvokeClosure { .. }
             | Instr::Ret { .. }
             | Instr::Fault { .. } => {}
         }
@@ -187,10 +211,17 @@ impl Instr {
             | Instr::RefRead { src, .. }
             | Instr::Ret { src } => *src = f(*src),
             Instr::If { cond, .. } => *cond = f(*cond),
-            Instr::InvokePacked { args, .. } | Instr::InvokeFunc { args, .. } => {
+            Instr::IfCmp { lhs, rhs, .. } => {
+                *lhs = f(*lhs);
+                *rhs = f(*rhs);
+            }
+            Instr::InvokePacked { args, .. }
+            | Instr::InvokeFunc { args, .. }
+            | Instr::TailInvokeFunc { args, .. } => {
                 args.iter_mut().for_each(|r| *r = f(*r))
             }
-            Instr::InvokeClosure { clos, args, .. } => {
+            Instr::InvokeClosure { clos, args, .. }
+            | Instr::TailInvokeClosure { clos, args } => {
                 *clos = f(*clos);
                 args.iter_mut().for_each(|r| *r = f(*r));
             }
@@ -221,7 +252,10 @@ impl Instr {
             Instr::Match { .. }
             | Instr::MatchTuple { .. }
             | Instr::If { .. }
+            | Instr::IfCmp { .. }
             | Instr::Goto { .. }
+            | Instr::TailInvokeFunc { .. }
+            | Instr::TailInvokeClosure { .. }
             | Instr::Ret { .. }
             | Instr::Fault { .. } => {}
         }
@@ -260,6 +294,16 @@ impl Program {
     pub fn num_instrs(&self) -> usize {
         self.funcs.iter().map(|f| f.code.len()).sum()
     }
+
+    /// Count instructions matching a predicate across all functions
+    /// (tests + the `dump-bytecode` summary use this to report how many
+    /// calls the peepholes converted).
+    pub fn count_instrs(&self, pred: impl Fn(&Instr) -> bool) -> usize {
+        self.funcs
+            .iter()
+            .map(|f| f.code.iter().filter(|i| pred(i)).count())
+            .sum()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -268,6 +312,17 @@ impl Program {
 
 fn regs(rs: &[Reg]) -> String {
     rs.iter().map(|r| format!("r{r}")).collect::<Vec<_>>().join(", ")
+}
+
+fn cmp_symbol(cmp: CmpOp) -> &'static str {
+    match cmp {
+        CmpOp::Eq => "==",
+        CmpOp::Ne => "!=",
+        CmpOp::Lt => "<",
+        CmpOp::Le => "<=",
+        CmpOp::Gt => ">",
+        CmpOp::Ge => ">=",
+    }
 }
 
 impl fmt::Display for Instr {
@@ -301,6 +356,9 @@ impl fmt::Display for Instr {
                 write!(f, "match r{src} tuple/{arity} else -> {on_fail}")
             }
             Instr::If { cond, on_false } => write!(f, "if !r{cond} -> {on_false}"),
+            Instr::IfCmp { cmp, lhs, rhs, on_false } => {
+                write!(f, "if !(r{lhs} {} r{rhs}) -> {on_false}", cmp_symbol(*cmp))
+            }
             Instr::Goto { target } => write!(f, "goto {target}"),
             Instr::Move { dst, src } => write!(f, "r{dst} = r{src}"),
             Instr::InvokePacked { dst, packed, args } => {
@@ -311,6 +369,12 @@ impl fmt::Display for Instr {
             }
             Instr::InvokeClosure { dst, clos, args } => {
                 write!(f, "r{dst} = invoke_closure r{clos}({})", regs(args))
+            }
+            Instr::TailInvokeFunc { func, args } => {
+                write!(f, "tail_invoke fn#{func}({})", regs(args))
+            }
+            Instr::TailInvokeClosure { clos, args } => {
+                write!(f, "tail_invoke_closure r{clos}({})", regs(args))
             }
             Instr::RefNew { dst, src } => write!(f, "r{dst} = ref(r{src})"),
             Instr::RefRead { dst, src } => write!(f, "r{dst} = !r{src}"),

@@ -1,6 +1,6 @@
 //! Compiler from (post-fusion, ANF-normalized) Relay IR to VM bytecode.
 //!
-//! Three jobs beyond straightforward instruction selection:
+//! Jobs beyond straightforward instruction selection:
 //!
 //! * **Closure conversion** — every `Expr::Func` is lifted to a top-level
 //!   [`VmFunc`]; its free variables become an explicit capture list passed
@@ -9,19 +9,31 @@
 //! * **Match lowering** — nested patterns become chains of `Match` /
 //!   `MatchTuple` tag tests with `GetField` / `Proj` destructuring; arm
 //!   bodies jump to a common join. All branches are forward.
+//! * **Pool dedup** — the constant pool interns by exact value, the
+//!   packed-kernel table by (op, attrs) for singleton kernels and by
+//!   alpha-invariant structural hash (verified with `alpha_eq`) for fused
+//!   ones, so repeated cell structure compiles to shared table entries.
+//! * **If-on-comparison fusion** ([`fuse_if_cmp`], before allocation) —
+//!   a comparison feeding only the next `If` becomes one `IfCmp`, so
+//!   scalar loop conditions skip the intermediate bool tensor.
 //! * **Register planning** — codegen uses unbounded virtual registers;
 //!   [`allocate_registers`] then runs a linear liveness scan (sound
 //!   because branches only jump forward) and rewrites them onto a small
 //!   physical frame, reusing registers whose values are dead — the VM's
 //!   analogue of the graph runtime's memory planning.
+//! * **Tail-call marking** ([`mark_tail_calls`], after allocation) —
+//!   calls whose result flows straight to `Ret` become frame-reusing
+//!   `TailInvokeFunc` / `TailInvokeClosure`, making recursive loops O(1)
+//!   in frame-stack depth.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 use super::bytecode::{Instr, PackedFunc, PackedRef, PackedStep, Program, Reg, VmFunc};
 use crate::eval::value::Value;
 use crate::ir::{Expr, Function, Module, Pattern, Var, E};
 use crate::op;
-use crate::tensor::Tensor;
+use crate::tensor::{CmpOp, DType, Tensor};
 
 #[derive(Debug)]
 pub struct CompileError(pub String);
@@ -84,6 +96,47 @@ pub fn compile_expr(m: &Module, e: &E) -> R<Program> {
 // Builder: program-level pools shared across function compilations.
 // ---------------------------------------------------------------------------
 
+/// Interning key for the constant pool. Tensors key by shape, dtype, and a
+/// hash of their element bits (not the bits themselves — a resident copy of
+/// every weight tensor would triple peak constant memory during compile);
+/// a hash hit is verified with exact `Tensor` equality before reusing the
+/// slot, so collisions only cost a duplicate pool entry, never aliasing.
+#[derive(Hash, PartialEq, Eq)]
+enum ConstKey {
+    Tensor(Vec<usize>, DType, u64),
+    Op(String),
+    Ctor(String),
+    NullaryAdt(String),
+}
+
+fn const_key(v: &Value) -> Option<ConstKey> {
+    match v {
+        Value::Tensor(t) => {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            use std::hash::{Hash as _, Hasher as _};
+            for i in 0..t.numel() {
+                t.get_f64(i).to_bits().hash(&mut h);
+            }
+            Some(ConstKey::Tensor(t.shape().to_vec(), t.dtype(), h.finish()))
+        }
+        Value::OpRef(n) => Some(ConstKey::Op(n.clone())),
+        Value::CtorRef(n) => Some(ConstKey::Ctor(n.clone())),
+        Value::Adt { ctor, fields } if fields.is_empty() => {
+            Some(ConstKey::NullaryAdt(ctor.clone()))
+        }
+        _ => None,
+    }
+}
+
+/// Exact check behind a [`ConstKey`] hash hit. Name-based keys are exact by
+/// construction; tensor keys compare full contents.
+fn const_entry_eq(pooled: &Value, candidate: &Value) -> bool {
+    match (pooled, candidate) {
+        (Value::Tensor(a), Value::Tensor(b)) => a == b,
+        _ => true,
+    }
+}
+
 struct Builder<'m> {
     module: &'m Module,
     funcs: Vec<Option<VmFunc>>,
@@ -92,6 +145,17 @@ struct Builder<'m> {
     packed: Vec<PackedFunc>,
     ctor_names: Vec<String>,
     ctor_index: HashMap<String, u32>,
+    /// Constant-pool interning: identical constants share one pool slot
+    /// (hash key -> candidate indices, verified exactly on hit).
+    const_index: HashMap<ConstKey, Vec<u32>>,
+    /// Singleton-kernel interning by (op name, arity, attrs): every `add`
+    /// call site shares one packed function instead of minting its own.
+    /// Arity is part of the key because variadic ops (`concatenate`) bake
+    /// their input count into the PackedFunc's Arg list.
+    packed_op_index: HashMap<(String, usize, String), u32>,
+    /// Fused-kernel interning by alpha-invariant structural hash, with the
+    /// source expression kept for exact verification on a hash hit.
+    fused_index: HashMap<u64, Vec<(E, u32)>>,
 }
 
 impl<'m> Builder<'m> {
@@ -104,6 +168,9 @@ impl<'m> Builder<'m> {
             packed: Vec::new(),
             ctor_names: Vec::new(),
             ctor_index: HashMap::new(),
+            const_index: HashMap::new(),
+            packed_op_index: HashMap::new(),
+            fused_index: HashMap::new(),
         }
     }
 
@@ -117,8 +184,24 @@ impl<'m> Builder<'m> {
     }
 
     fn const_idx(&mut self, v: Value) -> u32 {
+        let key = match const_key(&v) {
+            Some(k) => k,
+            None => {
+                self.consts.push(v);
+                return (self.consts.len() - 1) as u32;
+            }
+        };
+        if let Some(idxs) = self.const_index.get(&key) {
+            for &i in idxs {
+                if const_entry_eq(&self.consts[i as usize], &v) {
+                    return i;
+                }
+            }
+        }
         self.consts.push(v);
-        (self.consts.len() - 1) as u32
+        let i = (self.consts.len() - 1) as u32;
+        self.const_index.entry(key).or_default().push(i);
+        i
     }
 
     fn ctor_idx(&mut self, name: &str) -> u32 {
@@ -144,10 +227,41 @@ impl<'m> Builder<'m> {
                 None => return err(format!("function slot {i} never filled")),
             }
         }
+        // Sweep packed entries orphaned by If-fusion (the comparison
+        // kernel is interned before the peephole rewrites its only call
+        // site to IfCmp) so the table reflects what actually runs.
+        let mut used = vec![false; self.packed.len()];
+        for f in &funcs {
+            for ins in &f.code {
+                if let Instr::InvokePacked { packed, .. } = ins {
+                    used[*packed as usize] = true;
+                }
+            }
+        }
+        let packed = if used.iter().all(|u| *u) {
+            self.packed
+        } else {
+            let mut remap = vec![0u32; used.len()];
+            let mut kept = Vec::new();
+            for (i, p) in self.packed.into_iter().enumerate() {
+                if used[i] {
+                    remap[i] = kept.len() as u32;
+                    kept.push(p);
+                }
+            }
+            for f in &mut funcs {
+                for ins in &mut f.code {
+                    if let Instr::InvokePacked { packed, .. } = ins {
+                        *packed = remap[*packed as usize];
+                    }
+                }
+            }
+            kept
+        };
         Ok(Program {
             funcs,
             consts: self.consts,
-            packed: self.packed,
+            packed,
             ctor_names: self.ctor_names,
             entry,
         })
@@ -187,8 +301,14 @@ fn compile_function(
     let fixed = ctx.next;
     let out = ctx.compile(&func.body)?;
     ctx.emit(Instr::Ret { src: out });
-    let mut code = ctx.code;
+    let mut code = std::mem::take(&mut ctx.code);
+    // Peephole 1 (virtual registers): fuse compare+If into IfCmp so scalar
+    // loop conditions skip the intermediate bool tensor.
+    fuse_if_cmp(&mut code, &ctx.b.packed);
     let nregs = allocate_registers(&mut code, fixed)?;
+    // Peephole 2 (physical registers): calls whose result flows straight
+    // to Ret become frame-reusing tail calls.
+    mark_tail_calls(&mut code);
     Ok(VmFunc {
         name,
         params: func.params.len() as u16,
@@ -407,18 +527,31 @@ impl FnCtx<'_, '_> {
                 }
                 let argr: R<Vec<Reg>> = args.iter().map(|a| self.compile(a)).collect();
                 let argr = argr?;
-                let step = PackedStep {
-                    def,
-                    attrs: attrs.clone(),
-                    inputs: (0..args.len()).map(|i| PackedRef::Arg(i as u16)).collect(),
-                    out_temp: 0,
+                // Kernel dedup by (op, arity, attrs): every call site of
+                // the same operator configuration shares one packed-table
+                // entry.
+                let key = (name.clone(), args.len(), format!("{attrs:?}"));
+                let packed = match self.b.packed_op_index.get(&key) {
+                    Some(&i) => i,
+                    None => {
+                        let step = PackedStep {
+                            def,
+                            attrs: attrs.clone(),
+                            inputs: (0..args.len())
+                                .map(|i| PackedRef::Arg(i as u16))
+                                .collect(),
+                            out_temp: 0,
+                        };
+                        let i = self.b.add_packed(PackedFunc {
+                            name: name.clone(),
+                            steps: vec![step],
+                            n_temps: 1,
+                            out_temp: 0,
+                        });
+                        self.b.packed_op_index.insert(key, i);
+                        i
+                    }
                 };
-                let packed = self.b.add_packed(PackedFunc {
-                    name: name.clone(),
-                    steps: vec![step],
-                    n_temps: 1,
-                    out_temp: 0,
-                });
                 let dst = self.fresh()?;
                 self.emit(Instr::InvokePacked { dst, packed, args: argr });
                 Ok(dst)
@@ -566,7 +699,29 @@ impl FnCtx<'_, '_> {
 
 /// Flatten a primitive function's let-chain body into a step sequence over
 /// temps, exactly the graph runtime's fused-node shape.
+///
+/// Alpha-equivalent fused functions (the fusion pass extracts the same
+/// dense→add→activation chain many times in an unrolled or multi-gate
+/// model) dedup to one packed-table entry: the structural hash is the fast
+/// path, an exact `alpha_eq` check guards against collisions.
 fn compile_packed(b: &mut Builder, f: &Function, name: &str) -> R<u32> {
+    let fe: E = Arc::new(Expr::Func(f.clone()));
+    let fh = crate::ir::structural_hash(&fe);
+    if let Some(entries) = b.fused_index.get(&fh) {
+        for (src, idx) in entries {
+            // Hashes already matched via the bucket; skip straight to the
+            // recursive equality check.
+            if crate::ir::hash::alpha_eq_unhashed(src, &fe) {
+                return Ok(*idx);
+            }
+        }
+    }
+    let idx = compile_packed_uncached(b, f, name)?;
+    b.fused_index.entry(fh).or_default().push((fe, idx));
+    Ok(idx)
+}
+
+fn compile_packed_uncached(b: &mut Builder, f: &Function, name: &str) -> R<u32> {
     let mut local: HashMap<u32, PackedRef> = HashMap::new();
     for (i, (p, _)) in f.params.iter().enumerate() {
         local.insert(p.id, PackedRef::Arg(i as u16));
@@ -667,6 +822,123 @@ fn packed_step(
 }
 
 // ---------------------------------------------------------------------------
+// Peepholes: If-on-comparison fusion and tail-call marking.
+// ---------------------------------------------------------------------------
+
+fn cmp_of_op(name: &str) -> Option<CmpOp> {
+    Some(match name {
+        "equal" => CmpOp::Eq,
+        "not_equal" => CmpOp::Ne,
+        "less" => CmpOp::Lt,
+        "less_equal" => CmpOp::Le,
+        "greater" => CmpOp::Gt,
+        "greater_equal" => CmpOp::Ge,
+        _ => return None,
+    })
+}
+
+/// Rewrite `InvokePacked(cmp); If(result)` pairs into a single [`Instr::IfCmp`]
+/// when the comparison result feeds nothing but that `If`. Runs on virtual
+/// registers (every destination is defined once, so the single-use check is
+/// a plain count). The displaced `If` slot becomes a fall-through `Goto` so
+/// no branch targets shift.
+fn fuse_if_cmp(code: &mut [Instr], packed: &[PackedFunc]) {
+    if code.len() < 2 {
+        return;
+    }
+    let mut uses: HashMap<Reg, usize> = HashMap::new();
+    for ins in code.iter() {
+        ins.for_each_use(|r| *uses.entry(r).or_insert(0) += 1);
+    }
+    for i in 0..code.len() - 1 {
+        let (cmp, lhs, rhs, dst) = match &code[i] {
+            Instr::InvokePacked { dst, packed: p, args } if args.len() == 2 => {
+                let pf = &packed[*p as usize];
+                if pf.steps.len() != 1 {
+                    continue;
+                }
+                let step = &pf.steps[0];
+                if !step.attrs.is_empty()
+                    || step.inputs.len() != 2
+                    || !matches!(step.inputs[0], PackedRef::Arg(0))
+                    || !matches!(step.inputs[1], PackedRef::Arg(1))
+                {
+                    continue;
+                }
+                match cmp_of_op(step.def.name) {
+                    Some(c) => (c, args[0], args[1], *dst),
+                    None => continue,
+                }
+            }
+            _ => continue,
+        };
+        let on_false = match &code[i + 1] {
+            Instr::If { cond, on_false } if *cond == dst => *on_false,
+            _ => continue,
+        };
+        if uses.get(&dst).copied().unwrap_or(0) != 1 {
+            continue;
+        }
+        code[i] = Instr::IfCmp { cmp, lhs, rhs, on_false };
+        code[i + 1] = Instr::Goto { target: (i + 2) as u32 };
+    }
+}
+
+/// Convert calls whose result flows straight to `Ret` into tail calls that
+/// reuse the current frame. Runs after register allocation on the final
+/// physical code, so the flow check is over exactly what the executor runs.
+fn mark_tail_calls(code: &mut [Instr]) {
+    for i in 0..code.len() {
+        let dst = match &code[i] {
+            Instr::InvokeFunc { dst, .. } | Instr::InvokeClosure { dst, .. } => *dst,
+            _ => continue,
+        };
+        if !flows_to_ret(code, i, dst) {
+            continue;
+        }
+        let prev = std::mem::replace(&mut code[i], Instr::Goto { target: 0 });
+        code[i] = match prev {
+            Instr::InvokeFunc { func, args, .. } => Instr::TailInvokeFunc { func, args },
+            Instr::InvokeClosure { clos, args, .. } => {
+                Instr::TailInvokeClosure { clos, args }
+            }
+            other => other,
+        };
+    }
+}
+
+/// Does the value written to `reg` at instruction `i` reach a `Ret`
+/// untouched, crossing nothing but register moves and forward jumps? Any
+/// other instruction on the path (a kernel launch, a ref write, a
+/// conditional branch) disqualifies the call from tail position, because a
+/// tail call skips everything between itself and the `Ret`.
+fn flows_to_ret(code: &[Instr], i: usize, reg: Reg) -> bool {
+    // Registers currently holding the call result (a Move copies without
+    // killing its source, so this is a set, not a single name).
+    let mut holds: Vec<Reg> = vec![reg];
+    let mut j = i + 1;
+    loop {
+        match code.get(j) {
+            Some(Instr::Move { dst, src }) => {
+                let from_result = holds.contains(src);
+                holds.retain(|r| r != dst);
+                if from_result {
+                    holds.push(*dst);
+                }
+                if holds.is_empty() {
+                    return false;
+                }
+                j += 1;
+            }
+            // Forward-only branch invariant guarantees termination.
+            Some(Instr::Goto { target }) => j = *target as usize,
+            Some(Instr::Ret { src }) => return holds.contains(src),
+            _ => return false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Register allocation: linear liveness scan + free-list reuse.
 // ---------------------------------------------------------------------------
 
@@ -724,6 +996,7 @@ fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<Reg> {
 fn forward_branches_only(code: &[Instr]) -> bool {
     code.iter().enumerate().all(|(i, ins)| match ins {
         Instr::If { on_false: t, .. }
+        | Instr::IfCmp { on_false: t, .. }
         | Instr::Goto { target: t }
         | Instr::Match { on_fail: t, .. }
         | Instr::MatchTuple { on_fail: t, .. } => *t as usize > i,
@@ -824,6 +1097,165 @@ mod tests {
         for f in &p.funcs {
             assert!(super::forward_branches_only(&f.code), "{f}");
         }
+    }
+
+    #[test]
+    fn constant_pool_dedups_identical_constants() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               add(add(%x, 3f), add(multiply(%x, 3f), 3f))\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        // Three uses of the constant 3.0 intern to ONE pool entry.
+        let tensor_consts = p
+            .consts
+            .iter()
+            .filter(|v| matches!(v, Value::Tensor(_)))
+            .count();
+        assert_eq!(tensor_consts, 1, "constant pool not deduped:\n{p}");
+    }
+
+    #[test]
+    fn packed_kernels_dedup_by_op_and_attrs() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) {\n\
+               let %a = add(%x, %x);\n\
+               let %b = add(%a, %a);\n\
+               let %c = multiply(%b, %b);\n\
+               add(%c, %c)\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        // Three `add` call sites + one `multiply` -> two packed kernels...
+        assert_eq!(p.packed.len(), 2, "packed table not deduped:\n{p}");
+        // ...but still four launches (dedup shrinks the table, not the
+        // launch count).
+        let main = &p.funcs[p.entry as usize];
+        let launches = main
+            .code
+            .iter()
+            .filter(|i| matches!(i, Instr::InvokePacked { .. }))
+            .count();
+        assert_eq!(launches, 4);
+    }
+
+    #[test]
+    fn variadic_ops_with_different_arities_do_not_share_kernels() {
+        // `concatenate` bakes its argument count into the packed Arg list;
+        // a 2-arg and a 3-arg site must get distinct table entries.
+        let m = parse_module(
+            "def @main(%x: Tensor[(1, 2), float32]) {\n\
+               concatenate(concatenate(%x, %x), %x, %x)\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        assert_eq!(p.packed.len(), 2, "arity must be part of the dedup key:\n{p}");
+        let x = Tensor::from_f32(vec![1, 2], vec![1.0, 2.0]);
+        let out = crate::vm::Vm::new(&p)
+            .run(vec![Value::Tensor(x)])
+            .unwrap();
+        assert_eq!(out.tensor().shape(), &[4, 2]);
+        assert_eq!(
+            out.tensor().as_f32(),
+            &[1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0]
+        );
+    }
+
+    #[test]
+    fn if_on_comparison_fuses_to_ifcmp() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               if (greater(%x, 0f)) { %x } else { negative(%x) }\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let main = &p.funcs[p.entry as usize];
+        assert!(
+            main.code.iter().any(|i| matches!(i, Instr::IfCmp { .. })),
+            "comparison branch not fused:\n{main}"
+        );
+        assert!(
+            !main.code.iter().any(|i| matches!(i, Instr::If { .. })),
+            "unfused If remains:\n{main}"
+        );
+        // The fused comparison's kernel is swept from the packed table;
+        // only `negative` (the else arm) remains.
+        assert_eq!(p.packed.len(), 1, "orphaned packed entry not swept:\n{p}");
+    }
+
+    #[test]
+    fn comparison_used_beyond_the_if_is_not_fused() {
+        // The bool result is also returned, so it must stay materialized.
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               let %c = greater(%x, 0f);\n\
+               if (%c) { (%c, %x) } else { (%c, negative(%x)) }\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let main = &p.funcs[p.entry as usize];
+        assert!(
+            !main.code.iter().any(|i| matches!(i, Instr::IfCmp { .. })),
+            "fused a multi-use comparison:\n{main}"
+        );
+    }
+
+    #[test]
+    fn self_recursive_loop_gets_a_tail_call() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               let %loop = fn (%i, %acc) {\n\
+                 if (greater(%i, 0f)) { %loop(subtract(%i, 1f), add(%acc, %i)) }\n\
+                 else { %acc }\n\
+               };\n\
+               %loop(%x, 0f)\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let lifted = p.funcs.iter().find(|f| f.name.starts_with("closure")).unwrap();
+        assert!(
+            lifted.code.iter().any(|i| matches!(i, Instr::TailInvokeClosure { .. })),
+            "self-recursive call not in tail form:\n{lifted}"
+        );
+    }
+
+    #[test]
+    fn global_tail_recursion_gets_tail_invoke_func() {
+        let m = parse_module(
+            "def @loop(%i) {\n\
+               if (greater(%i, 0f)) { @loop(subtract(%i, 1f)) } else { %i }\n\
+             }\n\
+             def @main(%i) { @loop(%i) }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let looped = p.funcs.iter().find(|f| f.name == "@loop").unwrap();
+        assert!(
+            looped.code.iter().any(|i| matches!(i, Instr::TailInvokeFunc { .. })),
+            "global tail recursion not marked:\n{looped}"
+        );
+        // A non-tail call (result feeds an op) must NOT be converted.
+        let m2 = parse_module(
+            "def @fact(%n) {\n\
+               if (greater(%n, 1f)) { multiply(%n, @fact(subtract(%n, 1f))) }\n\
+               else { 1f }\n\
+             }\n\
+             def @main(%n) { @fact(%n) }",
+        )
+        .unwrap();
+        let p2 = compile(&m2).unwrap();
+        let fact = p2.funcs.iter().find(|f| f.name == "@fact").unwrap();
+        assert!(
+            fact.code.iter().any(|i| matches!(i, Instr::InvokeFunc { .. })),
+            "non-tail recursive call wrongly converted:\n{fact}"
+        );
     }
 
     #[test]

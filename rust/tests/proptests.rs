@@ -10,7 +10,9 @@
 //! * structural hashing respects alpha-equivalence under refresh;
 //! * the bytecode VM bit-matches the interpreter on random programs with
 //!   `if`/`match`/recursion, and its kernel-launch count equals the graph
-//!   runtime's `kernel_nodes` on fused first-order programs.
+//!   runtime's `kernel_nodes` on fused first-order programs;
+//! * alpha-renamed random modules hash equal and share one program-cache
+//!   entry, and the cache-hit path is differentially equal to cold compile.
 
 use relay::eval::{eval_expr, eval_main, Value};
 use relay::ir::{self, Module};
@@ -390,6 +392,71 @@ fn vm_launches_equal_graphrt_kernel_nodes_on_fused_first_order_programs() {
             out.launches, g.kernel_nodes,
             "case {case}: VM launches != graphrt kernel nodes"
         );
+    }
+}
+
+#[test]
+fn alpha_renamed_random_modules_hash_equal_and_share_a_cache_entry() {
+    use relay::eval::{run_with_cache, Executor, ProgramCache};
+
+    let mut rng = Rng::new(1000);
+    for case in 0..CASES {
+        let e = random_cf_program(&mut rng, 2);
+        let m = ir::Module::from_expr(e.clone());
+        // `refresh` alpha-renames every binder: a structurally identical
+        // module with entirely fresh variable ids.
+        let renamed = ir::Module::from_expr(ir::refresh(&e));
+        assert_eq!(
+            ir::module_structural_hash(&m),
+            ir::module_structural_hash(&renamed),
+            "case {case}: alpha-renaming changed the module hash"
+        );
+        assert!(ir::modules_structurally_eq(&m, &renamed), "case {case}");
+
+        // One cache entry serves both: compile once, hit twice.
+        let cache = ProgramCache::new();
+        let cold = run_with_cache(&m, Executor::Auto, vec![], &cache)
+            .unwrap_or_else(|err| panic!("case {case}: cold run failed: {err}"));
+        let hit = run_with_cache(&renamed, Executor::Auto, vec![], &cache)
+            .unwrap_or_else(|err| panic!("case {case}: renamed run failed: {err}"));
+        let hit2 = run_with_cache(&m, Executor::Auto, vec![], &cache).unwrap();
+        assert_eq!(cache.misses(), 1, "case {case}: cache did not share the entry");
+        assert_eq!(cache.hits(), 2, "case {case}");
+        // Differential: the cache-hit path computes exactly what the cold
+        // compile did.
+        assert!(
+            cold.value.bits_eq(&hit.value) && cold.value.bits_eq(&hit2.value),
+            "case {case}: cached execution diverged from cold compile"
+        );
+        assert_eq!(cold.launches, hit2.launches, "case {case}: launch drift");
+    }
+}
+
+#[test]
+fn cached_vm_execution_matches_interpreter_on_random_control_flow() {
+    use relay::eval::{run_with_cache, Executor, ProgramCache};
+
+    // The VM fast paths (tail calls, IfCmp fusion, pool dedup) plus the
+    // program cache, differentially checked against the reference
+    // interpreter on random control-flow programs — twice per program, so
+    // both the miss path and the hit path are covered.
+    let mut rng = Rng::new(1100);
+    let cache = ProgramCache::new();
+    let m0 = Module::with_prelude();
+    for case in 0..CASES {
+        let e = random_cf_program(&mut rng, 3);
+        let expect = eval_expr(&m0, &e)
+            .unwrap_or_else(|err| panic!("case {case}: interp failed: {err}"));
+        let m = ir::Module::from_expr(e);
+        for round in 0..2 {
+            let got = run_with_cache(&m, Executor::Vm, vec![], &cache)
+                .unwrap_or_else(|err| panic!("case {case}.{round}: vm failed: {err}"));
+            assert!(
+                expect.bits_eq(&got.value),
+                "case {case}.{round}: cached VM diverged: {expect:?} vs {:?}",
+                got.value
+            );
+        }
     }
 }
 
