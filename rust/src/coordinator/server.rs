@@ -163,17 +163,31 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                         .ok_or_else(|| anyhow!("mlp_forward not in manifest"))?
                         .clone();
                     let exe = rt.load_artifact(&artifact_dir.join("mlp_forward.hlo.txt"))?;
-                    let x_spec = entry.inputs.last().unwrap().clone();
+                    let x_spec = entry
+                        .inputs
+                        .last()
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "manifest entry mlp_forward has an empty inputs \
+                                 list (expected [weights..., x])"
+                            )
+                        })?
+                        .clone();
+                    if x_spec.shape.len() < 2 {
+                        return Err(anyhow!(
+                            "mlp_forward input spec must be (batch, feat), got {:?}",
+                            x_spec.shape
+                        ));
+                    }
                     let (batch_cap, feat) = (x_spec.shape[0], x_spec.shape[1]);
+                    // Deterministic weights (a real deployment would load
+                    // trained parameters; see examples/train_mlp.rs). One
+                    // RNG across all weights: re-seeding inside the closure
+                    // would hand every tensor the same value stream.
+                    let mut rng = crate::tensor::Rng::new(17);
                     let weights: Vec<Tensor> = entry.inputs[..entry.inputs.len() - 1]
                         .iter()
-                        .map(|s| {
-                            // Deterministic weights (a real deployment would
-                            // load trained parameters; see
-                            // examples/train_mlp.rs).
-                            let mut rng = crate::tensor::Rng::new(17);
-                            rng.normal_tensor(&s.shape, 0.1)
-                        })
+                        .map(|s| rng.normal_tensor(&s.shape, 0.1))
                         .collect();
                     let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
                         let x = pad_rows(rows, batch_cap, feat);
