@@ -2,36 +2,40 @@
 //!
 //! A std-thread dynamic batcher (no tokio in the vendored dep set): client
 //! connections write one request per line — comma-separated f32 features —
-//! and read back the predicted class. Requests are queued; a batcher
-//! thread drains up to `max_batch` requests (waiting at most
-//! `batch_timeout` for stragglers), pads to the artifact's batch dimension,
-//! executes one PJRT call, and fans results back out. This is the router /
-//! dynamic-batcher shape of serving systems, scaled to the thin-driver
-//! role the paper's compiler contribution leaves for L3.
+//! and read back the predicted class. Requests are queued; a fleet of
+//! worker threads drains up to `max_batch` requests per batch (waiting at
+//! most `batch_timeout` for stragglers), pads to a bucketed batch shape,
+//! executes one compiled-program call, and fans results back out. This is
+//! the router / dynamic-batcher shape of serving systems, scaled to the
+//! thin-driver role the paper's compiler contribution leaves for L3.
 //!
-//! Backends: the PJRT executable when the AOT artifact directory exists,
-//! otherwise a compiled-relay MLP routed through the executor-selection
-//! layer ([`crate::eval::Executor`]) — graph runtime, bytecode VM, or
+//! Backends: the PJRT executable when the AOT artifact directory exists
+//! (single worker — PJRT handles are `!Send`), otherwise a compiled-relay
+//! MLP ([`RelayBackend`]) routed through the executor-selection layer
+//! ([`crate::eval::Executor`]) — graph runtime, bytecode VM, or
 //! interpreter — so serving works without the `xla` feature.
 //!
 //! The compiled-relay backend batches into *bucketed* shapes (1, 2, 4, 8,
 //! ... up to `max_batch`) instead of padding every batch to the maximum:
 //! a lone request at low load runs the batch-1 program, not a padded
 //! batch-32 one, cutting tail latency. Each bucket is one entry in a
-//! [`crate::eval::ProgramCache`], so every shape compiles exactly once
-//! over the server's lifetime (`Stats::compiles` tracks this).
+//! [`crate::eval::ProgramCache`] **shared by every worker**: values and
+//! compiled programs are `Send + Sync` (`Arc`-backed), so the whole
+//! N-worker fleet compiles each bucket exactly once over the server's
+//! lifetime (`Stats::compiles` tracks this fleet-wide; the cache coalesces
+//! two workers racing on the same cold bucket into one compile).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::eval::{run_compiled, Compiled, Executor, ProgramCache, Value};
+use crate::eval::{run_compiled, Executor, ProgramCache, Value};
 use crate::ir::{self, Module, Type, Var};
 use crate::runtime::Runtime;
 use crate::tensor::{DType, Tensor};
@@ -45,6 +49,9 @@ pub struct ServerConfig {
     /// artifact directory is missing (so the server works — batching and
     /// all — without the `xla` feature / Python build path).
     pub executor: Executor,
+    /// Worker threads draining the request queue (compiled-relay backend).
+    /// The PJRT backend is pinned to one worker: its handles are `!Send`.
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -55,6 +62,7 @@ impl Default for ServerConfig {
             batch_timeout: Duration::from_millis(2),
             artifact_dir: "artifacts".into(),
             executor: Executor::Auto,
+            workers: 4,
         }
     }
 }
@@ -101,9 +109,23 @@ fn pad_rows(rows: &[&[f32]], batch: usize, feat: usize) -> Tensor {
 pub struct Stats {
     pub requests: AtomicUsize,
     pub batches: AtomicUsize,
-    /// Backend compiles performed so far (compiled-relay backend: program-
-    /// cache misses — at most one per batch bucket over the server's life).
+    /// Backend compiles performed so far, fleet-wide (compiled-relay
+    /// backend: at most one per batch bucket over the server's life,
+    /// no matter how many workers race on a cold bucket).
     pub compiles: AtomicUsize,
+    /// Requests served per worker thread (len == worker count).
+    pub per_worker: Vec<AtomicUsize>,
+}
+
+impl Stats {
+    pub fn new(workers: usize) -> Stats {
+        Stats {
+            requests: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            compiles: AtomicUsize::new(0),
+            per_worker: (0..workers.max(1)).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
 }
 
 /// Batch-shape buckets: powers of two up to (and always including) `cap`.
@@ -120,132 +142,228 @@ fn bucket_sizes(cap: usize) -> Vec<usize> {
     out
 }
 
-/// Serve the `mlp_forward` artifact. Blocks; set `stop` to shut down.
+/// The compiled-relay serving backend: one fallback-MLP module per batch
+/// bucket, all compiled through one shared [`ProgramCache`].
 ///
-/// Note: PJRT handles are `!Send` (the xla crate wraps raw pointers with
-/// `Rc`), so the batcher thread owns the client + executable exclusively —
-/// a single-executor design, with batching providing the throughput.
-pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
-    let stats = Arc::new(Stats {
-        requests: AtomicUsize::new(0),
-        batches: AtomicUsize::new(0),
-        compiles: AtomicUsize::new(0),
+/// `Send + Sync`: any number of worker threads may call [`run_batch`]
+/// concurrently — compiled programs are `Arc`-backed immutable data, and
+/// the cache coalesces racing misses so each bucket compiles at most once
+/// for the whole fleet ([`Stats::compiles`] counts exactly the calls that
+/// actually compiled).
+///
+/// [`run_batch`]: RelayBackend::run_batch
+pub struct RelayBackend {
+    buckets: Vec<Bucket>,
+    cache: Arc<ProgramCache>,
+    executor: Executor,
+    stats: Arc<Stats>,
+}
+
+struct Bucket {
+    /// Batch size this bucket's module is fixed to.
+    size: usize,
+    module: Module,
+    /// Memo of the cache-resolved program: after first use, a batch of
+    /// this shape is pure dispatch — no cache lock, no structural-hash
+    /// lookup, no hit verification.
+    resolved: std::sync::OnceLock<crate::eval::Compiled>,
+}
+
+impl RelayBackend {
+    /// Build the per-bucket modules and fail fast by compiling the
+    /// smallest bucket, so a backend regression surfaces before serving.
+    pub fn new(
+        max_batch: usize,
+        executor: Executor,
+        cache: Arc<ProgramCache>,
+        stats: Arc<Stats>,
+    ) -> Result<RelayBackend> {
+        let buckets: Vec<Bucket> = bucket_sizes(max_batch.max(1))
+            .into_iter()
+            .map(|size| Bucket {
+                size,
+                module: fallback_module(size),
+                resolved: std::sync::OnceLock::new(),
+            })
+            .collect();
+        let backend = RelayBackend { buckets, cache, executor, stats };
+        backend.compiled_bucket(0)?;
+        Ok(backend)
+    }
+
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Resolve one bucket: per-bucket memo first, then the shared cache —
+    /// counting a fleet-wide compile only when this call performed it.
+    /// Two workers racing on a cold bucket both reach the cache, which
+    /// coalesces them into one compile; the memo keeps every later batch
+    /// off the cache lock entirely.
+    fn compiled_bucket(&self, bi: usize) -> Result<crate::eval::Compiled> {
+        let bucket = &self.buckets[bi];
+        if let Some(compiled) = bucket.resolved.get() {
+            return Ok(compiled.clone());
+        }
+        let (compiled, compiled_now) = self
+            .cache
+            .get_or_compile_traced(&bucket.module, self.executor)
+            .map_err(|e| anyhow!("{e}"))?;
+        if compiled_now {
+            self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = bucket.resolved.set(compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Execute one batch of feature rows; returns one prediction per row.
+    /// The batch must fit the largest bucket (`serve`'s workers cap their
+    /// batches at `max_batch`, so this only trips for external callers).
+    pub fn run_batch(&self, rows: &[&[f32]]) -> Result<Vec<i64>> {
+        let cap = self.buckets.last().map_or(0, |b| b.size);
+        if rows.len() > cap {
+            return Err(anyhow!(
+                "batch of {} rows exceeds the largest bucket ({cap})",
+                rows.len()
+            ));
+        }
+        let bi = self
+            .buckets
+            .iter()
+            .position(|b| b.size >= rows.len())
+            .unwrap_or(self.buckets.len() - 1);
+        let compiled = self.compiled_bucket(bi)?;
+        let bucket = &self.buckets[bi];
+        let x = pad_rows(rows, bucket.size, FALLBACK_FEAT);
+        let out = run_compiled(&compiled, &bucket.module, vec![Value::Tensor(x)])
+            .map_err(|e| anyhow!("{e}"))?;
+        let preds = crate::tensor::argmax(out.value.tensor(), 1);
+        let preds = preds.as_i64();
+        Ok(preds[..rows.len().min(preds.len())].to_vec())
+    }
+}
+
+/// One batcher worker: drain a batch from the shared queue (the lock is
+/// held only while collecting; execution overlaps across workers), run the
+/// backend, fan replies out.
+fn worker_loop(
+    worker: usize,
+    rx: &Mutex<Receiver<Request>>,
+    stop: &AtomicBool,
+    stats: &Stats,
+    max_batch: usize,
+    timeout: Duration,
+    mut exec: impl FnMut(&[&[f32]]) -> Result<Vec<i64>>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let batch = {
+            let queue = crate::eval::value::lock_unpoisoned(rx);
+            let first = match queue.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + timeout;
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match queue.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+            batch
+        };
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
+        stats.per_worker[worker].fetch_add(batch.len(), Ordering::Relaxed);
+        let rows: Vec<&[f32]> = batch.iter().map(|r| r.features.as_slice()).collect();
+        let reply: Vec<String> = match exec(&rows) {
+            Ok(preds) => (0..batch.len())
+                .map(|i| match preds.get(i) {
+                    Some(p) => format!("{p}"),
+                    None => "error: missing prediction".to_string(),
+                })
+                .collect(),
+            Err(e) => batch.iter().map(|_| format!("error: {e}")).collect(),
+        };
+        for (r, out) in batch.into_iter().zip(reply) {
+            let _ = r.respond.send(out);
+        }
+    }
+}
+
+/// PJRT executor over the AOT artifact (single-threaded: the xla crate
+/// wraps raw pointers in `Rc`, so the handles must stay on one thread).
+type ExecFn = Box<dyn FnMut(&[&[f32]]) -> Result<Vec<i64>>>;
+
+fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
+    let rt = Runtime::cpu()?;
+    let manifest = crate::runtime::manifest::load(&artifact_dir.join("manifest.json"))
+        .map_err(|e| anyhow!("{e}"))?;
+    let entry = manifest
+        .get("mlp_forward")
+        .ok_or_else(|| anyhow!("mlp_forward not in manifest"))?
+        .clone();
+    let exe = rt.load_artifact(&artifact_dir.join("mlp_forward.hlo.txt"))?;
+    let x_spec = entry
+        .inputs
+        .last()
+        .ok_or_else(|| {
+            anyhow!(
+                "manifest entry mlp_forward has an empty inputs list \
+                 (expected [weights..., x])"
+            )
+        })?
+        .clone();
+    if x_spec.shape.len() < 2 {
+        return Err(anyhow!(
+            "mlp_forward input spec must be (batch, feat), got {:?}",
+            x_spec.shape
+        ));
+    }
+    let (batch_cap, feat) = (x_spec.shape[0], x_spec.shape[1]);
+    // Deterministic weights (a real deployment would load trained
+    // parameters; see examples/train_mlp.rs). One RNG across all weights:
+    // re-seeding per tensor would hand every weight the same value stream.
+    let mut rng = crate::tensor::Rng::new(17);
+    let weights: Vec<Tensor> = entry.inputs[..entry.inputs.len() - 1]
+        .iter()
+        .map(|s| rng.normal_tensor(&s.shape, 0.1))
+        .collect();
+    let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
+        let x = pad_rows(rows, batch_cap, feat);
+        let mut inputs = weights.clone();
+        inputs.push(x);
+        let outs = rt.execute(&exe, &inputs)?;
+        Ok(crate::tensor::argmax(&outs[0], 1).as_i64().to_vec())
     });
+    Ok((batch_cap, f))
+}
+
+/// Serve the `mlp_forward` artifact. Blocks; set `stop` to shut down.
+pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
+    let pjrt = artifacts_available(&cfg.artifact_dir);
+    let workers = if pjrt { 1 } else { cfg.workers.max(1) };
+    let stats = Arc::new(Stats::new(workers));
 
     let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
-    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let rx = Arc::new(Mutex::new(rx));
 
-    // Batcher thread (owns the PJRT client + executable).
-    {
-        let stats = stats.clone();
-        let stop = stop.clone();
+    if pjrt {
+        // Single batcher thread owning the !Send PJRT client + executable;
+        // setup happens inside the thread, readiness reported back.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let stats_w = stats.clone();
+        let stop_w = stop.clone();
+        let rx_w = rx.clone();
         let artifact_dir = cfg.artifact_dir.clone();
         let max_batch = cfg.max_batch;
         let timeout = cfg.batch_timeout;
-        let executor = cfg.executor;
         std::thread::spawn(move || {
-            // Backend setup: PJRT over the AOT artifact when present,
-            // otherwise a compiled-relay MLP compiled through the shared
-            // executor-selection + program-cache chain ([`crate::eval`]).
-            // Each backend consumes the raw feature rows of a batch and
-            // returns one prediction per row (padding is backend-specific:
-            // PJRT pads to the artifact's fixed batch, the relay backend
-            // pads to the nearest bucket).
-            type ExecFn = Box<dyn FnMut(&[&[f32]]) -> Result<Vec<i64>>>;
-            let setup = (|| -> Result<(usize, ExecFn)> {
-                if artifacts_available(&artifact_dir) {
-                    let rt = Runtime::cpu()?;
-                    let manifest =
-                        crate::runtime::manifest::load(&artifact_dir.join("manifest.json"))
-                            .map_err(|e| anyhow!("{e}"))?;
-                    let entry = manifest
-                        .get("mlp_forward")
-                        .ok_or_else(|| anyhow!("mlp_forward not in manifest"))?
-                        .clone();
-                    let exe = rt.load_artifact(&artifact_dir.join("mlp_forward.hlo.txt"))?;
-                    let x_spec = entry
-                        .inputs
-                        .last()
-                        .ok_or_else(|| {
-                            anyhow!(
-                                "manifest entry mlp_forward has an empty inputs \
-                                 list (expected [weights..., x])"
-                            )
-                        })?
-                        .clone();
-                    if x_spec.shape.len() < 2 {
-                        return Err(anyhow!(
-                            "mlp_forward input spec must be (batch, feat), got {:?}",
-                            x_spec.shape
-                        ));
-                    }
-                    let (batch_cap, feat) = (x_spec.shape[0], x_spec.shape[1]);
-                    // Deterministic weights (a real deployment would load
-                    // trained parameters; see examples/train_mlp.rs). One
-                    // RNG across all weights: re-seeding inside the closure
-                    // would hand every tensor the same value stream.
-                    let mut rng = crate::tensor::Rng::new(17);
-                    let weights: Vec<Tensor> = entry.inputs[..entry.inputs.len() - 1]
-                        .iter()
-                        .map(|s| rng.normal_tensor(&s.shape, 0.1))
-                        .collect();
-                    let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
-                        let x = pad_rows(rows, batch_cap, feat);
-                        let mut inputs = weights.clone();
-                        inputs.push(x);
-                        let outs = rt.execute(&exe, &inputs)?;
-                        Ok(crate::tensor::argmax(&outs[0], 1).as_i64().to_vec())
-                    });
-                    Ok((batch_cap, f))
-                } else {
-                    let batch_cap = max_batch.max(1);
-                    // One module per batch bucket, all sharing one program
-                    // cache: a bucket compiles on first use, then every
-                    // batch of that shape is pure dispatch. This is the
-                    // same selection+cache chain `run_auto` uses — the
-                    // server no longer hand-rolls its own backend enum.
-                    let cache = ProgramCache::new();
-                    let modules: Vec<(usize, Module)> = bucket_sizes(batch_cap)
-                        .into_iter()
-                        .map(|b| (b, fallback_module(b)))
-                        .collect();
-                    // Fail fast at startup: compile the smallest bucket so
-                    // a backend regression surfaces before serving.
-                    cache
-                        .get_or_compile(&modules[0].1, executor)
-                        .map_err(|e| anyhow!("{e}"))?;
-                    let stats = stats.clone();
-                    // Per-bucket memo of the resolved program: the cache
-                    // lookup (hash + structural verify) runs once per
-                    // bucket; every later batch of that shape is pure
-                    // dispatch on the compiled artifact.
-                    let mut resolved: Vec<Option<Compiled>> = vec![None; modules.len()];
-                    let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
-                        let bi = modules
-                            .iter()
-                            .position(|(b, _)| *b >= rows.len())
-                            .unwrap_or(modules.len() - 1);
-                        let (bucket, module) = &modules[bi];
-                        if resolved[bi].is_none() {
-                            resolved[bi] = Some(
-                                cache
-                                    .get_or_compile(module, executor)
-                                    .map_err(|e| anyhow!("{e}"))?,
-                            );
-                            stats.compiles.store(cache.misses(), Ordering::Relaxed);
-                        }
-                        let compiled =
-                            resolved[bi].as_ref().expect("bucket resolved above");
-                        let x = pad_rows(rows, *bucket, FALLBACK_FEAT);
-                        let out =
-                            run_compiled(compiled, module, vec![Value::Tensor(x)])
-                                .map_err(|e| anyhow!("{e}"))?;
-                        Ok(crate::tensor::argmax(out.value.tensor(), 1).as_i64().to_vec())
-                    });
-                    Ok((batch_cap, f))
-                }
-            })();
-            let (batch_cap, mut exec_fn) = match setup {
+            let (batch_cap, exec_fn) = match pjrt_exec_fn(&artifact_dir) {
                 Ok(x) => {
                     let _ = ready_tx.send(Ok(()));
                     x
@@ -256,44 +374,36 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                 }
             };
             let cfg_batch = max_batch.min(batch_cap).max(1);
-            while !stop.load(Ordering::Relaxed) {
-                let first = match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(r) => r,
-                    Err(_) => continue,
-                };
-                let mut batch = vec![first];
-                let deadline = Instant::now() + timeout;
-                while batch.len() < cfg_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => batch.push(r),
-                        Err(_) => break,
-                    }
-                }
-                stats.batches.fetch_add(1, Ordering::Relaxed);
-                stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
-                let rows: Vec<&[f32]> =
-                    batch.iter().map(|r| r.features.as_slice()).collect();
-                let reply: Vec<String> = match exec_fn(&rows) {
-                    Ok(preds) => {
-                        (0..batch.len()).map(|i| format!("{}", preds[i])).collect()
-                    }
-                    Err(e) => batch.iter().map(|_| format!("error: {e}")).collect(),
-                };
-                for (r, out) in batch.into_iter().zip(reply) {
-                    let _ = r.respond.send(out);
-                }
-            }
+            worker_loop(0, &rx_w, &stop_w, &stats_w, cfg_batch, timeout, exec_fn);
         });
+        ready_rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|_| anyhow!("executor thread did not start"))??;
+    } else {
+        // Compiled-relay fleet: one shared backend (one shared program
+        // cache), N workers. Backend construction fails fast here, on the
+        // caller's thread, before any socket is bound.
+        let cache = Arc::new(ProgramCache::new());
+        let backend = Arc::new(RelayBackend::new(
+            cfg.max_batch,
+            cfg.executor,
+            cache,
+            stats.clone(),
+        )?);
+        let cfg_batch = cfg.max_batch.max(1);
+        let timeout = cfg.batch_timeout;
+        for worker in 0..workers {
+            let backend = backend.clone();
+            let stats_w = stats.clone();
+            let stop_w = stop.clone();
+            let rx_w = rx.clone();
+            std::thread::spawn(move || {
+                worker_loop(worker, &rx_w, &stop_w, &stats_w, cfg_batch, timeout, |rows| {
+                    backend.run_batch(rows)
+                });
+            });
+        }
     }
-
-    // Wait for the executor to be ready (or fail fast).
-    ready_rx
-        .recv_timeout(Duration::from_secs(60))
-        .map_err(|_| anyhow!("executor thread did not start"))??;
 
     // Accept loop.
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
@@ -426,6 +536,89 @@ mod tests {
         // batch-1 bucket compiled: 4 requests, exactly 1 compile — the
         // compile-once serving property of the program cache.
         assert_eq!(stats.compiles.load(Ordering::Relaxed), 1);
+        // Every served request was attributed to some worker.
+        let per_worker: usize = stats
+            .per_worker
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(per_worker, stats.requests.load(Ordering::Relaxed));
         stop.store(true, Ordering::Relaxed);
+    }
+
+    /// The acceptance bar for the Arc migration: a 4-thread fleet over one
+    /// shared backend/cache compiles each batch bucket exactly once for
+    /// the whole process, no matter how the threads interleave.
+    #[test]
+    fn four_thread_fleet_compiles_each_bucket_exactly_once() {
+        let cache = Arc::new(ProgramCache::new());
+        let stats = Arc::new(Stats::new(4));
+        let backend = Arc::new(
+            RelayBackend::new(8, Executor::Vm, cache.clone(), stats.clone())
+                .expect("backend"),
+        );
+        let buckets = backend.bucket_count(); // 1, 2, 4, 8
+        assert_eq!(buckets, 4);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let backend = backend.clone();
+                s.spawn(move || {
+                    for round in 0..3usize {
+                        for n in [1usize, 2, 3, 5, 8] {
+                            let rows_data: Vec<Vec<f32>> = (0..n)
+                                .map(|i| {
+                                    (0..FALLBACK_FEAT)
+                                        .map(|j| {
+                                            ((t + round + i * 7 + j) % 5) as f32 - 2.0
+                                        })
+                                        .collect()
+                                })
+                                .collect();
+                            let rows: Vec<&[f32]> =
+                                rows_data.iter().map(|r| r.as_slice()).collect();
+                            let preds = backend.run_batch(&rows).expect("run_batch");
+                            assert_eq!(preds.len(), n, "one prediction per row");
+                            for p in preds {
+                                assert!(
+                                    (0..FALLBACK_CLASSES as i64).contains(&p),
+                                    "pred {p}"
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        // 4 threads x 3 rounds x every bucket shape: still exactly one
+        // compile per bucket, fleet-wide.
+        assert_eq!(stats.compiles.load(Ordering::Relaxed), buckets);
+        assert_eq!(cache.misses(), buckets);
+        assert_eq!(cache.len(), buckets);
+    }
+
+    #[test]
+    fn batches_larger_than_a_bucket_pad_up_and_results_match_batch_one() {
+        // A 3-row batch runs the bucket-4 program; each row's prediction
+        // must equal the prediction the batch-1 program gives that row
+        // alone (padding rows cannot leak into real rows).
+        let cache = Arc::new(ProgramCache::new());
+        let stats = Arc::new(Stats::new(1));
+        let backend =
+            RelayBackend::new(4, Executor::Vm, cache, stats).expect("backend");
+        let rows_data: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                (0..FALLBACK_FEAT)
+                    .map(|j| ((i * 11 + j * 3) % 7) as f32 - 3.0)
+                    .collect()
+            })
+            .collect();
+        let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let batched = backend.run_batch(&rows).expect("batched");
+        assert_eq!(batched.len(), 3);
+        for (i, row) in rows.iter().enumerate() {
+            let solo = backend.run_batch(&[row]).expect("solo");
+            assert_eq!(solo.len(), 1);
+            assert_eq!(batched[i], solo[0], "row {i} diverged under padding");
+        }
     }
 }

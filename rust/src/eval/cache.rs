@@ -12,26 +12,39 @@
 //! ([`crate::ir::modules_structurally_eq`]), so a 64-bit hash collision can
 //! never route a module to the wrong artifact — it just recompiles.
 //!
-//! Compiled programs hold `Rc`-backed values (not `Send`), so a cache is a
-//! single-thread object: each thread gets its own default cache
-//! ([`with_default_cache`]), and long-lived loops like the serving batcher
-//! own an explicit instance.
+//! # Thread safety
+//!
+//! Compiled programs are `Arc`-backed `Send + Sync` values, so one cache
+//! serves the whole process: [`default_cache`] is a process-wide instance
+//! shared by [`super::run_with`] / [`super::run_auto`] on every thread, and
+//! serving fleets (`coordinator::server`) share one explicit instance
+//! across all workers. Lookup takes a short lock (O(1) clones only);
+//! **hit verification and compilation both run outside the critical
+//! section**, with an in-flight key set so two threads racing on the same
+//! miss compile at most once (the loser waits on a condvar and is served
+//! the winner's artifact).
+//!
+//! # Eviction
+//!
+//! Entries are evicted least-recently-used, bounded both by entry count
+//! and by resident constant-pool bytes ([`ProgramCache::with_limits`]), so
+//! a mixed fleet with a few giant-weight models and many small ones keeps
+//! its hot set resident instead of cycling FIFO-style.
 
-use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
-use std::collections::VecDeque;
-use std::rc::Rc;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
-use super::{env_empty, Execution, Executor, Interp, Value};
+use super::{env_empty, Execution, Executor, Interp, LaunchCounter, Value};
 use crate::ir::{self, Module};
 
 /// What executor-selection resolved a module to, compiled and ready to run.
 #[derive(Clone)]
 pub enum Compiled {
     /// First-order, control-flow-free: the graph runtime.
-    Graph(Rc<crate::graphrt::GraphRt>),
+    Graph(Arc<crate::graphrt::GraphRt>),
     /// Everything else the VM compiles (closures, ADTs, recursion).
-    Vm(Rc<crate::vm::Program>),
+    Vm(Arc<crate::vm::Program>),
     /// Neither compiled (exotic input under `Auto`): tree-walk per call.
     Interp,
 }
@@ -45,57 +58,141 @@ impl Compiled {
             Compiled::Interp => "interp",
         }
     }
+
+    /// Tensor bytes this artifact keeps resident in its constant pool —
+    /// the metric behind the cache's byte-budgeted eviction.
+    pub fn const_bytes(&self) -> usize {
+        match self {
+            Compiled::Graph(g) => g.const_bytes(),
+            Compiled::Vm(p) => p.const_bytes(),
+            Compiled::Interp => 0,
+        }
+    }
 }
+
+type Key = (u64, &'static str);
 
 struct Entry {
-    /// Snapshot of the source module, for exact hit verification.
-    module: Module,
+    /// Snapshot of the source module, for exact hit verification. `Arc`
+    /// so the hit path can take an O(1) clone under the lock and run the
+    /// deep structural comparison *after* releasing it.
+    module: Arc<Module>,
     compiled: Compiled,
+    /// Cached [`Compiled::const_bytes`] of this entry.
+    bytes: usize,
+    /// Recency stamp (monotonic per cache) for LRU eviction.
+    last_used: u64,
 }
 
-/// Bound on resident entries; eviction is FIFO (oldest compile first).
-const CACHE_CAP: usize = 128;
+/// Mutable cache state, all behind one lock: the resident entries, the
+/// keys currently being compiled by some thread, and the LRU clock.
+struct CacheState {
+    entries: HashMap<Key, Entry>,
+    in_flight: HashSet<Key>,
+    total_bytes: usize,
+    tick: u64,
+}
+
+/// Default bound on resident entries.
+pub const DEFAULT_MAX_ENTRIES: usize = 128;
+/// Default bound on resident constant-pool bytes (256 MiB).
+pub const DEFAULT_MAX_BYTES: usize = 256 << 20;
 
 /// A bounded map from (module structural hash, requested executor) to a
-/// compiled program, with hit/miss counters. One miss == one compile.
-#[derive(Default)]
+/// compiled program, with hit/miss counters. One miss == one compile,
+/// process-wide: concurrent misses on the same key are coalesced.
 pub struct ProgramCache {
-    entries: RefCell<HashMap<(u64, &'static str), Entry>>,
-    order: RefCell<VecDeque<(u64, &'static str)>>,
-    hits: Cell<usize>,
-    misses: Cell<usize>,
+    state: Mutex<CacheState>,
+    /// Signalled whenever an in-flight compile finishes (success or not).
+    compiled: Condvar,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    max_entries: usize,
+    max_bytes: usize,
+}
+
+impl Default for ProgramCache {
+    fn default() -> ProgramCache {
+        ProgramCache::new()
+    }
+}
+
+/// Removes `key` from the in-flight set (and wakes waiters) when dropped,
+/// so a compile that errors — or panics — can never strand other threads
+/// waiting on the condvar.
+struct InFlightGuard<'a> {
+    cache: &'a ProgramCache,
+    key: Key,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.cache.lock_state();
+        st.in_flight.remove(&self.key);
+        drop(st);
+        self.cache.compiled.notify_all();
+    }
 }
 
 impl ProgramCache {
     pub fn new() -> ProgramCache {
-        ProgramCache::default()
+        ProgramCache::with_limits(DEFAULT_MAX_ENTRIES, DEFAULT_MAX_BYTES)
+    }
+
+    /// A cache bounded by `max_entries` resident programs and `max_bytes`
+    /// of resident constant-pool tensor data (whichever trips first).
+    pub fn with_limits(max_entries: usize, max_bytes: usize) -> ProgramCache {
+        ProgramCache {
+            state: Mutex::new(CacheState {
+                entries: HashMap::new(),
+                in_flight: HashSet::new(),
+                total_bytes: 0,
+                tick: 0,
+            }),
+            compiled: Condvar::new(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            max_entries: max_entries.max(1),
+            max_bytes,
+        }
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, CacheState> {
+        super::value::lock_unpoisoned(&self.state)
     }
 
     /// Cache hits so far (calls served without compiling).
     pub fn hits(&self) -> usize {
-        self.hits.get()
+        self.hits.load(Ordering::Relaxed)
     }
 
     /// Cache misses so far — equivalently, the number of compiles.
     pub fn misses(&self) -> usize {
-        self.misses.get()
+        self.misses.load(Ordering::Relaxed)
     }
 
     /// Resident compiled programs.
     pub fn len(&self) -> usize {
-        self.entries.borrow().len()
+        self.lock_state().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.borrow().is_empty()
+        self.len() == 0
+    }
+
+    /// Resident constant-pool bytes across all entries.
+    pub fn resident_bytes(&self) -> usize {
+        self.lock_state().total_bytes
     }
 
     /// Drop all entries and reset the counters.
     pub fn clear(&self) {
-        self.entries.borrow_mut().clear();
-        self.order.borrow_mut().clear();
-        self.hits.set(0);
-        self.misses.set(0);
+        let mut st = self.lock_state();
+        st.entries.clear();
+        st.total_bytes = 0;
+        drop(st);
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
     }
 
     /// Look up (or compile and insert) the program for `module` under the
@@ -106,38 +203,121 @@ impl ProgramCache {
         module: &Module,
         executor: Executor,
     ) -> Result<Compiled, String> {
+        self.get_or_compile_traced(module, executor).map(|(c, _)| c)
+    }
+
+    /// [`Self::get_or_compile`], also reporting whether *this* call
+    /// performed the compile (`true`) or was served a resident/raced
+    /// artifact (`false`). Callers that track their own compiles-per-
+    /// lifetime invariant (the serving fleet's `Stats::compiles`) use this
+    /// instead of diffing the global hit/miss counters, which other cache
+    /// users may be bumping concurrently.
+    pub fn get_or_compile_traced(
+        &self,
+        module: &Module,
+        executor: Executor,
+    ) -> Result<(Compiled, bool), String> {
         if executor == Executor::Interp {
-            return Ok(Compiled::Interp);
+            return Ok((Compiled::Interp, false));
         }
-        let key = (ir::module_structural_hash(module), executor.name());
-        if let Some(entry) = self.entries.borrow().get(&key) {
-            if ir::modules_structurally_eq(&entry.module, module) {
-                self.hits.set(self.hits.get() + 1);
-                return Ok(entry.compiled.clone());
+        let key: Key = (ir::module_structural_hash(module), executor.name());
+
+        // Phase 1, under the lock: find a candidate entry (O(1) clones
+        // only) or claim the key for compilation. The deep structural
+        // verification and the compile itself both run outside the
+        // critical section, so hits on large modules don't serialize the
+        // whole process.
+        let candidate = {
+            let mut guard = self.lock_state();
+            loop {
+                let st: &mut CacheState = &mut guard;
+                let tick = st.tick;
+                if let Some(entry) = st.entries.get_mut(&key) {
+                    entry.last_used = tick;
+                    st.tick = tick + 1;
+                    break Some((entry.module.clone(), entry.compiled.clone()));
+                }
+                if st.in_flight.contains(&key) {
+                    // Another thread is compiling this module right now:
+                    // wait for it and re-check instead of compiling twice.
+                    guard = self
+                        .compiled
+                        .wait(guard)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner());
+                    continue;
+                }
+                st.in_flight.insert(key);
+                break None;
             }
-        }
-        self.misses.set(self.misses.get() + 1);
+        };
+        let coordinated = match candidate {
+            Some((snapshot, compiled)) => {
+                if ir::modules_structurally_eq(&snapshot, module) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((compiled, false));
+                }
+                // Verified hash collision: compile without claiming the
+                // key (the resident entry stays until we replace it, and
+                // coordinating would hand waiters the wrong module's
+                // artifact anyway).
+                false
+            }
+            None => true,
+        };
+
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let _inflight = coordinated.then(|| InFlightGuard { cache: self, key });
+        // The compile itself runs outside the lock: other keys hit and
+        // miss freely while this one builds.
         let compiled = compile_for(module, executor)?;
-        let mut entries = self.entries.borrow_mut();
-        let mut order = self.order.borrow_mut();
-        while entries.len() >= CACHE_CAP {
-            match order.pop_front() {
-                Some(old) => {
-                    entries.remove(&old);
+        let bytes = compiled.const_bytes();
+
+        let mut guard = self.lock_state();
+        let st: &mut CacheState = &mut guard;
+        let tick = st.tick;
+        st.tick = tick + 1;
+        if let Some(old) = st.entries.remove(&key) {
+            st.total_bytes -= old.bytes;
+        }
+        st.total_bytes += bytes;
+        st.entries.insert(
+            key,
+            Entry {
+                module: Arc::new(module.clone()),
+                compiled: compiled.clone(),
+                bytes,
+                last_used: tick,
+            },
+        );
+        self.evict_over_budget(st);
+        drop(guard);
+        // _inflight drops here: key leaves the in-flight set, waiters wake
+        // and find the entry resident.
+        Ok((compiled, true))
+    }
+
+    /// Evict least-recently-used entries until both the entry-count and
+    /// byte budgets hold. Never evicts the last entry: a single program
+    /// larger than the byte budget still serves (nothing else is resident
+    /// to make room for).
+    fn evict_over_budget(&self, st: &mut CacheState) {
+        while st.entries.len() > 1
+            && (st.entries.len() > self.max_entries || st.total_bytes > self.max_bytes)
+        {
+            let oldest = st
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    if let Some(e) = st.entries.remove(&k) {
+                        st.total_bytes -= e.bytes;
+                    }
                 }
                 None => break,
             }
         }
-        // A replaced entry (hash collision verified unequal) keeps its
-        // original queue position — pushing again would grow `order`
-        // without bound under alternating colliding modules.
-        if entries
-            .insert(key, Entry { module: module.clone(), compiled: compiled.clone() })
-            .is_none()
-        {
-            order.push_back(key);
-        }
-        Ok(compiled)
     }
 }
 
@@ -151,21 +331,21 @@ fn compile_for(module: &Module, executor: Executor) -> Result<Compiled, String> 
             let anfed = crate::pass::anf::run(module);
             let main = anfed.def("main").ok_or("no @main in module")?;
             let g = crate::graphrt::GraphRt::compile(main).map_err(|e| e.to_string())?;
-            Ok(Compiled::Graph(Rc::new(g)))
+            Ok(Compiled::Graph(Arc::new(g)))
         }
         Executor::Vm => {
             let program = crate::vm::compile(module).map_err(|e| e.to_string())?;
-            Ok(Compiled::Vm(Rc::new(program)))
+            Ok(Compiled::Vm(Arc::new(program)))
         }
         Executor::Auto => {
             let anfed = crate::pass::anf::run(module);
             if let Some(main) = anfed.def("main") {
                 if let Ok(g) = crate::graphrt::GraphRt::compile(main) {
-                    return Ok(Compiled::Graph(Rc::new(g)));
+                    return Ok(Compiled::Graph(Arc::new(g)));
                 }
             }
             match crate::vm::compile_normalized(&anfed) {
-                Ok(program) => Ok(Compiled::Vm(Rc::new(program))),
+                Ok(program) => Ok(Compiled::Vm(Arc::new(program))),
                 // The VM compiles everything the interpreter runs; the
                 // fallback is belt-and-braces for exotic inputs.
                 Err(_) => Ok(Compiled::Interp),
@@ -176,6 +356,10 @@ fn compile_for(module: &Module, executor: Executor) -> Result<Compiled, String> 
 
 /// Run `@main(args...)` on an already-compiled program. `module` is only
 /// consulted on the interpreter tier (which has no compiled artifact).
+///
+/// Launch counts are per-call: a cached artifact may be executing on
+/// several threads at once, so each call counts on its own
+/// [`LaunchCounter`] instead of diffing a counter shared across threads.
 pub fn run_compiled(
     compiled: &Compiled,
     module: &Module,
@@ -183,15 +367,9 @@ pub fn run_compiled(
 ) -> Result<Execution, String> {
     match compiled {
         Compiled::Graph(g) => {
-            // The cached runtime's launch counter accumulates across
-            // calls; report the per-call delta.
-            let before = g.launches.get();
-            let value = g.run(&args)?;
-            Ok(Execution {
-                value,
-                executor: "graphrt",
-                launches: g.launches.get() - before,
-            })
+            let launches = LaunchCounter::new();
+            let value = g.run_counted(&args, &launches)?;
+            Ok(Execution { value, executor: "graphrt", launches: launches.get() })
         }
         Compiled::Vm(p) => {
             let vm = crate::vm::Vm::new(p);
@@ -211,14 +389,19 @@ pub fn run_compiled(
     }
 }
 
-thread_local! {
-    static DEFAULT_CACHE: ProgramCache = ProgramCache::new();
+static DEFAULT_CACHE: OnceLock<ProgramCache> = OnceLock::new();
+
+/// The process-wide default program cache (what [`super::run_with`] and
+/// [`super::run_auto`] compile into, from every thread).
+pub fn default_cache() -> &'static ProgramCache {
+    DEFAULT_CACHE.get_or_init(ProgramCache::new)
 }
 
-/// Access this thread's default program cache (what [`super::run_with`] and
-/// [`super::run_auto`] compile into).
+/// Access the process-wide default program cache. Retained for callers
+/// written against the old per-thread API; new code can use
+/// [`default_cache`] directly.
 pub fn with_default_cache<R>(f: impl FnOnce(&ProgramCache) -> R) -> R {
-    DEFAULT_CACHE.with(f)
+    f(default_cache())
 }
 
 #[cfg(test)]
@@ -279,7 +462,7 @@ mod tests {
         assert_eq!(cache.hits(), 1);
         assert!(cold.value.bits_eq(&warm.value), "cache hit changed the result");
         assert_eq!(cold.executor, warm.executor);
-        // Per-call launch deltas, not the shared counter's running total.
+        // Per-call launch counters, not a shared counter's running total.
         assert_eq!(cold.launches, warm.launches);
     }
 
@@ -327,5 +510,115 @@ mod tests {
         assert_eq!(cache.misses(), 0);
         run_with_cache(&m, Executor::Auto, tensor_arg(0.0), &cache).unwrap();
         assert_eq!(cache.misses(), 1);
+    }
+
+    fn distinct_module(i: usize) -> Module {
+        // Constants participate in the structural hash, so each of these
+        // is a distinct cache key.
+        parse_module(&format!(
+            "def @main(%x: Tensor[(), float32]) {{ add(%x, {i}f) }}"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn lru_keeps_a_hot_entry_across_200_distinct_module_insertions() {
+        // Regression for the FIFO eviction of PR 2: a hot entry touched
+        // between insertions must survive arbitrary distinct-module
+        // pressure (FIFO evicted it as soon as 128 newer compiles landed).
+        let cache = ProgramCache::new();
+        let hot =
+            parse_module("def @main(%x: Tensor[(), float32]) { add(%x, 424242f) }").unwrap();
+        run_with_cache(&hot, Executor::Auto, tensor_arg(1.0), &cache).unwrap();
+        for i in 0..200 {
+            run_with_cache(&distinct_module(i), Executor::Auto, tensor_arg(0.0), &cache)
+                .unwrap();
+            // Touch the hot entry so LRU keeps it resident.
+            let (_, compiled_now) =
+                cache.get_or_compile_traced(&hot, Executor::Auto).unwrap();
+            assert!(!compiled_now, "hot entry evicted after {i} distinct insertions");
+        }
+        assert!(
+            cache.len() <= DEFAULT_MAX_ENTRIES,
+            "entry budget not enforced: {} resident",
+            cache.len()
+        );
+    }
+
+    #[test]
+    fn cold_entries_are_evicted_lru_first() {
+        let cache = ProgramCache::with_limits(4, usize::MAX);
+        let a = distinct_module(9000);
+        let b = distinct_module(9001);
+        cache.get_or_compile(&a, Executor::Auto).unwrap();
+        cache.get_or_compile(&b, Executor::Auto).unwrap();
+        // Refresh `a`, then insert three more: `b` is now the LRU victim.
+        cache.get_or_compile(&a, Executor::Auto).unwrap();
+        for i in 9002..9005 {
+            cache.get_or_compile(&distinct_module(i), Executor::Auto).unwrap();
+        }
+        assert_eq!(cache.len(), 4);
+        let (_, a_compiled) = cache.get_or_compile_traced(&a, Executor::Auto).unwrap();
+        assert!(!a_compiled, "recently-used entry was evicted");
+        let (_, b_compiled) = cache.get_or_compile_traced(&b, Executor::Auto).unwrap();
+        assert!(b_compiled, "least-recently-used entry survived eviction");
+    }
+
+    #[test]
+    fn byte_budget_evicts_by_resident_constant_bytes() {
+        // Modules whose constant pools are ~4KiB each (a 32x32 f32 weight).
+        let weighted = |seed: u64| -> Module {
+            let mut w = crate::zoo::Weights::new(seed);
+            let x = crate::ir::Var::fresh("x");
+            let body = crate::ir::op_call(
+                "nn.dense",
+                vec![crate::ir::var(&x), w.he(&[32, 32])],
+            );
+            let mut m = Module::with_prelude();
+            let ty = crate::ir::Type::tensor(vec![1, 32], crate::tensor::DType::F32);
+            m.add_def("main", crate::ir::Function::new(vec![(x, Some(ty))], body));
+            m
+        };
+        // Budget fits two 4KiB pools, not three.
+        let cache = ProgramCache::with_limits(64, 9 << 10);
+        for seed in 0..3 {
+            let c = cache.get_or_compile(&weighted(seed), Executor::Auto).unwrap();
+            assert!(c.const_bytes() >= 4 << 10, "weight not in the constant pool");
+        }
+        assert!(
+            cache.len() < 3,
+            "byte budget did not evict: {} entries / {} bytes resident",
+            cache.len(),
+            cache.resident_bytes()
+        );
+        assert!(cache.resident_bytes() <= 9 << 10);
+    }
+
+    #[test]
+    fn racing_threads_on_one_module_compile_exactly_once() {
+        let cache = ProgramCache::new();
+        let m = parse_module(CF_SRC).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let cache = &cache;
+                let m = &m;
+                s.spawn(move || {
+                    let out = run_with_cache(
+                        m,
+                        Executor::Auto,
+                        tensor_arg(-(t as f32) - 1.0),
+                        cache,
+                    )
+                    .unwrap();
+                    assert_eq!(out.value.tensor().f32_value(), t as f32 + 1.0);
+                });
+            }
+        });
+        assert_eq!(
+            cache.misses(),
+            1,
+            "racing threads compiled the same module more than once"
+        );
+        assert_eq!(cache.hits(), 7);
     }
 }

@@ -6,10 +6,9 @@
 //! run framework" baseline in Fig 11/12 (an unfused, interpreted execution
 //! mode, architecturally equivalent to eager frameworks).
 
-use std::cell::{Cell, RefCell};
-use std::rc::Rc;
+use std::cell::Cell;
 
-use super::value::{env_bind, env_empty, env_lookup, Env, Value};
+use super::value::{env_bind, env_empty, env_lookup, lock_ref, Env, Value};
 use super::LaunchCounter;
 use crate::ir::{Expr, Function, Module, Pattern, Var, E};
 use crate::op;
@@ -138,10 +137,10 @@ impl<'m> Interp<'m> {
             }
             Expr::RefNew(v) => {
                 let val = self.eval(v, env)?;
-                Ok(Value::Ref(Rc::new(RefCell::new(val))))
+                Ok(Value::new_ref(val))
             }
             Expr::RefRead(r) => match self.eval(r, env)? {
-                Value::Ref(cell) => Ok(cell.borrow().clone()),
+                Value::Ref(cell) => Ok(lock_ref(&cell).clone()),
                 other => Err(format!("! on non-ref {other:?}")),
             },
             Expr::RefWrite(r, v) => {
@@ -149,7 +148,7 @@ impl<'m> Interp<'m> {
                 let vv = self.eval(v, env)?;
                 match rv {
                     Value::Ref(cell) => {
-                        *cell.borrow_mut() = vv;
+                        *lock_ref(&cell) = vv;
                         Ok(Value::unit())
                     }
                     other => Err(format!(":= on non-ref {other:?}")),

@@ -13,18 +13,29 @@
 //!
 //! [`run_with`] / [`run_auto`] are the single entry point call sites use
 //! (CLI, server, benches, zoo) instead of hand-rolled fallback chains.
-//! Both compile through a per-thread [`ProgramCache`] keyed by the module's
-//! alpha-invariant structural hash, so repeated calls on an unchanged
-//! module compile exactly once ([`cache`] module docs).
+//! Both compile through one process-wide [`ProgramCache`]
+//! ([`default_cache`]) keyed by the module's alpha-invariant structural
+//! hash, so repeated calls on an unchanged module — from *any* thread —
+//! compile exactly once ([`cache`] module docs).
+//!
+//! # Thread safety
+//!
+//! The value domain ([`value::Value`], [`value::Env`]), the shared launch
+//! counter ([`LaunchCounter`]), and compiled programs ([`Compiled`]) are
+//! all `Send + Sync`: values are `Arc`-backed immutable structure (the one
+//! mutable cell, the ML-style reference, is an `Arc<Mutex<..>>`), counters
+//! are atomics, and the cache is a lock around shared state. Executor
+//! *instances* (`Interp`, `vm::Vm`) stay cheap per-call objects — what is
+//! shared across threads is the compiled artifact, not the frame state.
 
 pub mod cache;
 pub mod interp;
 pub mod value;
 
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-pub use cache::{run_compiled, with_default_cache, Compiled, ProgramCache};
+pub use cache::{default_cache, run_compiled, with_default_cache, Compiled, ProgramCache};
 pub use interp::{eval_expr, eval_main, Interp};
 pub use value::{env_bind, env_empty, Env, Value};
 
@@ -40,9 +51,11 @@ use crate::ir::Module;
 /// one launch; this is the fusion-benefit metric of Fig 10–12. All three
 /// executors bump a `LaunchCounter`, and clones share state, so a single
 /// counter can be threaded through an entire pipeline regardless of which
-/// tier executes.
+/// tier executes. `Arc<AtomicUsize>` inside, so clones may live on
+/// different threads (a fleet of serving workers can aggregate into one
+/// counter, or keep per-call counters — see [`cache::run_compiled`]).
 #[derive(Clone, Debug, Default)]
-pub struct LaunchCounter(Rc<Cell<usize>>);
+pub struct LaunchCounter(Arc<AtomicUsize>);
 
 impl LaunchCounter {
     pub fn new() -> LaunchCounter {
@@ -51,15 +64,15 @@ impl LaunchCounter {
 
     /// Record one kernel launch.
     pub fn bump(&self) {
-        self.0.set(self.0.get() + 1);
+        self.0.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> usize {
-        self.0.get()
+        self.0.load(Ordering::Relaxed)
     }
 
     pub fn reset(&self) {
-        self.0.set(0);
+        self.0.store(0, Ordering::Relaxed);
     }
 }
 
@@ -135,8 +148,9 @@ pub fn run_with_cache(
 
 /// Run `@main(args...)` of an (already optimized) module on the chosen
 /// executor. ANF conversion for the graph runtime / VM happens internally,
-/// and the compiled program is cached in this thread's default
-/// [`ProgramCache`] — repeated calls on an unchanged module compile once.
+/// and the compiled program is cached in the process-wide default
+/// [`ProgramCache`] — repeated calls on an unchanged module, from any
+/// thread, compile once.
 pub fn run_with(
     module: &Module,
     executor: Executor,
@@ -213,22 +227,38 @@ mod tests {
     }
 
     #[test]
-    fn run_auto_compiles_once_via_the_thread_default_cache() {
+    fn run_auto_compiles_once_via_the_process_default_cache() {
+        // The default cache is process-wide and other tests exercise it
+        // concurrently, so global hit/miss deltas are not meaningful here;
+        // per-key behavior is. Use a module source unique to this test.
         let m = parse_module(
             "def @main(%x: Tensor[(), float32]) {\n\
-               if (greater(%x, 0f)) { %x } else { negative(%x) }\n\
+               if (greater(%x, 31337f)) { %x } else { negative(%x) }\n\
              }",
         )
         .unwrap();
-        // Tests run one per thread, but be robust to other helpers having
-        // touched this thread's cache: measure deltas.
-        let (h0, m0) = with_default_cache(|c| (c.hits(), c.misses()));
-        for _ in 0..4 {
-            run_auto(&m, tensor_arg(-1.0)).unwrap();
+        let out = run_auto(&m, tensor_arg(-4.0)).unwrap();
+        assert_eq!(out.executor, "vm");
+        assert_eq!(out.value.tensor().f32_value(), 4.0);
+        // The module is now resident in the shared cache: a traced lookup
+        // must report it did not compile again.
+        let (_, compiled_now) =
+            with_default_cache(|c| c.get_or_compile_traced(&m, Executor::Auto)).unwrap();
+        assert!(!compiled_now, "run_auto did not populate the process-wide cache");
+        for _ in 0..3 {
+            let again = run_auto(&m, tensor_arg(-4.0)).unwrap();
+            assert_eq!(again.value.tensor().f32_value(), 4.0);
         }
-        let (h1, m1) = with_default_cache(|c| (c.hits(), c.misses()));
-        assert_eq!(m1 - m0, 1, "4 run_auto calls must compile exactly once");
-        assert_eq!(h1 - h0, 3);
+    }
+
+    #[test]
+    fn shared_runtime_surface_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<LaunchCounter>();
+        assert_send_sync::<Compiled>();
+        assert_send_sync::<ProgramCache>();
+        assert_send_sync::<crate::graphrt::GraphRt>();
+        assert_send_sync::<crate::vm::Program>();
     }
 
     #[test]

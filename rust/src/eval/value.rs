@@ -1,16 +1,26 @@
 //! Runtime values (paper appendix operational semantics): tensors, tuples,
 //! closures, references, ADT instances, and operator/constructor references.
+//!
+//! # Thread safety
+//!
+//! Every value is `Send + Sync` (compile-time asserted in the tests): the
+//! whole domain is built from `Arc`-backed immutable structure — tensors
+//! share storage through `Arc`, environments are persistent `Arc` chains,
+//! IR fragments captured by closures are `Arc<Expr>` trees. The single
+//! mutable runtime object, the ML-style reference cell, is an
+//! `Arc<Mutex<Value>>` ([`Value::new_ref`] / [`lock_ref`]). This is what
+//! lets one process-wide [`super::ProgramCache`] hand the same compiled
+//! artifact (constant pool included) to any number of serving workers.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::ir::{Function, Var, E};
 use crate::tensor::Tensor;
 
-/// Environment mapping vars to values (persistent via Rc chain).
-pub type Env = Rc<EnvNode>;
+/// Environment mapping vars to values (persistent via Arc chain).
+pub type Env = Arc<EnvNode>;
 
 #[derive(Debug)]
 pub enum EnvNode {
@@ -19,11 +29,11 @@ pub enum EnvNode {
 }
 
 pub fn env_empty() -> Env {
-    Rc::new(EnvNode::Empty)
+    Arc::new(EnvNode::Empty)
 }
 
 pub fn env_bind(env: &Env, var: Var, value: Value) -> Env {
-    Rc::new(EnvNode::Bind { var, value, rest: env.clone() })
+    Arc::new(EnvNode::Bind { var, value, rest: env.clone() })
 }
 
 pub fn env_lookup(env: &Env, var: &Var) -> Option<Value> {
@@ -41,6 +51,20 @@ pub fn env_lookup(env: &Env, var: &Var) -> Option<Value> {
     }
 }
 
+/// Lock a mutex, riding through poison. The runtime's shared state (ref
+/// cells, the program cache, the serving queue) is only ever mutated in
+/// whole-value or all-or-nothing steps, so a panic in another thread
+/// cannot leave it in a state later readers would misinterpret.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Lock a reference cell ([`lock_unpoisoned`] specialized to `Value::Ref`
+/// payloads).
+pub fn lock_ref(cell: &Mutex<Value>) -> MutexGuard<'_, Value> {
+    lock_unpoisoned(cell)
+}
+
 #[derive(Clone)]
 pub enum Value {
     Tensor(Tensor),
@@ -52,7 +76,7 @@ pub enum Value {
         /// encoding): applying the closure re-binds `rec` to itself.
         rec: Option<Var>,
     },
-    Ref(Rc<RefCell<Value>>),
+    Ref(Arc<Mutex<Value>>),
     Adt { ctor: String, fields: Vec<Value> },
     /// Partially-applied constructor / operator references are represented
     /// by the interpreter as direct call targets; these values appear when
@@ -62,8 +86,8 @@ pub enum Value {
     /// A closure created by the bytecode VM ([`crate::vm`]): an index into
     /// the program's function table plus the captured environment, flat —
     /// no linked env chain. Self-reference for recursion is re-supplied at
-    /// call time (no `Rc` cycles).
-    VmClosure(Rc<VmClosure>),
+    /// call time (no `Arc` cycles).
+    VmClosure(Arc<VmClosure>),
 }
 
 /// Payload of [`Value::VmClosure`].
@@ -78,6 +102,11 @@ pub struct VmClosure {
 impl Value {
     pub fn unit() -> Value {
         Value::Tuple(vec![])
+    }
+
+    /// A fresh mutable reference cell holding `v`.
+    pub fn new_ref(v: Value) -> Value {
+        Value::Ref(Arc::new(Mutex::new(v)))
     }
 
     /// Structural equality over data values (tensors, tuples, ADTs),
@@ -100,6 +129,25 @@ impl Value {
                     && f1.iter().zip(f2).all(|(x, y)| x.bits_eq(y))
             }
             _ => false,
+        }
+    }
+
+    /// Bytes of tensor payload reachable from this value (storage actually
+    /// held alive, ignoring `Arc` sharing). The size metric behind the
+    /// program cache's byte-budgeted eviction.
+    pub fn tensor_bytes(&self) -> usize {
+        match self {
+            Value::Tensor(t) => t.numel() * t.dtype().size_bytes(),
+            Value::Tuple(vs) | Value::Adt { fields: vs, .. } => {
+                vs.iter().map(|v| v.tensor_bytes()).sum()
+            }
+            Value::VmClosure(c) => c.captures.iter().map(|v| v.tensor_bytes()).sum(),
+            // Refs are skipped (like `bits_eq`, which treats them as
+            // non-data): a ref can participate in a cycle (a closure
+            // capturing the cell that holds it), and locking through the
+            // chain would deadlock on the second visit.
+            Value::Ref(_) => 0,
+            Value::Closure { .. } | Value::OpRef(_) | Value::CtorRef(_) => 0,
         }
     }
 
@@ -214,13 +262,36 @@ mod tests {
 
     #[test]
     fn refs_are_shared() {
-        let r = Value::Ref(Rc::new(RefCell::new(Value::unit())));
+        let r = Value::new_ref(Value::unit());
         if let Value::Ref(cell) = &r {
-            *cell.borrow_mut() = Value::Tensor(Tensor::scalar_f32(7.0));
+            *lock_ref(cell) = Value::Tensor(Tensor::scalar_f32(7.0));
         }
         let r2 = r.clone();
         if let Value::Ref(cell) = &r2 {
-            assert_eq!(cell.borrow().tensor().f32_value(), 7.0);
+            assert_eq!(lock_ref(cell).tensor().f32_value(), 7.0);
         }
+    }
+
+    #[test]
+    fn tensor_bytes_counts_nested_payloads() {
+        let t = Value::Tensor(Tensor::zeros(&[2, 3], crate::tensor::DType::F32));
+        assert_eq!(t.tensor_bytes(), 24);
+        let nested = Value::Tuple(vec![
+            t.clone(),
+            Value::Adt { ctor: "Cons".into(), fields: vec![t.clone()] },
+            Value::OpRef("add".into()),
+        ]);
+        assert_eq!(nested.tensor_bytes(), 48);
+    }
+
+    /// The tentpole guarantee: the whole value domain crosses threads.
+    #[test]
+    fn values_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Value>();
+        assert_send_sync::<Env>();
+        assert_send_sync::<EnvNode>();
+        assert_send_sync::<VmClosure>();
+        assert_send_sync::<Suspended>();
     }
 }

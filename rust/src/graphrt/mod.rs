@@ -267,9 +267,26 @@ impl GraphRt {
         self.input_slots.len()
     }
 
+    /// Tensor bytes held resident by the compiled graph's constant table
+    /// (the program cache's size-aware eviction metric).
+    pub fn const_bytes(&self) -> usize {
+        self.constants.iter().map(|v| v.tensor_bytes()).sum()
+    }
+
     /// Execute with the given inputs.
     pub fn run(&self, inputs: &[Value]) -> Result<Value, String> {
         self.run_traced(inputs, &mut |_, _, _| {})
+    }
+
+    /// Execute, counting launches on a caller-supplied counter instead of
+    /// this runtime's own. The program cache hands one shared `GraphRt` to
+    /// many threads, so per-call metrics must not diff a shared counter.
+    pub fn run_counted(
+        &self,
+        inputs: &[Value],
+        launches: &LaunchCounter,
+    ) -> Result<Value, String> {
+        self.run_traced_counted(inputs, &mut |_, _, _| {}, launches)
     }
 
     /// Execute, invoking `trace(op_name, args, out)` for every operator
@@ -279,6 +296,15 @@ impl GraphRt {
         &self,
         inputs: &[Value],
         trace: &mut dyn FnMut(&str, &[Value], &Value),
+    ) -> Result<Value, String> {
+        self.run_traced_counted(inputs, trace, &self.launches)
+    }
+
+    fn run_traced_counted(
+        &self,
+        inputs: &[Value],
+        trace: &mut dyn FnMut(&str, &[Value], &Value),
+        launches: &LaunchCounter,
     ) -> Result<Value, String> {
         if inputs.len() != self.input_slots.len() {
             return Err(format!(
@@ -296,7 +322,7 @@ impl GraphRt {
         for node in &self.nodes {
             let out = match &node.kind {
                 NodeKind::Op { def, attrs, inputs } => {
-                    self.launches.bump();
+                    launches.bump();
                     let args: Result<Vec<Value>, String> = inputs
                         .iter()
                         .map(|r| self.read(&slots, &empty_t, &empty_p, r))
@@ -307,7 +333,7 @@ impl GraphRt {
                     out
                 }
                 NodeKind::Fused { steps, n_temps, inputs } => {
-                    self.launches.bump();
+                    launches.bump();
                     let group_inputs: Result<Vec<Value>, String> = inputs
                         .iter()
                         .map(|r| self.read(&slots, &empty_t, &empty_p, r))

@@ -68,18 +68,31 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 .and_then(|p| p.parse().ok())
                 .unwrap_or(7474);
             let dir = flag_value(args, "--dir").unwrap_or("artifacts");
+            let workers: usize = flag_value(args, "--workers")
+                .and_then(|w| w.parse().ok())
+                .unwrap_or(4);
             let cfg = server::ServerConfig {
                 port,
                 artifact_dir: dir.into(),
+                workers,
                 ..Default::default()
             };
             let stop = Arc::new(AtomicBool::new(false));
             let stats = server::serve(cfg, stop)?;
-            println!("serving mlp_forward on 127.0.0.1:{port} (ctrl-c to stop)");
+            println!(
+                "serving mlp_forward on 127.0.0.1:{port} with {} worker(s) \
+                 (ctrl-c to stop)",
+                stats.per_worker.len()
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(10));
+                let per_worker: Vec<usize> = stats
+                    .per_worker
+                    .iter()
+                    .map(|w| w.load(std::sync::atomic::Ordering::Relaxed))
+                    .collect();
                 println!(
-                    "requests={} batches={} compiles={}",
+                    "requests={} batches={} compiles={} per-worker={per_worker:?}",
                     stats.requests.load(std::sync::atomic::Ordering::Relaxed),
                     stats.batches.load(std::sync::atomic::Ordering::Relaxed),
                     stats.compiles.load(std::sync::atomic::Ordering::Relaxed)

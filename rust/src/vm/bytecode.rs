@@ -295,6 +295,12 @@ impl Program {
         self.funcs.iter().map(|f| f.code.len()).sum()
     }
 
+    /// Tensor bytes held resident by the constant pool (the program
+    /// cache's size-aware eviction metric).
+    pub fn const_bytes(&self) -> usize {
+        self.consts.iter().map(|v| v.tensor_bytes()).sum()
+    }
+
     /// Count instructions matching a predicate across all functions
     /// (tests + the `dump-bytecode` summary use this to report how many
     /// calls the peepholes converted).

@@ -8,12 +8,19 @@
 //! and graph runtime, and every `InvokePacked` bumps the shared
 //! [`LaunchCounter`], so the Fig 10–12 launch metric is comparable across
 //! all three executors.
+//!
+//! Thread model: the [`Program`] is immutable `Send + Sync` data — one
+//! compiled artifact (typically behind `Arc` in the program cache) can be
+//! executed by any number of threads at once. Each call site constructs
+//! its own cheap [`Vm`] instance, which owns the per-run state (frame
+//! stack, launch counter, depth high-water mark); nothing per-frame is
+//! ever shared.
 
-use std::cell::{Cell, RefCell};
-use std::rc::Rc;
+use std::cell::Cell;
+use std::sync::Arc;
 
 use super::bytecode::{Instr, PackedFunc, PackedRef, Program, Reg};
-use crate::eval::value::{Value, VmClosure};
+use crate::eval::value::{lock_ref, Value, VmClosure};
 use crate::eval::LaunchCounter;
 use crate::op;
 use crate::tensor::{self, CmpOp, DType, Tensor};
@@ -134,7 +141,7 @@ impl<'p> Vm<'p> {
                     let captures: Vec<Value> =
                         captures.iter().map(|r| frame.regs[*r as usize].clone()).collect();
                     frame.regs[*dst as usize] =
-                        Value::VmClosure(Rc::new(VmClosure { func: *func, captures }));
+                        Value::VmClosure(Arc::new(VmClosure { func: *func, captures }));
                 }
                 Instr::Proj { dst, src, index } => {
                     let v = match &frame.regs[*src as usize] {
@@ -454,11 +461,11 @@ impl<'p> Vm<'p> {
                 }
                 Instr::RefNew { dst, src } => {
                     let v = frame.regs[*src as usize].clone();
-                    frame.regs[*dst as usize] = Value::Ref(Rc::new(RefCell::new(v)));
+                    frame.regs[*dst as usize] = Value::new_ref(v);
                 }
                 Instr::RefRead { dst, src } => {
                     let v = match &frame.regs[*src as usize] {
-                        Value::Ref(cell) => cell.borrow().clone(),
+                        Value::Ref(cell) => lock_ref(cell).clone(),
                         other => return Err(format!("! on non-ref {other:?}")),
                     };
                     frame.regs[*dst as usize] = v;
@@ -466,7 +473,7 @@ impl<'p> Vm<'p> {
                 Instr::RefWrite { dst, r, v } => {
                     let val = frame.regs[*v as usize].clone();
                     match &frame.regs[*r as usize] {
-                        Value::Ref(cell) => *cell.borrow_mut() = val,
+                        Value::Ref(cell) => *lock_ref(cell) = val,
                         other => return Err(format!(":= on non-ref {other:?}")),
                     }
                     frame.regs[*dst as usize] = Value::unit();

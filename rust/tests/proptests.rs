@@ -460,6 +460,96 @@ fn cached_vm_execution_matches_interpreter_on_random_control_flow() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Send-able value domain (Arc migration).
+// ---------------------------------------------------------------------------
+
+/// Random value trees over the data constructors `bits_eq` compares:
+/// tensors, tuples, lists, and ADT instances.
+fn random_value_tree(rng: &mut Rng, depth: usize) -> Value {
+    if depth == 0 {
+        let n = rng.randint(1, 5) as usize;
+        return Value::Tensor(rng.normal_tensor(&[n], 1.0));
+    }
+    match rng.randint(0, 4) {
+        0 => Value::Tensor(rng.normal_tensor(&[2, 2], 1.0)),
+        1 => Value::Tuple(
+            (0..rng.randint(0, 4)).map(|_| random_value_tree(rng, depth - 1)).collect(),
+        ),
+        2 => Value::list(
+            (0..rng.randint(0, 4)).map(|_| random_value_tree(rng, depth - 1)).collect(),
+        ),
+        _ => Value::Adt {
+            ctor: "Cons".into(),
+            fields: vec![
+                random_value_tree(rng, depth - 1),
+                Value::Adt { ctor: "Nil".into(), fields: vec![] },
+            ],
+        },
+    }
+}
+
+#[test]
+fn value_trees_round_trip_across_thread_boundaries() {
+    // Values are Send + Sync (the Arc migration): moving a random tree
+    // into a spawned thread and back must change nothing, bit-for-bit.
+    let mut rng = Rng::new(1200);
+    for case in 0..CASES {
+        let v = random_value_tree(&mut rng, 3);
+        let sent = v.clone();
+        let got = std::thread::spawn(move || sent)
+            .join()
+            .expect("worker thread panicked");
+        assert!(
+            v.bits_eq(&got),
+            "case {case}: value changed crossing a thread boundary: {v:?} vs {got:?}"
+        );
+    }
+}
+
+#[test]
+fn shared_cache_serves_identical_results_across_threads() {
+    // 4 threads x 3 calls on one shared cache and one random module:
+    // exactly one compile process-wide (racing misses coalesce), and every
+    // thread's result bit-matches the reference interpreter.
+    use relay::eval::{run_with_cache, Executor, ProgramCache};
+
+    let mut rng = Rng::new(1300);
+    let m0 = Module::with_prelude();
+    for case in 0..8 {
+        let e = random_cf_program(&mut rng, 2);
+        let expect = eval_expr(&m0, &e)
+            .unwrap_or_else(|err| panic!("case {case}: interp failed: {err}"));
+        let m = ir::Module::from_expr(e);
+        let cache = ProgramCache::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = &m;
+                let cache = &cache;
+                let expect = &expect;
+                s.spawn(move || {
+                    for round in 0..3 {
+                        let out = run_with_cache(m, Executor::Vm, vec![], cache)
+                            .unwrap_or_else(|err| {
+                                panic!("case {case}.{round}: vm failed: {err}")
+                            });
+                        assert!(
+                            expect.bits_eq(&out.value),
+                            "case {case}.{round}: shared-cache execution diverged"
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            cache.misses(),
+            1,
+            "case {case}: racing threads compiled more than once"
+        );
+        assert_eq!(cache.hits(), 11, "case {case}");
+    }
+}
+
 fn random_smooth(rng: &mut Rng, depth: usize, x: &ir::Var) -> ir::E {
     if depth == 0 {
         return if rng.randint(0, 2) == 0 {
