@@ -1,0 +1,129 @@
+//! Fig. 10, pipeline edition: per-optimization-level kernel-launch counts
+//! and cached (warm-dispatch) latency for the zoo MLP and CNN fixtures,
+//! measured through the *unified* compile driver — `run_with_cache` with
+//! explicit `CompileOptions`, exactly the path `run_auto`, the CLI, and
+//! the serving fleet use. This is the figure's claim restated for the
+//! refactor: higher tiers launch fewer kernels, and every tier's artifact
+//! is cached and re-dispatched.
+//!
+//! Results are appended to the BENCH trajectory as `BENCH_fig10_opt.json`
+//! (repo root when run via cargo, cwd otherwise).
+//!
+//! Assertions: the launch-count properties are deterministic and always
+//! hard-fail — every -O1+ level must launch strictly fewer kernels than
+//! -O0 on both fixtures, and the warm path must compile exactly once per
+//! (module, level). Latency columns are reported, not asserted (shared CI
+//! runners are too noisy to gate on wall clock; the CI smoke step runs
+//! with `RELAY_BENCH_SMOKE=1` like the other benches).
+
+use std::fmt::Write as _;
+
+use relay::bench;
+use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache, Value};
+use relay::ir;
+use relay::pass::OptLevel;
+use relay::tensor::Rng;
+use relay::zoo::{self, Model};
+
+/// The MLP fixture: dense -> tanh -> dense with `ones` weight
+/// initializers, so -O2's constant folding and -O1's fusion both have
+/// work to do.
+fn mlp_fixture() -> (ir::Module, Vec<Value>) {
+    let m = ir::parse_module(
+        "def @main(%x: Tensor[(4, 16), float32]) {\n\
+           let %w1 = ones(shape=[32, 16]);\n\
+           let %h = tanh(nn.dense(%x, %w1));\n\
+           let %w2 = ones(shape=[8, 32]);\n\
+           nn.dense(%h, %w2)\n\
+         }",
+    )
+    .expect("mlp fixture parses");
+    let mut rng = Rng::new(42);
+    (m, vec![Value::Tensor(rng.normal_tensor(&[4, 16], 1.0))])
+}
+
+fn main() {
+    let iters = 10;
+    println!("Fig 10 (pipeline): launches + cached latency by opt level, via the driver");
+    println!(
+        "{:<10} {:>6} {:>10} {:>10} {:>9} {:>9}",
+        "fixture", "level", "launches", "cached ms", "speedup", "compiles"
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+
+    let (mlp_m, mlp_args) = mlp_fixture();
+    let (dqn_m, dqn_in) = zoo::vision::build(Model::NatureDqn, 42);
+    let fixtures: Vec<(&str, ir::Module, Vec<Value>)> = vec![
+        ("mlp", mlp_m, mlp_args),
+        ("dqn-cnn", dqn_m, vec![Value::Tensor(dqn_in)]),
+    ];
+
+    for (name, m, args) in &fixtures {
+        let cache = ProgramCache::new();
+        let mut o0 = None;
+        let mut o0_ms = None;
+        for level in OptLevel::all() {
+            let opts = CompileOptions::at(Executor::Auto, level);
+            // First call compiles (the full pipeline at `level`);
+            // everything after is warm dispatch on the cached program.
+            let misses_before = cache.misses();
+            let out = run_with_cache(m, opts, args.clone(), &cache).unwrap();
+            let s = bench::bench(format!("{name}-{level}"), 1, iters, || {
+                let _ = run_with_cache(m, opts, args.clone(), &cache).unwrap();
+            });
+            assert_eq!(
+                cache.misses(),
+                misses_before + 1,
+                "{name} {level}: warm path compiled more than once"
+            );
+            let base_launches = *o0.get_or_insert(out.launches);
+            let base_ms = *o0_ms.get_or_insert(s.mean_ms);
+            if level > OptLevel::O0 {
+                assert!(
+                    out.launches < base_launches,
+                    "{name} {level}: {} launches, not fewer than -O0's {}",
+                    out.launches,
+                    base_launches
+                );
+            }
+            println!(
+                "{:<10} {:>6} {:>10} {:>10.3} {:>8.2}x {:>9}",
+                name,
+                level.to_string(),
+                out.launches,
+                s.mean_ms,
+                base_ms / s.mean_ms,
+                cache.misses()
+            );
+            let mut row = String::new();
+            write!(
+                row,
+                "    {{\"fixture\": \"{name}\", \"level\": \"{level}\", \
+                 \"launches\": {}, \"cached_ms\": {:.4}, \"o0_launches\": {}}}",
+                out.launches, s.mean_ms, base_launches
+            )
+            .unwrap();
+            json_rows.push(row);
+        }
+        // One compile per level, all coexisting under distinct keys.
+        assert_eq!(cache.misses(), OptLevel::all().len());
+        assert_eq!(cache.len(), OptLevel::all().len());
+    }
+
+    let json = format!(
+        "{{\n  \"figure\": \"10-opt\",\n  \"description\": \"per-level kernel \
+         launches and program-cache warm latency through the unified compile \
+         driver (mean ms over {iters} iters)\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    // Package root is the usual cwd under cargo; prefer the repo root.
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_fig10_opt.json"
+    } else {
+        "BENCH_fig10_opt.json"
+    };
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -10,7 +10,7 @@
 use std::fmt::Write as _;
 
 use relay::bench;
-use relay::eval::{run_with, Executor};
+use relay::eval::{run_compiled, run_with, CompileOptions, Executor, ProgramCache};
 use relay::pass::{optimize, OptLevel};
 use relay::vm;
 use relay::zoo::{self, Model};
@@ -28,9 +28,12 @@ fn main() {
         let fused = optimize(&m, OptLevel::O1, false).expect("optimize");
 
         // Correctness + metric parity guards: identical results, identical
-        // kernel-launch counts on both executors.
-        let a = run_with(&fused, Executor::Interp, args.clone()).unwrap();
-        let b = run_with(&fused, Executor::Vm, args.clone()).unwrap();
+        // kernel-launch counts on both executors — both compiled through
+        // the unified driver at the same -O1 the hand-fused module uses.
+        let a = run_with(&m, CompileOptions::at(Executor::Interp, OptLevel::O1), args.clone())
+            .unwrap();
+        let b = run_with(&m, CompileOptions::at(Executor::Vm, OptLevel::O1), args.clone())
+            .unwrap();
         assert!(
             a.value.bits_eq(&b.value),
             "{}: VM diverged from interpreter",
@@ -43,8 +46,15 @@ fn main() {
             model.name()
         );
 
+        // Symmetric with the VM column below: resolve the interp tier's
+        // artifact (the -O1-optimized module) once, then time pure
+        // dispatch — no per-iteration cache hash/verify in either column.
+        let cache = ProgramCache::new();
+        let interp_prog = cache
+            .get_or_compile(&m, CompileOptions::at(Executor::Interp, OptLevel::O1))
+            .unwrap();
         let interp_s = bench::bench(format!("{}-interp", model.name()), 2, iters, || {
-            let _ = run_with(&fused, Executor::Interp, args.clone()).unwrap();
+            let _ = run_compiled(&interp_prog, args.clone()).unwrap();
         });
 
         let t0 = std::time::Instant::now();

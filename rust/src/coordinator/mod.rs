@@ -4,6 +4,12 @@
 //! thin (per DESIGN.md): process lifecycle, a request loop, and metrics.
 //! The server demonstrates deployment of a compiled artifact — a dynamic
 //! batcher over the PJRT executable, Python long gone.
+//!
+//! Every command routes through the same optimizing driver the executors
+//! use (`eval::CompileOptions` -> `pass::optimize_traced`): `run` compiles
+//! through the process-wide program cache, `dump-passes` prints what the
+//! driver did, and `serve` compiles its batch buckets at `--opt`
+//! (default -O3).
 
 pub mod server;
 
@@ -11,8 +17,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::eval::{run_with, Executor, Value};
-use crate::pass::OptLevel;
+use crate::eval::{run_with, CompileOptions, Executor, Value};
+use crate::pass::{OptLevel, PipelineConfig};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 
@@ -26,13 +32,14 @@ pub fn cmd_compile(path: &str, level: OptLevel) -> Result<String> {
 }
 
 /// `relay run <file.relay> [-O n] [--executor interp|graph|vm|auto]`:
-/// optimize and evaluate @main() with random tensors for annotated params,
-/// routed through the executor-selection layer ([`crate::eval::run_with`]).
+/// evaluate @main() with random tensors for annotated params, compiled
+/// through the unified optimizing driver + program cache
+/// ([`crate::eval::run_with`] with explicit [`CompileOptions`] — the
+/// pipeline runs inside `compile_for`, not as a separate CLI step).
 pub fn cmd_run(path: &str, level: OptLevel, executor: Executor) -> Result<String> {
     let src = std::fs::read_to_string(path)?;
     let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
-    let opt = crate::pass::optimize(&m, level, false).map_err(|e| anyhow!("{e}"))?;
-    let main = opt.def("main").ok_or_else(|| anyhow!("no @main"))?;
+    let main = m.def("main").ok_or_else(|| anyhow!("no @main"))?;
     let mut rng = crate::tensor::Rng::new(0);
     let args: Result<Vec<Value>> = main
         .params
@@ -47,10 +54,28 @@ pub fn cmd_run(path: &str, level: OptLevel, executor: Executor) -> Result<String
             None => Err(anyhow!("param {p} needs a type annotation")),
         })
         .collect();
-    let out = run_with(&opt, executor, args?).map_err(|e| anyhow!("{e}"))?;
+    let out = run_with(&m, CompileOptions::at(executor, level), args?)
+        .map_err(|e| anyhow!("{e}"))?;
     Ok(format!(
-        "{:?}  [executor={}, launches={}]",
-        out.value, out.executor, out.launches
+        "{:?}  [executor={}, launches={}, opt={}]",
+        out.value, out.executor, out.launches, level
+    ))
+}
+
+/// `relay dump-passes <file.relay> [-O n] [--fixpoint]`: run the
+/// instrumented pass driver and print the per-pass table — wall time, IR
+/// node counts before/after, and rounds (fixpoint re-runs FoldConstant /
+/// DCE to convergence).
+pub fn cmd_dump_passes(path: &str, level: OptLevel, fixpoint: bool) -> Result<String> {
+    let src = std::fs::read_to_string(path)?;
+    let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
+    let cfg = PipelineConfig { level, typecheck: false, fixpoint };
+    let (_, trace) =
+        crate::pass::optimize_with(&m, &cfg).map_err(|e| anyhow!("{e}"))?;
+    Ok(format!(
+        "pass pipeline for {path} at {level}{}:\n{}",
+        if fixpoint { " (fixpoint)" } else { "" },
+        trace.render()
     ))
 }
 
@@ -110,10 +135,13 @@ pub fn usage() -> &'static str {
        relay compile <file.relay> [-O 0|1|2|3]   parse, check, optimize, print\n\
        relay run <file.relay> [-O 0|1|2|3] [--executor interp|graph|vm|auto]\n\
                                                  optimize and evaluate @main\n\
+       relay dump-passes <file.relay> [-O 0|1|2|3] [--fixpoint]\n\
+                                                 per-pass wall time + node deltas\n\
        relay dump-bytecode <file.relay> [-O 0|1|2|3]\n\
                                                  disassemble the VM program\n\
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
-       relay serve [--port 7474] [--workers 4]   batched inference server\n"
+       relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3]\n\
+                                                 batched inference server\n"
 }
 
 #[cfg(test)]
@@ -133,11 +161,32 @@ mod tests {
         let out = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, Executor::Auto).unwrap();
         assert!(out.contains("Tensor"), "{out}");
         assert!(out.contains("executor=graphrt"), "{out}");
+        assert!(out.contains("opt=-O2"), "{out}");
         // Same program forced onto each tier agrees.
         for exec in [Executor::Interp, Executor::Vm] {
             let o = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, exec).unwrap();
             assert!(o.contains(&format!("executor={}", exec.name())), "{o}");
         }
+    }
+
+    #[test]
+    fn dump_passes_prints_the_driver_table() {
+        let tmp = std::env::temp_dir().join("relay_dump_passes_test.relay");
+        std::fs::write(
+            &tmp,
+            "def @main(%x: Tensor[(2, 2), float32]) {\n\
+               nn.relu(add(multiply(%x, 2f), add(1f, 1f)))\n\
+             }",
+        )
+        .unwrap();
+        let out = cmd_dump_passes(tmp.to_str().unwrap(), OptLevel::O3, false).unwrap();
+        assert!(out.contains("FoldConstantPostLayout"), "{out}");
+        assert!(out.contains("FuseOps"), "{out}");
+        assert!(out.contains("total (-O3)"), "{out}");
+        // The fixpoint spelling runs too and reports rounds.
+        let fix = cmd_dump_passes(tmp.to_str().unwrap(), OptLevel::O2, true).unwrap();
+        assert!(fix.contains("(fixpoint)"), "{fix}");
+        assert!(fix.contains("rounds"), "{fix}");
     }
 
     #[test]

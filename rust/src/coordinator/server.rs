@@ -24,6 +24,11 @@
 //! N-worker fleet compiles each bucket exactly once over the server's
 //! lifetime (`Stats::compiles` tracks this fleet-wide; the cache coalesces
 //! two workers racing on the same cold bucket into one compile).
+//!
+//! Buckets compile **through the full optimizing pipeline** at
+//! [`ServerConfig::opt_level`] (default -O3, the `--opt` CLI flag): the
+//! fleet serves fused kernels, not the bare ANF the pre-refactor batcher
+//! executed. [`Stats::opt_level`] records what the fleet is running.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -35,8 +40,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::eval::{run_compiled, Executor, ProgramCache, Value};
+use crate::eval::{run_compiled, CompileOptions, Executor, ProgramCache, Value};
 use crate::ir::{self, Module, Type, Var};
+use crate::pass::OptLevel;
 use crate::runtime::Runtime;
 use crate::tensor::{DType, Tensor};
 
@@ -49,6 +55,9 @@ pub struct ServerConfig {
     /// artifact directory is missing (so the server works — batching and
     /// all — without the `xla` feature / Python build path).
     pub executor: Executor,
+    /// Optimization level the per-bucket modules compile at (`--opt`,
+    /// default -O3: the serving fleet runs fused kernels).
+    pub opt_level: OptLevel,
     /// Worker threads draining the request queue (compiled-relay backend).
     /// The PJRT backend is pinned to one worker: its handles are `!Send`.
     pub workers: usize,
@@ -62,6 +71,7 @@ impl Default for ServerConfig {
             batch_timeout: Duration::from_millis(2),
             artifact_dir: "artifacts".into(),
             executor: Executor::Auto,
+            opt_level: OptLevel::O3,
             workers: 4,
         }
     }
@@ -113,16 +123,19 @@ pub struct Stats {
     /// backend: at most one per batch bucket over the server's life,
     /// no matter how many workers race on a cold bucket).
     pub compiles: AtomicUsize,
+    /// Optimization level the backend compiles at (fixed per server).
+    pub opt_level: OptLevel,
     /// Requests served per worker thread (len == worker count).
     pub per_worker: Vec<AtomicUsize>,
 }
 
 impl Stats {
-    pub fn new(workers: usize) -> Stats {
+    pub fn new(workers: usize, opt_level: OptLevel) -> Stats {
         Stats {
             requests: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
             compiles: AtomicUsize::new(0),
+            opt_level,
             per_worker: (0..workers.max(1)).map(|_| AtomicUsize::new(0)).collect(),
         }
     }
@@ -155,7 +168,8 @@ fn bucket_sizes(cap: usize) -> Vec<usize> {
 pub struct RelayBackend {
     buckets: Vec<Bucket>,
     cache: Arc<ProgramCache>,
-    executor: Executor,
+    /// Executor + optimization level every bucket compiles with.
+    opts: CompileOptions,
     stats: Arc<Stats>,
 }
 
@@ -172,9 +186,11 @@ struct Bucket {
 impl RelayBackend {
     /// Build the per-bucket modules and fail fast by compiling the
     /// smallest bucket, so a backend regression surfaces before serving.
+    /// `opts` sets executor *and* optimization level (a bare [`Executor`]
+    /// selects the default -O3).
     pub fn new(
         max_batch: usize,
-        executor: Executor,
+        opts: impl Into<CompileOptions>,
         cache: Arc<ProgramCache>,
         stats: Arc<Stats>,
     ) -> Result<RelayBackend> {
@@ -186,7 +202,7 @@ impl RelayBackend {
                 resolved: std::sync::OnceLock::new(),
             })
             .collect();
-        let backend = RelayBackend { buckets, cache, executor, stats };
+        let backend = RelayBackend { buckets, cache, opts: opts.into(), stats };
         backend.compiled_bucket(0)?;
         Ok(backend)
     }
@@ -207,7 +223,7 @@ impl RelayBackend {
         }
         let (compiled, compiled_now) = self
             .cache
-            .get_or_compile_traced(&bucket.module, self.executor)
+            .get_or_compile_traced(&bucket.module, self.opts)
             .map_err(|e| anyhow!("{e}"))?;
         if compiled_now {
             self.stats.compiles.fetch_add(1, Ordering::Relaxed);
@@ -235,7 +251,7 @@ impl RelayBackend {
         let compiled = self.compiled_bucket(bi)?;
         let bucket = &self.buckets[bi];
         let x = pad_rows(rows, bucket.size, FALLBACK_FEAT);
-        let out = run_compiled(&compiled, &bucket.module, vec![Value::Tensor(x)])
+        let out = run_compiled(&compiled, vec![Value::Tensor(x)])
             .map_err(|e| anyhow!("{e}"))?;
         let preds = crate::tensor::argmax(out.value.tensor(), 1);
         let preds = preds.as_i64();
@@ -347,7 +363,7 @@ fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
 pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
     let pjrt = artifacts_available(&cfg.artifact_dir);
     let workers = if pjrt { 1 } else { cfg.workers.max(1) };
-    let stats = Arc::new(Stats::new(workers));
+    let stats = Arc::new(Stats::new(workers, cfg.opt_level));
 
     let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
     let rx = Arc::new(Mutex::new(rx));
@@ -382,11 +398,12 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
     } else {
         // Compiled-relay fleet: one shared backend (one shared program
         // cache), N workers. Backend construction fails fast here, on the
-        // caller's thread, before any socket is bound.
+        // caller's thread, before any socket is bound — and every bucket
+        // compiles through the optimizing pipeline at cfg.opt_level.
         let cache = Arc::new(ProgramCache::new());
         let backend = Arc::new(RelayBackend::new(
             cfg.max_batch,
-            cfg.executor,
+            CompileOptions::at(cfg.executor, cfg.opt_level),
             cache,
             stats.clone(),
         )?);
@@ -536,6 +553,8 @@ mod tests {
         // batch-1 bucket compiled: 4 requests, exactly 1 compile — the
         // compile-once serving property of the program cache.
         assert_eq!(stats.compiles.load(Ordering::Relaxed), 1);
+        // The default server optimizes its buckets at -O3.
+        assert_eq!(stats.opt_level, OptLevel::O3);
         // Every served request was attributed to some worker.
         let per_worker: usize = stats
             .per_worker
@@ -546,16 +565,23 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
     }
 
-    /// The acceptance bar for the Arc migration: a 4-thread fleet over one
-    /// shared backend/cache compiles each batch bucket exactly once for
-    /// the whole process, no matter how the threads interleave.
+    /// The acceptance bar for the unified pipeline: a 4-thread fleet over
+    /// one shared backend/cache compiles each batch bucket exactly once
+    /// for the whole process — **at -O3** — no matter how the threads
+    /// interleave, and the compiled buckets run fused kernels (fewer
+    /// launches than an -O0 compile of the same bucket).
     #[test]
     fn four_thread_fleet_compiles_each_bucket_exactly_once() {
         let cache = Arc::new(ProgramCache::new());
-        let stats = Arc::new(Stats::new(4));
+        let stats = Arc::new(Stats::new(4, OptLevel::O3));
         let backend = Arc::new(
-            RelayBackend::new(8, Executor::Vm, cache.clone(), stats.clone())
-                .expect("backend"),
+            RelayBackend::new(
+                8,
+                CompileOptions::at(Executor::Vm, OptLevel::O3),
+                cache.clone(),
+                stats.clone(),
+            )
+            .expect("backend"),
         );
         let buckets = backend.bucket_count(); // 1, 2, 4, 8
         assert_eq!(buckets, 4);
@@ -594,6 +620,34 @@ mod tests {
         assert_eq!(stats.compiles.load(Ordering::Relaxed), buckets);
         assert_eq!(cache.misses(), buckets);
         assert_eq!(cache.len(), buckets);
+
+        // The -O3 buckets the fleet served are genuinely fused: the same
+        // bucket module compiled at -O0 launches more kernels (the
+        // fallback MLP is dense/relu/dense = 3 unfused ops) than the
+        // fleet's program did on an identical batch.
+        let row: Vec<f32> = (0..FALLBACK_FEAT).map(|j| j as f32 * 0.1 - 0.5).collect();
+        let rows: Vec<&[f32]> = vec![&row];
+        let x = pad_rows(&rows, backend.buckets[0].size, FALLBACK_FEAT);
+        let o3 = run_compiled(
+            &backend.compiled_bucket(0).expect("o3 bucket"),
+            vec![Value::Tensor(x.clone())],
+        )
+        .expect("o3 run");
+        let (o0_compiled, _) = cache
+            .get_or_compile_traced(
+                &backend.buckets[0].module,
+                CompileOptions::at(Executor::Vm, OptLevel::O0),
+            )
+            .expect("o0 compile");
+        let o0 = run_compiled(&o0_compiled, vec![Value::Tensor(x)]).expect("o0 run");
+        assert!(
+            o3.launches < o0.launches,
+            "fleet bucket not fused: O3 {} launches vs O0 {}",
+            o3.launches,
+            o0.launches
+        );
+        // Fusion must not change what the bucket computes.
+        assert!(o3.value.bits_eq(&o0.value));
     }
 
     #[test]
@@ -602,7 +656,7 @@ mod tests {
         // must equal the prediction the batch-1 program gives that row
         // alone (padding rows cannot leak into real rows).
         let cache = Arc::new(ProgramCache::new());
-        let stats = Arc::new(Stats::new(1));
+        let stats = Arc::new(Stats::new(1, OptLevel::O3));
         let backend =
             RelayBackend::new(4, Executor::Vm, cache, stats).expect("backend");
         let rows_data: Vec<Vec<f32>> = (0..3)

@@ -1,16 +1,33 @@
 //! Compile-once execution: a compiled-program cache keyed by the
-//! alpha-invariant module structural hash ([`crate::ir::module_structural_hash`]).
+//! alpha-invariant module structural hash ([`crate::ir::module_structural_hash`])
+//! **plus the requested compile options** (optimization level, executor).
 //!
 //! The serving story of the paper (and of TVM / nGraph's cached-executable
 //! layer) is that compilation cost is paid once and the lean artifact runs
 //! millions of times. [`ProgramCache`] makes the executor-selection layer
 //! behave that way: `run_auto` / `run_with` on an unchanged module performs
-//! exactly one ANF normalization + compile, and every later call is pure
+//! exactly one optimize + ANF + compile, and every later call is pure
 //! dispatch on the cached [`crate::graphrt::GraphRt`] / [`crate::vm::Program`].
 //!
-//! Keys are verified on hit with full structural equality
-//! ([`crate::ir::modules_structurally_eq`]), so a 64-bit hash collision can
-//! never route a module to the wrong artifact — it just recompiles.
+//! # One optimizing pipeline
+//!
+//! [`compile_for`] is the single compile driver: it runs the §5.2 pass
+//! pipeline ([`crate::pass::optimize_traced`]) at the requested
+//! [`CompileOptions::opt_level`] first, then lowers the *optimized* module
+//! for the requested executor — normalizing to ANF **once** and sharing
+//! that normal form between the graph-runtime attempt and the VM compile.
+//! The per-pass [`crate::pass::PassTrace`] is cached alongside the program
+//! and handed back on every hit.
+//!
+//! # Keying
+//!
+//! Keys are `(module_structural_hash, OptLevel, Executor)`, so `-O0` and
+//! `-O3` artifacts of the same module coexist. Hit verification compares
+//! the **pre-optimization** module snapshot with full structural equality
+//! ([`crate::ir::modules_structurally_eq`]) — alpha-equivalent inputs
+//! share entries no matter what the pipeline rewrote — and a 64-bit hash
+//! collision can never route a module to the wrong artifact; it just
+//! recompiles.
 //!
 //! # Thread safety
 //!
@@ -35,8 +52,9 @@ use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
-use super::{env_empty, Execution, Executor, Interp, LaunchCounter, Value};
-use crate::ir::{self, Module};
+use super::{env_empty, CompileOptions, Execution, Executor, Interp, LaunchCounter, Value};
+use crate::ir::{self, Expr, Module};
+use crate::pass::{OptLevel, PassTrace};
 
 /// What executor-selection resolved a module to, compiled and ready to run.
 #[derive(Clone)]
@@ -45,8 +63,9 @@ pub enum Compiled {
     Graph(Arc<crate::graphrt::GraphRt>),
     /// Everything else the VM compiles (closures, ADTs, recursion).
     Vm(Arc<crate::vm::Program>),
-    /// Neither compiled (exotic input under `Auto`): tree-walk per call.
-    Interp,
+    /// The interpreter tier: no bytecode, but the *optimized* module is
+    /// the artifact (the pass pipeline ran on it like any other tier).
+    Interp(Arc<Module>),
 }
 
 impl Compiled {
@@ -55,29 +74,56 @@ impl Compiled {
         match self {
             Compiled::Graph(_) => "graphrt",
             Compiled::Vm(_) => "vm",
-            Compiled::Interp => "interp",
+            Compiled::Interp(_) => "interp",
         }
     }
 
     /// Tensor bytes this artifact keeps resident in its constant pool —
-    /// the metric behind the cache's byte-budgeted eviction.
+    /// the metric behind the cache's byte-budgeted eviction. For the
+    /// interpreter tier this is the optimized module's constant tensors.
     pub fn const_bytes(&self) -> usize {
         match self {
             Compiled::Graph(g) => g.const_bytes(),
             Compiled::Vm(p) => p.const_bytes(),
-            Compiled::Interp => 0,
+            Compiled::Interp(m) => module_const_bytes(m),
         }
     }
 }
 
-type Key = (u64, &'static str);
+/// Total bytes of `Expr::Const` tensors across a module's definitions.
+fn module_const_bytes(m: &Module) -> usize {
+    let mut total = 0usize;
+    for f in m.defs.values() {
+        let mut consts: Vec<ir::E> = Vec::new();
+        ir::collect(&f.body, &|e| matches!(&**e, Expr::Const(_)), &mut consts);
+        for c in consts {
+            if let Expr::Const(t) = &*c {
+                total += t.numel() * t.dtype().size_bytes();
+            }
+        }
+    }
+    total
+}
+
+/// Cache key: pre-optimization structural hash + the options that shape
+/// the artifact. (`typecheck` is validation-only — it never changes the
+/// compiled output — so it is deliberately *not* part of the key.)
+type Key = (u64, OptLevel, &'static str);
+
+fn key_for(module: &Module, opts: &CompileOptions) -> Key {
+    (ir::module_structural_hash(module), opts.opt_level, opts.executor.name())
+}
 
 struct Entry {
-    /// Snapshot of the source module, for exact hit verification. `Arc`
-    /// so the hit path can take an O(1) clone under the lock and run the
-    /// deep structural comparison *after* releasing it.
+    /// Snapshot of the **pre-optimization** source module, for exact hit
+    /// verification (so alpha-equivalent inputs share entries regardless
+    /// of what the pipeline rewrote). `Arc` so the hit path can take an
+    /// O(1) clone under the lock and run the deep structural comparison
+    /// *after* releasing it.
     module: Arc<Module>,
     compiled: Compiled,
+    /// What the optimizing driver did when this entry was built.
+    trace: Arc<PassTrace>,
     /// Cached [`Compiled::const_bytes`] of this entry.
     bytes: usize,
     /// Recency stamp (monotonic per cache) for LRU eviction.
@@ -98,7 +144,7 @@ pub const DEFAULT_MAX_ENTRIES: usize = 128;
 /// Default bound on resident constant-pool bytes (256 MiB).
 pub const DEFAULT_MAX_BYTES: usize = 256 << 20;
 
-/// A bounded map from (module structural hash, requested executor) to a
+/// A bounded map from (module structural hash, opt level, executor) to a
 /// compiled program, with hit/miss counters. One miss == one compile,
 /// process-wide: concurrent misses on the same key are coalesced.
 pub struct ProgramCache {
@@ -195,15 +241,15 @@ impl ProgramCache {
         self.misses.store(0, Ordering::Relaxed);
     }
 
-    /// Look up (or compile and insert) the program for `module` under the
-    /// given executor request. `Executor::Interp` needs no compilation and
-    /// bypasses the map entirely.
+    /// Look up (or optimize + compile and insert) the program for `module`
+    /// under the given options. Accepts a bare [`Executor`] for the
+    /// default optimization level.
     pub fn get_or_compile(
         &self,
         module: &Module,
-        executor: Executor,
+        opts: impl Into<CompileOptions>,
     ) -> Result<Compiled, String> {
-        self.get_or_compile_traced(module, executor).map(|(c, _)| c)
+        self.get_or_compile_full(module, opts.into()).map(|(c, _, _)| c)
     }
 
     /// [`Self::get_or_compile`], also reporting whether *this* call
@@ -215,12 +261,31 @@ impl ProgramCache {
     pub fn get_or_compile_traced(
         &self,
         module: &Module,
-        executor: Executor,
+        opts: impl Into<CompileOptions>,
     ) -> Result<(Compiled, bool), String> {
-        if executor == Executor::Interp {
-            return Ok((Compiled::Interp, false));
+        self.get_or_compile_full(module, opts.into()).map(|(c, _, n)| (c, n))
+    }
+
+    /// The full lookup: compiled program, the [`PassTrace`] recorded when
+    /// it was built, and whether this call performed the compile.
+    pub fn get_or_compile_full(
+        &self,
+        module: &Module,
+        opts: CompileOptions,
+    ) -> Result<(Compiled, Arc<PassTrace>, bool), String> {
+        if opts.is_uncached_interp() {
+            // Nothing to optimize, nothing to compile: bypass the map.
+            // (This materializes a snapshot per call for API users that
+            // need an owned artifact; the execution path —
+            // `super::run_with_cache` — short-circuits earlier and runs
+            // on the borrowed module instead.)
+            return Ok((
+                Compiled::Interp(Arc::new(module.clone())),
+                Arc::new(PassTrace::empty(OptLevel::O0)),
+                false,
+            ));
         }
-        let key: Key = (ir::module_structural_hash(module), executor.name());
+        let key = key_for(module, &opts);
 
         // Phase 1, under the lock: find a candidate entry (O(1) clones
         // only) or claim the key for compilation. The deep structural
@@ -235,7 +300,11 @@ impl ProgramCache {
                 if let Some(entry) = st.entries.get_mut(&key) {
                     entry.last_used = tick;
                     st.tick = tick + 1;
-                    break Some((entry.module.clone(), entry.compiled.clone()));
+                    break Some((
+                        entry.module.clone(),
+                        entry.compiled.clone(),
+                        entry.trace.clone(),
+                    ));
                 }
                 if st.in_flight.contains(&key) {
                     // Another thread is compiling this module right now:
@@ -251,10 +320,13 @@ impl ProgramCache {
             }
         };
         let coordinated = match candidate {
-            Some((snapshot, compiled)) => {
+            Some((snapshot, compiled, trace)) => {
+                // Verification is against the *pre-optimization* snapshot:
+                // two alpha-equivalent inputs compare equal here even
+                // though neither matches the optimized artifact.
                 if ir::modules_structurally_eq(&snapshot, module) {
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Ok((compiled, false));
+                    return Ok((compiled, trace, false));
                 }
                 // Verified hash collision: compile without claiming the
                 // key (the resident entry stays until we replace it, and
@@ -267,9 +339,10 @@ impl ProgramCache {
 
         self.misses.fetch_add(1, Ordering::Relaxed);
         let _inflight = coordinated.then(|| InFlightGuard { cache: self, key });
-        // The compile itself runs outside the lock: other keys hit and
-        // miss freely while this one builds.
-        let compiled = compile_for(module, executor)?;
+        // The optimize + compile runs outside the lock: other keys hit
+        // and miss freely while this one builds.
+        let (compiled, trace) = compile_for(module, &opts)?;
+        let trace = Arc::new(trace);
         let bytes = compiled.const_bytes();
 
         let mut guard = self.lock_state();
@@ -285,6 +358,7 @@ impl ProgramCache {
             Entry {
                 module: Arc::new(module.clone()),
                 compiled: compiled.clone(),
+                trace: trace.clone(),
                 bytes,
                 last_used: tick,
             },
@@ -293,7 +367,7 @@ impl ProgramCache {
         drop(guard);
         // _inflight drops here: key leaves the in-flight set, waiters wake
         // and find the entry resident.
-        Ok((compiled, true))
+        Ok((compiled, trace, true))
     }
 
     /// Evict least-recently-used entries until both the entry-count and
@@ -321,72 +395,101 @@ impl ProgramCache {
     }
 }
 
-/// Compile `module` for the requested tier — the one place the selection
-/// chain (graph runtime -> VM -> interpreter) lives. The ANF pass runs
-/// once and is shared between the graphrt attempt and the VM compile.
-fn compile_for(module: &Module, executor: Executor) -> Result<Compiled, String> {
-    match executor {
-        Executor::Interp => Ok(Compiled::Interp),
+/// The unified compile driver: run the optimization pipeline at the
+/// requested level, then lower the optimized module for the requested
+/// tier — the one place the selection chain (graph runtime -> VM ->
+/// interpreter) lives. The ANF pass runs **once** on the optimized module
+/// and is shared between the graph-runtime attempt and the VM compile.
+pub fn compile_for(
+    module: &Module,
+    opts: &CompileOptions,
+) -> Result<(Compiled, PassTrace), String> {
+    let (optimized, trace) =
+        crate::pass::optimize_traced(module, opts.opt_level, opts.typecheck)?;
+    let compiled = match opts.executor {
+        Executor::Interp => Compiled::Interp(Arc::new(optimized)),
         Executor::GraphRt => {
-            let anfed = crate::pass::anf::run(module);
+            let anfed = crate::pass::anf::run(&optimized);
             let main = anfed.def("main").ok_or("no @main in module")?;
             let g = crate::graphrt::GraphRt::compile(main).map_err(|e| e.to_string())?;
-            Ok(Compiled::Graph(Arc::new(g)))
+            Compiled::Graph(Arc::new(g))
         }
         Executor::Vm => {
-            let program = crate::vm::compile(module).map_err(|e| e.to_string())?;
-            Ok(Compiled::Vm(Arc::new(program)))
+            // Shares the normalization with the Auto arm: `compile_normalized`
+            // on the already-ANF module, not `vm::compile` (which would
+            // re-run ANF on the raw module).
+            let anfed = crate::pass::anf::run(&optimized);
+            let program =
+                crate::vm::compile_normalized(&anfed).map_err(|e| e.to_string())?;
+            Compiled::Vm(Arc::new(program))
         }
         Executor::Auto => {
-            let anfed = crate::pass::anf::run(module);
+            let anfed = crate::pass::anf::run(&optimized);
             if let Some(main) = anfed.def("main") {
                 if let Ok(g) = crate::graphrt::GraphRt::compile(main) {
-                    return Ok(Compiled::Graph(Arc::new(g)));
+                    return Ok((Compiled::Graph(Arc::new(g)), trace));
                 }
             }
             match crate::vm::compile_normalized(&anfed) {
-                Ok(program) => Ok(Compiled::Vm(Arc::new(program))),
+                Ok(program) => Compiled::Vm(Arc::new(program)),
                 // The VM compiles everything the interpreter runs; the
                 // fallback is belt-and-braces for exotic inputs.
-                Err(_) => Ok(Compiled::Interp),
+                Err(_) => Compiled::Interp(Arc::new(optimized)),
             }
         }
-    }
+    };
+    Ok((compiled, trace))
 }
 
-/// Run `@main(args...)` on an already-compiled program. `module` is only
-/// consulted on the interpreter tier (which has no compiled artifact).
+/// Run `@main(args...)` on an already-compiled program.
 ///
 /// Launch counts are per-call: a cached artifact may be executing on
 /// several threads at once, so each call counts on its own
 /// [`LaunchCounter`] instead of diffing a counter shared across threads.
-pub fn run_compiled(
-    compiled: &Compiled,
-    module: &Module,
-    args: Vec<Value>,
-) -> Result<Execution, String> {
+pub fn run_compiled(compiled: &Compiled, args: Vec<Value>) -> Result<Execution, String> {
     match compiled {
         Compiled::Graph(g) => {
             let launches = LaunchCounter::new();
             let value = g.run_counted(&args, &launches)?;
-            Ok(Execution { value, executor: "graphrt", launches: launches.get() })
+            Ok(Execution {
+                value,
+                executor: "graphrt",
+                launches: launches.get(),
+                pass_trace: None,
+            })
         }
         Compiled::Vm(p) => {
             let vm = crate::vm::Vm::new(p);
             let value = vm.run(args)?;
-            Ok(Execution { value, executor: "vm", launches: vm.launches.get() })
+            Ok(Execution {
+                value,
+                executor: "vm",
+                launches: vm.launches.get(),
+                pass_trace: None,
+            })
         }
-        Compiled::Interp => {
-            let interp = Interp::new(module);
-            let f = module.entry().ok_or("no @main in module")?.clone();
-            let value = interp.apply(
-                Value::Closure { func: f, env: env_empty(), rec: None },
-                args,
-                &crate::ir::Attrs::new(),
-            )?;
-            Ok(Execution { value, executor: "interp", launches: interp.op_calls() })
-        }
+        Compiled::Interp(module) => interp_main(module, args),
     }
+}
+
+/// Interpreter tier over a borrowed module — shared by the
+/// `Compiled::Interp` artifact path and the `-O0` interp fast path in
+/// [`super::run_with_cache`] (which runs on the caller's module directly,
+/// no snapshot clone, no cache traffic).
+pub(crate) fn interp_main(module: &Module, args: Vec<Value>) -> Result<Execution, String> {
+    let interp = Interp::new(module);
+    let f = module.entry().ok_or("no @main in module")?.clone();
+    let value = interp.apply(
+        Value::Closure { func: f, env: env_empty(), rec: None },
+        args,
+        &crate::ir::Attrs::new(),
+    )?;
+    Ok(Execution {
+        value,
+        executor: "interp",
+        launches: interp.op_calls(),
+        pass_trace: None,
+    })
 }
 
 static DEFAULT_CACHE: OnceLock<ProgramCache> = OnceLock::new();
@@ -439,12 +542,61 @@ mod tests {
         let cache = ProgramCache::new();
         let a = parse_module(CF_SRC).unwrap();
         // Re-parsing mints fresh variable ids: alpha-equivalent, not
-        // identical — still one cache entry.
+        // identical — still one cache entry, even though hit verification
+        // happens against the pre-optimization snapshot.
         let b = parse_module(&CF_SRC.replace("%x", "%renamed")).unwrap();
         run_with_cache(&a, Executor::Auto, tensor_arg(1.0), &cache).unwrap();
         run_with_cache(&b, Executor::Auto, tensor_arg(1.0), &cache).unwrap();
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn opt_levels_get_distinct_entries_and_distinct_compiles() {
+        // The cache-keying regression of the pipeline refactor: the same
+        // module requested at -O0 and then -O3 must compile twice into
+        // two coexisting entries — while an alpha-renamed module at an
+        // already-resident level hits.
+        let cache = ProgramCache::new();
+        let src = "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(add(%x, 1f)) }";
+        let m = parse_module(src).unwrap();
+        let x = Tensor::from_f32(vec![2, 2], vec![-3.0, -1.0, 0.5, 2.0]);
+        let args = vec![Value::Tensor(x)];
+
+        let o0 = run_with_cache(
+            &m,
+            CompileOptions::at(Executor::Vm, OptLevel::O0),
+            args.clone(),
+            &cache,
+        )
+        .unwrap();
+        let o3 = run_with_cache(
+            &m,
+            CompileOptions::at(Executor::Vm, OptLevel::O3),
+            args.clone(),
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(cache.misses(), 2, "each level compiles once");
+        assert_eq!(cache.len(), 2, "O0 and O3 artifacts coexist");
+        assert!(o0.value.bits_eq(&o3.value));
+        assert!(o3.launches < o0.launches, "O3 entry is the fused one");
+        // Traces record their level.
+        assert_eq!(o0.pass_trace.as_ref().unwrap().level, OptLevel::O0);
+        assert_eq!(o3.pass_trace.as_ref().unwrap().level, OptLevel::O3);
+
+        // Alpha-renamed module at an existing level: pure hit.
+        let renamed = parse_module(&src.replace("%x", "%y")).unwrap();
+        let hit = run_with_cache(
+            &renamed,
+            CompileOptions::at(Executor::Vm, OptLevel::O3),
+            args,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(cache.misses(), 2, "alpha-renamed module recompiled");
+        assert_eq!(cache.hits(), 1);
+        assert!(hit.value.bits_eq(&o3.value));
     }
 
     #[test]
@@ -464,10 +616,13 @@ mod tests {
         assert_eq!(cold.executor, warm.executor);
         // Per-call launch counters, not a shared counter's running total.
         assert_eq!(cold.launches, warm.launches);
+        // The hit is served the same cached trace the cold compile built.
+        let (ct, wt) = (cold.pass_trace.unwrap(), warm.pass_trace.unwrap());
+        assert!(Arc::ptr_eq(&ct, &wt), "hit rebuilt the pass trace");
     }
 
     #[test]
-    fn executors_get_distinct_entries_and_interp_bypasses() {
+    fn executors_get_distinct_entries_and_o0_interp_bypasses() {
         let cache = ProgramCache::new();
         let m = parse_module(
             "def @main(%x: Tensor[(), float32]) { add(%x, 1f) }",
@@ -475,15 +630,29 @@ mod tests {
         .unwrap();
         let a = run_with_cache(&m, Executor::GraphRt, tensor_arg(1.0), &cache).unwrap();
         let b = run_with_cache(&m, Executor::Vm, tensor_arg(1.0), &cache).unwrap();
-        let c = run_with_cache(&m, Executor::Interp, tensor_arg(1.0), &cache).unwrap();
+        // -O0 interp has nothing to optimize and nothing to compile: it
+        // bypasses the map entirely.
+        let c = run_with_cache(
+            &m,
+            CompileOptions::at(Executor::Interp, OptLevel::O0),
+            tensor_arg(1.0),
+            &cache,
+        )
+        .unwrap();
         assert_eq!(a.executor, "graphrt");
         assert_eq!(b.executor, "vm");
         assert_eq!(c.executor, "interp");
         assert_eq!(a.value.tensor().f32_value(), 2.0);
         assert!(a.value.bits_eq(&b.value) && a.value.bits_eq(&c.value));
-        // Interp compiles nothing and takes no slot.
         assert_eq!(cache.misses(), 2);
         assert_eq!(cache.len(), 2);
+        // An *optimizing* interp compile is real work and takes a slot:
+        // the optimized module is its artifact.
+        let d = run_with_cache(&m, Executor::Interp, tensor_arg(1.0), &cache).unwrap();
+        assert_eq!(d.executor, "interp");
+        assert!(a.value.bits_eq(&d.value));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
     }
 
     #[test]

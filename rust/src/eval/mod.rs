@@ -15,8 +15,20 @@
 //! (CLI, server, benches, zoo) instead of hand-rolled fallback chains.
 //! Both compile through one process-wide [`ProgramCache`]
 //! ([`default_cache`]) keyed by the module's alpha-invariant structural
-//! hash, so repeated calls on an unchanged module — from *any* thread —
-//! compile exactly once ([`cache`] module docs).
+//! hash **plus the requested [`CompileOptions`]**, so repeated calls on an
+//! unchanged module — from *any* thread — compile exactly once per
+//! (level, executor) pair ([`cache`] module docs).
+//!
+//! # One optimizing pipeline for every executor
+//!
+//! Compilation always flows through the pass manager first
+//! ([`crate::pass::optimize_traced`]): [`CompileOptions::opt_level`]
+//! selects the §5.2 tier (default [`DEFAULT_OPT_LEVEL`] = -O3, the same
+//! default the CLI uses), and the resulting [`crate::pass::PassTrace`] is
+//! cached with the program and attached to every [`Execution`]. Passing a
+//! bare [`Executor`] where options are expected selects the default
+//! level; use [`CompileOptions::at`] to pin one (e.g. `-O0` for
+//! differential tests against unoptimized references).
 //!
 //! # Thread safety
 //!
@@ -40,6 +52,7 @@ pub use interp::{eval_expr, eval_main, Interp};
 pub use value::{env_bind, env_empty, Env, Value};
 
 use crate::ir::Module;
+use crate::pass::{OptLevel, PassTrace};
 
 // ---------------------------------------------------------------------------
 // Shared kernel-launch counting.
@@ -82,7 +95,7 @@ impl LaunchCounter {
 // ---------------------------------------------------------------------------
 
 /// Which execution tier to run a module on.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Executor {
     /// Reference tree-walk interpreter.
     Interp,
@@ -122,45 +135,134 @@ impl std::fmt::Display for Executor {
     }
 }
 
-/// The result of [`run_with`]: the value plus which tier actually ran and
-/// how many kernel launches it performed.
+// ---------------------------------------------------------------------------
+// Compile options: the one knob set every compile path shares.
+// ---------------------------------------------------------------------------
+
+/// Optimization level used when a caller passes a bare [`Executor`]
+/// (matches the CLI's `-O` default).
+pub const DEFAULT_OPT_LEVEL: OptLevel = OptLevel::O3;
+
+/// Everything the unified compile driver needs to turn a module into a
+/// runnable program: which §5.2 pass tier to run, which executor to lower
+/// for, and whether to type-check between passes.
+///
+/// This — together with the module's structural hash — is the
+/// [`ProgramCache`] key, so `-O0` and `-O3` artifacts of the same module
+/// coexist in one cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CompileOptions {
+    pub opt_level: OptLevel,
+    pub executor: Executor,
+    /// Re-run type inference between passes (slower; the CLI's `compile`
+    /// command uses it, execution paths default to off).
+    pub typecheck: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> CompileOptions {
+        CompileOptions {
+            opt_level: DEFAULT_OPT_LEVEL,
+            executor: Executor::Auto,
+            typecheck: false,
+        }
+    }
+}
+
+impl CompileOptions {
+    /// Default options for a tier: optimize at [`DEFAULT_OPT_LEVEL`].
+    pub fn new(executor: Executor) -> CompileOptions {
+        CompileOptions { executor, ..CompileOptions::default() }
+    }
+
+    /// Explicit (executor, level) pair, no inter-pass typechecking.
+    pub fn at(executor: Executor, opt_level: OptLevel) -> CompileOptions {
+        CompileOptions { executor, opt_level, typecheck: false }
+    }
+
+    pub fn with_typecheck(mut self, typecheck: bool) -> CompileOptions {
+        self.typecheck = typecheck;
+        self
+    }
+
+    /// `-O0` interpreter: no optimization, no compilation artifact —
+    /// nothing for the cache to hold. [`run_with_cache`] runs this case
+    /// on the borrowed module directly; the cache API materializes an
+    /// uncached snapshot for it.
+    pub fn is_uncached_interp(&self) -> bool {
+        self.executor == Executor::Interp && self.opt_level == OptLevel::O0
+    }
+}
+
+impl From<Executor> for CompileOptions {
+    fn from(executor: Executor) -> CompileOptions {
+        CompileOptions::new(executor)
+    }
+}
+
+impl From<(Executor, OptLevel)> for CompileOptions {
+    fn from((executor, opt_level): (Executor, OptLevel)) -> CompileOptions {
+        CompileOptions::at(executor, opt_level)
+    }
+}
+
+/// The result of [`run_with`]: the value plus which tier actually ran,
+/// how many kernel launches it performed, and what the optimizing driver
+/// did when the program was compiled.
 #[derive(Debug)]
 pub struct Execution {
     pub value: Value,
     /// Tier that executed (never "auto").
     pub executor: &'static str,
     pub launches: usize,
+    /// Per-pass wall time / node deltas from compilation. Shared with the
+    /// cache entry (compilation happens once; the trace is a snapshot of
+    /// that one run, not of this call). `None` when the caller ran a
+    /// pre-compiled program directly ([`run_compiled`]).
+    pub pass_trace: Option<Arc<PassTrace>>,
 }
 
-/// Run `@main(args...)` of an (already optimized) module on the chosen
-/// executor, compiling through an explicit [`ProgramCache`]: the first
-/// call on a module compiles (ANF + tier selection + codegen), every
-/// later call on a structurally-equal module is pure dispatch.
+/// Run `@main(args...)` on the chosen executor / optimization level,
+/// compiling through an explicit [`ProgramCache`]: the first call on a
+/// module optimizes (pass pipeline) and compiles (ANF + tier selection +
+/// codegen), every later call on a structurally-equal module at the same
+/// options is pure dispatch.
 pub fn run_with_cache(
     module: &Module,
-    executor: Executor,
+    opts: impl Into<CompileOptions>,
     args: Vec<Value>,
     cache: &ProgramCache,
 ) -> Result<Execution, String> {
-    let compiled = cache.get_or_compile(module, executor)?;
-    run_compiled(&compiled, module, args)
+    let opts: CompileOptions = opts.into();
+    if opts.is_uncached_interp() {
+        // Run the interpreter on the borrowed module (no snapshot clone).
+        let mut out = cache::interp_main(module, args)?;
+        out.pass_trace = Some(Arc::new(PassTrace::empty(OptLevel::O0)));
+        return Ok(out);
+    }
+    let (compiled, trace, _) = cache.get_or_compile_full(module, opts)?;
+    let mut out = run_compiled(&compiled, args)?;
+    out.pass_trace = Some(trace);
+    Ok(out)
 }
 
-/// Run `@main(args...)` of an (already optimized) module on the chosen
-/// executor. ANF conversion for the graph runtime / VM happens internally,
+/// Run `@main(args...)` on the chosen executor (or explicit
+/// [`CompileOptions`]). Optimization + ANF + codegen happen internally,
 /// and the compiled program is cached in the process-wide default
 /// [`ProgramCache`] — repeated calls on an unchanged module, from any
-/// thread, compile once.
+/// thread, compile once per options.
 pub fn run_with(
     module: &Module,
-    executor: Executor,
+    opts: impl Into<CompileOptions>,
     args: Vec<Value>,
 ) -> Result<Execution, String> {
-    with_default_cache(|cache| run_with_cache(module, executor, args, cache))
+    let opts: CompileOptions = opts.into();
+    with_default_cache(|cache| run_with_cache(module, opts, args, cache))
 }
 
-/// [`run_with`] with automatic tier selection: graph runtime if the
-/// program compiles to it, else the VM, else the interpreter.
+/// [`run_with`] with automatic tier selection at the default optimization
+/// level: graph runtime if the program compiles to it, else the VM, else
+/// the interpreter.
 pub fn run_auto(module: &Module, args: Vec<Value>) -> Result<Execution, String> {
     run_with(module, Executor::Auto, args)
 }
@@ -193,6 +295,10 @@ mod tests {
         assert_eq!(out.executor, "graphrt");
         assert_eq!(out.value.tensor().f32_value(), 2.0);
         assert_eq!(out.launches, 1);
+        // run_auto compiles at the default level; the trace says so.
+        let trace = out.pass_trace.expect("execution carries its pass trace");
+        assert_eq!(trace.level, DEFAULT_OPT_LEVEL);
+        assert!(!trace.passes.is_empty());
     }
 
     #[test]
@@ -210,20 +316,44 @@ mod tests {
 
     #[test]
     fn all_three_tiers_agree_where_they_apply() {
+        // At every optimization level, the three tiers run the *same*
+        // optimized module, so results are bit-identical and launch
+        // counts match across tiers (fused primitives count once on each).
         let m = parse_module(
             "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(add(%x, 1f)) }",
         )
         .unwrap();
         let x = Tensor::from_f32(vec![2, 2], vec![-3.0, -1.0, 0.5, 2.0]);
         let args = vec![Value::Tensor(x)];
-        let a = run_with(&m, Executor::Interp, args.clone()).unwrap();
-        let b = run_with(&m, Executor::GraphRt, args.clone()).unwrap();
-        let c = run_with(&m, Executor::Vm, args).unwrap();
-        assert_eq!(a.value.tensor().as_f32(), b.value.tensor().as_f32());
-        assert_eq!(a.value.tensor().as_f32(), c.value.tensor().as_f32());
-        // Same launch count on every tier.
-        assert_eq!(a.launches, b.launches);
-        assert_eq!(a.launches, c.launches);
+        for level in OptLevel::all() {
+            let a = run_with(
+                &m,
+                CompileOptions::at(Executor::Interp, level),
+                args.clone(),
+            )
+            .unwrap();
+            let b = run_with(
+                &m,
+                CompileOptions::at(Executor::GraphRt, level),
+                args.clone(),
+            )
+            .unwrap();
+            let c =
+                run_with(&m, CompileOptions::at(Executor::Vm, level), args.clone())
+                    .unwrap();
+            assert_eq!(a.value.tensor().as_f32(), b.value.tensor().as_f32());
+            assert_eq!(a.value.tensor().as_f32(), c.value.tensor().as_f32());
+            // Same launch count on every tier.
+            assert_eq!(a.launches, b.launches, "{level}");
+            assert_eq!(a.launches, c.launches, "{level}");
+        }
+        // And fusion actually reduced launches at O1+ vs O0.
+        let o0 =
+            run_with(&m, CompileOptions::at(Executor::Vm, OptLevel::O0), args.clone())
+                .unwrap();
+        let o1 =
+            run_with(&m, CompileOptions::at(Executor::Vm, OptLevel::O1), args).unwrap();
+        assert!(o1.launches < o0.launches, "{} !< {}", o1.launches, o0.launches);
     }
 
     #[test]
@@ -241,9 +371,12 @@ mod tests {
         assert_eq!(out.executor, "vm");
         assert_eq!(out.value.tensor().f32_value(), 4.0);
         // The module is now resident in the shared cache: a traced lookup
-        // must report it did not compile again.
-        let (_, compiled_now) =
-            with_default_cache(|c| c.get_or_compile_traced(&m, Executor::Auto)).unwrap();
+        // under the same (default) options must report it did not compile
+        // again.
+        let (_, compiled_now) = with_default_cache(|c| {
+            c.get_or_compile_traced(&m, CompileOptions::default())
+        })
+        .unwrap();
         assert!(!compiled_now, "run_auto did not populate the process-wide cache");
         for _ in 0..3 {
             let again = run_auto(&m, tensor_arg(-4.0)).unwrap();
@@ -267,5 +400,19 @@ mod tests {
             assert_eq!(Executor::parse(e.name()), Some(e));
         }
         assert_eq!(Executor::parse("tpu"), None);
+    }
+
+    #[test]
+    fn compile_options_conversions() {
+        let d = CompileOptions::default();
+        assert_eq!(d.opt_level, DEFAULT_OPT_LEVEL);
+        assert_eq!(d.executor, Executor::Auto);
+        assert!(!d.typecheck);
+        let from_exec: CompileOptions = Executor::Vm.into();
+        assert_eq!(from_exec.executor, Executor::Vm);
+        assert_eq!(from_exec.opt_level, DEFAULT_OPT_LEVEL);
+        let pair: CompileOptions = (Executor::GraphRt, OptLevel::O1).into();
+        assert_eq!(pair, CompileOptions::at(Executor::GraphRt, OptLevel::O1));
+        assert!(CompileOptions::new(Executor::Auto).with_typecheck(true).typecheck);
     }
 }

@@ -15,7 +15,12 @@
 //!   - `vm::Vm` — register-based bytecode VM for control-flow-heavy
 //!     programs (closures, ADTs, recursion);
 //!   selected via `eval::Executor` / `eval::run_auto` (§3.1.3's
-//!   executor-selection story; see rust/src/vm/README.md).
+//!   executor-selection story; see rust/src/vm/README.md). Every tier
+//!   compiles through ONE optimizing driver: `eval::CompileOptions`
+//!   routes the §3.1.2 pass pipeline (`pass::optimize_traced`, default
+//!   -O3) in front of executor lowering, the program cache keys on
+//!   (module hash, OptLevel, executor), and `relay dump-passes` prints
+//!   the instrumented per-pass trace.
 //! * [`tensor`], [`vta`] — substrates: reference kernels and the simulated
 //!   accelerator.
 //! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT

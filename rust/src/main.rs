@@ -58,6 +58,11 @@ fn run(args: &[String]) -> anyhow::Result<String> {
             let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
             coordinator::cmd_dump_bytecode(path, opt_of(args))
         }
+        Some("dump-passes") => {
+            let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
+            let fixpoint = args.iter().any(|a| a == "--fixpoint");
+            coordinator::cmd_dump_passes(path, opt_of(args), fixpoint)
+        }
         Some("artifact") => {
             let name = args.get(1).ok_or_else(|| anyhow::anyhow!("missing name"))?;
             let dir = flag_value(args, "--dir").unwrap_or("artifacts");
@@ -71,18 +76,26 @@ fn run(args: &[String]) -> anyhow::Result<String> {
             let workers: usize = flag_value(args, "--workers")
                 .and_then(|w| w.parse().ok())
                 .unwrap_or(4);
+            let opt_level = match flag_value(args, "--opt") {
+                None => OptLevel::O3,
+                Some(s) => OptLevel::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("bad --opt {s:?} (expected 0|1|2|3)")
+                })?,
+            };
             let cfg = server::ServerConfig {
                 port,
                 artifact_dir: dir.into(),
                 workers,
+                opt_level,
                 ..Default::default()
             };
             let stop = Arc::new(AtomicBool::new(false));
             let stats = server::serve(cfg, stop)?;
             println!(
                 "serving mlp_forward on 127.0.0.1:{port} with {} worker(s) \
-                 (ctrl-c to stop)",
-                stats.per_worker.len()
+                 at {} (ctrl-c to stop)",
+                stats.per_worker.len(),
+                stats.opt_level
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(10));

@@ -1,10 +1,20 @@
 //! Pass manager (§3.1.2): sequences Relay-to-Relay passes, re-running type
 //! inference between passes to reject malformed output and repopulate
 //! shape information. Defines the -O0..-O3 tiers measured in Fig. 10.
+//!
+//! This is the *one* optimizing driver of the compilation pipeline: every
+//! execution path — `eval::run_auto`, the process-wide `ProgramCache`, the
+//! serving fleet, and the CLI — routes through [`optimize_traced`] (via
+//! `eval::CompileOptions`) before executor lowering. The driver is
+//! instrumented: each pass records wall time and the IR node-count delta
+//! into a [`PassTrace`], surfaced by `relay dump-passes` and attached to
+//! `eval::Execution`.
+
+use std::time::{Duration, Instant};
 
 use crate::ir::Module;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum OptLevel {
     O0,
     O1,
@@ -13,12 +23,19 @@ pub enum OptLevel {
 }
 
 impl OptLevel {
+    /// Parse a level from any of the spellings users type at a CLI:
+    /// `"2"`, `"O2"`, `"o2"`, `"-O2"`, `"-o2"`.
     pub fn parse(s: &str) -> Option<OptLevel> {
-        Some(match s {
-            "O0" | "0" => OptLevel::O0,
-            "O1" | "1" => OptLevel::O1,
-            "O2" | "2" => OptLevel::O2,
-            "O3" | "3" => OptLevel::O3,
+        let t = s.strip_prefix('-').unwrap_or(s);
+        let t = t
+            .strip_prefix('O')
+            .or_else(|| t.strip_prefix('o'))
+            .unwrap_or(t);
+        Some(match t {
+            "0" => OptLevel::O0,
+            "1" => OptLevel::O1,
+            "2" => OptLevel::O2,
+            "3" => OptLevel::O3,
             _ => return None,
         })
     }
@@ -44,61 +61,242 @@ impl std::fmt::Display for OptLevel {
 pub struct Pass {
     pub name: &'static str,
     pub run: fn(&Module) -> Result<Module, String>,
+    /// Eligible for the driver's optional fixpoint loop
+    /// ([`PipelineConfig::fixpoint`]): cleanup passes (constant folding,
+    /// DCE) where one application can expose work for the next.
+    pub fixpoint: bool,
 }
 
 /// The pass pipeline for an optimization level (§5.2):
 /// * -O0: none
 /// * -O1: operator fusion
-/// * -O2: + constant folding
-/// * -O3: + FoldScaleAxis, AlterOpLayout, CanonicalizeOps, CSE
+/// * -O2: + constant folding, accumulator-passing tail-recursion rewrite
+/// * -O3: + FoldScaleAxis, AlterOpLayout, CanonicalizeOps, CSE, DCE
 pub fn passes(level: OptLevel) -> Vec<Pass> {
     let mut v: Vec<Pass> = Vec::new();
+    let pass = |name: &'static str,
+                run: fn(&Module) -> Result<Module, String>|
+     -> Pass { Pass { name, run, fixpoint: false } };
     // Inlining runs at every level >= O1 so fusion sees whole chains.
     if level >= OptLevel::O1 {
-        v.push(Pass { name: "Inline", run: |m| Ok(super::inline::run(m)) });
+        v.push(pass("Inline", |m| Ok(super::inline::run(m))));
     }
     if level >= OptLevel::O3 {
-        v.push(Pass {
-            name: "CanonicalizeOps",
-            run: |m| Ok(super::canonicalize::run(m)),
-        });
-        v.push(Pass {
-            name: "FoldScaleAxis",
-            run: |m| Ok(super::fold_scale_axis::run(m)),
-        });
-        v.push(Pass {
-            name: "CombineParallelConv2d",
-            run: |m| Ok(super::combine_parallel_conv2d::run(m)),
-        });
+        v.push(pass("CanonicalizeOps", |m| Ok(super::canonicalize::run(m))));
+        v.push(pass("FoldScaleAxis", |m| Ok(super::fold_scale_axis::run(m))));
+        v.push(pass("CombineParallelConv2d", |m| {
+            Ok(super::combine_parallel_conv2d::run(m))
+        }));
     }
     if level >= OptLevel::O2 {
-        v.push(Pass { name: "FoldConstant", run: |m| Ok(super::fold_constant::run(m)) });
+        v.push(Pass {
+            name: "FoldConstant",
+            run: |m| Ok(super::fold_constant::run(m)),
+            fixpoint: true,
+        });
+        // Runs after folding so constant list spines / trip counts are
+        // already literal, before ANF obscures the recursive call shape.
+        v.push(pass("TailAccum", |m| Ok(super::tail_accum::run(m))));
     }
     if level >= OptLevel::O3 {
-        v.push(Pass { name: "AlterOpLayout", run: super::alter_op_layout::run });
-        v.push(Pass { name: "FoldConstant2", run: |m| Ok(super::fold_constant::run(m)) });
-        v.push(Pass { name: "ToANF", run: |m| Ok(super::anf::run(m)) });
-        v.push(Pass { name: "CommonSubexprElim", run: |m| Ok(super::cse::run(m)) });
-        v.push(Pass { name: "DeadCodeElim", run: |m| Ok(super::dce::run(m)) });
+        v.push(pass("AlterOpLayout", super::alter_op_layout::run));
+        // A second folding round cleans up the weight reshapes/transposes
+        // AlterOpLayout introduced (formerly named `FoldConstant2`).
+        v.push(Pass {
+            name: "FoldConstantPostLayout",
+            run: |m| Ok(super::fold_constant::run(m)),
+            fixpoint: true,
+        });
+        v.push(pass("ToANF", |m| Ok(super::anf::run(m))));
+        v.push(pass("CommonSubexprElim", |m| Ok(super::cse::run(m))));
+        v.push(Pass {
+            name: "DeadCodeElim",
+            run: |m| Ok(super::dce::run(m)),
+            fixpoint: true,
+        });
     }
     if level >= OptLevel::O1 {
-        v.push(Pass { name: "FuseOps", run: |m| Ok(super::fusion::run(m)) });
+        v.push(pass("FuseOps", |m| Ok(super::fusion::run(m))));
     }
     v
 }
 
-/// Run the pipeline for `level`, type checking between passes
-/// ("Between each pass, Relay performs type inference and checking").
-pub fn optimize(m: &Module, level: OptLevel, typecheck: bool) -> Result<Module, String> {
+/// How the driver should run the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    pub level: OptLevel,
+    /// Re-run type inference after every pass ("Between each pass, Relay
+    /// performs type inference and checking").
+    pub typecheck: bool,
+    /// Re-apply fixpoint-eligible passes (FoldConstant, DeadCodeElim)
+    /// until the module stops changing, bounded by
+    /// [`MAX_FIXPOINT_ROUNDS`].
+    pub fixpoint: bool,
+}
+
+impl PipelineConfig {
+    pub fn new(level: OptLevel) -> PipelineConfig {
+        PipelineConfig { level, typecheck: false, fixpoint: false }
+    }
+}
+
+/// Bound on per-pass fixpoint iteration — folding/DCE converge in one or
+/// two rounds in practice; the cap keeps a pathological rewrite cycle from
+/// hanging the driver.
+pub const MAX_FIXPOINT_ROUNDS: usize = 8;
+
+/// One pass application as the instrumented driver saw it.
+#[derive(Clone, Debug)]
+pub struct PassRecord {
+    pub name: &'static str,
+    pub wall: Duration,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// Applications of the pass (1 unless [`PipelineConfig::fixpoint`]
+    /// re-ran it to convergence).
+    pub rounds: usize,
+}
+
+/// What the optimizing driver did to a module: one record per pass, plus
+/// pipeline totals. Produced by [`optimize_traced`], cached alongside the
+/// compiled program, and surfaced by `relay dump-passes` /
+/// `eval::Execution::pass_trace`.
+#[derive(Clone, Debug)]
+pub struct PassTrace {
+    pub level: OptLevel,
+    pub passes: Vec<PassRecord>,
+    pub total_wall: Duration,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+}
+
+impl PassTrace {
+    /// The trace of running no passes (the -O0 pipeline, or an executor
+    /// tier that bypasses compilation).
+    pub fn empty(level: OptLevel) -> PassTrace {
+        PassTrace {
+            level,
+            passes: Vec::new(),
+            total_wall: Duration::ZERO,
+            nodes_before: 0,
+            nodes_after: 0,
+        }
+    }
+
+    /// IR nodes removed by the whole pipeline (negative if it grew).
+    pub fn nodes_delta(&self) -> i64 {
+        self.nodes_after as i64 - self.nodes_before as i64
+    }
+
+    /// Render the per-pass table `relay dump-passes` prints.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<24} {:>10} {:>8} {:>8} {:>7} {:>7}",
+            "pass", "wall ms", "nodes", "after", "delta", "rounds"
+        );
+        for r in &self.passes {
+            let _ = writeln!(
+                out,
+                "{:<24} {:>10.3} {:>8} {:>8} {:>+7} {:>7}",
+                r.name,
+                r.wall.as_secs_f64() * 1e3,
+                r.nodes_before,
+                r.nodes_after,
+                r.nodes_after as i64 - r.nodes_before as i64,
+                r.rounds,
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{:<24} {:>10.3} {:>8} {:>8} {:>+7} {:>7}",
+            format!("total ({})", self.level),
+            self.total_wall.as_secs_f64() * 1e3,
+            self.nodes_before,
+            self.nodes_after,
+            self.nodes_delta(),
+            // The rounds column doesn't total meaningfully.
+            "",
+        );
+        out
+    }
+}
+
+/// Total IR nodes across every definition body — the size metric the
+/// driver reports per pass.
+pub fn module_node_count(m: &Module) -> usize {
+    m.defs.values().map(|f| crate::ir::count_nodes(&f.body)).sum()
+}
+
+/// Run the pipeline under an explicit [`PipelineConfig`], recording a
+/// [`PassTrace`]. This is the single optimizing driver every compile path
+/// goes through (`eval::cache::compile_for`, the CLI, the benches).
+pub fn optimize_with(
+    m: &Module,
+    cfg: &PipelineConfig,
+) -> Result<(Module, PassTrace), String> {
+    let t0 = Instant::now();
+    let nodes_before = module_node_count(m);
     let mut cur = m.clone();
-    for pass in passes(level) {
-        cur = (pass.run)(&cur).map_err(|e| format!("pass {}: {e}", pass.name))?;
-        if typecheck {
+    let mut records: Vec<PassRecord> = Vec::new();
+    for pass in passes(cfg.level) {
+        let pass_nodes_before = module_node_count(&cur);
+        let started = Instant::now();
+        let mut rounds = 0usize;
+        loop {
+            rounds += 1;
+            let next =
+                (pass.run)(&cur).map_err(|e| format!("pass {}: {e}", pass.name))?;
+            if !(cfg.fixpoint && pass.fixpoint) || rounds >= MAX_FIXPOINT_ROUNDS {
+                cur = next;
+                break;
+            }
+            // Fixpoint mode: re-run the pass until the (alpha-invariant)
+            // module hash stops moving.
+            let stable = crate::ir::module_structural_hash(&next)
+                == crate::ir::module_structural_hash(&cur);
+            cur = next;
+            if stable {
+                break;
+            }
+        }
+        if cfg.typecheck {
             crate::ty::check_module(&cur)
                 .map_err(|e| format!("after pass {}: {e}", pass.name))?;
         }
+        records.push(PassRecord {
+            name: pass.name,
+            wall: started.elapsed(),
+            nodes_before: pass_nodes_before,
+            nodes_after: module_node_count(&cur),
+            rounds,
+        });
     }
-    Ok(cur)
+    let trace = PassTrace {
+        level: cfg.level,
+        total_wall: t0.elapsed(),
+        nodes_before,
+        nodes_after: module_node_count(&cur),
+        passes: records,
+    };
+    Ok((cur, trace))
+}
+
+/// [`optimize_with`] at the given level (no fixpoint), returning the
+/// optimized module together with its [`PassTrace`].
+pub fn optimize_traced(
+    m: &Module,
+    level: OptLevel,
+    typecheck: bool,
+) -> Result<(Module, PassTrace), String> {
+    optimize_with(m, &PipelineConfig { level, typecheck, fixpoint: false })
+}
+
+/// Run the pipeline for `level`, type checking between passes when asked.
+pub fn optimize(m: &Module, level: OptLevel, typecheck: bool) -> Result<Module, String> {
+    optimize_traced(m, level, typecheck).map(|(m, _)| m)
 }
 
 #[cfg(test)]
@@ -129,6 +327,24 @@ mod tests {
     }
 
     #[test]
+    fn parse_accepts_cli_spellings() {
+        for s in ["O2", "o2", "-O2", "-o2", "2"] {
+            assert_eq!(OptLevel::parse(s), Some(OptLevel::O2), "{s}");
+        }
+        assert_eq!(OptLevel::parse("O4"), None);
+        assert_eq!(OptLevel::parse(""), None);
+        assert_eq!(OptLevel::parse("fast"), None);
+    }
+
+    #[test]
+    fn fold_constant_post_layout_replaced_the_old_name() {
+        let names: Vec<&str> = passes(OptLevel::O3).iter().map(|p| p.name).collect();
+        assert!(names.contains(&"FoldConstantPostLayout"), "{names:?}");
+        assert!(!names.contains(&"FoldConstant2"), "{names:?}");
+        assert!(names.contains(&"TailAccum"), "{names:?}");
+    }
+
+    #[test]
     fn optimize_preserves_semantics_all_levels() {
         let m = mlp_module();
         let mut rng = Rng::new(5);
@@ -152,5 +368,59 @@ mod tests {
         let s = crate::ir::print_expr(&opt.def("main").unwrap().body);
         assert!(!s.contains("ones("), "{s}");
         let _ = Tensor::scalar_f32(0.0);
+    }
+
+    #[test]
+    fn trace_records_every_pass_with_node_counts() {
+        let m = mlp_module();
+        let (opt, trace) = optimize_traced(&m, OptLevel::O3, false).unwrap();
+        assert_eq!(trace.level, OptLevel::O3);
+        assert_eq!(trace.passes.len(), passes(OptLevel::O3).len());
+        assert_eq!(trace.nodes_after, module_node_count(&opt));
+        // Records chain: each pass starts where the previous ended.
+        for w in trace.passes.windows(2) {
+            assert_eq!(w[0].nodes_after, w[1].nodes_before);
+        }
+        assert_eq!(trace.passes[0].nodes_before, module_node_count(&m));
+        // The rendered table mentions every pass and the total line.
+        let table = trace.render();
+        for p in &trace.passes {
+            assert!(table.contains(p.name), "{table}");
+        }
+        assert!(table.contains("total (-O3)"), "{table}");
+        // O0 is the empty pipeline.
+        let (_, t0) = optimize_traced(&m, OptLevel::O0, false).unwrap();
+        assert!(t0.passes.is_empty());
+    }
+
+    #[test]
+    fn fixpoint_rounds_are_recorded_and_bounded() {
+        let m = mlp_module();
+        let cfg = PipelineConfig {
+            level: OptLevel::O2,
+            typecheck: false,
+            fixpoint: true,
+        };
+        let (with_fix, trace) = optimize_with(&m, &cfg).unwrap();
+        let fold = trace
+            .passes
+            .iter()
+            .find(|r| r.name == "FoldConstant")
+            .expect("FoldConstant record");
+        assert!(
+            (1..=MAX_FIXPOINT_ROUNDS).contains(&fold.rounds),
+            "rounds {}",
+            fold.rounds
+        );
+        // Non-fixpoint passes always run exactly once.
+        let fuse = trace.passes.iter().find(|r| r.name == "FuseOps").unwrap();
+        assert_eq!(fuse.rounds, 1);
+        // Fixpoint must not change what the single-round pipeline already
+        // converged to on this module.
+        let plain = optimize(&m, OptLevel::O2, false).unwrap();
+        assert_eq!(
+            crate::ir::module_structural_hash(&with_fix),
+            crate::ir::module_structural_hash(&plain)
+        );
     }
 }

@@ -17,6 +17,10 @@ pub mod inline;
 pub mod manager;
 pub mod partial_eval;
 pub mod purity;
+pub mod tail_accum;
 
 pub use ad::grad_expr;
-pub use manager::{optimize, OptLevel};
+pub use manager::{
+    optimize, optimize_traced, optimize_with, OptLevel, PassRecord, PassTrace,
+    PipelineConfig,
+};

@@ -1,0 +1,748 @@
+//! Accumulator-passing tail-recursion rewrite (the -O2 tier's loop
+//! conversion; ROADMAP "TCO follow-ups" item).
+//!
+//! The VM's tail-call elimination flattens calls whose result flows
+//! straight to `Ret` — but a fold like TreeLSTM's child-sum,
+//!
+//! ```text
+//! let %sum = fn (%l) {
+//!   match (%l) { Cons(%h, %t) -> add(%h, %sum(%t)), Nil -> 0f }
+//! };
+//! ```
+//!
+//! is genuinely non-tail: every `Cons` frame must stay live to apply the
+//! pending `add`, so the frame stack grows linearly with the list. This
+//! pass converts such folds to accumulator-passing style,
+//!
+//! ```text
+//! let %sum_acc = fn (%l, %acc) {
+//!   match (%l) { Cons(%h, %t) -> %sum_acc(%t, add(%acc, %h)),
+//!                Nil -> add(%acc, 0f) }
+//! };
+//! let %sum = fn (%l) {
+//!   // entry copy: performs the FIRST fold step itself, seeding the
+//!   // accumulator with the first element — no identity constant is
+//!   // ever injected, so the fold's dtype is untouched.
+//!   match (%l) { Cons(%h, %t) -> %sum_acc(%t, %h), Nil -> 0f }
+//! };
+//! ```
+//!
+//! which the VM's `TailInvokeFunc`/`TailInvokeClosure` then run in O(1)
+//! frame-stack depth (`Vm::max_depth` stays ≤ 2 on a 10k-element fold).
+//!
+//! Scope and soundness:
+//! * Both `let %f = fn ...` recursion and self-recursive global defs
+//!   (`def @sum_h`) are rewritten; the original name becomes an entry
+//!   copy of the function whose wrapped arms hand off to the accumulator
+//!   version with the first element as the seed (base and direct-tail
+//!   arms are kept verbatim), so external callers — and first-class uses
+//!   of the name — see identical arity, dtype, and base-case behavior.
+//! * Only calls wrapped in an **associative, commutative** operator
+//!   (`add`, `multiply`) qualify, the same operator at every wrapped
+//!   site, with the non-recursive operand pure (the rewrite reorders its
+//!   evaluation relative to the recursion).
+//! * Like any reassociation (cf. FoldScaleAxis), the rewrite can change
+//!   floating-point rounding: the fold becomes left-to-right instead of
+//!   right-to-left. That is why it lives at -O2+, not -O1.
+//! * Arms where the function doesn't appear, appears as a direct tail
+//!   call, or appears as a one-level ANF binding (`let %s = %f(%t);
+//!   add(%h, %s)`) are all handled; anything else (two recursive calls
+//!   in one arm, the function escaping as a value, a non-qualifying
+//!   wrapper op) leaves the function untouched.
+
+use std::sync::Arc;
+
+use super::purity::is_pure;
+use crate::ir::{call, global, op_call, var, Expr, Function, Module, Var, E};
+
+/// Is `op` an associative + commutative combine operator the rewrite may
+/// reassociate? (No identity element is needed: the entry copy seeds the
+/// accumulator with the first element instead.)
+fn foldable_op(op: &str) -> bool {
+    matches!(op, "add" | "multiply")
+}
+
+/// How the function refers to itself: a let-bound variable or a global.
+#[derive(Clone)]
+enum SelfRef {
+    Local(Var),
+    Global(String),
+}
+
+impl SelfRef {
+    fn matches(&self, e: &E) -> bool {
+        match (self, &**e) {
+            (SelfRef::Local(v), Expr::Var(w)) => v == w,
+            (SelfRef::Global(n), Expr::Global(g)) => n == g,
+            _ => false,
+        }
+    }
+}
+
+/// Does the self-reference occur anywhere in `e`? (Variable ids are
+/// globally unique, so no shadowing analysis is needed.)
+fn occurs(e: &E, f: &SelfRef) -> bool {
+    fn go(e: &E, f: &SelfRef, found: &mut bool) {
+        if *found || f.matches(e) {
+            *found = true;
+            return;
+        }
+        crate::ir::visit_children(e, |c| go(c, f, found));
+    }
+    let mut found = false;
+    go(e, f, &mut found);
+    found
+}
+
+fn mentions_var(e: &E, v: &Var) -> bool {
+    fn go(e: &E, v: &Var, found: &mut bool) {
+        if *found || matches!(&**e, Expr::Var(w) if w == v) {
+            *found = true;
+            return;
+        }
+        crate::ir::visit_children(e, |c| go(c, v, found));
+    }
+    let mut found = false;
+    go(e, v, &mut found);
+    found
+}
+
+/// `let %r = e; %r`  =>  `e` — the shape ANF leaves at arm tails.
+fn peel_ret(e: &E) -> E {
+    if let Expr::Let { var: r, value, body, .. } = &**e {
+        if matches!(&**body, Expr::Var(v) if v == r) {
+            return value.clone();
+        }
+    }
+    e.clone()
+}
+
+/// A tail position classified against the self-reference.
+enum Tail {
+    /// No occurrence of `f`: a base case.
+    Base,
+    /// `f(args)` (directly or through a `let`-move): stays a tail call.
+    Direct(Vec<E>),
+    /// `op(other, f(args))` / `op(f(args), other)` (directly or through
+    /// one level of ANF): the fold step.
+    Wrapped { op: String, recursive_args: Vec<E>, other: E },
+}
+
+/// Classify one tail expression, or `None` if it disqualifies the rewrite
+/// (f in non-tail position, escaping, wrong arity, impure operand, ...).
+fn classify_tail(e: &E, f: &SelfRef, arity: usize) -> Option<Tail> {
+    // A saturated call to `f` with f-free arguments.
+    let as_self_call = |e: &E| -> Option<Vec<E>> {
+        if let Expr::Call { f: callee, args, .. } = &**e {
+            if f.matches(callee)
+                && args.len() == arity
+                && args.iter().all(|a| !occurs(a, f))
+            {
+                return Some(args.clone());
+            }
+        }
+        None
+    };
+    // `op(a, b)` for a qualifying combine operator with no attrs.
+    let as_combine = |e: &E| -> Option<(String, E, E)> {
+        if let Expr::Call { f: op_e, args, attrs } = &**e {
+            if let Expr::Op(name) = &**op_e {
+                if args.len() == 2 && attrs.is_empty() && foldable_op(name) {
+                    return Some((name.clone(), args[0].clone(), args[1].clone()));
+                }
+            }
+        }
+        None
+    };
+    let wrapped = |op: String, rec: &E, other: &E| -> Option<Tail> {
+        let recursive_args = as_self_call(rec)?;
+        if occurs(other, f) || !is_pure(other) {
+            return None;
+        }
+        Some(Tail::Wrapped { op, recursive_args, other: other.clone() })
+    };
+
+    if !occurs(e, f) {
+        return Some(Tail::Base);
+    }
+    if let Some(args) = as_self_call(e) {
+        return Some(Tail::Direct(args));
+    }
+    if let Some((op, a, b)) = as_combine(e) {
+        // Exactly one operand recurses; `wrapped` rejects the other cases.
+        if as_self_call(&b).is_some() {
+            return wrapped(op, &b, &a);
+        }
+        if as_self_call(&a).is_some() {
+            return wrapped(op, &a, &b);
+        }
+        return None;
+    }
+    // One-level ANF: `let %s = f(args); <%s | op-combine of %s>`.
+    if let Expr::Let { var: s, value, body, .. } = &**e {
+        if let Some(recursive_args) = as_self_call(value) {
+            let combine = peel_ret(body);
+            if occurs(&combine, f) {
+                return None;
+            }
+            if matches!(&*combine, Expr::Var(v) if v == s) {
+                return Some(Tail::Direct(recursive_args));
+            }
+            if let Some((op, a, b)) = as_combine(&combine) {
+                let other = if matches!(&*a, Expr::Var(v) if v == s) {
+                    b
+                } else if matches!(&*b, Expr::Var(v) if v == s) {
+                    a
+                } else {
+                    return None;
+                };
+                if mentions_var(&other, s) || !is_pure(&other) {
+                    return None;
+                }
+                return Some(Tail::Wrapped { op, recursive_args, other });
+            }
+        }
+    }
+    None
+}
+
+/// Phase 1: walk the tail positions of `body` and decide whether the
+/// rewrite applies. Returns the combine operator iff every occurrence of
+/// `f` qualifies and at least one is op-wrapped (a pure tail loop gains
+/// nothing — the VM already flattens it).
+fn scan_tail(
+    e: &E,
+    f: &SelfRef,
+    arity: usize,
+    op: &mut Option<String>,
+    any_wrapped: &mut bool,
+) -> bool {
+    match &**e {
+        Expr::If { cond, then_, else_ } => {
+            !occurs(cond, f)
+                && scan_tail(then_, f, arity, op, any_wrapped)
+                && scan_tail(else_, f, arity, op, any_wrapped)
+        }
+        Expr::Match { scrut, arms } => {
+            !occurs(scrut, f)
+                && arms.iter().all(|(_, a)| scan_tail(a, f, arity, op, any_wrapped))
+        }
+        // A let whose value doesn't recurse just scopes the tail.
+        Expr::Let { value, body, .. }
+            if !occurs(value, f) && classify_tail(e, f, arity).is_none() =>
+        {
+            scan_tail(body, f, arity, op, any_wrapped)
+        }
+        _ => match classify_tail(e, f, arity) {
+            Some(Tail::Base) | Some(Tail::Direct(_)) => true,
+            Some(Tail::Wrapped { op: o, .. }) => {
+                match op {
+                    Some(prev) if *prev != o => return false,
+                    _ => *op = Some(o),
+                }
+                *any_wrapped = true;
+                true
+            }
+            None => false,
+        },
+    }
+}
+
+/// Phase 2: rebuild `body` in accumulator-passing style. Mirrors
+/// [`scan_tail`] exactly; `None` only if the two phases fell out of sync
+/// (callers then leave the function untouched).
+fn rewrite_tail(
+    e: &E,
+    f: &SelfRef,
+    arity: usize,
+    op: &str,
+    new_callee: &E,
+    acc: &Var,
+) -> Option<E> {
+    match &**e {
+        Expr::If { cond, then_, else_ } if occurs(e, f) => Some(Arc::new(Expr::If {
+            cond: cond.clone(),
+            then_: rewrite_tail(then_, f, arity, op, new_callee, acc)?,
+            else_: rewrite_tail(else_, f, arity, op, new_callee, acc)?,
+        })),
+        Expr::Match { scrut, arms } if occurs(e, f) => {
+            let arms = arms
+                .iter()
+                .map(|(p, a)| {
+                    Some((p.clone(), rewrite_tail(a, f, arity, op, new_callee, acc)?))
+                })
+                .collect::<Option<Vec<_>>>()?;
+            Some(Arc::new(Expr::Match { scrut: scrut.clone(), arms }))
+        }
+        Expr::Let { var: s, ty, value, body }
+            if !occurs(value, f) && classify_tail(e, f, arity).is_none() =>
+        {
+            Some(Arc::new(Expr::Let {
+                var: s.clone(),
+                ty: ty.clone(),
+                value: value.clone(),
+                body: rewrite_tail(body, f, arity, op, new_callee, acc)?,
+            }))
+        }
+        _ => match classify_tail(e, f, arity)? {
+            // Base: fold the pending accumulator into the result.
+            Tail::Base => Some(op_call(op, vec![var(acc), e.clone()])),
+            // Direct tail call: thread the accumulator through unchanged.
+            Tail::Direct(mut args) => {
+                args.push(var(acc));
+                Some(call(new_callee.clone(), args))
+            }
+            // The fold step: fold `other` into the accumulator *before*
+            // recursing (associativity + commutativity; `other` is pure).
+            Tail::Wrapped { op: o, mut recursive_args, other } => {
+                if o != op {
+                    return None;
+                }
+                recursive_args.push(op_call(op, vec![var(acc), other]));
+                Some(call(new_callee.clone(), recursive_args))
+            }
+        },
+    }
+}
+
+/// The entry copy of the original function: base and direct-tail arms are
+/// kept verbatim (so dtype, base-case bits, and self-recursion through
+/// the original name are untouched), and each op-wrapped arm hands off to
+/// the accumulator function with the non-recursive operand as the seed.
+/// Mirrors [`scan_tail`] like [`rewrite_tail`] does.
+fn rewrite_entry(
+    e: &E,
+    f: &SelfRef,
+    arity: usize,
+    op: &str,
+    new_callee: &E,
+) -> Option<E> {
+    match &**e {
+        Expr::If { cond, then_, else_ } if occurs(e, f) => Some(Arc::new(Expr::If {
+            cond: cond.clone(),
+            then_: rewrite_entry(then_, f, arity, op, new_callee)?,
+            else_: rewrite_entry(else_, f, arity, op, new_callee)?,
+        })),
+        Expr::Match { scrut, arms } if occurs(e, f) => {
+            let arms = arms
+                .iter()
+                .map(|(p, a)| {
+                    Some((p.clone(), rewrite_entry(a, f, arity, op, new_callee)?))
+                })
+                .collect::<Option<Vec<_>>>()?;
+            Some(Arc::new(Expr::Match { scrut: scrut.clone(), arms }))
+        }
+        Expr::Let { var: s, ty, value, body }
+            if !occurs(value, f) && classify_tail(e, f, arity).is_none() =>
+        {
+            Some(Arc::new(Expr::Let {
+                var: s.clone(),
+                ty: ty.clone(),
+                value: value.clone(),
+                body: rewrite_entry(body, f, arity, op, new_callee)?,
+            }))
+        }
+        _ => match classify_tail(e, f, arity)? {
+            // Base case and direct tail calls stay exactly as written:
+            // the entry function recurses through the *original* name.
+            Tail::Base | Tail::Direct(_) => Some(e.clone()),
+            // First fold step: the non-recursive operand becomes the
+            // initial accumulator — no identity constant involved.
+            Tail::Wrapped { op: o, mut recursive_args, other } => {
+                if o != op {
+                    return None;
+                }
+                recursive_args.push(other);
+                Some(call(new_callee.clone(), recursive_args))
+            }
+        },
+    }
+}
+
+/// The pieces of one successful rewrite: the accumulator-passing function
+/// and the entry copy that replaces the original under its name.
+struct Rewritten {
+    acc_fn: Function,
+    wrapper: Function,
+}
+
+fn rewrite_function(fun: &Function, f: &SelfRef, new_callee: &E) -> Option<Rewritten> {
+    let arity = fun.params.len();
+    let (mut op, mut any_wrapped) = (None, false);
+    if !scan_tail(&fun.body, f, arity, &mut op, &mut any_wrapped) || !any_wrapped {
+        return None;
+    }
+    let op = op?;
+    let acc = Var::fresh("acc");
+    let new_body = rewrite_tail(&fun.body, f, arity, &op, new_callee, &acc)?;
+    let mut acc_params = fun.params.clone();
+    acc_params.push((acc, None));
+    let acc_fn = Function {
+        params: acc_params,
+        ret: fun.ret.clone(),
+        body: new_body,
+        attrs: fun.attrs.clone(),
+    };
+    // Entry copy: alpha-refresh the whole function first so the two
+    // copies of the body don't share binder ids, then rewrite only the
+    // wrapped arms into accumulator handoffs.
+    let refreshed = crate::ir::refresh(&Arc::new(Expr::Func(fun.clone())));
+    let rf = match &*refreshed {
+        Expr::Func(rf) => rf.clone(),
+        _ => return None,
+    };
+    let entry_body = rewrite_entry(&rf.body, f, arity, &op, new_callee)?;
+    let wrapper = Function {
+        params: rf.params,
+        ret: fun.ret.clone(),
+        body: entry_body,
+        attrs: fun.attrs.clone(),
+    };
+    Some(Rewritten { acc_fn, wrapper })
+}
+
+/// Rewrite every qualifying `let %f = fn ...` recursion inside `e`.
+pub fn rewrite_expr(e: &E) -> E {
+    crate::ir::rewrite_postorder(e, &mut |n| {
+        let (fv, ty, fun, rest) = match &**n {
+            Expr::Let { var: fv, ty, value, body } => match &**value {
+                Expr::Func(fun) => (fv, ty, fun, body),
+                _ => return None,
+            },
+            _ => return None,
+        };
+        let sr = SelfRef::Local(fv.clone());
+        if !occurs(&fun.body, &sr) {
+            return None;
+        }
+        let f_acc = Var::fresh(&format!("{}_acc", fv.name));
+        let rw = rewrite_function(fun, &sr, &var(&f_acc))?;
+        Some(Arc::new(Expr::Let {
+            var: f_acc,
+            ty: None,
+            value: Arc::new(Expr::Func(rw.acc_fn)),
+            body: Arc::new(Expr::Let {
+                var: fv.clone(),
+                ty: ty.clone(),
+                value: Arc::new(Expr::Func(rw.wrapper)),
+                body: rest.clone(),
+            }),
+        }))
+    })
+}
+
+/// A definition name not already taken in `m`.
+fn fresh_def_name(m: &Module, base: &str) -> String {
+    let mut name = format!("{base}_acc");
+    let mut i = 1;
+    while m.defs.contains_key(&name) {
+        name = format!("{base}_acc{i}");
+        i += 1;
+    }
+    name
+}
+
+pub fn run(m: &Module) -> Module {
+    // Let-bound recursion inside every definition body.
+    let mut out = m.map_defs(|_, f| {
+        let mut nf = f.clone();
+        nf.body = rewrite_expr(&f.body);
+        nf
+    });
+    // Self-recursive global definitions (TreeLSTM's `@sum_h` shape).
+    let names: Vec<String> = out.defs.keys().cloned().collect();
+    for name in names {
+        let fun = out.defs[&name].clone();
+        let sr = SelfRef::Global(name.clone());
+        if !occurs(&fun.body, &sr) {
+            continue;
+        }
+        let acc_name = fresh_def_name(&out, &name);
+        if let Some(rw) = rewrite_function(&fun, &sr, &global(&acc_name)) {
+            out.add_def(acc_name, rw.acc_fn);
+            out.add_def(name, rw.wrapper);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{eval_expr, eval_main};
+    use crate::ir::{self, scalar, Pattern};
+
+    /// `let %sum = fn (%l) { match %l { Cons(h,t) -> add(h, sum(t)),
+    /// Nil -> 0f } }; %sum(list)` — the fold of the module docs.
+    fn sum_fold(n: usize, anf_step: bool) -> E {
+        let sum = Var::fresh("sum");
+        let l = Var::fresh("l");
+        let h = Var::fresh("h");
+        let t = Var::fresh("t");
+        let step = if anf_step {
+            let s = Var::fresh("s");
+            ir::let_(
+                s.clone(),
+                call(var(&sum), vec![var(&t)]),
+                op_call("add", vec![var(&h), var(&s)]),
+            )
+        } else {
+            op_call("add", vec![var(&h), call(var(&sum), vec![var(&t)])])
+        };
+        let body = ir::match_(
+            var(&l),
+            vec![
+                (
+                    Pattern::Ctor(
+                        "Cons".into(),
+                        vec![Pattern::Var(h.clone()), Pattern::Var(t.clone())],
+                    ),
+                    step,
+                ),
+                (Pattern::Ctor("Nil".into(), vec![]), scalar(0.0)),
+            ],
+        );
+        let items: Vec<E> = (0..n).map(|i| scalar(i as f32 + 1.0)).collect();
+        ir::let_(
+            sum.clone(),
+            ir::func(vec![(l, None)], body),
+            call(var(&sum), vec![ir::list_expr(items)]),
+        )
+    }
+
+    #[test]
+    fn rewrites_list_sum_fold_and_preserves_the_value() {
+        let m = Module::with_prelude();
+        for anf_step in [false, true] {
+            let e = sum_fold(6, anf_step);
+            let before = eval_expr(&m, &e).unwrap();
+            let rewritten = rewrite_expr(&e);
+            let s = ir::print_expr(&rewritten);
+            assert!(s.contains("sum_acc"), "not rewritten (anf={anf_step}): {s}");
+            let after = eval_expr(&m, &rewritten).unwrap();
+            // 1+2+..+6 in either association is exact in f32.
+            assert_eq!(before.tensor().f32_value(), 21.0);
+            assert!(before.bits_eq(&after), "anf={anf_step}");
+        }
+    }
+
+    #[test]
+    fn rewritten_fold_runs_in_constant_vm_depth() {
+        let n = 300;
+        let m = Module::with_prelude();
+        let e = sum_fold(n, false);
+
+        let p0 = crate::vm::compile_expr(&m, &e).unwrap();
+        let vm0 = crate::vm::Vm::new(&p0);
+        let v0 = vm0.run(vec![]).unwrap();
+        assert!(vm0.max_depth.get() >= n, "baseline should recurse deep");
+
+        let p1 = crate::vm::compile_expr(&m, &rewrite_expr(&e)).unwrap();
+        let vm1 = crate::vm::Vm::new(&p1);
+        let v1 = vm1.run(vec![]).unwrap();
+        assert!(
+            vm1.max_depth.get() <= 2,
+            "accumulator loop still grew the frame stack: {}",
+            vm1.max_depth.get()
+        );
+        assert_eq!(v0.tensor().f32_value(), v1.tensor().f32_value());
+    }
+
+    #[test]
+    fn global_self_recursive_fold_is_rewritten() {
+        // TreeLSTM's `@sum_h` shape: a global def recursing through
+        // `Expr::Global`.
+        let mut m = Module::with_prelude();
+        let l = Var::fresh("l");
+        let h = Var::fresh("h");
+        let t = Var::fresh("t");
+        let body = ir::match_(
+            var(&l),
+            vec![
+                (
+                    Pattern::Ctor(
+                        "Cons".into(),
+                        vec![Pattern::Var(h.clone()), Pattern::Var(t.clone())],
+                    ),
+                    op_call("add", vec![var(&h), call(global("sum"), vec![var(&t)])]),
+                ),
+                (Pattern::Ctor("Nil".into(), vec![]), scalar(0.0)),
+            ],
+        );
+        m.add_def("sum", Function::new(vec![(l, None)], body));
+        let items: Vec<E> = (0..5).map(|i| scalar(i as f32)).collect();
+        m.add_def(
+            "main",
+            Function::new(
+                vec![],
+                call(global("sum"), vec![ir::list_expr(items)]),
+            ),
+        );
+
+        let before = eval_main(&m, vec![]).unwrap();
+        let out = run(&m);
+        assert!(out.def("sum_acc").is_some(), "global fold not rewritten");
+        // Wrapper keeps the public name and arity.
+        assert_eq!(out.def("sum").unwrap().params.len(), 1);
+        assert_eq!(out.def("sum_acc").unwrap().params.len(), 2);
+        let after = eval_main(&out, vec![]).unwrap();
+        assert_eq!(before.tensor().f32_value(), 10.0);
+        assert!(before.bits_eq(&after));
+    }
+
+    #[test]
+    fn non_associative_and_multi_recursive_folds_are_untouched() {
+        let m = Module::with_prelude();
+        // subtract is not a qualifying combine op.
+        let e = ir::parse_expr(
+            "let %f = fn (%i) {\n\
+               if (greater(%i, 0f)) { subtract(%i, %f(subtract(%i, 1f))) }\n\
+               else { 0f }\n\
+             };\n\
+             %f(4f)",
+        )
+        .unwrap();
+        let r = rewrite_expr(&e);
+        assert!(ir::alpha_eq(&e, &r), "subtract fold was rewritten");
+        assert!(eval_expr(&m, &r).unwrap().bits_eq(&eval_expr(&m, &e).unwrap()));
+
+        // Two recursive calls in one arm (tree shape) can't linearize.
+        let e2 = ir::parse_expr(
+            "let %g = fn (%i) {\n\
+               if (greater(%i, 1f)) {\n\
+                 add(%g(subtract(%i, 1f)), %g(subtract(%i, 2f)))\n\
+               } else { %i }\n\
+             };\n\
+             %g(6f)",
+        )
+        .unwrap();
+        let r2 = rewrite_expr(&e2);
+        assert!(ir::alpha_eq(&e2, &r2), "two-call recursion was rewritten");
+    }
+
+    #[test]
+    fn already_tail_recursive_loops_are_left_alone() {
+        // No wrapped call: nothing to gain, VM TCO already flattens it.
+        let e = ir::parse_expr(
+            "let %loop = fn (%i, %acc) {\n\
+               if (greater(%i, 0f)) {\n\
+                 %loop(subtract(%i, 1f), add(%acc, %i))\n\
+               } else { %acc }\n\
+             };\n\
+             %loop(5f, 0f)",
+        )
+        .unwrap();
+        let r = rewrite_expr(&e);
+        assert!(ir::alpha_eq(&e, &r));
+    }
+
+    #[test]
+    fn escaping_function_values_disable_the_rewrite() {
+        // %f is returned as a value from one arm: rewriting would change
+        // the escaping closure's arity.
+        let e = ir::parse_expr(
+            "let %f = fn (%i) {\n\
+               if (greater(%i, 0f)) { add(%i, %f(subtract(%i, 1f))) }\n\
+               else { 0f }\n\
+             };\n\
+             (%f, %f(2f)).1",
+        )
+        .unwrap();
+        // The fold itself qualifies; the escape is *outside* the function
+        // body, where the wrapper keeps the original arity — so this MUST
+        // still be rewritten and still evaluate correctly.
+        let m = Module::with_prelude();
+        let before = eval_expr(&m, &e).unwrap();
+        let r = rewrite_expr(&e);
+        let after = eval_expr(&m, &r).unwrap();
+        assert!(before.bits_eq(&after));
+
+        // But an escape in a *tail position of the body* disables it.
+        let f = Var::fresh("f");
+        let i = Var::fresh("i");
+        let body = ir::if_(
+            op_call("greater", vec![var(&i), scalar(0.0)]),
+            op_call("add", vec![var(&i), call(var(&f), vec![scalar(0.0)])]),
+            var(&f), // escapes
+        );
+        let e2 = ir::let_(
+            f.clone(),
+            ir::func(vec![(i, None)], body),
+            call(var(&f), vec![scalar(1.0)]),
+        );
+        let r2 = rewrite_expr(&e2);
+        assert!(ir::alpha_eq(&e2, &r2), "escaping body was rewritten");
+    }
+
+    #[test]
+    fn multiply_folds_are_rewritten() {
+        let m = Module::with_prelude();
+        let e = ir::parse_expr(
+            "let %fact = fn (%i) {\n\
+               if (greater(%i, 0f)) { multiply(%i, %fact(subtract(%i, 1f))) }\n\
+               else { 1f }\n\
+             };\n\
+             %fact(5f)",
+        )
+        .unwrap();
+        let r = rewrite_expr(&e);
+        assert!(ir::print_expr(&r).contains("fact_acc"), "{}", ir::print_expr(&r));
+        let out = eval_expr(&m, &r).unwrap();
+        assert_eq!(out.tensor().f32_value(), 120.0);
+    }
+
+    #[test]
+    fn integer_folds_keep_their_dtype() {
+        // Regression: the entry copy seeds the accumulator with the first
+        // *element*, never an f32 identity constant — an i64 fold must
+        // come out bit-identical and still I64 after the rewrite.
+        use crate::tensor::{DType, Tensor};
+        let m = Module::with_prelude();
+        let f = Var::fresh("isum");
+        let l = Var::fresh("l");
+        let h = Var::fresh("h");
+        let t = Var::fresh("t");
+        let body = ir::match_(
+            var(&l),
+            vec![
+                (
+                    Pattern::Ctor(
+                        "Cons".into(),
+                        vec![Pattern::Var(h.clone()), Pattern::Var(t.clone())],
+                    ),
+                    op_call("add", vec![var(&h), call(var(&f), vec![var(&t)])]),
+                ),
+                (
+                    Pattern::Ctor("Nil".into(), vec![]),
+                    ir::constant(Tensor::zeros(&[1], DType::I64)),
+                ),
+            ],
+        );
+        let items: Vec<E> = (1..=4i64)
+            .map(|i| ir::constant(Tensor::from_i64(vec![1], vec![i])))
+            .collect();
+        let e = ir::let_(
+            f.clone(),
+            ir::func(vec![(l, None)], body),
+            call(var(&f), vec![ir::list_expr(items)]),
+        );
+        let before = eval_expr(&m, &e).unwrap();
+        assert_eq!(before.tensor().dtype(), DType::I64);
+        let r = rewrite_expr(&e);
+        assert!(ir::print_expr(&r).contains("isum_acc"), "{}", ir::print_expr(&r));
+        let after = eval_expr(&m, &r).unwrap();
+        assert_eq!(after.tensor().dtype(), DType::I64, "dtype changed by rewrite");
+        assert!(before.bits_eq(&after));
+        assert_eq!(after.tensor().as_i64()[0], 10);
+    }
+
+    #[test]
+    fn applies_inside_the_o2_pipeline() {
+        let m = Module::from_expr(sum_fold(4, false));
+        let opt = crate::pass::optimize(&m, crate::pass::OptLevel::O2, false).unwrap();
+        let s = ir::print_expr(&opt.def("main").unwrap().body);
+        assert!(s.contains("sum_acc"), "O2 pipeline skipped TailAccum: {s}");
+        let v = eval_main(&opt, vec![]).unwrap();
+        assert_eq!(v.tensor().f32_value(), 10.0);
+    }
+}

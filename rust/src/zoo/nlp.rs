@@ -461,18 +461,28 @@ mod tests {
     fn vm_executes_every_nlp_model_and_matches_the_interpreter() {
         // The executor-selection layer routes these to the VM (control
         // flow + ADTs reject the graph runtime), and results bit-match
-        // the reference interpreter.
+        // the reference interpreter. The bit-comparison runs at -O0: the
+        // reference is the *unoptimized* interpreter, and -O2+'s
+        // TailAccum legitimately reassociates TreeLSTM's child-sum fold
+        // (cross-level coverage lives in the pipeline proptests).
+        use crate::eval::{CompileOptions, Executor};
+        use crate::pass::OptLevel;
         for model in Model::nlp() {
             let (m, args) = build_nlp(model, 7);
             let reference = eval_main(&m, args.clone()).unwrap();
-            let out = crate::eval::run_with(&m, crate::eval::Executor::Vm, args.clone())
-                .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
+            let out = crate::eval::run_with(
+                &m,
+                CompileOptions::at(Executor::Vm, OptLevel::O0),
+                args.clone(),
+            )
+            .unwrap_or_else(|e| panic!("{}: {e}", model.name()));
             assert!(
                 reference.bits_eq(&out.value),
                 "{}: VM diverged from interpreter: {reference:?} vs {:?}",
                 model.name(),
                 out.value
             );
+            // The default (optimizing) auto path still lands on the VM.
             let auto = crate::eval::run_auto(&m, args).unwrap();
             assert_eq!(auto.executor, "vm", "{}", model.name());
         }

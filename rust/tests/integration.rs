@@ -191,3 +191,73 @@ fn combine_parallel_conv2d_on_inception_style_module() {
     let after = eval_main(&combined, vec![Value::Tensor(input)]).unwrap();
     assert!(before.tensor().allclose(after.tensor(), 1e-4, 1e-4));
 }
+
+#[test]
+fn tail_accum_keeps_vm_depth_bounded_on_a_10k_element_fold() {
+    // The ROADMAP acceptance bar for the accumulator-passing rewrite: a
+    // TreeLSTM-style non-tail fold (`add(%h, %sum(%t))`) over a
+    // 10_000-element list previously grew the VM frame stack linearly;
+    // through the -O2 pipeline it must run at `Vm::max_depth <= 2`.
+    use relay::ir::{self, Pattern};
+
+    let n = 10_000usize;
+    let sum = relay::ir::Var::fresh("sum");
+    let l = relay::ir::Var::fresh("l");
+    let h = relay::ir::Var::fresh("h");
+    let t = relay::ir::Var::fresh("t");
+    let body = ir::match_(
+        ir::var(&l),
+        vec![
+            (
+                Pattern::Ctor(
+                    "Cons".into(),
+                    vec![Pattern::Var(h.clone()), Pattern::Var(t.clone())],
+                ),
+                ir::op_call(
+                    "add",
+                    vec![ir::var(&h), ir::call(ir::var(&sum), vec![ir::var(&t)])],
+                ),
+            ),
+            (Pattern::Ctor("Nil".into(), vec![]), ir::scalar(0.0)),
+        ],
+    );
+    let arg = relay::ir::Var::fresh("input");
+    let main_body = ir::let_(
+        sum.clone(),
+        ir::func(vec![(l, None)], body),
+        ir::call(ir::var(&sum), vec![ir::var(&arg)]),
+    );
+    let mut m = relay::ir::Module::with_prelude();
+    m.add_def("main", relay::ir::Function::new(vec![(arg, None)], main_body));
+
+    // The 10k list is built host-side and passed as an argument, so the
+    // test measures the fold's recursion, not list construction.
+    let items: Vec<Value> =
+        (0..n).map(|_| Value::Tensor(relay::tensor::Tensor::scalar_f32(1.0))).collect();
+    let list = Value::list(items);
+
+    // -O0 baseline: the fold is genuinely non-tail, frame depth ~ n.
+    let p0 = relay::vm::compile(&m).expect("O0 compile");
+    let vm0 = relay::vm::Vm::new(&p0);
+    let v0 = vm0.run(vec![list.clone()]).expect("O0 run");
+    assert!(
+        vm0.max_depth.get() >= n,
+        "baseline fold should recurse ~n deep, got {}",
+        vm0.max_depth.get()
+    );
+
+    // -O2: TailAccum converts the fold to an accumulator loop the VM's
+    // TCO flattens.
+    let opt = optimize(&m, OptLevel::O2, false).expect("O2 pipeline");
+    let p2 = relay::vm::compile(&opt).expect("O2 compile");
+    let vm2 = relay::vm::Vm::new(&p2);
+    let v2 = vm2.run(vec![list]).expect("O2 run");
+    assert!(
+        vm2.max_depth.get() <= 2,
+        "rewritten fold still grew the frame stack: depth {}",
+        vm2.max_depth.get()
+    );
+    // Summing 10_000 ones is exact in f32 under either association.
+    assert_eq!(v0.tensor().f32_value(), n as f32);
+    assert_eq!(v2.tensor().f32_value(), n as f32);
+}

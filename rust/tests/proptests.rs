@@ -386,8 +386,14 @@ fn vm_launches_equal_graphrt_kernel_nodes_on_fused_first_order_programs() {
             "case {case}: dynamic graphrt launches != static kernel nodes"
         );
 
-        let out = relay::eval::run_with(&fused, Executor::Vm, vec![Value::Tensor(x)])
-            .unwrap();
+        // The VM side goes through the unified driver at the *same* level
+        // the graph runtime was hand-compiled at.
+        let out = relay::eval::run_with(
+            &m,
+            relay::eval::CompileOptions::at(Executor::Vm, OptLevel::O1),
+            vec![Value::Tensor(x)],
+        )
+        .unwrap();
         assert_eq!(
             out.launches, g.kernel_nodes,
             "case {case}: VM launches != graphrt kernel nodes"
@@ -434,12 +440,15 @@ fn alpha_renamed_random_modules_hash_equal_and_share_a_cache_entry() {
 
 #[test]
 fn cached_vm_execution_matches_interpreter_on_random_control_flow() {
-    use relay::eval::{run_with_cache, Executor, ProgramCache};
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
 
     // The VM fast paths (tail calls, IfCmp fusion, pool dedup) plus the
     // program cache, differentially checked against the reference
     // interpreter on random control-flow programs — twice per program, so
-    // both the miss path and the hit path are covered.
+    // both the miss path and the hit path are covered. Pinned to -O0 so
+    // the comparison isolates the VM itself (the interpreter reference is
+    // unoptimized); pipeline-on coverage lives in
+    // `all_opt_levels_and_executors_agree_through_the_cache`.
     let mut rng = Rng::new(1100);
     let cache = ProgramCache::new();
     let m0 = Module::with_prelude();
@@ -449,14 +458,168 @@ fn cached_vm_execution_matches_interpreter_on_random_control_flow() {
             .unwrap_or_else(|err| panic!("case {case}: interp failed: {err}"));
         let m = ir::Module::from_expr(e);
         for round in 0..2 {
-            let got = run_with_cache(&m, Executor::Vm, vec![], &cache)
-                .unwrap_or_else(|err| panic!("case {case}.{round}: vm failed: {err}"));
+            let got = run_with_cache(
+                &m,
+                CompileOptions::at(Executor::Vm, OptLevel::O0),
+                vec![],
+                &cache,
+            )
+            .unwrap_or_else(|err| panic!("case {case}.{round}: vm failed: {err}"));
             assert!(
                 expect.bits_eq(&got.value),
                 "case {case}.{round}: cached VM diverged: {expect:?} vs {:?}",
                 got.value
             );
         }
+    }
+}
+
+/// allclose over the value shapes zoo models return (tensors and tuples).
+/// Tolerance matches the cross-level vision comparison in
+/// tests/integration.rs (1e-2): -O3's conv-as-GEMM layout change
+/// reassociates reductions.
+fn assert_values_close(a: &Value, b: &Value, tag: &str) {
+    match (a, b) {
+        (Value::Tensor(x), Value::Tensor(y)) => assert!(
+            x.allclose(y, 1e-2, 1e-2),
+            "{tag}: max diff {}",
+            x.max_abs_diff(y)
+        ),
+        (Value::Tuple(xs), Value::Tuple(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{tag}: tuple arity changed");
+            for (x, y) in xs.iter().zip(ys) {
+                assert_values_close(x, y, tag);
+            }
+        }
+        _ => panic!("{tag}: output kind changed"),
+    }
+}
+
+#[test]
+fn all_opt_levels_and_executors_agree_through_the_cache() {
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+    use relay::zoo::{self, Model};
+
+    // The unified-pipeline differential: zoo modules with varying weight
+    // seeds, every OptLevel x every applicable executor, all through
+    // `run_with_cache`. At one level, every executor runs the *same*
+    // optimized module, so results must be bit-identical across tiers.
+    // Across levels only allclose holds: -O2+'s TailAccum (and -O3's
+    // FoldScaleAxis where it fires) legitimately reassociate float ops.
+    let cache = ProgramCache::new();
+    for seed in [3u64, 17] {
+        // First-order vision workload: all three tiers apply.
+        let (m, input) = zoo::vision::build(Model::NatureDqn, seed);
+        let args = vec![Value::Tensor(input)];
+        let mut per_level: Vec<Value> = Vec::new();
+        for level in OptLevel::all() {
+            let outs: Vec<_> = [Executor::GraphRt, Executor::Vm, Executor::Interp]
+                .iter()
+                .map(|&ex| {
+                    run_with_cache(&m, CompileOptions::at(ex, level), args.clone(), &cache)
+                        .unwrap_or_else(|e| panic!("dqn seed {seed} {level} {ex}: {e}"))
+                })
+                .collect();
+            for o in &outs[1..] {
+                assert!(
+                    outs[0].value.bits_eq(&o.value),
+                    "dqn seed {seed} {level}: {} diverged from {}",
+                    o.executor,
+                    outs[0].executor
+                );
+            }
+            per_level.push(outs[0].value.clone());
+        }
+        for (i, v) in per_level.iter().enumerate().skip(1) {
+            assert_values_close(v, &per_level[0], &format!("dqn seed {seed} level {i}"));
+        }
+
+        // Control-flow NLP workloads (graph runtime can't compile these):
+        // VM and interpreter tiers, including TreeLSTM whose child-sum
+        // fold the -O2+ TailAccum pass rewrites.
+        for model in [Model::Rnn, Model::TreeLstm] {
+            let (m, args) = zoo::nlp::build_nlp(model, seed);
+            let mut per_level: Vec<Value> = Vec::new();
+            for level in OptLevel::all() {
+                let outs: Vec<_> = [Executor::Vm, Executor::Interp]
+                    .iter()
+                    .map(|&ex| {
+                        run_with_cache(
+                            &m,
+                            CompileOptions::at(ex, level),
+                            args.clone(),
+                            &cache,
+                        )
+                        .unwrap_or_else(|e| {
+                            panic!("{} seed {seed} {level} {ex}: {e}", model.name())
+                        })
+                    })
+                    .collect();
+                assert!(
+                    outs[0].value.bits_eq(&outs[1].value),
+                    "{} seed {seed} {level}: vm/interp diverged",
+                    model.name()
+                );
+                per_level.push(outs[0].value.clone());
+            }
+            for (i, v) in per_level.iter().enumerate().skip(1) {
+                assert_values_close(
+                    v,
+                    &per_level[0],
+                    &format!("{} seed {seed} level {i}", model.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn o3_never_launches_more_kernels_than_o0_on_the_fused_mlp_fixture() {
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+
+    let mut rng = Rng::new(1500);
+    let cache = ProgramCache::new();
+    for case in 0..5 {
+        let b = rng.randint(1, 5) as usize;
+        let din = rng.randint(2, 9) as usize;
+        let dh = rng.randint(2, 9) as usize;
+        let dout = rng.randint(2, 9) as usize;
+        let src = format!(
+            "def @main(%x: Tensor[({b}, {din}), float32]) {{\n\
+               let %w1 = ones(shape=[{dh}, {din}]);\n\
+               let %h = tanh(nn.dense(%x, %w1));\n\
+               let %w2 = ones(shape=[{dout}, {dh}]);\n\
+               nn.dense(%h, %w2)\n\
+             }}"
+        );
+        let m = ir::parse_module(&src).unwrap();
+        let x = rng.normal_tensor(&[b, din], 1.0);
+        let args = vec![Value::Tensor(x)];
+        for exec in [Executor::GraphRt, Executor::Vm, Executor::Interp] {
+            let o0 = run_with_cache(&m, CompileOptions::at(exec, OptLevel::O0), args.clone(), &cache)
+                .unwrap();
+            let o3 = run_with_cache(&m, CompileOptions::at(exec, OptLevel::O3), args.clone(), &cache)
+                .unwrap();
+            assert!(
+                o3.launches <= o0.launches,
+                "case {case} {exec}: O3 launched more kernels ({} > {})",
+                o3.launches,
+                o0.launches
+            );
+            assert_values_close(&o3.value, &o0.value, &format!("case {case} {exec}"));
+        }
+        // And optimization genuinely pays on this fixture: constant
+        // folding removes the `ones` launches, fusion merges the chain.
+        let o0 = run_with_cache(&m, CompileOptions::at(Executor::Vm, OptLevel::O0), args.clone(), &cache)
+            .unwrap();
+        let o3 = run_with_cache(&m, CompileOptions::at(Executor::Vm, OptLevel::O3), args, &cache)
+            .unwrap();
+        assert!(
+            o3.launches < o0.launches,
+            "case {case}: O3 ({}) not strictly fewer launches than O0 ({})",
+            o3.launches,
+            o0.launches
+        );
     }
 }
 
@@ -511,8 +674,10 @@ fn value_trees_round_trip_across_thread_boundaries() {
 fn shared_cache_serves_identical_results_across_threads() {
     // 4 threads x 3 calls on one shared cache and one random module:
     // exactly one compile process-wide (racing misses coalesce), and every
-    // thread's result bit-matches the reference interpreter.
-    use relay::eval::{run_with_cache, Executor, ProgramCache};
+    // thread's result bit-matches the reference interpreter. Pinned to
+    // -O0 like the other unoptimized-interp differentials: the reference
+    // is `eval_expr` on the raw module, and the pipeline may reassociate.
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
 
     let mut rng = Rng::new(1300);
     let m0 = Module::with_prelude();
@@ -529,10 +694,15 @@ fn shared_cache_serves_identical_results_across_threads() {
                 let expect = &expect;
                 s.spawn(move || {
                     for round in 0..3 {
-                        let out = run_with_cache(m, Executor::Vm, vec![], cache)
-                            .unwrap_or_else(|err| {
-                                panic!("case {case}.{round}: vm failed: {err}")
-                            });
+                        let out = run_with_cache(
+                            m,
+                            CompileOptions::at(Executor::Vm, OptLevel::O0),
+                            vec![],
+                            cache,
+                        )
+                        .unwrap_or_else(|err| {
+                            panic!("case {case}.{round}: vm failed: {err}")
+                        });
                         assert!(
                             expect.bits_eq(&out.value),
                             "case {case}.{round}: shared-cache execution diverged"
