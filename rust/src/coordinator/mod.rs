@@ -140,7 +140,7 @@ pub fn usage() -> &'static str {
        relay dump-bytecode <file.relay> [-O 0|1|2|3]\n\
                                                  disassemble the VM program\n\
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
-       relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3]\n\
+       relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3] [--fixpoint]\n\
                                                  batched inference server\n"
 }
 

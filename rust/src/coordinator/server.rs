@@ -58,6 +58,11 @@ pub struct ServerConfig {
     /// Optimization level the per-bucket modules compile at (`--opt`,
     /// default -O3: the serving fleet runs fused kernels).
     pub opt_level: OptLevel,
+    /// Run the fixpoint FoldConstant/DCE loop when compiling buckets
+    /// (`--fixpoint`): more compile time per bucket — paid once per bucket
+    /// over the server's life — for a fully-converged artifact. Part of
+    /// the program-cache key, so fixpoint and plain artifacts coexist.
+    pub fixpoint: bool,
     /// Worker threads draining the request queue (compiled-relay backend).
     /// The PJRT backend is pinned to one worker: its handles are `!Send`.
     pub workers: usize,
@@ -72,6 +77,7 @@ impl Default for ServerConfig {
             artifact_dir: "artifacts".into(),
             executor: Executor::Auto,
             opt_level: OptLevel::O3,
+            fixpoint: false,
             workers: 4,
         }
     }
@@ -125,8 +131,14 @@ pub struct Stats {
     pub compiles: AtomicUsize,
     /// Optimization level the backend compiles at (fixed per server).
     pub opt_level: OptLevel,
+    /// Whether bucket compiles run the fixpoint cleanup loop.
+    pub fixpoint: bool,
     /// Requests served per worker thread (len == worker count).
     pub per_worker: Vec<AtomicUsize>,
+    /// Process-wide allocation counters at server start; the memory
+    /// planner's hits/misses over the server's lifetime are reported as
+    /// deltas from here ([`Stats::inplace_hits`]).
+    alloc_base: crate::tensor::AllocSnapshot,
 }
 
 impl Stats {
@@ -136,8 +148,22 @@ impl Stats {
             batches: AtomicUsize::new(0),
             compiles: AtomicUsize::new(0),
             opt_level,
+            fixpoint: false,
             per_worker: (0..workers.max(1)).map(|_| AtomicUsize::new(0)).collect(),
+            alloc_base: crate::tensor::alloc_stats().snapshot(),
         }
+    }
+
+    /// In-place kernel reuses since the server started (the memory
+    /// planner's output-buffer allocations *avoided*). Process-wide
+    /// counters, so co-resident non-serving executions are included.
+    pub fn inplace_hits(&self) -> usize {
+        crate::tensor::alloc_stats().snapshot().hits_since(&self.alloc_base)
+    }
+
+    /// Eligible kernels that fell back to allocating since server start.
+    pub fn inplace_misses(&self) -> usize {
+        crate::tensor::alloc_stats().snapshot().misses_since(&self.alloc_base)
     }
 }
 
@@ -363,7 +389,9 @@ fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
 pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
     let pjrt = artifacts_available(&cfg.artifact_dir);
     let workers = if pjrt { 1 } else { cfg.workers.max(1) };
-    let stats = Arc::new(Stats::new(workers, cfg.opt_level));
+    let mut stats = Stats::new(workers, cfg.opt_level);
+    stats.fixpoint = cfg.fixpoint;
+    let stats = Arc::new(stats);
 
     let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
     let rx = Arc::new(Mutex::new(rx));
@@ -403,7 +431,7 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
         let cache = Arc::new(ProgramCache::new());
         let backend = Arc::new(RelayBackend::new(
             cfg.max_batch,
-            CompileOptions::at(cfg.executor, cfg.opt_level),
+            CompileOptions::at(cfg.executor, cfg.opt_level).with_fixpoint(cfg.fixpoint),
             cache,
             stats.clone(),
         )?);
@@ -648,6 +676,39 @@ mod tests {
         );
         // Fusion must not change what the bucket computes.
         assert!(o3.value.bits_eq(&o0.value));
+    }
+
+    #[test]
+    fn fixpoint_buckets_compile_under_their_own_cache_key_and_serve_identically() {
+        let cache = Arc::new(ProgramCache::new());
+        let stats = Arc::new(Stats::new(1, OptLevel::O3));
+        let plain_opts = CompileOptions::at(Executor::Vm, OptLevel::O3);
+        let backend = RelayBackend::new(
+            2,
+            plain_opts.with_fixpoint(true),
+            cache.clone(),
+            stats.clone(),
+        )
+        .expect("fixpoint backend");
+        let row: Vec<f32> = (0..FALLBACK_FEAT).map(|j| (j % 5) as f32 - 2.0).collect();
+        let rows: Vec<&[f32]> = vec![&row];
+        let fix_preds = backend.run_batch(&rows).expect("fixpoint batch");
+        assert_eq!(fix_preds.len(), 1);
+        // The plain (non-fixpoint) compile of the same bucket is a
+        // distinct cache entry: requesting it compiles anew...
+        let (plain, compiled_now) = cache
+            .get_or_compile_traced(&backend.buckets[0].module, plain_opts)
+            .expect("plain compile");
+        assert!(compiled_now, "fixpoint and plain artifacts shared one cache entry");
+        // ...and computes the same predictions.
+        let x = pad_rows(&rows, backend.buckets[0].size, FALLBACK_FEAT);
+        let out = run_compiled(&plain, vec![Value::Tensor(x)]).expect("plain run");
+        let plain_pred = crate::tensor::argmax(out.value.tensor(), 1).as_i64()[0];
+        assert_eq!(fix_preds[0], plain_pred);
+        // The lifetime counters are wired: serving the MLP's fused
+        // dense->relu chain produced at least one in-place reuse
+        // (process-wide counter, so only monotonicity is asserted).
+        assert!(stats.inplace_hits() >= 1, "no in-place reuse recorded");
     }
 
     #[test]

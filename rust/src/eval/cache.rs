@@ -106,12 +106,19 @@ fn module_const_bytes(m: &Module) -> usize {
 }
 
 /// Cache key: pre-optimization structural hash + the options that shape
-/// the artifact. (`typecheck` is validation-only — it never changes the
-/// compiled output — so it is deliberately *not* part of the key.)
-type Key = (u64, OptLevel, &'static str);
+/// the artifact, `fixpoint` included (it changes what the pipeline
+/// produces, so fixpoint and single-round artifacts coexist).
+/// (`typecheck` is validation-only — it never changes the compiled
+/// output — so it is deliberately *not* part of the key.)
+type Key = (u64, OptLevel, &'static str, bool);
 
 fn key_for(module: &Module, opts: &CompileOptions) -> Key {
-    (ir::module_structural_hash(module), opts.opt_level, opts.executor.name())
+    (
+        ir::module_structural_hash(module),
+        opts.opt_level,
+        opts.executor.name(),
+        opts.fixpoint,
+    )
 }
 
 struct Entry {
@@ -404,8 +411,12 @@ pub fn compile_for(
     module: &Module,
     opts: &CompileOptions,
 ) -> Result<(Compiled, PassTrace), String> {
-    let (optimized, trace) =
-        crate::pass::optimize_traced(module, opts.opt_level, opts.typecheck)?;
+    let cfg = crate::pass::PipelineConfig {
+        level: opts.opt_level,
+        typecheck: opts.typecheck,
+        fixpoint: opts.fixpoint,
+    };
+    let (optimized, trace) = crate::pass::optimize_with(module, &cfg)?;
     let compiled = match opts.executor {
         Executor::Interp => Compiled::Interp(Arc::new(optimized)),
         Executor::GraphRt => {
@@ -450,7 +461,10 @@ pub fn run_compiled(compiled: &Compiled, args: Vec<Value>) -> Result<Execution, 
     match compiled {
         Compiled::Graph(g) => {
             let launches = LaunchCounter::new();
-            let value = g.run_counted(&args, &launches)?;
+            // Arguments are handed over by value: a tensor the caller
+            // owns exclusively can be reused in place at its last use
+            // (the VM path below gets the same property via `Vm::run`).
+            let value = g.run_owned(args, &launches)?;
             Ok(Execution {
                 value,
                 executor: "graphrt",
@@ -597,6 +611,46 @@ mod tests {
         assert_eq!(cache.misses(), 2, "alpha-renamed module recompiled");
         assert_eq!(cache.hits(), 1);
         assert!(hit.value.bits_eq(&o3.value));
+    }
+
+    #[test]
+    fn fixpoint_and_single_round_artifacts_coexist_in_the_cache() {
+        // `fixpoint` shapes the compiled artifact, so it is part of the
+        // key: the same module requested with and without it compiles
+        // twice into two coexisting entries — and both compute the same
+        // thing.
+        let cache = ProgramCache::new();
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               let %a = 2f;\n\
+               let %b = multiply(%a, 3f);\n\
+               add(%x, %b)\n\
+             }",
+        )
+        .unwrap();
+        let plain = CompileOptions::at(Executor::Vm, OptLevel::O2);
+        let fix = plain.with_fixpoint(true);
+        let a = run_with_cache(&m, plain, tensor_arg(1.0), &cache).unwrap();
+        let b = run_with_cache(&m, fix, tensor_arg(1.0), &cache).unwrap();
+        assert_eq!(cache.misses(), 2, "fixpoint artifact shared the plain entry");
+        assert_eq!(cache.len(), 2);
+        assert!(a.value.bits_eq(&b.value));
+        // Re-requesting either option is a pure hit.
+        run_with_cache(&m, plain, tensor_arg(2.0), &cache).unwrap();
+        run_with_cache(&m, fix, tensor_arg(2.0), &cache).unwrap();
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 2);
+        // The fixpoint compile's trace records multi-round (or at least
+        // recorded) cleanup passes.
+        let fold = b
+            .pass_trace
+            .as_ref()
+            .unwrap()
+            .passes
+            .iter()
+            .find(|r| r.name == "FoldConstant")
+            .expect("FoldConstant record");
+        assert!(fold.rounds >= 1);
     }
 
     #[test]

@@ -157,6 +157,13 @@ pub struct CompileOptions {
     /// Re-run type inference between passes (slower; the CLI's `compile`
     /// command uses it, execution paths default to off).
     pub typecheck: bool,
+    /// Re-run the fixpoint-eligible cleanup passes (FoldConstant,
+    /// DeadCodeElim) to convergence
+    /// ([`crate::pass::PipelineConfig::fixpoint`]). Costs compile time,
+    /// usually converges in a round or two; serving opts in with
+    /// `relay serve --fixpoint`. Part of the cache key — fixpoint and
+    /// single-round artifacts of one module coexist.
+    pub fixpoint: bool,
 }
 
 impl Default for CompileOptions {
@@ -165,6 +172,7 @@ impl Default for CompileOptions {
             opt_level: DEFAULT_OPT_LEVEL,
             executor: Executor::Auto,
             typecheck: false,
+            fixpoint: false,
         }
     }
 }
@@ -177,11 +185,17 @@ impl CompileOptions {
 
     /// Explicit (executor, level) pair, no inter-pass typechecking.
     pub fn at(executor: Executor, opt_level: OptLevel) -> CompileOptions {
-        CompileOptions { executor, opt_level, typecheck: false }
+        CompileOptions { executor, opt_level, ..CompileOptions::default() }
     }
 
     pub fn with_typecheck(mut self, typecheck: bool) -> CompileOptions {
         self.typecheck = typecheck;
+        self
+    }
+
+    /// Enable the fixpoint FoldConstant/DCE loop for this compile.
+    pub fn with_fixpoint(mut self, fixpoint: bool) -> CompileOptions {
+        self.fixpoint = fixpoint;
         self
     }
 
@@ -414,5 +428,11 @@ mod tests {
         let pair: CompileOptions = (Executor::GraphRt, OptLevel::O1).into();
         assert_eq!(pair, CompileOptions::at(Executor::GraphRt, OptLevel::O1));
         assert!(CompileOptions::new(Executor::Auto).with_typecheck(true).typecheck);
+        // Fixpoint defaults off and distinguishes options (it is part of
+        // the cache key).
+        assert!(!d.fixpoint);
+        let fix = CompileOptions::new(Executor::Auto).with_fixpoint(true);
+        assert!(fix.fixpoint);
+        assert_ne!(fix, CompileOptions::new(Executor::Auto));
     }
 }

@@ -7,7 +7,25 @@
 //! fall back to the interpreter (exactly the paper's executor-selection
 //! story). A fused primitive function becomes ONE node (one "kernel
 //! launch"), with its inner op sequence flattened into the node's steps.
+//!
+//! # Static memory planning
+//!
+//! Compilation runs a last-use liveness pass over the flat node list (the
+//! analogue of the VM's register-reuse scan): every node input carries a
+//! `kill` flag marking whether the referenced slot dies at that read. The
+//! planned runner ([`GraphRt::run_in`]) exploits this at execution time:
+//! dying slots are **moved** out (`Option::take`) instead of cloned, so a
+//! value whose last consumer is an elementwise kernel arrives uniquely
+//! owned and the kernel writes into its buffer in place
+//! ([`crate::op::inplace`]) instead of allocating. All per-call vectors
+//! (slot arena, fused temps, argument scratch) live in a reusable
+//! [`Workspace`] — held per worker thread, cleared not reallocated — so
+//! steady-state calls perform zero vector allocations outside the kernels.
+//! The unplanned clone-everything path survives as [`GraphRt::run_traced`]
+//! (the VTA tracer needs intact argument values, and the differential
+//! tests use it as the bit-exact baseline).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 use crate::eval::value::Value;
@@ -22,6 +40,9 @@ struct Step {
     attrs: Attrs,
     inputs: Vec<SlotRef>,
     out_temp: usize,
+    /// Parallel to `inputs`: true when that temp/group-input dies here
+    /// (last read inside this fused kernel) and may be consumed by move.
+    kills: Vec<bool>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +68,106 @@ enum NodeKind {
 struct Node {
     kind: NodeKind,
     out_slot: usize,
+    /// Parallel to this kind's input list: true when the referenced arena
+    /// slot is last read here (the planner's kill mask). Filled by
+    /// [`plan_liveness`] after the node list is complete.
+    kills: Vec<bool>,
+}
+
+/// Visit this node kind's input references in argument order.
+fn for_each_input(kind: &NodeKind, mut f: impl FnMut(&SlotRef)) {
+    match kind {
+        NodeKind::Op { inputs, .. } | NodeKind::Fused { inputs, .. } => {
+            inputs.iter().for_each(&mut f)
+        }
+        NodeKind::Tuple(parts) => parts.iter().for_each(&mut f),
+        NodeKind::Proj(r, _) | NodeKind::Copy(r) => f(r),
+    }
+}
+
+/// Last-use liveness over the flat node list: for each arena slot, find
+/// its final reader and mark that read as a kill. The program output's
+/// slot is read after every node, so no node kills it. Duplicate reads of
+/// one slot within a node kill only the last occurrence, so the runner
+/// can move unconditionally where the mask says so.
+fn plan_liveness(nodes: &mut [Node], output: &SlotRef, n_slots: usize) {
+    let mut last: Vec<Option<(usize, usize)>> = vec![None; n_slots];
+    for (i, node) in nodes.iter().enumerate() {
+        let mut pos = 0usize;
+        for_each_input(&node.kind, |r| {
+            if let SlotRef::Arena(s) = r {
+                last[*s] = Some((i, pos));
+            }
+            pos += 1;
+        });
+    }
+    if let SlotRef::Arena(s) = output {
+        last[*s] = None;
+    }
+    for (i, node) in nodes.iter_mut().enumerate() {
+        let mut kills = Vec::new();
+        let mut pos = 0usize;
+        for_each_input(&node.kind, |r| {
+            kills.push(matches!(r, SlotRef::Arena(s) if last[*s] == Some((i, pos))));
+            pos += 1;
+        });
+        node.kills = kills;
+    }
+}
+
+/// Last-use liveness for the steps inside one fused kernel: temps and
+/// group inputs (params) die at their final reading step. The result temp
+/// is consumed by the node epilogue, not a step, so it is never killed
+/// here.
+fn plan_step_kills(steps: &mut [Step], n_temps: usize, n_params: usize) {
+    let mut last_t: Vec<Option<(usize, usize)>> = vec![None; n_temps];
+    let mut last_p: Vec<Option<(usize, usize)>> = vec![None; n_params];
+    for (i, s) in steps.iter().enumerate() {
+        for (j, r) in s.inputs.iter().enumerate() {
+            match r {
+                SlotRef::Temp(t) => last_t[*t] = Some((i, j)),
+                SlotRef::Param(p) => last_p[*p] = Some((i, j)),
+                _ => {}
+            }
+        }
+    }
+    for (i, s) in steps.iter_mut().enumerate() {
+        s.kills = s
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(j, r)| match r {
+                SlotRef::Temp(t) => last_t[*t] == Some((i, j)),
+                SlotRef::Param(p) => last_p[*p] == Some((i, j)),
+                _ => false,
+            })
+            .collect();
+    }
+}
+
+/// Reusable per-call execution state for the planned runner: the slot
+/// arena, fused-kernel temps, the per-step argument buffer, and the fused
+/// group-input buffer. Hold one per worker thread and every call clears
+/// (never reallocates) the vectors — steady state does no vector
+/// allocation outside the kernels themselves.
+#[derive(Default)]
+pub struct Workspace {
+    slots: Vec<Option<Value>>,
+    temps: Vec<Option<Value>>,
+    args: Vec<Value>,
+    group: Vec<Value>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+}
+
+thread_local! {
+    /// Per-thread default workspace: a serving worker (one thread) reuses
+    /// one arena across every request it handles.
+    static WORKSPACE: RefCell<Workspace> = RefCell::new(Workspace::new());
 }
 
 pub struct GraphRt {
@@ -110,6 +231,11 @@ impl Compiler {
         }
     }
 
+    fn node(kind: NodeKind, out_slot: usize) -> Node {
+        // Kill masks are filled by `plan_liveness` once the list is final.
+        Node { kind, out_slot, kills: Vec::new() }
+    }
+
     fn compile_value(&mut self, value: &E, out_slot: usize) -> R<Node> {
         match &**value {
             Expr::Call { f, args, attrs } => match &**f {
@@ -117,32 +243,32 @@ impl Compiler {
                     let def = op::lookup(name)
                         .ok_or_else(|| CompileError(format!("unknown op {name}")))?;
                     let inputs: R<Vec<SlotRef>> = args.iter().map(|a| self.atom(a)).collect();
-                    Ok(Node {
-                        kind: NodeKind::Op { def, attrs: attrs.clone(), inputs: inputs? },
+                    Ok(Self::node(
+                        NodeKind::Op { def, attrs: attrs.clone(), inputs: inputs? },
                         out_slot,
-                    })
+                    ))
                 }
                 Expr::Func(func) if func.attrs.primitive => {
                     let inputs: R<Vec<SlotRef>> = args.iter().map(|a| self.atom(a)).collect();
                     let (steps, n_temps) = self.compile_primitive(func)?;
-                    Ok(Node {
-                        kind: NodeKind::Fused { steps, n_temps, inputs: inputs? },
+                    Ok(Self::node(
+                        NodeKind::Fused { steps, n_temps, inputs: inputs? },
                         out_slot,
-                    })
+                    ))
                 }
                 other => err(format!("cannot compile call to {other:?}")),
             },
             Expr::Tuple(es) => {
                 let parts: R<Vec<SlotRef>> = es.iter().map(|x| self.atom(x)).collect();
-                Ok(Node { kind: NodeKind::Tuple(parts?), out_slot })
+                Ok(Self::node(NodeKind::Tuple(parts?), out_slot))
             }
             Expr::Proj(t, i) => {
                 let s = self.atom(t)?;
-                Ok(Node { kind: NodeKind::Proj(s, *i), out_slot })
+                Ok(Self::node(NodeKind::Proj(s, *i), out_slot))
             }
             Expr::Const(_) | Expr::Var(_) => {
                 let s = self.atom(value)?;
-                Ok(Node { kind: NodeKind::Copy(s), out_slot })
+                Ok(Self::node(NodeKind::Copy(s), out_slot))
             }
             other => err(format!("unsupported graph value {other:?}")),
         }
@@ -191,7 +317,7 @@ impl Compiler {
                     let out_temp = n_temps;
                     n_temps += 1;
                     local.insert(var.id, SlotRef::Temp(out_temp));
-                    steps.push(Step { def, attrs, inputs, out_temp });
+                    steps.push(Step { def, attrs, inputs, out_temp, kills: Vec::new() });
                     cur = body.clone();
                 }
                 Expr::Var(v) => {
@@ -206,6 +332,7 @@ impl Compiler {
                 other => return err(format!("primitive tail {other:?}")),
             }
         }
+        plan_step_kills(&mut steps, n_temps, f.params.len());
         Ok((steps, n_temps))
     }
 }
@@ -252,8 +379,10 @@ impl GraphRt {
             .iter()
             .filter(|n| matches!(n.kind, NodeKind::Op { .. } | NodeKind::Fused { .. }))
             .count();
+        let mut nodes = c.nodes;
+        plan_liveness(&mut nodes, &output, c.n_slots);
         Ok(GraphRt {
-            nodes: c.nodes,
+            nodes,
             constants: c.constants,
             n_slots: c.n_slots,
             input_slots,
@@ -273,31 +402,178 @@ impl GraphRt {
         self.constants.iter().map(|v| v.tensor_bytes()).sum()
     }
 
-    /// Execute with the given inputs.
+    /// Execute with the given inputs (planned path).
     pub fn run(&self, inputs: &[Value]) -> Result<Value, String> {
-        self.run_traced(inputs, &mut |_, _, _| {})
+        self.run_counted(inputs, &self.launches)
     }
 
-    /// Execute, counting launches on a caller-supplied counter instead of
-    /// this runtime's own. The program cache hands one shared `GraphRt` to
-    /// many threads, so per-call metrics must not diff a shared counter.
+    /// Execute on the planned path, counting launches on a caller-supplied
+    /// counter instead of this runtime's own. The program cache hands one
+    /// shared `GraphRt` to many threads, so per-call metrics must not diff
+    /// a shared counter. Uses the calling thread's default [`Workspace`].
     pub fn run_counted(
         &self,
         inputs: &[Value],
         launches: &LaunchCounter,
     ) -> Result<Value, String> {
-        self.run_traced_counted(inputs, &mut |_, _, _| {}, launches)
+        WORKSPACE.with(|ws| {
+            self.run_planned(inputs.iter().cloned(), inputs.len(), launches, &mut ws.borrow_mut())
+        })
+    }
+
+    /// [`Self::run_counted`] taking the inputs by value: argument tensors
+    /// the caller hands over exclusively (refcount 1) become eligible for
+    /// in-place reuse at their last use, exactly like intermediates.
+    pub fn run_owned(
+        &self,
+        inputs: Vec<Value>,
+        launches: &LaunchCounter,
+    ) -> Result<Value, String> {
+        WORKSPACE.with(|ws| {
+            let n = inputs.len();
+            self.run_planned(inputs.into_iter(), n, launches, &mut ws.borrow_mut())
+        })
+    }
+
+    /// The planned path with an explicit caller-held workspace, for
+    /// callers that want to manage arena lifetime themselves. (The serving
+    /// workers and `run_counted`/`run_owned` use the per-thread default
+    /// workspace — one per worker thread — and don't need this.)
+    pub fn run_in(
+        &self,
+        inputs: Vec<Value>,
+        launches: &LaunchCounter,
+        ws: &mut Workspace,
+    ) -> Result<Value, String> {
+        let n = inputs.len();
+        self.run_planned(inputs.into_iter(), n, launches, ws)
     }
 
     /// Execute, invoking `trace(op_name, args, out)` for every operator
     /// application (including the steps inside fused nodes). Used by the
-    /// VTA simulator's cycle accounting.
+    /// VTA simulator's cycle accounting. This is the **unplanned** legacy
+    /// path: every slot read clones and every kernel allocates, so traced
+    /// argument values are always intact — and the differential tests use
+    /// it as the bit-exact baseline for the planned runner.
     pub fn run_traced(
         &self,
         inputs: &[Value],
         trace: &mut dyn FnMut(&str, &[Value], &Value),
     ) -> Result<Value, String> {
         self.run_traced_counted(inputs, trace, &self.launches)
+    }
+
+    /// The planned executor: kill-mask moves out of the slot arena,
+    /// in-place elementwise kernels, and workspace reuse. Bit-identical to
+    /// [`Self::run_traced`] by construction (the in-place kernels mirror
+    /// the allocating arithmetic exactly).
+    fn run_planned(
+        &self,
+        inputs: impl Iterator<Item = Value>,
+        n_inputs: usize,
+        launches: &LaunchCounter,
+        ws: &mut Workspace,
+    ) -> Result<Value, String> {
+        let out = self.run_planned_inner(inputs, n_inputs, launches, ws);
+        // Unconditionally (success or error) drop everything the workspace
+        // still holds — capacity kept — so neither a finished call nor a
+        // mid-graph kernel error pins this call's tensors in the
+        // per-thread arena until the next run.
+        let Workspace { slots, temps, args, group } = ws;
+        slots.clear();
+        temps.clear();
+        args.clear();
+        group.clear();
+        out
+    }
+
+    fn run_planned_inner(
+        &self,
+        inputs: impl Iterator<Item = Value>,
+        n_inputs: usize,
+        launches: &LaunchCounter,
+        ws: &mut Workspace,
+    ) -> Result<Value, String> {
+        if n_inputs != self.input_slots.len() {
+            return Err(format!(
+                "graph expects {} inputs, got {}",
+                self.input_slots.len(),
+                n_inputs
+            ));
+        }
+        let Workspace { slots, temps, args, group } = ws;
+        slots.clear();
+        slots.resize(self.n_slots, None);
+        for (s, v) in self.input_slots.iter().zip(inputs) {
+            slots[*s] = Some(v);
+        }
+        for node in &self.nodes {
+            let out = match &node.kind {
+                NodeKind::Op { def, attrs, inputs } => {
+                    launches.bump();
+                    args.clear();
+                    for (j, r) in inputs.iter().enumerate() {
+                        args.push(read_owned(slots, &self.constants, r, node.kills[j])?);
+                    }
+                    op::inplace::eval_step(*def, args, attrs)?
+                }
+                NodeKind::Fused { steps, n_temps, inputs } => {
+                    launches.bump();
+                    group.clear();
+                    for (j, r) in inputs.iter().enumerate() {
+                        group.push(read_owned(slots, &self.constants, r, node.kills[j])?);
+                    }
+                    temps.clear();
+                    temps.resize(*n_temps, None);
+                    for step in steps {
+                        args.clear();
+                        for (j, r) in step.inputs.iter().enumerate() {
+                            let kill = step.kills[j];
+                            let v = match r {
+                                SlotRef::Temp(t) => {
+                                    (if kill { temps[*t].take() } else { temps[*t].clone() })
+                                        .ok_or_else(|| format!("empty temp {t}"))?
+                                }
+                                SlotRef::Param(i) => {
+                                    if kill {
+                                        std::mem::replace(&mut group[*i], Value::unit())
+                                    } else {
+                                        group[*i].clone()
+                                    }
+                                }
+                                SlotRef::Const(c) => self.constants[*c].clone(),
+                                SlotRef::Arena(_) => {
+                                    return Err("arena ref inside fused kernel".into())
+                                }
+                            };
+                            args.push(v);
+                        }
+                        let v = op::inplace::eval_step(step.def, args, &step.attrs)?;
+                        temps[step.out_temp] = Some(v);
+                    }
+                    temps[*n_temps - 1].take().ok_or("empty fused result")?
+                }
+                NodeKind::Tuple(parts) => {
+                    let mut vs = Vec::with_capacity(parts.len());
+                    for (j, r) in parts.iter().enumerate() {
+                        vs.push(read_owned(slots, &self.constants, r, node.kills[j])?);
+                    }
+                    Value::Tuple(vs)
+                }
+                NodeKind::Proj(r, i) => {
+                    let v = read_owned(slots, &self.constants, r, node.kills[0])?;
+                    v.tuple()
+                        .get(*i)
+                        .cloned()
+                        .ok_or_else(|| format!("proj .{i} out of range"))?
+                }
+                NodeKind::Copy(r) => read_owned(slots, &self.constants, r, node.kills[0])?,
+            };
+            slots[node.out_slot] = Some(out);
+        }
+        // Take the result; `run_planned` clears the workspace afterwards
+        // on every path, success or error.
+        read_owned(slots, &self.constants, &self.output, true)
     }
 
     fn run_traced_counted(
@@ -396,6 +672,26 @@ impl GraphRt {
     }
 }
 
+/// Planned-path slot read: a killed arena slot is moved out (its value's
+/// last consumer is this read), anything else clones. Constants always
+/// clone — the compiled program keeps its pool, so a constant can never be
+/// uniquely owned and is never mutated in place.
+fn read_owned(
+    slots: &mut [Option<Value>],
+    constants: &[Value],
+    r: &SlotRef,
+    kill: bool,
+) -> Result<Value, String> {
+    match r {
+        SlotRef::Arena(i) => (if kill { slots[*i].take() } else { slots[*i].clone() })
+            .ok_or_else(|| format!("empty slot {i}")),
+        SlotRef::Const(i) => Ok(constants[*i].clone()),
+        SlotRef::Temp(_) | SlotRef::Param(_) => {
+            Err("temp/param ref outside a fused kernel".to_string())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -453,6 +749,66 @@ mod tests {
         );
         assert_eq!(g0.kernel_nodes, 3);
         assert_eq!(g1.kernel_nodes, 2); // {dense+relu}, {dense}
+    }
+
+    #[test]
+    fn planned_path_matches_the_traced_baseline_and_leaves_inputs_intact() {
+        let m = mlp_module();
+        let mut rng = Rng::new(11);
+        let x = rng.normal_tensor(&[2, 4], 1.0);
+        let w1 = rng.normal_tensor(&[8, 4], 1.0);
+        let w2 = rng.normal_tensor(&[2, 8], 1.0);
+        let (x0, w10, w20) = (x.to_f32_vec(), w1.to_f32_vec(), w2.to_f32_vec());
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O3] {
+            let opt = optimize(&m, level, false).unwrap();
+            let anfed = crate::pass::anf::run(&opt);
+            let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+            let args: Vec<Value> = [&x, &w1, &w2]
+                .iter()
+                .map(|t| Value::Tensor((*t).clone()))
+                .collect();
+            // Unplanned baseline (clone-everything, allocate-everything).
+            let baseline = g.run_traced(&args, &mut |_, _, _| {}).unwrap();
+            // Planned path, twice (the second run exercises warm workspace
+            // reuse), then the owned-argument variant.
+            let counter = LaunchCounter::new();
+            for _ in 0..2 {
+                let planned = g.run_counted(&args, &counter).unwrap();
+                assert!(planned.bits_eq(&baseline), "planned diverged at {level}");
+            }
+            let owned = g.run_owned(args, &counter).unwrap();
+            assert!(owned.bits_eq(&baseline), "owned run diverged at {level}");
+            // Caller-visible tensors are never mutated by the planner.
+            assert_eq!(x.to_f32_vec(), x0);
+            assert_eq!(w1.to_f32_vec(), w10);
+            assert_eq!(w2.to_f32_vec(), w20);
+        }
+    }
+
+    #[test]
+    fn owned_elementwise_chain_runs_fully_in_place() {
+        // Every step's input is a dying, uniquely-owned intermediate (the
+        // argument itself is handed over by value), so the whole chain
+        // reuses one buffer: zero in-place misses on this thread.
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) {\n\
+               let %a = tanh(%x);\n\
+               let %b = negative(%a);\n\
+               sigmoid(%b)\n\
+             }",
+        )
+        .unwrap();
+        let anfed = crate::pass::anf::run(&m);
+        let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+        let fresh = || Value::Tensor(Tensor::from_f32(vec![2, 2], vec![-1.0, 0.5, 2.0, -0.25]));
+        let expect = g.run_traced(&[fresh()], &mut |_, _, _| {}).unwrap();
+        let counter = LaunchCounter::new();
+        let before = crate::tensor::thread_alloc_snapshot();
+        let out = g.run_owned(vec![fresh()], &counter).unwrap();
+        let after = crate::tensor::thread_alloc_snapshot();
+        assert!(out.bits_eq(&expect));
+        assert_eq!(after.misses_since(&before), 0, "chain step fell back to allocating");
+        assert_eq!(after.hits_since(&before), 3, "tanh/negative/sigmoid should all reuse");
     }
 
     #[test]

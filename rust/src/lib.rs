@@ -18,9 +18,16 @@
 //!   executor-selection story; see rust/src/vm/README.md). Every tier
 //!   compiles through ONE optimizing driver: `eval::CompileOptions`
 //!   routes the §3.1.2 pass pipeline (`pass::optimize_traced`, default
-//!   -O3) in front of executor lowering, the program cache keys on
-//!   (module hash, OptLevel, executor), and `relay dump-passes` prints
-//!   the instrumented per-pass trace.
+//!   -O3, optional fixpoint cleanup loop) in front of executor lowering,
+//!   the program cache keys on (module hash, OptLevel, executor,
+//!   fixpoint), and `relay dump-passes` prints the instrumented per-pass
+//!   trace. The compiled tiers are *memory-planned* (§3.1.3 static
+//!   memory planning; see rust/src/graphrt/README.md): last-use liveness
+//!   kill masks move dying values instead of cloning, hot elementwise
+//!   kernels write into uniquely-owned input buffers in place
+//!   (`op::inplace`, counted by `tensor::AllocStats`), and per-worker
+//!   workspaces / frame pools make steady-state serving allocation-free
+//!   outside the kernels.
 //! * [`tensor`], [`vta`] — substrates: reference kernels and the simulated
 //!   accelerator.
 //! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT

@@ -82,20 +82,23 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                     anyhow::anyhow!("bad --opt {s:?} (expected 0|1|2|3)")
                 })?,
             };
+            let fixpoint = args.iter().any(|a| a == "--fixpoint");
             let cfg = server::ServerConfig {
                 port,
                 artifact_dir: dir.into(),
                 workers,
                 opt_level,
+                fixpoint,
                 ..Default::default()
             };
             let stop = Arc::new(AtomicBool::new(false));
             let stats = server::serve(cfg, stop)?;
             println!(
                 "serving mlp_forward on 127.0.0.1:{port} with {} worker(s) \
-                 at {} (ctrl-c to stop)",
+                 at {}{} (ctrl-c to stop)",
                 stats.per_worker.len(),
-                stats.opt_level
+                stats.opt_level,
+                if stats.fixpoint { " (fixpoint)" } else { "" }
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(10));
@@ -105,10 +108,13 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                     .map(|w| w.load(std::sync::atomic::Ordering::Relaxed))
                     .collect();
                 println!(
-                    "requests={} batches={} compiles={} per-worker={per_worker:?}",
+                    "requests={} batches={} compiles={} inplace-hits={} \
+                     inplace-misses={} per-worker={per_worker:?}",
                     stats.requests.load(std::sync::atomic::Ordering::Relaxed),
                     stats.batches.load(std::sync::atomic::Ordering::Relaxed),
-                    stats.compiles.load(std::sync::atomic::Ordering::Relaxed)
+                    stats.compiles.load(std::sync::atomic::Ordering::Relaxed),
+                    stats.inplace_hits(),
+                    stats.inplace_misses()
                 );
             }
         }

@@ -1,0 +1,227 @@
+//! In-place kernel dispatch: the execution-time half of static memory
+//! planning (paper §3.1.3 — the graph runtime "reuses buffers" assigned at
+//! compile time; TVM does the same a level down).
+//!
+//! [`eval_step`] is what the planned executors (graph runtime and VM) call
+//! instead of `(def.eval)(..)` directly. For the hot elementwise set —
+//! binary/unary arithmetic, `nn.bias_add`, `clip` — it first tries to
+//! write the result into an input whose storage is uniquely owned
+//! ([`crate::tensor::Storage::try_unique_f32`]) and whose shape/dtype
+//! matches the output; only when that fails does it run the allocating
+//! kernel. Every eligible execution bumps the process-wide
+//! [`crate::tensor::AllocStats`] (hit = buffer reused, miss = allocated).
+//!
+//! Legality: a uniquely-owned buffer has no other observer, so mutating it
+//! is indistinguishable from allocating a fresh one — executors make
+//! inputs unique by *moving* dying values out of their slots/registers
+//! (the compile-time kill masks) instead of cloning. Constants and shared
+//! program state always fail the uniqueness probe and are never touched.
+//! The arithmetic in the `*_assign` kernels mirrors the allocating path
+//! bit-for-bit, so planned execution is bit-identical to unplanned
+//! (asserted by the differential tests in `tests/proptests.rs`).
+
+use crate::eval::value::Value;
+use crate::ir::Attrs;
+use crate::tensor::{self, BinOp, UnaryOp};
+
+use super::OpDef;
+
+/// In-place strategy for one operator.
+enum Plan {
+    Bin(BinOp),
+    Un(UnaryOp),
+    BiasAdd,
+    Clip,
+}
+
+/// The hot set the planner recognizes. Anchor ops (dense/matmul/conv)
+/// are deliberately absent: their output shape never matches an input, so
+/// they always allocate (via `*_into` accumulation under the hood) and are
+/// not counted against the in-place metric.
+fn plan_of(name: &str) -> Option<Plan> {
+    Some(match name {
+        "add" => Plan::Bin(BinOp::Add),
+        "subtract" => Plan::Bin(BinOp::Sub),
+        "multiply" => Plan::Bin(BinOp::Mul),
+        "divide" => Plan::Bin(BinOp::Div),
+        "power" => Plan::Bin(BinOp::Pow),
+        "maximum" => Plan::Bin(BinOp::Maximum),
+        "minimum" => Plan::Bin(BinOp::Minimum),
+        "negative" => Plan::Un(UnaryOp::Neg),
+        "exp" => Plan::Un(UnaryOp::Exp),
+        "log" => Plan::Un(UnaryOp::Log),
+        "sqrt" => Plan::Un(UnaryOp::Sqrt),
+        "rsqrt" => Plan::Un(UnaryOp::Rsqrt),
+        "tanh" => Plan::Un(UnaryOp::Tanh),
+        "sigmoid" => Plan::Un(UnaryOp::Sigmoid),
+        "abs" => Plan::Un(UnaryOp::Abs),
+        "floor" => Plan::Un(UnaryOp::Floor),
+        "ceil" => Plan::Un(UnaryOp::Ceil),
+        "round" => Plan::Un(UnaryOp::Round),
+        "erf" => Plan::Un(UnaryOp::Erf),
+        "nn.relu" => Plan::Un(UnaryOp::Relu),
+        "nn.bias_add" => Plan::BiasAdd,
+        "clip" => Plan::Clip,
+        _ => return None,
+    })
+}
+
+/// Execute one operator application, reusing a dying input buffer when the
+/// planner's legality conditions hold. `args` are the call's argument
+/// values *by ownership* — executors move dying slot/register values in, so
+/// a value whose last use is this call arrives with refcount 1. On an
+/// in-place hit the stolen argument slot is left holding a unit value (the
+/// caller discards `args` afterwards); on a miss `args` are unchanged and
+/// the registered allocating kernel runs.
+pub fn eval_step(
+    def: &'static OpDef,
+    args: &mut [Value],
+    attrs: &Attrs,
+) -> Result<Value, String> {
+    if let Some(plan) = plan_of(def.name) {
+        if let Some(v) = try_inplace(&plan, args, attrs) {
+            tensor::note_inplace_hit();
+            return Ok(v);
+        }
+        tensor::note_inplace_miss();
+    }
+    (def.eval)(args, attrs)
+}
+
+/// Steal the tensor out of `args[i]`, leaving a unit value behind.
+fn steal(args: &mut [Value], i: usize) -> Value {
+    std::mem::replace(&mut args[i], Value::unit())
+}
+
+fn try_inplace(plan: &Plan, args: &mut [Value], attrs: &Attrs) -> Option<Value> {
+    match plan {
+        Plan::Bin(op) => {
+            let [l, r] = args else { return None };
+            let (Value::Tensor(a), Value::Tensor(b)) = (l, r) else { return None };
+            if tensor::binary_assign(*op, a, b) {
+                return Some(steal(args, 0));
+            }
+            let [l, r] = args else { return None };
+            let (Value::Tensor(a), Value::Tensor(b)) = (l, r) else { return None };
+            if tensor::binary_assign_rhs(*op, a, b) {
+                return Some(steal(args, 1));
+            }
+            None
+        }
+        Plan::Un(op) => {
+            let [Value::Tensor(a)] = args else { return None };
+            tensor::unary_assign(*op, a).then(|| steal(args, 0))
+        }
+        Plan::BiasAdd => {
+            let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
+            let [x, b] = args else { return None };
+            let (Value::Tensor(x), Value::Tensor(b)) = (x, b) else { return None };
+            // bias_add asserts on rank/length mismatches; pre-check the
+            // shapes the allocating kernel would assert on so an ill-typed
+            // call falls back to (and panics in) the same place it used to.
+            if b.rank() != 1 || x.rank() == 0 {
+                return None;
+            }
+            let ax = crate::tensor::shape::norm_axis(axis, x.rank());
+            if x.shape()[ax] != b.shape()[0] {
+                return None;
+            }
+            tensor::bias_add_assign(x, b, axis).then(|| steal(args, 0))
+        }
+        Plan::Clip => {
+            let lo = attrs.get("a_min").map(|v| v.as_float()).unwrap_or(f64::NEG_INFINITY);
+            let hi = attrs.get("a_max").map(|v| v.as_float()).unwrap_or(f64::INFINITY);
+            let [Value::Tensor(a)] = args else { return None };
+            tensor::clip_assign(a, lo, hi).then(|| steal(args, 0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Attrs;
+    use crate::tensor::{thread_alloc_snapshot, Tensor};
+
+    fn op(name: &str) -> &'static OpDef {
+        super::super::lookup(name).unwrap()
+    }
+
+    #[test]
+    fn unique_input_is_reused_shared_input_is_not() {
+        let attrs = Attrs::new();
+        // Unique owner: hit, same bits as the allocating kernel.
+        let x = Tensor::from_f32(vec![4], vec![-1.0, 0.0, 2.0, -3.0]);
+        let expect = (op("nn.relu").eval)(&[Value::Tensor(x.clone())], &attrs).unwrap();
+        let before = thread_alloc_snapshot();
+        let mut args = vec![Value::Tensor(x.clone())];
+        drop(x); // args now holds the sole reference
+        let got = eval_step(op("nn.relu"), &mut args, &attrs).unwrap();
+        let after = thread_alloc_snapshot();
+        assert_eq!(after.hits_since(&before), 1);
+        assert_eq!(after.misses_since(&before), 0);
+        assert!(got.bits_eq(&expect));
+
+        // Shared owner: miss, the original is untouched.
+        let x = Tensor::from_f32(vec![4], vec![-1.0, 0.0, 2.0, -3.0]);
+        let before = thread_alloc_snapshot();
+        let mut args = vec![Value::Tensor(x.clone())];
+        let got = eval_step(op("nn.relu"), &mut args, &attrs).unwrap();
+        let after = thread_alloc_snapshot();
+        assert_eq!(after.misses_since(&before), 1);
+        assert!(got.bits_eq(&expect));
+        assert_eq!(x.as_f32(), &[-1.0, 0.0, 2.0, -3.0], "shared input mutated");
+    }
+
+    #[test]
+    fn binary_prefers_lhs_then_rhs_then_allocates() {
+        let attrs = Attrs::new();
+        let mk = |v: f32| Tensor::from_f32(vec![2], vec![v, v + 1.0]);
+        let expect =
+            (op("subtract").eval)(&[Value::Tensor(mk(5.0)), Value::Tensor(mk(1.0))], &attrs)
+                .unwrap();
+        // Both unique: lhs stolen.
+        let mut args = vec![Value::Tensor(mk(5.0)), Value::Tensor(mk(1.0))];
+        let got = eval_step(op("subtract"), &mut args, &attrs).unwrap();
+        assert!(got.bits_eq(&expect));
+        // Lhs shared, rhs unique: result lands in the rhs buffer, order
+        // preserved (subtract is not commutative).
+        let lhs = mk(5.0);
+        let mut args = vec![Value::Tensor(lhs.clone()), Value::Tensor(mk(1.0))];
+        let got = eval_step(op("subtract"), &mut args, &attrs).unwrap();
+        assert!(got.bits_eq(&expect));
+        assert_eq!(lhs.as_f32(), &[5.0, 6.0]);
+        // Both shared: plain allocation, inputs untouched.
+        let (a, b) = (mk(5.0), mk(1.0));
+        let mut args = vec![Value::Tensor(a.clone()), Value::Tensor(b.clone())];
+        let got = eval_step(op("subtract"), &mut args, &attrs).unwrap();
+        assert!(got.bits_eq(&expect));
+        assert_eq!(a.as_f32(), &[5.0, 6.0]);
+        assert_eq!(b.as_f32(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn bias_add_and_clip_honor_attrs() {
+        let x = Tensor::from_f32(vec![2, 2], vec![0.0; 4]);
+        let b = Tensor::from_f32(vec![2], vec![1.0, 2.0]);
+        let attrs = crate::ir::attrs(&[("axis", crate::ir::AttrValue::Int(1))]);
+        let expect = (op("nn.bias_add").eval)(
+            &[Value::Tensor(x.clone()), Value::Tensor(b.clone())],
+            &attrs,
+        )
+        .unwrap();
+        let mut args = vec![Value::Tensor(x), Value::Tensor(b)];
+        let got = eval_step(op("nn.bias_add"), &mut args, &attrs).unwrap();
+        assert!(got.bits_eq(&expect));
+
+        let c = Tensor::from_f32(vec![3], vec![-9.0, 0.5, 9.0]);
+        let cattrs = crate::ir::attrs(&[
+            ("a_min", crate::ir::AttrValue::Float(-1.0)),
+            ("a_max", crate::ir::AttrValue::Float(1.0)),
+        ]);
+        let expect = (op("clip").eval)(&[Value::Tensor(c.clone())], &cattrs).unwrap();
+        let mut args = vec![Value::Tensor(c)];
+        let got = eval_step(op("clip"), &mut args, &cattrs).unwrap();
+        assert!(got.bits_eq(&expect));
+    }
+}

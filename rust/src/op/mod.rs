@@ -13,6 +13,7 @@
 //! operators, exactly as the paper prescribes; they are opaque to the IR.
 
 mod elementwise;
+pub mod inplace;
 mod nn;
 mod qnn;
 mod reduce;

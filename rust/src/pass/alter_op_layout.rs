@@ -104,11 +104,21 @@ fn conv_params(attrs: &crate::ir::Attrs) -> crate::tensor::Conv2dParams {
 /// (control-flow/ADT programs included), "no shape info" must mean "keep
 /// the direct conv kernels", not "refuse to run the program".
 pub fn run(m: &Module) -> Result<Module, String> {
+    run_traced(m).map(|(m, _)| m)
+}
+
+/// [`run`], also reporting whether the pass *degraded* to identity because
+/// the module failed type checking. The pass manager records the flag on
+/// its [`crate::pass::PassRecord`] so `relay dump-passes` prints the skip
+/// — an untypeable module is either an unsupported construct (fine) or a
+/// genuine type error this pass would otherwise mask.
+pub fn run_traced(m: &Module) -> Result<(Module, bool), String> {
     let mut cur = m.clone();
     for _ in 0..64 {
         let report = match crate::ty::check_module(&cur) {
             Ok(r) => r,
-            Err(_) => return Ok(m.clone()),
+            // Untypeable: roll back to the input module and flag the skip.
+            Err(_) => return Ok((m.clone(), true)),
         };
         let next = cur.map_defs(|_, f| {
             let mut nf = f.clone();
@@ -128,7 +138,7 @@ pub fn run(m: &Module) -> Result<Module, String> {
             break;
         }
     }
-    Ok(cur)
+    Ok((cur, false))
 }
 
 #[cfg(test)]

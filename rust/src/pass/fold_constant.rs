@@ -1,13 +1,34 @@
 //! Constant folding: operator calls on constant tensors are evaluated at
 //! compile time with the interpreter (the -O2 tier of §5.2 — "using Relay's
-//! interpreter to evaluate away operations on constants").
+//! interpreter to evaluate away operations on constants"), and `let`-bound
+//! constants are propagated into their use sites (binding dropped), so a
+//! chain `let a = 2; let b = f(a); g(b)` collapses to one constant in a
+//! single application of the pass.
 
 use crate::eval::value::Value;
 use crate::ir::{constant, Expr, Module, E};
 use crate::op;
 
+/// Replace every use of var `id` by `value` (a constant — no capture or
+/// effect concerns; binder ids are globally unique, so shadowing cannot
+/// occur).
+fn subst_const(body: &E, id: u32, value: &E) -> E {
+    crate::ir::rewrite_postorder(body, &mut |n| match &**n {
+        Expr::Var(v) if v.id == id => Some(value.clone()),
+        _ => None,
+    })
+}
+
 pub fn fold_constants(e: &E) -> E {
     crate::ir::rewrite_postorder(e, &mut |n| match &**n {
+        // Propagate a let-bound constant into its use sites and drop the
+        // binding (constants are pure, so elision is sound). The body is
+        // re-folded after substitution: ops over the propagated constant
+        // fold immediately, which cascades down let chains in one pass
+        // instead of one chain link per fixpoint round.
+        Expr::Let { var, value, body, .. } if matches!(&**value, Expr::Const(_)) => {
+            Some(fold_constants(&subst_const(body, var.id, value)))
+        }
         Expr::Call { f, args, attrs } => {
             let name = match &**f {
                 Expr::Op(name) => name,
@@ -103,6 +124,52 @@ mod tests {
         let s = print_expr(&f);
         assert!(s.contains("3f"), "{s}");
         assert!(s.contains("add(%x"), "{s}");
+    }
+
+    #[test]
+    fn propagates_let_bound_constants_through_chains() {
+        // A two-step chain collapses to ONE constant in a single pass
+        // application (the ROADMAP follow-up: FoldConstant now
+        // const-propagates through `let`).
+        let e = parse_expr("let %a = 2f; let %b = add(%a, 3f); add(%b, %b)").unwrap();
+        let f = fold_constants(&e);
+        match &*f {
+            Expr::Const(t) => assert_eq!(t.f32_value(), 10.0),
+            other => panic!("chain not folded: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn propagation_keeps_non_constant_bindings() {
+        let e = parse_expr(
+            "fn (%x) { let %a = 2f; let %b = add(%x, %a); add(%b, %b) }",
+        )
+        .unwrap();
+        let f = fold_constants(&e);
+        let s = print_expr(&f);
+        // %a was propagated and dropped; %b depends on %x and stays bound.
+        assert!(!s.contains("let %a"), "{s}");
+        assert!(s.contains("add(%x"), "{s}");
+        assert!(s.contains("2f)"), "{s}");
+        assert!(s.contains("let %b"), "{s}");
+    }
+
+    #[test]
+    fn let_chain_module_folds_to_a_single_constant_in_the_pipeline() {
+        // The same property through the optimizing driver (FoldConstant
+        // runs at -O2 and above): the chain disappears into one literal.
+        let m = crate::ir::parse_module(
+            "def @main(%x: Tensor[(), float32]) {\n\
+               let %a = 2f;\n\
+               let %b = multiply(%a, 3f);\n\
+               add(%x, %b)\n\
+             }",
+        )
+        .unwrap();
+        let opt = crate::pass::optimize(&m, crate::pass::OptLevel::O2, false).unwrap();
+        let s = print_expr(&opt.def("main").unwrap().body);
+        assert!(!s.contains("multiply"), "chain op survived: {s}");
+        assert!(s.contains("6f"), "folded constant missing: {s}");
     }
 
     #[test]

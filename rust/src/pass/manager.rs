@@ -57,10 +57,28 @@ impl std::fmt::Display for OptLevel {
     }
 }
 
+/// What one pass application produced: the rewritten module plus whether
+/// the pass *degraded* — skipped its rewrite and returned the module
+/// unchanged because a precondition failed (today: `AlterOpLayout` on a
+/// module the type checker cannot type). Degrading keeps the pipeline
+/// running on programs the checker doesn't cover (ADTs, closures), but the
+/// skip is recorded on the [`PassRecord`] so `relay dump-passes` surfaces
+/// it instead of silently masking a genuine type error.
+pub struct PassResult {
+    pub module: Module,
+    pub degraded: bool,
+}
+
+impl From<Module> for PassResult {
+    fn from(module: Module) -> PassResult {
+        PassResult { module, degraded: false }
+    }
+}
+
 /// A named module-to-module pass.
 pub struct Pass {
     pub name: &'static str,
-    pub run: fn(&Module) -> Result<Module, String>,
+    pub run: fn(&Module) -> Result<PassResult, String>,
     /// Eligible for the driver's optional fixpoint loop
     /// ([`PipelineConfig::fixpoint`]): cleanup passes (constant folding,
     /// DCE) where one application can expose work for the next.
@@ -75,48 +93,51 @@ pub struct Pass {
 pub fn passes(level: OptLevel) -> Vec<Pass> {
     let mut v: Vec<Pass> = Vec::new();
     let pass = |name: &'static str,
-                run: fn(&Module) -> Result<Module, String>|
+                run: fn(&Module) -> Result<PassResult, String>|
      -> Pass { Pass { name, run, fixpoint: false } };
     // Inlining runs at every level >= O1 so fusion sees whole chains.
     if level >= OptLevel::O1 {
-        v.push(pass("Inline", |m| Ok(super::inline::run(m))));
+        v.push(pass("Inline", |m| Ok(super::inline::run(m).into())));
     }
     if level >= OptLevel::O3 {
-        v.push(pass("CanonicalizeOps", |m| Ok(super::canonicalize::run(m))));
-        v.push(pass("FoldScaleAxis", |m| Ok(super::fold_scale_axis::run(m))));
+        v.push(pass("CanonicalizeOps", |m| Ok(super::canonicalize::run(m).into())));
+        v.push(pass("FoldScaleAxis", |m| Ok(super::fold_scale_axis::run(m).into())));
         v.push(pass("CombineParallelConv2d", |m| {
-            Ok(super::combine_parallel_conv2d::run(m))
+            Ok(super::combine_parallel_conv2d::run(m).into())
         }));
     }
     if level >= OptLevel::O2 {
         v.push(Pass {
             name: "FoldConstant",
-            run: |m| Ok(super::fold_constant::run(m)),
+            run: |m| Ok(super::fold_constant::run(m).into()),
             fixpoint: true,
         });
         // Runs after folding so constant list spines / trip counts are
         // already literal, before ANF obscures the recursive call shape.
-        v.push(pass("TailAccum", |m| Ok(super::tail_accum::run(m))));
+        v.push(pass("TailAccum", |m| Ok(super::tail_accum::run(m).into())));
     }
     if level >= OptLevel::O3 {
-        v.push(pass("AlterOpLayout", super::alter_op_layout::run));
+        v.push(pass("AlterOpLayout", |m| {
+            super::alter_op_layout::run_traced(m)
+                .map(|(module, degraded)| PassResult { module, degraded })
+        }));
         // A second folding round cleans up the weight reshapes/transposes
         // AlterOpLayout introduced (formerly named `FoldConstant2`).
         v.push(Pass {
             name: "FoldConstantPostLayout",
-            run: |m| Ok(super::fold_constant::run(m)),
+            run: |m| Ok(super::fold_constant::run(m).into()),
             fixpoint: true,
         });
-        v.push(pass("ToANF", |m| Ok(super::anf::run(m))));
-        v.push(pass("CommonSubexprElim", |m| Ok(super::cse::run(m))));
+        v.push(pass("ToANF", |m| Ok(super::anf::run(m).into())));
+        v.push(pass("CommonSubexprElim", |m| Ok(super::cse::run(m).into())));
         v.push(Pass {
             name: "DeadCodeElim",
-            run: |m| Ok(super::dce::run(m)),
+            run: |m| Ok(super::dce::run(m).into()),
             fixpoint: true,
         });
     }
     if level >= OptLevel::O1 {
-        v.push(pass("FuseOps", |m| Ok(super::fusion::run(m))));
+        v.push(pass("FuseOps", |m| Ok(super::fusion::run(m).into())));
     }
     v
 }
@@ -155,6 +176,10 @@ pub struct PassRecord {
     /// Applications of the pass (1 unless [`PipelineConfig::fixpoint`]
     /// re-ran it to convergence).
     pub rounds: usize,
+    /// The pass skipped its rewrite because a precondition failed (e.g.
+    /// `AlterOpLayout` on an untypeable module) — surfaced by
+    /// `relay dump-passes` so the skip is never silent.
+    pub degraded: bool,
 }
 
 /// What the optimizing driver did to a module: one record per pass, plus
@@ -200,13 +225,14 @@ impl PassTrace {
         for r in &self.passes {
             let _ = writeln!(
                 out,
-                "{:<24} {:>10.3} {:>8} {:>8} {:>+7} {:>7}",
+                "{:<24} {:>10.3} {:>8} {:>8} {:>+7} {:>7}{}",
                 r.name,
                 r.wall.as_secs_f64() * 1e3,
                 r.nodes_before,
                 r.nodes_after,
                 r.nodes_after as i64 - r.nodes_before as i64,
                 r.rounds,
+                if r.degraded { "  DEGRADED" } else { "" },
             );
         }
         let _ = writeln!(
@@ -220,6 +246,16 @@ impl PassTrace {
             // The rounds column doesn't total meaningfully.
             "",
         );
+        for r in &self.passes {
+            if r.degraded {
+                let _ = writeln!(
+                    out,
+                    "note: {} degraded to identity (module precondition failed, \
+                     e.g. not typeable) — rewrite skipped, program unchanged",
+                    r.name
+                );
+            }
+        }
         out
     }
 }
@@ -245,10 +281,13 @@ pub fn optimize_with(
         let pass_nodes_before = module_node_count(&cur);
         let started = Instant::now();
         let mut rounds = 0usize;
+        let mut degraded = false;
         loop {
             rounds += 1;
-            let next =
+            let result =
                 (pass.run)(&cur).map_err(|e| format!("pass {}: {e}", pass.name))?;
+            degraded |= result.degraded;
+            let next = result.module;
             if !(cfg.fixpoint && pass.fixpoint) || rounds >= MAX_FIXPOINT_ROUNDS {
                 cur = next;
                 break;
@@ -272,6 +311,7 @@ pub fn optimize_with(
             nodes_before: pass_nodes_before,
             nodes_after: module_node_count(&cur),
             rounds,
+            degraded,
         });
     }
     let trace = PassTrace {
@@ -391,6 +431,32 @@ mod tests {
         // O0 is the empty pipeline.
         let (_, t0) = optimize_traced(&m, OptLevel::O0, false).unwrap();
         assert!(t0.passes.is_empty());
+    }
+
+    #[test]
+    fn alter_op_layout_degrade_is_recorded_and_rendered() {
+        // An ADT program the type checker cannot type: AlterOpLayout
+        // degrades to identity, and the skip is visible on the record and
+        // in the rendered table (the PR 4 follow-up about masked type
+        // errors).
+        let m = parse_module(
+            "def @main(%l) { match (%l) { | Cons(%h, %t) -> %h | Nil -> 0f } }",
+        )
+        .unwrap();
+        let (_, trace) = optimize_traced(&m, OptLevel::O3, false).unwrap();
+        let rec = trace
+            .passes
+            .iter()
+            .find(|r| r.name == "AlterOpLayout")
+            .expect("AlterOpLayout record");
+        assert!(rec.degraded, "skip not recorded");
+        let table = trace.render();
+        assert!(table.contains("DEGRADED"), "{table}");
+        assert!(table.contains("degraded to identity"), "{table}");
+        // A typeable module is not flagged, and its table has no note.
+        let (_, ok) = optimize_traced(&mlp_module(), OptLevel::O3, false).unwrap();
+        assert!(!ok.passes.iter().any(|r| r.degraded));
+        assert!(!ok.render().contains("DEGRADED"));
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod tail_accum;
 
 pub use ad::grad_expr;
 pub use manager::{
-    optimize, optimize_traced, optimize_with, OptLevel, PassRecord, PassTrace,
-    PipelineConfig,
+    optimize, optimize_traced, optimize_with, OptLevel, PassRecord, PassResult,
+    PassTrace, PipelineConfig,
 };

@@ -285,6 +285,98 @@ pub fn clip(a: &Tensor, lo: f64, hi: f64) -> Tensor {
     from_f64_as(a.dtype(), a.shape().to_vec(), &vals)
 }
 
+// ---------------------------------------------------------------------------
+// In-place variants (the memory planner's hot-kernel fast path).
+//
+// Each `*_assign` writes the result into an operand whose storage is
+// uniquely owned (probed via `Storage::try_unique_f32`), returning `true`
+// on success; any shape/dtype/uniqueness mismatch returns `false` and the
+// caller runs the allocating kernel. The arithmetic mirrors the allocating
+// path bit-for-bit (same f64 round trip), so planned and unplanned
+// execution are indistinguishable — asserted by the differential tests.
+// ---------------------------------------------------------------------------
+
+/// Can `out[i] = f(dst[i], other broadcast)` legally land in `dst`'s buffer?
+/// True when both are f32 (promotion is identity) and the broadcast result
+/// shape equals `dst`'s shape: equal shapes, or `other` a one-element
+/// tensor of rank <= dst's (scalar broadcast indexes it at 0 everywhere).
+fn fits_in_place(dst: &Tensor, other: &Tensor) -> bool {
+    dst.dtype() == DType::F32
+        && other.dtype() == DType::F32
+        && (dst.shape() == other.shape()
+            || (other.numel() == 1 && other.rank() <= dst.rank()))
+}
+
+/// `a <- op(a, b)` in place. Requires `a` uniquely owned, f32, and the
+/// broadcast output shape to equal `a`'s ([`fits_in_place`]).
+pub fn binary_assign(op: BinOp, a: &mut Tensor, b: &Tensor) -> bool {
+    if !fits_in_place(a, b) {
+        return false;
+    }
+    let bv = b.as_f32();
+    let scalar = b.numel() == 1 && a.shape() != b.shape();
+    let Some(av) = a.try_unique_f32() else { return false };
+    if scalar {
+        let y = bv[0] as f64;
+        for x in av.iter_mut() {
+            *x = apply_f64(op, *x as f64, y) as f32;
+        }
+    } else {
+        for (x, &y) in av.iter_mut().zip(bv.iter()) {
+            *x = apply_f64(op, *x as f64, y as f64) as f32;
+        }
+    }
+    true
+}
+
+/// `b <- op(a, b)` in place (operand order preserved — matters for
+/// subtract/divide/power). Requires `b` uniquely owned, f32, and the
+/// broadcast output shape to equal `b`'s.
+pub fn binary_assign_rhs(op: BinOp, a: &Tensor, b: &mut Tensor) -> bool {
+    if !fits_in_place(b, a) {
+        return false;
+    }
+    let av = a.as_f32();
+    let scalar = a.numel() == 1 && a.shape() != b.shape();
+    let Some(bv) = b.try_unique_f32() else { return false };
+    if scalar {
+        let x = av[0] as f64;
+        for y in bv.iter_mut() {
+            *y = apply_f64(op, x, *y as f64) as f32;
+        }
+    } else {
+        for (&x, y) in av.iter().zip(bv.iter_mut()) {
+            *y = apply_f64(op, x as f64, *y as f64) as f32;
+        }
+    }
+    true
+}
+
+/// `a <- op(a)` in place for the f32 unary kernels. `LogicalNot` is bool
+/// and excluded.
+pub fn unary_assign(op: UnaryOp, a: &mut Tensor) -> bool {
+    if op == UnaryOp::LogicalNot || a.dtype() != DType::F32 {
+        return false;
+    }
+    let Some(av) = a.try_unique_f32() else { return false };
+    for x in av.iter_mut() {
+        *x = unary_f64(op, *x as f64) as f32;
+    }
+    true
+}
+
+/// `a <- clamp(a, lo, hi)` in place (f32, uniquely owned).
+pub fn clip_assign(a: &mut Tensor, lo: f64, hi: f64) -> bool {
+    if a.dtype() != DType::F32 {
+        return false;
+    }
+    let Some(av) = a.try_unique_f32() else { return false };
+    for x in av.iter_mut() {
+        *x = (*x as f64).clamp(lo, hi) as f32;
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +448,77 @@ mod tests {
     fn clip_clamps() {
         let a = Tensor::from_f32(vec![4], vec![-5., 0., 5., 10.]);
         assert_eq!(clip(&a, -1.0, 6.0).as_f32(), &[-1., 0., 5., 6.]);
+    }
+
+    #[test]
+    fn inplace_binary_matches_allocating_kernel_bitwise() {
+        let b = Tensor::from_f32(vec![3], vec![0.5, -2.0, 3.0]);
+        let make_a = || Tensor::from_f32(vec![3], vec![1.0, 2.0, -3.5]);
+        for op in [
+            BinOp::Add,
+            BinOp::Sub,
+            BinOp::Mul,
+            BinOp::Div,
+            BinOp::Pow,
+            BinOp::Maximum,
+            BinOp::Minimum,
+        ] {
+            let expect = binary(op, &make_a(), &b);
+            let mut a = make_a();
+            assert!(binary_assign(op, &mut a, &b), "{op:?} lhs refused");
+            assert_eq!(a.as_f32(), expect.as_f32(), "{op:?} lhs diverged");
+            let mut b2 = Tensor::from_f32(vec![3], vec![0.5, -2.0, 3.0]);
+            assert!(binary_assign_rhs(op, &make_a(), &mut b2), "{op:?} rhs refused");
+            assert_eq!(b2.as_f32(), expect.as_f32(), "{op:?} rhs diverged");
+        }
+    }
+
+    #[test]
+    fn inplace_scalar_broadcast_and_refusals() {
+        let s = Tensor::scalar_f32(2.0);
+        let mut a = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let expect = binary(BinOp::Mul, &a, &s);
+        assert!(binary_assign(BinOp::Mul, &mut a, &s));
+        assert_eq!(a.as_f32(), expect.as_f32());
+        // Shared storage refuses (value semantics must stay observable).
+        let mut shared = Tensor::from_f32(vec![2], vec![1., 2.]);
+        let alias = shared.clone();
+        assert!(!binary_assign(BinOp::Add, &mut shared, &Tensor::from_f32(vec![2], vec![1., 1.])));
+        assert_eq!(alias.as_f32(), &[1., 2.]);
+        // A broadcast that grows the destination refuses.
+        let mut small = Tensor::scalar_f32(1.0);
+        let big = Tensor::from_f32(vec![2], vec![1., 2.]);
+        assert!(!binary_assign(BinOp::Add, &mut small, &big));
+        // Mixed dtype refuses.
+        let mut f = Tensor::from_f32(vec![2], vec![1., 2.]);
+        let i = Tensor::from_i32(vec![2], vec![1, 2]);
+        assert!(!binary_assign(BinOp::Add, &mut f, &i));
+    }
+
+    #[test]
+    fn inplace_unary_and_clip_match() {
+        for op in [
+            UnaryOp::Neg,
+            UnaryOp::Exp,
+            UnaryOp::Tanh,
+            UnaryOp::Relu,
+            UnaryOp::Sigmoid,
+            UnaryOp::Erf,
+        ] {
+            let src = Tensor::from_f32(vec![3], vec![-1.0, 0.25, 2.0]);
+            let expect = unary(op, &src);
+            let mut a = Tensor::from_f32(vec![3], vec![-1.0, 0.25, 2.0]);
+            assert!(unary_assign(op, &mut a), "{op:?} refused");
+            assert_eq!(a.as_f32(), expect.as_f32(), "{op:?} diverged");
+        }
+        let mut c = Tensor::from_f32(vec![3], vec![-5.0, 0.5, 9.0]);
+        let expect = clip(&c, -1.0, 1.0);
+        assert!(clip_assign(&mut c, -1.0, 1.0));
+        assert_eq!(c.as_f32(), expect.as_f32());
+        // Non-f32 refuses.
+        let mut i = Tensor::from_i32(vec![2], vec![1, 2]);
+        assert!(!unary_assign(UnaryOp::Neg, &mut i));
+        assert!(!clip_assign(&mut i, 0.0, 1.0));
     }
 
     #[test]

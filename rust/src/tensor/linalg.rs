@@ -12,14 +12,29 @@ const TILE: usize = 64;
 
 /// `a (m,k) @ b (k,n) -> (m,n)` for f32.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, n) = matmul_dims(a, b);
+    let mut out = vec![0f32; m * n];
+    matmul_into(a, b, &mut out);
+    Tensor::new(vec![m, n], Storage::F32(Arc::new(out)))
+}
+
+fn matmul_dims(a: &Tensor, b: &Tensor) -> (usize, usize) {
     assert_eq!(a.rank(), 2, "matmul lhs rank");
     assert_eq!(b.rank(), 2, "matmul rhs rank");
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    let (k, k2) = (a.shape()[1], b.shape()[0]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    (a.shape()[0], b.shape()[1])
+}
+
+/// The accumulate step of [`matmul`], writing into a caller-supplied
+/// zeroed `(m*n)` destination instead of allocating — the memory planner's
+/// in-place variant (a reused steady-state buffer skips the allocator).
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut [f32]) {
+    let (m, n) = matmul_dims(a, b);
+    let k = a.shape()[1];
+    assert_eq!(out.len(), m * n, "matmul destination length");
     let av = a.as_f32();
     let bv = b.as_f32();
-    let mut out = vec![0f32; m * n];
     // i-k-j over tiles: the innermost j loop is a contiguous FMA that the
     // compiler auto-vectorizes.
     for i0 in (0..m).step_by(TILE) {
@@ -42,7 +57,6 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    Tensor::new(vec![m, n], Storage::F32(Arc::new(out)))
 }
 
 /// Batched matmul `a (b,m,k) @ w (b,k,n)`.
@@ -70,14 +84,28 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// `nn.dense`: `x (m,k) @ w^T` where `w` is `(n,k)` — TVM/Relay convention.
 pub fn dense(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, n) = dense_dims(x, w);
+    let mut out = vec![0f32; m * n];
+    dense_into(x, w, &mut out);
+    Tensor::new(vec![m, n], Storage::F32(Arc::new(out)))
+}
+
+fn dense_dims(x: &Tensor, w: &Tensor) -> (usize, usize) {
     assert_eq!(x.rank(), 2, "dense input rank");
     assert_eq!(w.rank(), 2, "dense weight rank");
-    let (m, k) = (x.shape()[0], x.shape()[1]);
-    let (n, k2) = (w.shape()[0], w.shape()[1]);
+    let (k, k2) = (x.shape()[1], w.shape()[1]);
     assert_eq!(k, k2, "dense inner dims {k} vs {k2}");
+    (x.shape()[0], w.shape()[0])
+}
+
+/// The accumulate step of [`dense`], writing into a caller-supplied zeroed
+/// `(m*n)` destination instead of allocating.
+pub fn dense_into(x: &Tensor, w: &Tensor, out: &mut [f32]) {
+    let (m, n) = dense_dims(x, w);
+    let k = x.shape()[1];
+    assert_eq!(out.len(), m * n, "dense destination length");
     let xv = x.as_f32();
     let wv = w.as_f32();
-    let mut out = vec![0f32; m * n];
     for i in 0..m {
         let xrow = &xv[i * k..(i + 1) * k];
         for j in 0..n {
@@ -89,14 +117,11 @@ pub fn dense(x: &Tensor, w: &Tensor) -> Tensor {
             out[i * n + j] = acc;
         }
     }
-    Tensor::new(vec![m, n], Storage::F32(Arc::new(out)))
 }
 
 /// `nn.bias_add`: add a 1-d bias along `axis` of `x`.
 pub fn bias_add(x: &Tensor, bias: &Tensor, axis: i64) -> Tensor {
-    assert_eq!(bias.rank(), 1, "bias rank");
-    let axis = super::shape::norm_axis(axis, x.rank());
-    assert_eq!(x.shape()[axis], bias.shape()[0], "bias length");
+    let axis = bias_add_axis(x, bias, axis);
     let xv = x.as_f32();
     let bv = bias.as_f32();
     let outer: usize = x.shape()[..axis].iter().product();
@@ -111,6 +136,37 @@ pub fn bias_add(x: &Tensor, bias: &Tensor, axis: i64) -> Tensor {
         }
     }
     Tensor::new(x.shape().to_vec(), Storage::F32(Arc::new(out)))
+}
+
+fn bias_add_axis(x: &Tensor, bias: &Tensor, axis: i64) -> usize {
+    assert_eq!(bias.rank(), 1, "bias rank");
+    let axis = super::shape::norm_axis(axis, x.rank());
+    assert_eq!(x.shape()[axis], bias.shape()[0], "bias length");
+    axis
+}
+
+/// In-place [`bias_add`]: `x[..] += bias` along `axis` when `x`'s buffer is
+/// uniquely owned and f32. Returns false (caller allocates) otherwise.
+pub fn bias_add_assign(x: &mut Tensor, bias: &Tensor, axis: i64) -> bool {
+    if x.dtype() != super::DType::F32 || bias.dtype() != super::DType::F32 {
+        return false;
+    }
+    let axis = bias_add_axis(x, bias, axis);
+    let outer: usize = x.shape()[..axis].iter().product();
+    let mid = x.shape()[axis];
+    let inner: usize = x.shape()[axis + 1..].iter().product();
+    let bv = bias.as_f32();
+    let Some(xv) = x.try_unique_f32() else { return false };
+    for o in 0..outer {
+        for m in 0..mid {
+            let base = (o * mid + m) * inner;
+            let b = bv[m];
+            for v in &mut xv[base..base + inner] {
+                *v += b;
+            }
+        }
+    }
+    true
 }
 
 #[cfg(test)]
@@ -176,6 +232,34 @@ mod tests {
         let b = Tensor::from_f32(vec![2], vec![1., 2.]);
         let out = bias_add(&x, &b, 1);
         assert_eq!(out.as_f32(), &[1., 1., 1., 1., 2., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn into_variants_match_the_allocating_kernels() {
+        let a = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_f32(vec![3, 2], vec![1., 4., 2., 5., 3., 6.]);
+        let mut out = vec![0f32; 4];
+        matmul_into(&a, &b, &mut out);
+        assert_eq!(&out[..], matmul(&a, &b).as_f32());
+
+        let w = Tensor::from_f32(vec![2, 3], vec![1., 0., 0., 0., 1., 0.]);
+        let mut dout = vec![0f32; 4];
+        dense_into(&a, &w, &mut dout);
+        assert_eq!(&dout[..], dense(&a, &w).as_f32());
+    }
+
+    #[test]
+    fn bias_add_assign_matches_and_respects_uniqueness() {
+        let bias = Tensor::from_f32(vec![3], vec![1., 2., 3.]);
+        let expect = bias_add(&Tensor::from_f32(vec![2, 3], vec![0.; 6]), &bias, 1);
+        let mut x = Tensor::from_f32(vec![2, 3], vec![0.; 6]);
+        assert!(bias_add_assign(&mut x, &bias, 1));
+        assert_eq!(x.as_f32(), expect.as_f32());
+        // Shared input refuses, leaving the alias untouched.
+        let mut shared = Tensor::from_f32(vec![2, 3], vec![0.; 6]);
+        let alias = shared.clone();
+        assert!(!bias_add_assign(&mut shared, &bias, 1));
+        assert_eq!(alias.as_f32(), &[0.; 6]);
     }
 
     #[test]

@@ -31,8 +31,98 @@ pub use random::Rng;
 pub use reduce::*;
 pub use shape::{broadcast_shapes, Shape};
 
+use std::cell::Cell;
 use std::fmt;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Allocation accounting for the memory planner.
+// ---------------------------------------------------------------------------
+
+/// Process-wide counters for the in-place kernel fast path (the analogue of
+/// [`crate::eval::LaunchCounter`] for memory planning): every *eligible*
+/// hot kernel execution (elementwise binary/unary, bias-add, clip) either
+/// reuses a dying input buffer (`hit`) or falls back to allocating a fresh
+/// output (`miss`). Kernels outside the hot set (matmul/dense/conv) are not
+/// counted — their output shape never matches an input, so "miss" would be
+/// meaningless there.
+///
+/// Counters are bumped on the executing thread into BOTH a global atomic
+/// pair (what the serving fleet's `Stats` reports) and a thread-local pair
+/// ([`thread_alloc_snapshot`]) so single-threaded tests and benches can
+/// measure their own executions without racing parallel test threads.
+#[derive(Debug, Default)]
+pub struct AllocStats {
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl AllocStats {
+    /// In-place reuses so far (no output buffer allocated).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Eligible kernels that had to allocate their output.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> AllocSnapshot {
+        AllocSnapshot { hits: self.hits(), misses: self.misses() }
+    }
+}
+
+/// A point-in-time copy of hit/miss counters; subtract two to get a delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl AllocSnapshot {
+    pub fn hits_since(&self, earlier: &AllocSnapshot) -> usize {
+        self.hits - earlier.hits
+    }
+
+    pub fn misses_since(&self, earlier: &AllocSnapshot) -> usize {
+        self.misses - earlier.misses
+    }
+}
+
+static ALLOC_STATS: OnceLock<AllocStats> = OnceLock::new();
+
+/// The process-wide allocation counters.
+pub fn alloc_stats() -> &'static AllocStats {
+    ALLOC_STATS.get_or_init(AllocStats::default)
+}
+
+thread_local! {
+    static TL_HITS: Cell<usize> = const { Cell::new(0) };
+    static TL_MISSES: Cell<usize> = const { Cell::new(0) };
+}
+
+/// This thread's own hit/miss counters (what the calling thread's kernel
+/// executions did, unpolluted by other threads).
+pub fn thread_alloc_snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        hits: TL_HITS.with(|c| c.get()),
+        misses: TL_MISSES.with(|c| c.get()),
+    }
+}
+
+/// Record one in-place reuse (called by the in-place kernel glue).
+pub fn note_inplace_hit() {
+    alloc_stats().hits.fetch_add(1, Ordering::Relaxed);
+    TL_HITS.with(|c| c.set(c.get() + 1));
+}
+
+/// Record one eligible kernel that allocated its output.
+pub fn note_inplace_miss() {
+    alloc_stats().misses.fetch_add(1, Ordering::Relaxed);
+    TL_MISSES.with(|c| c.set(c.get() + 1));
+}
 
 /// Raw buffer behind a tensor. `Arc` makes clones O(1); all mutating ops
 /// produce fresh buffers (value semantics, like Relay's pure fragment).
@@ -76,6 +166,40 @@ impl Storage {
             Storage::I8(_) => DType::I8,
             Storage::U8(_) => DType::U8,
             Storage::Bool(_) => DType::Bool,
+        }
+    }
+
+    /// Is this the only live reference to the underlying buffer? When true,
+    /// mutating in place is unobservable (value semantics preserved) — the
+    /// memory planner's legality condition.
+    pub fn is_unique(&self) -> bool {
+        match self {
+            Storage::F32(v) => Arc::strong_count(v) == 1,
+            Storage::F64(v) => Arc::strong_count(v) == 1,
+            Storage::I64(v) => Arc::strong_count(v) == 1,
+            Storage::I32(v) => Arc::strong_count(v) == 1,
+            Storage::I16(v) => Arc::strong_count(v) == 1,
+            Storage::I8(v) => Arc::strong_count(v) == 1,
+            Storage::U8(v) => Arc::strong_count(v) == 1,
+            Storage::Bool(v) => Arc::strong_count(v) == 1,
+        }
+    }
+
+    /// Mutable access to an f32 buffer iff this is the sole owner
+    /// (`Arc::get_mut` probe). `None` when shared or not f32 — callers fall
+    /// back to the allocating kernel, so value semantics stay observable.
+    pub fn try_unique_f32(&mut self) -> Option<&mut [f32]> {
+        match self {
+            Storage::F32(v) => Arc::get_mut(v).map(|v| v.as_mut_slice()),
+            _ => None,
+        }
+    }
+
+    /// [`Self::try_unique_f32`] for f64 buffers.
+    pub fn try_unique_f64(&mut self) -> Option<&mut [f64]> {
+        match self {
+            Storage::F64(v) => Arc::get_mut(v).map(|v| v.as_mut_slice()),
+            _ => None,
         }
     }
 }
@@ -192,6 +316,18 @@ impl Tensor {
     pub fn storage(&self) -> &Storage {
         &self.data
     }
+
+    /// Mutable access to this tensor's f32 buffer iff the storage is
+    /// uniquely owned (see [`Storage::try_unique_f32`]).
+    pub fn try_unique_f32(&mut self) -> Option<&mut [f32]> {
+        self.data.try_unique_f32()
+    }
+
+    /// Is this tensor's buffer uniquely owned (safe to mutate in place)?
+    pub fn is_unique(&self) -> bool {
+        self.data.is_unique()
+    }
+
 
     pub fn as_f32(&self) -> &[f32] {
         match &self.data {
@@ -358,6 +494,44 @@ mod tests {
     fn scalar_bool_roundtrip() {
         assert!(Tensor::scalar_bool(true).bool_value());
         assert!(!Tensor::scalar_bool(false).bool_value());
+    }
+
+    #[test]
+    fn uniqueness_probe_respects_sharing() {
+        let mut t = Tensor::from_f32(vec![2], vec![1.0, 2.0]);
+        assert!(t.is_unique());
+        assert!(t.try_unique_f32().is_some());
+        let alias = t.clone();
+        assert!(!t.is_unique());
+        assert!(t.try_unique_f32().is_none(), "shared buffer handed out mutably");
+        drop(alias);
+        assert!(t.try_unique_f32().is_some());
+        // Non-f32 storage refuses the f32 probe even when unique.
+        let mut i = Tensor::from_i32(vec![1], vec![3]);
+        assert!(i.is_unique());
+        assert!(i.try_unique_f32().is_none());
+        // The f64 probe mirrors the f32 one.
+        let mut d = Tensor::new(vec![1], Storage::F64(Arc::new(vec![1.0])));
+        assert!(d.data.try_unique_f64().is_some());
+        let alias = d.clone();
+        assert!(d.data.try_unique_f64().is_none());
+        drop(alias);
+    }
+
+    #[test]
+    fn alloc_stats_thread_snapshot_tracks_this_thread() {
+        let global_before = alloc_stats().snapshot();
+        let before = thread_alloc_snapshot();
+        note_inplace_hit();
+        note_inplace_miss();
+        let after = thread_alloc_snapshot();
+        assert_eq!(after.hits_since(&before), 1);
+        assert_eq!(after.misses_since(&before), 1);
+        // The global aggregate moved by at least as much (other test
+        // threads may also be bumping it).
+        let global_after = alloc_stats().snapshot();
+        assert!(global_after.hits_since(&global_before) >= 1);
+        assert!(global_after.misses_since(&global_before) >= 1);
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub struct PackedStep {
     pub attrs: Attrs,
     pub inputs: Vec<PackedRef>,
     pub out_temp: u16,
+    /// Parallel to `inputs`: true when that arg/temp is last read by this
+    /// step (the memory planner's kill mask) and may be consumed by move,
+    /// making its buffer eligible for in-place reuse
+    /// ([`crate::op::inplace`]). Constants are never killed.
+    pub kills: Vec<bool>,
 }
 
 /// A fused kernel: an operator sequence over scratch temps. Executing one
@@ -277,6 +282,14 @@ pub struct VmFunc {
     pub has_self: bool,
     pub nregs: u16,
     pub code: Vec<Instr>,
+    /// Parallel table, one entry per instruction: the physical registers
+    /// whose values die after that instruction executes (recorded by the
+    /// register allocator's free events). The executor *moves* dying
+    /// registers into kernel/call arguments instead of cloning them, which
+    /// is what hands the in-place kernels uniquely-owned buffers. Sound
+    /// for the same reason register reuse is: branches only jump forward,
+    /// so the last textual use bounds the live range.
+    pub kills: Vec<Vec<Reg>>,
 }
 
 /// A compiled program: function table, constant pool, packed-kernel table,

@@ -214,7 +214,10 @@ impl<'m> Builder<'m> {
         i
     }
 
-    fn add_packed(&mut self, p: PackedFunc) -> u32 {
+    fn add_packed(&mut self, mut p: PackedFunc) -> u32 {
+        // Every packed kernel gets its kill masks here — the single point
+        // all PackedFuncs flow through.
+        plan_packed_kills(&mut p.steps, p.out_temp);
         self.packed.push(p);
         (self.packed.len() - 1) as u32
     }
@@ -305,9 +308,12 @@ fn compile_function(
     // Peephole 1 (virtual registers): fuse compare+If into IfCmp so scalar
     // loop conditions skip the intermediate bool tensor.
     fuse_if_cmp(&mut code, &ctx.b.packed);
-    let nregs = allocate_registers(&mut code, fixed)?;
+    // The allocator's free events double as the memory planner's per-
+    // instruction kill table.
+    let (nregs, kills) = allocate_registers(&mut code, fixed)?;
     // Peephole 2 (physical registers): calls whose result flows straight
-    // to Ret become frame-reusing tail calls.
+    // to Ret become frame-reusing tail calls. Instruction variants change
+    // but registers and indices do not, so the kill table stays aligned.
     mark_tail_calls(&mut code);
     Ok(VmFunc {
         name,
@@ -316,6 +322,7 @@ fn compile_function(
         has_self,
         nregs,
         code,
+        kills,
     })
 }
 
@@ -541,6 +548,7 @@ impl FnCtx<'_, '_> {
                                 .map(|i| PackedRef::Arg(i as u16))
                                 .collect(),
                             out_temp: 0,
+                            kills: Vec::new(),
                         };
                         let i = self.b.add_packed(PackedFunc {
                             name: name.clone(),
@@ -618,6 +626,8 @@ impl FnCtx<'_, '_> {
                         has_self: false,
                         nregs: nparams + 1,
                         code,
+                        // Every argument dies at the single kernel call.
+                        kills: vec![(0..nparams).collect(), Vec::new()],
                     },
                 );
                 let dst = self.fresh()?;
@@ -818,7 +828,7 @@ fn packed_step(
             other => return err(format!("non-atom argument in fused kernel {other:?}")),
         }
     }
-    Ok(PackedStep { def, attrs, inputs, out_temp })
+    Ok(PackedStep { def, attrs, inputs, out_temp, kills: Vec::new() })
 }
 
 // ---------------------------------------------------------------------------
@@ -942,14 +952,17 @@ fn flows_to_ret(code: &[Instr], i: usize, reg: Reg) -> bool {
 // Register allocation: linear liveness scan + free-list reuse.
 // ---------------------------------------------------------------------------
 
-/// Rewrite virtual registers onto a compact physical frame.
+/// Rewrite virtual registers onto a compact physical frame, returning the
+/// frame size and the per-instruction kill table (physical registers whose
+/// values die at each instruction — the allocator's free events, reused by
+/// the executor as the memory planner's move-instead-of-clone mask).
 ///
 /// Soundness rests on the compiler's forward-branch invariant: instruction
 /// order is an execution-order over-approximation, so the last textual use
 /// of a register bounds its live range. Registers `0..fixed` are the
 /// calling convention (args, captures, self) and keep their indices, but
 /// become reusable after their last read like any other register.
-fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<Reg> {
+fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<(Reg, Vec<Vec<Reg>>)> {
     debug_assert!(forward_branches_only(code), "backward branch in VM code");
     let mut last_use: HashMap<Reg, usize> = HashMap::new();
     for (i, ins) in code.iter().enumerate() {
@@ -963,6 +976,7 @@ fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<Reg> {
     }
     let mut map: HashMap<Reg, Reg> = (0..fixed).map(|r| (r, r)).collect();
     let mut free: Vec<Reg> = Vec::new();
+    let mut kills: Vec<Vec<Reg>> = vec![Vec::new(); code.len()];
     let mut high: Reg = fixed;
     let mut overflow = false;
     for (i, ins) in code.iter_mut().enumerate() {
@@ -972,6 +986,7 @@ fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<Reg> {
         // instruction (the executor reads all inputs before writing).
         for v in &expiry[i] {
             free.push(map[v]);
+            kills[i].push(map[v]);
         }
         ins.remap_defs(|r| {
             *map.entry(r).or_insert_with(|| {
@@ -990,7 +1005,46 @@ fn allocate_registers(code: &mut [Instr], fixed: Reg) -> R<Reg> {
     if overflow {
         return err("register frame exceeds 65534 slots");
     }
-    Ok(high)
+    Ok((high, kills))
+}
+
+/// Compute each packed step's kill mask: an `Arg`/`Temp` input dies at its
+/// last reading step (only the final occurrence within one step's input
+/// list is marked, so the executor can move unconditionally). The kernel's
+/// result temp (`out_temp`) is consumed by the epilogue *after* every
+/// step, so it is exempt from the scan — the primitive tail may name any
+/// temp, not necessarily the last one, and a later step may legally read
+/// it.
+fn plan_packed_kills(steps: &mut [PackedStep], out_temp: u16) {
+    let mut last_arg: HashMap<u16, (usize, usize)> = HashMap::new();
+    let mut last_temp: HashMap<u16, (usize, usize)> = HashMap::new();
+    for (i, s) in steps.iter().enumerate() {
+        for (j, r) in s.inputs.iter().enumerate() {
+            match r {
+                PackedRef::Arg(a) => {
+                    last_arg.insert(*a, (i, j));
+                }
+                PackedRef::Temp(t) => {
+                    last_temp.insert(*t, (i, j));
+                }
+                PackedRef::Const(_) => {}
+            }
+        }
+    }
+    for (i, s) in steps.iter_mut().enumerate() {
+        s.kills = s
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(j, r)| match r {
+                PackedRef::Arg(a) => last_arg.get(a) == Some(&(i, j)),
+                PackedRef::Temp(t) => {
+                    *t != out_temp && last_temp.get(t) == Some(&(i, j))
+                }
+                PackedRef::Const(_) => false,
+            })
+            .collect();
+    }
 }
 
 fn forward_branches_only(code: &[Instr]) -> bool {
@@ -1256,6 +1310,42 @@ mod tests {
             fact.code.iter().any(|i| matches!(i, Instr::InvokeFunc { .. })),
             "non-tail recursive call wrongly converted:\n{fact}"
         );
+    }
+
+    #[test]
+    fn packed_result_temp_read_by_a_later_step_is_not_killed() {
+        // The primitive tail may name an *earlier* temp that a later step
+        // still reads (here: the kernel returns %a while %b = negative(%a)
+        // is computed after it). The kill planner must exempt the result
+        // temp, or the epilogue's take() finds it empty.
+        let x = crate::ir::Var::fresh("x");
+        let a = crate::ir::Var::fresh("a");
+        let b = crate::ir::Var::fresh("b");
+        let body = crate::ir::let_(
+            a.clone(),
+            crate::ir::op_call("tanh", vec![crate::ir::var(&x)]),
+            crate::ir::let_(
+                b,
+                crate::ir::op_call("negative", vec![crate::ir::var(&a)]),
+                crate::ir::var(&a),
+            ),
+        );
+        let mut prim = Function::new(vec![(x, None)], body);
+        prim.attrs = crate::ir::FnAttrs { primitive: true };
+        let y = crate::ir::Var::fresh("y");
+        let main_body = crate::ir::call(
+            std::sync::Arc::new(Expr::Func(prim)),
+            vec![crate::ir::var(&y)],
+        );
+        let mut m = Module::with_prelude();
+        m.add_def("main", Function::new(vec![(y, None)], main_body));
+        let p = compile(&m).unwrap();
+        let input = Tensor::from_f32(vec![2], vec![0.5, -1.0]);
+        let out = crate::vm::Vm::new(&p)
+            .run(vec![Value::Tensor(input.clone())])
+            .unwrap();
+        let expect = crate::tensor::unary(crate::tensor::UnaryOp::Tanh, &input);
+        assert_eq!(out.tensor().as_f32(), expect.as_f32());
     }
 
     #[test]

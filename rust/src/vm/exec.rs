@@ -16,7 +16,7 @@
 //! stack, launch counter, depth high-water mark); nothing per-frame is
 //! ever shared.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
 use super::bytecode::{Instr, PackedFunc, PackedRef, Program, Reg};
@@ -24,6 +24,10 @@ use crate::eval::value::{lock_ref, Value, VmClosure};
 use crate::eval::LaunchCounter;
 use crate::op;
 use crate::tensor::{self, CmpOp, DType, Tensor};
+
+/// Frames' register vectors kept for reuse; bounds pool memory when a
+/// burst of deep recursion retires many frames at once.
+const FRAME_POOL_CAP: usize = 32;
 
 /// A VM instance executing one compiled [`Program`].
 pub struct Vm<'p> {
@@ -34,6 +38,10 @@ pub struct Vm<'p> {
     /// With tail-call elimination, self-recursive loops keep this O(1)
     /// regardless of iteration count (asserted by tests).
     pub max_depth: Cell<usize>,
+    /// Retired frames' register vectors, reused for new frames (extends
+    /// PR 2's tail-call frame reuse to *every* call): steady-state calls
+    /// clear-and-resize a pooled vector instead of allocating one.
+    pool: RefCell<Vec<Vec<Value>>>,
 }
 
 struct Frame {
@@ -44,28 +52,91 @@ struct Frame {
     ret_dst: Reg,
 }
 
-/// Pop the current frame and deliver `v` into the caller's `ret_dst`
-/// register; returns `Some(v)` when that was the last frame (program
-/// result). Shared by `Ret` and the tail-call arms that return directly
-/// (op/constructor callees in tail position).
-fn deliver_return(frames: &mut Vec<Frame>, v: Value) -> Option<Value> {
-    let done = frames.pop().expect("frame stack empty");
-    match frames.last_mut() {
-        None => Some(v),
-        Some(caller) => {
-            caller.regs[done.ret_dst as usize] = v;
-            None
-        }
-    }
+/// Build an owned argument vector from frame registers: a register on the
+/// instruction's kill list is *moved* out (its value dies here — this is
+/// what hands in-place kernels uniquely-owned buffers); everything else
+/// clones. A register read several times by one instruction moves only at
+/// its final occurrence.
+fn collect_owned(regs: &mut [Value], list: &[Reg], kills: &[Reg]) -> Vec<Value> {
+    (0..list.len())
+        .map(|j| {
+            let r = list[j];
+            if kills.contains(&r) && !list[j + 1..].contains(&r) {
+                std::mem::replace(&mut regs[r as usize], Value::unit())
+            } else {
+                regs[r as usize].clone()
+            }
+        })
+        .collect()
+}
+
+/// [`collect_owned`] with every register treated as dying — used by the
+/// tail-call and return paths, where the frame is abandoned immediately.
+fn drain_args(regs: &mut [Value], list: &[Reg]) -> Vec<Value> {
+    (0..list.len())
+        .map(|j| {
+            let r = list[j];
+            if list[j + 1..].contains(&r) {
+                regs[r as usize].clone()
+            } else {
+                std::mem::replace(&mut regs[r as usize], Value::unit())
+            }
+        })
+        .collect()
 }
 
 impl<'p> Vm<'p> {
     pub fn new(program: &'p Program) -> Vm<'p> {
-        Vm { program, launches: LaunchCounter::new(), max_depth: Cell::new(0) }
+        Vm {
+            program,
+            launches: LaunchCounter::new(),
+            max_depth: Cell::new(0),
+            pool: RefCell::new(Vec::new()),
+        }
     }
 
     pub fn with_counter(program: &'p Program, launches: LaunchCounter) -> Vm<'p> {
-        Vm { program, launches, max_depth: Cell::new(0) }
+        Vm {
+            program,
+            launches,
+            max_depth: Cell::new(0),
+            pool: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// A register vector for a new frame: pooled when available (cleared,
+    /// capacity retained), fresh otherwise.
+    fn take_frame(&self, nregs: usize) -> Vec<Value> {
+        let mut regs = self.pool.borrow_mut().pop().unwrap_or_default();
+        regs.resize(nregs, Value::unit());
+        regs
+    }
+
+    /// Return a retired frame's registers to the pool (values dropped now,
+    /// capacity kept for the next call).
+    fn recycle(&self, mut regs: Vec<Value>) {
+        regs.clear();
+        let mut pool = self.pool.borrow_mut();
+        if pool.len() < FRAME_POOL_CAP {
+            pool.push(regs);
+        }
+    }
+
+    /// Pop the current frame (recycling its registers) and deliver `v`
+    /// into the caller's `ret_dst` register; returns `Some(v)` when that
+    /// was the last frame (program result). Shared by `Ret` and the
+    /// tail-call arms that return directly (op/constructor callees in tail
+    /// position).
+    fn deliver_return(&self, frames: &mut Vec<Frame>, v: Value) -> Option<Value> {
+        let Frame { regs, ret_dst, .. } = frames.pop().expect("frame stack empty");
+        self.recycle(regs);
+        match frames.last_mut() {
+            None => Some(v),
+            Some(caller) => {
+                caller.regs[ret_dst as usize] = v;
+                None
+            }
+        }
     }
 
     /// Run the program entry (`@main`) with the given arguments.
@@ -91,7 +162,10 @@ impl<'p> Vm<'p> {
         if f.captures != 0 {
             return Err(format!("{}: cannot invoke capturing function directly", f.name));
         }
-        let mut regs = vec![Value::unit(); f.nregs as usize];
+        // Arguments are moved (not cloned) into the frame: a tensor the
+        // caller hands over exclusively stays uniquely owned and is
+        // eligible for in-place reuse at its last use.
+        let mut regs = self.take_frame(f.nregs as usize);
         for (i, a) in args.into_iter().enumerate() {
             regs[i] = a;
         }
@@ -110,12 +184,18 @@ impl<'p> Vm<'p> {
     /// frame in place, so recursive loops run at constant stack depth.
     fn dispatch(&self, mut frames: Vec<Frame>) -> Result<Value, String> {
         self.note_depth(frames.len());
+        static NO_KILLS: Vec<Reg> = Vec::new();
         loop {
             let frame = frames.last_mut().expect("frame stack empty");
-            let code = &self.program.funcs[frame.func as usize].code;
-            let Some(ins) = code.get(frame.pc) else {
+            let func = &self.program.funcs[frame.func as usize];
+            let code = &func.code;
+            let pc = frame.pc;
+            let Some(ins) = code.get(pc) else {
                 return Err("pc ran off the end of a function".to_string());
             };
+            // Registers whose values die at this instruction (the memory
+            // planner's move-instead-of-clone mask).
+            let dying: &Vec<Reg> = func.kills.get(pc).unwrap_or(&NO_KILLS);
             frame.pc += 1;
             match ins {
                 Instr::LoadConst { dst, idx } => {
@@ -125,21 +205,18 @@ impl<'p> Vm<'p> {
                     frame.regs[*dst as usize] = Value::Tensor(Tensor::zeros(shape, *dtype));
                 }
                 Instr::AllocTuple { dst, items } => {
-                    let vs: Vec<Value> =
-                        items.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    let vs = collect_owned(&mut frame.regs, items, dying);
                     frame.regs[*dst as usize] = Value::Tuple(vs);
                 }
                 Instr::AllocAdt { dst, ctor, fields } => {
-                    let vs: Vec<Value> =
-                        fields.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    let vs = collect_owned(&mut frame.regs, fields, dying);
                     frame.regs[*dst as usize] = Value::Adt {
                         ctor: self.program.ctor_names[*ctor as usize].clone(),
                         fields: vs,
                     };
                 }
                 Instr::AllocClosure { dst, func, captures } => {
-                    let captures: Vec<Value> =
-                        captures.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    let captures = collect_owned(&mut frame.regs, captures, dying);
                     frame.regs[*dst as usize] =
                         Value::VmClosure(Arc::new(VmClosure { func: *func, captures }));
                 }
@@ -241,12 +318,17 @@ impl<'p> Vm<'p> {
                     frame.pc = *target as usize;
                 }
                 Instr::Move { dst, src } => {
-                    frame.regs[*dst as usize] = frame.regs[*src as usize].clone();
+                    frame.regs[*dst as usize] = if dying.contains(src) && dst != src {
+                        std::mem::replace(&mut frame.regs[*src as usize], Value::unit())
+                    } else {
+                        frame.regs[*src as usize].clone()
+                    };
                 }
                 Instr::InvokePacked { dst, packed, args } => {
                     self.launches.bump();
+                    let argv = collect_owned(&mut frame.regs, args, dying);
                     let p = &self.program.packed[*packed as usize];
-                    let v = self.run_packed(p, &frame.regs, args)?;
+                    let v = self.run_packed(p, argv)?;
                     frame.regs[*dst as usize] = v;
                 }
                 Instr::InvokeFunc { dst, func, args } => {
@@ -263,9 +345,11 @@ impl<'p> Vm<'p> {
                             args.len()
                         ));
                     }
-                    let mut regs = vec![Value::unit(); callee.nregs as usize];
-                    for (i, r) in args.iter().enumerate() {
-                        regs[i] = frame.regs[*r as usize].clone();
+                    let mut regs = self.take_frame(callee.nregs as usize);
+                    for (i, v) in
+                        collect_owned(&mut frame.regs, args, dying).into_iter().enumerate()
+                    {
+                        regs[i] = v;
                     }
                     let next = Frame { func: *func, pc: 0, regs, ret_dst: *dst };
                     frames.push(next);
@@ -285,10 +369,10 @@ impl<'p> Vm<'p> {
                             args.len()
                         ));
                     }
-                    // Read the arguments out before clearing the frame
-                    // they live in, then reuse it for the callee.
-                    let argv: Vec<Value> =
-                        args.iter().map(|r| frame.regs[*r as usize].clone()).collect();
+                    // Move the arguments out before clearing the frame
+                    // they live in, then reuse it for the callee — the
+                    // frame dies here, so nothing is cloned.
+                    let argv = drain_args(&mut frame.regs, args);
                     frame.func = *func;
                     frame.pc = 0;
                     frame.regs.clear();
@@ -322,9 +406,12 @@ impl<'p> Vm<'p> {
                                     f.name
                                 ));
                             }
-                            let mut regs = vec![Value::unit(); f.nregs as usize];
-                            for (i, r) in args.iter().enumerate() {
-                                regs[i] = frame.regs[*r as usize].clone();
+                            let mut regs = self.take_frame(f.nregs as usize);
+                            for (i, v) in collect_owned(&mut frame.regs, args, dying)
+                                .into_iter()
+                                .enumerate()
+                            {
+                                regs[i] = v;
                             }
                             let base = f.params as usize;
                             for (i, v) in c.captures.iter().enumerate() {
@@ -350,19 +437,13 @@ impl<'p> Vm<'p> {
                                     ));
                                 }
                             }
-                            let argv: Vec<Value> = args
-                                .iter()
-                                .map(|r| frame.regs[*r as usize].clone())
-                                .collect();
+                            let mut argv = collect_owned(&mut frame.regs, args, dying);
                             self.launches.bump();
                             frame.regs[*dst as usize] =
-                                (def.eval)(&argv, &crate::ir::Attrs::new())?;
+                                op::inplace::eval_step(def, &mut argv, &crate::ir::Attrs::new())?;
                         }
                         Value::CtorRef(name) => {
-                            let fields: Vec<Value> = args
-                                .iter()
-                                .map(|r| frame.regs[*r as usize].clone())
-                                .collect();
+                            let fields = collect_owned(&mut frame.regs, args, dying);
                             frame.regs[*dst as usize] = Value::Adt { ctor: name, fields };
                         }
                         Value::Closure { .. } => {
@@ -396,10 +477,8 @@ impl<'p> Vm<'p> {
                                     f.name
                                 ));
                             }
-                            let argv: Vec<Value> = args
-                                .iter()
-                                .map(|r| frame.regs[*r as usize].clone())
-                                .collect();
+                            // The frame dies here: move the arguments out.
+                            let argv = drain_args(&mut frame.regs, args);
                             // Reuse the frame: the self-recursive loop
                             // encoding of Fig. 2 runs at constant depth.
                             frame.func = c.func;
@@ -431,23 +510,21 @@ impl<'p> Vm<'p> {
                                     ));
                                 }
                             }
-                            let argv: Vec<Value> = args
-                                .iter()
-                                .map(|r| frame.regs[*r as usize].clone())
-                                .collect();
+                            let mut argv = drain_args(&mut frame.regs, args);
                             self.launches.bump();
-                            let v = (def.eval)(&argv, &crate::ir::Attrs::new())?;
-                            if let Some(out) = deliver_return(&mut frames, v) {
+                            let v = op::inplace::eval_step(
+                                def,
+                                &mut argv,
+                                &crate::ir::Attrs::new(),
+                            )?;
+                            if let Some(out) = self.deliver_return(&mut frames, v) {
                                 return Ok(out);
                             }
                         }
                         Value::CtorRef(name) => {
-                            let fields: Vec<Value> = args
-                                .iter()
-                                .map(|r| frame.regs[*r as usize].clone())
-                                .collect();
+                            let fields = drain_args(&mut frame.regs, args);
                             let v = Value::Adt { ctor: name, fields };
-                            if let Some(out) = deliver_return(&mut frames, v) {
+                            if let Some(out) = self.deliver_return(&mut frames, v) {
                                 return Ok(out);
                             }
                         }
@@ -479,8 +556,12 @@ impl<'p> Vm<'p> {
                     frame.regs[*dst as usize] = Value::unit();
                 }
                 Instr::Ret { src } => {
-                    let v = frame.regs[*src as usize].clone();
-                    if let Some(out) = deliver_return(&mut frames, v) {
+                    // The frame is popped immediately: move, don't clone.
+                    let v = std::mem::replace(
+                        &mut frame.regs[*src as usize],
+                        Value::unit(),
+                    );
+                    if let Some(out) = self.deliver_return(&mut frames, v) {
                         return Ok(out);
                     }
                 }
@@ -490,26 +571,37 @@ impl<'p> Vm<'p> {
     }
 
     /// Execute a packed kernel (one launch): run its steps over scratch
-    /// temps, reading call arguments directly out of the caller's frame.
-    fn run_packed(
-        &self,
-        p: &PackedFunc,
-        regs: &[Value],
-        args: &[Reg],
-    ) -> Result<Value, String> {
+    /// temps, consuming the owned argument vector the caller collected.
+    /// Step inputs on their kill mask are *moved* (args at their last
+    /// reading step, temps at their last read), so intermediate values
+    /// inside a fused chain stay uniquely owned and the elementwise steps
+    /// run in place ([`crate::op::inplace`]) instead of allocating.
+    fn run_packed(&self, p: &PackedFunc, mut args: Vec<Value>) -> Result<Value, String> {
         let mut temps: Vec<Option<Value>> = vec![None; p.n_temps as usize];
+        let mut argv: Vec<Value> = Vec::with_capacity(4);
         for step in &p.steps {
-            let mut argv: Vec<Value> = Vec::with_capacity(step.inputs.len());
-            for input in &step.inputs {
-                argv.push(match input {
-                    PackedRef::Arg(i) => regs[args[*i as usize] as usize].clone(),
-                    PackedRef::Temp(t) => temps[*t as usize]
-                        .clone()
-                        .ok_or_else(|| format!("empty kernel temp {t}"))?,
+            argv.clear();
+            for (j, input) in step.inputs.iter().enumerate() {
+                let kill = step.kills.get(j).copied().unwrap_or(false);
+                let v = match input {
+                    PackedRef::Arg(i) => {
+                        let i = *i as usize;
+                        if kill {
+                            std::mem::replace(&mut args[i], Value::unit())
+                        } else {
+                            args[i].clone()
+                        }
+                    }
+                    PackedRef::Temp(t) => {
+                        let t = *t as usize;
+                        (if kill { temps[t].take() } else { temps[t].clone() })
+                            .ok_or_else(|| format!("empty kernel temp {t}"))?
+                    }
                     PackedRef::Const(c) => self.program.consts[*c as usize].clone(),
-                });
+                };
+                argv.push(v);
             }
-            let out = (step.def.eval)(&argv, &step.attrs)?;
+            let out = op::inplace::eval_step(step.def, &mut argv, &step.attrs)?;
             temps[step.out_temp as usize] = Some(out);
         }
         temps[p.out_temp as usize]
@@ -721,6 +813,47 @@ mod tests {
         assert_eq!(vm.launches.get(), 2);
         vm.launches.reset();
         assert_eq!(vm.launches.get(), 0);
+    }
+
+    #[test]
+    fn owned_elementwise_chain_runs_in_place_and_bit_matches_the_interpreter() {
+        // Argument moved into the frame + per-instruction kill masks: every
+        // elementwise step's input is a dying, uniquely-owned tensor, so
+        // the whole chain reuses one buffer (zero in-place misses on this
+        // thread) and still bit-matches the allocating interpreter.
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) {\n\
+               let %a = tanh(%x);\n\
+               let %b = negative(%a);\n\
+               sigmoid(%b)\n\
+             }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let fresh =
+            || Value::Tensor(Tensor::from_f32(vec![2, 2], vec![-1.0, 0.5, 2.0, -0.25]));
+        let expect = crate::eval::eval_main(&m, vec![fresh()]).unwrap();
+        let vm = Vm::new(&p);
+        let before = tensor::thread_alloc_snapshot();
+        let got = vm.run(vec![fresh()]).unwrap();
+        let after = tensor::thread_alloc_snapshot();
+        assert!(got.bits_eq(&expect));
+        assert_eq!(after.misses_since(&before), 0, "chain step fell back to allocating");
+        assert_eq!(after.hits_since(&before), 3);
+    }
+
+    #[test]
+    fn shared_arguments_are_never_mutated_by_the_planner() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(%x) }",
+        )
+        .unwrap();
+        let p = compile(&m).unwrap();
+        let x = Tensor::from_f32(vec![2, 2], vec![-1.0, 0.5, 2.0, -0.25]);
+        // The caller keeps a reference, so the kernel must allocate.
+        let got = Vm::new(&p).run(vec![Value::Tensor(x.clone())]).unwrap();
+        assert_eq!(got.tensor().as_f32(), &[0.0, 0.5, 2.0, 0.0]);
+        assert_eq!(x.as_f32(), &[-1.0, 0.5, 2.0, -0.25], "shared input mutated");
     }
 
     #[test]

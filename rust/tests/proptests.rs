@@ -574,6 +574,112 @@ fn all_opt_levels_and_executors_agree_through_the_cache() {
 }
 
 #[test]
+fn planned_execution_is_bit_identical_to_the_unplanned_paths_across_the_zoo() {
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+    use relay::zoo::{self, Model};
+
+    // The memory-planning differential: zoo MLP / DQN / RNN through the
+    // planned executors (graphrt with kill masks + workspace, VM with the
+    // kills table + frame pool), run REPEATEDLY against the allocating
+    // interpreter. The repeat matters: the second and third calls hit the
+    // cached artifact with warm per-thread workspaces, which is exactly
+    // when the in-place kernels fire — results must stay bit-identical to
+    // the never-in-place interpreter on every round.
+    let mlp = {
+        let m = ir::parse_module(
+            "def @main(%x: Tensor[(4, 16), float32]) {\n\
+               let %w1 = ones(shape=[32, 16]);\n\
+               let %h = tanh(nn.dense(%x, %w1));\n\
+               let %w2 = ones(shape=[8, 32]);\n\
+               nn.dense(%h, %w2)\n\
+             }",
+        )
+        .unwrap();
+        let mut rng = Rng::new(77);
+        (m, vec![Value::Tensor(rng.normal_tensor(&[4, 16], 1.0))])
+    };
+    let dqn = {
+        let (m, input) = zoo::vision::build(Model::NatureDqn, 7);
+        (m, vec![Value::Tensor(input)])
+    };
+    let rnn = zoo::nlp::build_nlp(Model::Rnn, 7);
+    let fixtures: Vec<(&str, Module, Vec<Value>)> =
+        vec![("mlp", mlp.0, mlp.1), ("dqn", dqn.0, dqn.1), ("rnn", rnn.0, rnn.1)];
+
+    let cache = ProgramCache::new();
+    for (name, m, args) in &fixtures {
+        for level in [OptLevel::O0, OptLevel::O3] {
+            let reference = run_with_cache(
+                m,
+                CompileOptions::at(Executor::Interp, level),
+                args.clone(),
+                &cache,
+            )
+            .unwrap_or_else(|e| panic!("{name} {level} interp: {e}"));
+            let auto = CompileOptions::at(Executor::Auto, level);
+            for round in 0..3 {
+                let out = run_with_cache(m, auto, args.clone(), &cache)
+                    .unwrap_or_else(|e| panic!("{name} {level} round {round}: {e}"));
+                assert!(
+                    out.value.bits_eq(&reference.value),
+                    "{name} {level} round {round}: planned {} diverged from interp",
+                    out.executor
+                );
+                assert_eq!(
+                    out.launches, reference.launches,
+                    "{name} {level} round {round}: launch metric drifted"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_elementwise_chain_second_run_performs_zero_inplace_misses() {
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+
+    // The planner regression bar: on the second (cached) run of an
+    // elementwise chain whose intermediates are uniquely owned, every
+    // eligible kernel reuses a buffer — the AllocStats miss delta on this
+    // thread is exactly zero, on both planned executors.
+    let m = ir::parse_module(
+        "def @main(%x: Tensor[(8, 8), float32]) {\n\
+           let %a = tanh(%x);\n\
+           let %b = sigmoid(%a);\n\
+           negative(%b)\n\
+         }",
+    )
+    .unwrap();
+    let fresh = || {
+        let mut rng = Rng::new(4242);
+        vec![Value::Tensor(rng.normal_tensor(&[8, 8], 1.0))]
+    };
+    for executor in [Executor::GraphRt, Executor::Vm] {
+        let cache = ProgramCache::new();
+        let opts = CompileOptions::at(executor, OptLevel::O0);
+        // Cold run compiles and warms the thread workspace.
+        let first = run_with_cache(&m, opts, fresh(), &cache)
+            .unwrap_or_else(|e| panic!("{executor} cold: {e}"));
+        let before = relay::tensor::thread_alloc_snapshot();
+        let second = run_with_cache(&m, opts, fresh(), &cache)
+            .unwrap_or_else(|e| panic!("{executor} warm: {e}"));
+        let after = relay::tensor::thread_alloc_snapshot();
+        assert!(first.value.bits_eq(&second.value), "{executor}: runs disagree");
+        assert_eq!(
+            after.misses_since(&before),
+            0,
+            "{executor}: cached elementwise chain allocated output buffers"
+        );
+        assert_eq!(
+            after.hits_since(&before),
+            3,
+            "{executor}: tanh/sigmoid/negative should all reuse in place"
+        );
+        assert_eq!(cache.misses(), 1, "{executor}: warm run recompiled");
+    }
+}
+
+#[test]
 fn o3_never_launches_more_kernels_than_o0_on_the_fused_mlp_fixture() {
     use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
 
