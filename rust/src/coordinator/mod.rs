@@ -31,12 +31,20 @@ pub fn cmd_compile(path: &str, level: OptLevel) -> Result<String> {
     Ok(crate::ir::print_module(&opt))
 }
 
-/// `relay run <file.relay> [-O n] [--executor interp|graph|vm|auto]`:
-/// evaluate @main() with random tensors for annotated params, compiled
-/// through the unified optimizing driver + program cache
+/// `relay run <file.relay> [-O n] [--executor interp|graph|vm|auto]
+/// [--profile]`: evaluate @main() with random tensors for annotated
+/// params, compiled through the unified optimizing driver + program cache
 /// ([`crate::eval::run_with`] with explicit [`CompileOptions`] — the
-/// pipeline runs inside `compile_for`, not as a separate CLI step).
-pub fn cmd_run(path: &str, level: OptLevel, executor: Executor) -> Result<String> {
+/// pipeline runs inside `compile_for`, not as a separate CLI step). With
+/// `--profile`, execution runs under a
+/// [`crate::telemetry::ProfileScope`] and the per-(op, shape) table is
+/// appended; its launch total equals the printed `launches=` value.
+pub fn cmd_run(
+    path: &str,
+    level: OptLevel,
+    executor: Executor,
+    profile: bool,
+) -> Result<String> {
     let src = std::fs::read_to_string(path)?;
     let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
     let main = m.def("main").ok_or_else(|| anyhow!("no @main"))?;
@@ -54,12 +62,29 @@ pub fn cmd_run(path: &str, level: OptLevel, executor: Executor) -> Result<String
             None => Err(anyhow!("param {p} needs a type annotation")),
         })
         .collect();
-    let out = run_with(&m, CompileOptions::at(executor, level), args?)
-        .map_err(|e| anyhow!("{e}"))?;
-    Ok(format!(
+    let opts = CompileOptions::at(executor, level);
+    let out = if profile {
+        crate::eval::run_with_profile(&m, opts, args?)
+    } else {
+        run_with(&m, opts, args?)
+    }
+    .map_err(|e| anyhow!("{e}"))?;
+    let mut text = format!(
         "{:?}  [executor={}, launches={}, opt={}]",
         out.value, out.executor, out.launches, level
-    ))
+    );
+    if let Some(p) = &out.profile {
+        text.push_str("\n\nper-op profile:\n");
+        text.push_str(&p.render());
+    }
+    Ok(text)
+}
+
+/// `relay metrics [--port 7474]`: fetch a running server's `/metrics`
+/// text (the telemetry registry rendered Prometheus-style) and print it.
+pub fn cmd_metrics(port: u16) -> Result<String> {
+    server::fetch_metrics(port)
+        .map_err(|e| anyhow!("fetch /metrics from 127.0.0.1:{port}: {e}"))
 }
 
 /// `relay dump-passes <file.relay> [-O n] [--fixpoint]`: run the
@@ -134,14 +159,15 @@ pub fn usage() -> &'static str {
      USAGE:\n\
        relay compile <file.relay> [-O 0|1|2|3]   parse, check, optimize, print\n\
        relay run <file.relay> [-O 0|1|2|3] [--executor interp|graph|vm|auto]\n\
-                                                 optimize and evaluate @main\n\
+                   [--profile]               optimize and evaluate @main\n\
        relay dump-passes <file.relay> [-O 0|1|2|3] [--fixpoint]\n\
                                                  per-pass wall time + node deltas\n\
        relay dump-bytecode <file.relay> [-O 0|1|2|3]\n\
                                                  disassemble the VM program\n\
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
        relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3] [--fixpoint]\n\
-                                                 batched inference server\n"
+                   [--trace-json PATH]       batched inference server\n\
+       relay metrics [--port 7474]           dump a running server's /metrics\n"
 }
 
 #[cfg(test)]
@@ -158,15 +184,40 @@ mod tests {
         .unwrap();
         let printed = cmd_compile(tmp.to_str().unwrap(), OptLevel::O2).unwrap();
         assert!(printed.contains("@main"));
-        let out = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, Executor::Auto).unwrap();
+        let out =
+            cmd_run(tmp.to_str().unwrap(), OptLevel::O2, Executor::Auto, false).unwrap();
         assert!(out.contains("Tensor"), "{out}");
         assert!(out.contains("executor=graphrt"), "{out}");
         assert!(out.contains("opt=-O2"), "{out}");
+        assert!(!out.contains("per-op profile"), "{out}");
         // Same program forced onto each tier agrees.
         for exec in [Executor::Interp, Executor::Vm] {
-            let o = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, exec).unwrap();
+            let o = cmd_run(tmp.to_str().unwrap(), OptLevel::O2, exec, false).unwrap();
             assert!(o.contains(&format!("executor={}", exec.name())), "{o}");
         }
+    }
+
+    #[test]
+    fn cmd_run_profile_prints_a_launch_matched_table() {
+        let tmp = std::env::temp_dir().join("relay_cli_profile_test.relay");
+        std::fs::write(
+            &tmp,
+            "def @main(%x: Tensor[(2, 2), float32]) { nn.relu(add(%x, 1f)) }",
+        )
+        .unwrap();
+        let out =
+            cmd_run(tmp.to_str().unwrap(), OptLevel::O2, Executor::Auto, true).unwrap();
+        assert!(out.contains("per-op profile"), "{out}");
+        // The header's launches= value and the table footer's launch total
+        // are the same number — the profiler counts at the same sites as
+        // the LaunchCounter.
+        let launches: usize = out
+            .split("launches=")
+            .nth(1)
+            .and_then(|s| s.split(',').next())
+            .and_then(|s| s.trim().parse().ok())
+            .expect("launches= in header");
+        assert!(out.contains(&format!("over {launches} launches")), "{out}");
     }
 
     #[test]

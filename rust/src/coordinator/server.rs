@@ -29,11 +29,20 @@
 //! [`ServerConfig::opt_level`] (default -O3, the `--opt` CLI flag): the
 //! fleet serves fused kernels, not the bare ANF the pre-refactor batcher
 //! executed. [`Stats::opt_level`] records what the fleet is running.
+//!
+//! Every request carries a [`RequestSpan`]: queue-wait, batch-form,
+//! compile (hit or miss), and execute durations, rolled into the
+//! process-wide [`crate::telemetry`] registry (one histogram family per
+//! phase, labeled by port so co-resident servers stay separable) and
+//! optionally streamed to a [`SpanSink`] ([`ServerConfig::trace`], the
+//! `--trace-json` chrome://tracing writer). The same TCP front door that
+//! takes CSV feature lines answers `GET /metrics` with the rendered
+//! registry, so `curl` and `relay metrics` need no second port.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -44,6 +53,8 @@ use crate::eval::{run_compiled, CompileOptions, Executor, ProgramCache, Value};
 use crate::ir::{self, Module, Type, Var};
 use crate::pass::OptLevel;
 use crate::runtime::Runtime;
+use crate::telemetry::registry::names;
+use crate::telemetry::{Counter, Gauge, Histogram, RequestSpan, SpanSink};
 use crate::tensor::{DType, Tensor};
 
 pub struct ServerConfig {
@@ -66,6 +77,11 @@ pub struct ServerConfig {
     /// Worker threads draining the request queue (compiled-relay backend).
     /// The PJRT backend is pinned to one worker: its handles are `!Send`.
     pub workers: usize,
+    /// Optional sink every completed [`RequestSpan`] is streamed to, on
+    /// top of the always-on registry histograms (`--trace-json` wires a
+    /// [`crate::telemetry::ChromeTraceWriter`] here; tests use
+    /// [`crate::telemetry::MemorySpans`]).
+    pub trace: Option<Arc<dyn SpanSink>>,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +95,7 @@ impl Default for ServerConfig {
             opt_level: OptLevel::O3,
             fixpoint: false,
             workers: 4,
+            trace: None,
         }
     }
 }
@@ -106,8 +123,83 @@ fn fallback_module(batch: usize) -> Module {
 }
 
 struct Request {
+    /// Process-unique id, carried into the request's span.
+    id: u64,
     features: Vec<f32>,
     respond: Sender<String>,
+    /// When the client handler put this request on the queue; every span
+    /// phase is measured from here.
+    enqueued: Instant,
+}
+
+fn next_request_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The fleet's handles into the process-wide telemetry registry, resolved
+/// once per [`serve`] call. Every series is labeled by port: two servers
+/// in one process (common in tests) each get exact per-port counts
+/// instead of one merged stream.
+struct ServeTelemetry {
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
+    /// Requests enqueued but not yet drained by a worker.
+    queue_depth: Arc<Gauge>,
+    request_h: Arc<Histogram>,
+    queue_wait_h: Arc<Histogram>,
+    batch_form_h: Arc<Histogram>,
+    compile_h: Arc<Histogram>,
+    execute_h: Arc<Histogram>,
+    sink: Option<Arc<dyn SpanSink>>,
+}
+
+impl ServeTelemetry {
+    fn register(port: u16, sink: Option<Arc<dyn SpanSink>>) -> ServeTelemetry {
+        let r = crate::telemetry::registry();
+        let p = port.to_string();
+        let labels: &[(&str, &str)] = &[("port", &p)];
+        ServeTelemetry {
+            requests: r.counter_with(names::REQUESTS_TOTAL, labels),
+            batches: r.counter_with(names::BATCHES_TOTAL, labels),
+            queue_depth: r.gauge_with(names::QUEUE_DEPTH, labels),
+            request_h: r.histogram_with(names::REQUEST_SECONDS, labels),
+            queue_wait_h: r.histogram_with(names::QUEUE_WAIT_SECONDS, labels),
+            batch_form_h: r.histogram_with(names::BATCH_FORM_SECONDS, labels),
+            compile_h: r.histogram_with(names::COMPILE_SECONDS, labels),
+            execute_h: r.histogram_with(names::EXECUTE_SECONDS, labels),
+            sink,
+        }
+    }
+
+    /// Record one finished request: histograms always, sink when present.
+    /// Compile time lands in the compile histogram only when this batch
+    /// actually paid it — cache hits would flood the p50 with zeros.
+    fn record(&self, span: &RequestSpan) {
+        self.request_h.observe_duration(span.total);
+        self.queue_wait_h.observe_duration(span.queue_wait);
+        self.batch_form_h.observe_duration(span.batch_form);
+        self.execute_h.observe_duration(span.execute);
+        if !span.compile_hit {
+            self.compile_h.observe_duration(span.compile);
+        }
+        if let Some(sink) = &self.sink {
+            sink.record(span);
+        }
+    }
+}
+
+/// What one backend execution reports back to the batcher: predictions
+/// plus where the time went, so the worker can split its wall clock into
+/// compile and execute span phases.
+pub struct BatchRun {
+    pub preds: Vec<i64>,
+    /// Compile time this batch paid (zero when its program was already
+    /// resolved).
+    pub compile: Duration,
+    /// True when the program came from a memo or cache rather than being
+    /// compiled by this call.
+    pub compile_hit: bool,
 }
 
 /// Zero-pad feature rows into a `(batch, feat)` input tensor. Rows longer
@@ -127,7 +219,9 @@ pub struct Stats {
     pub batches: AtomicUsize,
     /// Backend compiles performed so far, fleet-wide (compiled-relay
     /// backend: at most one per batch bucket over the server's life,
-    /// no matter how many workers race on a cold bucket).
+    /// no matter how many workers race on a cold bucket). Mirrored into
+    /// the registry's `relay_compiles_total`; this per-instance copy keeps
+    /// tests exact when several servers share the process.
     pub compiles: AtomicUsize,
     /// Optimization level the backend compiles at (fixed per server).
     pub opt_level: OptLevel,
@@ -155,8 +249,9 @@ impl Stats {
     }
 
     /// In-place kernel reuses since the server started (the memory
-    /// planner's output-buffer allocations *avoided*). Process-wide
-    /// counters, so co-resident non-serving executions are included.
+    /// planner's output-buffer allocations *avoided*). Deltas over the
+    /// registry's process-wide `relay_inplace_hits_total` counter, so
+    /// co-resident non-serving executions are included.
     pub fn inplace_hits(&self) -> usize {
         crate::tensor::alloc_stats().snapshot().hits_since(&self.alloc_base)
     }
@@ -243,25 +338,45 @@ impl RelayBackend {
     /// coalesces them into one compile; the memo keeps every later batch
     /// off the cache lock entirely.
     fn compiled_bucket(&self, bi: usize) -> Result<crate::eval::Compiled> {
+        self.compiled_bucket_timed(bi).map(|(compiled, _, _)| compiled)
+    }
+
+    /// [`compiled_bucket`](Self::compiled_bucket) plus how long resolution
+    /// took and whether it was a hit (memo or cache — a racing worker that
+    /// blocked on someone else's compile reports the wait as a hit, since
+    /// it paid wall time but no compile happened on its behalf twice).
+    fn compiled_bucket_timed(
+        &self,
+        bi: usize,
+    ) -> Result<(crate::eval::Compiled, Duration, bool)> {
         let bucket = &self.buckets[bi];
         if let Some(compiled) = bucket.resolved.get() {
-            return Ok(compiled.clone());
+            return Ok((compiled.clone(), Duration::ZERO, true));
         }
+        let t0 = Instant::now();
         let (compiled, compiled_now) = self
             .cache
             .get_or_compile_traced(&bucket.module, self.opts)
             .map_err(|e| anyhow!("{e}"))?;
+        let took = t0.elapsed();
         if compiled_now {
             self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::registry().counter(names::COMPILES_TOTAL).inc();
         }
         let _ = bucket.resolved.set(compiled.clone());
-        Ok(compiled)
+        Ok((compiled, took, !compiled_now))
     }
 
     /// Execute one batch of feature rows; returns one prediction per row.
     /// The batch must fit the largest bucket (`serve`'s workers cap their
     /// batches at `max_batch`, so this only trips for external callers).
     pub fn run_batch(&self, rows: &[&[f32]]) -> Result<Vec<i64>> {
+        self.run_batch_timed(rows).map(|b| b.preds)
+    }
+
+    /// [`run_batch`](Self::run_batch) with the timing breakdown the
+    /// batcher needs for request spans.
+    pub fn run_batch_timed(&self, rows: &[&[f32]]) -> Result<BatchRun> {
         let cap = self.buckets.last().map_or(0, |b| b.size);
         if rows.len() > cap {
             return Err(anyhow!(
@@ -274,72 +389,120 @@ impl RelayBackend {
             .iter()
             .position(|b| b.size >= rows.len())
             .unwrap_or(self.buckets.len() - 1);
-        let compiled = self.compiled_bucket(bi)?;
+        let (compiled, compile, compile_hit) = self.compiled_bucket_timed(bi)?;
         let bucket = &self.buckets[bi];
         let x = pad_rows(rows, bucket.size, FALLBACK_FEAT);
         let out = run_compiled(&compiled, vec![Value::Tensor(x)])
             .map_err(|e| anyhow!("{e}"))?;
         let preds = crate::tensor::argmax(out.value.tensor(), 1);
         let preds = preds.as_i64();
-        Ok(preds[..rows.len().min(preds.len())].to_vec())
+        Ok(BatchRun {
+            preds: preds[..rows.len().min(preds.len())].to_vec(),
+            compile,
+            compile_hit,
+        })
     }
 }
 
 /// One batcher worker: drain a batch from the shared queue (the lock is
 /// held only while collecting; execution overlaps across workers), run the
-/// backend, fan replies out.
+/// backend, fan replies out, then record each request's span.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker: usize,
     rx: &Mutex<Receiver<Request>>,
     stop: &AtomicBool,
     stats: &Stats,
+    tele: &ServeTelemetry,
     max_batch: usize,
     timeout: Duration,
-    mut exec: impl FnMut(&[&[f32]]) -> Result<Vec<i64>>,
+    mut exec: impl FnMut(&[&[f32]]) -> Result<BatchRun>,
 ) {
     while !stop.load(Ordering::Relaxed) {
-        let batch = {
+        // Each request is paired with the instant this worker drained it:
+        // queue-wait ends and batch-form begins there.
+        let (batch, batch_ready) = {
             let queue = crate::eval::value::lock_unpoisoned(rx);
             let first = match queue.recv_timeout(Duration::from_millis(50)) {
                 Ok(r) => r,
                 Err(_) => continue,
             };
-            let mut batch = vec![first];
+            tele.queue_depth.sub(1);
+            let mut batch = vec![(first, Instant::now())];
             let deadline = Instant::now() + timeout;
             while batch.len() < max_batch {
-                let now = Instant::now();
-                if now >= deadline {
+                // `saturating_duration_since`, not `deadline - now`: with a
+                // zero-slack `batch_timeout` (or a deadline that passes
+                // between the loop check and the subtraction) a bare
+                // subtraction panics.
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
                     break;
                 }
-                match queue.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
+                match queue.recv_timeout(remaining) {
+                    Ok(r) => {
+                        tele.queue_depth.sub(1);
+                        batch.push((r, Instant::now()));
+                    }
                     Err(_) => break,
                 }
             }
-            batch
+            let ready = Instant::now();
+            (batch, ready)
         };
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.requests.fetch_add(batch.len(), Ordering::Relaxed);
         stats.per_worker[worker].fetch_add(batch.len(), Ordering::Relaxed);
-        let rows: Vec<&[f32]> = batch.iter().map(|r| r.features.as_slice()).collect();
-        let reply: Vec<String> = match exec(&rows) {
-            Ok(preds) => (0..batch.len())
-                .map(|i| match preds.get(i) {
-                    Some(p) => format!("{p}"),
-                    None => "error: missing prediction".to_string(),
-                })
-                .collect(),
-            Err(e) => batch.iter().map(|_| format!("error: {e}")).collect(),
+        tele.batches.inc();
+        tele.requests.add(batch.len() as u64);
+        let rows: Vec<&[f32]> =
+            batch.iter().map(|(r, _)| r.features.as_slice()).collect();
+        let exec_start = Instant::now();
+        let run = exec(&rows);
+        let exec_total = exec_start.elapsed();
+        let (reply, compile, compile_hit): (Vec<String>, Duration, bool) = match &run {
+            Ok(b) => (
+                (0..batch.len())
+                    .map(|i| match b.preds.get(i) {
+                        Some(p) => format!("{p}"),
+                        None => "error: missing prediction".to_string(),
+                    })
+                    .collect(),
+                b.compile,
+                b.compile_hit,
+            ),
+            Err(e) => (
+                batch.iter().map(|_| format!("error: {e}")).collect(),
+                Duration::ZERO,
+                true,
+            ),
         };
-        for (r, out) in batch.into_iter().zip(reply) {
-            let _ = r.respond.send(out);
+        let execute = exec_total.saturating_sub(compile);
+        let batch_size = batch.len();
+        for ((req, drained), out) in batch.into_iter().zip(reply) {
+            // Reply first — telemetry must never sit between a prediction
+            // and the client waiting on it.
+            let _ = req.respond.send(out);
+            let span = RequestSpan {
+                id: req.id,
+                worker,
+                batch_size,
+                enqueued_us: crate::telemetry::span::micros_since_epoch(req.enqueued),
+                queue_wait: drained.saturating_duration_since(req.enqueued),
+                batch_form: batch_ready.saturating_duration_since(drained),
+                compile,
+                compile_hit,
+                execute,
+                total: req.enqueued.elapsed(),
+            };
+            tele.record(&span);
         }
     }
 }
 
 /// PJRT executor over the AOT artifact (single-threaded: the xla crate
 /// wraps raw pointers in `Rc`, so the handles must stay on one thread).
-type ExecFn = Box<dyn FnMut(&[&[f32]]) -> Result<Vec<i64>>>;
+type ExecFn = Box<dyn FnMut(&[&[f32]]) -> Result<BatchRun>>;
 
 fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
     let rt = Runtime::cpu()?;
@@ -380,7 +543,13 @@ fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
         let mut inputs = weights.clone();
         inputs.push(x);
         let outs = rt.execute(&exe, &inputs)?;
-        Ok(crate::tensor::argmax(&outs[0], 1).as_i64().to_vec())
+        Ok(BatchRun {
+            preds: crate::tensor::argmax(&outs[0], 1).as_i64().to_vec(),
+            // The artifact was compiled ahead of time; serving never pays
+            // a compile, so every batch reports a hit with zero cost.
+            compile: Duration::ZERO,
+            compile_hit: true,
+        })
     });
     Ok((batch_cap, f))
 }
@@ -392,6 +561,7 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
     let mut stats = Stats::new(workers, cfg.opt_level);
     stats.fixpoint = cfg.fixpoint;
     let stats = Arc::new(stats);
+    let tele = Arc::new(ServeTelemetry::register(cfg.port, cfg.trace.clone()));
 
     let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
     let rx = Arc::new(Mutex::new(rx));
@@ -401,6 +571,7 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
         // setup happens inside the thread, readiness reported back.
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let stats_w = stats.clone();
+        let tele_w = tele.clone();
         let stop_w = stop.clone();
         let rx_w = rx.clone();
         let artifact_dir = cfg.artifact_dir.clone();
@@ -418,7 +589,9 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
                 }
             };
             let cfg_batch = max_batch.min(batch_cap).max(1);
-            worker_loop(0, &rx_w, &stop_w, &stats_w, cfg_batch, timeout, exec_fn);
+            worker_loop(
+                0, &rx_w, &stop_w, &stats_w, &tele_w, cfg_batch, timeout, exec_fn,
+            );
         });
         ready_rx
             .recv_timeout(Duration::from_secs(60))
@@ -440,12 +613,20 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
         for worker in 0..workers {
             let backend = backend.clone();
             let stats_w = stats.clone();
+            let tele_w = tele.clone();
             let stop_w = stop.clone();
             let rx_w = rx.clone();
             std::thread::spawn(move || {
-                worker_loop(worker, &rx_w, &stop_w, &stats_w, cfg_batch, timeout, |rows| {
-                    backend.run_batch(rows)
-                });
+                worker_loop(
+                    worker,
+                    &rx_w,
+                    &stop_w,
+                    &stats_w,
+                    &tele_w,
+                    cfg_batch,
+                    timeout,
+                    |rows| backend.run_batch_timed(rows),
+                );
             });
         }
     }
@@ -462,7 +643,8 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
             match conn {
                 Ok(stream) => {
                     let tx = tx.clone();
-                    std::thread::spawn(move || handle_client(stream, tx));
+                    let tele = tele.clone();
+                    std::thread::spawn(move || handle_client(stream, tx, tele));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(5));
@@ -474,27 +656,49 @@ pub fn serve(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<Arc<Stats>> {
     Ok(stats_out)
 }
 
-fn handle_client(stream: TcpStream, tx: Sender<Request>) {
+fn handle_client(stream: TcpStream, tx: Sender<Request>, tele: Arc<ServeTelemetry>) {
     let peer = stream.try_clone();
     let reader = BufReader::new(stream);
     let mut writer = match peer {
         Ok(s) => s,
         Err(_) => return,
     };
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    let mut lines = reader.lines();
+    loop {
+        let line = match lines.next() {
+            Some(Ok(l)) => l,
+            Some(Err(_)) | None => break,
         };
-        if line.trim().is_empty() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
             continue;
         }
-        let features: Vec<f32> = line
+        if let Some(req_line) = trimmed.strip_prefix("GET ") {
+            // The metrics endpoint shares the line-protocol front door:
+            // drain the HTTP headers, answer once, close.
+            for header in lines.by_ref() {
+                match header {
+                    Ok(h) if !h.trim().is_empty() => continue,
+                    _ => break,
+                }
+            }
+            serve_http(&mut writer, req_line);
+            return;
+        }
+        let features: Vec<f32> = trimmed
             .split(',')
             .filter_map(|t| t.trim().parse().ok())
             .collect();
         let (rtx, rrx) = channel();
-        if tx.send(Request { features, respond: rtx }).is_err() {
+        tele.queue_depth.add(1);
+        let req = Request {
+            id: next_request_id(),
+            features,
+            respond: rtx,
+            enqueued: Instant::now(),
+        };
+        if tx.send(req).is_err() {
+            tele.queue_depth.sub(1);
             break;
         }
         match rrx.recv_timeout(Duration::from_secs(5)) {
@@ -506,6 +710,42 @@ fn handle_client(stream: TcpStream, tx: Sender<Request>) {
             Err(_) => break,
         }
     }
+}
+
+/// Minimal HTTP/1.0 responder for the front door's `GET` path:
+/// `/metrics` renders the telemetry registry, anything else 404s.
+fn serve_http(writer: &mut TcpStream, request_line: &str) {
+    let path = request_line.split_whitespace().next().unwrap_or("");
+    let (status, body) = if path == "/metrics" {
+        ("200 OK".to_string(), crate::telemetry::registry().render())
+    } else {
+        ("404 Not Found".to_string(), format!("no route {path}\n"))
+    };
+    let _ = write!(
+        writer,
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+}
+
+/// Fetch `/metrics` from a server on localhost over its front-door port
+/// (`relay metrics`, the CI smoke test, and unit tests).
+pub fn fetch_metrics(port: u16) -> Result<String> {
+    let mut stream = TcpStream::connect(("127.0.0.1", port))?;
+    write!(stream, "GET /metrics HTTP/1.0\r\n\r\n")?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow!("malformed HTTP response: {resp:?}"))?;
+    if !head.starts_with("HTTP/1.0 200") {
+        return Err(anyhow!(
+            "unexpected status: {}",
+            head.lines().next().unwrap_or("")
+        ));
+    }
+    Ok(body.to_string())
 }
 
 /// Client helper (used by examples/serve.rs and tests).
@@ -735,5 +975,154 @@ mod tests {
             assert_eq!(solo.len(), 1);
             assert_eq!(batched[i], solo[0], "row {i} diverged under padding");
         }
+    }
+
+    /// Bind-probe helper shared by the socket tests: returns false when
+    /// this exact address is unusable (no loopback, or the port is held
+    /// by another process) — the only condition that may skip a test.
+    fn port_free(port: u16) -> bool {
+        std::net::TcpListener::bind(("127.0.0.1", port)).is_ok()
+    }
+
+    /// Regression for the batcher's deadline arithmetic: with zero slack
+    /// the old `deadline - now` subtraction panicked (`Instant` subtraction
+    /// underflows) the moment the first request arrived. The fixed loop
+    /// saturates and serves batches of one.
+    #[test]
+    fn zero_slack_batch_timeout_serves_without_panicking() {
+        let port = 7983;
+        if !port_free(port) {
+            return;
+        }
+        let cfg = ServerConfig {
+            port,
+            artifact_dir: "definitely-missing-artifacts".into(),
+            executor: Executor::Vm,
+            max_batch: 4,
+            batch_timeout: Duration::ZERO,
+            ..Default::default()
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = serve(cfg, stop.clone()).expect("serve failed to start");
+        for i in 0..3i64 {
+            let features: Vec<f32> = (0..FALLBACK_FEAT)
+                .map(|j| ((i as usize * 3 + j) % 5) as f32 - 2.0)
+                .collect();
+            let pred = classify(port, &features).expect("classify under zero slack");
+            assert!((0..FALLBACK_CLASSES as i64).contains(&pred), "pred {pred}");
+        }
+        assert!(stats.requests.load(Ordering::Relaxed) >= 3);
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    /// The observability acceptance bar: N requests through the fleet
+    /// leave exactly N observations in this port's request histogram, and
+    /// every request's span reaches the configured sink with queue-wait
+    /// and execute phases filled in.
+    #[test]
+    fn fleet_records_request_histogram_and_spans() {
+        let port = 7987;
+        if !port_free(port) {
+            return;
+        }
+        let sink = Arc::new(crate::telemetry::MemorySpans::new());
+        let cfg = ServerConfig {
+            port,
+            artifact_dir: "definitely-missing-artifacts".into(),
+            executor: Executor::Vm,
+            max_batch: 4,
+            trace: Some(sink.clone()),
+            ..Default::default()
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = serve(cfg, stop.clone()).expect("serve failed to start");
+        let n = 6usize;
+        for i in 0..n {
+            let features: Vec<f32> = (0..FALLBACK_FEAT)
+                .map(|j| ((i * 7 + j) % 5) as f32 - 2.0)
+                .collect();
+            classify(port, &features).expect("classify");
+        }
+        // Spans are recorded after the reply is sent, so the last one can
+        // trail the last classify() by a beat.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while sink.spans().len() < n && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let spans = sink.spans();
+        assert_eq!(spans.len(), n, "one span per request");
+        for s in &spans {
+            assert!(s.execute > Duration::ZERO, "span {} has no execute time", s.id);
+            assert!(s.total >= s.execute, "total below execute in span {}", s.id);
+            assert!(s.total >= s.queue_wait, "total below wait in span {}", s.id);
+            assert!(s.worker < stats.per_worker.len(), "bad worker {}", s.worker);
+            // Sequential clients: every batch held exactly one request,
+            // and the precompiled batch-1 bucket means no compile cost.
+            assert_eq!(s.batch_size, 1);
+            assert!(s.compile_hit, "span {} paid an unexpected compile", s.id);
+        }
+        // The registry side of the same story, exact because the series
+        // are labeled by this test's port.
+        let r = crate::telemetry::registry();
+        let p = port.to_string();
+        let labels: &[(&str, &str)] = &[("port", &p)];
+        assert_eq!(r.histogram_with(names::REQUEST_SECONDS, labels).count(), n as u64);
+        assert_eq!(
+            r.histogram_with(names::QUEUE_WAIT_SECONDS, labels).count(),
+            n as u64
+        );
+        assert_eq!(r.histogram_with(names::EXECUTE_SECONDS, labels).count(), n as u64);
+        assert_eq!(r.counter_with(names::REQUESTS_TOTAL, labels).get(), n as u64);
+        assert_eq!(r.gauge_with(names::QUEUE_DEPTH, labels).get(), 0);
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    /// `GET /metrics` on the front-door port returns Prometheus-style text
+    /// where every line passes the shared well-formedness check; other
+    /// paths 404.
+    #[test]
+    fn metrics_endpoint_serves_well_formed_prometheus_text() {
+        let port = 7989;
+        if !port_free(port) {
+            return;
+        }
+        let cfg = ServerConfig {
+            port,
+            artifact_dir: "definitely-missing-artifacts".into(),
+            executor: Executor::Vm,
+            max_batch: 4,
+            ..Default::default()
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        serve(cfg, stop.clone()).expect("serve failed to start");
+        for i in 0..2i64 {
+            let features: Vec<f32> = (0..FALLBACK_FEAT)
+                .map(|j| ((i as usize * 5 + j) % 5) as f32 - 2.0)
+                .collect();
+            classify(port, &features).expect("classify");
+        }
+        let body = fetch_metrics(port).expect("fetch /metrics");
+        for line in body.lines() {
+            assert!(
+                crate::telemetry::registry::line_is_well_formed(line),
+                "malformed metrics line: {line:?}"
+            );
+        }
+        assert!(body.contains("relay_request_seconds_bucket"), "{body}");
+        assert!(
+            body.contains(&format!("relay_requests_total{{port=\"{port}\"}}")),
+            "{body}"
+        );
+        // A wrong path is a 404, not a hang or a batch of garbage.
+        let err = {
+            let mut stream =
+                TcpStream::connect(("127.0.0.1", port)).expect("connect");
+            write!(stream, "GET /nope HTTP/1.0\r\n\r\n").expect("send");
+            let mut resp = String::new();
+            stream.read_to_string(&mut resp).expect("read");
+            resp
+        };
+        assert!(err.starts_with("HTTP/1.0 404"), "{err}");
+        stop.store(true, Ordering::Relaxed);
     }
 }

@@ -470,6 +470,7 @@ pub fn run_compiled(compiled: &Compiled, args: Vec<Value>) -> Result<Execution, 
                 executor: "graphrt",
                 launches: launches.get(),
                 pass_trace: None,
+                profile: None,
             })
         }
         Compiled::Vm(p) => {
@@ -480,6 +481,7 @@ pub fn run_compiled(compiled: &Compiled, args: Vec<Value>) -> Result<Execution, 
                 executor: "vm",
                 launches: vm.launches.get(),
                 pass_trace: None,
+                profile: None,
             })
         }
         Compiled::Interp(module) => interp_main(module, args),
@@ -503,6 +505,7 @@ pub(crate) fn interp_main(module: &Module, args: Vec<Value>) -> Result<Execution
         executor: "interp",
         launches: interp.op_calls(),
         pass_trace: None,
+        profile: None,
     })
 }
 

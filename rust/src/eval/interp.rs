@@ -177,6 +177,7 @@ impl<'m> Interp<'m> {
                 if primitive {
                     // Fused kernel: one launch regardless of inner op count.
                     self.launches.bump();
+                    crate::telemetry::profiler::note_launch();
                     self.in_primitive.set(self.in_primitive.get() + 1);
                 }
                 let mut env2 = env.clone();
@@ -216,8 +217,15 @@ impl<'m> Interp<'m> {
         }
         if self.in_primitive.get() == 0 {
             self.launches.bump();
+            crate::telemetry::profiler::note_launch();
         }
-        (def.eval)(args, attrs)
+        let timer = crate::telemetry::profiler::op_timer();
+        let out = (def.eval)(args, attrs);
+        if let Some(t) = timer {
+            let shape = crate::eval::value::args_shape_label(args);
+            crate::telemetry::profiler::record_op(t, def.name, shape, 0, 0);
+        }
+        out
     }
 }
 

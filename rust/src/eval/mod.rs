@@ -234,6 +234,9 @@ pub struct Execution {
     /// that one run, not of this call). `None` when the caller ran a
     /// pre-compiled program directly ([`run_compiled`]).
     pub pass_trace: Option<Arc<PassTrace>>,
+    /// Per-op profile of *this* execution — populated only by
+    /// [`run_with_profile`], `None` everywhere else (profiling is opt-in).
+    pub profile: Option<crate::telemetry::Profile>,
 }
 
 /// Run `@main(args...)` on the chosen executor / optimization level,
@@ -279,6 +282,37 @@ pub fn run_with(
 /// the interpreter.
 pub fn run_auto(module: &Module, args: Vec<Value>) -> Result<Execution, String> {
     run_with(module, Executor::Auto, args)
+}
+
+/// [`run_with`] under a [`crate::telemetry::ProfileScope`]: the returned
+/// [`Execution::profile`] holds the per-(op, shape) table and a launch
+/// count equal to [`Execution::launches`].
+///
+/// Compilation happens *before* the scope is installed, so constant
+/// folding's operator evaluations (which run op kernels at compile time)
+/// do not pollute the table — the profile covers exactly this call's
+/// execution on the calling thread.
+pub fn run_with_profile(
+    module: &Module,
+    opts: impl Into<CompileOptions>,
+    args: Vec<Value>,
+) -> Result<Execution, String> {
+    let opts: CompileOptions = opts.into();
+    if opts.is_uncached_interp() {
+        let scope = crate::telemetry::ProfileScope::begin();
+        let mut out = cache::interp_main(module, args)?;
+        out.profile = Some(scope.finish());
+        out.pass_trace = Some(Arc::new(PassTrace::empty(OptLevel::O0)));
+        return Ok(out);
+    }
+    with_default_cache(|cache| {
+        let (compiled, trace, _) = cache.get_or_compile_full(module, opts)?;
+        let scope = crate::telemetry::ProfileScope::begin();
+        let mut out = run_compiled(&compiled, args)?;
+        out.profile = Some(scope.finish());
+        out.pass_trace = Some(trace);
+        Ok(out)
+    })
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@ use std::fmt;
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::ir::{Function, Var, E};
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 
 /// Environment mapping vars to values (persistent via Arc chain).
 pub type Env = Arc<EnvNode>;
@@ -99,9 +99,45 @@ pub struct VmClosure {
     pub captures: Vec<Value>,
 }
 
+fn short_dtype(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "f32",
+        DType::F64 => "f64",
+        DType::I64 => "i64",
+        DType::I32 => "i32",
+        DType::I16 => "i16",
+        DType::I8 => "i8",
+        DType::U8 => "u8",
+        DType::Bool => "bool",
+    }
+}
+
+/// Shape label for an argument list, e.g. `(f32[2,4],f32[4])` — the
+/// per-(op, shape) aggregation key of [`crate::telemetry::profiler`].
+pub fn args_shape_label(args: &[Value]) -> String {
+    let inner: Vec<String> = args.iter().map(|v| v.shape_label()).collect();
+    format!("({})", inner.join(","))
+}
+
+/// Shape label for one tensor, e.g. `f32[2,4]` (scalars render `f32[]`).
+pub fn tensor_shape_label(t: &Tensor) -> String {
+    let dims: Vec<String> = t.shape().iter().map(|d| d.to_string()).collect();
+    format!("{}[{}]", short_dtype(t.dtype()), dims.join(","))
+}
+
 impl Value {
     pub fn unit() -> Value {
         Value::Tuple(vec![])
+    }
+
+    /// Compact shape label: `f32[2,4]` for tensors, parenthesized element
+    /// labels for tuples, `-` for closures/refs/ADTs.
+    pub fn shape_label(&self) -> String {
+        match self {
+            Value::Tensor(t) => tensor_shape_label(t),
+            Value::Tuple(items) => args_shape_label(items),
+            _ => "-".to_string(),
+        }
     }
 
     /// A fresh mutable reference cell holding `v`.

@@ -32,6 +32,7 @@ use crate::eval::value::Value;
 use crate::eval::LaunchCounter;
 use crate::ir::{Attrs, Expr, Function, E};
 use crate::op::{self, OpDef};
+use crate::telemetry;
 use crate::tensor::Tensor;
 
 /// One step inside a fused node: run `def` over resolved inputs.
@@ -511,6 +512,7 @@ impl GraphRt {
             let out = match &node.kind {
                 NodeKind::Op { def, attrs, inputs } => {
                     launches.bump();
+                    telemetry::profiler::note_launch();
                     args.clear();
                     for (j, r) in inputs.iter().enumerate() {
                         args.push(read_owned(slots, &self.constants, r, node.kills[j])?);
@@ -519,6 +521,7 @@ impl GraphRt {
                 }
                 NodeKind::Fused { steps, n_temps, inputs } => {
                     launches.bump();
+                    telemetry::profiler::note_launch();
                     group.clear();
                     for (j, r) in inputs.iter().enumerate() {
                         group.push(read_owned(slots, &self.constants, r, node.kills[j])?);
@@ -599,6 +602,7 @@ impl GraphRt {
             let out = match &node.kind {
                 NodeKind::Op { def, attrs, inputs } => {
                     launches.bump();
+                    telemetry::profiler::note_launch();
                     let args: Result<Vec<Value>, String> = inputs
                         .iter()
                         .map(|r| self.read(&slots, &empty_t, &empty_p, r))
@@ -610,6 +614,7 @@ impl GraphRt {
                 }
                 NodeKind::Fused { steps, n_temps, inputs } => {
                     launches.bump();
+                    telemetry::profiler::note_launch();
                     let group_inputs: Result<Vec<Value>, String> = inputs
                         .iter()
                         .map(|r| self.read(&slots, &empty_t, &empty_p, r))

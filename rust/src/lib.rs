@@ -34,8 +34,15 @@
 //!   execution, and model importers (PJRT/XLA behind the `xla` feature).
 //! * [`zoo`] — the evaluation model suite (vision + NLP).
 //! * [`coordinator`] — CLI + batched inference server (thin L3 driver).
+//! * [`telemetry`] — cross-cutting observability (std-only, below every
+//!   other layer): the process-wide metrics registry (counters, gauges,
+//!   p50/p95/p99 latency histograms, Prometheus-style `/metrics` text),
+//!   the opt-in per-op profiler behind `relay run --profile`, and the
+//!   serving fleet's request spans (`relay serve --trace-json`). See
+//!   rust/src/telemetry/README.md.
 
 pub mod bench;
+pub mod telemetry;
 pub mod tensor;
 
 pub mod ir;

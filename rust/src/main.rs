@@ -52,7 +52,8 @@ fn run(args: &[String]) -> anyhow::Result<String> {
         }
         Some("run") => {
             let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
-            coordinator::cmd_run(path, opt_of(args), executor_of(args)?)
+            let profile = args.iter().any(|a| a == "--profile");
+            coordinator::cmd_run(path, opt_of(args), executor_of(args)?, profile)
         }
         Some("dump-bytecode") => {
             let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
@@ -83,12 +84,22 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 })?,
             };
             let fixpoint = args.iter().any(|a| a == "--fixpoint");
+            let trace: Option<Arc<dyn relay::telemetry::SpanSink>> =
+                match flag_value(args, "--trace-json") {
+                    None => None,
+                    Some(path) => Some(Arc::new(
+                        relay::telemetry::ChromeTraceWriter::create(
+                            std::path::Path::new(path),
+                        )?,
+                    )),
+                };
             let cfg = server::ServerConfig {
                 port,
                 artifact_dir: dir.into(),
                 workers,
                 opt_level,
                 fixpoint,
+                trace,
                 ..Default::default()
             };
             let stop = Arc::new(AtomicBool::new(false));
@@ -117,6 +128,12 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                     stats.inplace_misses()
                 );
             }
+        }
+        Some("metrics") => {
+            let port: u16 = flag_value(args, "--port")
+                .and_then(|p| p.parse().ok())
+                .unwrap_or(7474);
+            coordinator::cmd_metrics(port)
         }
         _ => Ok(coordinator::usage().to_string()),
     }

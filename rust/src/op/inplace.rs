@@ -78,14 +78,36 @@ pub fn eval_step(
     args: &mut [Value],
     attrs: &Attrs,
 ) -> Result<Value, String> {
+    let timer = crate::telemetry::profiler::op_timer();
+    // Aggregation key from the *input* shapes, captured before an in-place
+    // hit steals an argument slot.
+    let shape = timer
+        .as_ref()
+        .map(|_| crate::eval::value::args_shape_label(args));
+    let (result, hits, misses) = run_step(def, args, attrs);
+    if let Some(t) = timer {
+        let shape = shape.unwrap_or_default();
+        crate::telemetry::profiler::record_op(t, def.name, shape, hits, misses);
+    }
+    result
+}
+
+/// The unprofiled execution path; returns the in-place outcome alongside
+/// the value so the profiler hook above can attribute it per row.
+fn run_step(
+    def: &'static OpDef,
+    args: &mut [Value],
+    attrs: &Attrs,
+) -> (Result<Value, String>, u64, u64) {
     if let Some(plan) = plan_of(def.name) {
         if let Some(v) = try_inplace(&plan, args, attrs) {
             tensor::note_inplace_hit();
-            return Ok(v);
+            return (Ok(v), 1, 0);
         }
         tensor::note_inplace_miss();
+        return ((def.eval)(args, attrs), 0, 1);
     }
-    (def.eval)(args, attrs)
+    ((def.eval)(args, attrs), 0, 0)
 }
 
 /// Steal the tensor out of `args[i]`, leaving a unit value behind.

@@ -1,0 +1,32 @@
+//! Unified telemetry: one observability layer for the whole stack.
+//!
+//! Three pieces, each usable alone, all feeding one another:
+//!
+//! - [`registry`]: process-wide named counters, gauges, and fixed-bucket
+//!   latency histograms (p50/p95/p99 by bucket interpolation), lock-free on
+//!   the update path, rendered as Prometheus-style text. Served by
+//!   `relay serve` at `GET /metrics` and dumped by `relay metrics`.
+//! - [`profiler`]: opt-in per-op profiling. A [`ProfileScope`] on the
+//!   executing thread aggregates per-(op, shape) call counts, wall time,
+//!   and in-place hit/miss from the executors' kernel dispatch; surfaced
+//!   by `relay run --profile` and on [`crate::eval::Execution::profile`].
+//! - [`span`]: per-request latency breakdown in the serving fleet
+//!   (queue-wait → batch-form → compile → execute), rolled up into the
+//!   registry histograms and optionally streamed as chrome://tracing JSON
+//!   by `relay serve --trace-json PATH`.
+//!
+//! This module depends on nothing else in the crate (std only), so every
+//! layer — `tensor` up through `coordinator` — can report into it. It
+//! replaces what used to be four disconnected instrument islands
+//! (`LaunchCounter` totals, `tensor::AllocStats`, `pass::PassTrace`
+//! timings, and the serving `Stats` println reporting): the first three
+//! still exist as APIs but their process-wide aggregates now live here.
+//! See `README.md` in this directory for the model and naming conventions.
+
+pub mod profiler;
+pub mod registry;
+pub mod span;
+
+pub use profiler::{Profile, ProfileRow, ProfileScope};
+pub use registry::{registry, Counter, Gauge, Histogram, Registry};
+pub use span::{ChromeTraceWriter, MemorySpans, RequestSpan, SpanSink};

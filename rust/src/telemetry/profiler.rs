@@ -1,0 +1,258 @@
+//! Opt-in per-op profiler: aggregates per-(op, shape) call count, wall
+//! time, and in-place hit/miss on the executing thread.
+//!
+//! Profiling is off by default and costs one thread-local check per kernel
+//! when inactive. A [`ProfileScope`] installs a collector on the current
+//! thread; while it is live, the executors report through two hooks:
+//!
+//! - [`note_launch`] — called next to every `LaunchCounter::bump()` site
+//!   (graph-runtime node dispatch, VM `InvokePacked`/`IfCmp`/op-ref calls,
+//!   interpreter op application), so `Profile::launches` equals the run's
+//!   [`crate::eval::LaunchCounter`] value exactly.
+//! - [`op_timer`] / [`record_op`] — bracket each individual operator kernel
+//!   (`op::inplace::eval_step` and the interpreter's direct op path). Fused
+//!   kernels report one launch but one row update per inner step, so the
+//!   table stays per-op even when ops execute fused.
+//!
+//! The collector is thread-local: a scope profiles the kernels the *calling
+//! thread* runs, unpolluted by parallel test threads or fleet workers.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::marker::PhantomData;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default)]
+struct RowAgg {
+    calls: u64,
+    wall: Duration,
+    hits: u64,
+    misses: u64,
+}
+
+#[derive(Debug)]
+struct Collector {
+    rows: BTreeMap<(&'static str, String), RowAgg>,
+    launches: u64,
+    started: Instant,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Collector>> = const { RefCell::new(None) };
+}
+
+/// Guard that enables profiling on the current thread for its lifetime.
+/// Consume it with [`ProfileScope::finish`] to get the aggregated
+/// [`Profile`]; dropping it without finishing discards the data.
+#[derive(Debug)]
+pub struct ProfileScope {
+    // Keep the scope on the thread whose collector it installed.
+    _not_send: PhantomData<*const ()>,
+}
+
+impl ProfileScope {
+    /// Install a fresh collector on this thread. Panics if one is already
+    /// active — scopes do not nest.
+    pub fn begin() -> ProfileScope {
+        ACTIVE.with(|a| {
+            let mut slot = a.borrow_mut();
+            assert!(slot.is_none(), "ProfileScope does not nest");
+            *slot = Some(Collector {
+                rows: BTreeMap::new(),
+                launches: 0,
+                started: Instant::now(),
+            });
+        });
+        ProfileScope { _not_send: PhantomData }
+    }
+
+    /// Uninstall the collector and return what it gathered.
+    pub fn finish(self) -> Profile {
+        let collector = ACTIVE.with(|a| a.borrow_mut().take());
+        let collector = collector.expect("ProfileScope::finish with no active collector");
+        let wall = collector.started.elapsed();
+        let mut rows: Vec<ProfileRow> = collector
+            .rows
+            .into_iter()
+            .map(|((op, shape), agg)| ProfileRow {
+                op,
+                shape,
+                calls: agg.calls,
+                wall: agg.wall,
+                inplace_hits: agg.hits,
+                inplace_misses: agg.misses,
+            })
+            .collect();
+        rows.sort_by(|a, b| b.wall.cmp(&a.wall).then(a.op.cmp(b.op)));
+        Profile { rows, launches: collector.launches, wall }
+    }
+}
+
+impl Drop for ProfileScope {
+    fn drop(&mut self) {
+        ACTIVE.with(|a| a.borrow_mut().take());
+    }
+}
+
+/// True while a [`ProfileScope`] is live on this thread.
+pub fn active() -> bool {
+    ACTIVE.with(|a| a.borrow().is_some())
+}
+
+/// Count one kernel launch (placed beside every `LaunchCounter::bump()`).
+#[inline]
+pub fn note_launch() {
+    ACTIVE.with(|a| {
+        if let Some(c) = a.borrow_mut().as_mut() {
+            c.launches += 1;
+        }
+    });
+}
+
+/// Start timing one operator kernel. Returns `None` (and costs only the
+/// thread-local check) when profiling is inactive.
+#[inline]
+pub fn op_timer() -> Option<OpTimer> {
+    if active() {
+        Some(OpTimer { start: Instant::now() })
+    } else {
+        None
+    }
+}
+
+#[derive(Debug)]
+pub struct OpTimer {
+    start: Instant,
+}
+
+/// Record one finished kernel under `(op, shape)`. `hits`/`misses` are the
+/// in-place planner outcome for this call (0/0 for ineligible ops).
+pub fn record_op(timer: OpTimer, op: &'static str, shape: String, hits: u64, misses: u64) {
+    let wall = timer.start.elapsed();
+    ACTIVE.with(|a| {
+        if let Some(c) = a.borrow_mut().as_mut() {
+            let row = c.rows.entry((op, shape)).or_default();
+            row.calls += 1;
+            row.wall += wall;
+            row.hits += hits;
+            row.misses += misses;
+        }
+    });
+}
+
+/// One aggregated table row: every call of `op` on argument shapes `shape`.
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub op: &'static str,
+    pub shape: String,
+    pub calls: u64,
+    pub wall: Duration,
+    pub inplace_hits: u64,
+    pub inplace_misses: u64,
+}
+
+/// Result of a profiled execution, attached to
+/// [`crate::eval::Execution::profile`] and printed by `relay run --profile`.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    /// Rows sorted by wall time, heaviest first.
+    pub rows: Vec<ProfileRow>,
+    /// Kernel launches observed — equals the run's `LaunchCounter` value.
+    pub launches: u64,
+    /// Wall-clock span of the whole scope (launches plus glue).
+    pub wall: Duration,
+}
+
+impl Profile {
+    /// Total op calls across all rows (≥ `launches` when kernels fuse).
+    pub fn total_calls(&self) -> u64 {
+        self.rows.iter().map(|r| r.calls).sum()
+    }
+
+    fn total_kernel_wall(&self) -> Duration {
+        self.rows.iter().map(|r| r.wall).sum()
+    }
+
+    /// Render the per-op table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<28} {:<34} {:>7} {:>12} {:>5} {:>7} {:>7}",
+            "op", "shape", "calls", "wall(us)", "%", "ip-hit", "ip-miss"
+        );
+        let kernel_wall = self.total_kernel_wall();
+        for row in &self.rows {
+            let us = row.wall.as_secs_f64() * 1e6;
+            let pct = if kernel_wall.is_zero() {
+                0.0
+            } else {
+                100.0 * row.wall.as_secs_f64() / kernel_wall.as_secs_f64()
+            };
+            let _ = writeln!(
+                out,
+                "{:<28} {:<34} {:>7} {:>12.1} {:>5.1} {:>7} {:>7}",
+                row.op, row.shape, row.calls, us, pct, row.inplace_hits, row.inplace_misses
+            );
+        }
+        let _ = writeln!(
+            out,
+            "total: {} op calls over {} launches; kernel wall {:.1} us of {:.1} us scope",
+            self.total_calls(),
+            self.launches,
+            kernel_wall.as_secs_f64() * 1e6,
+            self.wall.as_secs_f64() * 1e6,
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_hooks_are_no_ops() {
+        assert!(!active());
+        assert!(op_timer().is_none());
+        note_launch(); // must not panic or record anywhere
+    }
+
+    #[test]
+    fn scope_aggregates_rows_and_launches() {
+        let scope = ProfileScope::begin();
+        assert!(active());
+        note_launch();
+        note_launch();
+        let t = op_timer().expect("active scope");
+        record_op(t, "add", "(f32[4],f32[4])".into(), 1, 0);
+        let t = op_timer().unwrap();
+        record_op(t, "add", "(f32[4],f32[4])".into(), 0, 1);
+        let t = op_timer().unwrap();
+        record_op(t, "nn.dense", "(f32[2,4],f32[8,4])".into(), 0, 0);
+        let profile = scope.finish();
+        assert!(!active());
+        assert_eq!(profile.launches, 2);
+        assert_eq!(profile.total_calls(), 3);
+        let add = profile.rows.iter().find(|r| r.op == "add").unwrap();
+        assert_eq!((add.calls, add.inplace_hits, add.inplace_misses), (2, 1, 1));
+        let table = profile.render();
+        assert!(table.contains("nn.dense"));
+        assert!(table.contains("3 op calls over 2 launches"));
+    }
+
+    #[test]
+    fn dropping_a_scope_uninstalls_the_collector() {
+        {
+            let _scope = ProfileScope::begin();
+            assert!(active());
+        }
+        assert!(!active());
+        // A fresh scope starts from zero.
+        let scope = ProfileScope::begin();
+        let profile = scope.finish();
+        assert_eq!(profile.launches, 0);
+        assert!(profile.rows.is_empty());
+    }
+}

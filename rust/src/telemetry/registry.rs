@@ -1,0 +1,504 @@
+//! Process-wide metrics registry: named counters, gauges, and fixed-bucket
+//! latency histograms, rendered as Prometheus-style text.
+//!
+//! Handles are `Arc`s over lock-free atomics — the registry lock is taken
+//! only at registration and render time, never on the update path. A series
+//! is identified by `(name, labels)`; registering the same series twice
+//! returns the same handle, so independent subsystems can share a counter
+//! by name alone ("one counter source of truth").
+//!
+//! Naming conventions (see `telemetry/README.md`): metric names are
+//! `relay_<subsystem>_<what>`, counters end in `_total`, duration
+//! histograms end in `_seconds` and observe `f64` seconds.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Canonical metric names used across the crate. Keeping them in one place
+/// means the serving fleet, the CLI, and the tests can never drift apart on
+/// spelling.
+pub mod names {
+    pub const REQUESTS_TOTAL: &str = "relay_requests_total";
+    pub const BATCHES_TOTAL: &str = "relay_batches_total";
+    pub const COMPILES_TOTAL: &str = "relay_compiles_total";
+    pub const INPLACE_HITS_TOTAL: &str = "relay_inplace_hits_total";
+    pub const INPLACE_MISSES_TOTAL: &str = "relay_inplace_misses_total";
+    pub const QUEUE_DEPTH: &str = "relay_queue_depth";
+    pub const REQUEST_SECONDS: &str = "relay_request_seconds";
+    pub const QUEUE_WAIT_SECONDS: &str = "relay_queue_wait_seconds";
+    pub const BATCH_FORM_SECONDS: &str = "relay_batch_form_seconds";
+    pub const COMPILE_SECONDS: &str = "relay_compile_seconds";
+    pub const EXECUTE_SECONDS: &str = "relay_execute_seconds";
+}
+
+/// Default bucket upper bounds (seconds) for latency histograms: 250 µs to
+/// 5 s, roughly ×2–×2.5 per step — the range the serving fleet and the
+/// executors actually land in.
+pub const LATENCY_BUCKETS: [f64; 14] = [
+    0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0,
+];
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (e.g. queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram. `bounds` are the finite upper bounds (strictly
+/// increasing); one extra overflow bucket catches everything above the last
+/// bound. Observations and renders are lock-free; quantiles are estimated
+/// by linear interpolation inside the bucket where the cumulative count
+/// crosses the requested rank, so the estimate is always within one bucket
+/// width of the exact sample quantile (asserted by the property test below).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>, // bounds.len() + 1 (last = overflow)
+    sum_bits: AtomicU64,    // f64 bits, CAS-accumulated
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Record a duration in seconds.
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Estimated `q`-quantile (`0.0 ..= 1.0`) via in-bucket linear
+    /// interpolation. Returns 0.0 for an empty histogram; observations in
+    /// the overflow bucket clamp to the last finite bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if (cum + n) as f64 >= rank {
+                let last = *self.bounds.last().expect("non-empty bounds");
+                if i == self.bounds.len() {
+                    return last; // overflow bucket: clamp
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = ((rank - cum as f64) / n as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+            cum += n;
+        }
+        *self.bounds.last().expect("non-empty bounds")
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// A named collection of metric series. One process-wide instance lives
+/// behind [`registry()`]; fresh instances are only for tests.
+#[derive(Debug, Default)]
+pub struct Registry {
+    // Key = (name, rendered-labels); BTreeMap keeps render output stable.
+    series: Mutex<BTreeMap<(String, String), Metric>>,
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut sorted: Vec<_> = labels.to_vec();
+    sorted.sort_unstable_by_key(|&(k, _)| k);
+    let mut out = String::new();
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let escaped: String = v
+            .chars()
+            .flat_map(|c| match c {
+                '\\' => vec!['\\', '\\'],
+                '"' => vec!['\\', '"'],
+                '\n' => vec!['\\', 'n'],
+                c => vec![c],
+            })
+            .collect();
+        let _ = write!(out, "{k}=\"{escaped}\"");
+    }
+    out
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let key = (name.to_string(), render_labels(labels));
+        let mut series = self.series.lock().unwrap_or_else(|e| e.into_inner());
+        series.entry(key).or_insert_with(make).clone()
+    }
+
+    /// Get or register a counter with no labels.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_with(name, &[])
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_insert(name, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            m => panic!("metric `{name}` already registered as a {}", m.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_insert(name, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            m => panic!("metric `{name}` already registered as a {}", m.kind()),
+        }
+    }
+
+    /// Get or register a histogram with the default latency buckets.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_with(name, &[])
+    }
+
+    pub fn histogram_with(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        self.histogram_buckets(name, labels, &LATENCY_BUCKETS)
+    }
+
+    pub fn histogram_buckets(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        let make = || Metric::Histogram(Arc::new(Histogram::new(bounds)));
+        match self.get_or_insert(name, labels, make) {
+            Metric::Histogram(h) => h,
+            m => panic!("metric `{name}` already registered as a {}", m.kind()),
+        }
+    }
+
+    /// Render every series as Prometheus-style text: `# TYPE` comments plus
+    /// `name{labels} value` sample lines. Histograms expand into cumulative
+    /// `_bucket{le=...}` series plus `_sum` and `_count`.
+    pub fn render(&self) -> String {
+        let series = self.series.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = String::new();
+        let mut last_name = "";
+        for ((name, labels), metric) in series.iter() {
+            if name != last_name {
+                let _ = writeln!(out, "# TYPE {name} {}", metric.kind());
+            }
+            last_name = name;
+            let sep = if labels.is_empty() { "" } else { "," };
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name}{} {}", braced(labels), c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name}{} {}", braced(labels), g.get());
+                }
+                Metric::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (bound, count) in h.bounds.iter().zip(&h.counts) {
+                        cum += count.load(Ordering::Relaxed);
+                        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{bound}\"}} {cum}");
+                    }
+                    let total = cum + h.counts[h.bounds.len()].load(Ordering::Relaxed);
+                    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {total}");
+                    let _ = writeln!(out, "{name}_sum{} {}", braced(labels), h.sum());
+                    let _ = writeln!(out, "{name}_count{} {}", braced(labels), total);
+                }
+            }
+        }
+        out
+    }
+}
+
+fn braced(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry every subsystem reports into.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// True if `line` is a well-formed render line: a `#` comment, blank, or
+/// `name{labels} value` where `value` parses as a float. Shared by the unit
+/// tests, the serving integration test, and (in awk form) the CI smoke step.
+pub fn line_is_well_formed(line: &str) -> bool {
+    if line.is_empty() || line.starts_with('#') {
+        return true;
+    }
+    let name_end = line
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == ':'))
+        .unwrap_or(line.len());
+    if name_end == 0 {
+        return false;
+    }
+    let rest = &line[name_end..];
+    let rest = if let Some(stripped) = rest.strip_prefix('{') {
+        match stripped.find('}') {
+            Some(close) => &stripped[close + 1..],
+            None => return false,
+        }
+    } else {
+        rest
+    };
+    match rest.strip_prefix(' ') {
+        Some(value) => value.parse::<f64>().is_ok(),
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_and_share_handles() {
+        let r = Registry::new();
+        let c = r.counter("relay_test_total");
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        // Same (name, labels) → same underlying atomic.
+        r.counter("relay_test_total").inc();
+        assert_eq!(c.get(), 4);
+        // Different labels → distinct series.
+        let c2 = r.counter_with("relay_test_total", &[("port", "7000")]);
+        c2.inc();
+        assert_eq!(c.get(), 4);
+        let g = r.gauge("relay_test_depth");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+
+        let text = r.render();
+        assert!(text.contains("# TYPE relay_test_total counter"));
+        assert!(text.contains("relay_test_total 4"));
+        assert!(text.contains("relay_test_total{port=\"7000\"} 1"));
+        assert!(text.contains("# TYPE relay_test_depth gauge"));
+        assert!(text.contains("relay_test_depth 3"));
+        for line in text.lines() {
+            assert!(line_is_well_formed(line), "bad line: {line:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_inclusive_upper() {
+        let r = Registry::new();
+        let h = r.histogram_buckets("relay_test_seconds", &[], &[1.0, 2.0, 4.0]);
+        // Exactly on a bound lands in that bucket (le = ≤).
+        h.observe(1.0);
+        h.observe(2.0);
+        h.observe(4.0);
+        // Just above the last bound lands in the overflow bucket.
+        h.observe(4.5);
+        // Below the first bound lands in the first bucket.
+        h.observe(0.1);
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 11.6).abs() < 1e-9);
+        let text = r.render();
+        assert!(text.contains("relay_test_seconds_bucket{le=\"1\"} 2"));
+        assert!(text.contains("relay_test_seconds_bucket{le=\"2\"} 3"));
+        assert!(text.contains("relay_test_seconds_bucket{le=\"4\"} 4"));
+        assert!(text.contains("relay_test_seconds_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("relay_test_seconds_count 5"));
+        for line in text.lines() {
+            assert!(line_is_well_formed(line), "bad line: {line:?}");
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_the_crossing_bucket() {
+        let r = Registry::new();
+        let h = r.histogram_buckets("relay_q_seconds", &[], &[1.0, 2.0, 3.0]);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        // 10 observations in (1, 2]: the median interpolates inside that
+        // bucket; rank 5 of 10 → halfway through → 1.5.
+        for i in 0..10 {
+            h.observe(1.05 + 0.09 * i as f64);
+        }
+        assert!((h.p50() - 1.5).abs() < 1e-9, "p50 = {}", h.p50());
+        // All mass in one bucket → every quantile stays inside it.
+        assert!(h.p99() > 1.0 && h.p99() <= 2.0);
+        // Overflow observations clamp to the last finite bound.
+        let r2 = Registry::new();
+        let h2 = r2.histogram_buckets("relay_q2_seconds", &[], &[1.0]);
+        h2.observe(100.0);
+        assert_eq!(h2.p50(), 1.0);
+    }
+
+    /// Hand-rolled property test (proptest is not vendored; randomness is
+    /// the deterministic xoshiro [`crate::tensor::Rng`]): for random samples
+    /// and random quantiles, the histogram estimate is within one bucket
+    /// width of the exact sample quantile.
+    #[test]
+    fn quantile_estimates_within_one_bucket_width_of_exact() {
+        let mut rng = crate::tensor::Rng::new(0x7e1e_9e37);
+        let bounds: Vec<f64> = LATENCY_BUCKETS.to_vec();
+        for case in 0..50 {
+            let r = Registry::new();
+            let h = r.histogram_buckets("relay_prop_seconds", &[], &bounds);
+            let n = 1 + (rng.next_u64() % 400) as usize;
+            let mut samples: Vec<f64> = (0..n)
+                // Uniform in [0, last bound] so nothing lands in the
+                // unbounded overflow bucket (where no error bound holds).
+                .map(|_| rng.uniform() as f64 * bounds[bounds.len() - 1])
+                .collect();
+            for &s in &samples {
+                h.observe(s);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &q in &[0.5, 0.9, 0.95, 0.99] {
+                let exact = samples[((q * n as f64).ceil() as usize).clamp(1, n) - 1];
+                let est = h.quantile(q);
+                // Width of the bucket containing the exact quantile.
+                let idx = bounds.iter().position(|&b| exact <= b).unwrap();
+                let lo = if idx == 0 { 0.0 } else { bounds[idx - 1] };
+                let width = bounds[idx] - lo;
+                assert!(
+                    (est - exact).abs() <= width + 1e-12,
+                    "case {case}: q={q} exact={exact} est={est} width={width} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn well_formedness_checker_rejects_garbage() {
+        assert!(line_is_well_formed("# TYPE x counter"));
+        assert!(line_is_well_formed("relay_x_total 3"));
+        assert!(line_is_well_formed("relay_x_bucket{le=\"+Inf\"} 5"));
+        assert!(line_is_well_formed("relay_x_sum 0.0000125"));
+        assert!(!line_is_well_formed("no value here"));
+        assert!(!line_is_well_formed("relay_x_total"));
+        assert!(!line_is_well_formed("relay_x{unclosed 3"));
+        assert!(!line_is_well_formed(" leading_space 1"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Request spans for the serving fleet: one [`RequestSpan`] per served
+//! request, recording where its latency went (queue-wait, batch formation,
+//! compile, execute). Completed spans go to a [`SpanSink`]; the fleet also
+//! rolls them up into the registry histograms.
+//!
+//! [`ChromeTraceWriter`] streams spans as chrome://tracing "X" (complete)
+//! events — open the file with `chrome://tracing` or Perfetto. Timestamps
+//! are microseconds since the process [`epoch`], one track (`tid`) per
+//! fleet worker.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Process-wide time origin for span timestamps. First call pins it.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds from the process epoch to `t` (0 if `t` predates it).
+pub fn micros_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Where one served request's latency went, phase by phase.
+#[derive(Clone, Debug)]
+pub struct RequestSpan {
+    /// Process-unique request id.
+    pub id: u64,
+    /// Fleet worker that executed the batch holding this request.
+    pub worker: usize,
+    /// Size of that batch.
+    pub batch_size: usize,
+    /// Enqueue time, microseconds since the process [`epoch`].
+    pub enqueued_us: u64,
+    /// Enqueue → drained off the shared queue by a worker.
+    pub queue_wait: Duration,
+    /// Drained → batch closed (waiting for stragglers / the batch timer).
+    pub batch_form: Duration,
+    /// Compile time charged to this batch (zero on a program-cache hit).
+    pub compile: Duration,
+    /// Whether the batch's program came out of the cache.
+    pub compile_hit: bool,
+    /// Running the compiled batch (pad, execute, unpack).
+    pub execute: Duration,
+    /// Enqueue → response handed back.
+    pub total: Duration,
+}
+
+/// Destination for completed spans. Implementations must tolerate calls
+/// from multiple fleet workers at once.
+pub trait SpanSink: Send + Sync {
+    fn record(&self, span: &RequestSpan);
+}
+
+/// In-memory sink for tests and embedders.
+#[derive(Debug, Default)]
+pub struct MemorySpans(Mutex<Vec<RequestSpan>>);
+
+impl MemorySpans {
+    pub fn new() -> Self {
+        MemorySpans::default()
+    }
+
+    /// Copy of everything recorded so far.
+    pub fn spans(&self) -> Vec<RequestSpan> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+impl SpanSink for MemorySpans {
+    fn record(&self, span: &RequestSpan) {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).push(span.clone());
+    }
+}
+
+/// Streams spans to `path` as a chrome://tracing JSON event array. Events
+/// are flushed per span so the file is useful even if the serve process is
+/// killed; the closing `]` is written on drop (trace viewers accept a
+/// missing terminator too).
+pub struct ChromeTraceWriter {
+    out: Mutex<TraceFile>,
+}
+
+struct TraceFile {
+    w: BufWriter<File>,
+    first: bool,
+}
+
+impl ChromeTraceWriter {
+    pub fn create(path: &Path) -> io::Result<Self> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(b"[\n")?;
+        w.flush()?;
+        Ok(ChromeTraceWriter { out: Mutex::new(TraceFile { w, first: true }) })
+    }
+}
+
+fn push_event(
+    buf: &mut String,
+    first: &mut bool,
+    name: &str,
+    ts: u64,
+    dur: Duration,
+    span: &RequestSpan,
+) {
+    if !*first {
+        buf.push_str(",\n");
+    }
+    *first = false;
+    let _ = write!(
+        buf,
+        "{{\"name\":\"{name}\",\"cat\":\"request\",\"ph\":\"X\",\"ts\":{ts},\
+         \"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"req\":{},\"batch\":{},\
+         \"compile_hit\":{}}}}}",
+        dur.as_micros(),
+        span.worker,
+        span.id,
+        span.batch_size,
+        span.compile_hit,
+    );
+}
+
+impl SpanSink for ChromeTraceWriter {
+    fn record(&self, span: &RequestSpan) {
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
+        let mut buf = String::new();
+        let mut first = out.first;
+        let mut ts = span.enqueued_us;
+        push_event(&mut buf, &mut first, "request", ts, span.total, span);
+        push_event(&mut buf, &mut first, "queue", ts, span.queue_wait, span);
+        ts += span.queue_wait.as_micros() as u64;
+        push_event(&mut buf, &mut first, "batch", ts, span.batch_form, span);
+        ts += span.batch_form.as_micros() as u64;
+        if !span.compile.is_zero() {
+            push_event(&mut buf, &mut first, "compile", ts, span.compile, span);
+            ts += span.compile.as_micros() as u64;
+        }
+        push_event(&mut buf, &mut first, "execute", ts, span.execute, span);
+        out.first = first;
+        // Serving must not die on a full disk; drop the event instead.
+        let _ = out.w.write_all(buf.as_bytes());
+        let _ = out.w.flush();
+    }
+}
+
+impl Drop for ChromeTraceWriter {
+    fn drop(&mut self) {
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = out.w.write_all(b"\n]\n");
+        let _ = out.w.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64) -> RequestSpan {
+        RequestSpan {
+            id,
+            worker: 2,
+            batch_size: 3,
+            enqueued_us: 1000,
+            queue_wait: Duration::from_micros(50),
+            batch_form: Duration::from_micros(10),
+            compile: Duration::from_micros(400),
+            compile_hit: false,
+            execute: Duration::from_micros(90),
+            total: Duration::from_micros(560),
+        }
+    }
+
+    #[test]
+    fn memory_sink_collects_spans() {
+        let sink = MemorySpans::new();
+        sink.record(&span(1));
+        sink.record(&span(2));
+        let got = sink.spans();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].id, 2);
+        assert_eq!(got[0].queue_wait, Duration::from_micros(50));
+    }
+
+    #[test]
+    fn chrome_trace_writer_emits_a_json_event_array() {
+        let name = format!("relay_trace_test_{}.json", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        {
+            let w = ChromeTraceWriter::create(&path).expect("create trace file");
+            w.record(&span(7));
+            let mut hit = span(8);
+            hit.compile = Duration::ZERO;
+            hit.compile_hit = true;
+            w.record(&hit);
+        }
+        let text = std::fs::read_to_string(&path).expect("read trace file");
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with("[\n"));
+        assert!(text.trim_end().ends_with(']'));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"name\":\"queue\""));
+        assert!(text.contains("\"name\":\"execute\""));
+        assert!(text.contains("\"req\":7"));
+        // Cache-hit span: no compile event for request 8.
+        assert_eq!(text.matches("\"name\":\"compile\"").count(), 1);
+        // Events are comma-separated: n events → n-1 separators (9 events:
+        // 5 for the miss span, 4 for the hit span).
+        assert_eq!(text.matches("},\n{").count(), 8);
+    }
+}

@@ -33,8 +33,10 @@ pub use shape::{broadcast_shapes, Shape};
 
 use std::cell::Cell;
 use std::fmt;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
+
+use crate::telemetry::registry::names;
+use crate::telemetry::Counter;
 
 // ---------------------------------------------------------------------------
 // Allocation accounting for the memory planner.
@@ -48,25 +50,36 @@ use std::sync::{Arc, OnceLock};
 /// counted — their output shape never matches an input, so "miss" would be
 /// meaningless there.
 ///
-/// Counters are bumped on the executing thread into BOTH a global atomic
-/// pair (what the serving fleet's `Stats` reports) and a thread-local pair
-/// ([`thread_alloc_snapshot`]) so single-threaded tests and benches can
-/// measure their own executions without racing parallel test threads.
-#[derive(Debug, Default)]
+/// Counters are bumped on the executing thread into BOTH a global pair and
+/// a thread-local pair ([`thread_alloc_snapshot`]) so single-threaded tests
+/// and benches can measure their own executions without racing parallel
+/// test threads. The global pair IS the telemetry registry's
+/// `relay_inplace_hits_total` / `relay_inplace_misses_total` counters —
+/// one source of truth shared with the serving fleet's `Stats` and the
+/// `/metrics` endpoint.
+#[derive(Debug)]
 pub struct AllocStats {
-    hits: AtomicUsize,
-    misses: AtomicUsize,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
 }
 
 impl AllocStats {
+    fn from_registry() -> AllocStats {
+        let r = crate::telemetry::registry();
+        AllocStats {
+            hits: r.counter(names::INPLACE_HITS_TOTAL),
+            misses: r.counter(names::INPLACE_MISSES_TOTAL),
+        }
+    }
+
     /// In-place reuses so far (no output buffer allocated).
     pub fn hits(&self) -> usize {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.get() as usize
     }
 
     /// Eligible kernels that had to allocate their output.
     pub fn misses(&self) -> usize {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.get() as usize
     }
 
     pub fn snapshot(&self) -> AllocSnapshot {
@@ -93,9 +106,9 @@ impl AllocSnapshot {
 
 static ALLOC_STATS: OnceLock<AllocStats> = OnceLock::new();
 
-/// The process-wide allocation counters.
+/// The process-wide allocation counters (registry-backed).
 pub fn alloc_stats() -> &'static AllocStats {
-    ALLOC_STATS.get_or_init(AllocStats::default)
+    ALLOC_STATS.get_or_init(AllocStats::from_registry)
 }
 
 thread_local! {
@@ -114,13 +127,13 @@ pub fn thread_alloc_snapshot() -> AllocSnapshot {
 
 /// Record one in-place reuse (called by the in-place kernel glue).
 pub fn note_inplace_hit() {
-    alloc_stats().hits.fetch_add(1, Ordering::Relaxed);
+    alloc_stats().hits.inc();
     TL_HITS.with(|c| c.set(c.get() + 1));
 }
 
 /// Record one eligible kernel that allocated its output.
 pub fn note_inplace_miss() {
-    alloc_stats().misses.fetch_add(1, Ordering::Relaxed);
+    alloc_stats().misses.inc();
     TL_MISSES.with(|c| c.set(c.get() + 1));
 }
 

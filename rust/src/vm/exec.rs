@@ -20,9 +20,10 @@ use std::cell::{Cell, RefCell};
 use std::sync::Arc;
 
 use super::bytecode::{Instr, PackedFunc, PackedRef, Program, Reg};
-use crate::eval::value::{lock_ref, Value, VmClosure};
+use crate::eval::value::{lock_ref, tensor_shape_label, Value, VmClosure};
 use crate::eval::LaunchCounter;
 use crate::op;
+use crate::telemetry::profiler;
 use crate::tensor::{self, CmpOp, DType, Tensor};
 
 /// Frames' register vectors kept for reuse; bounds pool memory when a
@@ -50,6 +51,19 @@ struct Frame {
     regs: Vec<Value>,
     /// Caller register receiving this frame's return value.
     ret_dst: Reg,
+}
+
+/// Relay operator name for a fused comparison, so the profiler's per-op
+/// table reports `IfCmp` launches under the op the unfused path would run.
+fn cmp_op_name(cmp: CmpOp) -> &'static str {
+    match cmp {
+        CmpOp::Eq => "equal",
+        CmpOp::Ne => "not_equal",
+        CmpOp::Lt => "less",
+        CmpOp::Le => "less_equal",
+        CmpOp::Gt => "greater",
+        CmpOp::Ge => "greater_equal",
+    }
 }
 
 /// Build an owned argument vector from frame registers: a register on the
@@ -277,6 +291,8 @@ impl<'p> Vm<'p> {
                     // the intermediate bool tensor is skipped — keeps the
                     // launch metric identical to the unfused executors.
                     self.launches.bump();
+                    profiler::note_launch();
+                    let timer = profiler::op_timer();
                     let a = match &frame.regs[*lhs as usize] {
                         Value::Tensor(t) => t,
                         other => {
@@ -310,6 +326,11 @@ impl<'p> Vm<'p> {
                     } else {
                         tensor::compare(*cmp, a, b).bool_value()
                     };
+                    if let Some(t) = timer {
+                        let shape =
+                            format!("({},{})", tensor_shape_label(a), tensor_shape_label(b));
+                        profiler::record_op(t, cmp_op_name(*cmp), shape, 0, 0);
+                    }
                     if !taken {
                         frame.pc = *on_false as usize;
                     }
@@ -326,6 +347,7 @@ impl<'p> Vm<'p> {
                 }
                 Instr::InvokePacked { dst, packed, args } => {
                     self.launches.bump();
+                    profiler::note_launch();
                     let argv = collect_owned(&mut frame.regs, args, dying);
                     let p = &self.program.packed[*packed as usize];
                     let v = self.run_packed(p, argv)?;
@@ -439,6 +461,7 @@ impl<'p> Vm<'p> {
                             }
                             let mut argv = collect_owned(&mut frame.regs, args, dying);
                             self.launches.bump();
+                            profiler::note_launch();
                             frame.regs[*dst as usize] =
                                 op::inplace::eval_step(def, &mut argv, &crate::ir::Attrs::new())?;
                         }
@@ -512,6 +535,7 @@ impl<'p> Vm<'p> {
                             }
                             let mut argv = drain_args(&mut frame.regs, args);
                             self.launches.bump();
+                            profiler::note_launch();
                             let v = op::inplace::eval_step(
                                 def,
                                 &mut argv,

@@ -261,3 +261,37 @@ fn tail_accum_keeps_vm_depth_bounded_on_a_10k_element_fold() {
     assert_eq!(v0.tensor().f32_value(), n as f32);
     assert_eq!(v2.tensor().f32_value(), n as f32);
 }
+
+#[test]
+fn profiled_zoo_runs_match_the_launch_counter() {
+    use relay::eval::{run_with_profile, CompileOptions, Executor};
+
+    // Graph tier on a vision model: the profiler's launch total must equal
+    // the executor's LaunchCounter exactly — they count at the same sites.
+    let (m, input) = zoo::vision::build(Model::NatureDqn, 7);
+    let out = run_with_profile(
+        &m,
+        CompileOptions::at(Executor::GraphRt, OptLevel::O3),
+        vec![Value::Tensor(input)],
+    )
+    .expect("profiled vision run");
+    assert_eq!(out.executor, "graphrt");
+    let p = out.profile.as_ref().expect("profile attached");
+    assert_eq!(
+        p.launches as usize, out.launches,
+        "profiler drifted from the LaunchCounter"
+    );
+    // Fused groups are one launch but one row update per inner step.
+    assert!(p.total_calls() >= p.launches, "fewer op calls than launches");
+    assert!(!p.rows.is_empty(), "empty profile for a real model");
+
+    // VM tier on a recurrent model: closures, tail calls, and fused
+    // compare-branches all pass through the same parity.
+    let (m, args) = zoo::nlp::build_nlp(Model::Rnn, 7);
+    let out = run_with_profile(&m, CompileOptions::at(Executor::Vm, OptLevel::O2), args)
+        .expect("profiled nlp run");
+    assert_eq!(out.executor, "vm");
+    let p = out.profile.as_ref().expect("profile attached");
+    assert_eq!(p.launches as usize, out.launches);
+    assert!(p.total_calls() >= p.launches);
+}
