@@ -1,0 +1,240 @@
+//! Saturation: the resilient front door under ~4x capacity offered load,
+//! with fault injection. This is the acceptance harness for the admission
+//! work (bounded queue, per-request deadlines, shedding, supervision):
+//!
+//! - a deliberately tiny fleet (1 worker, max_batch 2, 10ms injected
+//!   latency per batch, queue budget 4) is driven by 16 closed-loop
+//!   clients — roughly 4x what the queue + batch in flight can hold;
+//! - every 7th batch panics ([`FaultConfig::panic_every`]), so the run
+//!   also proves `catch_unwind` keeps the worker count intact mid-storm.
+//!
+//! Hard invariants (never latency-gated, so they run in CI's smoke step):
+//! - queue depth never exceeds `queue_budget` (sampled continuously);
+//! - excess load is *shed and counted*, not silently dropped: every
+//!   request gets a definitive reply, and `relay_shed_total` > 0;
+//! - worker panics answer their batch and the fleet stays at full
+//!   strength (`relay_workers_alive` unchanged, respawns 0);
+//! - p99 reply latency is bounded by deadline + batch time + margin —
+//!   the deadline mechanism structurally caps how long any client waits;
+//! - after the storm the queue drains: `relay_queue_depth` returns to 0.
+//!
+//! Results go to `BENCH_fig15_saturation.json`; the final `/metrics` text
+//! (fetched over the real TCP front door) goes to `saturation_metrics.txt`
+//! for CI to grep.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use relay::coordinator::server::{
+    classify_line, fetch_metrics, serve_handle, FaultConfig, ServerConfig,
+};
+use relay::eval::Executor;
+use relay::telemetry::registry::names;
+
+const PORT: u16 = 7499;
+const QUEUE_BUDGET: usize = 4;
+const WORKERS: usize = 1;
+const MAX_BATCH: usize = 2;
+const CLIENTS: usize = 16;
+const BATCH_LATENCY: Duration = Duration::from_millis(10);
+const DEADLINE: Duration = Duration::from_secs(1);
+const FEAT: usize = 16;
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn main() {
+    let smoke = std::env::var_os("RELAY_BENCH_SMOKE").is_some();
+    let per_client: usize = if smoke { 20 } else { 50 };
+    println!(
+        "Fig 15 (saturation): {CLIENTS} clients vs {WORKERS} worker(s), \
+         queue budget {QUEUE_BUDGET}, {}ms/batch, panic every 7th batch",
+        BATCH_LATENCY.as_millis()
+    );
+
+    let cfg = ServerConfig {
+        port: PORT,
+        artifact_dir: "definitely-missing-artifacts".into(),
+        executor: Executor::Vm,
+        max_batch: MAX_BATCH,
+        workers: WORKERS,
+        queue_budget: QUEUE_BUDGET,
+        default_deadline: DEADLINE,
+        fault: Some(FaultConfig {
+            latency: BATCH_LATENCY,
+            panic_every: Some(7),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let handle = serve_handle(cfg, stop).expect("saturation fleet failed to start");
+    let stats = handle.stats();
+
+    let r = relay::telemetry::registry();
+    let p = PORT.to_string();
+    let labels: &[(&str, &str)] = &[("port", &p)];
+    let depth = r.gauge_with(names::QUEUE_DEPTH, labels);
+    let alive = r.gauge_with(names::WORKERS_ALIVE, labels);
+
+    // Depth sampler: the bounded-queue invariant, observed continuously
+    // while the storm runs (the gauge is exact — updated under the queue
+    // lock — so sampling cannot race past a violation window).
+    let sampling = Arc::new(std::sync::atomic::AtomicBool::new(true));
+    let sampler = {
+        let depth = depth.clone();
+        let sampling = sampling.clone();
+        std::thread::spawn(move || {
+            let mut max_depth = 0i64;
+            while sampling.load(Ordering::Relaxed) {
+                max_depth = max_depth.max(depth.get());
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            max_depth
+        })
+    };
+
+    // The storm: closed-loop clients, each firing its next request the
+    // moment the previous reply lands.
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let features: Vec<f32> =
+                    (0..FEAT).map(|j| ((c * 7 + j) % 5) as f32 - 2.0).collect();
+                let mut latencies_ms = Vec::with_capacity(per_client);
+                let (mut oks, mut sheds, mut errors, mut deadlines) = (0u64, 0, 0, 0);
+                for _ in 0..per_client {
+                    let t = Instant::now();
+                    let reply =
+                        classify_line(PORT, &features, None).expect("front door reply");
+                    latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    if reply.parse::<i64>().is_ok() {
+                        oks += 1;
+                    } else if reply == "shed: queue full" {
+                        sheds += 1;
+                    } else if reply == "error: deadline exceeded" {
+                        deadlines += 1;
+                    } else if reply.starts_with("error:") {
+                        errors += 1;
+                    } else {
+                        panic!("indefinite reply from the front door: {reply:?}");
+                    }
+                }
+                (latencies_ms, oks, sheds, errors, deadlines)
+            })
+        })
+        .collect();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let (mut oks, mut sheds, mut errors, mut deadlines) = (0u64, 0u64, 0u64, 0u64);
+    for c in clients {
+        let (lat, o, s, e, d) = c.join().expect("client thread");
+        latencies_ms.extend(lat);
+        oks += o;
+        sheds += s;
+        errors += e;
+        deadlines += d;
+    }
+    let storm_secs = t0.elapsed().as_secs_f64();
+    sampling.store(false, Ordering::Relaxed);
+    let max_depth = sampler.join().expect("sampler thread");
+
+    let total = (CLIENTS * per_client) as u64;
+    assert_eq!(
+        oks + sheds + errors + deadlines,
+        total,
+        "every request must get exactly one definitive reply"
+    );
+    assert!(
+        max_depth <= QUEUE_BUDGET as i64,
+        "queue depth {max_depth} exceeded the budget {QUEUE_BUDGET}"
+    );
+    assert!(sheds > 0, "4x offered load never tripped the admission bound");
+    assert!(errors > 0, "the every-7th-batch panic never surfaced as a typed error");
+    assert_eq!(
+        alive.get(),
+        WORKERS as i64,
+        "a panicking backend shrank the fleet"
+    );
+    assert_eq!(
+        r.counter_with(names::WORKER_RESPAWNS_TOTAL, labels).get(),
+        0,
+        "catch_unwind should keep panics from ever killing a worker"
+    );
+    assert!(stats.panics.load(Ordering::Relaxed) > 0);
+
+    // The deadline mechanism structurally bounds every reply: admitted
+    // requests are answered (or deadline-dropped) within their allowance
+    // plus one batch in flight; sheds are immediate. Generous margin for
+    // loaded runners — this is a robustness bound, not a latency race.
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let p50 = percentile(&latencies_ms, 0.50);
+    let p99 = percentile(&latencies_ms, 0.99);
+    let bound_ms =
+        (DEADLINE + BATCH_LATENCY + Duration::from_millis(500)).as_secs_f64() * 1e3;
+    assert!(
+        p99 <= bound_ms,
+        "p99 {p99:.1}ms above the structural bound {bound_ms:.0}ms"
+    );
+
+    // Drain: with the storm over, the queue must empty on its own.
+    let drain_deadline = Instant::now() + Duration::from_secs(10);
+    while depth.get() != 0 && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(depth.get(), 0, "queue depth did not return to 0 after the storm");
+
+    // Snapshot /metrics over the real TCP front door while it still
+    // answers, for CI to grep (`relay_shed_total` > 0, final
+    // `relay_queue_depth` == 0).
+    let metrics = fetch_metrics(PORT).expect("fetch /metrics");
+    assert!(metrics.contains("relay_shed_total"), "{metrics}");
+    let handle_stats = handle.stats();
+    handle.shutdown();
+    assert_eq!(alive.get(), 0, "shutdown left workers behind");
+
+    println!(
+        "{total} requests in {storm_secs:.2}s: {oks} ok, {sheds} shed, \
+         {errors} panic-errors, {deadlines} deadline-dropped; \
+         max queue depth {max_depth}/{QUEUE_BUDGET}; p50 {p50:.1}ms p99 {p99:.1}ms"
+    );
+
+    let json = format!(
+        "{{\n  \"figure\": \"15-saturation\",\n  \"description\": \"bounded \
+         admission under ~4x capacity offered load with every-7th-batch panic \
+         injection ({CLIENTS} closed-loop clients, {WORKERS} worker, queue \
+         budget {QUEUE_BUDGET}, {}ms/batch)\",\n  \"rows\": [\n    \
+         {{\"requests\": {total}, \"ok\": {oks}, \"shed\": {sheds}, \
+         \"panic_errors\": {errors}, \"deadline_dropped\": {deadlines}, \
+         \"max_queue_depth\": {max_depth}, \"queue_budget\": {QUEUE_BUDGET}, \
+         \"worker_panics\": {}, \"p50_ms\": {p50:.2}, \"p99_ms\": {p99:.2}, \
+         \"storm_secs\": {storm_secs:.2}}}\n  ]\n}}\n",
+        BATCH_LATENCY.as_millis(),
+        handle_stats.panics.load(Ordering::Relaxed),
+    );
+    let at_root = std::path::Path::new("../ROADMAP.md").exists();
+    let json_path = if at_root {
+        "../BENCH_fig15_saturation.json"
+    } else {
+        "BENCH_fig15_saturation.json"
+    };
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+    let metrics_path = if at_root {
+        "../saturation_metrics.txt"
+    } else {
+        "saturation_metrics.txt"
+    };
+    match std::fs::write(metrics_path, &metrics) {
+        Ok(()) => println!("wrote {metrics_path}"),
+        Err(e) => eprintln!("could not write {metrics_path}: {e}"),
+    }
+}

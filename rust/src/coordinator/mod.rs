@@ -3,7 +3,9 @@
 //! The paper's contribution is the compiler, so this layer is deliberately
 //! thin (per DESIGN.md): process lifecycle, a request loop, and metrics.
 //! The server demonstrates deployment of a compiled artifact — a dynamic
-//! batcher over the PJRT executable, Python long gone.
+//! batcher over the PJRT executable, Python long gone — behind a resilient
+//! front door: bounded admission ([`queue`]), per-request deadlines, load
+//! shedding, and worker supervision (see `README.md` in this directory).
 //!
 //! Every command routes through the same optimizing driver the executors
 //! use (`eval::CompileOptions` -> `pass::optimize_traced`): `run` compiles
@@ -11,6 +13,7 @@
 //! driver did, and `serve` compiles its batch buckets at `--opt`
 //! (default -O3).
 
+pub mod queue;
 pub mod server;
 
 use std::path::Path;
@@ -166,6 +169,7 @@ pub fn usage() -> &'static str {
                                                  disassemble the VM program\n\
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
        relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3] [--fixpoint]\n\
+                   [--queue-budget 256] [--deadline-ms 1000]\n\
                    [--trace-json PATH]       batched inference server\n\
        relay metrics [--port 7474]           dump a running server's /metrics\n"
 }

@@ -1,0 +1,264 @@
+//! Bounded admission queue for the serving fleet.
+//!
+//! The front door's replacement for the raw `mpsc` channel the fleet
+//! drained before PR 7: admission is **bounded** (`budget` requests may
+//! wait at once; the excess is rejected at enqueue time so the caller can
+//! shed it with a typed reply instead of letting the queue grow without
+//! bound), consumers wait on a condvar (no fixed drain tick), and the
+//! queue-depth gauge is updated *inside* the queue's own critical section,
+//! so it always equals the actual queue length — it cannot drift when a
+//! worker dies between a dequeue and a gauge decrement, which is exactly
+//! the failure mode the old add-here/sub-there accounting had.
+//!
+//! [`close`](AdmissionQueue::close) starts a graceful drain: further
+//! pushes are rejected with [`Reject::Closed`], but queued items keep
+//! popping until the queue is empty — only then do consumers see
+//! [`Pop::Closed`] and exit. Poisoned locks are ignored (a worker that
+//! panicked while holding the lock must not wedge the rest of the fleet).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::telemetry::Gauge;
+
+/// Why [`AdmissionQueue::push`] rejected an item.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// The queue already holds `budget` items: shed the load.
+    Full,
+    /// The queue is draining for shutdown: no new admissions.
+    Closed,
+}
+
+/// What a consumer got back from a timed pop.
+#[derive(Debug)]
+pub enum Pop<T> {
+    Item(T),
+    /// The wait deadline passed with the queue still empty.
+    Timeout,
+    /// The queue is closed **and** drained: the consumer should exit.
+    Closed,
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue with a budget, close-and-drain semantics, and an
+/// always-exact depth gauge. See the module docs for the design.
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+    budget: usize,
+    depth: Arc<Gauge>,
+}
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl<T> AdmissionQueue<T> {
+    /// `budget` is the admission bound: a push that would make the queue
+    /// hold more than `budget` items is rejected ([`Reject::Full`]). A
+    /// budget of 0 rejects everything — useful for tests and for draining
+    /// a server administratively. `depth` is set to the exact queue length
+    /// on every mutation.
+    pub fn new(budget: usize, depth: Arc<Gauge>) -> AdmissionQueue<T> {
+        depth.set(0);
+        AdmissionQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+            budget,
+            depth,
+        }
+    }
+
+    /// Admit one item, or hand it back with the reason it was rejected so
+    /// the caller still owns it (and can answer its reply channel).
+    pub fn push(&self, item: T) -> Result<(), (T, Reject)> {
+        let mut st = lock_unpoisoned(&self.state);
+        if st.closed {
+            return Err((item, Reject::Closed));
+        }
+        if st.q.len() >= self.budget {
+            return Err((item, Reject::Full));
+        }
+        st.q.push_back(item);
+        self.depth.set(st.q.len() as i64);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Wait up to `timeout` for an item.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        self.pop_until(Instant::now() + timeout)
+    }
+
+    /// Wait until `deadline` for an item. Items keep coming out of a
+    /// closed queue until it is drained; only a closed **empty** queue
+    /// returns [`Pop::Closed`].
+    pub fn pop_until(&self, deadline: Instant) -> Pop<T> {
+        let mut st = lock_unpoisoned(&self.state);
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                self.depth.set(st.q.len() as i64);
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Timeout;
+            }
+            let (guard, _) = self
+                .available
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+    }
+
+    /// Stop admitting; wake every waiting consumer so the queue drains.
+    pub fn close(&self) {
+        let mut st = lock_unpoisoned(&self.state);
+        st.closed = true;
+        drop(st);
+        self.available.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        lock_unpoisoned(&self.state).closed
+    }
+
+    pub fn len(&self) -> usize {
+        lock_unpoisoned(&self.state).q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Re-assert the depth gauge from the actual queue length. The gauge
+    /// is already updated on every push/pop under the queue lock; the
+    /// supervisor calls this anyway so that even a future accounting bug
+    /// (or a gauge shared more widely than intended) converges back to
+    /// the truth instead of drifting forever.
+    pub fn reconcile_gauge(&self) {
+        let st = lock_unpoisoned(&self.state);
+        self.depth.set(st.q.len() as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    fn queue(budget: usize) -> (AdmissionQueue<u32>, Arc<Gauge>) {
+        let r = Registry::new();
+        let g = r.gauge("relay_test_queue_depth");
+        (AdmissionQueue::new(budget, g.clone()), g)
+    }
+
+    #[test]
+    fn budget_bounds_admission_and_rejects_hand_the_item_back() {
+        let (q, g) = queue(2);
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        assert_eq!(g.get(), 2);
+        let (item, why) = q.push(3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(why, Reject::Full);
+        // The rejected push did not change the depth.
+        assert_eq!(g.get(), 2);
+        assert_eq!(q.len(), 2);
+        // Popping frees a slot; admission resumes.
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Item(1)));
+        assert_eq!(g.get(), 1);
+        assert!(q.push(3).is_ok());
+    }
+
+    #[test]
+    fn zero_budget_rejects_everything_without_panicking() {
+        let (q, g) = queue(0);
+        for i in 0..100 {
+            let (item, why) = q.push(i).unwrap_err();
+            assert_eq!(item, i);
+            assert_eq!(why, Reject::Full);
+        }
+        assert_eq!(g.get(), 0);
+        assert!(q.is_empty());
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Timeout));
+    }
+
+    #[test]
+    fn close_drains_queued_items_then_reports_closed() {
+        let (q, g) = queue(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        // New admissions are refused with the shutdown reason...
+        let (_, why) = q.push(3).unwrap_err();
+        assert_eq!(why, Reject::Closed);
+        // ...but queued items still come out, in order.
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Item(1)));
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Item(2)));
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Closed));
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn pop_until_wakes_on_push_from_another_thread() {
+        let (q, _) = queue(4);
+        let q = Arc::new(q);
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                q.push(7).unwrap();
+            })
+        };
+        // Generous deadline: the pop must return the pushed item well
+        // before it, woken by the condvar rather than the timeout.
+        match q.pop_timeout(Duration::from_secs(10)) {
+            Pop::Item(v) => assert_eq!(v, 7),
+            other => panic!("expected an item, got {other:?}"),
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let (q, _) = queue(4);
+        let q = Arc::new(q);
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || q.pop_timeout(Duration::from_secs(10)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        match consumer.join().unwrap() {
+            Pop::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gauge_tracks_exact_depth_across_mixed_operations() {
+        let (q, g) = queue(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+            assert_eq!(g.get(), q.len() as i64);
+        }
+        for _ in 0..4 {
+            let _ = q.pop_timeout(Duration::ZERO);
+            assert_eq!(g.get(), q.len() as i64);
+        }
+        q.reconcile_gauge();
+        assert_eq!(g.get(), 6);
+    }
+}

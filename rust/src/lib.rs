@@ -33,7 +33,9 @@
 //! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT
 //!   execution, and model importers (PJRT/XLA behind the `xla` feature).
 //! * [`zoo`] — the evaluation model suite (vision + NLP).
-//! * [`coordinator`] — CLI + batched inference server (thin L3 driver).
+//! * [`coordinator`] — CLI + batched inference server behind a resilient
+//!   front door: bounded admission, per-request deadlines, load shedding,
+//!   worker supervision (thin L3 driver).
 //! * [`telemetry`] — cross-cutting observability (std-only, below every
 //!   other layer): the process-wide metrics registry (counters, gauges,
 //!   p50/p95/p99 latency histograms, Prometheus-style `/metrics` text),

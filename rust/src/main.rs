@@ -84,6 +84,14 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 })?,
             };
             let fixpoint = args.iter().any(|a| a == "--fixpoint");
+            let cfg_defaults = server::ServerConfig::default();
+            let queue_budget: usize = flag_value(args, "--queue-budget")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(cfg_defaults.queue_budget);
+            let default_deadline = flag_value(args, "--deadline-ms")
+                .and_then(|v| v.parse().ok())
+                .map(std::time::Duration::from_millis)
+                .unwrap_or(cfg_defaults.default_deadline);
             let trace: Option<Arc<dyn relay::telemetry::SpanSink>> =
                 match flag_value(args, "--trace-json") {
                     None => None,
@@ -99,8 +107,10 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 workers,
                 opt_level,
                 fixpoint,
+                queue_budget,
+                default_deadline,
                 trace,
-                ..Default::default()
+                ..cfg_defaults
             };
             let stop = Arc::new(AtomicBool::new(false));
             let stats = server::serve(cfg, stop)?;
@@ -119,11 +129,15 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                     .map(|w| w.load(std::sync::atomic::Ordering::Relaxed))
                     .collect();
                 println!(
-                    "requests={} batches={} compiles={} inplace-hits={} \
+                    "requests={} batches={} compiles={} shed={} \
+                     deadline-dropped={} panics={} inplace-hits={} \
                      inplace-misses={} per-worker={per_worker:?}",
                     stats.requests.load(std::sync::atomic::Ordering::Relaxed),
                     stats.batches.load(std::sync::atomic::Ordering::Relaxed),
                     stats.compiles.load(std::sync::atomic::Ordering::Relaxed),
+                    stats.shed.load(std::sync::atomic::Ordering::Relaxed),
+                    stats.deadline_dropped.load(std::sync::atomic::Ordering::Relaxed),
+                    stats.panics.load(std::sync::atomic::Ordering::Relaxed),
                     stats.inplace_hits(),
                     stats.inplace_misses()
                 );

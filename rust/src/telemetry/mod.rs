@@ -29,4 +29,4 @@ pub mod span;
 
 pub use profiler::{Profile, ProfileRow, ProfileScope};
 pub use registry::{registry, Counter, Gauge, Histogram, Registry};
-pub use span::{ChromeTraceWriter, MemorySpans, RequestSpan, SpanSink};
+pub use span::{ChromeTraceWriter, MemorySpans, Outcome, RequestSpan, SpanSink};

@@ -26,6 +26,20 @@ pub mod names {
     pub const INPLACE_HITS_TOTAL: &str = "relay_inplace_hits_total";
     pub const INPLACE_MISSES_TOTAL: &str = "relay_inplace_misses_total";
     pub const QUEUE_DEPTH: &str = "relay_queue_depth";
+    /// Requests refused without execution, labeled by `reason`:
+    /// `queue_full` (admission over budget), `deadline` (dropped at drain
+    /// time, already past its deadline), `shutdown` (arrived during drain).
+    pub const SHED_TOTAL: &str = "relay_shed_total";
+    /// How every request ended, labeled by `outcome`
+    /// (ok / error / shed / deadline) — see `telemetry::Outcome`.
+    pub const REQUEST_OUTCOMES_TOTAL: &str = "relay_request_outcomes_total";
+    /// Backend executions that panicked (caught at the worker, answered
+    /// with a typed error; the worker survives).
+    pub const WORKER_PANICS_TOTAL: &str = "relay_worker_panics_total";
+    /// Worker threads the supervisor respawned after an abnormal death.
+    pub const WORKER_RESPAWNS_TOTAL: &str = "relay_worker_respawns_total";
+    /// Live worker threads in the fleet (0 after a graceful drain).
+    pub const WORKERS_ALIVE: &str = "relay_workers_alive";
     pub const REQUEST_SECONDS: &str = "relay_request_seconds";
     pub const QUEUE_WAIT_SECONDS: &str = "relay_queue_wait_seconds";
     pub const BATCH_FORM_SECONDS: &str = "relay_batch_form_seconds";

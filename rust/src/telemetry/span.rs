@@ -27,6 +27,35 @@ pub fn micros_since_epoch(t: Instant) -> u64 {
     t.saturating_duration_since(epoch()).as_micros() as u64
 }
 
+/// How a served request ended. Rendered as the `outcome` label on
+/// `relay_request_outcomes_total` and carried on every span, so a failed
+/// batch can no longer masquerade as a cache-hit success (the pre-PR 7
+/// span shape had no outcome and error batches recorded `compile_hit:
+/// true` / `compile: ZERO` — indistinguishable from a healthy hit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Executed and answered with a prediction.
+    Ok,
+    /// Answered with a typed error (backend error or worker panic).
+    Error,
+    /// Rejected at admission (queue over budget, or shutting down).
+    Shed,
+    /// Admitted, but its deadline passed before a worker could run it;
+    /// dropped at drain time with a `deadline exceeded` reply.
+    Deadline,
+}
+
+impl Outcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Error => "error",
+            Outcome::Shed => "shed",
+            Outcome::Deadline => "deadline",
+        }
+    }
+}
+
 /// Where one served request's latency went, phase by phase.
 #[derive(Clone, Debug)]
 pub struct RequestSpan {
@@ -50,17 +79,30 @@ pub struct RequestSpan {
     pub execute: Duration,
     /// Enqueue → response handed back.
     pub total: Duration,
+    /// How the request ended (see [`Outcome`]). Shed spans never reached
+    /// a worker, so their phase durations are zero and `worker` /
+    /// `batch_size` are 0; deadline spans have a real `queue_wait` but no
+    /// batch or execute phases.
+    pub outcome: Outcome,
 }
 
 /// Destination for completed spans. Implementations must tolerate calls
 /// from multiple fleet workers at once.
 pub trait SpanSink: Send + Sync {
     fn record(&self, span: &RequestSpan);
+
+    /// Flush buffered spans to durable storage. Called by the fleet's
+    /// graceful drain after the last worker exits; the default is a no-op
+    /// for sinks that do not buffer.
+    fn flush(&self) {}
 }
 
 /// In-memory sink for tests and embedders.
 #[derive(Debug, Default)]
-pub struct MemorySpans(Mutex<Vec<RequestSpan>>);
+pub struct MemorySpans {
+    spans: Mutex<Vec<RequestSpan>>,
+    flushes: std::sync::atomic::AtomicUsize,
+}
 
 impl MemorySpans {
     pub fn new() -> Self {
@@ -69,13 +111,23 @@ impl MemorySpans {
 
     /// Copy of everything recorded so far.
     pub fn spans(&self) -> Vec<RequestSpan> {
-        self.0.lock().unwrap_or_else(|e| e.into_inner()).clone()
+        self.spans.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// How many times [`SpanSink::flush`] was called (the graceful-drain
+    /// tests assert the fleet flushed its sink on shutdown).
+    pub fn flushes(&self) -> usize {
+        self.flushes.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
 impl SpanSink for MemorySpans {
     fn record(&self, span: &RequestSpan) {
-        self.0.lock().unwrap_or_else(|e| e.into_inner()).push(span.clone());
+        self.spans.lock().unwrap_or_else(|e| e.into_inner()).push(span.clone());
+    }
+
+    fn flush(&self) {
+        self.flushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 }
 
@@ -117,12 +169,13 @@ fn push_event(
         buf,
         "{{\"name\":\"{name}\",\"cat\":\"request\",\"ph\":\"X\",\"ts\":{ts},\
          \"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"req\":{},\"batch\":{},\
-         \"compile_hit\":{}}}}}",
+         \"compile_hit\":{},\"outcome\":\"{}\"}}}}",
         dur.as_micros(),
         span.worker,
         span.id,
         span.batch_size,
         span.compile_hit,
+        span.outcome.as_str(),
     );
 }
 
@@ -145,6 +198,11 @@ impl SpanSink for ChromeTraceWriter {
         out.first = first;
         // Serving must not die on a full disk; drop the event instead.
         let _ = out.w.write_all(buf.as_bytes());
+        let _ = out.w.flush();
+    }
+
+    fn flush(&self) {
+        let mut out = self.out.lock().unwrap_or_else(|e| e.into_inner());
         let _ = out.w.flush();
     }
 }
@@ -173,11 +231,12 @@ mod tests {
             compile_hit: false,
             execute: Duration::from_micros(90),
             total: Duration::from_micros(560),
+            outcome: Outcome::Ok,
         }
     }
 
     #[test]
-    fn memory_sink_collects_spans() {
+    fn memory_sink_collects_spans_and_counts_flushes() {
         let sink = MemorySpans::new();
         sink.record(&span(1));
         sink.record(&span(2));
@@ -185,6 +244,17 @@ mod tests {
         assert_eq!(got.len(), 2);
         assert_eq!(got[1].id, 2);
         assert_eq!(got[0].queue_wait, Duration::from_micros(50));
+        assert_eq!(sink.flushes(), 0);
+        sink.flush();
+        assert_eq!(sink.flushes(), 1);
+    }
+
+    #[test]
+    fn outcomes_render_as_stable_label_values() {
+        assert_eq!(Outcome::Ok.as_str(), "ok");
+        assert_eq!(Outcome::Error.as_str(), "error");
+        assert_eq!(Outcome::Shed.as_str(), "shed");
+        assert_eq!(Outcome::Deadline.as_str(), "deadline");
     }
 
     #[test]
@@ -207,6 +277,7 @@ mod tests {
         assert!(text.contains("\"name\":\"queue\""));
         assert!(text.contains("\"name\":\"execute\""));
         assert!(text.contains("\"req\":7"));
+        assert!(text.contains("\"outcome\":\"ok\""));
         // Cache-hit span: no compile event for request 8.
         assert_eq!(text.matches("\"name\":\"compile\"").count(), 1);
         // Events are comma-separated: n events → n-1 separators (9 events:

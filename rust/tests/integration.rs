@@ -295,3 +295,89 @@ fn profiled_zoo_runs_match_the_launch_counter() {
     assert_eq!(p.launches as usize, out.launches);
     assert!(p.total_calls() >= p.launches);
 }
+
+#[test]
+fn serving_front_door_survives_overload_faults_and_deadlines_end_to_end() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use relay::coordinator::server::{
+        classify_line, fetch_metrics, serve_handle, FaultConfig, ServerConfig,
+    };
+    use relay::eval::Executor;
+    use relay::telemetry::registry::names;
+
+    // A deliberately tiny fleet: one slow worker (15ms/batch injected
+    // latency) behind a 2-deep queue, so a 12-client burst overruns
+    // admission deterministically. Everything below goes through the
+    // public wire protocol — no test-only backdoors. (Panic/error
+    // injection is covered by the server unit tests and fig15.)
+    let port = 7971;
+    let cfg = ServerConfig {
+        port,
+        artifact_dir: "definitely-missing-artifacts".into(),
+        executor: Executor::Vm,
+        max_batch: 1,
+        workers: 1,
+        queue_budget: 2,
+        batch_timeout: Duration::from_millis(1),
+        default_deadline: Duration::from_secs(2),
+        fault: Some(FaultConfig {
+            latency: Duration::from_millis(15),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = serve_handle(cfg, stop).expect("front door failed to start");
+    let stats = handle.stats();
+
+    // Overload burst: 12 concurrent clients against capacity of 3 in the
+    // system (1 executing + 2 queued). Every reply must be definitive.
+    let clients: Vec<_> = (0..12)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let features: Vec<f32> = (0..8).map(|j| ((c + j) % 3) as f32).collect();
+                classify_line(port, &features, None).expect("reply")
+            })
+        })
+        .collect();
+    let (mut oks, mut sheds) = (0usize, 0usize);
+    for c in clients {
+        let reply = c.join().expect("client thread");
+        if reply.parse::<i64>().is_ok() {
+            oks += 1;
+        } else if reply == "shed: queue full" {
+            sheds += 1;
+        } else {
+            panic!("indefinite reply: {reply:?}");
+        }
+    }
+    assert_eq!(oks + sheds, 12);
+    assert!(sheds > 0, "12-vs-3 overload never shed");
+    assert!(oks > 0, "overload shed everything, including admitted work");
+
+    // An impossible deadline is answered with the typed error, and the
+    // fleet keeps serving afterwards.
+    let features = vec![0.5_f32; 8];
+    let reply = classify_line(port, &features, Some(0)).expect("deadline reply");
+    assert_eq!(reply, "error: deadline exceeded");
+    let reply = classify_line(port, &features, Some(5_000)).expect("follow-up");
+    assert!(reply.parse::<i64>().is_ok(), "fleet dead after deadline drop: {reply:?}");
+
+    // The injected errors and sheds all surface in /metrics over TCP.
+    let metrics = fetch_metrics(port).expect("/metrics");
+    assert!(metrics.contains(names::SHED_TOTAL), "{metrics}");
+    assert!(metrics.contains(names::REQUEST_OUTCOMES_TOTAL), "{metrics}");
+    assert_eq!(stats.shed.load(Ordering::Relaxed), sheds);
+    assert_eq!(stats.deadline_dropped.load(Ordering::Relaxed), 1);
+
+    // Graceful drain: queue empty, workers gone, gauges reconciled.
+    let r = relay::telemetry::registry();
+    let p = port.to_string();
+    let labels: &[(&str, &str)] = &[("port", &p)];
+    handle.shutdown();
+    assert_eq!(r.gauge_with(names::QUEUE_DEPTH, labels).get(), 0);
+    assert_eq!(r.gauge_with(names::WORKERS_ALIVE, labels).get(), 0);
+}
