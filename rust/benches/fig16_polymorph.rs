@@ -1,0 +1,326 @@
+//! Shape polymorphism: one symbolic-batch artifact vs the bucket lattice.
+//! The acceptance harness for the PR 8 tentpole (paper §3.3.1): compiling
+//! the serving model ONCE with a `Dim::Any` batch dimension must serve
+//! every batch size 1..=max_batch — bit-identically to the bucketed
+//! baseline — with exactly one compile and zero padded rows.
+//!
+//! Hard invariants (never latency-gated, so they run in CI's smoke step):
+//! - the polymorphic backend holds ONE artifact and `Stats::compiles`
+//!   stays 1 across every batch size, at the backend level and through
+//!   the real TCP front door under concurrent mixed-size load;
+//! - `relay_padded_rows_total` is 0 after all polymorphic work (the poly
+//!   phases run first, so the process-wide counter is exactly the poly
+//!   path's padding — none); the bucketed baseline then pushes it past 0
+//!   with a deterministic, arithmetically-predicted amount;
+//! - predictions agree bit-for-bit with the bucketed baseline at every
+//!   batch size;
+//! - the polymorphic program launches no more kernels than a
+//!   monomorphic compile of the same model at the exact batch size.
+//!
+//! Latency columns (exact-size dispatch vs pad-to-bucket) are
+//! informational: under `RELAY_BENCH_SMOKE` nothing is timing-gated.
+//!
+//! Results go to `BENCH_fig16_polymorph.json`.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use relay::coordinator::server::{
+    classify_line, serve_handle, RelayBackend, ServerConfig, Stats,
+};
+use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+use relay::ir::{self, Dim};
+use relay::pass::OptLevel;
+use relay::telemetry::registry::names;
+use relay::zoo;
+
+const MAX_BATCH: usize = 8;
+const FEAT: usize = 16;
+const POLY_PORT: u16 = 7493;
+const BUCKET_PORT: u16 = 7494;
+const CLIENTS: usize = 8;
+
+/// Smallest power-of-two bucket >= n (the baseline's dispatch shape).
+fn bucket_for(n: usize) -> usize {
+    let mut b = 1usize;
+    while b < n && b < MAX_BATCH {
+        b *= 2;
+    }
+    b.min(MAX_BATCH)
+}
+
+/// Deterministic feature rows for batch size `n` (same for both modes,
+/// so predictions are directly comparable).
+fn make_rows(n: usize, round: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            (0..FEAT)
+                .map(|j| ((round + i * 7 + j) % 5) as f32 - 2.0)
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive one backend over `rounds` of every batch size 1..=MAX_BATCH.
+/// Returns (mean ms per batch size, predictions per batch size from the
+/// final round).
+fn drive(backend: &RelayBackend, rounds: usize) -> (Vec<f64>, Vec<Vec<i64>>) {
+    let mut mean_ms = vec![0f64; MAX_BATCH];
+    let mut preds: Vec<Vec<i64>> = vec![Vec::new(); MAX_BATCH];
+    for round in 0..rounds {
+        for n in 1..=MAX_BATCH {
+            let rows_data = make_rows(n, round);
+            let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+            let t = Instant::now();
+            let p = backend.run_batch(&rows).expect("run_batch");
+            mean_ms[n - 1] += t.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+            assert_eq!(p.len(), n, "one prediction per row");
+            preds[n - 1] = p;
+        }
+    }
+    (mean_ms, preds)
+}
+
+/// Drive a live server with closed-loop clients; every client's reply
+/// must be a prediction (no faults are injected here).
+fn storm(port: u16, per_client: usize) -> (u64, f64) {
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let features: Vec<f32> =
+                    (0..FEAT).map(|j| ((c * 7 + j) % 5) as f32 - 2.0).collect();
+                for _ in 0..per_client {
+                    let reply =
+                        classify_line(port, &features, None).expect("front door reply");
+                    reply
+                        .parse::<i64>()
+                        .unwrap_or_else(|_| panic!("non-prediction reply: {reply:?}"));
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let total = (CLIENTS * per_client) as u64;
+    (total, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let smoke = std::env::var_os("RELAY_BENCH_SMOKE").is_some();
+    let rounds: usize = if smoke { 20 } else { 100 };
+    let per_client: usize = if smoke { 25 } else { 100 };
+    println!(
+        "Fig 16 (shape polymorphism): batch sizes 1..={MAX_BATCH}, \
+         {rounds} rounds/backend, {CLIENTS}x{per_client} requests/server"
+    );
+
+    let padded = relay::telemetry::registry().counter(names::PADDED_ROWS_TOTAL);
+    let opts = CompileOptions::at(Executor::Vm, OptLevel::O3);
+
+    // ---- Polymorphic phases run FIRST, so the process-wide padded-rows
+    // counter is exactly what the poly path padded: nothing. ----
+
+    // Backend level: one artifact, every batch size, zero padding.
+    let poly_cache = Arc::new(ProgramCache::new());
+    let poly_stats = Arc::new(Stats::new(1, OptLevel::O3));
+    let poly = RelayBackend::new(MAX_BATCH, opts, poly_cache.clone(), poly_stats.clone())
+        .expect("poly backend");
+    assert_eq!(poly.bucket_count(), 1, "poly backend must hold ONE artifact");
+    let (poly_ms, poly_preds) = drive(&poly, rounds);
+    assert_eq!(
+        poly_stats.compiles.load(Ordering::Relaxed),
+        1,
+        "poly backend recompiled: the whole point is ONE compile"
+    );
+    assert_eq!(poly_cache.len(), 1, "poly cache grew past one entry");
+    assert_eq!(poly_stats.padded_rows.load(Ordering::Relaxed), 0);
+
+    // Front door: concurrent mixed-size load through real TCP, still one
+    // compile and zero padding.
+    let cfg = ServerConfig {
+        port: POLY_PORT,
+        artifact_dir: "definitely-missing-artifacts".into(),
+        executor: Executor::Vm,
+        max_batch: MAX_BATCH,
+        workers: 2,
+        ..Default::default()
+    };
+    assert!(cfg.poly, "shape-polymorphic serving must be the default");
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let handle = serve_handle(cfg, stop).expect("poly server failed to start");
+    let (poly_total, poly_secs) = storm(POLY_PORT, per_client);
+    let server_stats = handle.stats();
+    assert_eq!(
+        server_stats.compiles.load(Ordering::Relaxed),
+        1,
+        "poly server compiled more than once under mixed-size load"
+    );
+    assert_eq!(server_stats.padded_rows.load(Ordering::Relaxed), 0);
+    handle.shutdown();
+
+    // All polymorphic serving is done; the process-wide counter must
+    // still read zero padded rows.
+    assert_eq!(
+        padded.get(),
+        0,
+        "the polymorphic path padded rows — it must never pad"
+    );
+
+    // Launch parity: the symbolic-batch compile of an MLP launches no
+    // more kernels than a monomorphic compile at the exact batch size
+    // (fusion does not degrade under `Dim::Any`), and computes the same
+    // bits. Dense-only model, so this holds at -O3.
+    let poly_m = ir::parse_module(
+        "def @main(%x: Tensor[(?, 16), float32]) {\n\
+           let %w1 = ones(shape=[32, 16]);\n\
+           let %h = tanh(nn.dense(%x, %w1));\n\
+           let %w2 = ones(shape=[8, 32]);\n\
+           nn.dense(%h, %w2)\n\
+         }",
+    )
+    .expect("poly MLP parses");
+    let launch_cache = ProgramCache::new();
+    let mut launches: Vec<(usize, usize, usize)> = Vec::new();
+    for n in [1usize, 3, MAX_BATCH] {
+        let concrete = zoo::with_batch_dim(&poly_m, Dim::Known(n));
+        let data: Vec<f32> =
+            (0..n * FEAT).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect();
+        let x = relay::tensor::Tensor::from_f32(vec![n, FEAT], data);
+        let p = run_with_cache(
+            &poly_m,
+            opts,
+            vec![relay::eval::Value::Tensor(x.clone())],
+            &launch_cache,
+        )
+        .expect("poly run");
+        let e = run_with_cache(
+            &concrete,
+            opts,
+            vec![relay::eval::Value::Tensor(x)],
+            &launch_cache,
+        )
+        .expect("exact run");
+        assert!(
+            p.launches <= e.launches,
+            "batch {n}: poly launched {} kernels vs {} monomorphic",
+            p.launches,
+            e.launches
+        );
+        assert!(p.value.bits_eq(&e.value), "batch {n}: poly != monomorphic");
+        launches.push((n, p.launches, e.launches));
+    }
+
+    // ---- Bucketed baseline (`--poly=off`): the padding waste the
+    // polymorphic artifact retires, measured on identical load. ----
+
+    let bucket_cache = Arc::new(ProgramCache::new());
+    let bucket_stats = Arc::new(Stats::new(1, OptLevel::O3));
+    let bucketed =
+        RelayBackend::bucketed(MAX_BATCH, opts, bucket_cache.clone(), bucket_stats.clone())
+            .expect("bucketed backend");
+    let buckets = bucketed.bucket_count(); // 1, 2, 4, 8
+    let (bucket_ms, bucket_preds) = drive(&bucketed, rounds);
+    assert_eq!(
+        bucket_stats.compiles.load(Ordering::Relaxed),
+        buckets,
+        "bucketed baseline must compile once per bucket"
+    );
+    // Every batch size padded up to its bucket: sizes 3,5,6,7 pad by
+    // 1+3+2+1 = 7 rows per round, exactly.
+    let pad_per_round: usize = (1..=MAX_BATCH).map(|n| bucket_for(n) - n).sum();
+    let expected_padding = pad_per_round * rounds;
+    assert_eq!(
+        bucket_stats.padded_rows.load(Ordering::Relaxed),
+        expected_padding,
+        "bucketed padding waste off by arithmetic"
+    );
+    assert_eq!(padded.get(), expected_padding as u64);
+
+    // Bit-identity: same rows, same predictions, every batch size.
+    for n in 1..=MAX_BATCH {
+        assert_eq!(
+            poly_preds[n - 1],
+            bucket_preds[n - 1],
+            "batch {n}: poly and bucketed backends disagree"
+        );
+    }
+
+    // Bucketed front door, for the compile-count and throughput columns.
+    let cfg = ServerConfig {
+        port: BUCKET_PORT,
+        artifact_dir: "definitely-missing-artifacts".into(),
+        executor: Executor::Vm,
+        max_batch: MAX_BATCH,
+        workers: 2,
+        poly: false,
+        ..Default::default()
+    };
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let handle = serve_handle(cfg, stop).expect("bucketed server failed to start");
+    let (bucket_total, bucket_secs) = storm(BUCKET_PORT, per_client);
+    let bucket_server = handle.stats();
+    let bucket_server_compiles = bucket_server.compiles.load(Ordering::Relaxed);
+    assert!(
+        (1..=buckets).contains(&bucket_server_compiles),
+        "bucketed server compiles {bucket_server_compiles} out of range"
+    );
+    handle.shutdown();
+
+    let total_padded = padded.get();
+    println!(
+        "poly: 1 compile, 0 padded rows, {poly_total} requests in {poly_secs:.2}s; \
+         bucketed: {buckets} compiles, {expected_padding} padded rows over \
+         {rounds} rounds, {bucket_total} requests in {bucket_secs:.2}s"
+    );
+    for (n, p, e) in &launches {
+        println!("  batch {n}: poly {p} launches vs monomorphic {e}");
+    }
+    for n in 1..=MAX_BATCH {
+        println!(
+            "  batch {n}: poly {:.3}ms exact-size vs bucketed {:.3}ms (pad to {})",
+            poly_ms[n - 1],
+            bucket_ms[n - 1],
+            bucket_for(n)
+        );
+    }
+
+    let mut rows = String::new();
+    for n in 1..=MAX_BATCH {
+        if n > 1 {
+            rows.push_str(",\n    ");
+        }
+        rows.push_str(&format!(
+            "{{\"batch\": {n}, \"poly_ms\": {:.4}, \"bucketed_ms\": {:.4}, \
+             \"bucket_size\": {}, \"padded_rows_per_batch\": {}}}",
+            poly_ms[n - 1],
+            bucket_ms[n - 1],
+            bucket_for(n),
+            bucket_for(n) - n
+        ));
+    }
+    let json = format!(
+        "{{\n  \"figure\": \"16-polymorph\",\n  \"description\": \"one symbolic-batch \
+         (Dim::Any) artifact vs the power-of-two bucket lattice: mixed batch sizes \
+         1..={MAX_BATCH}, {rounds} rounds per backend plus {CLIENTS}-client TCP load\",\n  \
+         \"poly_compiles\": 1,\n  \"bucketed_compiles\": {buckets},\n  \
+         \"poly_padded_rows\": 0,\n  \"bucketed_padded_rows\": {expected_padding},\n  \
+         \"padded_rows_total_final\": {total_padded},\n  \
+         \"poly_server_rps\": {:.1},\n  \"bucketed_server_rps\": {:.1},\n  \
+         \"rows\": [\n    {rows}\n  ]\n}}\n",
+        poly_total as f64 / poly_secs.max(1e-9),
+        bucket_total as f64 / bucket_secs.max(1e-9),
+    );
+    let at_root = std::path::Path::new("../ROADMAP.md").exists();
+    let json_path = if at_root {
+        "../BENCH_fig16_polymorph.json"
+    } else {
+        "BENCH_fig16_polymorph.json"
+    };
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}

@@ -170,7 +170,9 @@ pub fn usage() -> &'static str {
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
        relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3] [--fixpoint]\n\
                    [--queue-budget 256] [--deadline-ms 1000]\n\
-                   [--trace-json PATH]       batched inference server\n\
+                   [--poly on|off] [--trace-json PATH]\n\
+                                                 batched inference server\n\
+                                                 (--poly=off: bucketed baseline)\n\
        relay metrics [--port 7474]           dump a running server's /metrics\n"
 }
 

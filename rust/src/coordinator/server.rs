@@ -5,8 +5,8 @@
 //! optionally prefixed with `deadline_ms=N;` — and read back the predicted
 //! class. Requests pass through an admission-controlled front door (a
 //! bounded [`AdmissionQueue`]); a fleet of worker threads drains up to
-//! `max_batch` requests per batch, pads to a bucketed batch shape, executes
-//! one compiled-program call, and fans results back out. This is the
+//! `max_batch` requests per batch, executes one compiled-program call at
+//! the batch's exact size, and fans results back out. This is the
 //! router / dynamic-batcher shape of serving systems, scaled to the
 //! thin-driver role the paper's compiler contribution leaves for L3.
 //!
@@ -43,17 +43,21 @@
 //! ([`crate::eval::Executor`]) — graph runtime, bytecode VM, or
 //! interpreter — so serving works without the `xla` feature.
 //!
-//! The compiled-relay backend batches into *bucketed* shapes (1, 2, 4, 8,
-//! ... up to `max_batch`) instead of padding every batch to the maximum:
-//! a lone request at low load runs the batch-1 program, not a padded
-//! batch-32 one, cutting tail latency. Each bucket is one entry in a
-//! [`crate::eval::ProgramCache`] **shared by every worker**: values and
-//! compiled programs are `Send + Sync` (`Arc`-backed), so the whole
-//! N-worker fleet compiles each bucket exactly once over the server's
-//! lifetime (`Stats::compiles` tracks this fleet-wide; the cache coalesces
-//! two workers racing on the same cold bucket into one compile).
+//! The compiled-relay backend is **shape-polymorphic by default**
+//! (`--poly`, paper §3.3.1): the fallback MLP is typed with a symbolic
+//! batch dimension (`Dim::Any`), compiled exactly once, and every formed
+//! batch dispatches at its *exact* size through that single artifact — no
+//! padding rows, no per-bucket compiles, one [`crate::eval::ProgramCache`]
+//! entry for the whole fleet (`Stats::compiles == 1` over the server's
+//! life). `--poly=off` keeps the previous *bucketed* path as a
+//! differential baseline: per-batch-size modules at powers of two up to
+//! `max_batch`, each batch padded up to the smallest bucket that fits
+//! (padded rows are counted in `relay_padded_rows_total` — always zero on
+//! the polymorphic path). Either way the shared cache coalesces racing
+//! cold compiles, and compiled programs are `Send + Sync` (`Arc`-backed),
+//! so any number of workers dispatch concurrently.
 //!
-//! Buckets compile **through the full optimizing pipeline** at
+//! Artifacts compile **through the full optimizing pipeline** at
 //! [`ServerConfig::opt_level`] (default -O3, the `--opt` CLI flag): the
 //! fleet serves fused kernels, not the bare ANF the pre-refactor batcher
 //! executed. [`Stats::opt_level`] records what the fleet is running.
@@ -85,7 +89,7 @@ use anyhow::{anyhow, Result};
 
 use super::queue::{AdmissionQueue, Pop, Reject};
 use crate::eval::{run_compiled, CompileOptions, Executor, ProgramCache, Value};
-use crate::ir::{self, Module, Type, Var};
+use crate::ir::{self, Dim, Module, Type, Var};
 use crate::pass::OptLevel;
 use crate::runtime::Runtime;
 use crate::telemetry::registry::names;
@@ -160,6 +164,12 @@ pub struct ServerConfig {
     /// Deterministic fault injection around the compiled-relay backend
     /// (tests and the saturation bench only; `None` in production).
     pub fault: Option<FaultConfig>,
+    /// Shape-polymorphic serving (`--poly`, default on): compile the
+    /// fallback model once with a symbolic batch dimension and dispatch
+    /// every batch at its exact size — no padding, one compile, one
+    /// program-cache entry. `--poly=off` restores the bucketed baseline
+    /// (powers-of-two modules, batches padded up to the bucket).
+    pub poly: bool,
 }
 
 impl Default for ServerConfig {
@@ -177,6 +187,7 @@ impl Default for ServerConfig {
             default_deadline: Duration::from_secs(1),
             trace: None,
             fault: None,
+            poly: true,
         }
     }
 }
@@ -187,9 +198,11 @@ const FALLBACK_HIDDEN: usize = 32;
 const FALLBACK_CLASSES: usize = 4;
 
 /// A small MLP classifier with baked-in deterministic weights, served when
-/// no AOT artifact is available. Batch size is fixed so requests pad to
-/// one executable shape, like the artifact path.
-fn fallback_module(batch: usize) -> Module {
+/// no AOT artifact is available. The batch dimension is whatever the
+/// caller passes: `Dim::Any` yields the shape-polymorphic module (one
+/// artifact for every batch size, §3.3.1), `Dim::Known(n)` the fixed-shape
+/// module the bucketed baseline pads to.
+fn fallback_module(batch: Dim) -> Module {
     let mut w = crate::zoo::Weights::new(17);
     let x = Var::fresh("x");
     let h = ir::op_call(
@@ -198,7 +211,10 @@ fn fallback_module(batch: usize) -> Module {
     );
     let logits = ir::op_call("nn.dense", vec![h, w.he(&[FALLBACK_CLASSES, FALLBACK_HIDDEN])]);
     let mut m = Module::with_prelude();
-    let ty = Type::tensor(vec![batch, FALLBACK_FEAT], DType::F32);
+    let ty = Type::Tensor {
+        shape: vec![batch, Dim::Known(FALLBACK_FEAT)],
+        dtype: DType::F32,
+    };
     m.add_def("main", ir::Function::new(vec![(x, Some(ty))], logits));
     m
 }
@@ -370,9 +386,10 @@ pub struct Stats {
     /// counted separately below.
     pub requests: AtomicUsize,
     pub batches: AtomicUsize,
-    /// Backend compiles performed so far, fleet-wide (compiled-relay
-    /// backend: at most one per batch bucket over the server's life,
-    /// no matter how many workers race on a cold bucket). Mirrored into
+    /// Backend compiles performed so far, fleet-wide: exactly 1 on the
+    /// shape-polymorphic path (one symbolic-batch artifact serves every
+    /// batch size), at most one per bucket on the `--poly=off` baseline —
+    /// no matter how many workers race on a cold artifact. Mirrored into
     /// the registry's `relay_compiles_total`; this per-instance copy keeps
     /// tests exact when several servers share the process.
     pub compiles: AtomicUsize,
@@ -386,6 +403,12 @@ pub struct Stats {
     /// answered its whole batch with a typed error, and the worker
     /// survived.
     pub panics: AtomicUsize,
+    /// Zero-filled rows dispatched to make a batch fit its compiled
+    /// shape. Always 0 on the shape-polymorphic path (every batch runs
+    /// at exact size); on the bucketed baseline it is the padding waste
+    /// the polymorphic artifact retires. Mirrored into the registry's
+    /// `relay_padded_rows_total`.
+    pub padded_rows: AtomicUsize,
     /// Optimization level the backend compiles at (fixed per server).
     pub opt_level: OptLevel,
     /// Whether bucket compiles run the fixpoint cleanup loop.
@@ -407,6 +430,7 @@ impl Stats {
             shed: AtomicUsize::new(0),
             deadline_dropped: AtomicUsize::new(0),
             panics: AtomicUsize::new(0),
+            padded_rows: AtomicUsize::new(0),
             opt_level,
             fixpoint: false,
             per_worker: (0..workers.max(1)).map(|_| AtomicUsize::new(0)).collect(),
@@ -442,37 +466,67 @@ fn bucket_sizes(cap: usize) -> Vec<usize> {
     out
 }
 
-/// The compiled-relay serving backend: one fallback-MLP module per batch
-/// bucket, all compiled through one shared [`ProgramCache`].
+/// The compiled-relay serving backend. Two dispatch modes:
+///
+/// * **Shape-polymorphic** ([`RelayBackend::new`], the `--poly` default,
+///   §3.3.1): ONE fallback-MLP module typed with a `Dim::Any` batch
+///   dimension, compiled once, serving every batch size 1..=`max_batch`
+///   at its exact size — no padding rows, one [`ProgramCache`] entry.
+/// * **Bucketed** ([`RelayBackend::bucketed`], the `--poly=off`
+///   differential baseline): one fixed-shape module per power-of-two
+///   bucket, each batch padded up to the smallest bucket that fits
+///   (padding counted in [`Stats::padded_rows`] and the registry's
+///   `relay_padded_rows_total`).
 ///
 /// `Send + Sync`: any number of worker threads may call [`run_batch`]
 /// concurrently — compiled programs are `Arc`-backed immutable data, and
-/// the cache coalesces racing misses so each bucket compiles at most once
-/// for the whole fleet ([`Stats::compiles`] counts exactly the calls that
-/// actually compiled).
+/// the cache coalesces racing misses so each artifact compiles at most
+/// once for the whole fleet ([`Stats::compiles`] counts exactly the calls
+/// that actually compiled: 1 polymorphic, bucket-count bucketed).
 ///
 /// [`run_batch`]: RelayBackend::run_batch
 pub struct RelayBackend {
-    buckets: Vec<Bucket>,
+    mode: BackendMode,
     cache: Arc<ProgramCache>,
-    /// Executor + optimization level every bucket compiles with.
+    /// Executor + optimization level every artifact compiles with.
     opts: CompileOptions,
     stats: Arc<Stats>,
 }
 
+enum BackendMode {
+    /// One symbolic-batch artifact; batches up to `max_batch` dispatch at
+    /// exact size.
+    Poly { max_batch: usize, artifact: Bucket },
+    /// Fixed-shape artifacts at powers of two; batches pad up.
+    Buckets(Vec<Bucket>),
+}
+
 struct Bucket {
-    /// Batch size this bucket's module is fixed to.
+    /// Batch size this artifact is fixed to — for the polymorphic
+    /// artifact, the `max_batch` admission cap (its module accepts any
+    /// batch).
     size: usize,
     module: Module,
-    /// Memo of the cache-resolved program: after first use, a batch of
-    /// this shape is pure dispatch — no cache lock, no structural-hash
-    /// lookup, no hit verification.
+    /// Memo of the cache-resolved program: after first use, dispatch is
+    /// pure — no cache lock, no structural-hash lookup, no hit
+    /// verification.
     resolved: std::sync::OnceLock<crate::eval::Compiled>,
 }
 
+impl Bucket {
+    fn at(size: usize, batch: Dim) -> Bucket {
+        Bucket {
+            size,
+            module: fallback_module(batch),
+            resolved: std::sync::OnceLock::new(),
+        }
+    }
+}
+
 impl RelayBackend {
-    /// Build the per-bucket modules and fail fast by compiling the
-    /// smallest bucket, so a backend regression surfaces before serving.
+    /// The shape-polymorphic backend: type the fallback model with a
+    /// symbolic batch (`Dim::Any`), compile it once up front (failing
+    /// fast on backend regressions), serve every batch size with it.
     /// `opts` sets executor *and* optimization level (a bare [`Executor`]
     /// selects the default -O3).
     pub fn new(
@@ -481,41 +535,71 @@ impl RelayBackend {
         cache: Arc<ProgramCache>,
         stats: Arc<Stats>,
     ) -> Result<RelayBackend> {
-        let buckets: Vec<Bucket> = bucket_sizes(max_batch.max(1))
-            .into_iter()
-            .map(|size| Bucket {
-                size,
-                module: fallback_module(size),
-                resolved: std::sync::OnceLock::new(),
-            })
-            .collect();
-        let backend = RelayBackend { buckets, cache, opts: opts.into(), stats };
-        backend.compiled_bucket(0)?;
+        let max_batch = max_batch.max(1);
+        let backend = RelayBackend {
+            mode: BackendMode::Poly {
+                max_batch,
+                artifact: Bucket::at(max_batch, Dim::Any),
+            },
+            cache,
+            opts: opts.into(),
+            stats,
+        };
+        backend.resolve(backend.artifact(0))?;
         Ok(backend)
     }
 
+    /// The bucketed baseline (`--poly=off`): per-bucket fixed-shape
+    /// modules, failing fast by compiling the smallest bucket.
+    pub fn bucketed(
+        max_batch: usize,
+        opts: impl Into<CompileOptions>,
+        cache: Arc<ProgramCache>,
+        stats: Arc<Stats>,
+    ) -> Result<RelayBackend> {
+        let buckets: Vec<Bucket> = bucket_sizes(max_batch.max(1))
+            .into_iter()
+            .map(|size| Bucket::at(size, Dim::Known(size)))
+            .collect();
+        let backend = RelayBackend {
+            mode: BackendMode::Buckets(buckets),
+            cache,
+            opts: opts.into(),
+            stats,
+        };
+        backend.resolve(backend.artifact(0))?;
+        Ok(backend)
+    }
+
+    /// Distinct compiled-shape artifacts: 1 in polymorphic mode, the
+    /// bucket count in bucketed mode.
     pub fn bucket_count(&self) -> usize {
-        self.buckets.len()
+        match &self.mode {
+            BackendMode::Poly { .. } => 1,
+            BackendMode::Buckets(b) => b.len(),
+        }
     }
 
-    /// Resolve one bucket: per-bucket memo first, then the shared cache —
-    /// counting a fleet-wide compile only when this call performed it.
-    /// Two workers racing on a cold bucket both reach the cache, which
-    /// coalesces them into one compile; the memo keeps every later batch
-    /// off the cache lock entirely.
-    fn compiled_bucket(&self, bi: usize) -> Result<crate::eval::Compiled> {
-        self.compiled_bucket_timed(bi).map(|(compiled, _, _)| compiled)
+    /// The `bi`-th artifact (polymorphic mode has exactly one).
+    fn artifact(&self, bi: usize) -> &Bucket {
+        match &self.mode {
+            BackendMode::Poly { artifact, .. } => artifact,
+            BackendMode::Buckets(b) => &b[bi],
+        }
     }
 
-    /// [`compiled_bucket`](Self::compiled_bucket) plus how long resolution
-    /// took and whether it was a hit (memo or cache — a racing worker that
-    /// blocked on someone else's compile reports the wait as a hit, since
-    /// it paid wall time but no compile happened on its behalf twice).
-    fn compiled_bucket_timed(
+    /// Resolve one artifact: per-artifact memo first, then the shared
+    /// cache — counting a fleet-wide compile only when this call performed
+    /// it. Two workers racing on a cold artifact both reach the cache,
+    /// which coalesces them into one compile; the memo keeps every later
+    /// batch off the cache lock entirely. Returns the program, how long
+    /// resolution took, and whether it was a hit (memo or cache — a racing
+    /// worker that blocked on someone else's compile reports the wait as a
+    /// hit, since no compile happened on its behalf twice).
+    fn resolve(
         &self,
-        bi: usize,
+        bucket: &Bucket,
     ) -> Result<(crate::eval::Compiled, Duration, bool)> {
-        let bucket = &self.buckets[bi];
         if let Some(compiled) = bucket.resolved.get() {
             return Ok((compiled.clone(), Duration::ZERO, true));
         }
@@ -534,8 +618,8 @@ impl RelayBackend {
     }
 
     /// Execute one batch of feature rows; returns one prediction per row.
-    /// The batch must fit the largest bucket (`serve`'s workers cap their
-    /// batches at `max_batch`, so this only trips for external callers).
+    /// The batch must fit `max_batch` (`serve`'s workers cap their batches
+    /// there, so this only trips for external callers).
     pub fn run_batch(&self, rows: &[&[f32]]) -> Result<Vec<i64>> {
         self.run_batch_timed(rows).map(|b| b.preds)
     }
@@ -543,21 +627,43 @@ impl RelayBackend {
     /// [`run_batch`](Self::run_batch) with the timing breakdown the
     /// batcher needs for request spans.
     pub fn run_batch_timed(&self, rows: &[&[f32]]) -> Result<BatchRun> {
-        let cap = self.buckets.last().map_or(0, |b| b.size);
-        if rows.len() > cap {
-            return Err(anyhow!(
-                "batch of {} rows exceeds the largest bucket ({cap})",
-                rows.len()
-            ));
-        }
-        let bi = self
-            .buckets
-            .iter()
-            .position(|b| b.size >= rows.len())
-            .unwrap_or(self.buckets.len() - 1);
-        let (compiled, compile, compile_hit) = self.compiled_bucket_timed(bi)?;
-        let bucket = &self.buckets[bi];
-        let x = pad_rows(rows, bucket.size, FALLBACK_FEAT);
+        let (bucket, dispatch_batch) = match &self.mode {
+            BackendMode::Poly { max_batch, artifact } => {
+                if rows.len() > *max_batch {
+                    return Err(anyhow!(
+                        "batch of {} rows exceeds max_batch ({max_batch})",
+                        rows.len()
+                    ));
+                }
+                // Exact-size dispatch: the polymorphic artifact takes the
+                // batch as it arrived. Zero padding, ever.
+                (artifact, rows.len().max(1))
+            }
+            BackendMode::Buckets(buckets) => {
+                let cap = buckets.last().map_or(0, |b| b.size);
+                if rows.len() > cap {
+                    return Err(anyhow!(
+                        "batch of {} rows exceeds the largest bucket ({cap})",
+                        rows.len()
+                    ));
+                }
+                let bi = buckets
+                    .iter()
+                    .position(|b| b.size >= rows.len())
+                    .unwrap_or(buckets.len() - 1);
+                let bucket = &buckets[bi];
+                let padded = bucket.size - rows.len().min(bucket.size);
+                if padded > 0 {
+                    self.stats.padded_rows.fetch_add(padded, Ordering::Relaxed);
+                    crate::telemetry::registry()
+                        .counter(names::PADDED_ROWS_TOTAL)
+                        .add(padded as u64);
+                }
+                (bucket, bucket.size)
+            }
+        };
+        let (compiled, compile, compile_hit) = self.resolve(bucket)?;
+        let x = pad_rows(rows, dispatch_batch, FALLBACK_FEAT);
         let out = run_compiled(&compiled, vec![Value::Tensor(x)])
             .map_err(|e| anyhow!("{e}"))?;
         let preds = crate::tensor::argmax(out.value.tensor(), 1);
@@ -876,6 +982,14 @@ fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
         .map(|s| rng.normal_tensor(&s.shape, 0.1))
         .collect();
     let f: ExecFn = Box::new(move |rows: &[&[f32]]| {
+        // The AOT artifact is genuinely fixed-shape: padding is the cost
+        // of serving it, and it shows up in relay_padded_rows_total.
+        let padded = batch_cap.saturating_sub(rows.len());
+        if padded > 0 {
+            crate::telemetry::registry()
+                .counter(names::PADDED_ROWS_TOTAL)
+                .add(padded as u64);
+        }
         let x = pad_rows(rows, batch_cap, feat);
         let mut inputs = weights.clone();
         inputs.push(x);
@@ -1012,15 +1126,17 @@ pub fn serve_handle(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<ServerHa
     } else {
         // Compiled-relay fleet: one shared backend (one shared program
         // cache), N workers. Backend construction fails fast here, on the
-        // caller's thread, before any socket is bound — and every bucket
+        // caller's thread, before any socket is bound — and every artifact
         // compiles through the optimizing pipeline at cfg.opt_level.
+        // cfg.poly picks shape-polymorphic (one symbolic-batch artifact)
+        // vs the bucketed baseline.
         let cache = Arc::new(ProgramCache::new());
-        let backend = Arc::new(RelayBackend::new(
-            max_batch,
-            CompileOptions::at(cfg.executor, cfg.opt_level).with_fixpoint(cfg.fixpoint),
-            cache,
-            stats.clone(),
-        )?);
+        let opts = CompileOptions::at(cfg.executor, cfg.opt_level).with_fixpoint(cfg.fixpoint);
+        let backend = Arc::new(if cfg.poly {
+            RelayBackend::new(max_batch, opts, cache, stats.clone())?
+        } else {
+            RelayBackend::bucketed(max_batch, opts, cache, stats.clone())?
+        });
         let exec: Arc<dyn Fn(&[&[f32]]) -> Result<BatchRun> + Send + Sync> =
             match &cfg.fault {
                 Some(f) => {
@@ -1428,17 +1544,17 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
     }
 
-    /// The acceptance bar for the unified pipeline: a 4-thread fleet over
-    /// one shared backend/cache compiles each batch bucket exactly once
-    /// for the whole process — **at -O3** — no matter how the threads
-    /// interleave, and the compiled buckets run fused kernels (fewer
-    /// launches than an -O0 compile of the same bucket).
+    /// The acceptance bar for the bucketed baseline (`--poly=off`): a
+    /// 4-thread fleet over one shared backend/cache compiles each batch
+    /// bucket exactly once for the whole process — **at -O3** — no matter
+    /// how the threads interleave, and the compiled buckets run fused
+    /// kernels (fewer launches than an -O0 compile of the same bucket).
     #[test]
     fn four_thread_fleet_compiles_each_bucket_exactly_once() {
         let cache = Arc::new(ProgramCache::new());
         let stats = Arc::new(Stats::new(4, OptLevel::O3));
         let backend = Arc::new(
-            RelayBackend::new(
+            RelayBackend::bucketed(
                 8,
                 CompileOptions::at(Executor::Vm, OptLevel::O3),
                 cache.clone(),
@@ -1483,6 +1599,9 @@ mod tests {
         assert_eq!(stats.compiles.load(Ordering::Relaxed), buckets);
         assert_eq!(cache.misses(), buckets);
         assert_eq!(cache.len(), buckets);
+        // Batches of 3 and 5 padded up to buckets 4 and 8: the baseline's
+        // padding waste is visible (4 threads x 3 rounds x (1 + 3) rows).
+        assert_eq!(stats.padded_rows.load(Ordering::Relaxed), 4 * 3 * 4);
 
         // The -O3 buckets the fleet served are genuinely fused: the same
         // bucket module compiled at -O0 launches more kernels (the
@@ -1490,15 +1609,14 @@ mod tests {
         // fleet's program did on an identical batch.
         let row: Vec<f32> = (0..FALLBACK_FEAT).map(|j| j as f32 * 0.1 - 0.5).collect();
         let rows: Vec<&[f32]> = vec![&row];
-        let x = pad_rows(&rows, backend.buckets[0].size, FALLBACK_FEAT);
-        let o3 = run_compiled(
-            &backend.compiled_bucket(0).expect("o3 bucket"),
-            vec![Value::Tensor(x.clone())],
-        )
-        .expect("o3 run");
+        let x = pad_rows(&rows, backend.artifact(0).size, FALLBACK_FEAT);
+        let (o3_compiled, _, _) =
+            backend.resolve(backend.artifact(0)).expect("o3 bucket");
+        let o3 = run_compiled(&o3_compiled, vec![Value::Tensor(x.clone())])
+            .expect("o3 run");
         let (o0_compiled, _) = cache
             .get_or_compile_traced(
-                &backend.buckets[0].module,
+                &backend.artifact(0).module,
                 CompileOptions::at(Executor::Vm, OptLevel::O0),
             )
             .expect("o0 compile");
@@ -1529,14 +1647,15 @@ mod tests {
         let rows: Vec<&[f32]> = vec![&row];
         let fix_preds = backend.run_batch(&rows).expect("fixpoint batch");
         assert_eq!(fix_preds.len(), 1);
-        // The plain (non-fixpoint) compile of the same bucket is a
+        // The plain (non-fixpoint) compile of the same module is a
         // distinct cache entry: requesting it compiles anew...
         let (plain, compiled_now) = cache
-            .get_or_compile_traced(&backend.buckets[0].module, plain_opts)
+            .get_or_compile_traced(&backend.artifact(0).module, plain_opts)
             .expect("plain compile");
         assert!(compiled_now, "fixpoint and plain artifacts shared one cache entry");
-        // ...and computes the same predictions.
-        let x = pad_rows(&rows, backend.buckets[0].size, FALLBACK_FEAT);
+        // ...and computes the same predictions (the polymorphic module
+        // runs this one-row batch at exact size).
+        let x = pad_rows(&rows, rows.len(), FALLBACK_FEAT);
         let out = run_compiled(&plain, vec![Value::Tensor(x)]).expect("plain run");
         let plain_pred = crate::tensor::argmax(out.value.tensor(), 1).as_i64()[0];
         assert_eq!(fix_preds[0], plain_pred);
@@ -1548,13 +1667,14 @@ mod tests {
 
     #[test]
     fn batches_larger_than_a_bucket_pad_up_and_results_match_batch_one() {
-        // A 3-row batch runs the bucket-4 program; each row's prediction
-        // must equal the prediction the batch-1 program gives that row
-        // alone (padding rows cannot leak into real rows).
+        // Bucketed baseline: a 3-row batch runs the bucket-4 program; each
+        // row's prediction must equal the prediction the batch-1 program
+        // gives that row alone (padding rows cannot leak into real rows).
         let cache = Arc::new(ProgramCache::new());
         let stats = Arc::new(Stats::new(1, OptLevel::O3));
         let backend =
-            RelayBackend::new(4, Executor::Vm, cache, stats).expect("backend");
+            RelayBackend::bucketed(4, Executor::Vm, cache, stats.clone())
+                .expect("backend");
         let rows_data: Vec<Vec<f32>> = (0..3)
             .map(|i| {
                 (0..FALLBACK_FEAT)
@@ -1570,6 +1690,83 @@ mod tests {
             assert_eq!(solo.len(), 1);
             assert_eq!(batched[i], solo[0], "row {i} diverged under padding");
         }
+        // The 3-row batch padded one row up to bucket 4; the solo runs fit
+        // bucket 1 exactly.
+        assert_eq!(stats.padded_rows.load(Ordering::Relaxed), 1);
+    }
+
+    /// The tentpole acceptance test: ONE symbolic-batch artifact serves
+    /// every batch size 1..=max_batch — exactly one compile, one
+    /// program-cache entry, zero padded rows.
+    #[test]
+    fn poly_backend_serves_every_batch_size_with_one_compile() {
+        let cache = Arc::new(ProgramCache::new());
+        let stats = Arc::new(Stats::new(1, OptLevel::O3));
+        let backend = RelayBackend::new(
+            8,
+            CompileOptions::at(Executor::Vm, OptLevel::O3),
+            cache.clone(),
+            stats.clone(),
+        )
+        .expect("poly backend");
+        assert_eq!(backend.bucket_count(), 1);
+        for n in 1..=8usize {
+            let rows_data: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    (0..FALLBACK_FEAT)
+                        .map(|j| ((i * 13 + j * 5) % 9) as f32 - 4.0)
+                        .collect()
+                })
+                .collect();
+            let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+            let preds = backend.run_batch(&rows).expect("poly batch");
+            assert_eq!(preds.len(), n, "one prediction per row at batch {n}");
+        }
+        assert_eq!(stats.compiles.load(Ordering::Relaxed), 1, "one compile for all sizes");
+        assert_eq!(cache.len(), 1, "one program-cache entry for all sizes");
+        assert_eq!(stats.padded_rows.load(Ordering::Relaxed), 0, "poly never pads");
+        // Over-cap batches are refused, not silently truncated.
+        let big_row: Vec<f32> = vec![0.0; FALLBACK_FEAT];
+        let too_many: Vec<&[f32]> = (0..9).map(|_| big_row.as_slice()).collect();
+        assert!(backend.run_batch(&too_many).is_err());
+    }
+
+    /// Differential: the polymorphic artifact is bit-identical to the
+    /// bucketed/padded baseline at every batch size (same argmax bits —
+    /// both run the same fused -O3 kernels, padding rows must not leak).
+    #[test]
+    fn poly_and_bucketed_backends_agree_at_every_batch_size() {
+        let poly = RelayBackend::new(
+            8,
+            CompileOptions::at(Executor::Vm, OptLevel::O3),
+            Arc::new(ProgramCache::new()),
+            Arc::new(Stats::new(1, OptLevel::O3)),
+        )
+        .expect("poly backend");
+        let bucketed_stats = Arc::new(Stats::new(1, OptLevel::O3));
+        let bucketed = RelayBackend::bucketed(
+            8,
+            CompileOptions::at(Executor::Vm, OptLevel::O3),
+            Arc::new(ProgramCache::new()),
+            bucketed_stats.clone(),
+        )
+        .expect("bucketed backend");
+        for n in 1..=8usize {
+            let rows_data: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    (0..FALLBACK_FEAT)
+                        .map(|j| ((n * 3 + i * 7 + j * 2) % 11) as f32 - 5.0)
+                        .collect()
+                })
+                .collect();
+            let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+            let p = poly.run_batch(&rows).expect("poly");
+            let b = bucketed.run_batch(&rows).expect("bucketed");
+            assert_eq!(p, b, "poly and bucketed diverged at batch {n}");
+        }
+        // Sanity that this really was a differential: the baseline padded
+        // (batches 3,5,6,7 round up), the poly path never does.
+        assert!(bucketed_stats.padded_rows.load(Ordering::Relaxed) > 0);
     }
 
     #[test]

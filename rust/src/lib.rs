@@ -27,7 +27,11 @@
 //!   kernels write into uniquely-owned input buffers in place
 //!   (`op::inplace`, counted by `tensor::AllocStats`), and per-worker
 //!   workspaces / frame pools make steady-state serving allocation-free
-//!   outside the kernels.
+//!   outside the kernels. Compilation is *shape-polymorphic* (§3.3.1):
+//!   tensor types admit a symbolic batch dimension (`ir::Dim::Any`), the
+//!   op shape relations propagate it, and the compiled tiers resolve
+//!   concrete shapes from the arriving inputs — one cached artifact per
+//!   (rank, dtype, layout), not per batch size.
 //! * [`tensor`], [`vta`] — substrates: reference kernels and the simulated
 //!   accelerator.
 //! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT
@@ -35,7 +39,10 @@
 //! * [`zoo`] — the evaluation model suite (vision + NLP).
 //! * [`coordinator`] — CLI + batched inference server behind a resilient
 //!   front door: bounded admission, per-request deadlines, load shedding,
-//!   worker supervision (thin L3 driver).
+//!   worker supervision (thin L3 driver). Dispatch is shape-polymorphic
+//!   by default (`--poly`): one symbolic-batch compile serves every
+//!   batch size at its exact size, zero padding; `--poly=off` keeps the
+//!   bucketed fixed-shape path as a differential baseline.
 //! * [`telemetry`] — cross-cutting observability (std-only, below every
 //!   other layer): the process-wide metrics registry (counters, gauges,
 //!   p50/p95/p99 latency histograms, Prometheus-style `/metrics` text),

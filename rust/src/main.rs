@@ -84,6 +84,10 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 })?,
             };
             let fixpoint = args.iter().any(|a| a == "--fixpoint");
+            // Shape-polymorphic serving is the default; `--poly=off` (or
+            // `--poly off`) keeps the bucketed/padded baseline.
+            let poly = !args.iter().any(|a| a == "--poly=off")
+                && flag_value(args, "--poly") != Some("off");
             let cfg_defaults = server::ServerConfig::default();
             let queue_budget: usize = flag_value(args, "--queue-budget")
                 .and_then(|v| v.parse().ok())
@@ -110,16 +114,18 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 queue_budget,
                 default_deadline,
                 trace,
+                poly,
                 ..cfg_defaults
             };
             let stop = Arc::new(AtomicBool::new(false));
             let stats = server::serve(cfg, stop)?;
             println!(
                 "serving mlp_forward on 127.0.0.1:{port} with {} worker(s) \
-                 at {}{} (ctrl-c to stop)",
+                 at {}{}{} (ctrl-c to stop)",
                 stats.per_worker.len(),
                 stats.opt_level,
-                if stats.fixpoint { " (fixpoint)" } else { "" }
+                if stats.fixpoint { " (fixpoint)" } else { "" },
+                if poly { ", shape-polymorphic" } else { ", bucketed" }
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(10));

@@ -191,6 +191,25 @@ pub fn as_tensor(t: &Type) -> Result<Option<(&[Dim], crate::tensor::DType)>, Str
     }
 }
 
+/// Join two dims for a type relation: equal knowns agree, `Any` adopts
+/// the other side (stays `Any` against `Any`), unequal knowns are a type
+/// error. `Var` never reaches here — [`as_tensor`] defers on it first.
+pub fn join_dim(a: Dim, b: Dim, ctx: &str) -> Result<Dim, String> {
+    match (a, b) {
+        (Dim::Known(x), Dim::Known(y)) => {
+            if x == y {
+                Ok(Dim::Known(x))
+            } else {
+                Err(format!("{ctx}: {x} vs {y}"))
+            }
+        }
+        (Dim::Any, d) | (d, Dim::Any) => Ok(d),
+        (Dim::Var(_), _) | (_, Dim::Var(_)) => {
+            Err(format!("{ctx}: unexpected unsolved dim var"))
+        }
+    }
+}
+
 /// Concrete dims or defer/error.
 pub fn known_dims(t: &Type) -> Result<Option<Vec<usize>>, String> {
     match as_tensor(t)? {

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{def, identity_rel, known_dims, set_grad, OpDef, OpPattern, RelResult};
+use super::{as_tensor, def, identity_rel, join_dim, set_grad, OpDef, OpPattern, RelResult};
 use crate::eval::value::Value;
 use crate::ir::types::Dim;
 use crate::ir::{self, Attrs, Type};
@@ -34,70 +34,88 @@ pub(crate) fn conv2d_params(attrs: &Attrs) -> Conv2dParams {
     Conv2dParams { stride, padding, groups }
 }
 
-fn dense_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
-    // x: (m, k), w: (n, k) -> (m, n)
-    let (x, w) = (known_dims(&types[0])?, known_dims(&types[1])?);
-    match (x, w) {
-        (Some(x), Some(w)) => {
-            if x.len() != 2 || w.len() != 2 {
-                return Err(format!("dense expects 2-d inputs, got {x:?} {w:?}"));
-            }
-            if x[1] != w[1] {
-                return Err(format!("dense inner dims {} vs {}", x[1], w[1]));
-            }
-            Ok(Some(Type::Tensor {
-                shape: vec![Dim::Known(x[0]), Dim::Known(w[0])],
-                dtype: types[0].dtype().unwrap(),
-            }))
-        }
-        _ => Ok(None),
+/// Require a known dim (for sizes the relation must compute with, e.g.
+/// conv spatial extents); defer on `Any` — only the batch axis may stay
+/// symbolic through these relations.
+fn need_known(d: Dim, ctx: &str) -> Result<Option<usize>, String> {
+    match d {
+        Dim::Known(k) => Ok(Some(k)),
+        Dim::Any => Ok(None),
+        Dim::Var(_) => Err(format!("{ctx}: unexpected unsolved dim var")),
     }
+}
+
+fn dense_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
+    // x: (m, k), w: (n, k) -> (m, n); m may be `Any` (batch-polymorphic).
+    let (x, w) = match (as_tensor(&types[0])?, as_tensor(&types[1])?) {
+        (Some((x, _)), Some((w, _))) => (x, w),
+        _ => return Ok(None),
+    };
+    if x.len() != 2 || w.len() != 2 {
+        return Err(format!("dense expects 2-d inputs, got {x:?} {w:?}"));
+    }
+    join_dim(x[1], w[1], "dense inner dims")?;
+    Ok(Some(Type::Tensor {
+        shape: vec![x[0], w[0]],
+        dtype: types[0].dtype().unwrap(),
+    }))
 }
 
 fn matmul_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
-    let (x, y) = (known_dims(&types[0])?, known_dims(&types[1])?);
-    match (x, y) {
-        (Some(x), Some(y)) => {
-            if x.len() != 2 || y.len() != 2 {
-                return Err("matmul expects 2-d inputs".to_string());
-            }
-            if x[1] != y[0] {
-                return Err(format!("matmul inner dims {} vs {}", x[1], y[0]));
-            }
-            Ok(Some(Type::Tensor {
-                shape: vec![Dim::Known(x[0]), Dim::Known(y[1])],
-                dtype: types[0].dtype().unwrap(),
-            }))
-        }
-        _ => Ok(None),
+    let (x, y) = match (as_tensor(&types[0])?, as_tensor(&types[1])?) {
+        (Some((x, _)), Some((y, _))) => (x, y),
+        _ => return Ok(None),
+    };
+    if x.len() != 2 || y.len() != 2 {
+        return Err("matmul expects 2-d inputs".to_string());
     }
+    join_dim(x[1], y[0], "matmul inner dims")?;
+    Ok(Some(Type::Tensor {
+        shape: vec![x[0], y[1]],
+        dtype: types[0].dtype().unwrap(),
+    }))
 }
 
-pub(crate) fn conv2d_rel_impl(types: &[Type], attrs: &Attrs) -> Result<Option<Vec<usize>>, String> {
-    let (x, w) = (known_dims(&types[0])?, known_dims(&types[1])?);
-    match (x, w) {
-        (Some(x), Some(w)) => {
-            if x.len() != 4 || w.len() != 4 {
-                return Err("conv2d expects 4-d input and weight".to_string());
-            }
-            let p = conv2d_params(attrs);
-            if x[1] != w[1] * p.groups {
-                return Err(format!(
-                    "conv2d channel mismatch: input {} vs weight {}x{}",
-                    x[1], w[1], p.groups
-                ));
-            }
-            let (oh, ow) = tensor::conv2d_out_hw(x[2], x[3], w[2], w[3], &p);
-            Ok(Some(vec![x[0], w[0], oh, ow]))
-        }
-        _ => Ok(None),
+pub(crate) fn conv2d_rel_impl(types: &[Type], attrs: &Attrs) -> Result<Option<Vec<Dim>>, String> {
+    let (x, w) = match (as_tensor(&types[0])?, as_tensor(&types[1])?) {
+        (Some((x, _)), Some((w, _))) => (x, w),
+        _ => return Ok(None),
+    };
+    if x.len() != 4 || w.len() != 4 {
+        return Err("conv2d expects 4-d input and weight".to_string());
     }
+    let p = conv2d_params(attrs);
+    // Channels and spatial extents must be concrete — only the batch
+    // axis x[0] may stay `Any` and is carried through symbolically.
+    let dims = [
+        need_known(x[1], "conv2d input channels")?,
+        need_known(x[2], "conv2d input height")?,
+        need_known(x[3], "conv2d input width")?,
+        need_known(w[0], "conv2d out channels")?,
+        need_known(w[1], "conv2d weight channels")?,
+        need_known(w[2], "conv2d kernel height")?,
+        need_known(w[3], "conv2d kernel width")?,
+    ];
+    let [ci, ih, iw, co, wc, kh, kw] = match dims {
+        [Some(a), Some(b), Some(c), Some(d), Some(e), Some(f), Some(g)] => {
+            [a, b, c, d, e, f, g]
+        }
+        _ => return Ok(None),
+    };
+    if ci != wc * p.groups {
+        return Err(format!(
+            "conv2d channel mismatch: input {ci} vs weight {wc}x{}",
+            p.groups
+        ));
+    }
+    let (oh, ow) = tensor::conv2d_out_hw(ih, iw, kh, kw, &p);
+    Ok(Some(vec![x[0], Dim::Known(co), Dim::Known(oh), Dim::Known(ow)]))
 }
 
 fn conv2d_rel(types: &[Type], attrs: &Attrs) -> RelResult {
     match conv2d_rel_impl(types, attrs)? {
-        Some(s) => Ok(Some(Type::Tensor {
-            shape: s.into_iter().map(Dim::Known).collect(),
+        Some(shape) => Ok(Some(Type::Tensor {
+            shape,
             dtype: types[0].dtype().unwrap(),
         })),
         None => Ok(None),
@@ -105,23 +123,29 @@ fn conv2d_rel(types: &[Type], attrs: &Attrs) -> RelResult {
 }
 
 fn pool_rel(types: &[Type], attrs: &Attrs) -> RelResult {
-    match known_dims(&types[0])? {
-        Some(x) => {
-            if x.len() != 4 {
-                return Err("pool2d expects 4-d input".to_string());
-            }
-            let k = attrs.get("pool_size").map(|v| v.as_int() as usize).unwrap_or(2);
-            let s = attrs.get("strides").map(|v| v.as_int() as usize).unwrap_or(k);
-            let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
-            let oh = (x[2] + 2 * p - k) / s + 1;
-            let ow = (x[3] + 2 * p - k) / s + 1;
-            Ok(Some(Type::Tensor {
-                shape: vec![Dim::Known(x[0]), Dim::Known(x[1]), Dim::Known(oh), Dim::Known(ow)],
-                dtype: types[0].dtype().unwrap(),
-            }))
-        }
-        None => Ok(None),
+    let x = match as_tensor(&types[0])? {
+        Some((x, _)) => x,
+        None => return Ok(None),
+    };
+    if x.len() != 4 {
+        return Err("pool2d expects 4-d input".to_string());
     }
+    let (ih, iw) = match (
+        need_known(x[2], "pool2d input height")?,
+        need_known(x[3], "pool2d input width")?,
+    ) {
+        (Some(h), Some(w)) => (h, w),
+        _ => return Ok(None),
+    };
+    let k = attrs.get("pool_size").map(|v| v.as_int() as usize).unwrap_or(2);
+    let s = attrs.get("strides").map(|v| v.as_int() as usize).unwrap_or(k);
+    let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+    let oh = (ih + 2 * p - k) / s + 1;
+    let ow = (iw + 2 * p - k) / s + 1;
+    Ok(Some(Type::Tensor {
+        shape: vec![x[0], x[1], Dim::Known(oh), Dim::Known(ow)],
+        dtype: types[0].dtype().unwrap(),
+    }))
 }
 
 pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
@@ -307,68 +331,89 @@ pub(super) fn register(m: &mut BTreeMap<&'static str, OpDef>) {
 }
 
 fn batch_matmul_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
-    match (known_dims(&types[0])?, known_dims(&types[1])?) {
-        (Some(x), Some(y)) => {
-            if x.len() != 3 || y.len() != 3 || x[0] != y[0] || x[2] != y[1] {
-                return Err(format!("batch_matmul shapes {x:?} {y:?}"));
-            }
-            Ok(Some(Type::Tensor {
-                shape: vec![Dim::Known(x[0]), Dim::Known(x[1]), Dim::Known(y[2])],
-                dtype: types[0].dtype().unwrap(),
-            }))
-        }
-        _ => Ok(None),
+    let (x, y) = match (as_tensor(&types[0])?, as_tensor(&types[1])?) {
+        (Some((x, _)), Some((y, _))) => (x, y),
+        _ => return Ok(None),
+    };
+    if x.len() != 3 || y.len() != 3 {
+        return Err(format!("batch_matmul shapes {x:?} {y:?}"));
     }
+    let b = join_dim(x[0], y[0], "batch_matmul batch dims")?;
+    join_dim(x[2], y[1], "batch_matmul inner dims")?;
+    Ok(Some(Type::Tensor {
+        shape: vec![b, x[1], y[2]],
+        dtype: types[0].dtype().unwrap(),
+    }))
 }
 
 fn bias_add_rel(types: &[Type], attrs: &Attrs) -> RelResult {
-    match (known_dims(&types[0])?, known_dims(&types[1])?) {
-        (Some(x), Some(b)) => {
-            let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
-            let ax = crate::tensor::shape::norm_axis(axis, x.len());
-            if b.len() != 1 || x.get(ax) != Some(&b[0]) {
-                return Err(format!("bias_add: bias {b:?} vs input {x:?} axis {axis}"));
-            }
-            Ok(Some(types[0].clone()))
-        }
-        _ => Ok(None),
+    let (x, b) = match (as_tensor(&types[0])?, as_tensor(&types[1])?) {
+        (Some((x, _)), Some((b, _))) => (x, b),
+        _ => return Ok(None),
+    };
+    let axis = attrs.get("axis").map(|v| v.as_int()).unwrap_or(1);
+    let ax = crate::tensor::shape::norm_axis(axis, x.len());
+    if b.len() != 1 || ax >= x.len() {
+        return Err(format!("bias_add: bias {b:?} vs input {x:?} axis {axis}"));
     }
+    join_dim(x[ax], b[0], "bias_add channel dim")?;
+    Ok(Some(types[0].clone()))
 }
 
 fn conv2d_transpose_rel(types: &[Type], attrs: &Attrs) -> RelResult {
-    match (known_dims(&types[0])?, known_dims(&types[1])?) {
-        (Some(x), Some(w)) => {
-            let s = attrs.get("strides").map(|v| v.as_int_vec()[0] as usize).unwrap_or(1);
-            let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
-            let oh = (x[2] - 1) * s + w[2] - 2 * p;
-            let ow = (x[3] - 1) * s + w[3] - 2 * p;
-            Ok(Some(Type::Tensor {
-                shape: vec![Dim::Known(x[0]), Dim::Known(w[1]), Dim::Known(oh), Dim::Known(ow)],
-                dtype: types[0].dtype().unwrap(),
-            }))
-        }
-        _ => Ok(None),
+    let (x, w) = match (as_tensor(&types[0])?, as_tensor(&types[1])?) {
+        (Some((x, _)), Some((w, _))) => (x, w),
+        _ => return Ok(None),
+    };
+    if x.len() != 4 || w.len() != 4 {
+        return Err("conv2d_transpose expects 4-d input and weight".to_string());
     }
+    let dims = [
+        need_known(x[2], "conv2d_transpose input height")?,
+        need_known(x[3], "conv2d_transpose input width")?,
+        need_known(w[2], "conv2d_transpose kernel height")?,
+        need_known(w[3], "conv2d_transpose kernel width")?,
+    ];
+    let [ih, iw, kh, kw] = match dims {
+        [Some(a), Some(b), Some(c), Some(d)] => [a, b, c, d],
+        _ => return Ok(None),
+    };
+    let s = attrs.get("strides").map(|v| v.as_int_vec()[0] as usize).unwrap_or(1);
+    let p = attrs.get("padding").map(|v| v.as_int() as usize).unwrap_or(0);
+    let oh = (ih - 1) * s + kh - 2 * p;
+    let ow = (iw - 1) * s + kw - 2 * p;
+    Ok(Some(Type::Tensor {
+        shape: vec![x[0], w[1], Dim::Known(oh), Dim::Known(ow)],
+        dtype: types[0].dtype().unwrap(),
+    }))
 }
 
 fn global_pool_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
-    match known_dims(&types[0])? {
-        Some(x) => Ok(Some(Type::Tensor {
-            shape: vec![Dim::Known(x[0]), Dim::Known(x[1]), Dim::Known(1), Dim::Known(1)],
-            dtype: types[0].dtype().unwrap(),
+    match as_tensor(&types[0])? {
+        Some((x, dtype)) => Ok(Some(Type::Tensor {
+            shape: vec![x[0], x[1], Dim::Known(1), Dim::Known(1)],
+            dtype,
         })),
         None => Ok(None),
     }
 }
 
 fn batch_flatten_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
-    match known_dims(&types[0])? {
-        Some(x) => Ok(Some(Type::Tensor {
-            shape: vec![Dim::Known(x[0]), Dim::Known(x[1..].iter().product())],
-            dtype: types[0].dtype().unwrap(),
-        })),
-        None => Ok(None),
+    let x = match as_tensor(&types[0])? {
+        Some((x, _)) => x,
+        None => return Ok(None),
+    };
+    let mut inner = 1usize;
+    for d in &x[1..] {
+        match need_known(*d, "batch_flatten inner dims")? {
+            Some(k) => inner *= k,
+            None => return Ok(None),
+        }
     }
+    Ok(Some(Type::Tensor {
+        shape: vec![x[0], Dim::Known(inner)],
+        dtype: types[0].dtype().unwrap(),
+    }))
 }
 
 fn batch_norm_rel(types: &[Type], _attrs: &Attrs) -> RelResult {
@@ -412,6 +457,66 @@ mod tests {
         ]);
         let out = (op.rel)(&[x, w], &attrs).unwrap().unwrap();
         assert_eq!(out.concrete_shape(), Some(vec![1, 16, 8, 8]));
+    }
+
+    #[test]
+    fn dense_rel_carries_any_batch() {
+        let op = lookup("nn.dense").unwrap();
+        let x = Type::Tensor { shape: vec![Dim::Any, Dim::Known(8)], dtype: DType::F32 };
+        let w = Type::tensor(vec![16, 8], DType::F32);
+        let out = (op.rel)(&[x, w], &Attrs::new()).unwrap().unwrap();
+        match out {
+            Type::Tensor { shape, .. } => {
+                assert_eq!(shape, vec![Dim::Any, Dim::Known(16)]);
+            }
+            other => panic!("expected tensor type, got {other}"),
+        }
+    }
+
+    #[test]
+    fn dense_rel_rejects_mismatch_under_any_batch() {
+        let op = lookup("nn.dense").unwrap();
+        let x = Type::Tensor { shape: vec![Dim::Any, Dim::Known(8)], dtype: DType::F32 };
+        let w = Type::tensor(vec![16, 9], DType::F32);
+        assert!((op.rel)(&[x, w], &Attrs::new()).is_err());
+    }
+
+    #[test]
+    fn conv2d_rel_carries_any_batch() {
+        let op = lookup("nn.conv2d").unwrap();
+        let x = Type::Tensor {
+            shape: vec![Dim::Any, Dim::Known(3), Dim::Known(8), Dim::Known(8)],
+            dtype: DType::F32,
+        };
+        let w = Type::tensor(vec![16, 3, 3, 3], DType::F32);
+        let attrs = ir::attrs(&[
+            ("strides", ir::AttrValue::IntVec(vec![1, 1])),
+            ("padding", ir::AttrValue::Int(1)),
+        ]);
+        let out = (op.rel)(&[x, w], &attrs).unwrap().unwrap();
+        match out {
+            Type::Tensor { shape, .. } => assert_eq!(
+                shape,
+                vec![Dim::Any, Dim::Known(16), Dim::Known(8), Dim::Known(8)]
+            ),
+            other => panic!("expected tensor type, got {other}"),
+        }
+    }
+
+    #[test]
+    fn batch_flatten_rel_carries_any_batch() {
+        let op = lookup("nn.batch_flatten").unwrap();
+        let x = Type::Tensor {
+            shape: vec![Dim::Any, Dim::Known(4), Dim::Known(2), Dim::Known(2)],
+            dtype: DType::F32,
+        };
+        let out = (op.rel)(&[x], &Attrs::new()).unwrap().unwrap();
+        match out {
+            Type::Tensor { shape, .. } => {
+                assert_eq!(shape, vec![Dim::Any, Dim::Known(16)]);
+            }
+            other => panic!("expected tensor type, got {other}"),
+        }
     }
 
     #[test]

@@ -175,10 +175,7 @@ fn qdense_rel(types: &[Type], attrs: &Attrs) -> RelResult {
 
 fn qconv_rel(types: &[Type], attrs: &Attrs) -> RelResult {
     match conv2d_rel_impl(types, attrs)? {
-        Some(s) => Ok(Some(Type::Tensor {
-            shape: s.into_iter().map(Dim::Known).collect(),
-            dtype: acc_dtype(attrs),
-        })),
+        Some(shape) => Ok(Some(Type::Tensor { shape, dtype: acc_dtype(attrs) })),
         None => Ok(None),
     }
 }

@@ -108,17 +108,26 @@ pub fn run(m: &Module) -> Result<Module, String> {
 }
 
 /// [`run`], also reporting whether the pass *degraded* to identity because
-/// the module failed type checking. The pass manager records the flag on
-/// its [`crate::pass::PassRecord`] so `relay dump-passes` prints the skip
-/// — an untypeable module is either an unsupported construct (fine) or a
-/// genuine type error this pass would otherwise mask.
+/// the checker could not finish on the module. The pass manager records
+/// the flag on its [`crate::pass::PassRecord`] so `relay dump-passes`
+/// prints the skip. The checker's error taxonomy decides the outcome:
+/// [`TypeErrorKind::Unsupported`](crate::ty::TypeErrorKind) (e.g.
+/// under-constrained inference over an unannotated recursive model) means
+/// "no shape info — keep the direct conv kernels", while an `IllTyped`
+/// verdict is a genuine bug in the program that degrading would mask, so
+/// it fails the pipeline instead.
 pub fn run_traced(m: &Module) -> Result<(Module, bool), String> {
     let mut cur = m.clone();
     for _ in 0..64 {
         let report = match crate::ty::check_module(&cur) {
             Ok(r) => r,
-            // Untypeable: roll back to the input module and flag the skip.
-            Err(_) => return Ok((m.clone(), true)),
+            // Checker gave up (not a verdict): roll back to the input
+            // module and flag the skip.
+            Err(e) if e.kind() == crate::ty::TypeErrorKind::Unsupported => {
+                return Ok((m.clone(), true))
+            }
+            // Provably ill-typed: surface it, don't silently degrade.
+            Err(e) => return Err(e.to_string()),
         };
         let next = cur.map_defs(|_, f| {
             let mut nf = f.clone();
@@ -198,6 +207,44 @@ mod tests {
         let report = crate::ty::infer_expr(&m, &e).unwrap().0;
         let after = eval_expr(&m, &alter_op_layout(&e, &report)).unwrap();
         assert!(before.tensor().allclose(after.tensor(), 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn underconstrained_module_degrades_to_identity() {
+        // No annotations anywhere: inference is under-constrained, the
+        // checker reports Unsupported, and the pass skips (degraded=true).
+        let m = ir::parse_module("def @main(%x) { nn.dense(%x, %x) }").unwrap();
+        let (out, degraded) = run_traced(&m).unwrap();
+        assert!(degraded);
+        assert!(print_expr(&out.def("main").unwrap().body).contains("nn.dense"));
+    }
+
+    #[test]
+    fn ill_typed_module_fails_instead_of_degrading() {
+        // A provable shape mismatch must surface as an error, not be
+        // masked by the degrade path.
+        let m = ir::parse_module(
+            "def @main(%x: Tensor[(4, 8), float32], %w: Tensor[(16, 9), float32]) {\n\
+               nn.dense(%x, %w) }",
+        )
+        .unwrap();
+        let err = run_traced(&m).unwrap_err();
+        assert!(err.contains("dense"), "{err}");
+    }
+
+    #[test]
+    fn any_batch_conv_keeps_direct_kernel() {
+        // Batch-polymorphic conv: the type checks fine, but conv-as-GEMM
+        // needs a concrete batch to size its reshape, so the rewrite is
+        // skipped (not degraded — the rest of the module still optimizes).
+        let m = ir::parse_module(
+            "def @main(%x: Tensor[(?, 3, 8, 8), float32], %w: Tensor[(4, 3, 3, 3), float32]) {\n\
+               nn.conv2d(%x, %w, padding=1) }",
+        )
+        .unwrap();
+        let (out, degraded) = run_traced(&m).unwrap();
+        assert!(!degraded);
+        assert!(print_expr(&out.def("main").unwrap().body).contains("nn.conv2d"));
     }
 
     #[test]

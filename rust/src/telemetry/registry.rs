@@ -23,6 +23,11 @@ pub mod names {
     pub const REQUESTS_TOTAL: &str = "relay_requests_total";
     pub const BATCHES_TOTAL: &str = "relay_batches_total";
     pub const COMPILES_TOTAL: &str = "relay_compiles_total";
+    /// Zero-filled rows dispatched to round a batch up to a compiled
+    /// fixed shape. The shape-polymorphic serving path (`--poly`) never
+    /// pads, so this stays 0 there; the bucketed baseline and the
+    /// fixed-shape PJRT artifact path count their padding waste here.
+    pub const PADDED_ROWS_TOTAL: &str = "relay_padded_rows_total";
     pub const INPLACE_HITS_TOTAL: &str = "relay_inplace_hits_total";
     pub const INPLACE_MISSES_TOTAL: &str = "relay_inplace_misses_total";
     pub const QUEUE_DEPTH: &str = "relay_queue_depth";

@@ -24,12 +24,51 @@ use crate::ir::{Attrs, Expr, Function, Module, Pattern, Type, E};
 use crate::op;
 use unify::Unifier;
 
+/// Why checking failed. The distinction matters to callers that degrade
+/// gracefully (e.g. `pass::alter_op_layout`): an [`Unsupported`] program
+/// may still be perfectly runnable — this checker just cannot finish on
+/// it (under-constrained inference over an unannotated recursive model,
+/// projection through an unresolved tuple) — whereas [`IllTyped`] is a
+/// definitive verdict that the tensor program itself is wrong (shape or
+/// dtype mismatch, bad arity, unification clash) and must not be masked.
+///
+/// [`Unsupported`]: TypeErrorKind::Unsupported
+/// [`IllTyped`]: TypeErrorKind::IllTyped
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TypeErrorKind {
+    /// The checker cannot decide this construct; the program may be fine.
+    Unsupported,
+    /// The tensor program is provably wrong.
+    IllTyped,
+}
+
 #[derive(Debug)]
-pub struct TypeError(pub String);
+pub struct TypeError {
+    kind: TypeErrorKind,
+    msg: String,
+}
+
+impl TypeError {
+    pub fn ill_typed(msg: impl Into<String>) -> Self {
+        TypeError { kind: TypeErrorKind::IllTyped, msg: msg.into() }
+    }
+
+    pub fn unsupported(msg: impl Into<String>) -> Self {
+        TypeError { kind: TypeErrorKind::Unsupported, msg: msg.into() }
+    }
+
+    pub fn kind(&self) -> TypeErrorKind {
+        self.kind
+    }
+
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
 
 impl std::fmt::Display for TypeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "type error: {}", self.0)
+        write!(f, "type error: {}", self.msg)
     }
 }
 
@@ -88,7 +127,7 @@ impl<'m> InferCtx<'m> {
     fn unify(&mut self, a: &Type, b: &Type, site: &str) -> Result<()> {
         self.uni
             .unify(a, b)
-            .map_err(|e| TypeError(format!("{site}: {e}")))
+            .map_err(|e| TypeError::ill_typed(format!("{site}: {e}")))
     }
 
     fn record(&mut self, e: &E, t: Type) -> Type {
@@ -118,12 +157,12 @@ impl<'m> InferCtx<'m> {
                 .env
                 .get(&v.id)
                 .cloned()
-                .ok_or_else(|| TypeError(format!("unbound variable {v}")))?,
+                .ok_or_else(|| TypeError::ill_typed(format!("unbound variable {v}")))?,
             Expr::Global(g) => self
                 .def_types
                 .get(g)
                 .cloned()
-                .ok_or_else(|| TypeError(format!("unknown global @{g}")))?,
+                .ok_or_else(|| TypeError::ill_typed(format!("unknown global @{g}")))?,
             Expr::Const(t) => Type::Tensor {
                 shape: t.shape().iter().map(|&d| crate::ir::Dim::Known(d)).collect(),
                 dtype: t.dtype(),
@@ -132,14 +171,14 @@ impl<'m> InferCtx<'m> {
                 // Operator references used first-class get an opaque type
                 // variable; direct calls go through relations instead.
                 let _ = op::lookup(name)
-                    .ok_or_else(|| TypeError(format!("unknown operator {name}")))?;
+                    .ok_or_else(|| TypeError::ill_typed(format!("unknown operator {name}")))?;
                 self.fresh()
             }
             Expr::Ctor(name) => {
                 let (adt, fields) = self
                     .module
                     .ctor_info(name)
-                    .ok_or_else(|| TypeError(format!("unknown constructor {name}")))?
+                    .ok_or_else(|| TypeError::ill_typed(format!("unknown constructor {name}")))?
                     .clone();
                 let (inst_fields, inst_ty) = self.instantiate_adt(&adt, &fields);
                 if inst_fields.is_empty() {
@@ -158,14 +197,14 @@ impl<'m> InferCtx<'m> {
                     Type::Tuple(ts) => ts
                         .get(*i)
                         .cloned()
-                        .ok_or_else(|| TypeError(format!("projection .{i} out of range")))?,
+                        .ok_or_else(|| TypeError::ill_typed(format!("projection .{i} out of range")))?,
                     Type::Var(_) => {
-                        return Err(TypeError(
-                            "cannot project from unresolved tuple type (annotate)".into(),
+                        return Err(TypeError::unsupported(
+                            "cannot project from unresolved tuple type (annotate)",
                         ))
                     }
                     other => {
-                        return Err(TypeError(format!("projection from non-tuple {other}")))
+                        return Err(TypeError::ill_typed(format!("projection from non-tuple {other}")))
                     }
                 }
             }
@@ -207,7 +246,7 @@ impl<'m> InferCtx<'m> {
                         None => out = Some(at),
                     }
                 }
-                out.ok_or_else(|| TypeError("empty match".into()))?
+                out.ok_or_else(|| TypeError::ill_typed("empty match"))?
             }
             Expr::Grad(f) => {
                 // Type-Gradient: fn(T...) -> O  =>  fn(T...) -> (O, (T...)).
@@ -217,7 +256,7 @@ impl<'m> InferCtx<'m> {
                         params: params.clone(),
                         ret: Box::new(Type::Tuple(vec![*ret, Type::Tuple(params)])),
                     },
-                    other => return Err(TypeError(format!("grad of non-function {other}"))),
+                    other => return Err(TypeError::ill_typed(format!("grad of non-function {other}"))),
                 }
             }
             Expr::RefNew(v) => Type::Ref(Box::new(self.infer(v)?)),
@@ -242,10 +281,10 @@ impl<'m> InferCtx<'m> {
         match &**f {
             Expr::Op(name) => {
                 let def = op::lookup(name)
-                    .ok_or_else(|| TypeError(format!("unknown operator {name}")))?;
+                    .ok_or_else(|| TypeError::ill_typed(format!("unknown operator {name}")))?;
                 if let Some(ar) = def.arity {
                     if args.len() != ar {
-                        return Err(TypeError(format!(
+                        return Err(TypeError::ill_typed(format!(
                             "operator {name} expects {ar} args, got {}",
                             args.len()
                         )));
@@ -268,11 +307,11 @@ impl<'m> InferCtx<'m> {
                 let (adt, fields) = self
                     .module
                     .ctor_info(name)
-                    .ok_or_else(|| TypeError(format!("unknown constructor {name}")))?
+                    .ok_or_else(|| TypeError::ill_typed(format!("unknown constructor {name}")))?
                     .clone();
                 let (inst_fields, inst_ty) = self.instantiate_adt(&adt, &fields);
                 if inst_fields.len() != args.len() {
-                    return Err(TypeError(format!(
+                    return Err(TypeError::ill_typed(format!(
                         "constructor {name} expects {} fields, got {}",
                         inst_fields.len(),
                         args.len()
@@ -326,13 +365,13 @@ impl<'m> InferCtx<'m> {
                 let (adt, fields) = self
                     .module
                     .ctor_info(name)
-                    .ok_or_else(|| TypeError(format!("unknown constructor {name}")))?
+                    .ok_or_else(|| TypeError::ill_typed(format!("unknown constructor {name}")))?
                     .clone();
                 let (inst_fields, inst_ty) = self.instantiate_adt(&adt, &fields);
                 self.unify(scrut_ty, &inst_ty, &format!("pattern {name}"))?;
                 if !ps.is_empty() {
                     if ps.len() != inst_fields.len() {
-                        return Err(TypeError(format!(
+                        return Err(TypeError::ill_typed(format!(
                             "pattern {name}: {} subpatterns for {} fields",
                             ps.len(),
                             inst_fields.len()
@@ -361,13 +400,13 @@ impl<'m> InferCtx<'m> {
                 match (rel.op.rel)(&arg_tys, &rel.attrs) {
                     Ok(Some(out_ty)) => {
                         self.uni.unify(&rel.out, &out_ty).map_err(|e| {
-                            TypeError(format!("at call of {}: {e}", rel.site))
+                            TypeError::ill_typed(format!("at call of {}: {e}", rel.site))
                         })?;
                         progress = true;
                     }
                     Ok(None) => next.push(rel),
                     Err(e) => {
-                        return Err(TypeError(format!("at call of {}: {e}", rel.site)))
+                        return Err(TypeError::ill_typed(format!("at call of {}: {e}", rel.site)))
                     }
                 }
             }
@@ -376,7 +415,7 @@ impl<'m> InferCtx<'m> {
             }
             if !progress {
                 let names: Vec<&str> = next.iter().map(|r| r.site.as_str()).collect();
-                return Err(TypeError(format!(
+                return Err(TypeError::unsupported(format!(
                     "type inference under-constrained; unsolved relations: {names:?}"
                 )));
             }
@@ -466,13 +505,17 @@ mod tests {
         infer_expr(&m, &e).unwrap().1
     }
 
-    fn ty_err(src: &str) -> String {
+    fn ty_err_full(src: &str) -> TypeError {
         let m = Module::with_prelude();
         let e = parse_expr(src).unwrap();
         match infer_expr(&m, &e) {
-            Err(TypeError(msg)) => msg,
+            Err(e) => e,
             Ok((_, t)) => panic!("expected type error, got {t}"),
         }
+    }
+
+    fn ty_err(src: &str) -> String {
+        ty_err_full(src).message().to_string()
     }
 
     #[test]
@@ -634,5 +677,46 @@ mod tests {
     fn underconstrained_fails() {
         let msg = ty_err("fn (%x) { nn.dense(%x, %x) }");
         assert!(msg.contains("under-constrained") || msg.contains("unsolved"), "{msg}");
+    }
+
+    #[test]
+    fn error_kinds_distinguish_unsupported_from_ill_typed() {
+        // Under-constrained inference: the checker gives up, but the
+        // program might be fine — Unsupported.
+        let e = ty_err_full("fn (%x) { nn.dense(%x, %x) }");
+        assert_eq!(e.kind(), TypeErrorKind::Unsupported, "{e}");
+        // Shape mismatch: a definitive verdict — IllTyped.
+        let e = ty_err_full(
+            "fn (%x: Tensor[(4, 8), float32], %w: Tensor[(16, 9), float32]) { nn.dense(%x, %w) }",
+        );
+        assert_eq!(e.kind(), TypeErrorKind::IllTyped, "{e}");
+        // Non-bool if guard: IllTyped too.
+        let e = ty_err_full("if (1f) { 2f } else { 3f }");
+        assert_eq!(e.kind(), TypeErrorKind::IllTyped, "{e}");
+    }
+
+    #[test]
+    fn batch_polymorphic_function_checks_with_any_batch() {
+        // The paper's §3.3.1 `Any` dimension: one function typed over every
+        // batch size. The dense relation carries `?` through; the mismatch
+        // in the weight's inner dim is still caught (see the kinds test).
+        let t = ty_of(
+            "fn (%x: Tensor[(?, 8), float32], %w: Tensor[(16, 8), float32]) {\n\
+               let %h = nn.dense(%x, %w);\n\
+               nn.relu(%h)\n\
+             }",
+        );
+        match t {
+            Type::Func { ret, .. } => match &*ret {
+                Type::Tensor { shape, .. } => {
+                    assert_eq!(
+                        shape,
+                        &vec![crate::ir::Dim::Any, crate::ir::Dim::Known(16)]
+                    );
+                }
+                other => panic!("{other}"),
+            },
+            other => panic!("{other}"),
+        }
     }
 }

@@ -600,9 +600,38 @@ impl<'p> Vm<'p> {
     /// reading step, temps at their last read), so intermediate values
     /// inside a fused chain stay uniquely owned and the elementwise steps
     /// run in place ([`crate::op::inplace`]) instead of allocating.
-    fn run_packed(&self, p: &PackedFunc, mut args: Vec<Value>) -> Result<Value, String> {
-        let mut temps: Vec<Option<Value>> = vec![None; p.n_temps as usize];
-        let mut argv: Vec<Value> = Vec::with_capacity(4);
+    ///
+    /// The temp/argv vectors come from a per-thread scratch pool
+    /// ([`PACKED_SCRATCH`]): a serving batch is one `run` with many
+    /// `InvokePacked`s, and steady-state dispatch reuses the same two
+    /// allocations instead of growing the heap per launch (the packed
+    /// analogue of the frame pool).
+    fn run_packed(&self, p: &PackedFunc, args: Vec<Value>) -> Result<Value, String> {
+        PACKED_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut s) => {
+                let s = &mut *s;
+                self.run_packed_in(p, args, &mut s.temps, &mut s.argv)
+            }
+            // Reentrant use of the scratch (a kernel that somehow
+            // re-enters the VM on this thread): fall back to fresh
+            // vectors rather than aliasing live scratch.
+            Err(_) => {
+                let (mut temps, mut argv) = (Vec::new(), Vec::new());
+                self.run_packed_in(p, args, &mut temps, &mut argv)
+            }
+        })
+    }
+
+    fn run_packed_in(
+        &self,
+        p: &PackedFunc,
+        mut args: Vec<Value>,
+        temps: &mut Vec<Option<Value>>,
+        argv: &mut Vec<Value>,
+    ) -> Result<Value, String> {
+        temps.clear();
+        temps.resize(p.n_temps as usize, None);
+        argv.clear();
         for step in &p.steps {
             argv.clear();
             for (j, input) in step.inputs.iter().enumerate() {
@@ -625,13 +654,32 @@ impl<'p> Vm<'p> {
                 };
                 argv.push(v);
             }
-            let out = op::inplace::eval_step(step.def, &mut argv, &step.attrs)?;
+            let out = op::inplace::eval_step(step.def, argv, &step.attrs)?;
             temps[step.out_temp as usize] = Some(out);
         }
-        temps[p.out_temp as usize]
+        let out = temps[p.out_temp as usize]
             .take()
-            .ok_or_else(|| "empty kernel result".to_string())
+            .ok_or_else(|| "empty kernel result".to_string());
+        // Drop any values a partially-dead kernel left behind before the
+        // scratch is pooled; capacity is retained for the next launch.
+        temps.clear();
+        argv.clear();
+        out
     }
+}
+
+/// Scratch vectors reused by every [`Vm::run_packed`] on this thread —
+/// the zero-alloc dispatch path. Cleared (values dropped) after each
+/// launch; only capacity persists, bounded by the widest kernel the
+/// thread has run.
+struct PackedScratch {
+    temps: Vec<Option<Value>>,
+    argv: Vec<Value>,
+}
+
+thread_local! {
+    static PACKED_SCRATCH: RefCell<PackedScratch> =
+        RefCell::new(PackedScratch { temps: Vec::new(), argv: Vec::new() });
 }
 
 #[cfg(test)]
@@ -768,6 +816,41 @@ mod tests {
         assert_eq!(v.tensor().f32_value(), 2.0);
         // One launch for `less`, one for `add`.
         assert_eq!(vm.launches.get(), 2);
+    }
+
+    #[test]
+    fn packed_scratch_is_reused_across_kernels_of_different_widths() {
+        // Two fused programs with different temp counts run back-to-back
+        // on this thread: the pooled scratch must present fresh temps to
+        // each launch (no stale values leak between kernels) while the
+        // launches themselves stay correct. The wide chain fuses at -O3
+        // into one multi-step kernel; the narrow one is a single step.
+        let wide = parse_module(
+            "def @main(%x: Tensor[(2, 3), float32]) {\n\
+               negative(nn.relu(add(multiply(%x, 2f), 1f)))\n\
+             }",
+        )
+        .unwrap();
+        let wide = crate::pass::optimize(&wide, crate::pass::OptLevel::O3, true)
+            .expect("optimize wide");
+        let wide_p = compile(&wide).unwrap();
+        let narrow = Module::with_prelude();
+        let narrow_e = parse_expr("add(1f, 2f)").unwrap();
+        let narrow_p = compile_expr(&narrow, &narrow_e).unwrap();
+        let x = Tensor::from_f32(vec![2, 3], vec![-1.0, 0.0, 1.0, 2.0, -2.0, 0.5]);
+        let expect: Vec<f32> = x
+            .as_f32()
+            .iter()
+            .map(|v| -((v * 2.0 + 1.0).max(0.0)))
+            .collect();
+        for _ in 0..3 {
+            let out = Vm::new(&wide_p)
+                .run(vec![Value::Tensor(x.clone())])
+                .unwrap();
+            assert_eq!(out.tensor().as_f32(), expect.as_slice());
+            let s = Vm::new(&narrow_p).run(vec![]).unwrap();
+            assert_eq!(s.tensor().f32_value(), 3.0);
+        }
     }
 
     #[test]

@@ -15,8 +15,47 @@ pub mod vision;
 pub use nlp::*;
 pub use vision::*;
 
-use crate::ir::{self, E};
+use crate::ir::{self, Dim, Module, Type, E};
 use crate::tensor::{Rng, Tensor};
+
+/// Rewrite the leading (batch) dimension of every tensor-typed `@main`
+/// parameter annotation — including tensors nested inside ADT and tuple
+/// annotations, e.g. the RNNs' `List[Tensor[(1, 16)]]` step inputs.
+/// Weights are embedded constants, so this one edit re-types the whole
+/// program: `Dim::Any` makes it batch-polymorphic (one compiled artifact
+/// for every batch size, §3.3.1), a concrete `Dim::Known(n)`
+/// re-monomorphizes it at batch `n`.
+pub fn with_batch_dim(m: &Module, batch: Dim) -> Module {
+    let mut out = m.clone();
+    if let Some(f) = m.def("main") {
+        let mut nf = f.clone();
+        for (_, ann) in nf.params.iter_mut() {
+            if let Some(t) = ann {
+                *t = rebatch_type(t, batch);
+            }
+        }
+        out.add_def("main", nf);
+    }
+    out
+}
+
+fn rebatch_type(t: &Type, batch: Dim) -> Type {
+    match t {
+        Type::Tensor { shape, dtype } if !shape.is_empty() => {
+            let mut shape = shape.clone();
+            shape[0] = batch;
+            Type::Tensor { shape, dtype: *dtype }
+        }
+        Type::Adt { name, args } => Type::Adt {
+            name: name.clone(),
+            args: args.iter().map(|a| rebatch_type(a, batch)).collect(),
+        },
+        Type::Tuple(ts) => {
+            Type::Tuple(ts.iter().map(|x| rebatch_type(x, batch)).collect())
+        }
+        _ => t.clone(),
+    }
+}
 
 /// Weight factory with a deterministic seed per model.
 pub struct Weights {

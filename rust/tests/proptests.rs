@@ -730,6 +730,154 @@ fn o3_never_launches_more_kernels_than_o0_on_the_fused_mlp_fixture() {
 }
 
 // ---------------------------------------------------------------------------
+// Shape-polymorphic compilation (§3.3.1).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shape_polymorphic_artifacts_serve_every_batch_size_from_one_cache_entry() {
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+    use relay::ir::Dim;
+    use relay::zoo::{self, Model};
+
+    // The tentpole differential: ONE symbolic-batch (`Dim::Any`) artifact
+    // per model is bit-identical, at every batch size 1..=4, to (a) the
+    // same model re-monomorphized at that exact batch — the bucketed
+    // baseline's artifact — and (b) the reference interpreter. Pinned to
+    // -O2: -O3's conv-as-GEMM rewrite needs a concrete batch, so at -O3
+    // the poly and concrete DQN legitimately run different (allclose, not
+    // bit-equal) kernel sets.
+    let level = OptLevel::O2;
+    let mlp = ir::parse_module(
+        "def @main(%x: Tensor[(1, 16), float32]) {\n\
+           let %w1 = ones(shape=[32, 16]);\n\
+           let %h = tanh(nn.dense(%x, %w1));\n\
+           let %w2 = ones(shape=[8, 32]);\n\
+           nn.dense(%h, %w2)\n\
+         }",
+    )
+    .unwrap();
+    let (dqn, _) = zoo::vision::build(Model::NatureDqn, 11);
+
+    let mut rng = Rng::new(2100);
+    for (name, m, row_shape) in [
+        ("mlp", mlp, vec![16usize]),
+        ("dqn", dqn, vec![4usize, 16, 16]),
+    ] {
+        let poly = zoo::with_batch_dim(&m, Dim::Any);
+        let poly_cache = ProgramCache::new();
+        let concrete_cache = ProgramCache::new();
+        for n in 1..=4usize {
+            let mut shape = vec![n];
+            shape.extend(&row_shape);
+            let args = vec![Value::Tensor(rng.normal_tensor(&shape, 1.0))];
+            let concrete = zoo::with_batch_dim(&m, Dim::Known(n));
+            let reference = run_with_cache(
+                &concrete,
+                CompileOptions::at(Executor::Interp, level),
+                args.clone(),
+                &concrete_cache,
+            )
+            .unwrap_or_else(|e| panic!("{name} batch {n} interp: {e}"));
+            let exact = run_with_cache(
+                &concrete,
+                CompileOptions::at(Executor::Vm, level),
+                args.clone(),
+                &concrete_cache,
+            )
+            .unwrap_or_else(|e| panic!("{name} batch {n} concrete vm: {e}"));
+            let p = run_with_cache(
+                &poly,
+                CompileOptions::at(Executor::Vm, level),
+                args,
+                &poly_cache,
+            )
+            .unwrap_or_else(|e| panic!("{name} batch {n} poly vm: {e}"));
+            assert_eq!(
+                p.value.tensor().shape()[0],
+                n,
+                "{name}: poly artifact returned the wrong batch"
+            );
+            assert!(
+                p.value.bits_eq(&exact.value),
+                "{name} batch {n}: poly diverged from exact-batch compile"
+            );
+            assert!(
+                p.value.bits_eq(&reference.value),
+                "{name} batch {n}: poly diverged from the interpreter"
+            );
+        }
+        // One compile and one cache entry cover every batch size; the
+        // monomorphic baseline pays one per batch size per tier.
+        assert_eq!(poly_cache.misses(), 1, "{name}: poly artifact recompiled");
+        assert_eq!(poly_cache.len(), 1, "{name}: poly cache grew");
+        assert_eq!(
+            concrete_cache.misses(),
+            8,
+            "{name}: expected one compile per batch size per tier"
+        );
+    }
+}
+
+#[test]
+fn shape_polymorphic_rnn_matches_exact_batch_compiles() {
+    use relay::eval::{run_with_cache, CompileOptions, Executor, ProgramCache};
+    use relay::ir::Dim;
+    use relay::zoo::{self, Model};
+
+    // Control-flow coverage for the tentpole: the recurrent RNN (a
+    // recursive Relay loop over a List of step inputs) with `Dim::Any`
+    // batch serves batches 1..=4 from one artifact, bit-identical to
+    // exact-batch compiles and the interpreter.
+    let level = OptLevel::O2;
+    let (m, _) = zoo::nlp::build_recurrent(Model::Rnn, 5);
+    let poly = zoo::with_batch_dim(&m, Dim::Any);
+    let poly_cache = ProgramCache::new();
+    let concrete_cache = ProgramCache::new();
+    let mut rng = Rng::new(2200);
+    for n in 1..=4usize {
+        let items: Vec<Value> = (0..zoo::nlp::SEQ_LEN)
+            .map(|_| Value::Tensor(rng.normal_tensor(&[n, zoo::nlp::EMBED], 1.0)))
+            .collect();
+        let args = vec![
+            Value::list(items),
+            Value::Tensor(Tensor::zeros(&[n, zoo::nlp::HIDDEN], tensor::DType::F32)),
+        ];
+        let concrete = zoo::with_batch_dim(&m, Dim::Known(n));
+        let reference = run_with_cache(
+            &concrete,
+            CompileOptions::at(Executor::Interp, level),
+            args.clone(),
+            &concrete_cache,
+        )
+        .unwrap_or_else(|e| panic!("rnn batch {n} interp: {e}"));
+        let exact = run_with_cache(
+            &concrete,
+            CompileOptions::at(Executor::Vm, level),
+            args.clone(),
+            &concrete_cache,
+        )
+        .unwrap_or_else(|e| panic!("rnn batch {n} concrete vm: {e}"));
+        let p = run_with_cache(
+            &poly,
+            CompileOptions::at(Executor::Vm, level),
+            args,
+            &poly_cache,
+        )
+        .unwrap_or_else(|e| panic!("rnn batch {n} poly vm: {e}"));
+        assert!(
+            p.value.bits_eq(&exact.value),
+            "rnn batch {n}: poly diverged from exact-batch compile"
+        );
+        assert!(
+            p.value.bits_eq(&reference.value),
+            "rnn batch {n}: poly diverged from the interpreter"
+        );
+    }
+    assert_eq!(poly_cache.misses(), 1, "rnn: poly artifact recompiled");
+    assert_eq!(poly_cache.len(), 1, "rnn: poly cache grew");
+}
+
+// ---------------------------------------------------------------------------
 // Send-able value domain (Arc migration).
 // ---------------------------------------------------------------------------
 
