@@ -1,0 +1,225 @@
+//! Tiled, parallel kernel throughput: naive triple-nest vs cache-blocked
+//! register-tiled GEMM vs the same with outer tiles fanned across the
+//! worker pool (the PR 9 tentpole). GFLOP/s per (op, shape), plus the tile
+//! schedule each shape resolved to and the tuning-registry count.
+//!
+//! Hard invariants (never latency-gated, so they run in CI's smoke step):
+//! - tiled and parallel results are **bit-identical** to the naive loop on
+//!   every benchmarked shape (the micro-kernel preserves the per-element
+//!   accumulation order);
+//! - every benchmarked GEMM shape has exactly one tuning decision in the
+//!   registry afterwards (`tune::ensure` is idempotent).
+//!
+//! Throughput comparisons (tiled >= naive, parallel >= tiled on >=512
+//! square shapes) hard-fail only in a full run; under `RELAY_BENCH_SMOKE`
+//! they downgrade to warnings — shared CI runners are too noisy to gate
+//! PRs on timing.
+//!
+//! Results go to `BENCH_fig17_kernels.json`.
+
+use std::fmt::Write as _;
+
+use relay::bench;
+use relay::tensor::{self, matmul_naive_into, tune, Rng, Tensor};
+
+struct Row {
+    op: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    naive: f64,
+    tiled: f64,
+    parallel: f64,
+    schedule: String,
+}
+
+fn gflops(m: usize, k: usize, n: usize, ms: f64) -> f64 {
+    (2.0 * m as f64 * k as f64 * n as f64) / (ms * 1e-3) / 1e9
+}
+
+fn main() {
+    let smoke = std::env::var_os("RELAY_BENCH_SMOKE").is_some();
+    let iters = if smoke { 3 } else { 10 };
+    let threads = tensor::parallel::kernel_threads();
+    println!(
+        "Fig 17 (kernels): naive vs tiled vs tiled+parallel GEMM, {threads} thread(s)"
+    );
+    println!(
+        "{:<22} {:>12} {:>12} {:>14}  {}",
+        "shape", "naive GF/s", "tiled GF/s", "parallel GF/s", "schedule"
+    );
+
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(96, 96, 96), (512, 512, 512)]
+    } else {
+        &[(96, 96, 96), (256, 256, 256), (512, 512, 512), (640, 768, 512)]
+    };
+    let mut rng = Rng::new(17);
+    let mut rows: Vec<Row> = Vec::new();
+    for &(m, k, n) in shapes {
+        let a = rng.normal_tensor(&[m, k], 1.0);
+        let b = rng.normal_tensor(&[k, n], 1.0);
+        let mut want = vec![0f32; m * n];
+        matmul_naive_into(&a, &b, &mut want);
+
+        // Correctness is never timing-gated: both tiled paths must produce
+        // the naive loop's exact bits on every shape.
+        let got = tensor::matmul(&a, &b);
+        assert_eq!(got.as_f32(), &want[..], "{m}x{k}x{n}: tiled kernel diverged");
+
+        let tuned = tune::ensure("matmul", vec![m, k, n]);
+        let cfg = match tuned.schedule {
+            tune::Schedule::Gemm(t) => t,
+            tune::Schedule::Conv { .. } => unreachable!("gemm op tuned as conv"),
+        };
+
+        let naive_s = bench::bench(format!("naive-{m}"), 1, iters, || {
+            let mut out = vec![0f32; m * n];
+            matmul_naive_into(&a, &b, &mut out);
+        });
+        let tiled_s = bench::bench(format!("tiled-{m}"), 1, iters, || {
+            let mut out = vec![0f32; m * n];
+            tensor::matmul_into_with(&a, &b, &mut out, cfg);
+        });
+        let par_s = bench::bench(format!("par-{m}"), 1, iters, || {
+            let mut out = vec![0f32; m * n];
+            tensor::matmul_into(&a, &b, &mut out);
+        });
+        let row = Row {
+            op: "matmul",
+            m,
+            k,
+            n,
+            naive: gflops(m, k, n, naive_s.min_ms),
+            tiled: gflops(m, k, n, tiled_s.min_ms),
+            parallel: gflops(m, k, n, par_s.min_ms),
+            schedule: tuned.schedule.label(),
+        };
+        println!(
+            "{:<22} {:>12.2} {:>12.2} {:>14.2}  {}",
+            format!("{m}x{k}x{n}"),
+            row.naive,
+            row.tiled,
+            row.parallel,
+            row.schedule
+        );
+        rows.push(row);
+    }
+
+    // Dense rides the same micro-kernel through the (n, k)-layout packer.
+    {
+        let (m, k, n) = (512, 512, 512);
+        let x = rng.normal_tensor(&[m, k], 1.0);
+        let w = rng.normal_tensor(&[n, k], 1.0);
+        let wt = transpose_for_ref(&w, n, k);
+        let mut want = vec![0f32; m * n];
+        matmul_naive_into(&x, &wt, &mut want);
+        assert_eq!(
+            tensor::dense(&x, &w).as_f32(),
+            &want[..],
+            "dense diverged from the transposed naive reference"
+        );
+        let tuned = tune::ensure("nn.dense", vec![m, k, n]);
+        let dense_s = bench::bench("dense-512", 1, iters, || {
+            let mut out = vec![0f32; m * n];
+            tensor::dense_into(&x, &w, &mut out);
+        });
+        let naive_s = bench::bench("dense-naive-512", 1, iters, || {
+            let mut out = vec![0f32; m * n];
+            tensor::dense_naive_into(&x, &w, &mut out);
+        });
+        let row = Row {
+            op: "nn.dense",
+            m,
+            k,
+            n,
+            naive: gflops(m, k, n, naive_s.min_ms),
+            tiled: gflops(m, k, n, dense_s.min_ms),
+            parallel: gflops(m, k, n, dense_s.min_ms),
+            schedule: tuned.schedule.label(),
+        };
+        println!(
+            "{:<22} {:>12.2} {:>12.2} {:>14.2}  {}",
+            "dense 512x512x512", row.naive, row.tiled, row.parallel, row.schedule
+        );
+        rows.push(row);
+    }
+
+    // One decision per benchmarked (op, shape) sits in the registry.
+    let tuned_total = tune::tuned_count();
+    assert!(
+        tuned_total >= rows.len(),
+        "registry holds {tuned_total} schedules for {} benchmarked shapes",
+        rows.len()
+    );
+
+    // Throughput claims: blocking should never lose to the naive loop, and
+    // the pool should pay off on >=512-square shapes. Warn-only under
+    // smoke (noisy shared runners), hard in a full run.
+    for r in &rows {
+        let tiled_ok = r.tiled >= r.naive;
+        let par_ok = threads == 1 || r.m < 512 || r.parallel >= r.tiled * 0.95;
+        for (ok, what) in [(tiled_ok, "tiled < naive"), (par_ok, "parallel < tiled")] {
+            if !ok {
+                let msg = format!(
+                    "{} {}x{}x{}: {what} ({:.2} / {:.2} / {:.2} GF/s)",
+                    r.op, r.m, r.k, r.n, r.naive, r.tiled, r.parallel
+                );
+                if smoke {
+                    eprintln!("WARN (smoke): {msg}");
+                } else {
+                    panic!("{msg}");
+                }
+            }
+        }
+    }
+
+    let mut json_rows = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            json_rows,
+            "{}{{\"op\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+             \"naive_gflops\": {:.3}, \"tiled_gflops\": {:.3}, \
+             \"parallel_gflops\": {:.3}, \"schedule\": \"{}\"}}",
+            if i == 0 { "" } else { ",\n    " },
+            r.op,
+            r.m,
+            r.k,
+            r.n,
+            r.naive,
+            r.tiled,
+            r.parallel,
+            r.schedule
+        );
+    }
+    let json = format!(
+        "{{\n  \"figure\": \"17-kernels\",\n  \"description\": \"cache-blocked, \
+         register-tiled GEMM with packed panels and a work-stealing outer-tile \
+         pool vs the naive triple-nest; bit-identical results, per-(op, shape) \
+         tuned schedules\",\n  \"kernel_threads\": {threads},\n  \
+         \"tuned_schedules\": {tuned_total},\n  \"rows\": [\n    {json_rows}\n  ]\n}}\n"
+    );
+    let at_root = std::path::Path::new("../ROADMAP.md").exists();
+    let json_path = if at_root {
+        "../BENCH_fig17_kernels.json"
+    } else {
+        "BENCH_fig17_kernels.json"
+    };
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+}
+
+/// The (k, n)-layout copy of a dense weight (n, k), so the naive matmul
+/// reference can check dense.
+fn transpose_for_ref(w: &Tensor, n: usize, k: usize) -> Tensor {
+    let src = w.as_f32();
+    let mut t = vec![0f32; k * n];
+    for j in 0..n {
+        for kk in 0..k {
+            t[kk * n + j] = src[j * k + kk];
+        }
+    }
+    Tensor::from_f32(vec![k, n], t)
+}

@@ -93,18 +93,34 @@ pub fn cmd_metrics(port: u16) -> Result<String> {
 /// `relay dump-passes <file.relay> [-O n] [--fixpoint]`: run the
 /// instrumented pass driver and print the per-pass table — wall time, IR
 /// node counts before/after, and rounds (fixpoint re-runs FoldConstant /
-/// DCE to convergence).
+/// DCE to convergence) — followed by the tile schedules the `TuneKernels`
+/// pass decided, one row per (op, shape).
 pub fn cmd_dump_passes(path: &str, level: OptLevel, fixpoint: bool) -> Result<String> {
     let src = std::fs::read_to_string(path)?;
     let m = crate::ir::parse_module(&src).map_err(|e| anyhow!("{e}"))?;
     let cfg = PipelineConfig { level, typecheck: false, fixpoint };
-    let (_, trace) =
+    let (opt, trace) =
         crate::pass::optimize_with(&m, &cfg).map_err(|e| anyhow!("{e}"))?;
-    Ok(format!(
+    let mut text = format!(
         "pass pipeline for {path} at {level}{}:\n{}",
         if fixpoint { " (fixpoint)" } else { "" },
         trace.render()
-    ))
+    );
+    // Match the driver: TuneKernels only runs at -O1 and above.
+    let tuned = if level >= OptLevel::O1 {
+        crate::pass::tune_kernels::tune_module(&opt)
+    } else {
+        Vec::new()
+    };
+    if !tuned.is_empty() {
+        text.push_str("\ntuned kernel schedules:\n");
+        for t in &tuned {
+            text.push_str("  ");
+            text.push_str(&t.render());
+            text.push('\n');
+        }
+    }
+    Ok(text)
 }
 
 /// `relay dump-bytecode <file.relay> [-O n]`: parse, optimize, compile to
@@ -162,15 +178,17 @@ pub fn usage() -> &'static str {
      USAGE:\n\
        relay compile <file.relay> [-O 0|1|2|3]   parse, check, optimize, print\n\
        relay run <file.relay> [-O 0|1|2|3] [--executor interp|graph|vm|auto]\n\
-                   [--profile]               optimize and evaluate @main\n\
+                   [--profile] [--kernel-threads N]\n\
+                                                 optimize and evaluate @main\n\
        relay dump-passes <file.relay> [-O 0|1|2|3] [--fixpoint]\n\
                                                  per-pass wall time + node deltas\n\
+                                                 + tuned kernel schedules\n\
        relay dump-bytecode <file.relay> [-O 0|1|2|3]\n\
                                                  disassemble the VM program\n\
        relay artifact <name> [--dir artifacts]   execute an AOT artifact\n\
        relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3] [--fixpoint]\n\
                    [--queue-budget 256] [--deadline-ms 1000]\n\
-                   [--poly on|off] [--trace-json PATH]\n\
+                   [--poly on|off] [--trace-json PATH] [--kernel-threads N]\n\
                                                  batched inference server\n\
                                                  (--poly=off: bucketed baseline)\n\
        relay metrics [--port 7474]           dump a running server's /metrics\n"
@@ -244,6 +262,26 @@ mod tests {
         let fix = cmd_dump_passes(tmp.to_str().unwrap(), OptLevel::O2, true).unwrap();
         assert!(fix.contains("(fixpoint)"), "{fix}");
         assert!(fix.contains("rounds"), "{fix}");
+    }
+
+    #[test]
+    fn dump_passes_lists_tuned_kernel_schedules() {
+        let tmp = std::env::temp_dir().join("relay_dump_tuned_test.relay");
+        std::fs::write(
+            &tmp,
+            "def @main(%x: Tensor[(8, 16), float32], %w: Tensor[(32, 16), float32]) {\n\
+               nn.dense(%x, %w)\n\
+             }",
+        )
+        .unwrap();
+        let out = cmd_dump_passes(tmp.to_str().unwrap(), OptLevel::O3, false).unwrap();
+        assert!(out.contains("TuneKernels"), "{out}");
+        assert!(out.contains("tuned kernel schedules:"), "{out}");
+        assert!(out.contains("nn.dense [8, 16, 32] -> mc"), "{out}");
+        // -O0 runs no passes, so nothing is tuned and the section is
+        // omitted.
+        let o0 = cmd_dump_passes(tmp.to_str().unwrap(), OptLevel::O0, false).unwrap();
+        assert!(!o0.contains("tuned kernel schedules:"), "{o0}");
     }
 
     #[test]

@@ -170,6 +170,12 @@ pub struct ServerConfig {
     /// program-cache entry. `--poly=off` restores the bucketed baseline
     /// (powers-of-two modules, batches padded up to the bucket).
     pub poly: bool,
+    /// Kernel worker-pool width (`--kernel-threads`, 0 = auto): threads
+    /// the tiled tensor kernels fan outer tiles across
+    /// ([`crate::tensor::parallel`]). 1 bypasses the pool entirely
+    /// (strictly sequential kernels). Applied process-wide at serve
+    /// startup; the first kernel launch freezes the value.
+    pub kernel_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -188,6 +194,7 @@ impl Default for ServerConfig {
             trace: None,
             fault: None,
             poly: true,
+            kernel_threads: 0,
         }
     }
 }
@@ -1053,6 +1060,9 @@ type Spawn = Box<dyn Fn(usize) -> Option<JoinHandle<()>> + Send>;
 /// Start the fleet and return a [`ServerHandle`]. Non-blocking; see
 /// [`serve`] for the fire-and-forget variant the CLI uses.
 pub fn serve_handle(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<ServerHandle> {
+    if cfg.kernel_threads > 0 {
+        crate::tensor::parallel::set_kernel_threads(cfg.kernel_threads);
+    }
     let pjrt = artifacts_available(&cfg.artifact_dir);
     let workers = if pjrt { 1 } else { cfg.workers.max(1) };
     let mut stats = Stats::new(workers, cfg.opt_level);

@@ -55,6 +55,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use super::{env_empty, CompileOptions, Execution, Executor, Interp, LaunchCounter, Value};
 use crate::ir::{self, Expr, Module};
 use crate::pass::{OptLevel, PassTrace};
+use crate::tensor::tune;
 
 /// What executor-selection resolved a module to, compiled and ready to run.
 #[derive(Clone)]
@@ -131,6 +132,10 @@ struct Entry {
     compiled: Compiled,
     /// What the optimizing driver did when this entry was built.
     trace: Arc<PassTrace>,
+    /// Tile schedules the `TuneKernels` pass selected for this artifact's
+    /// hot kernels (one per (op, shape)) — the compiled program and its
+    /// kernel schedules live and evict together.
+    schedules: tune::ScheduleSet,
     /// Cached [`Compiled::const_bytes`] of this entry.
     bytes: usize,
     /// Recency stamp (monotonic per cache) for LRU eviction.
@@ -348,7 +353,7 @@ impl ProgramCache {
         let _inflight = coordinated.then(|| InFlightGuard { cache: self, key });
         // The optimize + compile runs outside the lock: other keys hit
         // and miss freely while this one builds.
-        let (compiled, trace) = compile_for(module, &opts)?;
+        let (compiled, trace, schedules) = compile_for(module, &opts)?;
         let trace = Arc::new(trace);
         let bytes = compiled.const_bytes();
 
@@ -366,6 +371,7 @@ impl ProgramCache {
                 module: Arc::new(module.clone()),
                 compiled: compiled.clone(),
                 trace: trace.clone(),
+                schedules,
                 bytes,
                 last_used: tick,
             },
@@ -375,6 +381,22 @@ impl ProgramCache {
         // _inflight drops here: key leaves the in-flight set, waiters wake
         // and find the entry resident.
         Ok((compiled, trace, true))
+    }
+
+    /// The tile schedules stored next to a resident artifact (empty set if
+    /// the entry was compiled below -O1). `None` when the module has no
+    /// resident entry for these options. Does not touch LRU recency.
+    pub fn cached_schedules(
+        &self,
+        module: &Module,
+        opts: &CompileOptions,
+    ) -> Option<tune::ScheduleSet> {
+        if opts.is_uncached_interp() {
+            return None;
+        }
+        let key = key_for(module, opts);
+        let guard = self.lock_state();
+        guard.entries.get(&key).map(|e| e.schedules.clone())
     }
 
     /// Evict least-recently-used entries until both the entry-count and
@@ -407,16 +429,24 @@ impl ProgramCache {
 /// tier — the one place the selection chain (graph runtime -> VM ->
 /// interpreter) lives. The ANF pass runs **once** on the optimized module
 /// and is shared between the graph-runtime attempt and the VM compile.
+/// Also returns the tile schedules the `TuneKernels` pass selected for the
+/// optimized module (idempotent registry reads), so the cache can store
+/// them next to the artifact.
 pub fn compile_for(
     module: &Module,
     opts: &CompileOptions,
-) -> Result<(Compiled, PassTrace), String> {
+) -> Result<(Compiled, PassTrace, tune::ScheduleSet), String> {
     let cfg = crate::pass::PipelineConfig {
         level: opts.opt_level,
         typecheck: opts.typecheck,
         fixpoint: opts.fixpoint,
     };
     let (optimized, trace) = crate::pass::optimize_with(module, &cfg)?;
+    let schedules: tune::ScheduleSet = if opts.opt_level >= OptLevel::O1 {
+        Arc::new(crate::pass::tune_kernels::tune_module(&optimized))
+    } else {
+        Arc::new(Vec::new())
+    };
     let compiled = match opts.executor {
         Executor::Interp => Compiled::Interp(Arc::new(optimized)),
         Executor::GraphRt => {
@@ -438,7 +468,7 @@ pub fn compile_for(
             let anfed = crate::pass::anf::run(&optimized);
             if let Some(main) = anfed.def("main") {
                 if let Ok(g) = crate::graphrt::GraphRt::compile(main) {
-                    return Ok((Compiled::Graph(Arc::new(g)), trace));
+                    return Ok((Compiled::Graph(Arc::new(g)), trace, schedules));
                 }
             }
             match crate::vm::compile_normalized(&anfed) {
@@ -449,7 +479,7 @@ pub fn compile_for(
             }
         }
     };
-    Ok((compiled, trace))
+    Ok((compiled, trace, schedules))
 }
 
 /// Run `@main(args...)` on an already-compiled program.
@@ -552,6 +582,35 @@ mod tests {
         assert_eq!(cache.misses(), 1, "exactly one compile across 5 calls");
         assert_eq!(cache.hits(), 4);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn compiled_entry_carries_its_tuned_schedules() {
+        let cache = ProgramCache::new();
+        let m = parse_module(
+            "def @main(%x: Tensor[(8, 32), float32], %w: Tensor[(32, 32), float32]) {\n\
+               nn.dense(%x, %w)\n\
+             }",
+        )
+        .unwrap();
+        let dense_args = || {
+            vec![
+                Value::Tensor(Tensor::from_f32(vec![8, 32], vec![0.5; 8 * 32])),
+                Value::Tensor(Tensor::from_f32(vec![32, 32], vec![0.25; 32 * 32])),
+            ]
+        };
+        let o3 = CompileOptions::at(Executor::Auto, OptLevel::O3);
+        run_with_cache(&m, o3, dense_args(), &cache).unwrap();
+        let schedules = cache.cached_schedules(&m, &o3).expect("entry resident");
+        assert!(
+            schedules.iter().any(|t| t.op == "nn.dense" && t.dims == [8, 32, 32]),
+            "dense schedule missing from the entry: {schedules:?}"
+        );
+        // Below -O1 TuneKernels never runs: the entry stores an empty set.
+        let o0 = CompileOptions::at(Executor::Auto, OptLevel::O0);
+        run_with_cache(&m, o0, dense_args(), &cache).unwrap();
+        let none = cache.cached_schedules(&m, &o0).expect("O0 entry resident");
+        assert!(none.is_empty(), "O0 entry must hold no schedules: {none:?}");
     }
 
     #[test]

@@ -157,6 +157,11 @@ pub struct Workspace {
     temps: Vec<Option<Value>>,
     args: Vec<Value>,
     group: Vec<Value>,
+    /// Dead-buffer arena: uniquely-owned f32 tensors whose last consumer
+    /// has run. A later `nn.dense`/`matmul` with a matching output shape
+    /// steals one as its destination ([`op::inplace::eval_step_with_donors`])
+    /// instead of allocating. Bounded; cleared at the end of every call.
+    graveyard: Vec<Tensor>,
 }
 
 impl Workspace {
@@ -480,11 +485,12 @@ impl GraphRt {
         // still holds — capacity kept — so neither a finished call nor a
         // mid-graph kernel error pins this call's tensors in the
         // per-thread arena until the next run.
-        let Workspace { slots, temps, args, group } = ws;
+        let Workspace { slots, temps, args, group, graveyard } = ws;
         slots.clear();
         temps.clear();
         args.clear();
         group.clear();
+        graveyard.clear();
         out
     }
 
@@ -502,7 +508,7 @@ impl GraphRt {
                 n_inputs
             ));
         }
-        let Workspace { slots, temps, args, group } = ws;
+        let Workspace { slots, temps, args, group, graveyard } = ws;
         slots.clear();
         slots.resize(self.n_slots, None);
         for (s, v) in self.input_slots.iter().zip(inputs) {
@@ -517,7 +523,9 @@ impl GraphRt {
                     for (j, r) in inputs.iter().enumerate() {
                         args.push(read_owned(slots, &self.constants, r, node.kills[j])?);
                     }
-                    op::inplace::eval_step(*def, args, attrs)?
+                    let v = op::inplace::eval_step_with_donors(*def, args, attrs, graveyard)?;
+                    bury_dead_args(args, graveyard);
+                    v
                 }
                 NodeKind::Fused { steps, n_temps, inputs } => {
                     launches.bump();
@@ -551,7 +559,13 @@ impl GraphRt {
                             };
                             args.push(v);
                         }
-                        let v = op::inplace::eval_step(step.def, args, &step.attrs)?;
+                        let v = op::inplace::eval_step_with_donors(
+                            step.def,
+                            args,
+                            &step.attrs,
+                            graveyard,
+                        )?;
+                        bury_dead_args(args, graveyard);
                         temps[step.out_temp] = Some(v);
                     }
                     temps[*n_temps - 1].take().ok_or("empty fused result")?
@@ -697,6 +711,29 @@ fn read_owned(
     }
 }
 
+/// Upper bound on retired buffers held per call — enough for the handful
+/// of live activation shapes in a real model, small enough that a deep
+/// graph never pins more than a few dead tensors.
+const MAX_GRAVEYARD: usize = 8;
+
+/// Retire a finished call's dead argument buffers into the graveyard. An
+/// argument still uniquely owned *after* the kernel ran has no remaining
+/// reader anywhere (kill-mask moved it out of the arena, the kernel didn't
+/// keep or steal it), so its buffer can be donated to a later same-shape
+/// output instead of being freed here and reallocated there.
+fn bury_dead_args(args: &mut Vec<Value>, graveyard: &mut Vec<Tensor>) {
+    for v in args.drain(..) {
+        if let Value::Tensor(t) = v {
+            if t.dtype() == crate::tensor::DType::F32 && t.is_unique() {
+                if graveyard.len() >= MAX_GRAVEYARD {
+                    graveyard.remove(0);
+                }
+                graveyard.push(t);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -814,6 +851,43 @@ mod tests {
         assert!(out.bits_eq(&expect));
         assert_eq!(after.misses_since(&before), 0, "chain step fell back to allocating");
         assert_eq!(after.hits_since(&before), 3, "tanh/negative/sigmoid should all reuse");
+    }
+
+    #[test]
+    fn dense_output_steals_dead_same_shape_buffer() {
+        // Chained square denses: by the time the second dense runs, the
+        // first one's dead inputs (same 4×4 shape as its output) sit in
+        // the workspace graveyard, so its output buffer is donated rather
+        // than allocated — exactly one hit, and bit-identical results.
+        let m = parse_module(
+            "def @main(%x: Tensor[(4, 4), float32], %w1: Tensor[(4, 4), float32], %w2: Tensor[(4, 4), float32]) {\n\
+               nn.dense(nn.dense(%x, %w1), %w2)\n\
+             }",
+        )
+        .unwrap();
+        let anfed = crate::pass::anf::run(&m);
+        let g = GraphRt::compile(anfed.def("main").unwrap()).unwrap();
+        let mk = |seed: f32| {
+            Tensor::from_f32(vec![4, 4], (0..16).map(|i| seed + i as f32 * 0.125).collect())
+        };
+        let fresh = || {
+            vec![
+                Value::Tensor(mk(-1.0)),
+                Value::Tensor(mk(0.5)),
+                Value::Tensor(mk(2.0)),
+            ]
+        };
+        let expect = g.run_traced(&fresh(), &mut |_, _, _| {}).unwrap();
+        let counter = LaunchCounter::new();
+        let before = crate::tensor::thread_alloc_snapshot();
+        let out = g.run_owned(fresh(), &counter).unwrap();
+        let after = crate::tensor::thread_alloc_snapshot();
+        assert!(out.bits_eq(&expect), "donated dense output diverged");
+        assert_eq!(
+            after.hits_since(&before),
+            1,
+            "second dense should reuse a graveyard buffer"
+        );
     }
 
     #[test]

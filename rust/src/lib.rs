@@ -32,8 +32,16 @@
 //!   op shape relations propagate it, and the compiled tiers resolve
 //!   concrete shapes from the arriving inputs — one cached artifact per
 //!   (rank, dtype, layout), not per batch size.
-//! * [`tensor`], [`vta`] — substrates: reference kernels and the simulated
-//!   accelerator.
+//! * [`tensor`], [`vta`] — substrates: tensor kernels and the simulated
+//!   accelerator. The hot GEMM/conv family is cache-blocked and
+//!   register-tiled with packed panels, fans outer tiles across a
+//!   lazily-spawned std-only worker pool (`tensor::parallel`;
+//!   `--kernel-threads` / `RELAY_KERNEL_THREADS`, `N=1` bypasses it),
+//!   and is tuned per (op, shape) at compile time (`tensor::tune` +
+//!   the `TuneKernels` pass; decisions ride the program-cache entry and
+//!   surface in `dump-passes` / `--profile`). Tiled and parallel paths
+//!   are bit-identical to the retained naive reference loops; see
+//!   rust/src/tensor/README.md.
 //! * [`backend`], [`runtime`], [`frontend`] — codegen to XLA, PJRT
 //!   execution, and model importers (PJRT/XLA behind the `xla` feature).
 //! * [`zoo`] — the evaluation model suite (vision + NLP).

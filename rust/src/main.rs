@@ -35,6 +35,27 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|w| w[1].as_str())
 }
 
+/// Apply `--kernel-threads N` (the tiled kernels' worker-pool width) if
+/// present. The CLI flag wins over the `RELAY_KERNEL_THREADS` env
+/// override; `N=1` bypasses the pool entirely (deterministic sequential
+/// kernels). Must run before the first kernel launch freezes the value.
+fn apply_kernel_threads(args: &[String]) -> anyhow::Result<()> {
+    match flag_value(args, "--kernel-threads") {
+        None => Ok(()),
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bad --kernel-threads {v:?} (expected an integer >= 1)")
+                })?;
+            relay::tensor::parallel::set_kernel_threads(n);
+            Ok(())
+        }
+    }
+}
+
 fn executor_of(args: &[String]) -> anyhow::Result<Executor> {
     match flag_value(args, "--executor") {
         None => Ok(Executor::Auto),
@@ -53,6 +74,7 @@ fn run(args: &[String]) -> anyhow::Result<String> {
         Some("run") => {
             let path = args.get(1).ok_or_else(|| anyhow::anyhow!("missing file"))?;
             let profile = args.iter().any(|a| a == "--profile");
+            apply_kernel_threads(args)?;
             coordinator::cmd_run(path, opt_of(args), executor_of(args)?, profile)
         }
         Some("dump-bytecode") => {
@@ -84,6 +106,9 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 })?,
             };
             let fixpoint = args.iter().any(|a| a == "--fixpoint");
+            let kernel_threads: usize = flag_value(args, "--kernel-threads")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0);
             // Shape-polymorphic serving is the default; `--poly=off` (or
             // `--poly off`) keeps the bucketed/padded baseline.
             let poly = !args.iter().any(|a| a == "--poly=off")
@@ -115,6 +140,7 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 default_deadline,
                 trace,
                 poly,
+                kernel_threads,
                 ..cfg_defaults
             };
             let stop = Arc::new(AtomicBool::new(false));

@@ -81,15 +81,152 @@ pub fn eval_step(
     let timer = crate::telemetry::profiler::op_timer();
     // Aggregation key from the *input* shapes, captured before an in-place
     // hit steals an argument slot.
-    let shape = timer
-        .as_ref()
-        .map(|_| crate::eval::value::args_shape_label(args));
+    let shape = timer.as_ref().map(|_| profile_label(def.name, args, attrs));
     let (result, hits, misses) = run_step(def, args, attrs);
     if let Some(t) = timer {
         let shape = shape.unwrap_or_default();
         crate::telemetry::profiler::record_op(t, def.name, shape, hits, misses);
     }
     result
+}
+
+/// [`eval_step`], but the output of a hot GEMM op may *steal a dying
+/// same-shape buffer* from the executor's slot graveyard instead of
+/// allocating (the PR 5 slot-arena follow-up): the donor is zero-filled
+/// and handed to the `*_into` accumulate kernel, and the donation counts
+/// as an in-place hit in `AllocStats` / `relay_inplace_hits_total`.
+/// No donor (or an ineligible op) falls through to [`eval_step`]
+/// unchanged — donation never counts a miss, because these ops are
+/// outside the planner's hit/miss-eligible set.
+pub fn eval_step_with_donors(
+    def: &'static OpDef,
+    args: &mut [Value],
+    attrs: &Attrs,
+    graveyard: &mut Vec<tensor::Tensor>,
+) -> Result<Value, String> {
+    if let Some(v) = try_donate(def, args, attrs, graveyard) {
+        return Ok(v);
+    }
+    eval_step(def, args, attrs)
+}
+
+/// The profiler's aggregation key: the input shapes, plus the chosen tile
+/// schedule (`@mc..·kc..·nc..` / `@ocb..`) for hot kernels big enough to
+/// consult the tuner — so `relay run --profile` rows show which schedule
+/// each (op, shape) ran with.
+fn profile_label(name: &str, args: &[Value], attrs: &Attrs) -> String {
+    let mut s = crate::eval::value::args_shape_label(args);
+    if let Some(label) = tune_label_for(name, args, attrs) {
+        s.push_str(" @");
+        s.push_str(&label);
+    }
+    s
+}
+
+/// The schedule label for this launch, mirroring the kernels' own
+/// dispatch: `None` for non-tuned ops and for launches below
+/// [`tensor::tune::TUNE_MIN_MACS`] (which run the fixed small path).
+fn tune_label_for(name: &str, args: &[Value], attrs: &Attrs) -> Option<String> {
+    use tensor::tune;
+    let (op, dims, macs): (&'static str, Vec<usize>, usize) = match name {
+        "nn.dense" | "matmul" | "nn.batch_matmul" => {
+            let [Value::Tensor(a), Value::Tensor(b)] = args else { return None };
+            let (op, m, k, n) = match name {
+                "nn.dense" if a.rank() == 2 && b.rank() == 2 => {
+                    ("nn.dense", a.shape()[0], a.shape()[1], b.shape()[0])
+                }
+                "matmul" if a.rank() == 2 && b.rank() == 2 => {
+                    ("matmul", a.shape()[0], a.shape()[1], b.shape()[1])
+                }
+                "nn.batch_matmul" if a.rank() == 3 && b.rank() == 3 => {
+                    ("nn.batch_matmul", a.shape()[1], a.shape()[2], b.shape()[2])
+                }
+                _ => return None,
+            };
+            (op, vec![m, k, n], m * k * n)
+        }
+        "nn.conv2d" => {
+            let [Value::Tensor(x), Value::Tensor(w)] = args else { return None };
+            if x.rank() != 4 || w.rank() != 4 {
+                return None;
+            }
+            let p = super::nn::conv2d_params(attrs);
+            let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+            let (o, cg, kh, kw) =
+                (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+            if h + 2 * p.padding.0 < kh || wd + 2 * p.padding.1 < kw {
+                return None;
+            }
+            let (oh, ow) = tensor::conv2d_out_hw(h, wd, kh, kw, &p);
+            let macs = n * o * oh * ow * cg * kh * kw;
+            ("nn.conv2d", vec![n, c, h, wd, o, kh, kw], macs)
+        }
+        _ => return None,
+    };
+    if macs < tune::TUNE_MIN_MACS {
+        return None;
+    }
+    Some(
+        tune::tuned_label(op, &dims)
+            .unwrap_or_else(|| tune::heuristic(op, &dims).label()),
+    )
+}
+
+/// Output shape of the donor-eligible ops (rank-2 f32 GEMMs whose `*_into`
+/// kernels accept a caller-provided buffer).
+fn donor_out_shape(name: &str, args: &[Value]) -> Option<Vec<usize>> {
+    let [Value::Tensor(a), Value::Tensor(b)] = args else { return None };
+    if a.dtype() != tensor::DType::F32
+        || b.dtype() != tensor::DType::F32
+        || a.rank() != 2
+        || b.rank() != 2
+        || a.shape()[1] != b.shape()[if name == "nn.dense" { 1 } else { 0 }]
+    {
+        return None;
+    }
+    match name {
+        "nn.dense" => Some(vec![a.shape()[0], b.shape()[0]]),
+        "matmul" => Some(vec![a.shape()[0], b.shape()[1]]),
+        _ => None,
+    }
+}
+
+/// Steal a dying same-shape buffer from the graveyard for the op's output.
+fn try_donate(
+    def: &'static OpDef,
+    args: &[Value],
+    attrs: &Attrs,
+    graveyard: &mut Vec<tensor::Tensor>,
+) -> Option<Value> {
+    let shape = donor_out_shape(def.name, args)?;
+    let pos = graveyard.iter().position(|t| {
+        t.dtype() == tensor::DType::F32 && t.shape() == &shape[..] && t.is_unique()
+    })?;
+    let timer = crate::telemetry::profiler::op_timer();
+    let label = timer.as_ref().map(|_| profile_label(def.name, args, attrs));
+    let mut donor = graveyard.swap_remove(pos);
+    {
+        // Uniqueness was checked above and the graveyard owns the tensor;
+        // a `None` here would only drop an already-dead buffer.
+        let buf = donor.try_unique_f32()?;
+        buf.fill(0.0);
+        let [Value::Tensor(a), Value::Tensor(b)] = args else { return None };
+        match def.name {
+            "nn.dense" => tensor::dense_into(a, b, buf),
+            _ => tensor::matmul_into(a, b, buf),
+        }
+    }
+    tensor::note_inplace_hit();
+    if let Some(t) = timer {
+        crate::telemetry::profiler::record_op(
+            t,
+            def.name,
+            label.unwrap_or_default(),
+            1,
+            0,
+        );
+    }
+    Some(Value::Tensor(donor))
 }
 
 /// The unprofiled execution path; returns the in-place outcome alongside

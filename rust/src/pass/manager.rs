@@ -137,6 +137,11 @@ pub fn passes(level: OptLevel) -> Vec<Pass> {
         });
     }
     if level >= OptLevel::O1 {
+        // Tile-schedule selection runs on the final op graph, before
+        // fusion wraps call sites in fused closures: one tuning decision
+        // per statically-shaped (op, shape), registered for the tiled
+        // kernels and snapshotted into the program-cache entry.
+        v.push(pass("TuneKernels", |m| Ok(super::tune_kernels::run(m).into())));
         v.push(pass("FuseOps", |m| Ok(super::fusion::run(m).into())));
     }
     v

@@ -18,6 +18,7 @@ pub mod manager;
 pub mod partial_eval;
 pub mod purity;
 pub mod tail_accum;
+pub mod tune_kernels;
 
 pub use ad::grad_expr;
 pub use manager::{

@@ -1,0 +1,172 @@
+//! TuneKernels: compile-time tile-schedule selection (the lightweight
+//! analogue of TVM's schedule search, paper §4).
+//!
+//! The pass walks the optimized module, finds every statically-shaped hot
+//! kernel call (`nn.dense`, `matmul`, `nn.batch_matmul`, `nn.conv2d`),
+//! and makes one tuning decision per (op, shape) via
+//! [`tune::ensure`] — a one-shot probe when `RELAY_TUNE_PROBE=1`, the
+//! static heuristic otherwise. The module itself is returned unchanged:
+//! the decision lands in the process-wide schedule registry (where the
+//! tiled kernels look it up at launch), is snapshotted into the
+//! `ProgramCache` entry by `eval::cache::compile_for`, and shows up as a
+//! `TuneKernels` row in `relay dump-passes`.
+//!
+//! A symbolic batch dimension (`Dim::Any` under `--poly`) is keyed as 0;
+//! concrete launches fall through to that entry in
+//! [`tune::schedule_for`]. Modules the type checker cannot finish on are
+//! skipped wholesale — tuning is best-effort metadata, never a reason to
+//! fail a compile.
+
+use crate::ir::{Dim, Expr, Module, Type, E};
+use crate::tensor::tune::{self, TunedKernel};
+
+/// Ops the tuner knows a schedule family for.
+const TUNED_OPS: [&str; 4] = ["nn.dense", "matmul", "nn.batch_matmul", "nn.conv2d"];
+
+/// The pass entry point: tune every hot call site, return the module
+/// unchanged.
+pub fn run(m: &Module) -> Module {
+    let _ = tune_module(m);
+    m.clone()
+}
+
+/// Walk `m` and ensure a schedule exists for every statically-shaped hot
+/// kernel call. Returns the decisions (one per distinct (op, shape)) —
+/// `eval::cache::compile_for` snapshots this into the cache entry, and
+/// `relay dump-passes` prints it under the pass table. Idempotent: repeat
+/// calls return the already-registered schedules.
+pub fn tune_module(m: &Module) -> Vec<TunedKernel> {
+    let Ok(report) = crate::ty::check_module(m) else {
+        return Vec::new();
+    };
+    let mut calls: Vec<E> = Vec::new();
+    for f in m.defs.values() {
+        crate::ir::visit::collect(
+            &f.body,
+            &|e| {
+                matches!(&**e,
+                    Expr::Call { f, .. }
+                        if matches!(&**f, Expr::Op(n) if TUNED_OPS.contains(&n.as_str())))
+            },
+            &mut calls,
+        );
+    }
+    let mut out: Vec<TunedKernel> = Vec::new();
+    for call in &calls {
+        let Expr::Call { f, args, .. } = &**call else { continue };
+        let Expr::Op(name) = &**f else { continue };
+        let op: &'static str = TUNED_OPS
+            .iter()
+            .find(|&&o| o == name.as_str())
+            .copied()
+            .expect("pred matched op set");
+        let shapes: Option<Vec<Vec<usize>>> = args
+            .iter()
+            .map(|a| report.type_of(a).and_then(dims_with_symbolic_zero))
+            .collect();
+        let Some(shapes) = shapes else { continue };
+        let Some(dims) = kernel_dims(op, &shapes) else { continue };
+        let tuned = tune::ensure(op, dims);
+        if !out
+            .iter()
+            .any(|t| t.op == tuned.op && t.dims == tuned.dims)
+        {
+            out.push(tuned);
+        }
+    }
+    out
+}
+
+/// Tensor shape with symbolic dims (`Dim::Any` / unsolved vars) as 0 —
+/// the tuner's "polymorphic" marker. Non-tensor types yield `None`.
+fn dims_with_symbolic_zero(t: &Type) -> Option<Vec<usize>> {
+    match t {
+        Type::Tensor { shape, .. } => Some(
+            shape
+                .iter()
+                .map(|d| match d {
+                    Dim::Known(k) => *k,
+                    Dim::Any | Dim::Var(_) => 0,
+                })
+                .collect(),
+        ),
+        _ => None,
+    }
+}
+
+/// The tuner's dims key for one call site. GEMMs key as `[m, k, n]`
+/// (leading 0 = symbolic batch; a symbolic `k`/`n` is untunable), conv as
+/// `[n, c, h, w, oc, kh, kw]`.
+fn kernel_dims(op: &str, shapes: &[Vec<usize>]) -> Option<Vec<usize>> {
+    match op {
+        "nn.dense" => match (shapes.first()?.as_slice(), shapes.get(1)?.as_slice()) {
+            ([m, k, ..], [n, _k2]) if *k > 0 && *n > 0 => Some(vec![*m, *k, *n]),
+            _ => None,
+        },
+        "matmul" => match (shapes.first()?.as_slice(), shapes.get(1)?.as_slice()) {
+            ([m, k], [_k2, n]) if *k > 0 && *n > 0 => Some(vec![*m, *k, *n]),
+            _ => None,
+        },
+        "nn.batch_matmul" => {
+            match (shapes.first()?.as_slice(), shapes.get(1)?.as_slice()) {
+                ([_b, m, k], [_b2, _k2, n]) if *k > 0 && *n > 0 => {
+                    Some(vec![*m, *k, *n])
+                }
+                _ => None,
+            }
+        }
+        "nn.conv2d" => match (shapes.first()?.as_slice(), shapes.get(1)?.as_slice()) {
+            ([n, c, h, w], [o, _cg, kh, kw])
+                if [*c, *h, *w, *o, *kh, *kw].iter().all(|&d| d > 0) =>
+            {
+                Some(vec![*n, *c, *h, *w, *o, *kh, *kw])
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_module;
+    use crate::tensor::tune::Schedule;
+
+    #[test]
+    fn tunes_every_static_dense_in_a_module() {
+        let m = parse_module(
+            "def @main(%x: Tensor[(2, 4), float32]) {\n\
+               let %w1 = ones(shape=[8, 4]);\n\
+               let %h = nn.relu(nn.dense(%x, %w1));\n\
+               let %w2 = ones(shape=[2, 8]);\n\
+               nn.dense(%h, %w2)\n\
+             }",
+        )
+        .unwrap();
+        let tuned = tune_module(&m);
+        assert_eq!(tuned.len(), 2, "{tuned:?}");
+        assert!(tuned.iter().any(|t| t.dims == vec![2, 4, 8]));
+        assert!(tuned.iter().any(|t| t.dims == vec![2, 8, 2]));
+        assert!(tuned.iter().all(|t| matches!(t.schedule, Schedule::Gemm(_))));
+        // Idempotent: a re-walk returns the same decisions, no new entries.
+        let again = tune_module(&m);
+        assert_eq!(again.len(), 2);
+        assert_eq!(again[0].schedule, tuned[0].schedule);
+    }
+
+    #[test]
+    fn untypeable_module_is_skipped_not_failed() {
+        let m = parse_module(
+            "def @main(%l) { match (%l) { | Cons(%h, %t) -> %h | Nil -> 0f } }",
+        )
+        .unwrap();
+        assert!(tune_module(&m).is_empty());
+        // The pass proper also returns the module unchanged.
+        let back = run(&m);
+        assert_eq!(
+            crate::ir::module_structural_hash(&m),
+            crate::ir::module_structural_hash(&back)
+        );
+    }
+}

@@ -45,6 +45,12 @@ pub mod names {
     pub const WORKER_RESPAWNS_TOTAL: &str = "relay_worker_respawns_total";
     /// Live worker threads in the fleet (0 after a graceful drain).
     pub const WORKERS_ALIVE: &str = "relay_workers_alive";
+    /// Resolved kernel worker-pool width (participants per parallel
+    /// region, caller included); 1 = the pool is bypassed entirely.
+    pub const KERNEL_POOL_THREADS: &str = "relay_kernel_pool_threads";
+    /// Distinct (op, shape) tile-schedule decisions made by the tuner
+    /// (`tensor::tune::ensure` — the `TuneKernels` pass and lazy launches).
+    pub const TUNED_SCHEDULES_TOTAL: &str = "relay_tuned_schedules_total";
     pub const REQUEST_SECONDS: &str = "relay_request_seconds";
     pub const QUEUE_WAIT_SECONDS: &str = "relay_queue_wait_seconds";
     pub const BATCH_FORM_SECONDS: &str = "relay_batch_form_seconds";

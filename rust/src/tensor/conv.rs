@@ -1,9 +1,23 @@
 //! 2-d convolution (NCHW / OIHW), with grouped support for MobileNet-style
 //! depthwise blocks, plus transposed conv for the DCGAN workload of Fig 14.
+//!
+//! `conv2d` is data-parallelized over output planes — each `(batch, out
+//! channel)` plane is a disjoint output region computed by exactly one
+//! chunk of [`super::parallel`]'s pool, with the per-plane loop order
+//! unchanged from the direct kernel — so results are bitwise identical to
+//! the sequential reference at any thread count. The in-plane row/column
+//! bounds are hoisted out of the hot loop analytically (no per-pixel
+//! padding branches); the parallel grain (`oc_block`) comes from
+//! [`super::tune`].
 
 use std::sync::Arc;
 
+use super::parallel;
+use super::tune::{self, Schedule};
 use super::{Storage, Tensor};
+
+/// Below this many multiply-adds the kernel stays sequential.
+const PAR_MIN_MACS: usize = 1 << 16;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Conv2dParams {
@@ -32,7 +46,116 @@ pub fn conv2d_out_hw(
 }
 
 /// Direct NCHW conv: x (N,C,H,W), w (O, C/groups, KH, KW) -> (N,O,OH,OW).
+/// Parallel over output planes, bitwise identical to [`conv2d_naive`].
 pub fn conv2d(x: &Tensor, w: &Tensor, p: &Conv2dParams) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv2d input rank");
+    assert_eq!(w.rank(), 4, "conv2d weight rank");
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (o, cg, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(c, cg * p.groups, "conv2d channels {c} vs {cg}x{}", p.groups);
+    assert_eq!(o % p.groups, 0, "out channels divisible by groups");
+    let (oh, ow) = conv2d_out_hw(h, wd, kh, kw, p);
+    let og = o / p.groups;
+
+    let xv = x.as_f32();
+    let wv = w.as_f32();
+    let mut out = vec![0f32; n * o * oh * ow];
+
+    let planes = n * o;
+    let macs = planes * oh * ow * cg * kh * kw;
+    let oc_block = if macs >= tune::TUNE_MIN_MACS {
+        match tune::schedule_for("nn.conv2d", &[n, c, h, wd, o, kh, kw]) {
+            Schedule::Conv { oc_block } => oc_block.max(1),
+            Schedule::Gemm(_) => 1,
+        }
+    } else {
+        1
+    };
+
+    let plane = |out_plane: &mut [f32], idx: usize| {
+        let (ni, ocabs) = (idx / o, idx % o);
+        let g = ocabs / og;
+        for ic in 0..cg {
+            let icabs = g * cg + ic;
+            let xbase = (ni * c + icabs) * h * wd;
+            let wbase = (ocabs * cg + ic) * kh * kw;
+            for ky in 0..kh {
+                // Hoisted row bounds: iy = oy*s + ky - pad must land in
+                // [0, h).
+                let (oy0, oy1) = valid_range(oh, h, p.stride.0, ky, p.padding.0);
+                for kx in 0..kw {
+                    let wval = wv[wbase + ky * kw + kx];
+                    if wval == 0.0 {
+                        continue;
+                    }
+                    let (ox0, ox1) = valid_range(ow, wd, p.stride.1, kx, p.padding.1);
+                    for oy in oy0..oy1 {
+                        let iy = oy * p.stride.0 + ky - p.padding.0;
+                        let xrow = xbase + iy * wd;
+                        let orow = &mut out_plane[oy * ow..oy * ow + ow];
+                        if p.stride.1 == 1 {
+                            let ibase = xrow + ox0 + kx - p.padding.1;
+                            for (i, ov) in orow[ox0..ox1].iter_mut().enumerate() {
+                                *ov += wval * xv[ibase + i];
+                            }
+                        } else {
+                            for (ov, ox) in orow[ox0..ox1].iter_mut().zip(ox0..) {
+                                let ix = ox * p.stride.1 + kx - p.padding.1;
+                                *ov += wval * xv[xrow + ix];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    };
+
+    let plane_len = oh * ow;
+    if macs < PAR_MIN_MACS || planes <= 1 || parallel::kernel_threads() <= 1 {
+        for idx in 0..planes {
+            plane(&mut out[idx * plane_len..(idx + 1) * plane_len], idx);
+        }
+    } else {
+        let grain = parallel::chunk_size(planes, oc_block);
+        let n_chunks = planes.div_ceil(grain);
+        let shared = parallel::SplitMut::new(&mut out);
+        parallel::parallel_for(n_chunks, |ci| {
+            let lo = ci * grain;
+            let hi = (lo + grain).min(planes);
+            for idx in lo..hi {
+                // Safety: plane ranges are disjoint across chunks.
+                let out_plane = unsafe { shared.slice(idx * plane_len, plane_len) };
+                plane(out_plane, idx);
+            }
+        });
+    }
+    Tensor::new(vec![n, o, oh, ow], Storage::F32(Arc::new(out)))
+}
+
+/// `out` indices whose input coordinate `o*stride + k - pad` lands in
+/// `[0, extent)` — the padding test, solved once per kernel tap instead of
+/// per pixel.
+#[inline]
+fn valid_range(
+    out_extent: usize,
+    extent: usize,
+    stride: usize,
+    k: usize,
+    pad: usize,
+) -> (usize, usize) {
+    let lo = pad.saturating_sub(k).div_ceil(stride).min(out_extent);
+    let hi_num = (extent + pad) as isize - 1 - k as isize;
+    let hi = if hi_num < 0 {
+        0
+    } else {
+        ((hi_num as usize) / stride + 1).min(out_extent)
+    };
+    (lo, hi.max(lo))
+}
+
+/// The original direct loop (per-pixel padding branches, sequential): the
+/// differential baseline for [`conv2d`] and the fig17 "naive" column.
+pub fn conv2d_naive(x: &Tensor, w: &Tensor, p: &Conv2dParams) -> Tensor {
     assert_eq!(x.rank(), 4, "conv2d input rank");
     assert_eq!(w.rank(), 4, "conv2d weight rank");
     let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);

@@ -1,14 +1,44 @@
 //! Dense linear algebra: matmul, dense (w transposed), bias add.
 //!
-//! The f32 matmul is the interpreter's hot loop, so it is cache-blocked
-//! (i-k-j loop order over 64x64x64 tiles) — the same schedule idea the
-//! paper's TVM backend derives, hand-applied.
+//! The f32 GEMMs are cache-blocked, register-tiled, packed-panel kernels
+//! (the schedule family TVM derives for CPUs, hand-applied): the inner
+//! dimension is sliced into `kc`-deep blocks whose A/B panels are packed
+//! into contiguous, zero-padded scratch, and a fixed `MR x NR` register
+//! micro-kernel walks the panels. Outer row blocks (`mc` rows each) are
+//! data-parallelized across [`super::parallel`]'s worker pool; block
+//! extents come from [`super::tune`] (per-(op, shape) schedule registry,
+//! seeded at compile time by the `TuneKernels` pass).
+//!
+//! **Bit-exactness invariant:** every path — naive reference, tiled,
+//! tiled + parallel, any tile config — performs each output element's
+//! additions in ascending-`k` order starting from the destination value,
+//! and parallel chunks partition output *rows*, so results are bitwise
+//! identical across schedules and thread counts (asserted by
+//! `tests/kernels.rs`). Keep it that way: the micro-kernel loads its
+//! accumulator from the destination and stores it back, continuing the
+//! same chain across `kc` blocks.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
+use super::parallel;
+use super::tune::{self, Schedule, TileConfig};
 use super::{Storage, Tensor};
 
-const TILE: usize = 64;
+/// Register micro-tile: MR destination rows by NR columns (NR is the
+/// auto-vectorized lane count).
+const MR: usize = 4;
+const NR: usize = 8;
+
+/// Below this many multiply-adds the blocked kernel runs in its simple
+/// single-block form and never consults the tuner or the pool.
+const PAR_MIN_MACS: usize = 1 << 16;
+
+thread_local! {
+    /// Packed A/B panel scratch, reused across kernel launches per thread.
+    static PANELS: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// `a (m,k) @ b (k,n) -> (m,n)` for f32.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -33,33 +63,41 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut [f32]) {
     let (m, n) = matmul_dims(a, b);
     let k = a.shape()[1];
     assert_eq!(out.len(), m * n, "matmul destination length");
-    let av = a.as_f32();
-    let bv = b.as_f32();
-    // i-k-j over tiles: the innermost j loop is a contiguous FMA that the
-    // compiler auto-vectorizes.
-    for i0 in (0..m).step_by(TILE) {
-        let i1 = (i0 + TILE).min(m);
-        for k0 in (0..k).step_by(TILE) {
-            let k1 = (k0 + TILE).min(k);
-            for i in i0..i1 {
-                let arow = &av[i * k..(i + 1) * k];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bv[kk * n..(kk + 1) * n];
-                    for (o, &bj) in orow.iter_mut().zip(brow.iter()) {
-                        *o += aik * bj;
-                    }
-                }
+    let cfg = gemm_schedule("matmul", m, k, n);
+    let (av, bv) = (a.as_f32(), b.as_f32());
+    gemm(av, bv, out, m, k, n, BLayout::RowMajorKxN, cfg);
+}
+
+/// [`matmul_into`] with an explicit tile config, sequential — the tuner's
+/// probe hook (every config is bit-identical; only timing differs).
+pub fn matmul_into_with(a: &Tensor, b: &Tensor, out: &mut [f32], cfg: TileConfig) {
+    let (m, n) = matmul_dims(a, b);
+    let k = a.shape()[1];
+    assert_eq!(out.len(), m * n, "matmul destination length");
+    gemm_rows(a.as_f32(), b.as_f32(), out, 0, m, k, n, BLayout::RowMajorKxN, cfg);
+}
+
+/// Textbook triple-nest reference (ascending-`k` accumulation): the
+/// differential baseline for the tiled kernels and the fig17 "naive"
+/// column. Accumulates into `out` like [`matmul_into`].
+pub fn matmul_naive_into(a: &Tensor, b: &Tensor, out: &mut [f32]) {
+    let (m, n) = matmul_dims(a, b);
+    let k = a.shape()[1];
+    assert_eq!(out.len(), m * n, "matmul destination length");
+    let (av, bv) = (a.as_f32(), b.as_f32());
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = out[i * n + j];
+            for kk in 0..k {
+                acc += av[i * k + kk] * bv[kk * n + j];
             }
+            out[i * n + j] = acc;
         }
     }
 }
 
-/// Batched matmul `a (b,m,k) @ w (b,k,n)`.
+/// Batched matmul `a (b,m,k) @ w (b,k,n)`, per-batch through the tiled
+/// kernel directly on the buffer slices (no per-batch tensor copies).
 pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.rank(), 3);
     assert_eq!(b.rank(), 3);
@@ -67,17 +105,20 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (bs2, k2, n) = (b.shape()[0], b.shape()[1], b.shape()[2]);
     assert_eq!(bs, bs2);
     assert_eq!(k, k2);
-    let mut out = Vec::with_capacity(bs * m * n);
+    let cfg = gemm_schedule("nn.batch_matmul", m, k, n);
+    let (av, bv) = (a.as_f32(), b.as_f32());
+    let mut out = vec![0f32; bs * m * n];
     for i in 0..bs {
-        let sa = Tensor::from_f32(
-            vec![m, k],
-            a.as_f32()[i * m * k..(i + 1) * m * k].to_vec(),
+        gemm(
+            &av[i * m * k..(i + 1) * m * k],
+            &bv[i * k * n..(i + 1) * k * n],
+            &mut out[i * m * n..(i + 1) * m * n],
+            m,
+            k,
+            n,
+            BLayout::RowMajorKxN,
+            cfg,
         );
-        let sb = Tensor::from_f32(
-            vec![k, n],
-            b.as_f32()[i * k * n..(i + 1) * k * n].to_vec(),
-        );
-        out.extend_from_slice(matmul(&sa, &sb).as_f32());
     }
     Tensor::new(vec![bs, m, n], Storage::F32(Arc::new(out)))
 }
@@ -99,23 +140,251 @@ fn dense_dims(x: &Tensor, w: &Tensor) -> (usize, usize) {
 }
 
 /// The accumulate step of [`dense`], writing into a caller-supplied zeroed
-/// `(m*n)` destination instead of allocating.
+/// `(m*n)` destination instead of allocating. The `(n,k)` weight is
+/// transpose-packed into the same panel layout the matmul uses, so both
+/// share one micro-kernel.
 pub fn dense_into(x: &Tensor, w: &Tensor, out: &mut [f32]) {
     let (m, n) = dense_dims(x, w);
     let k = x.shape()[1];
     assert_eq!(out.len(), m * n, "dense destination length");
-    let xv = x.as_f32();
-    let wv = w.as_f32();
+    let cfg = gemm_schedule("nn.dense", m, k, n);
+    gemm(x.as_f32(), w.as_f32(), out, m, k, n, BLayout::RowMajorNxK, cfg);
+}
+
+/// Triple-nest dense reference (dot products, ascending-`k`): the
+/// differential baseline. Accumulates into `out` like [`dense_into`].
+pub fn dense_naive_into(x: &Tensor, w: &Tensor, out: &mut [f32]) {
+    let (m, n) = dense_dims(x, w);
+    let k = x.shape()[1];
+    assert_eq!(out.len(), m * n, "dense destination length");
+    let (xv, wv) = (x.as_f32(), w.as_f32());
     for i in 0..m {
-        let xrow = &xv[i * k..(i + 1) * k];
         for j in 0..n {
-            let wrow = &wv[j * k..(j + 1) * k];
-            let mut acc = 0f32;
-            for (xk, wk) in xrow.iter().zip(wrow.iter()) {
-                acc += xk * wk;
+            let mut acc = out[i * n + j];
+            for kk in 0..k {
+                acc += xv[i * k + kk] * wv[j * k + kk];
             }
             out[i * n + j] = acc;
         }
+    }
+}
+
+/// How the `(k x n)` logical B matrix is stored.
+#[derive(Clone, Copy)]
+enum BLayout {
+    /// matmul: `b[kk * n + j]`.
+    RowMajorKxN,
+    /// dense: the weight is `(n, k)`, so `b[j * k + kk]`.
+    RowMajorNxK,
+}
+
+impl BLayout {
+    #[inline(always)]
+    fn at(self, bv: &[f32], k: usize, n: usize, kk: usize, j: usize) -> f32 {
+        match self {
+            BLayout::RowMajorKxN => bv[kk * n + j],
+            BLayout::RowMajorNxK => bv[j * k + kk],
+        }
+    }
+}
+
+/// The tuned (or heuristic) schedule for a GEMM launch.
+fn gemm_schedule(op: &'static str, m: usize, k: usize, n: usize) -> TileConfig {
+    if m * k * n < tune::TUNE_MIN_MACS {
+        return TileConfig { mc: m.max(1), kc: k.max(1), nc: n.max(1) };
+    }
+    match tune::schedule_for(op, &[m, k, n]) {
+        Schedule::Gemm(t) => t,
+        Schedule::Conv { .. } => TileConfig { mc: 64, kc: 256, nc: 256 },
+    }
+}
+
+/// Top-level GEMM: split output rows into `mc`-row slabs and fan the slabs
+/// out across the kernel pool. Each slab is computed independently by
+/// [`gemm_rows`]; splitting by rows means every output element is produced
+/// by exactly one chunk with an unchanged accumulation order, so the
+/// result is bitwise independent of the thread count.
+#[allow(clippy::too_many_arguments)]
+fn gemm(
+    av: &[f32],
+    bv: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    blayout: BLayout,
+    cfg: TileConfig,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mc = cfg.mc.clamp(1, m);
+    let n_slabs = m.div_ceil(mc);
+    if m * k * n < PAR_MIN_MACS || n_slabs <= 1 || parallel::kernel_threads() <= 1 {
+        gemm_rows(av, bv, out, 0, m, k, n, blayout, cfg);
+        return;
+    }
+    let shared = parallel::SplitMut::new(out);
+    parallel::parallel_for(n_slabs, |slab| {
+        let i0 = slab * mc;
+        let rows = mc.min(m - i0);
+        // Safety: slabs cover disjoint row ranges of `out`.
+        let slice = unsafe { shared.slice(i0 * n, rows * n) };
+        gemm_rows(av, bv, slice, i0, rows, k, n, blayout, cfg);
+    });
+}
+
+/// One row-slab of the blocked GEMM: `out_slab` holds rows
+/// `i0 .. i0 + rows` of the destination. Loop order kc -> (pack A) ->
+/// nc -> (pack B) -> MR-strip micro-kernels; the accumulator is loaded
+/// from and stored to the destination, so the per-element chain stays
+/// ascending-`k` across `kc` blocks.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    av: &[f32],
+    bv: &[f32],
+    out_slab: &mut [f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    blayout: BLayout,
+    cfg: TileConfig,
+) {
+    let kc = cfg.kc.clamp(1, k.max(1));
+    let nc = cfg.nc.clamp(1, n.max(1));
+    PANELS.with(|cell| {
+        let (ap, bp) = &mut *cell.borrow_mut();
+        for k0 in (0..k).step_by(kc) {
+            let kcur = kc.min(k - k0);
+            pack_a(av, ap, i0, rows, k, k0, kcur);
+            for j0 in (0..n).step_by(nc) {
+                let ncur = nc.min(n - j0);
+                let panels = ncur.div_ceil(NR);
+                pack_b(bv, bp, blayout, k, n, k0, kcur, j0, ncur);
+                for s in 0..rows.div_ceil(MR) {
+                    let r0 = s * MR;
+                    let rcur = MR.min(rows - r0);
+                    let a_strip = &ap[s * kcur * MR..];
+                    for p in 0..panels {
+                        let j = j0 + p * NR;
+                        let jcur = NR.min(n - j);
+                        micro_kernel(
+                            a_strip,
+                            &bp[p * kcur * NR..],
+                            kcur,
+                            out_slab,
+                            n,
+                            r0,
+                            rcur,
+                            j,
+                            jcur,
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Pack rows `i0..i0+rows`, columns `k0..k0+kcur` of A into MR-row strips:
+/// strip `s` is stored `[kk][r]`-major so the micro-kernel's broadcast
+/// loads are contiguous. Short strips are zero-padded.
+fn pack_a(
+    av: &[f32],
+    ap: &mut Vec<f32>,
+    i0: usize,
+    rows: usize,
+    k: usize,
+    k0: usize,
+    kcur: usize,
+) {
+    let strips = rows.div_ceil(MR);
+    // Strips sit at a kcur-sized stride; gemm_rows indexes by the same
+    // kcur when it slices strip `s` out for the micro-kernel.
+    let kc_stride = kcur.max(1);
+    ap.clear();
+    ap.resize(strips * kc_stride * MR, 0.0);
+    for s in 0..strips {
+        let r0 = s * MR;
+        let rcur = MR.min(rows - r0);
+        let base = s * kc_stride * MR;
+        for r in 0..rcur {
+            let arow = &av[(i0 + r0 + r) * k + k0..];
+            for kk in 0..kcur {
+                ap[base + kk * MR + r] = arow[kk];
+            }
+        }
+    }
+}
+
+/// Pack the `(k0..k0+kcur) x (j0..j0+ncur)` block of B into NR-wide
+/// panels, `[kk][c]`-major, zero-padding the last panel. For dense this is
+/// where the `(n,k)` weight gets transposed into the matmul layout — once
+/// per block, amortized over every row strip.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    bv: &[f32],
+    bp: &mut Vec<f32>,
+    blayout: BLayout,
+    k: usize,
+    n: usize,
+    k0: usize,
+    kcur: usize,
+    j0: usize,
+    ncur: usize,
+) {
+    let panels = ncur.div_ceil(NR);
+    let kc_stride = kcur.max(1);
+    bp.clear();
+    bp.resize(panels * kc_stride * NR, 0.0);
+    for p in 0..panels {
+        let j = j0 + p * NR;
+        let jcur = NR.min(j0 + ncur - j);
+        let base = p * kc_stride * NR;
+        for kk in 0..kcur {
+            for c in 0..jcur {
+                bp[base + kk * NR + c] = blayout.at(bv, k, n, k0 + kk, j + c);
+            }
+        }
+    }
+}
+
+/// The register micro-kernel: an `MR x NR` accumulator block, loaded from
+/// the destination, updated with `kcur` rank-1 steps in ascending-`k`
+/// order, stored back. The fixed-extent inner loops auto-vectorize; the
+/// zero-padded panel lanes compute garbage that is never stored.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    a_strip: &[f32],
+    b_panel: &[f32],
+    kcur: usize,
+    out_slab: &mut [f32],
+    n: usize,
+    r0: usize,
+    rcur: usize,
+    j: usize,
+    jcur: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for r in 0..rcur {
+        let orow = &out_slab[(r0 + r) * n + j..];
+        acc[r][..jcur].copy_from_slice(&orow[..jcur]);
+    }
+    for kk in 0..kcur {
+        let b = &b_panel[kk * NR..kk * NR + NR];
+        let a = &a_strip[kk * MR..kk * MR + MR];
+        for r in 0..MR {
+            let ar = a[r];
+            for c in 0..NR {
+                acc[r][c] += ar * b[c];
+            }
+        }
+    }
+    for r in 0..rcur {
+        let orow = &mut out_slab[(r0 + r) * n + j..];
+        orow[..jcur].copy_from_slice(&acc[r][..jcur]);
     }
 }
 
@@ -189,8 +458,10 @@ mod tests {
     }
 
     #[test]
-    fn matmul_matches_naive_large() {
-        // Exercise the tiling path (dims > TILE).
+    fn matmul_bitwise_matches_naive_large() {
+        // Exercise the blocked/packed path (dims past every tile edge)
+        // against the triple-nest reference — bit-for-bit, the invariant
+        // the whole schedule family is built on.
         let m = 70;
         let k = 65;
         let n = 80;
@@ -199,15 +470,35 @@ mod tests {
         let a = Tensor::from_f32(vec![m, k], av.clone());
         let b = Tensor::from_f32(vec![k, n], bv.clone());
         let got = matmul(&a, &b);
-        for i in [0, 1, m - 1] {
-            for j in [0, n / 2, n - 1] {
-                let mut acc = 0f32;
-                for kk in 0..k {
-                    acc += av[i * k + kk] * bv[kk * n + j];
-                }
-                assert!((got.as_f32()[i * n + j] - acc).abs() < 1e-3);
-            }
+        let mut naive = vec![0f32; m * n];
+        matmul_naive_into(&a, &b, &mut naive);
+        assert_eq!(got.as_f32(), &naive[..]);
+    }
+
+    #[test]
+    fn every_tile_config_is_bit_identical() {
+        let m = 37;
+        let k = 53;
+        let n = 41;
+        let a = Tensor::from_f32(
+            vec![m, k],
+            (0..m * k).map(|i| ((i * 11 % 23) as f32) - 11.0).collect(),
+        );
+        let b = Tensor::from_f32(
+            vec![k, n],
+            (0..k * n).map(|i| ((i * 3 % 17) as f32) - 8.0).collect(),
+        );
+        let mut reference = vec![0f32; m * n];
+        matmul_naive_into(&a, &b, &mut reference);
+        for cfg in crate::tensor::tune::gemm_candidates() {
+            let mut out = vec![0f32; m * n];
+            matmul_into_with(&a, &b, &mut out, cfg);
+            assert_eq!(out, reference, "config {cfg:?} diverged");
         }
+        // Degenerate tile extents still cover the matrix.
+        let mut out = vec![0f32; m * n];
+        matmul_into_with(&a, &b, &mut out, TileConfig { mc: 1, kc: 1, nc: 1 });
+        assert_eq!(out, reference);
     }
 
     #[test]

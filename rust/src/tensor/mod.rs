@@ -14,11 +14,13 @@ mod dtype;
 mod elementwise;
 mod linalg;
 mod manip;
+pub mod parallel;
 mod pool;
 mod quantized;
 mod random;
 mod reduce;
 pub mod shape;
+pub mod tune;
 
 pub use conv::*;
 pub use dtype::DType;
@@ -46,9 +48,10 @@ use crate::telemetry::Counter;
 /// [`crate::eval::LaunchCounter`] for memory planning): every *eligible*
 /// hot kernel execution (elementwise binary/unary, bias-add, clip) either
 /// reuses a dying input buffer (`hit`) or falls back to allocating a fresh
-/// output (`miss`). Kernels outside the hot set (matmul/dense/conv) are not
-/// counted — their output shape never matches an input, so "miss" would be
-/// meaningless there.
+/// output (`miss`). GEMM outputs join the hit column only when they steal
+/// a dead same-shape donor buffer ([`crate::op::inplace`]'s graveyard path
+/// and the VM's `AllocTensor` rezero) — donation never counts a miss,
+/// since those ops are outside the planner's eligible set.
 ///
 /// Counters are bumped on the executing thread into BOTH a global pair and
 /// a thread-local pair ([`thread_alloc_snapshot`]) so single-threaded tests

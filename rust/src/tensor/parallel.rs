@@ -1,0 +1,294 @@
+//! Process-wide kernel worker pool: chunked work-stealing over an atomic
+//! index (std-only — no rayon, no crossbeam).
+//!
+//! The tiled kernels in [`super::linalg`] / [`super::conv`] split their
+//! outer tile loop into independent chunks and run them through
+//! [`parallel_for`]. The pool is **lazily initialized** on the first call
+//! that actually wants more than one thread: `N-1` detached workers park
+//! on a condvar; each parallel region publishes one job (a chunk count
+//! plus a borrowed closure) and every participant — the caller included —
+//! claims chunks with a `fetch_add` on a shared atomic until the range is
+//! exhausted. The caller returns only after every chunk has *completed*
+//! (not merely been claimed), which is what makes lending the closure by
+//! reference sound.
+//!
+//! ## Thread-count resolution (once per process)
+//!
+//! 1. [`set_kernel_threads`] — the `--kernel-threads` CLI flag /
+//!    `ServerConfig::kernel_threads`, highest priority;
+//! 2. the `RELAY_KERNEL_THREADS` environment variable;
+//! 3. `std::thread::available_parallelism()`, capped at [`MAX_THREADS`].
+//!
+//! `N = 1` **bypasses the pool entirely** — no threads are spawned, every
+//! chunk runs inline on the caller — so single-threaded runs are exactly
+//! the sequential kernels (the deterministic mode CI uses). Parallel runs
+//! are *also* bit-identical to sequential ones for every kernel in this
+//! crate, because chunks partition disjoint output regions and the
+//! per-element accumulation order never depends on the split; the pool
+//! merely makes that property easy to audit (see `tensor/README.md`).
+//!
+//! The resolved width is exported as the `relay_kernel_pool_threads`
+//! gauge.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Upper bound on pool width: tensor kernels stop scaling long before
+/// this on the shapes the zoo serves, and a runaway env value must not
+/// spawn hundreds of threads.
+pub const MAX_THREADS: usize = 16;
+
+/// Programmatic override (0 = unset). Wins over the environment; must be
+/// set before the first parallel kernel runs to take effect (the CLI and
+/// the serving fleet set it at startup).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+static RESOLVED: OnceLock<usize> = OnceLock::new();
+
+/// Set the kernel-pool width (the `--kernel-threads` flag). Values are
+/// clamped to `1..=MAX_THREADS`. Calls after the width has been resolved
+/// (first parallel kernel) are ignored.
+pub fn set_kernel_threads(n: usize) {
+    OVERRIDE.store(n.clamp(1, MAX_THREADS), Ordering::SeqCst);
+}
+
+/// The resolved pool width (participants per parallel region, caller
+/// included). Resolution happens once and also publishes the
+/// `relay_kernel_pool_threads` gauge.
+pub fn kernel_threads() -> usize {
+    *RESOLVED.get_or_init(|| {
+        let n = resolve();
+        crate::telemetry::registry()
+            .gauge(crate::telemetry::registry::names::KERNEL_POOL_THREADS)
+            .set(n as i64);
+        n
+    })
+}
+
+fn resolve() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(s) = std::env::var("RELAY_KERNEL_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_THREADS);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// A borrowed chunk closure smuggled to the workers as a raw fat pointer.
+/// Soundness: the publishing caller blocks until `done == n_chunks`, and
+/// `done` counts *completed* chunks, so no worker can be inside the
+/// closure once the caller's borrow ends; workers that claim an index past
+/// the range never dereference the pointer at all.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+struct Job {
+    task: TaskPtr,
+    /// Next chunk to claim (the work-stealing index).
+    next: AtomicUsize,
+    n_chunks: usize,
+    /// Chunks fully executed — the caller's completion barrier.
+    done: AtomicUsize,
+}
+
+impl Job {
+    /// Claim-and-run until the chunk range is exhausted.
+    fn run_chunks(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.n_chunks {
+                return;
+            }
+            // Safety: see `TaskPtr` — the closure outlives every
+            // dereference because completion gates the caller's return.
+            unsafe { (*self.task.0)(i) };
+            self.done.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+struct Pool {
+    /// (generation, current job). Workers watch the generation so a
+    /// republished slot is never run twice by the same thread.
+    slot: Mutex<(u64, Option<std::sync::Arc<Job>>)>,
+    work: Condvar,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let p = Pool { slot: Mutex::new((0, None)), work: Condvar::new() };
+        for w in 0..kernel_threads().saturating_sub(1) {
+            std::thread::Builder::new()
+                .name(format!("relay-kernel-{w}"))
+                .spawn(worker_loop)
+                .expect("spawn kernel worker");
+        }
+        p
+    })
+}
+
+fn worker_loop() {
+    // Workers are spawned from inside POOL's get_or_init closure, so the
+    // cell may not be set yet when a worker gets scheduled — wait for it.
+    let p = loop {
+        if let Some(p) = POOL.get() {
+            break p;
+        }
+        std::thread::yield_now();
+    };
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = p.slot.lock().unwrap();
+            loop {
+                if g.0 != seen {
+                    seen = g.0;
+                    if let Some(j) = g.1.clone() {
+                        break j;
+                    }
+                }
+                g = p.work.wait(g).unwrap();
+            }
+        };
+        job.run_chunks();
+    }
+}
+
+/// Run `chunk(0..n_chunks)` across the pool. The caller always
+/// participates; with a pool width of 1 (or a single chunk) everything
+/// runs inline and the pool is never even initialized. Chunks must write
+/// disjoint output — the kernels split over output rows / channels, so
+/// each element is produced by exactly one chunk in an order independent
+/// of the split.
+pub fn parallel_for(n_chunks: usize, chunk: impl Fn(usize) + Sync) {
+    if n_chunks <= 1 || kernel_threads() <= 1 {
+        for i in 0..n_chunks {
+            chunk(i);
+        }
+        return;
+    }
+    let p = pool();
+    let task: &(dyn Fn(usize) + Sync) = &chunk;
+    let job = std::sync::Arc::new(Job {
+        task: TaskPtr(task as *const _),
+        next: AtomicUsize::new(0),
+        n_chunks,
+        done: AtomicUsize::new(0),
+    });
+    {
+        let mut g = p.slot.lock().unwrap();
+        g.0 += 1;
+        g.1 = Some(job.clone());
+        p.work.notify_all();
+    }
+    job.run_chunks();
+    // Completion barrier: claimed != completed, so spin until the last
+    // helper finishes its chunk (chunks are kernel-sized, never tiny).
+    while job.done.load(Ordering::SeqCst) < job.n_chunks {
+        std::thread::yield_now();
+    }
+    let mut g = p.slot.lock().unwrap();
+    // Retire only our own job: a concurrent caller may have published a
+    // newer one into the slot (it still completes — its caller runs every
+    // chunk itself if no worker picks it up).
+    if let Some(cur) = &g.1 {
+        if std::sync::Arc::ptr_eq(cur, &job) {
+            g.1 = None;
+        }
+    }
+}
+
+/// A mutable slice shared across parallel chunks. Each chunk carves out
+/// its own sub-slice with [`SplitMut::slice`]; the *caller* guarantees the
+/// ranges are disjoint (the kernels split by output rows / planes, so this
+/// is structural, not dynamic).
+pub struct SplitMut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+unsafe impl Send for SplitMut<'_> {}
+unsafe impl Sync for SplitMut<'_> {}
+
+impl<'a> SplitMut<'a> {
+    pub fn new(s: &'a mut [f32]) -> Self {
+        SplitMut { ptr: s.as_mut_ptr(), len: s.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// Carve out `start..start + len`.
+    ///
+    /// # Safety
+    /// Concurrent `slice` calls must cover disjoint ranges.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
+        assert!(start + len <= self.len, "SplitMut range out of bounds");
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+}
+
+/// Split `n` items into chunks of at least `grain`, at most
+/// `4 * kernel_threads()` chunks (enough slack for stealing to balance
+/// without drowning in tiny chunks). Returns the chunk size.
+pub fn chunk_size(n: usize, grain: usize) -> usize {
+    let max_chunks = 4 * kernel_threads();
+    n.div_ceil(max_chunks).max(grain).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_chunk_exactly_once() {
+        let n = 97;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn nested_and_concurrent_regions_complete() {
+        // Two threads racing parallel regions: both must complete even
+        // when one publish overwrites the other in the pool slot.
+        let total = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let local = AtomicU64::new(0);
+                        parallel_for(13, |i| {
+                            local.fetch_add(i as u64 + 1, Ordering::SeqCst);
+                        });
+                        assert_eq!(local.load(Ordering::SeqCst), (13 * 14) / 2);
+                        total.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn chunk_size_respects_grain_and_width() {
+        assert!(chunk_size(1000, 8) >= 8);
+        assert!(chunk_size(3, 1) >= 1);
+        assert_eq!(chunk_size(0, 4), 4);
+    }
+}

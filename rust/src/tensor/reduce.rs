@@ -142,24 +142,52 @@ pub fn log_softmax(x: &Tensor, axis: i64) -> Tensor {
 }
 
 /// Apply `f` to each 1-d lane along `axis` of an f32 tensor.
-fn map_lanes(x: &Tensor, axis: usize, f: impl Fn(&[f32], &mut [f32])) -> Tensor {
+///
+/// Large tensors are parallelized over the *outer* dimension: every lane
+/// is a disjoint set of output elements and `f` runs per-lane, so the
+/// split cannot change any result bit (softmax/log_softmax stay exact
+/// under `RELAY_KERNEL_THREADS > 1`).
+fn map_lanes(x: &Tensor, axis: usize, f: impl Fn(&[f32], &mut [f32]) + Sync) -> Tensor {
     let xv = x.as_f32();
     let d = x.shape()[axis];
     let inner: usize = x.shape()[axis + 1..].iter().product();
     let outer: usize = x.shape()[..axis].iter().product();
     let mut out = vec![0f32; x.numel()];
-    let mut lane = vec![0f32; d];
-    let mut res = vec![0f32; d];
-    for o in 0..outer {
+    let slab = d * inner;
+    let run = |out_slab: &mut [f32], o: usize| {
+        let mut lane = vec![0f32; d];
+        let mut res = vec![0f32; d];
         for i in 0..inner {
             for j in 0..d {
                 lane[j] = xv[(o * d + j) * inner + i];
             }
             f(&lane, &mut res);
             for j in 0..d {
-                out[(o * d + j) * inner + i] = res[j];
+                out_slab[j * inner + i] = res[j];
             }
         }
+    };
+    const PAR_MIN_ELEMS: usize = 1 << 15;
+    if outer <= 1
+        || outer * slab < PAR_MIN_ELEMS
+        || super::parallel::kernel_threads() <= 1
+    {
+        for o in 0..outer {
+            run(&mut out[o * slab..(o + 1) * slab], o);
+        }
+    } else {
+        let grain = super::parallel::chunk_size(outer, 1);
+        let n_chunks = outer.div_ceil(grain);
+        let shared = super::parallel::SplitMut::new(&mut out);
+        super::parallel::parallel_for(n_chunks, |ci| {
+            let lo = ci * grain;
+            let hi = (lo + grain).min(outer);
+            for o in lo..hi {
+                // Safety: outer slabs are disjoint across chunks.
+                let out_slab = unsafe { shared.slice(o * slab, slab) };
+                run(out_slab, o);
+            }
+        });
     }
     Tensor::new(x.shape().to_vec(), Storage::F32(Arc::new(out)))
 }

@@ -1,0 +1,289 @@
+//! Per-(op, shape) tile-size tuning — a lightweight take on TVM's
+//! schedule search (the machinery Relay §4 leans on for its CPU numbers).
+//!
+//! The tiled GEMM/conv kernels in [`super::linalg`] / [`super::conv`] are
+//! parameterized by a [`Schedule`] (cache-block extents; the register
+//! micro-tile is fixed). This module owns:
+//!
+//! * a small **candidate lattice** ([`gemm_candidates`]) of tile configs;
+//! * a **static heuristic** ([`heuristic`]) that picks one from the
+//!   problem geometry — the default, used when probing is off;
+//! * an optional **one-shot probe** (`RELAY_TUNE_PROBE=1`): time each
+//!   candidate once on a clamped copy of the problem and keep the
+//!   fastest — a compile-time cost paid once per (op, shape);
+//! * the process-wide **schedule registry**: the `TuneKernels` pass seeds
+//!   it at compile time for every statically-shaped dense/matmul/conv
+//!   call it finds, the kernels consult it at launch, and
+//!   `eval::ProgramCache` snapshots the decisions next to the compiled
+//!   artifact (visible in `relay dump-passes` and `relay run --profile`).
+//!
+//! A schedule only changes *blocking*, never the per-element accumulation
+//! order, so every candidate computes bit-identical results — tuning is
+//! purely a performance decision and deliberately not part of the
+//! program-cache key.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::Tensor;
+
+/// Cache-block extents for the tiled GEMM kernels: `mc` rows of the
+/// output are processed per parallel chunk, over `kc`-deep slices of the
+/// inner dimension and `nc`-wide column blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+/// The tuned schedule for one kernel family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// matmul / dense / batch_matmul blocking.
+    Gemm(TileConfig),
+    /// Direct conv: output-channel block per parallel chunk.
+    Conv { oc_block: usize },
+}
+
+impl Schedule {
+    /// Compact label for pass traces and profiler rows.
+    pub fn label(&self) -> String {
+        match self {
+            Schedule::Gemm(t) => format!("mc{}·kc{}·nc{}", t.mc, t.kc, t.nc),
+            Schedule::Conv { oc_block } => format!("ocb{oc_block}"),
+        }
+    }
+}
+
+/// One tuning decision, as cached in the `ProgramCache` entry.
+#[derive(Clone, Debug)]
+pub struct TunedKernel {
+    pub op: &'static str,
+    /// GEMM: `[m, k, n]`; conv: `[n, c, h, w, oc, kh, kw]`. A leading 0
+    /// marks a symbolic (batch-polymorphic) dimension.
+    pub dims: Vec<usize>,
+    pub schedule: Schedule,
+}
+
+impl TunedKernel {
+    pub fn render(&self) -> String {
+        format!("{} {:?} -> {}", self.op, self.dims, self.schedule.label())
+    }
+}
+
+/// Kernels below this many multiply-adds never consult the registry or
+/// the pool — a fixed small schedule is fastest and keeps tiny-op
+/// dispatch overhead at zero.
+pub const TUNE_MIN_MACS: usize = 1 << 12;
+
+type Key = (&'static str, Vec<usize>);
+
+fn registry() -> &'static Mutex<HashMap<Key, Schedule>> {
+    static REG: OnceLock<Mutex<HashMap<Key, Schedule>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The candidate lattice the probe searches (the heuristic picks inside
+/// the same space, so probing can only refine, never diverge).
+pub fn gemm_candidates() -> Vec<TileConfig> {
+    let mut v = Vec::new();
+    for &mc in &[32usize, 64, 128] {
+        for &kc in &[128usize, 256] {
+            for &nc in &[256usize, 512] {
+                v.push(TileConfig { mc, kc, nc });
+            }
+        }
+    }
+    v
+}
+
+/// Static schedule choice from problem geometry: `kc` sized so a packed
+/// panel stays L1-resident, `nc` so the streamed block stays L2-resident,
+/// `mc` as the parallel grain.
+pub fn heuristic(op: &'static str, dims: &[usize]) -> Schedule {
+    match op {
+        "nn.conv2d" | "nn.conv2d_transpose" => {
+            // dims[4] = output channels when known; one channel per chunk
+            // is plenty below ~64 channels, then block by 4.
+            let oc = dims.get(4).copied().unwrap_or(0);
+            Schedule::Conv { oc_block: if oc >= 64 { 4 } else { 1 } }
+        }
+        _ => {
+            let (m, k, n) = gemm_dims_of(dims);
+            let kc = k.clamp(1, 256);
+            let nc = n.clamp(1, if k >= 512 { 256 } else { 512 });
+            let mc = if m == 0 { 64 } else { m.clamp(1, 64) };
+            Schedule::Gemm(TileConfig { mc, kc, nc })
+        }
+    }
+}
+
+fn gemm_dims_of(dims: &[usize]) -> (usize, usize, usize) {
+    match dims {
+        [m, k, n] => (*m, *k, *n),
+        _ => (0, 0, 0),
+    }
+}
+
+/// The schedule a kernel should run with *right now*: exact-shape registry
+/// entry, then the batch-polymorphic entry (`m = 0`), then the heuristic.
+/// Never blocks compile-time probing into the launch path.
+pub fn schedule_for(op: &'static str, dims: &[usize]) -> Schedule {
+    let reg = registry().lock().unwrap();
+    if let Some(s) = reg.get(&(op, dims.to_vec())) {
+        return *s;
+    }
+    if dims.len() == 3 {
+        let poly = vec![0, dims[1], dims[2]];
+        if let Some(s) = reg.get(&(op, poly)) {
+            return *s;
+        }
+    }
+    drop(reg);
+    heuristic(op, dims)
+}
+
+/// The registered schedule's label, if this (op, shape) was tuned at
+/// compile time — `None` falls back to the heuristic label at the caller.
+pub fn tuned_label(op: &'static str, dims: &[usize]) -> Option<String> {
+    let reg = registry().lock().unwrap();
+    reg.get(&(op, dims.to_vec()))
+        .or_else(|| {
+            if dims.len() == 3 {
+                reg.get(&(op, vec![0, dims[1], dims[2]]))
+            } else {
+                None
+            }
+        })
+        .map(|s| s.label())
+}
+
+/// Ensure a tuning decision exists for `(op, dims)`: registry hit returns
+/// the cached choice (idempotent — re-compiles and cache snapshots never
+/// re-probe); a miss runs the probe (when `RELAY_TUNE_PROBE=1`) or the
+/// heuristic, stores the decision, and bumps
+/// `relay_tuned_schedules_total`.
+pub fn ensure(op: &'static str, dims: Vec<usize>) -> TunedKernel {
+    if let Some(s) = registry().lock().unwrap().get(&(op, dims.clone())) {
+        return TunedKernel { op, dims, schedule: *s };
+    }
+    let schedule = if probe_enabled() && is_gemm(op) {
+        probe_gemm(&dims)
+    } else {
+        heuristic(op, &dims)
+    };
+    let mut reg = registry().lock().unwrap();
+    let fresh = reg.insert((op, dims.clone()), schedule).is_none();
+    drop(reg);
+    if fresh {
+        crate::telemetry::registry()
+            .counter(crate::telemetry::registry::names::TUNED_SCHEDULES_TOTAL)
+            .inc();
+    }
+    TunedKernel { op, dims, schedule }
+}
+
+/// Number of decisions currently in the registry (test/bench hook).
+pub fn tuned_count() -> usize {
+    registry().lock().unwrap().len()
+}
+
+fn is_gemm(op: &str) -> bool {
+    matches!(op, "nn.dense" | "matmul" | "nn.batch_matmul")
+}
+
+fn probe_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        std::env::var("RELAY_TUNE_PROBE").map(|v| v == "1").unwrap_or(false)
+    })
+}
+
+/// One-shot probe: run every lattice candidate once on a clamped version
+/// of the problem (so compile time stays bounded on huge shapes — tile
+/// choice is governed by cache footprints, which saturate well below the
+/// clamp) and keep the fastest. Candidates are bit-identical, so this is
+/// timing-only.
+fn probe_gemm(dims: &[usize]) -> Schedule {
+    let (m, k, n) = gemm_dims_of(dims);
+    let (pm, pk, pn) = (m.clamp(1, 256), k.clamp(1, 512), n.clamp(1, 512));
+    let a = Tensor::from_f32(vec![pm, pk], vec![1.0; pm * pk]);
+    let b = Tensor::from_f32(vec![pk, pn], vec![1.0; pk * pn]);
+    let mut best: Option<(std::time::Duration, TileConfig)> = None;
+    let mut out = vec![0f32; pm * pn];
+    for cand in gemm_candidates() {
+        out.fill(0.0);
+        let t0 = std::time::Instant::now();
+        super::linalg::matmul_into_with(&a, &b, &mut out, cand);
+        let dt = t0.elapsed();
+        if best.map(|(bt, _)| dt < bt).unwrap_or(true) {
+            best = Some((dt, cand));
+        }
+    }
+    let picked = best.expect("non-empty candidate lattice").1;
+    // Re-clamp to the real geometry (the probe ran on clipped dims).
+    Schedule::Gemm(TileConfig {
+        mc: picked.mc.min(if m == 0 { picked.mc } else { m.max(1) }),
+        kc: picked.kc.min(k.max(1)),
+        nc: picked.nc.min(n.max(1)),
+    })
+}
+
+/// Snapshot type stored in each `ProgramCache` entry.
+pub type ScheduleSet = Arc<Vec<TunedKernel>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heuristic_stays_inside_problem_bounds() {
+        let Schedule::Gemm(t) = heuristic("nn.dense", &[3, 5, 7]) else {
+            panic!("gemm op got a non-gemm schedule");
+        };
+        assert!(t.mc <= 3 && t.kc <= 5 && t.nc <= 7);
+        let Schedule::Gemm(big) = heuristic("matmul", &[1024, 1024, 1024]) else {
+            panic!()
+        };
+        assert!(big.kc <= 256 && big.nc <= 512);
+        assert!(matches!(
+            heuristic("nn.conv2d", &[1, 3, 32, 32, 64, 3, 3]),
+            Schedule::Conv { .. }
+        ));
+    }
+
+    #[test]
+    fn ensure_is_idempotent_and_counts_once() {
+        let c = crate::telemetry::registry()
+            .counter(crate::telemetry::registry::names::TUNED_SCHEDULES_TOTAL);
+        // The counter is process-global and other tests may insert fresh
+        // keys concurrently; retry with a new key until an attempt sees a
+        // clean window. A genuine double-count makes every attempt read
+        // `before + 2`, so the regression still fails deterministically.
+        let mut observed_exactly_one = false;
+        for salt in 0..10 {
+            let dims = vec![17 + salt, 19, 23];
+            let before = c.get();
+            let first = ensure("nn.dense", dims.clone());
+            let again = ensure("nn.dense", dims.clone());
+            assert_eq!(first.schedule, again.schedule);
+            assert_eq!(schedule_for("nn.dense", &dims), first.schedule);
+            if c.get() == before + 1 {
+                observed_exactly_one = true;
+                break;
+            }
+        }
+        assert!(observed_exactly_one, "second ensure must not re-count");
+    }
+
+    #[test]
+    fn poly_batch_entry_serves_concrete_batches() {
+        let tuned = ensure("matmul", vec![0, 31, 37]);
+        // A concrete batch with no exact entry falls through to the
+        // symbolic one.
+        assert_eq!(schedule_for("matmul", &[9, 31, 37]), tuned.schedule);
+        assert!(tuned_label("matmul", &[9, 31, 37]).is_some());
+        assert!(tuned_label("matmul", &[9, 31, 38]).is_none());
+    }
+}

@@ -84,6 +84,27 @@ fn collect_owned(regs: &mut [Value], list: &[Reg], kills: &[Reg]) -> Vec<Value> 
         .collect()
 }
 
+/// `AllocTensor`'s register-reuse fast path (the slot-arena donor, VM
+/// side): when the destination register still holds a dead, uniquely-owned
+/// f32 tensor of exactly the requested shape — a value the liveness pass
+/// never moved out because nothing read it again — zero that buffer in
+/// place instead of allocating. Counted as an in-place hit in
+/// `AllocStats` / `relay_inplace_hits_total`. Shared or mismatched values
+/// fall through to a fresh allocation.
+fn rezero_in_place(slot: &mut Value, shape: &[usize], dtype: DType) -> bool {
+    if dtype != DType::F32 {
+        return false;
+    }
+    let Value::Tensor(t) = slot else { return false };
+    if t.shape() != shape {
+        return false;
+    }
+    let Some(buf) = t.try_unique_f32() else { return false };
+    buf.fill(0.0);
+    tensor::note_inplace_hit();
+    true
+}
+
 /// [`collect_owned`] with every register treated as dying — used by the
 /// tail-call and return paths, where the frame is abandoned immediately.
 fn drain_args(regs: &mut [Value], list: &[Reg]) -> Vec<Value> {
@@ -216,7 +237,10 @@ impl<'p> Vm<'p> {
                     frame.regs[*dst as usize] = self.program.consts[*idx as usize].clone();
                 }
                 Instr::AllocTensor { dst, shape, dtype } => {
-                    frame.regs[*dst as usize] = Value::Tensor(Tensor::zeros(shape, *dtype));
+                    let slot = &mut frame.regs[*dst as usize];
+                    if !rezero_in_place(slot, shape, *dtype) {
+                        *slot = Value::Tensor(Tensor::zeros(shape, *dtype));
+                    }
                 }
                 Instr::AllocTuple { dst, items } => {
                     let vs = collect_owned(&mut frame.regs, items, dying);
@@ -947,6 +971,65 @@ mod tests {
         assert!(got.bits_eq(&expect));
         assert_eq!(after.misses_since(&before), 0, "chain step fell back to allocating");
         assert_eq!(after.hits_since(&before), 3);
+    }
+
+    #[test]
+    fn alloc_tensor_rezeroes_a_dead_same_shape_register() {
+        // Uniquely-owned, shape-matched f32 register → zeroed in place,
+        // exactly one in-place hit recorded.
+        let before = tensor::thread_alloc_snapshot();
+        let mut slot = Value::Tensor(Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]));
+        assert!(rezero_in_place(&mut slot, &[2, 2], DType::F32));
+        assert_eq!(slot.tensor().as_f32(), &[0.0; 4]);
+        let after = tensor::thread_alloc_snapshot();
+        assert_eq!(after.hits_since(&before), 1);
+        // Shared, shape-mismatched, or non-tensor values fall through to a
+        // fresh allocation (and a shared buffer is never touched).
+        let shared = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let mut slot = Value::Tensor(shared.clone());
+        assert!(!rezero_in_place(&mut slot, &[2, 2], DType::F32));
+        assert_eq!(shared.as_f32(), &[1., 2., 3., 4.], "shared buffer mutated");
+        let mut slot = Value::Tensor(Tensor::from_f32(vec![4], vec![0.; 4]));
+        assert!(!rezero_in_place(&mut slot, &[2, 2], DType::F32));
+        assert!(!rezero_in_place(&mut Value::unit(), &[2, 2], DType::F32));
+    }
+
+    #[test]
+    fn repeated_alloc_tensor_reuses_the_register_buffer() {
+        use crate::vm::bytecode::VmFunc;
+        // Two AllocTensors into the same register (the register allocator
+        // reuses slots across dead values): the second finds the first's
+        // dead, uniquely-owned buffer and rezeroes it instead of
+        // allocating.
+        let f = VmFunc {
+            name: "main".into(),
+            params: 0,
+            captures: 0,
+            has_self: false,
+            nregs: 1,
+            code: vec![
+                Instr::AllocTensor { dst: 0, shape: vec![2, 2], dtype: DType::F32 },
+                Instr::AllocTensor { dst: 0, shape: vec![2, 2], dtype: DType::F32 },
+                Instr::Ret { src: 0 },
+            ],
+            kills: vec![vec![], vec![], vec![0]],
+        };
+        let p = Program {
+            funcs: vec![f],
+            consts: vec![],
+            packed: vec![],
+            ctor_names: vec![],
+            entry: 0,
+        };
+        let before = tensor::thread_alloc_snapshot();
+        let got = Vm::new(&p).run(vec![]).unwrap();
+        let after = tensor::thread_alloc_snapshot();
+        assert_eq!(got.tensor().as_f32(), &[0.0; 4]);
+        assert_eq!(
+            after.hits_since(&before),
+            1,
+            "second alloc should rezero the first register's buffer"
+        );
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Differential tests for the tiled, parallel tensor kernels
+//! (`tensor::linalg` / `tensor::conv` vs their naive reference loops).
+//!
+//! The tiled GEMM micro-kernel chains rank-1 updates in ascending-k order
+//! from the destination value, and the blocked conv preserves the naive
+//! kernel's per-element tap order — so both are **bit-identical** to the
+//! reference for every tile config and any worker-pool width. These tests
+//! therefore assert exact equality (stronger than an allclose budget),
+//! and CI runs the whole binary under both `RELAY_KERNEL_THREADS=1`
+//! (pool bypassed) and `=4` (parallel outer tiles).
+
+use relay::eval::{eval_main, run_with, CompileOptions, Executor, Value};
+use relay::ir::parse_module;
+use relay::pass::OptLevel;
+use relay::tensor::{
+    self, conv2d, conv2d_naive, dense_naive_into, matmul_naive_into, Conv2dParams, Rng,
+};
+use relay::zoo::{self, Model};
+
+/// Odd / prime / tiny extents that exercise every packing edge case:
+/// sub-micro-tile remainders in both m and n, k smaller than a block,
+/// and extents straddling the MR=4 / NR=8 register tile.
+const AWKWARD: [usize; 10] = [1, 2, 3, 5, 7, 13, 17, 31, 63, 65];
+
+fn sample(rng: &mut Rng) -> usize {
+    AWKWARD[rng.randint(0, AWKWARD.len() as i64) as usize]
+}
+
+#[test]
+fn matmul_is_bit_identical_to_naive_on_awkward_shapes() {
+    let mut rng = Rng::new(9001);
+    for case in 0..40 {
+        let (m, k, n) = (sample(&mut rng), sample(&mut rng), sample(&mut rng));
+        let a = rng.normal_tensor(&[m, k], 1.0);
+        let b = rng.normal_tensor(&[k, n], 1.0);
+        let mut want = vec![0f32; m * n];
+        matmul_naive_into(&a, &b, &mut want);
+        let got = tensor::matmul(&a, &b);
+        assert_eq!(
+            got.as_f32(),
+            &want[..],
+            "case {case}: matmul {m}x{k}x{n} diverged from naive"
+        );
+    }
+}
+
+#[test]
+fn dense_is_bit_identical_to_naive_on_awkward_shapes() {
+    let mut rng = Rng::new(4242);
+    for case in 0..40 {
+        let (m, k, n) = (sample(&mut rng), sample(&mut rng), sample(&mut rng));
+        let x = rng.normal_tensor(&[m, k], 1.0);
+        let w = rng.normal_tensor(&[n, k], 1.0);
+        let mut want = vec![0f32; m * n];
+        dense_naive_into(&x, &w, &mut want);
+        let got = tensor::dense(&x, &w);
+        assert_eq!(
+            got.as_f32(),
+            &want[..],
+            "case {case}: dense {m}x{k}x{n} diverged from naive"
+        );
+    }
+}
+
+#[test]
+fn big_gemm_crosses_every_block_boundary_bit_exactly() {
+    // Large enough to engage multiple kc/nc blocks, several mc slabs, and
+    // (when RELAY_KERNEL_THREADS > 1) the worker pool.
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (130, 300, 530);
+    let a = rng.normal_tensor(&[m, k], 1.0);
+    let b = rng.normal_tensor(&[k, n], 1.0);
+    let mut want = vec![0f32; m * n];
+    matmul_naive_into(&a, &b, &mut want);
+    assert_eq!(tensor::matmul(&a, &b).as_f32(), &want[..]);
+}
+
+#[test]
+fn conv2d_is_bit_identical_to_naive() {
+    let mut rng = Rng::new(1234);
+    let geoms: [(usize, usize, usize, usize, usize, usize, Conv2dParams); 5] = [
+        (1, 3, 9, 9, 5, 3, Conv2dParams::default()),
+        (2, 4, 7, 11, 8, 3, Conv2dParams { stride: (2, 2), padding: (1, 1), groups: 1 }),
+        (1, 6, 8, 8, 6, 3, Conv2dParams { stride: (1, 1), padding: (0, 0), groups: 2 }),
+        (1, 1, 13, 5, 3, 1, Conv2dParams { stride: (1, 2), padding: (2, 0), groups: 1 }),
+        (1, 8, 16, 16, 72, 3, Conv2dParams { stride: (1, 1), padding: (1, 1), groups: 1 }),
+    ];
+    for (case, (n, c, h, w, oc, ks, p)) in geoms.into_iter().enumerate() {
+        let x = rng.normal_tensor(&[n, c, h, w], 1.0);
+        let wt = rng.normal_tensor(&[oc, c / p.groups, ks, ks], 1.0);
+        let got = conv2d(&x, &wt, &p);
+        let want = conv2d_naive(&x, &wt, &p);
+        assert_eq!(got.shape(), want.shape(), "case {case}: shape diverged");
+        assert_eq!(
+            got.as_f32(),
+            want.as_f32(),
+            "case {case}: conv2d diverged from naive (n={n} c={c} {h}x{w} oc={oc} k={ks})"
+        );
+    }
+}
+
+/// End-to-end: a dense MLP, Nature-DQN (conv net), and the RNN run through
+/// the full -O3 pipeline (tiled kernels, tuner, planned executors) and
+/// match the unoptimized interpreter.
+#[test]
+fn zoo_models_match_interpreter_end_to_end_at_o3() {
+    // MLP: square-ish denses so the graveyard donor also engages.
+    let mlp = parse_module(
+        "def @main(%x: Tensor[(16, 32), float32], %w1: Tensor[(32, 32), float32], %w2: Tensor[(8, 32), float32]) {\n\
+           nn.dense(tanh(nn.dense(%x, %w1)), %w2)\n\
+         }",
+    )
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let mlp_args = vec![
+        Value::Tensor(rng.normal_tensor(&[16, 32], 1.0)),
+        Value::Tensor(rng.normal_tensor(&[32, 32], 1.0)),
+        Value::Tensor(rng.normal_tensor(&[8, 32], 1.0)),
+    ];
+    let (dqn, dqn_in) = zoo::vision::build(Model::NatureDqn, 11);
+    let dqn_args = vec![Value::Tensor(dqn_in)];
+    let (rnn, rnn_args) = zoo::nlp::build_nlp(Model::Rnn, 5);
+    let fixtures: [(&str, &relay::ir::Module, Vec<Value>, f32); 3] = [
+        ("mlp", &mlp, mlp_args, 1e-4),
+        ("nature-dqn", &dqn, dqn_args, 1e-2),
+        ("rnn", &rnn, rnn_args, 1e-4),
+    ];
+    for (name, m, args, tol) in fixtures {
+        let want = eval_main(m, args.clone()).unwrap();
+        let got = run_with(m, CompileOptions::at(Executor::Auto, OptLevel::O3), args)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        match (&want, &got.value) {
+            (Value::Tensor(x), Value::Tensor(y)) => assert!(
+                x.allclose(y, tol, tol),
+                "{name}: -O3 diverged (max diff {})",
+                x.max_abs_diff(y)
+            ),
+            (Value::Tuple(xs), Value::Tuple(ys)) => {
+                assert_eq!(xs.len(), ys.len(), "{name}: output arity changed");
+                for (x, y) in xs.iter().zip(ys) {
+                    assert!(x.tensor().allclose(y.tensor(), tol, tol), "{name}");
+                }
+            }
+            _ => panic!("{name}: output kind changed"),
+        }
+    }
+}
+
+/// The thread-pool override is honored and reported through telemetry:
+/// whatever width the kernels resolved to is published on the
+/// `relay_kernel_pool_threads` gauge, and a run under the tiled kernels
+/// produces the same bits as the naive reference regardless of width.
+#[test]
+fn kernel_pool_width_is_published_and_never_changes_results() {
+    let mut rng = Rng::new(77);
+    let a = rng.normal_tensor(&[96, 96], 1.0);
+    let b = rng.normal_tensor(&[96, 96], 1.0);
+    let mut want = vec![0f32; 96 * 96];
+    matmul_naive_into(&a, &b, &mut want);
+    assert_eq!(tensor::matmul(&a, &b).as_f32(), &want[..]);
+    let width = tensor::parallel::kernel_threads();
+    assert!(width >= 1);
+    let gauge = relay::telemetry::registry()
+        .gauge(relay::telemetry::registry::names::KERNEL_POOL_THREADS);
+    assert_eq!(gauge.get(), width as i64, "pool gauge disagrees with resolver");
+    if let Ok(v) = std::env::var("RELAY_KERNEL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                assert_eq!(width, n.min(16), "env override not honored");
+            }
+        }
+    }
+}
