@@ -1,0 +1,306 @@
+//! Chaos: the serving fleet under a *hostile compiler*. Fig 15 proved the
+//! front door survives execution faults; this bench proves the PR 10
+//! tentpole — compilation faults are contained at every layer:
+//!
+//! - **Phase 1 (fleet storm)**: a bucketed fleet whose every compile
+//!   fails ([`FaultConfig::compile_error_every`] = 1) with every 3rd
+//!   failure a *panic* ([`FaultConfig::compile_panic_every`] = 3) is
+//!   driven by closed-loop clients. Hard asserts: every request is
+//!   answered with a real prediction (zero `error:` replies — a dead
+//!   compiler degrades serving, it never errors a request), every
+//!   prediction is bit-identical to the interpreter on the same row,
+//!   nothing ever hangs (bounded p99, bounded storm wall), the breaker
+//!   opens and `Stats::compiles` stays 0.
+//! - **Phase 2 (breaker lifecycle, deterministic)**: a direct
+//!   [`RelayBackend`] with a switchable always-panicking compile hook
+//!   walks the full state machine: consecutive panics open the breaker
+//!   (scope `fig18-direct`); while open the bucket serves the
+//!   interpreter floor without touching the compiler; healing the hook
+//!   and waiting out the cooldown admits exactly one half-open probe
+//!   compile, which re-closes the breaker (`Stats::compiles` moves by
+//!   exactly 1).
+//!
+//! Results go to `BENCH_fig18_chaos.json`; the final `/metrics` snapshot
+//! (fetched over the real TCP front door, covering both phases) goes to
+//! `chaos_metrics.txt` for CI to grep: nonzero
+//! `relay_compile_failures_total`, nonzero
+//! `relay_degraded_executions_total{level="0"}`, the fleet breaker open
+//! (`scope="port-7477"` → 1) and the lifecycle breaker re-closed
+//! (`scope="fig18-direct"` → 0).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use relay::coordinator::server::{
+    classify_line, fallback_module, fetch_metrics, serve_handle, BreakerState,
+    FaultConfig, RelayBackend, ResilienceConfig, ServerConfig, Stats, FALLBACK_FEAT,
+};
+use relay::eval::{run_compiled, Compiled, CompileOptions, Executor, ProgramCache, Value};
+use relay::ir::Dim;
+use relay::pass::OptLevel;
+use relay::telemetry::registry::names;
+use relay::tensor::Tensor;
+
+const PORT: u16 = 7477;
+const CLIENTS: usize = 8;
+const WORKERS: usize = 2;
+const MAX_BATCH: usize = 4;
+const DEADLINE: Duration = Duration::from_secs(2);
+
+fn client_features(c: usize) -> Vec<f32> {
+    (0..FALLBACK_FEAT).map(|j| ((c * 7 + j) % 5) as f32 - 2.0).collect()
+}
+
+/// The interpreter's prediction for one feature row — the ground truth
+/// every degraded reply must match bit-for-bit. `fallback_module` has
+/// deterministic baked-in weights, so this is exactly the module the
+/// server floor-serves.
+fn interp_pred(features: &[f32]) -> i64 {
+    let x = Tensor::from_f32(vec![1, FALLBACK_FEAT], features.to_vec());
+    let interp = Compiled::Interp(Arc::new(fallback_module(Dim::Any)));
+    let out = run_compiled(&interp, vec![Value::Tensor(x)]).expect("interp reference");
+    relay::tensor::argmax(out.value.tensor(), 1).as_i64()[0]
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn main() {
+    let smoke = std::env::var_os("RELAY_BENCH_SMOKE").is_some();
+    let per_client: usize = if smoke { 15 } else { 40 };
+
+    // ---------------- Phase 1: fleet storm under a dead compiler --------
+    println!(
+        "Fig 18 (chaos), phase 1: {CLIENTS} closed-loop clients vs {WORKERS} \
+         worker(s); every compile fails, every 3rd compile panics"
+    );
+    let cfg = ServerConfig {
+        port: PORT,
+        artifact_dir: "definitely-missing-artifacts".into(),
+        executor: Executor::Vm,
+        opt_level: OptLevel::O3,
+        max_batch: MAX_BATCH,
+        workers: WORKERS,
+        default_deadline: DEADLINE,
+        poly: false, // bucketed: several artifacts, several breakers
+        breaker_threshold: 2,
+        // Keep the fleet breakers open for the whole storm: phase 1 proves
+        // open-state serving never touches the compiler; the half-open
+        // recovery is phase 2's deterministic job.
+        breaker_cooldown: Duration::from_secs(3600),
+        fault: Some(FaultConfig {
+            compile_panic_every: Some(3),
+            compile_error_every: Some(1),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = serve_handle(cfg, stop)
+        .expect("a dead compiler must not stop the fleet from starting");
+
+    // Ground truth per client, computed before the storm.
+    let expected: Vec<i64> = (0..CLIENTS).map(|c| interp_pred(&client_features(c))).collect();
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let want = expected[c];
+            std::thread::spawn(move || {
+                let features = client_features(c);
+                let mut latencies_ms = Vec::with_capacity(per_client);
+                let mut oks = 0u64;
+                for _ in 0..per_client {
+                    let t = Instant::now();
+                    let reply =
+                        classify_line(PORT, &features, None).expect("front door reply");
+                    latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    match reply.parse::<i64>() {
+                        Ok(pred) => {
+                            assert_eq!(
+                                pred, want,
+                                "client {c}: degraded prediction diverged from \
+                                 the interpreter"
+                            );
+                            oks += 1;
+                        }
+                        Err(_) => panic!(
+                            "client {c}: non-prediction reply under compile \
+                             chaos: {reply:?} — compile faults must degrade, \
+                             never error"
+                        ),
+                    }
+                }
+                (latencies_ms, oks)
+            })
+        })
+        .collect();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut oks = 0u64;
+    for c in clients {
+        let (lat, o) = c.join().expect("client thread — a hung waiter?");
+        latencies_ms.extend(lat);
+        oks += o;
+    }
+    let storm_secs = t0.elapsed().as_secs_f64();
+    let total = (CLIENTS * per_client) as u64;
+
+    // Every request answered with a prediction; no hangs anywhere.
+    assert_eq!(oks, total, "every request must be answered with a prediction");
+    assert!(storm_secs < 120.0, "storm took {storm_secs:.1}s — something wedged");
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let p50 = percentile(&latencies_ms, 0.50);
+    let p99 = percentile(&latencies_ms, 0.99);
+    assert!(
+        p99 <= 1_500.0,
+        "p99 {p99:.1}ms: degraded serving must stay far under the {}ms deadline",
+        DEADLINE.as_millis()
+    );
+
+    // Nothing ever compiled: the interpreter floor carried the fleet.
+    let fleet_stats = handle.stats();
+    let fleet_compiles = fleet_stats.compiles.load(Ordering::Relaxed);
+    assert_eq!(fleet_compiles, 0, "a dead compiler cannot have compiled anything");
+    // The size-1 bucket's breaker opened (warm-up failure + first batch).
+    assert!(
+        fleet_stats.panics.load(Ordering::Relaxed) == 0,
+        "compile faults must be contained in the cache, not surface as \
+         worker panics"
+    );
+
+    // ---------------- Phase 2: deterministic breaker lifecycle ----------
+    println!("Fig 18 (chaos), phase 2: breaker lifecycle on a direct backend");
+    let cache = Arc::new(ProgramCache::new());
+    let stats = Arc::new(Stats::new(1, OptLevel::O3));
+    let chaos = Arc::new(AtomicBool::new(true));
+    let chaos_h = chaos.clone();
+    cache.set_compile_hook(Arc::new(move |_m, _o| {
+        if chaos_h.load(Ordering::Relaxed) {
+            panic!("chaos: injected compile panic");
+        }
+        Ok(())
+    }));
+    let cooldown = Duration::from_millis(150);
+    let backend = RelayBackend::new_with(
+        2,
+        CompileOptions::at(Executor::Vm, OptLevel::O3),
+        cache.clone(),
+        stats.clone(),
+        ResilienceConfig {
+            max_opt_retries: 1,
+            breaker_threshold: 2,
+            breaker_cooldown: cooldown,
+            scope: "fig18-direct".to_string(),
+        },
+    )
+    .expect("tolerant construction under a panicking compiler");
+    // Warm-up panicked (failure 1 of 2): nothing compiled, breaker closed.
+    assert_eq!(stats.compiles.load(Ordering::Relaxed), 0);
+    assert_eq!(backend.breaker_state(0), BreakerState::Closed);
+
+    let row = client_features(0);
+    let rows: Vec<&[f32]> = vec![&row];
+    let want = expected[0];
+
+    // Failure 2 opens the breaker; the batch is still answered from the
+    // interpreter floor, bit-identical to the interpreter.
+    let run = backend.run_batch_timed(&rows).expect("degraded batch");
+    assert_eq!(run.degraded, Some(OptLevel::O0), "floor must carry the batch");
+    assert_eq!(run.preds, vec![want], "degraded preds diverged from the interpreter");
+    assert_eq!(backend.breaker_state(0), BreakerState::Open);
+
+    // Open: served without touching the compiler (no negative-cache
+    // replays, no compiles).
+    let replays = cache.negative_hits();
+    let run = backend.run_batch_timed(&rows).expect("open-state batch");
+    assert_eq!(run.degraded, Some(OptLevel::O0));
+    assert_eq!(run.preds, vec![want]);
+    assert_eq!(
+        cache.negative_hits(),
+        replays,
+        "an open breaker must not touch the compiler"
+    );
+    assert_eq!(stats.compiles.load(Ordering::Relaxed), 0);
+
+    // Heal the compiler and wait out the cooldown: the next resolve wins
+    // the half-open probe, compiles exactly once, and re-closes.
+    chaos.store(false, Ordering::Relaxed);
+    std::thread::sleep(cooldown + Duration::from_millis(100));
+    let run = backend.run_batch_timed(&rows).expect("probe batch");
+    assert_eq!(run.degraded, None, "probe success must restore the real tier");
+    assert_eq!(run.preds, vec![want], "tiers must agree on the prediction");
+    assert_eq!(backend.breaker_state(0), BreakerState::Closed);
+    let probe_compiles = stats.compiles.load(Ordering::Relaxed);
+    assert_eq!(probe_compiles, 1, "recovery must cost exactly one probe compile");
+
+    // Healthy steady state: memo hit, no further compiles.
+    let run = backend.run_batch_timed(&rows).expect("healthy batch");
+    assert!(run.compile_hit);
+    assert_eq!(stats.compiles.load(Ordering::Relaxed), 1);
+
+    // ---------------- Snapshot, report, shut down -----------------------
+    // One registry serves the whole process, so this single fetch (over
+    // the phase-1 fleet's real TCP front door, still listening) carries
+    // both phases' series for CI to grep.
+    let metrics = fetch_metrics(PORT).expect("fetch /metrics");
+    assert!(
+        metrics.contains("relay_compile_failures_total"),
+        "compile failures unrecorded: {metrics}"
+    );
+    assert!(
+        metrics.contains("relay_degraded_executions_total{level=\"0\"}"),
+        "degraded executions unrecorded: {metrics}"
+    );
+    assert!(
+        metrics.contains(&format!("scope=\"port-{PORT}\"")),
+        "fleet breaker gauges missing: {metrics}"
+    );
+    assert!(
+        metrics.contains("relay_breaker_state{bucket=\"2\",scope=\"fig18-direct\"} 0"),
+        "lifecycle breaker must end closed: {metrics}"
+    );
+    let r = relay::telemetry::registry();
+    assert_eq!(
+        r.gauge_with(names::BREAKER_STATE, &[("bucket", "2"), ("scope", "fig18-direct")])
+            .get(),
+        0,
+        "lifecycle breaker gauge must read closed"
+    );
+    handle.shutdown();
+
+    println!(
+        "{total} requests in {storm_secs:.2}s under compile chaos: {oks} ok \
+         (all bit-identical to interp), 0 errors, fleet compiles {fleet_compiles}; \
+         p50 {p50:.1}ms p99 {p99:.1}ms; breaker lifecycle: open -> 1 probe \
+         compile -> closed"
+    );
+
+    let json = format!(
+        "{{\n  \"figure\": \"18-chaos\",\n  \"description\": \"fault-contained \
+         compilation: every compile failing (every 3rd a panic) under \
+         {CLIENTS} closed-loop clients, plus the deterministic breaker \
+         lifecycle\",\n  \"rows\": [\n    {{\"requests\": {total}, \
+         \"ok\": {oks}, \"errors\": 0, \"fleet_compiles\": {fleet_compiles}, \
+         \"probe_compiles\": {probe_compiles}, \"breaker_final\": \"closed\", \
+         \"p50_ms\": {p50:.2}, \"p99_ms\": {p99:.2}, \
+         \"storm_secs\": {storm_secs:.2}}}\n  ]\n}}\n"
+    );
+    let at_root = std::path::Path::new("../ROADMAP.md").exists();
+    let json_path =
+        if at_root { "../BENCH_fig18_chaos.json" } else { "BENCH_fig18_chaos.json" };
+    match std::fs::write(json_path, &json) {
+        Ok(()) => println!("wrote {json_path}"),
+        Err(e) => eprintln!("could not write {json_path}: {e}"),
+    }
+    let metrics_path = if at_root { "../chaos_metrics.txt" } else { "chaos_metrics.txt" };
+    match std::fs::write(metrics_path, &metrics) {
+        Ok(()) => println!("wrote {metrics_path}"),
+        Err(e) => eprintln!("could not write {metrics_path}: {e}"),
+    }
+}

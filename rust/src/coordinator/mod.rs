@@ -6,6 +6,10 @@
 //! batcher over the PJRT executable, Python long gone — behind a resilient
 //! front door: bounded admission ([`queue`]), per-request deadlines, load
 //! shedding, and worker supervision (see `README.md` in this directory).
+//! Compilation itself is fault-contained: a panicking or failing compile
+//! degrades the affected bucket down the -O3 → -O1 → interpreter ladder
+//! and trips a per-bucket circuit breaker instead of erroring requests
+//! (`README.md`, "Failure containment").
 //!
 //! Every command routes through the same optimizing driver the executors
 //! use (`eval::CompileOptions` -> `pass::optimize_traced`): `run` compiles
@@ -189,8 +193,12 @@ pub fn usage() -> &'static str {
        relay serve [--port 7474] [--workers 4] [--opt 0|1|2|3] [--fixpoint]\n\
                    [--queue-budget 256] [--deadline-ms 1000]\n\
                    [--poly on|off] [--trace-json PATH] [--kernel-threads N]\n\
+                   [--max-opt-retries 1] [--breaker-threshold 3]\n\
+                   [--breaker-cooldown-ms 250]\n\
                                                  batched inference server\n\
-                                                 (--poly=off: bucketed baseline)\n\
+                                                 (--poly=off: bucketed baseline;\n\
+                                                  retries/breaker: see\n\
+                                                  coordinator/README.md)\n\
        relay metrics [--port 7474]           dump a running server's /metrics\n"
 }
 

@@ -72,6 +72,25 @@
 //! feature lines answers `GET /metrics` with the rendered registry, so
 //! `curl` and `relay metrics` need no second port.
 //!
+//! **Fault-contained compilation** (PR 10): every artifact carries a
+//! per-key [`CircuitBreaker`]. A compile failure — typed error *or*
+//! contained panic ([`crate::eval::cache`]'s `catch_unwind` guard) —
+//! counts against the breaker; after [`ResilienceConfig::breaker_threshold`]
+//! consecutive failures it **opens** and the bucket is served from its
+//! last-good artifact (or the `-O0` interpreter floor) without touching
+//! the compiler at all. After [`ResilienceConfig::breaker_cooldown`] the
+//! breaker **half-opens**: exactly one probe compile runs; success
+//! re-closes it, failure re-opens. While the compiler is unhealthy the
+//! degradation ladder (requested tier → `-O1` → interpreter) keeps every
+//! request answered with bit-identical results — only latency degrades.
+//! Breaker state is exported as `relay_breaker_state{bucket,scope}`
+//! (0 = closed, 1 = open, 2 = half-open), degraded batches as
+//! `relay_degraded_executions_total{level}`, and each degraded batch's
+//! spans carry a `compile_fallback` annotation. The wire protocol is
+//! hostile-input hardened: request lines are bounded at
+//! [`MAX_LINE_BYTES`], non-UTF-8 bytes get a typed reply, and a mid-line
+//! disconnect is processed-then-closed — a client can not panic a worker.
+//!
 //! See `README.md` in this directory for the wire protocol and the
 //! admission/shedding semantics in full.
 
@@ -119,6 +138,12 @@ const SUPERVISOR_POLL: Duration = Duration::from_millis(20);
 /// pathological failures (e.g. a PJRT setup that dies on every attempt) —
 /// the cap keeps that from becoming a spawn loop.
 pub const MAX_WORKER_RESPAWNS: usize = 16;
+
+/// Hard cap on one wire-protocol request line (64 KiB). A client that
+/// streams an unbounded line gets a typed `error: request line too long`
+/// reply and a closed connection instead of growing a worker-side buffer
+/// without limit.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
 
 pub struct ServerConfig {
     pub port: u16,
@@ -176,6 +201,18 @@ pub struct ServerConfig {
     /// (strictly sequential kernels). Applied process-wide at serve
     /// startup; the first kernel launch freezes the value.
     pub kernel_threads: usize,
+    /// Fallback rungs a failing artifact compile may take before the
+    /// interpreter floor (`--max-opt-retries`, default 1: allow the `-O1`
+    /// retry). The interpreter floor itself is always available to the
+    /// serving path — a compile failure degrades a request, never errors
+    /// it.
+    pub max_opt_retries: usize,
+    /// Consecutive compile failures on one artifact before its circuit
+    /// breaker opens (`--breaker-threshold`, default 3).
+    pub breaker_threshold: usize,
+    /// How long an open breaker waits before half-opening for a single
+    /// probe compile (`--breaker-cooldown-ms`, default 250ms).
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for ServerConfig {
@@ -195,21 +232,27 @@ impl Default for ServerConfig {
             fault: None,
             poly: true,
             kernel_threads: 0,
+            max_opt_retries: 1,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
         }
     }
 }
 
-/// Fallback model dims for the compiled-relay backend.
-const FALLBACK_FEAT: usize = 16;
+/// Feature width of the fallback model (rows are padded/truncated here).
+pub const FALLBACK_FEAT: usize = 16;
 const FALLBACK_HIDDEN: usize = 32;
-const FALLBACK_CLASSES: usize = 4;
+/// Number of output classes the fallback model predicts.
+pub const FALLBACK_CLASSES: usize = 4;
 
 /// A small MLP classifier with baked-in deterministic weights, served when
 /// no AOT artifact is available. The batch dimension is whatever the
 /// caller passes: `Dim::Any` yields the shape-polymorphic module (one
 /// artifact for every batch size, §3.3.1), `Dim::Known(n)` the fixed-shape
-/// module the bucketed baseline pads to.
-fn fallback_module(batch: Dim) -> Module {
+/// module the bucketed baseline pads to. Public so the chaos bench can
+/// build an interpreter reference for the bit-identical degradation check
+/// (deterministic weights: every call returns the same module).
+pub fn fallback_module(batch: Dim) -> Module {
     let mut w = crate::zoo::Weights::new(17);
     let x = Var::fresh("x");
     let h = ir::op_call(
@@ -373,6 +416,11 @@ pub struct BatchRun {
     /// True when the program came from a memo or cache rather than being
     /// compiled by this call.
     pub compile_hit: bool,
+    /// `Some(level)` when the degradation ladder served this batch below
+    /// the requested tier (`O1` = the retry rung, `O0` = the interpreter
+    /// floor); `None` on the healthy path. Carried into each member
+    /// request's span as the `compile_fallback` annotation.
+    pub degraded: Option<OptLevel>,
 }
 
 /// Zero-pad feature rows into a `(batch, feat)` input tensor. Rows longer
@@ -473,6 +521,161 @@ fn bucket_sizes(cap: usize) -> Vec<usize> {
     out
 }
 
+/// Circuit-breaker states, encoded on the `relay_breaker_state` gauge as
+/// 0 / 1 / 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: compiles run normally.
+    Closed,
+    /// Tripped: the compiler is not touched; the bucket serves its
+    /// last-good artifact or the interpreter floor until the cooldown
+    /// lapses.
+    Open,
+    /// Cooldown lapsed: exactly one probe compile is in flight; everyone
+    /// else is still served without compiling.
+    HalfOpen,
+}
+
+impl BreakerState {
+    fn gauge_value(self) -> i64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+/// What the breaker tells a resolver that wants to compile.
+enum Admission {
+    /// Closed: compile normally.
+    Allow,
+    /// Half-open: this caller won the single probe slot — compile once at
+    /// the requested tier; its outcome decides the breaker's fate.
+    Probe,
+    /// Open (or a probe is already in flight): do not touch the compiler.
+    Deny,
+}
+
+/// Per-artifact compile circuit breaker (Closed → Open → HalfOpen →
+/// Closed). After `threshold` *consecutive* compile failures the breaker
+/// opens and [`CircuitBreaker::admit`] denies compiler access; once
+/// `cooldown` has passed the first `admit` call wins a half-open probe
+/// slot. A probe success re-closes the breaker, a probe failure re-opens
+/// it (restarting the cooldown). State changes are mirrored onto the
+/// `relay_breaker_state{bucket,scope}` gauge.
+pub struct CircuitBreaker {
+    threshold: usize,
+    cooldown: Duration,
+    inner: Mutex<BreakerInner>,
+    gauge: Arc<Gauge>,
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: usize,
+    opened_at: Option<Instant>,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: usize, cooldown: Duration, gauge: Arc<Gauge>) -> CircuitBreaker {
+        gauge.set(BreakerState::Closed.gauge_value());
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: None,
+            }),
+            gauge,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        crate::sync::lock_unpoisoned(&self.inner).state
+    }
+
+    fn admit(&self) -> Admission {
+        let mut inner = crate::sync::lock_unpoisoned(&self.inner);
+        match inner.state {
+            BreakerState::Closed => Admission::Allow,
+            BreakerState::Open => {
+                let cooled = inner
+                    .opened_at
+                    .is_some_and(|t| t.elapsed() >= self.cooldown);
+                if cooled {
+                    inner.state = BreakerState::HalfOpen;
+                    self.gauge.set(BreakerState::HalfOpen.gauge_value());
+                    Admission::Probe
+                } else {
+                    Admission::Deny
+                }
+            }
+            // Someone else holds the probe slot; wait out their verdict.
+            BreakerState::HalfOpen => Admission::Deny,
+        }
+    }
+
+    fn record_success(&self) {
+        let mut inner = crate::sync::lock_unpoisoned(&self.inner);
+        inner.state = BreakerState::Closed;
+        inner.consecutive_failures = 0;
+        inner.opened_at = None;
+        self.gauge.set(BreakerState::Closed.gauge_value());
+    }
+
+    fn record_failure(&self) {
+        let mut inner = crate::sync::lock_unpoisoned(&self.inner);
+        inner.consecutive_failures += 1;
+        let trip = inner.state == BreakerState::HalfOpen
+            || inner.consecutive_failures >= self.threshold;
+        if trip {
+            inner.state = BreakerState::Open;
+            inner.opened_at = Some(Instant::now());
+            self.gauge.set(BreakerState::Open.gauge_value());
+        }
+    }
+}
+
+/// Fault-containment knobs for [`RelayBackend`]: the degradation-ladder
+/// depth and the per-artifact breaker parameters. `scope` labels the
+/// breaker gauges so co-resident backends (tests, benches, two servers in
+/// one process) stay separable.
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    /// Fallback rungs before the interpreter floor (0 = no `-O1` retry).
+    /// The floor itself is unconditional: serving degrades, never errors.
+    pub max_opt_retries: usize,
+    /// Consecutive compile failures before the breaker opens.
+    pub breaker_threshold: usize,
+    /// Open-state dwell time before the half-open probe.
+    pub breaker_cooldown: Duration,
+    /// `scope` label on `relay_breaker_state{bucket,scope}`.
+    pub scope: String,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig {
+            max_opt_retries: 1,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            scope: "backend".to_string(),
+        }
+    }
+}
+
+/// What [`RelayBackend`]'s resolver hands the dispatch path: the program
+/// to run, what resolution cost, and whether (and how far) it degraded.
+struct Resolution {
+    compiled: crate::eval::Compiled,
+    took: Duration,
+    hit: bool,
+    /// `Some(level)` when the artifact served is below the requested tier.
+    degraded_to: Option<OptLevel>,
+}
+
 /// The compiled-relay serving backend. Two dispatch modes:
 ///
 /// * **Shape-polymorphic** ([`RelayBackend::new`], the `--poly` default,
@@ -498,6 +701,7 @@ pub struct RelayBackend {
     /// Executor + optimization level every artifact compiles with.
     opts: CompileOptions,
     stats: Arc<Stats>,
+    resilience: ResilienceConfig,
 }
 
 enum BackendMode {
@@ -514,19 +718,61 @@ struct Bucket {
     /// batch).
     size: usize,
     module: Module,
-    /// Memo of the cache-resolved program: after first use, dispatch is
-    /// pure — no cache lock, no structural-hash lookup, no hit
-    /// verification.
-    resolved: std::sync::OnceLock<crate::eval::Compiled>,
+    /// Memo of the best program resolved so far and the tier it serves at
+    /// (`None` = the requested tier — terminal; `Some(level)` = a
+    /// degraded artifact, upgradeable when a later compile lands a higher
+    /// tier). Replaces the pre-PR 10 `OnceLock`: a degraded resolution
+    /// must not be frozen forever.
+    best: Mutex<Option<(crate::eval::Compiled, Option<OptLevel>)>>,
+    /// Per-artifact compile circuit breaker.
+    breaker: CircuitBreaker,
 }
 
 impl Bucket {
-    fn at(size: usize, batch: Dim) -> Bucket {
+    fn at(size: usize, batch: Dim, resilience: &ResilienceConfig) -> Bucket {
+        let bucket_label = size.to_string();
+        let gauge = crate::telemetry::registry().gauge_with(
+            names::BREAKER_STATE,
+            &[("bucket", &bucket_label), ("scope", &resilience.scope)],
+        );
         Bucket {
             size,
             module: fallback_module(batch),
-            resolved: std::sync::OnceLock::new(),
+            best: Mutex::new(None),
+            breaker: CircuitBreaker::new(
+                resilience.breaker_threshold,
+                resilience.breaker_cooldown,
+                gauge,
+            ),
         }
+    }
+
+    /// How much better `candidate` serves than `current` (requested tier
+    /// beats `-O1` beats the interpreter floor).
+    fn tier_rank(d: &Option<OptLevel>) -> u8 {
+        match d {
+            None => 3,
+            Some(OptLevel::O0) => 1,
+            Some(_) => 2,
+        }
+    }
+
+    /// Install `compiled` as the memoized program if it serves at a
+    /// higher tier than what is already there.
+    fn offer(&self, compiled: &crate::eval::Compiled, degraded_to: Option<OptLevel>) {
+        let mut best = crate::sync::lock_unpoisoned(&self.best);
+        let better = match &*best {
+            None => true,
+            Some((_, have)) => Bucket::tier_rank(&degraded_to) > Bucket::tier_rank(have),
+        };
+        if better {
+            *best = Some((compiled.clone(), degraded_to));
+        }
+    }
+
+    /// The memoized program, if any.
+    fn best(&self) -> Option<(crate::eval::Compiled, Option<OptLevel>)> {
+        crate::sync::lock_unpoisoned(&self.best).clone()
     }
 }
 
@@ -542,40 +788,79 @@ impl RelayBackend {
         cache: Arc<ProgramCache>,
         stats: Arc<Stats>,
     ) -> Result<RelayBackend> {
+        RelayBackend::new_with(max_batch, opts, cache, stats, ResilienceConfig::default())
+    }
+
+    /// [`RelayBackend::new`] with explicit fault-containment knobs. The
+    /// warm-up compile is *tolerant*: a failure is recorded against the
+    /// artifact's breaker and the backend comes up serving degraded — a
+    /// broken compiler must not take serving down with it.
+    pub fn new_with(
+        max_batch: usize,
+        opts: impl Into<CompileOptions>,
+        cache: Arc<ProgramCache>,
+        stats: Arc<Stats>,
+        resilience: ResilienceConfig,
+    ) -> Result<RelayBackend> {
         let max_batch = max_batch.max(1);
         let backend = RelayBackend {
             mode: BackendMode::Poly {
                 max_batch,
-                artifact: Bucket::at(max_batch, Dim::Any),
+                artifact: Bucket::at(max_batch, Dim::Any, &resilience),
             },
             cache,
             opts: opts.into(),
             stats,
+            resilience,
         };
-        backend.resolve(backend.artifact(0))?;
+        backend.resolve(backend.artifact(0));
         Ok(backend)
     }
 
     /// The bucketed baseline (`--poly=off`): per-bucket fixed-shape
-    /// modules, failing fast by compiling the smallest bucket.
+    /// modules, warming up by compiling the smallest bucket.
     pub fn bucketed(
         max_batch: usize,
         opts: impl Into<CompileOptions>,
         cache: Arc<ProgramCache>,
         stats: Arc<Stats>,
     ) -> Result<RelayBackend> {
+        RelayBackend::bucketed_with(
+            max_batch,
+            opts,
+            cache,
+            stats,
+            ResilienceConfig::default(),
+        )
+    }
+
+    /// [`RelayBackend::bucketed`] with explicit fault-containment knobs
+    /// (see [`RelayBackend::new_with`] for the tolerant-warm-up rationale).
+    pub fn bucketed_with(
+        max_batch: usize,
+        opts: impl Into<CompileOptions>,
+        cache: Arc<ProgramCache>,
+        stats: Arc<Stats>,
+        resilience: ResilienceConfig,
+    ) -> Result<RelayBackend> {
         let buckets: Vec<Bucket> = bucket_sizes(max_batch.max(1))
             .into_iter()
-            .map(|size| Bucket::at(size, Dim::Known(size)))
+            .map(|size| Bucket::at(size, Dim::Known(size), &resilience))
             .collect();
         let backend = RelayBackend {
             mode: BackendMode::Buckets(buckets),
             cache,
             opts: opts.into(),
             stats,
+            resilience,
         };
-        backend.resolve(backend.artifact(0))?;
+        backend.resolve(backend.artifact(0));
         Ok(backend)
+    }
+
+    /// Breaker state of the `bi`-th artifact (tests and the chaos bench).
+    pub fn breaker_state(&self, bi: usize) -> BreakerState {
+        self.artifact(bi).breaker.state()
     }
 
     /// Distinct compiled-shape artifacts: 1 in polymorphic mode, the
@@ -595,33 +880,102 @@ impl RelayBackend {
         }
     }
 
-    /// Resolve one artifact: per-artifact memo first, then the shared
-    /// cache — counting a fleet-wide compile only when this call performed
-    /// it. Two workers racing on a cold artifact both reach the cache,
-    /// which coalesces them into one compile; the memo keeps every later
-    /// batch off the cache lock entirely. Returns the program, how long
-    /// resolution took, and whether it was a hit (memo or cache — a racing
-    /// worker that blocked on someone else's compile reports the wait as a
-    /// hit, since no compile happened on its behalf twice).
-    fn resolve(
-        &self,
-        bucket: &Bucket,
-    ) -> Result<(crate::eval::Compiled, Duration, bool)> {
-        if let Some(compiled) = bucket.resolved.get() {
-            return Ok((compiled.clone(), Duration::ZERO, true));
-        }
-        let t0 = Instant::now();
-        let (compiled, compiled_now) = self
-            .cache
-            .get_or_compile_traced(&bucket.module, self.opts)
-            .map_err(|e| anyhow!("{e}"))?;
-        let took = t0.elapsed();
+    /// Count a cache compile that this resolve call actually performed.
+    fn note_compiled(&self, compiled_now: bool) {
         if compiled_now {
             self.stats.compiles.fetch_add(1, Ordering::Relaxed);
             crate::telemetry::registry().counter(names::COMPILES_TOTAL).inc();
         }
-        let _ = bucket.resolved.set(compiled.clone());
-        Ok((compiled, took, !compiled_now))
+    }
+
+    /// Serve `bucket` from its memo, or materialize the interpreter floor
+    /// — the rung that cannot fail — when nothing has ever resolved. Never
+    /// touches the compiler.
+    fn serve_best(&self, bucket: &Bucket, took: Duration) -> Resolution {
+        if let Some((compiled, degraded_to)) = bucket.best() {
+            return Resolution { compiled, took, hit: true, degraded_to };
+        }
+        let floor = crate::eval::Compiled::Interp(Arc::new(bucket.module.clone()));
+        bucket.offer(&floor, Some(OptLevel::O0));
+        Resolution {
+            compiled: floor,
+            took,
+            hit: false,
+            degraded_to: Some(OptLevel::O0),
+        }
+    }
+
+    /// Resolve one artifact: per-artifact memo first, then the shared
+    /// cache — gated by the artifact's circuit breaker and backed by the
+    /// degradation ladder, so resolution *always* produces a runnable
+    /// program:
+    ///
+    /// * memo holds a requested-tier program → pure dispatch (no cache
+    ///   lock, no breaker);
+    /// * breaker **denies** (open, or a probe is in flight) → last-good
+    ///   memo or the interpreter floor, compiler untouched;
+    /// * breaker grants a **probe** → the remembered failure is forgotten
+    ///   and exactly one strict requested-tier compile runs; its outcome
+    ///   closes or re-opens the breaker;
+    /// * breaker **allows** → strict requested-tier compile; on failure
+    ///   (recorded against the breaker) the ladder tries `-O1` (when
+    ///   `max_opt_retries` ≥ 1), then the floor.
+    ///
+    /// Racing workers on a cold artifact still coalesce inside the cache;
+    /// [`Stats::compiles`] counts only calls that actually compiled.
+    fn resolve(&self, bucket: &Bucket) -> Resolution {
+        if let Some((compiled, degraded_to @ None)) = bucket.best() {
+            return Resolution { compiled, took: Duration::ZERO, hit: true, degraded_to };
+        }
+        let t0 = Instant::now();
+        let admission = bucket.breaker.admit();
+        if matches!(admission, Admission::Deny) {
+            return self.serve_best(bucket, t0.elapsed());
+        }
+        if matches!(admission, Admission::Probe) {
+            // Half-open: forget the negative-cache entry so the probe is a
+            // real compile, then run exactly one strict attempt.
+            self.cache.forget_negative(&bucket.module, &self.opts);
+        }
+        match self.cache.get_or_compile_full(&bucket.module, self.opts) {
+            Ok(resolved) => {
+                self.note_compiled(resolved.compiled_now);
+                bucket.breaker.record_success();
+                bucket.offer(&resolved.compiled, None);
+                Resolution {
+                    compiled: resolved.compiled,
+                    took: t0.elapsed(),
+                    hit: !resolved.compiled_now,
+                    degraded_to: None,
+                }
+            }
+            Err(_) => {
+                bucket.breaker.record_failure();
+                // Rung 1: the -O1 retry (strict, under its own cache key —
+                // never aliased, so a later probe can still recompile the
+                // requested tier).
+                if self.resilience.max_opt_retries >= 1
+                    && self.opts.opt_level > OptLevel::O1
+                {
+                    let lowered =
+                        CompileOptions { opt_level: OptLevel::O1, ..self.opts };
+                    if let Ok(resolved) =
+                        self.cache.get_or_compile_full(&bucket.module, lowered)
+                    {
+                        self.note_compiled(resolved.compiled_now);
+                        bucket.offer(&resolved.compiled, Some(OptLevel::O1));
+                        return Resolution {
+                            compiled: resolved.compiled,
+                            took: t0.elapsed(),
+                            hit: !resolved.compiled_now,
+                            degraded_to: Some(OptLevel::O1),
+                        };
+                    }
+                }
+                // Rung 2: last-good artifact or the interpreter floor.
+                self.serve_best(bucket, t0.elapsed())
+            }
+        }
     }
 
     /// Execute one batch of feature rows; returns one prediction per row.
@@ -669,16 +1023,25 @@ impl RelayBackend {
                 (bucket, bucket.size)
             }
         };
-        let (compiled, compile, compile_hit) = self.resolve(bucket)?;
+        let resolution = self.resolve(bucket);
+        if let Some(level) = resolution.degraded_to {
+            crate::telemetry::registry()
+                .counter_with(
+                    names::DEGRADED_EXECUTIONS_TOTAL,
+                    &[("level", level.digit())],
+                )
+                .inc();
+        }
         let x = pad_rows(rows, dispatch_batch, FALLBACK_FEAT);
-        let out = run_compiled(&compiled, vec![Value::Tensor(x)])
+        let out = run_compiled(&resolution.compiled, vec![Value::Tensor(x)])
             .map_err(|e| anyhow!("{e}"))?;
         let preds = crate::tensor::argmax(out.value.tensor(), 1);
         let preds = preds.as_i64();
         Ok(BatchRun {
             preds: preds[..rows.len().min(preds.len())].to_vec(),
-            compile,
-            compile_hit,
+            compile: resolution.took,
+            compile_hit: resolution.hit,
+            degraded: resolution.degraded_to,
         })
     }
 }
@@ -696,6 +1059,14 @@ pub struct FaultConfig {
     /// Extra latency injected into every batch — the knob that turns a
     /// fast in-process backend into one the saturation test can overrun.
     pub latency: Duration,
+    /// Panic inside every nth *compile* (`None`: never), installed as a
+    /// [`crate::eval::cache::CompileHook`] on the serving cache so the
+    /// injected panic exercises the genuine `catch_unwind` containment
+    /// path, the negative cache, the degradation ladder, and the breaker.
+    /// The counter is shared with `compile_error_every` and 1-indexed.
+    pub compile_panic_every: Option<usize>,
+    /// Fail every nth compile with a typed error (`None`: never).
+    pub compile_error_every: Option<usize>,
 }
 
 /// Test/bench-only wrapper around [`RelayBackend`] that injects faults on
@@ -766,6 +1137,7 @@ fn answer_deadline(
         execute: Duration::ZERO,
         total: req.enqueued.elapsed(),
         outcome: Outcome::Deadline,
+        compile_fallback: None,
     };
     tele.record(&span);
 }
@@ -847,7 +1219,7 @@ fn worker_loop(
             }
         };
         let exec_total = exec_start.elapsed();
-        let (reply, compile, compile_hit, outcome): (Vec<String>, _, _, _) =
+        let (reply, compile, compile_hit, outcome, fallback): (Vec<String>, _, _, _, _) =
             match &run {
             Ok(b) => (
                 (0..batch.len())
@@ -859,6 +1231,7 @@ fn worker_loop(
                 b.compile,
                 b.compile_hit,
                 Outcome::Ok,
+                b.degraded.map(|l| l.digit()),
             ),
             // Failed batches report their outcome honestly: no fake
             // compile-hit, outcome Error on every span.
@@ -867,6 +1240,7 @@ fn worker_loop(
                 Duration::ZERO,
                 false,
                 Outcome::Error,
+                None,
             ),
         };
         let execute = exec_total.saturating_sub(compile);
@@ -887,6 +1261,7 @@ fn worker_loop(
                 execute,
                 total: req.enqueued.elapsed(),
                 outcome,
+                compile_fallback: fallback,
             };
             tele.record(&span);
         }
@@ -1007,6 +1382,7 @@ fn pjrt_exec_fn(artifact_dir: &Path) -> Result<(usize, ExecFn)> {
             // a compile, so every batch reports a hit with zero cost.
             compile: Duration::ZERO,
             compile_hit: true,
+            degraded: None,
         })
     });
     Ok((batch_cap, f))
@@ -1141,11 +1517,37 @@ pub fn serve_handle(cfg: ServerConfig, stop: Arc<AtomicBool>) -> Result<ServerHa
         // cfg.poly picks shape-polymorphic (one symbolic-batch artifact)
         // vs the bucketed baseline.
         let cache = Arc::new(ProgramCache::new());
+        // Compile-fault injection must be installed *before* the backend's
+        // warm-up compile so even the first compile can fail — the backend
+        // tolerates that (breaker + ladder) by design.
+        if let Some(f) = &cfg.fault {
+            let (panic_every, error_every) =
+                (f.compile_panic_every, f.compile_error_every);
+            if panic_every.is_some() || error_every.is_some() {
+                let attempts = AtomicUsize::new(0);
+                cache.set_compile_hook(Arc::new(move |_m, _o| {
+                    let n = attempts.fetch_add(1, Ordering::Relaxed) + 1;
+                    if panic_every.is_some_and(|k| k > 0 && n % k == 0) {
+                        panic!("injected compile panic: attempt {n}");
+                    }
+                    if error_every.is_some_and(|k| k > 0 && n % k == 0) {
+                        return Err(format!("injected compile error: attempt {n}"));
+                    }
+                    Ok(())
+                }));
+            }
+        }
+        let resilience = ResilienceConfig {
+            max_opt_retries: cfg.max_opt_retries,
+            breaker_threshold: cfg.breaker_threshold,
+            breaker_cooldown: cfg.breaker_cooldown,
+            scope: format!("port-{}", cfg.port),
+        };
         let opts = CompileOptions::at(cfg.executor, cfg.opt_level).with_fixpoint(cfg.fixpoint);
         let backend = Arc::new(if cfg.poly {
-            RelayBackend::new(max_batch, opts, cache, stats.clone())?
+            RelayBackend::new_with(max_batch, opts, cache, stats.clone(), resilience)?
         } else {
-            RelayBackend::bucketed(max_batch, opts, cache, stats.clone())?
+            RelayBackend::bucketed_with(max_batch, opts, cache, stats.clone(), resilience)?
         });
         let exec: Arc<dyn Fn(&[&[f32]]) -> Result<BatchRun> + Send + Sync> =
             match &cfg.fault {
@@ -1286,6 +1688,41 @@ fn parse_deadline<'a>(
     }
 }
 
+/// One bounded read off the wire: at most [`MAX_LINE_BYTES`] of request
+/// line (newline excluded). The byte budget is enforced *while reading* —
+/// an attacker streaming an endless line cannot grow a worker-side buffer
+/// past the cap.
+enum WireLine {
+    /// A complete line (possibly without its trailing newline when the
+    /// client disconnected mid-line — processed all the same, then the
+    /// next read sees EOF and closes cleanly).
+    Ok(Vec<u8>),
+    /// Clean end of stream.
+    Eof,
+    /// The line exceeded [`MAX_LINE_BYTES`]: typed reply, then close.
+    TooLong,
+    /// Transport error: close without a reply (there is no one to hear it).
+    Io,
+}
+
+fn read_wire_line(reader: &mut BufReader<TcpStream>) -> WireLine {
+    let mut buf = Vec::new();
+    // +1 so a line of exactly MAX_LINE_BYTES plus its newline still fits,
+    // while anything longer is detectably over budget.
+    match Read::by_ref(reader).take(MAX_LINE_BYTES as u64 + 1).read_until(b'\n', &mut buf)
+    {
+        Ok(0) => WireLine::Eof,
+        Ok(_) => {
+            if buf.len() > MAX_LINE_BYTES && !buf.ends_with(b"\n") {
+                WireLine::TooLong
+            } else {
+                WireLine::Ok(buf)
+            }
+        }
+        Err(_) => WireLine::Io,
+    }
+}
+
 fn handle_client(
     stream: TcpStream,
     queue: Arc<AdmissionQueue<Request>>,
@@ -1294,16 +1731,30 @@ fn handle_client(
     default_deadline: Duration,
 ) {
     let peer = stream.try_clone();
-    let reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream);
     let mut writer = match peer {
         Ok(s) => s,
         Err(_) => return,
     };
-    let mut lines = reader.lines();
     loop {
-        let line = match lines.next() {
-            Some(Ok(l)) => l,
-            Some(Err(_)) | None => break,
+        let raw = match read_wire_line(&mut reader) {
+            WireLine::Ok(raw) => raw,
+            WireLine::Eof | WireLine::Io => break,
+            WireLine::TooLong => {
+                let _ = writeln!(writer, "error: request line too long");
+                break;
+            }
+        };
+        // Hostile bytes are a typed reply, never a worker panic: the
+        // request stays bytes until it proves to be UTF-8.
+        let line = match std::str::from_utf8(&raw) {
+            Ok(l) => l,
+            Err(_) => {
+                if writeln!(writer, "error: request is not valid utf-8").is_err() {
+                    break;
+                }
+                continue;
+            }
         };
         let trimmed = line.trim();
         if trimmed.is_empty() {
@@ -1311,10 +1762,15 @@ fn handle_client(
         }
         if let Some(req_line) = trimmed.strip_prefix("GET ") {
             // The metrics endpoint shares the line-protocol front door:
-            // drain the HTTP headers, answer once, close.
-            for header in lines.by_ref() {
-                match header {
-                    Ok(h) if !h.trim().is_empty() => continue,
+            // drain the HTTP headers (bounded reads, same cap), answer
+            // once, close.
+            loop {
+                match read_wire_line(&mut reader) {
+                    WireLine::Ok(h) => {
+                        if String::from_utf8_lossy(&h).trim().is_empty() {
+                            break;
+                        }
+                    }
                     _ => break,
                 }
             }
@@ -1364,6 +1820,7 @@ fn handle_client(
                 execute: Duration::ZERO,
                 total: req.enqueued.elapsed(),
                 outcome: Outcome::Shed,
+                compile_fallback: None,
             };
             tele.record(&span);
             if writeln!(writer, "shed: {reason}").is_err() {
@@ -1456,6 +1913,142 @@ pub fn classify_line(
 pub fn classify(port: u16, features: &[f32]) -> Result<i64> {
     let resp = classify_line(port, features, None)?;
     resp.parse().map_err(|e| anyhow!("bad response {resp:?}: {e}"))
+}
+
+/// Bounded exponential backoff with deterministic jitter for the client
+/// helpers. Retries cover *transient* failures only: `shed:` replies
+/// (overload passes) and transport errors (connect/read failures). Typed
+/// `error:` replies are definitive — the server answered; retrying would
+/// just repeat the answer.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, first one included (1 = no retry).
+    pub max_attempts: usize,
+    /// Backoff before the second attempt; doubles each retry after.
+    pub base: Duration,
+    /// Ceiling on the exponential term.
+    pub cap: Duration,
+    /// Seed for the deterministic jitter hash — same seed, same schedule,
+    /// so tests can assert exact delays.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(250),
+            jitter_seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay to sleep before `attempt` (1-indexed): zero before the first
+    /// attempt, then `min(base * 2^(attempt-2), cap)` plus a deterministic
+    /// jitter in `[0, exp/2]` — jitter spreads synchronized retriers
+    /// without `rand`, and the fixed seed keeps schedules reproducible.
+    pub fn delay_before(&self, attempt: usize) -> Duration {
+        if attempt <= 1 {
+            return Duration::ZERO;
+        }
+        let doublings = (attempt - 2).min(32) as u32;
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(doublings).unwrap_or(u32::MAX))
+            .min(self.cap);
+        let half = exp.as_micros() as u64 / 2;
+        let jitter_us = if half == 0 {
+            0
+        } else {
+            // splitmix64 over (seed, attempt): cheap, stateless, stable.
+            let mut z = self
+                .jitter_seed
+                .wrapping_add(attempt as u64)
+                .wrapping_add(0x9e37_79b9_7f4a_7c15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            (z ^ (z >> 31)) % (half + 1)
+        };
+        exp + Duration::from_micros(jitter_us)
+    }
+}
+
+/// A retried call's result plus how many attempts it took — callers (the
+/// chaos bench, saturation clients) surface attempt counts instead of
+/// hiding the retries.
+#[derive(Debug)]
+pub struct Attempted<T> {
+    pub value: T,
+    pub attempts: usize,
+}
+
+/// [`classify`] with bounded retry under `policy`: `shed:` replies and
+/// transport errors back off and retry; typed `error:` replies return
+/// immediately (never retried). The error message always names the
+/// attempt count.
+pub fn classify_with_retry(
+    port: u16,
+    features: &[f32],
+    deadline_ms: Option<u64>,
+    policy: &RetryPolicy,
+) -> Result<Attempted<i64>> {
+    let attempts = policy.max_attempts.max(1);
+    let mut last = String::new();
+    for attempt in 1..=attempts {
+        let delay = policy.delay_before(attempt);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        match classify_line(port, features, deadline_ms) {
+            Ok(reply) => {
+                if reply.starts_with("shed:") {
+                    // Transient overload: the request was never admitted;
+                    // retrying is safe and is the point of the policy.
+                    last = reply;
+                    continue;
+                }
+                if reply.starts_with("error:") {
+                    return Err(anyhow!("{reply} (attempt {attempt}, not retried)"));
+                }
+                let value = reply
+                    .parse()
+                    .map_err(|e| anyhow!("bad response {reply:?}: {e}"))?;
+                return Ok(Attempted { value, attempts: attempt });
+            }
+            Err(e) => {
+                last = format!("transport: {e}");
+                continue;
+            }
+        }
+    }
+    Err(anyhow!("{last} (after {attempts} attempts)"))
+}
+
+/// [`fetch_metrics`] with bounded retry for transport errors (a server
+/// mid-restart, a listener backlog hiccup). Metrics replies have no
+/// `shed:` form; any well-formed response returns immediately.
+pub fn fetch_metrics_with_retry(
+    port: u16,
+    policy: &RetryPolicy,
+) -> Result<Attempted<String>> {
+    let attempts = policy.max_attempts.max(1);
+    let mut last = String::new();
+    for attempt in 1..=attempts {
+        let delay = policy.delay_before(attempt);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        match fetch_metrics(port) {
+            Ok(body) => return Ok(Attempted { value: body, attempts: attempt }),
+            Err(e) => {
+                last = format!("{e}");
+                continue;
+            }
+        }
+    }
+    Err(anyhow!("{last} (after {attempts} attempts)"))
 }
 
 /// Is the artifact directory present (CI guard)?
@@ -1620,9 +2213,9 @@ mod tests {
         let row: Vec<f32> = (0..FALLBACK_FEAT).map(|j| j as f32 * 0.1 - 0.5).collect();
         let rows: Vec<&[f32]> = vec![&row];
         let x = pad_rows(&rows, backend.artifact(0).size, FALLBACK_FEAT);
-        let (o3_compiled, _, _) =
-            backend.resolve(backend.artifact(0)).expect("o3 bucket");
-        let o3 = run_compiled(&o3_compiled, vec![Value::Tensor(x.clone())])
+        let o3_resolution = backend.resolve(backend.artifact(0));
+        assert!(o3_resolution.degraded_to.is_none(), "healthy bucket degraded");
+        let o3 = run_compiled(&o3_resolution.compiled, vec![Value::Tensor(x.clone())])
             .expect("o3 run");
         let (o0_compiled, _) = cache
             .get_or_compile_traced(
@@ -2277,5 +2870,244 @@ mod tests {
         assert_eq!(alive.get(), 0);
         assert!(closed.load(Ordering::Relaxed), "on_stop did not run");
         assert!(drained.load(Ordering::Relaxed), "after_drain did not run");
+    }
+
+    /// The breaker's full state machine: Closed → (threshold failures) →
+    /// Open → (cooldown) → HalfOpen with exactly one probe slot →
+    /// re-Open on probe failure / re-Closed on probe success — with the
+    /// gauge tracking 0/1/2 throughout.
+    #[test]
+    fn circuit_breaker_state_machine() {
+        let r = Registry::new();
+        let gauge = r.gauge("relay_test_breaker_state");
+        let b = CircuitBreaker::new(2, Duration::from_millis(20), gauge.clone());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(gauge.get(), 0);
+        assert!(matches!(b.admit(), Admission::Allow));
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "one failure is below threshold");
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(gauge.get(), 1);
+        assert!(matches!(b.admit(), Admission::Deny), "open denies before cooldown");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(matches!(b.admit(), Admission::Probe), "cooldown grants one probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(gauge.get(), 2);
+        assert!(matches!(b.admit(), Admission::Deny), "only one probe slot");
+        // A failed probe re-opens (restarting the cooldown)...
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(matches!(b.admit(), Admission::Probe));
+        // ...a successful probe re-closes and resets the failure streak.
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(gauge.get(), 0);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "streak reset on success");
+    }
+
+    #[test]
+    fn retry_backoff_schedule_is_deterministic_and_capped() {
+        let p = RetryPolicy {
+            max_attempts: 6,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(80),
+            jitter_seed: 7,
+        };
+        // No delay before the first attempt.
+        assert_eq!(p.delay_before(1), Duration::ZERO);
+        for attempt in 2..=6usize {
+            let d = p.delay_before(attempt);
+            let exp = p
+                .base
+                .saturating_mul(1u32 << (attempt as u32 - 2))
+                .min(p.cap);
+            assert!(d >= exp, "attempt {attempt}: {d:?} below the exponential floor");
+            assert!(
+                d <= exp + exp / 2,
+                "attempt {attempt}: jitter exceeded exp/2 ({d:?} vs {exp:?})"
+            );
+            assert_eq!(d, p.delay_before(attempt), "schedule must be deterministic");
+        }
+        // The exponential term is capped: attempt 6 would be 160ms uncapped.
+        assert!(p.delay_before(6) <= Duration::from_millis(120));
+        // A different seed moves the jitter but never dips below the floor.
+        let q = RetryPolicy { jitter_seed: 8, ..p.clone() };
+        assert!(q.delay_before(4) >= Duration::from_millis(40));
+    }
+
+    /// Client retry semantics against a real (zero-budget, all-shedding)
+    /// server: `shed:` replies are retried to exhaustion with the attempt
+    /// count surfaced, while metrics fetches succeed first try.
+    #[test]
+    fn shed_replies_are_retried_and_attempt_counts_surface() {
+        let port = 7995;
+        if !port_free(port) {
+            return;
+        }
+        let cfg = ServerConfig {
+            port,
+            artifact_dir: "definitely-missing-artifacts".into(),
+            executor: Executor::Vm,
+            max_batch: 4,
+            queue_budget: 0,
+            ..Default::default()
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = serve_handle(cfg, stop.clone()).expect("serve failed to start");
+        let features: Vec<f32> = (0..FALLBACK_FEAT).map(|j| j as f32).collect();
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(4),
+            jitter_seed: 1,
+        };
+        let err = classify_with_retry(port, &features, None, &policy)
+            .expect_err("an all-shedding server must exhaust the retries");
+        let msg = format!("{err}");
+        assert!(msg.contains("shed"), "retries must end on the shed reply: {msg}");
+        assert!(msg.contains("after 3 attempts"), "attempt count missing: {msg}");
+        // Every attempt really hit the server.
+        assert_eq!(handle.stats().shed.load(Ordering::Relaxed), 3);
+        // Metrics fetches are healthy on the same port: one attempt.
+        let got = fetch_metrics_with_retry(port, &policy).expect("metrics");
+        assert_eq!(got.attempts, 1);
+        assert!(got.value.contains("relay_shed_total"));
+        handle.shutdown();
+    }
+
+    /// Serving under a hostile compiler: with *every* compile failing, the
+    /// fleet still answers every request with a real prediction — the
+    /// interpreter floor serves, the degradation shows up in the metrics,
+    /// and a definitive `error:` reply is never retried by the client
+    /// helper.
+    #[test]
+    fn compile_faults_degrade_serving_but_every_request_is_answered() {
+        let port = 7996;
+        if !port_free(port) {
+            return;
+        }
+        let cfg = ServerConfig {
+            port,
+            artifact_dir: "definitely-missing-artifacts".into(),
+            executor: Executor::Vm,
+            max_batch: 4,
+            workers: 2,
+            fault: Some(FaultConfig {
+                compile_error_every: Some(1), // every compile fails
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = serve_handle(cfg, stop.clone())
+            .expect("a broken compiler must not stop serve from starting");
+        let features: Vec<f32> =
+            (0..FALLBACK_FEAT).map(|j| ((j * 3) % 5) as f32 - 2.0).collect();
+        for _ in 0..4 {
+            let pred = classify(port, &features).expect("degraded classify");
+            assert!((0..FALLBACK_CLASSES as i64).contains(&pred), "pred {pred}");
+        }
+        // Nothing ever compiled; the interpreter floor carried the fleet.
+        assert_eq!(handle.stats().compiles.load(Ordering::Relaxed), 0);
+        let body = fetch_metrics(port).expect("metrics");
+        assert!(
+            body.contains("relay_compile_failures_total"),
+            "compile failures unrecorded: {body}"
+        );
+        assert!(
+            body.contains("relay_degraded_executions_total{level=\"0\"}"),
+            "degraded executions unrecorded: {body}"
+        );
+        assert!(
+            body.contains(&format!("scope=\"port-{port}\"")),
+            "breaker gauge missing its scope label: {body}"
+        );
+        // A typed error reply is definitive: exactly one attempt.
+        let policy = RetryPolicy { base: Duration::from_millis(1), ..Default::default() };
+        let err = classify_with_retry(port, &features, Some(0), &policy)
+            .expect_err("deadline 0 must be a typed error");
+        let msg = format!("{err}");
+        assert!(msg.contains("error: deadline exceeded"), "{msg}");
+        assert!(msg.contains("attempt 1, not retried"), "{msg}");
+        handle.shutdown();
+    }
+
+    /// The per-key breaker's full serving lifecycle, deterministically:
+    /// consecutive compile failures open it; while open the bucket serves
+    /// the interpreter floor (bit-identical to the interpreter) without
+    /// touching the compiler; after the cooldown a single probe compile
+    /// re-closes it — `Stats::compiles` moves by exactly one.
+    #[test]
+    fn breaker_opens_serves_degraded_and_recloses_after_one_probe() {
+        let cache = Arc::new(ProgramCache::new());
+        let stats = Arc::new(Stats::new(1, OptLevel::O3));
+        let fail = Arc::new(AtomicBool::new(true));
+        let fail_h = fail.clone();
+        cache.set_compile_hook(Arc::new(move |_m, _o| {
+            if fail_h.load(Ordering::Relaxed) {
+                Err("chaos: compiler disabled".to_string())
+            } else {
+                Ok(())
+            }
+        }));
+        let resilience = ResilienceConfig {
+            max_opt_retries: 1,
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(150),
+            scope: "test-breaker-lifecycle".to_string(),
+        };
+        let backend = RelayBackend::new_with(
+            2,
+            CompileOptions::at(Executor::Vm, OptLevel::O3),
+            cache.clone(),
+            stats.clone(),
+            resilience,
+        )
+        .expect("tolerant construction");
+        // Warm-up compile failed (failure 1 of 2); nothing compiled yet.
+        assert_eq!(stats.compiles.load(Ordering::Relaxed), 0);
+        assert_eq!(backend.breaker_state(0), BreakerState::Closed);
+        let row: Vec<f32> = (0..FALLBACK_FEAT).map(|j| (j % 5) as f32 - 2.0).collect();
+        let rows: Vec<&[f32]> = vec![&row];
+        // Failure 2 trips the breaker; the batch is still answered, from
+        // the interpreter floor.
+        let run = backend.run_batch_timed(&rows).expect("degraded batch");
+        assert_eq!(run.degraded, Some(OptLevel::O0));
+        assert_eq!(backend.breaker_state(0), BreakerState::Open);
+        // Bit-identical to the interpreter on the same module and input.
+        let x = pad_rows(&rows, 1, FALLBACK_FEAT);
+        let interp = crate::eval::Compiled::Interp(Arc::new(
+            backend.artifact(0).module.clone(),
+        ));
+        let reference = run_compiled(&interp, vec![Value::Tensor(x)]).expect("interp");
+        let expected = crate::tensor::argmax(reference.value.tensor(), 1).as_i64()[0];
+        assert_eq!(run.preds, vec![expected], "degraded preds diverged from interp");
+        // Open: served without touching the compiler (no new negative-cache
+        // replays, no compiles).
+        let replays = cache.negative_hits();
+        let run = backend.run_batch_timed(&rows).expect("open-state batch");
+        assert_eq!(run.degraded, Some(OptLevel::O0));
+        assert_eq!(cache.negative_hits(), replays, "open breaker touched the compiler");
+        assert_eq!(stats.compiles.load(Ordering::Relaxed), 0);
+        // Heal the compiler, wait out the cooldown: the next resolve wins
+        // the half-open probe, compiles exactly once, and re-closes.
+        fail.store(false, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(200));
+        let run = backend.run_batch_timed(&rows).expect("probe batch");
+        assert_eq!(run.degraded, None, "probe success must serve the real tier");
+        assert_eq!(backend.breaker_state(0), BreakerState::Closed);
+        assert_eq!(
+            stats.compiles.load(Ordering::Relaxed),
+            1,
+            "exactly one probe compile"
+        );
+        // Healthy steady state: memo hit, no further compiles.
+        let run = backend.run_batch_timed(&rows).expect("healthy batch");
+        assert_eq!(run.degraded, None);
+        assert!(run.compile_hit);
+        assert_eq!(stats.compiles.load(Ordering::Relaxed), 1);
     }
 }

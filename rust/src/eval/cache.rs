@@ -47,14 +47,49 @@
 //! and by resident constant-pool bytes ([`ProgramCache::with_limits`]), so
 //! a mixed fleet with a few giant-weight models and many small ones keeps
 //! its hot set resident instead of cycling FIFO-style.
+//!
+//! # Fault containment
+//!
+//! The compile step runs inside `catch_unwind`, *behind* the same RAII
+//! in-flight guard that coordinates coalescing — so whether a compile
+//! returns an error or panics outright, the guard's `Drop` always clears
+//! the in-flight key and notifies the condvar, and no coalesced waiter
+//! can ever hang on a failed compile. Panics surface as typed
+//! [`CompileError`]s (`kind: Panic`) instead of unwinding into the
+//! caller; plain pipeline/lowering failures keep their message under
+//! `kind: Error`.
+//!
+//! Failed keys go into a bounded **negative cache**
+//! ([`NEGATIVE_CACHE_CAP`] keys, FIFO): a known-bad (module, options)
+//! pair fails fast on the remembered error — verified against the module
+//! snapshot outside the lock, exactly like positive hits — instead of
+//! re-running a doomed compile per request. A later successful insert
+//! for the key (or an explicit [`ProgramCache::forget_negative`], the
+//! circuit breaker's half-open probe) clears it.
+//!
+//! [`ProgramCache::get_or_compile_resilient`] layers the **degradation
+//! ladder** on top: when the requested tier fails, retry at `-O1`, then
+//! fall back to the `-O0` interpreter artifact (which cannot fail at
+//! compile time and is the crate's semantic ground truth, so degraded
+//! results stay bit-identical). The degraded level is recorded on the
+//! cache entry, the [`PassTrace`] (`degraded_from`), and the returned
+//! [`Resolved`], and failures/degradations are counted on
+//! `relay_compile_failures_total{kind}`.
+//!
+//! Deterministic chaos for tests and the fig. 18 bench is injected with
+//! [`ProgramCache::set_compile_hook`]: the hook runs *inside* the
+//! `catch_unwind` region, in front of [`compile_for`], so an injected
+//! panic exercises the genuine containment path.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 use super::{env_empty, CompileOptions, Execution, Executor, Interp, LaunchCounter, Value};
 use crate::ir::{self, Expr, Module};
 use crate::pass::{OptLevel, PassTrace};
+use crate::telemetry::registry::names as metric_names;
 use crate::tensor::tune;
 
 /// What executor-selection resolved a module to, compiled and ready to run.
@@ -90,6 +125,99 @@ impl Compiled {
         }
     }
 }
+
+/// How a compile attempt failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompileErrorKind {
+    /// The compiler unwound — caught by the cache's panic guard and
+    /// converted instead of propagating into the caller.
+    Panic,
+    /// A typed pipeline or lowering error (the pre-existing `String`
+    /// failures of `compile_for`).
+    Error,
+}
+
+impl CompileErrorKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            CompileErrorKind::Panic => "panic",
+            CompileErrorKind::Error => "error",
+        }
+    }
+}
+
+/// A typed compile failure. Every failure mode of the compile path —
+/// pipeline errors, lowering errors, panics — arrives here; `Display`
+/// renders the human message (so callers that stringify keep working).
+#[derive(Clone, Debug)]
+pub struct CompileError {
+    pub kind: CompileErrorKind,
+    pub message: String,
+    /// This failure was served from the negative cache (fail-fast) rather
+    /// than by running the compiler again.
+    pub from_negative_cache: bool,
+}
+
+impl CompileError {
+    fn new(kind: CompileErrorKind, message: String) -> CompileError {
+        CompileError { kind, message, from_negative_cache: false }
+    }
+
+    /// The `kind` label value on `relay_compile_failures_total`:
+    /// `panic` / `error` for fresh failures, `negative_cache` for
+    /// fail-fast replays.
+    pub fn kind_label(&self) -> &'static str {
+        if self.from_negative_cache {
+            "negative_cache"
+        } else {
+            self.kind.label()
+        }
+    }
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            CompileErrorKind::Panic => write!(f, "compile panicked: {}", self.message),
+            CompileErrorKind::Error => write!(f, "{}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<CompileError> for String {
+    fn from(e: CompileError) -> String {
+        e.to_string()
+    }
+}
+
+/// Best-effort human message from a caught panic payload.
+fn panic_payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// What a cache lookup resolved to: the artifact, its pass trace, whether
+/// *this* call compiled it, and whether it serves below the requested
+/// optimization tier (`degraded_to` is the tier that actually ran —
+/// `None` on the healthy path).
+#[derive(Clone)]
+pub struct Resolved {
+    pub compiled: Compiled,
+    pub trace: Arc<PassTrace>,
+    pub compiled_now: bool,
+    pub degraded_to: Option<OptLevel>,
+}
+
+/// Chaos/validation hook run inside the panic guard, in front of the real
+/// compile (see [`ProgramCache::set_compile_hook`]).
+pub type CompileHook = dyn Fn(&Module, &CompileOptions) -> Result<(), String> + Send + Sync;
 
 /// Total bytes of `Expr::Const` tensors across a module's definitions.
 fn module_const_bytes(m: &Module) -> usize {
@@ -140,6 +268,17 @@ struct Entry {
     bytes: usize,
     /// Recency stamp (monotonic per cache) for LRU eviction.
     last_used: u64,
+    /// The tier that actually compiled when the degradation ladder
+    /// served this key below its requested level (`None` = healthy).
+    degraded_to: Option<OptLevel>,
+}
+
+/// A remembered compile failure: the pre-optimization module snapshot
+/// (for the same outside-the-lock structural verification positive hits
+/// get) plus the typed error to replay.
+struct NegativeEntry {
+    module: Arc<Module>,
+    error: CompileError,
 }
 
 /// Mutable cache state, all behind one lock: the resident entries, the
@@ -149,12 +288,20 @@ struct CacheState {
     in_flight: HashSet<Key>,
     total_bytes: usize,
     tick: u64,
+    /// Known-bad keys, bounded by [`NEGATIVE_CACHE_CAP`].
+    negative: HashMap<Key, NegativeEntry>,
+    /// Insertion order of `negative` keys (FIFO eviction).
+    negative_order: VecDeque<Key>,
 }
 
 /// Default bound on resident entries.
 pub const DEFAULT_MAX_ENTRIES: usize = 128;
 /// Default bound on resident constant-pool bytes (256 MiB).
 pub const DEFAULT_MAX_BYTES: usize = 256 << 20;
+/// Bound on remembered compile failures (FIFO): enough to cover a fleet's
+/// worth of bad models, small enough that a scan of hostile one-off
+/// modules cannot grow the map without limit.
+pub const NEGATIVE_CACHE_CAP: usize = 64;
 
 /// A bounded map from (module structural hash, opt level, executor) to a
 /// compiled program, with hit/miss counters. One miss == one compile,
@@ -165,8 +312,13 @@ pub struct ProgramCache {
     compiled: Condvar,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Fail-fast replays served from the negative cache.
+    neg_hits: AtomicUsize,
     max_entries: usize,
     max_bytes: usize,
+    /// Optional chaos/validation hook run inside the panic guard before
+    /// every real compile (never on hits or fail-fast replays).
+    hook: Mutex<Option<Arc<CompileHook>>>,
 }
 
 impl Default for ProgramCache {
@@ -206,12 +358,16 @@ impl ProgramCache {
                 in_flight: HashSet::new(),
                 total_bytes: 0,
                 tick: 0,
+                negative: HashMap::new(),
+                negative_order: VecDeque::new(),
             }),
             compiled: Condvar::new(),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            neg_hits: AtomicUsize::new(0),
             max_entries: max_entries.max(1),
             max_bytes,
+            hook: Mutex::new(None),
         }
     }
 
@@ -224,9 +380,46 @@ impl ProgramCache {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Cache misses so far — equivalently, the number of compiles.
+    /// Cache misses so far — equivalently, the number of compile
+    /// *attempts* (failed attempts count: they did the work).
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fail-fast replays served from the negative cache (no compiler run).
+    pub fn negative_hits(&self) -> usize {
+        self.neg_hits.load(Ordering::Relaxed)
+    }
+
+    /// Known-bad keys currently remembered.
+    pub fn negative_len(&self) -> usize {
+        self.lock_state().negative.len()
+    }
+
+    /// Install the chaos/validation hook run (inside the panic guard)
+    /// before every real compile. Replaces any previous hook.
+    pub fn set_compile_hook(&self, hook: Arc<CompileHook>) {
+        *crate::sync::lock_unpoisoned(&self.hook) = Some(hook);
+    }
+
+    /// Remove the compile hook.
+    pub fn clear_compile_hook(&self) {
+        *crate::sync::lock_unpoisoned(&self.hook) = None;
+    }
+
+    /// Drop the remembered failure for (module, opts), if any — the
+    /// circuit breaker calls this before its half-open probe so the probe
+    /// runs a *real* compile instead of replaying the cached error.
+    /// Returns whether a negative entry was present.
+    pub fn forget_negative(&self, module: &Module, opts: &CompileOptions) -> bool {
+        let key = key_for(module, opts);
+        let mut st = self.lock_state();
+        if st.negative.remove(&key).is_some() {
+            st.negative_order.retain(|k| k != &key);
+            true
+        } else {
+            false
+        }
     }
 
     /// Resident compiled programs.
@@ -243,14 +436,17 @@ impl ProgramCache {
         self.lock_state().total_bytes
     }
 
-    /// Drop all entries and reset the counters.
+    /// Drop all entries (negative cache included) and reset the counters.
     pub fn clear(&self) {
         let mut st = self.lock_state();
         st.entries.clear();
         st.total_bytes = 0;
+        st.negative.clear();
+        st.negative_order.clear();
         drop(st);
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+        self.neg_hits.store(0, Ordering::Relaxed);
     }
 
     /// Look up (or optimize + compile and insert) the program for `module`
@@ -261,7 +457,9 @@ impl ProgramCache {
         module: &Module,
         opts: impl Into<CompileOptions>,
     ) -> Result<Compiled, String> {
-        self.get_or_compile_full(module, opts.into()).map(|(c, _, _)| c)
+        self.get_or_compile_full(module, opts.into())
+            .map(|r| r.compiled)
+            .map_err(Into::into)
     }
 
     /// [`Self::get_or_compile`], also reporting whether *this* call
@@ -275,35 +473,44 @@ impl ProgramCache {
         module: &Module,
         opts: impl Into<CompileOptions>,
     ) -> Result<(Compiled, bool), String> {
-        self.get_or_compile_full(module, opts.into()).map(|(c, _, n)| (c, n))
+        self.get_or_compile_full(module, opts.into())
+            .map(|r| (r.compiled, r.compiled_now))
+            .map_err(Into::into)
     }
 
-    /// The full lookup: compiled program, the [`PassTrace`] recorded when
-    /// it was built, and whether this call performed the compile.
+    /// The full lookup: the compiled program, the [`PassTrace`] recorded
+    /// when it was built, whether this call performed the compile, and
+    /// whether the resident artifact is a degraded one (see [`Resolved`]).
     pub fn get_or_compile_full(
         &self,
         module: &Module,
         opts: CompileOptions,
-    ) -> Result<(Compiled, Arc<PassTrace>, bool), String> {
+    ) -> Result<Resolved, CompileError> {
         if opts.is_uncached_interp() {
             // Nothing to optimize, nothing to compile: bypass the map.
             // (This materializes a snapshot per call for API users that
             // need an owned artifact; the execution path —
             // `super::run_with_cache` — short-circuits earlier and runs
             // on the borrowed module instead.)
-            return Ok((
-                Compiled::Interp(Arc::new(module.clone())),
-                Arc::new(PassTrace::empty(OptLevel::O0)),
-                false,
-            ));
+            return Ok(Resolved {
+                compiled: Compiled::Interp(Arc::new(module.clone())),
+                trace: Arc::new(PassTrace::empty(OptLevel::O0)),
+                compiled_now: false,
+                degraded_to: None,
+            });
         }
         let key = key_for(module, &opts);
 
-        // Phase 1, under the lock: find a candidate entry (O(1) clones
-        // only) or claim the key for compilation. The deep structural
-        // verification and the compile itself both run outside the
-        // critical section, so hits on large modules don't serialize the
-        // whole process.
+        // Phase 1, under the lock: find a candidate entry — positive or
+        // negative — (O(1) clones only) or claim the key for compilation.
+        // The deep structural verification and the compile itself both run
+        // outside the critical section, so hits on large modules don't
+        // serialize the whole process.
+        enum Candidate {
+            Hit(Arc<Module>, Compiled, Arc<PassTrace>, Option<OptLevel>),
+            Bad(Arc<Module>, CompileError),
+            Claimed,
+        }
         let candidate = {
             let mut guard = self.lock_state();
             loop {
@@ -312,11 +519,18 @@ impl ProgramCache {
                 if let Some(entry) = st.entries.get_mut(&key) {
                     entry.last_used = tick;
                     st.tick = tick + 1;
-                    break Some((
+                    break Candidate::Hit(
                         entry.module.clone(),
                         entry.compiled.clone(),
                         entry.trace.clone(),
-                    ));
+                        entry.degraded_to,
+                    );
+                }
+                if let Some(bad) = st.negative.get(&key) {
+                    // Known-bad key: fail fast on the remembered error
+                    // (verified outside the lock, below) instead of
+                    // recompiling per request.
+                    break Candidate::Bad(bad.module.clone(), bad.error.clone());
                 }
                 if st.in_flight.contains(&key) {
                     // Another thread is compiling this module right now:
@@ -328,17 +542,22 @@ impl ProgramCache {
                     continue;
                 }
                 st.in_flight.insert(key);
-                break None;
+                break Candidate::Claimed;
             }
         };
         let coordinated = match candidate {
-            Some((snapshot, compiled, trace)) => {
+            Candidate::Hit(snapshot, compiled, trace, degraded_to) => {
                 // Verification is against the *pre-optimization* snapshot:
                 // two alpha-equivalent inputs compare equal here even
                 // though neither matches the optimized artifact.
                 if ir::modules_structurally_eq(&snapshot, module) {
                     self.hits.fetch_add(1, Ordering::Relaxed);
-                    return Ok((compiled, trace, false));
+                    return Ok(Resolved {
+                        compiled,
+                        trace,
+                        compiled_now: false,
+                        degraded_to,
+                    });
                 }
                 // Verified hash collision: compile without claiming the
                 // key (the resident entry stays until we replace it, and
@@ -346,17 +565,180 @@ impl ProgramCache {
                 // artifact anyway).
                 false
             }
-            None => true,
+            Candidate::Bad(snapshot, mut error) => {
+                if ir::modules_structurally_eq(&snapshot, module) {
+                    self.neg_hits.fetch_add(1, Ordering::Relaxed);
+                    crate::telemetry::registry()
+                        .counter_with(
+                            metric_names::COMPILE_FAILURES_TOTAL,
+                            &[("kind", "negative_cache")],
+                        )
+                        .inc();
+                    error.from_negative_cache = true;
+                    return Err(error);
+                }
+                // Hash collision against a remembered failure: this is a
+                // different module — compile it, uncoordinated (same rule
+                // as a positive-entry collision).
+                false
+            }
+            Candidate::Claimed => true,
         };
 
         self.misses.fetch_add(1, Ordering::Relaxed);
         let _inflight = coordinated.then(|| InFlightGuard { cache: self, key });
-        // The optimize + compile runs outside the lock: other keys hit
-        // and miss freely while this one builds.
-        let (compiled, trace, schedules) = compile_for(module, &opts)?;
+        // The optimize + compile runs outside the lock — other keys hit
+        // and miss freely while this one builds — and inside the panic
+        // guard, *behind* `_inflight`: error or panic, the key always
+        // leaves the in-flight set and waiters always wake.
+        let (compiled, trace, schedules) = match self.guarded_compile(module, &opts) {
+            Ok(built) => built,
+            Err(err) => {
+                if coordinated {
+                    // Remember the failure so waiters (woken by the guard
+                    // drop just below) and later requests fail fast.
+                    self.remember_negative(key, module, &err);
+                }
+                return Err(err);
+            }
+        };
         let trace = Arc::new(trace);
-        let bytes = compiled.const_bytes();
+        self.insert_entry(key, module, compiled.clone(), trace.clone(), schedules, None);
+        // _inflight drops here: key leaves the in-flight set, waiters wake
+        // and find the entry resident.
+        Ok(Resolved { compiled, trace, compiled_now: true, degraded_to: None })
+    }
 
+    /// [`Self::get_or_compile_full`] with the degradation ladder: when the
+    /// requested tier fails, spend up to `max_opt_retries` fallback rungs
+    /// — `-O1` (if the request was above it), then the `-O0` interpreter
+    /// artifact, which cannot fail at compile time. A degraded success is
+    /// cached under the *requested* key (so later calls hit in one
+    /// lookup), with the ladder recorded on the entry and its trace.
+    /// `max_opt_retries == 0` is exactly the strict behavior.
+    pub fn get_or_compile_resilient(
+        &self,
+        module: &Module,
+        opts: CompileOptions,
+        max_opt_retries: usize,
+    ) -> Result<Resolved, CompileError> {
+        let first = match self.get_or_compile_full(module, opts) {
+            Ok(resolved) => return Ok(resolved),
+            Err(e) => e,
+        };
+        let mut budget = max_opt_retries;
+        if budget > 0 && opts.opt_level > OptLevel::O1 {
+            budget -= 1;
+            // Rung 1: the same executor at -O1 — fusion only, none of the
+            // aggressive -O2/-O3 rewrites. Goes through the full cached
+            // path (coalescing and negative caching apply at the -O1 key).
+            let lowered = CompileOptions { opt_level: OptLevel::O1, ..opts };
+            if let Ok(r) = self.get_or_compile_full(module, lowered) {
+                let trace = self.alias_degraded(module, &opts, &r, OptLevel::O1);
+                return Ok(Resolved {
+                    compiled: r.compiled,
+                    trace,
+                    compiled_now: r.compiled_now,
+                    degraded_to: Some(OptLevel::O1),
+                });
+            }
+        }
+        if budget > 0 {
+            // Rung 2: the interpreter floor. No pipeline, no lowering —
+            // it cannot fail here, and the interpreter is the crate's
+            // semantic ground truth, so the degraded result is
+            // bit-identical to it by construction.
+            let compiled = Compiled::Interp(Arc::new(module.clone()));
+            let mut trace = PassTrace::empty(OptLevel::O0);
+            trace.degraded_from = Some(opts.opt_level);
+            let trace = Arc::new(trace);
+            self.insert_entry(
+                key_for(module, &opts),
+                module,
+                compiled.clone(),
+                trace.clone(),
+                Arc::new(Vec::new()),
+                Some(OptLevel::O0),
+            );
+            return Ok(Resolved {
+                compiled,
+                trace,
+                compiled_now: true,
+                degraded_to: Some(OptLevel::O0),
+            });
+        }
+        Err(first)
+    }
+
+    /// Cache a degraded artifact under the *requested* key so later
+    /// requests for the original options hit in one lookup, with the
+    /// ladder recorded on the entry and a degraded-marked trace.
+    fn alias_degraded(
+        &self,
+        module: &Module,
+        opts: &CompileOptions,
+        resolved: &Resolved,
+        to: OptLevel,
+    ) -> Arc<PassTrace> {
+        let mut trace = (*resolved.trace).clone();
+        trace.degraded_from = Some(opts.opt_level);
+        let trace = Arc::new(trace);
+        let lowered = CompileOptions { opt_level: to, ..*opts };
+        let schedules = self
+            .cached_schedules(module, &lowered)
+            .unwrap_or_else(|| Arc::new(Vec::new()));
+        self.insert_entry(
+            key_for(module, opts),
+            module,
+            resolved.compiled.clone(),
+            trace.clone(),
+            schedules,
+            Some(to),
+        );
+        trace
+    }
+
+    /// Run the hook + compile inside `catch_unwind`, converting panics
+    /// and errors into typed [`CompileError`]s and counting them on
+    /// `relay_compile_failures_total{kind}`.
+    fn guarded_compile(
+        &self,
+        module: &Module,
+        opts: &CompileOptions,
+    ) -> Result<(Compiled, PassTrace, tune::ScheduleSet), CompileError> {
+        let hook = crate::sync::lock_unpoisoned(&self.hook).clone();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(h) = &hook {
+                h(module, opts)?;
+            }
+            compile_for(module, opts)
+        }));
+        let err = match outcome {
+            Ok(Ok(built)) => return Ok(built),
+            Ok(Err(message)) => CompileError::new(CompileErrorKind::Error, message),
+            Err(payload) => CompileError::new(
+                CompileErrorKind::Panic,
+                panic_payload_message(payload.as_ref()),
+            ),
+        };
+        crate::telemetry::registry()
+            .counter_with(metric_names::COMPILE_FAILURES_TOTAL, &[("kind", err.kind.label())])
+            .inc();
+        Err(err)
+    }
+
+    /// Insert (or replace) a resident entry, clear any remembered failure
+    /// for the key, and enforce the LRU budgets.
+    fn insert_entry(
+        &self,
+        key: Key,
+        module: &Module,
+        compiled: Compiled,
+        trace: Arc<PassTrace>,
+        schedules: tune::ScheduleSet,
+        degraded_to: Option<OptLevel>,
+    ) {
+        let bytes = compiled.const_bytes();
         let mut guard = self.lock_state();
         let st: &mut CacheState = &mut guard;
         let tick = st.tick;
@@ -369,18 +751,36 @@ impl ProgramCache {
             key,
             Entry {
                 module: Arc::new(module.clone()),
-                compiled: compiled.clone(),
-                trace: trace.clone(),
+                compiled,
+                trace,
                 schedules,
                 bytes,
                 last_used: tick,
+                degraded_to,
             },
         );
+        // A success supersedes any remembered failure for this key.
+        if st.negative.remove(&key).is_some() {
+            st.negative_order.retain(|k| k != &key);
+        }
         self.evict_over_budget(st);
-        drop(guard);
-        // _inflight drops here: key leaves the in-flight set, waiters wake
-        // and find the entry resident.
-        Ok((compiled, trace, true))
+    }
+
+    /// Remember a failed key (bounded, FIFO) so later requests fail fast.
+    fn remember_negative(&self, key: Key, module: &Module, error: &CompileError) {
+        let mut st = self.lock_state();
+        let entry = NegativeEntry { module: Arc::new(module.clone()), error: error.clone() };
+        if st.negative.insert(key, entry).is_none() {
+            st.negative_order.push_back(key);
+        }
+        while st.negative.len() > NEGATIVE_CACHE_CAP {
+            match st.negative_order.pop_front() {
+                Some(old) => {
+                    st.negative.remove(&old);
+                }
+                None => break,
+            }
+        }
     }
 
     /// The tile schedules stored next to a resident artifact (empty set if
@@ -397,6 +797,20 @@ impl ProgramCache {
         let key = key_for(module, opts);
         let guard = self.lock_state();
         guard.entries.get(&key).map(|e| e.schedules.clone())
+    }
+
+    /// The degradation recorded on a resident entry: `None` when the
+    /// module has no entry for these options, `Some(None)` for a healthy
+    /// artifact, `Some(Some(level))` when the ladder cached a lower tier
+    /// under this key. Does not touch LRU recency.
+    pub fn cached_degraded_to(
+        &self,
+        module: &Module,
+        opts: &CompileOptions,
+    ) -> Option<Option<OptLevel>> {
+        let key = key_for(module, opts);
+        let guard = self.lock_state();
+        guard.entries.get(&key).map(|e| e.degraded_to)
     }
 
     /// Evict least-recently-used entries until both the entry-count and
@@ -501,6 +915,7 @@ pub fn run_compiled(compiled: &Compiled, args: Vec<Value>) -> Result<Execution, 
                 launches: launches.get(),
                 pass_trace: None,
                 profile: None,
+                degraded_to: None,
             })
         }
         Compiled::Vm(p) => {
@@ -512,6 +927,7 @@ pub fn run_compiled(compiled: &Compiled, args: Vec<Value>) -> Result<Execution, 
                 launches: vm.launches.get(),
                 pass_trace: None,
                 profile: None,
+                degraded_to: None,
             })
         }
         Compiled::Interp(module) => interp_main(module, args),
@@ -536,6 +952,7 @@ pub(crate) fn interp_main(module: &Module, args: Vec<Value>) -> Result<Execution
         launches: interp.op_calls(),
         pass_trace: None,
         profile: None,
+        degraded_to: None,
     })
 }
 
@@ -877,6 +1294,155 @@ mod tests {
             cache.resident_bytes()
         );
         assert!(cache.resident_bytes() <= 9 << 10);
+    }
+
+    /// Hook that panics (or errors) only above a level threshold, so the
+    /// -O1 ladder rung can succeed while -O3 fails.
+    fn failing_above(threshold: OptLevel, panic_mode: bool) -> Arc<CompileHook> {
+        Arc::new(move |_m: &Module, opts: &CompileOptions| {
+            if opts.opt_level > threshold {
+                if panic_mode {
+                    panic!("injected compile panic at {}", opts.opt_level);
+                }
+                return Err(format!("injected compile error at {}", opts.opt_level));
+            }
+            Ok(())
+        })
+    }
+
+    #[test]
+    fn panicking_compile_returns_a_typed_error_not_an_unwind() {
+        let cache = ProgramCache::new();
+        cache.set_compile_hook(failing_above(OptLevel::O0, true));
+        let m = parse_module(CF_SRC).unwrap();
+        let err = cache
+            .get_or_compile_full(&m, CompileOptions::at(Executor::Auto, OptLevel::O3))
+            .expect_err("injected panic must fail the compile");
+        assert_eq!(err.kind, CompileErrorKind::Panic);
+        assert!(!err.from_negative_cache);
+        assert!(err.to_string().contains("compile panicked"), "{err}");
+        assert!(err.to_string().contains("injected compile panic"), "{err}");
+        // The in-flight set is clean: a healthy recompile (hook cleared,
+        // negative entry forgotten) proceeds without any waiting.
+        cache.clear_compile_hook();
+        assert!(cache.forget_negative(&m, &CompileOptions::at(Executor::Auto, OptLevel::O3)));
+        let out = run_with_cache(&m, Executor::Auto, tensor_arg(-3.0), &cache).unwrap();
+        assert_eq!(out.value.tensor().f32_value(), 3.0);
+    }
+
+    #[test]
+    fn negative_cache_fails_fast_and_is_bounded() {
+        let cache = ProgramCache::new();
+        cache.set_compile_hook(failing_above(OptLevel::O0, false));
+        let m = parse_module(CF_SRC).unwrap();
+        let opts = CompileOptions::at(Executor::Auto, OptLevel::O3);
+        let first = cache.get_or_compile_full(&m, opts).expect_err("injected error");
+        assert_eq!(first.kind, CompileErrorKind::Error);
+        assert_eq!(cache.misses(), 1);
+        // Replays come from the negative cache: typed, flagged, and
+        // without another compile attempt (misses stay put).
+        let again = cache.get_or_compile_full(&m, opts).expect_err("still bad");
+        assert!(again.from_negative_cache);
+        assert_eq!(again.kind_label(), "negative_cache");
+        assert_eq!(again.to_string(), first.to_string());
+        assert_eq!(cache.misses(), 1, "negative hit recompiled");
+        assert_eq!(cache.negative_hits(), 1);
+        // The map is bounded: far more bad keys than the cap leaves at
+        // most the cap remembered.
+        for i in 0..(NEGATIVE_CACHE_CAP + 20) {
+            let _ = cache.get_or_compile_full(&distinct_module(i), opts);
+        }
+        assert!(cache.negative_len() <= NEGATIVE_CACHE_CAP);
+        // A compile that later succeeds clears its remembered failure.
+        cache.clear_compile_hook();
+        cache.forget_negative(&m, &opts);
+        run_with_cache(&m, opts, tensor_arg(1.0), &cache).unwrap();
+        let replay = cache.get_or_compile_full(&m, opts).expect("healthy after forget");
+        assert!(!replay.compiled_now, "healthy entry not resident");
+    }
+
+    #[test]
+    fn ladder_degrades_to_o1_and_stays_bit_identical_to_interp() {
+        let cache = ProgramCache::new();
+        cache.set_compile_hook(failing_above(OptLevel::O1, false));
+        let m = parse_module(CF_SRC).unwrap();
+        let opts = CompileOptions::at(Executor::Auto, OptLevel::O3);
+        let r = cache
+            .get_or_compile_resilient(&m, opts, 2)
+            .expect("ladder must rescue the -O3 failure");
+        assert_eq!(r.degraded_to, Some(OptLevel::O1));
+        assert!(r.compiled_now);
+        assert_eq!(r.trace.level, OptLevel::O1, "trace is the rung that ran");
+        assert_eq!(r.trace.degraded_from, Some(OptLevel::O3));
+        // The degraded artifact is cached under the requested key: the
+        // next resilient call is a pure hit that still reports the ladder.
+        let hit = cache.get_or_compile_resilient(&m, opts, 2).unwrap();
+        assert!(!hit.compiled_now);
+        assert_eq!(hit.degraded_to, Some(OptLevel::O1));
+        assert_eq!(cache.cached_degraded_to(&m, &opts), Some(Some(OptLevel::O1)));
+        // Bit-identical to the interpreter ground truth.
+        for v in [-2.5f32, 0.0, 4.0] {
+            let deg = run_compiled(&r.compiled, tensor_arg(v)).unwrap();
+            let interp = run_with_cache(
+                &m,
+                CompileOptions::at(Executor::Interp, OptLevel::O0),
+                tensor_arg(v),
+                &cache,
+            )
+            .unwrap();
+            assert!(deg.value.bits_eq(&interp.value), "diverged at {v}");
+        }
+    }
+
+    #[test]
+    fn ladder_falls_to_the_interpreter_floor_when_everything_fails() {
+        let cache = ProgramCache::new();
+        // Every optimizing level fails (the floor bypasses the compiler).
+        cache.set_compile_hook(Arc::new(|_m, _o| Err("all levels broken".into())));
+        let m = parse_module(CF_SRC).unwrap();
+        let opts = CompileOptions::at(Executor::Auto, OptLevel::O3);
+        // With no retry budget the failure is strict.
+        let strict = cache.get_or_compile_resilient(&m, opts, 0);
+        assert!(strict.is_err());
+        let r = cache.get_or_compile_resilient(&m, opts, 2).expect("interp floor");
+        assert_eq!(r.degraded_to, Some(OptLevel::O0));
+        assert_eq!(r.compiled.executor_name(), "interp");
+        assert_eq!(r.trace.degraded_from, Some(OptLevel::O3));
+        let out = run_compiled(&r.compiled, tensor_arg(-8.0)).unwrap();
+        assert_eq!(out.value.tensor().f32_value(), 8.0);
+    }
+
+    #[test]
+    fn racing_panicking_compiles_strand_no_waiter() {
+        // The regression the tentpole exists for: before the panic guard,
+        // a panicking compile left its key in the in-flight set forever
+        // and every coalesced waiter hung on the condvar. Eight threads
+        // race the same bad key; all must return (with a typed error)
+        // promptly.
+        let cache = Arc::new(ProgramCache::new());
+        cache.set_compile_hook(failing_above(OptLevel::O0, true));
+        let m = Arc::new(parse_module(CF_SRC).unwrap());
+        let opts = CompileOptions::at(Executor::Auto, OptLevel::O3);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cache = cache.clone();
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_compile_full(&m, opts).expect_err("injected panic")
+            }));
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        for h in handles {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "waiters still blocked: in-flight key leaked across a panic"
+            );
+            let err = h.join().expect("worker thread itself must not die");
+            assert!(
+                matches!(err.kind, CompileErrorKind::Panic),
+                "unexpected kind: {err:?}"
+            );
+        }
     }
 
     #[test]

@@ -39,6 +39,22 @@
 //! are atomics, and the cache is a lock around shared state. Executor
 //! *instances* (`Interp`, `vm::Vm`) stay cheap per-call objects — what is
 //! shared across threads is the compiled artifact, not the frame state.
+//!
+//! # Fault containment
+//!
+//! Compilation is panic-safe: the cache runs the compiler under
+//! `catch_unwind` *inside* its in-flight coalescing guard, so a panicking
+//! pass can never strand the threads parked on the same key — they wake,
+//! observe the remembered failure, and get the same typed
+//! [`cache::CompileError`] the panicking thread got ([`cache`] module
+//! docs, "Fault containment"). On top of that, [`run_with_cache_resilient`]
+//! (which [`run_auto`] routes through) degrades rather than fails: a
+//! broken `-O3` compile retries at `-O1` and finally falls back to the
+//! `-O0` interpreter floor, recording the served tier in
+//! [`Execution::degraded_to`] and bumping
+//! `relay_degraded_executions_total{level}`. Degraded results are
+//! bit-identical to the interpreter's — only latency degrades, never
+//! answers.
 
 pub mod cache;
 pub mod interp;
@@ -47,7 +63,10 @@ pub mod value;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-pub use cache::{default_cache, run_compiled, with_default_cache, Compiled, ProgramCache};
+pub use cache::{
+    default_cache, run_compiled, with_default_cache, Compiled, CompileError,
+    CompileErrorKind, ProgramCache, Resolved,
+};
 pub use interp::{eval_expr, eval_main, Interp};
 pub use value::{env_bind, env_empty, Env, Value};
 
@@ -237,6 +256,26 @@ pub struct Execution {
     /// Per-op profile of *this* execution — populated only by
     /// [`run_with_profile`], `None` everywhere else (profiling is opt-in).
     pub profile: Option<crate::telemetry::Profile>,
+    /// `Some(level)` when the degradation ladder served this execution at
+    /// a lower tier than requested (`O1` for the retry rung, `O0` for the
+    /// interpreter floor) — either because [`run_with_cache_resilient`]
+    /// degraded on this call, or because a strict lookup hit a cache entry
+    /// a previous degraded compile left behind. `None` on the healthy
+    /// path.
+    pub degraded_to: Option<OptLevel>,
+}
+
+/// Bump `relay_degraded_executions_total{level}` when an execution was
+/// served below its requested tier.
+fn record_degraded(degraded_to: Option<OptLevel>) {
+    if let Some(level) = degraded_to {
+        crate::telemetry::registry()
+            .counter_with(
+                crate::telemetry::registry::names::DEGRADED_EXECUTIONS_TOTAL,
+                &[("level", level.digit())],
+            )
+            .inc();
+    }
 }
 
 /// Run `@main(args...)` on the chosen executor / optimization level,
@@ -257,9 +296,46 @@ pub fn run_with_cache(
         out.pass_trace = Some(Arc::new(PassTrace::empty(OptLevel::O0)));
         return Ok(out);
     }
-    let (compiled, trace, _) = cache.get_or_compile_full(module, opts)?;
-    let mut out = run_compiled(&compiled, args)?;
-    out.pass_trace = Some(trace);
+    let resolved = cache.get_or_compile_full(module, opts)?;
+    let mut out = run_compiled(&resolved.compiled, args)?;
+    out.pass_trace = Some(resolved.trace);
+    // A strict lookup can still land on an entry the ladder degraded
+    // earlier; surface (and count) that honestly.
+    out.degraded_to = resolved.degraded_to;
+    record_degraded(out.degraded_to);
+    Ok(out)
+}
+
+/// [`run_with_cache`] with the graceful degradation ladder: if compiling
+/// at the requested tier fails (error *or* panic — both are contained and
+/// typed), retry at `-O1`, and finally fall back to running the
+/// unoptimized module on the `-O0` interpreter, which cannot fail to
+/// "compile". `max_opt_retries` bounds how many fallback rungs may be
+/// taken (0 = strict, 1 = allow the `-O1` retry, 2 = allow the
+/// interpreter floor too). The served tier lands in
+/// [`Execution::degraded_to`] and on the cached entry, the attached
+/// [`PassTrace`] carries `degraded_from`, and every degraded execution
+/// bumps `relay_degraded_executions_total{level}`.
+pub fn run_with_cache_resilient(
+    module: &Module,
+    opts: impl Into<CompileOptions>,
+    args: Vec<Value>,
+    cache: &ProgramCache,
+    max_opt_retries: usize,
+) -> Result<Execution, String> {
+    let opts: CompileOptions = opts.into();
+    if opts.is_uncached_interp() {
+        let mut out = cache::interp_main(module, args)?;
+        out.pass_trace = Some(Arc::new(PassTrace::empty(OptLevel::O0)));
+        return Ok(out);
+    }
+    let resolved = cache
+        .get_or_compile_resilient(module, opts, max_opt_retries)
+        .map_err(String::from)?;
+    let mut out = run_compiled(&resolved.compiled, args)?;
+    out.pass_trace = Some(resolved.trace);
+    out.degraded_to = resolved.degraded_to;
+    record_degraded(out.degraded_to);
     Ok(out)
 }
 
@@ -277,11 +353,29 @@ pub fn run_with(
     with_default_cache(|cache| run_with_cache(module, opts, args, cache))
 }
 
+/// Fallback rungs [`run_auto`] allows: the `-O1` retry and the `-O0`
+/// interpreter floor.
+pub const DEFAULT_MAX_OPT_RETRIES: usize = 2;
+
 /// [`run_with`] with automatic tier selection at the default optimization
 /// level: graph runtime if the program compiles to it, else the VM, else
 /// the interpreter.
+///
+/// `run_auto` is the resilient entry point: a compile failure (including
+/// a contained panic) degrades down the ladder
+/// ([`run_with_cache_resilient`], [`DEFAULT_MAX_OPT_RETRIES`] rungs)
+/// instead of erroring, so callers always get an answer — possibly slower,
+/// never wrong ([`Execution::degraded_to`] says which tier served it).
 pub fn run_auto(module: &Module, args: Vec<Value>) -> Result<Execution, String> {
-    run_with(module, Executor::Auto, args)
+    with_default_cache(|cache| {
+        run_with_cache_resilient(
+            module,
+            Executor::Auto,
+            args,
+            cache,
+            DEFAULT_MAX_OPT_RETRIES,
+        )
+    })
 }
 
 /// [`run_with`] under a [`crate::telemetry::ProfileScope`]: the returned
@@ -306,11 +400,13 @@ pub fn run_with_profile(
         return Ok(out);
     }
     with_default_cache(|cache| {
-        let (compiled, trace, _) = cache.get_or_compile_full(module, opts)?;
+        let resolved = cache.get_or_compile_full(module, opts)?;
         let scope = crate::telemetry::ProfileScope::begin();
-        let mut out = run_compiled(&compiled, args)?;
+        let mut out = run_compiled(&resolved.compiled, args)?;
         out.profile = Some(scope.finish());
-        out.pass_trace = Some(trace);
+        out.pass_trace = Some(resolved.trace);
+        out.degraded_to = resolved.degraded_to;
+        record_degraded(out.degraded_to);
         Ok(out)
     })
 }
@@ -430,6 +526,57 @@ mod tests {
             let again = run_auto(&m, tensor_arg(-4.0)).unwrap();
             assert_eq!(again.value.tensor().f32_value(), 4.0);
         }
+    }
+
+    #[test]
+    fn resilient_run_degrades_instead_of_failing() {
+        // Private cache with a hook that fails everything above -O0: the
+        // strict path errors, the resilient path answers from the
+        // interpreter floor with the degradation recorded on the
+        // Execution.
+        let m = parse_module(
+            "def @main(%x: Tensor[(), float32]) { multiply(add(%x, 1f), 2f) }",
+        )
+        .unwrap();
+        let cache = ProgramCache::new();
+        cache.set_compile_hook(std::sync::Arc::new(|_m, _o| {
+            Err("chaos: compile disabled".to_string())
+        }));
+        let opts = CompileOptions::at(Executor::Auto, OptLevel::O3);
+        let strict = run_with_cache(&m, opts, tensor_arg(3.0), &cache);
+        assert!(strict.is_err(), "strict path must surface the failure");
+        let out =
+            run_with_cache_resilient(&m, opts, tensor_arg(3.0), &cache, 2).unwrap();
+        assert_eq!(out.degraded_to, Some(OptLevel::O0));
+        assert_eq!(out.executor, "interp");
+        assert_eq!(out.value.tensor().f32_value(), 8.0);
+        let trace = out.pass_trace.expect("degraded execution carries a trace");
+        assert_eq!(trace.degraded_from, Some(OptLevel::O3));
+        // The degraded answer is bit-identical to the plain interpreter's.
+        let reference = run_with_cache(
+            &m,
+            CompileOptions::at(Executor::Interp, OptLevel::O0),
+            tensor_arg(3.0),
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(
+            out.value.tensor().f32_value().to_bits(),
+            reference.value.tensor().f32_value().to_bits()
+        );
+        // With the hook cleared (and the failure forgotten) the resilient
+        // path is exactly the strict path: no degradation.
+        cache.clear_compile_hook();
+        // The interp-floor entry is cached under the requested key; a
+        // fresh module forces a real compile.
+        let m2 = parse_module(
+            "def @main(%x: Tensor[(), float32]) { multiply(add(%x, 2f), 2f) }",
+        )
+        .unwrap();
+        let healthy =
+            run_with_cache_resilient(&m2, opts, tensor_arg(3.0), &cache, 2).unwrap();
+        assert_eq!(healthy.degraded_to, None);
+        assert_eq!(healthy.value.tensor().f32_value(), 10.0);
     }
 
     #[test]

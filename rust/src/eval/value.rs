@@ -55,9 +55,9 @@ pub fn env_lookup(env: &Env, var: &Var) -> Option<Value> {
 /// cells, the program cache, the serving queue) is only ever mutated in
 /// whole-value or all-or-nothing steps, so a panic in another thread
 /// cannot leave it in a state later readers would misinterpret.
-pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
+/// (Re-exported from the crate-wide [`crate::sync`] helper so every
+/// layer — tensor pool, tuning registry, PJRT cache — shares one policy.)
+pub use crate::sync::lock_unpoisoned;
 
 /// Lock a reference cell ([`lock_unpoisoned`] specialized to `Value::Ref`
 /// payloads).

@@ -59,6 +59,7 @@
 //!   rust/src/telemetry/README.md.
 
 pub mod bench;
+pub mod sync;
 pub mod telemetry;
 pub mod tensor;
 

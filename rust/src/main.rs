@@ -121,6 +121,21 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 .and_then(|v| v.parse().ok())
                 .map(std::time::Duration::from_millis)
                 .unwrap_or(cfg_defaults.default_deadline);
+            // Fault-containment knobs: how far the degradation ladder
+            // retries below the requested tier, and the per-bucket compile
+            // circuit breaker (consecutive-failure threshold + cooldown
+            // before a half-open probe). See coordinator/README.md,
+            // "Failure containment".
+            let max_opt_retries: usize = flag_value(args, "--max-opt-retries")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(cfg_defaults.max_opt_retries);
+            let breaker_threshold: usize = flag_value(args, "--breaker-threshold")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(cfg_defaults.breaker_threshold);
+            let breaker_cooldown = flag_value(args, "--breaker-cooldown-ms")
+                .and_then(|v| v.parse().ok())
+                .map(std::time::Duration::from_millis)
+                .unwrap_or(cfg_defaults.breaker_cooldown);
             let trace: Option<Arc<dyn relay::telemetry::SpanSink>> =
                 match flag_value(args, "--trace-json") {
                     None => None,
@@ -138,6 +153,9 @@ fn run(args: &[String]) -> anyhow::Result<String> {
                 fixpoint,
                 queue_budget,
                 default_deadline,
+                max_opt_retries,
+                breaker_threshold,
+                breaker_cooldown,
                 trace,
                 poly,
                 kernel_threads,

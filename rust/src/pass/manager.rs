@@ -43,6 +43,18 @@ impl OptLevel {
     pub fn all() -> [OptLevel; 4] {
         [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3]
     }
+
+    /// The bare digit, as a static string — the `level` label value on
+    /// `relay_degraded_executions_total` and the `compile_fallback` span
+    /// annotation (label values want no `-O` punctuation).
+    pub fn digit(self) -> &'static str {
+        match self {
+            OptLevel::O0 => "0",
+            OptLevel::O1 => "1",
+            OptLevel::O2 => "2",
+            OptLevel::O3 => "3",
+        }
+    }
 }
 
 impl std::fmt::Display for OptLevel {
@@ -198,6 +210,10 @@ pub struct PassTrace {
     pub total_wall: Duration,
     pub nodes_before: usize,
     pub nodes_after: usize,
+    /// `Some(requested)` when the degradation ladder served this compile
+    /// at a *lower* tier than the caller asked for (`level` is then the
+    /// tier that actually ran). `None` on the ordinary happy path.
+    pub degraded_from: Option<OptLevel>,
 }
 
 impl PassTrace {
@@ -210,6 +226,7 @@ impl PassTrace {
             total_wall: Duration::ZERO,
             nodes_before: 0,
             nodes_after: 0,
+            degraded_from: None,
         }
     }
 
@@ -251,6 +268,14 @@ impl PassTrace {
             // The rounds column doesn't total meaningfully.
             "",
         );
+        if let Some(from) = self.degraded_from {
+            let _ = writeln!(
+                out,
+                "note: degraded from {from} — the requested tier failed to \
+                 compile and the ladder fell back to {}",
+                self.level
+            );
+        }
         for r in &self.passes {
             if r.degraded {
                 let _ = writeln!(
@@ -325,6 +350,7 @@ pub fn optimize_with(
         nodes_before,
         nodes_after: module_node_count(&cur),
         passes: records,
+        degraded_from: None,
     };
     Ok((cur, trace))
 }
@@ -462,6 +488,20 @@ mod tests {
         let (_, ok) = optimize_traced(&mlp_module(), OptLevel::O3, false).unwrap();
         assert!(!ok.passes.iter().any(|r| r.degraded));
         assert!(!ok.render().contains("DEGRADED"));
+    }
+
+    #[test]
+    fn degraded_from_is_rendered_and_digit_labels_are_bare() {
+        for (level, digit) in OptLevel::all().iter().zip(["0", "1", "2", "3"]) {
+            assert_eq!(level.digit(), digit);
+        }
+        let mut t = PassTrace::empty(OptLevel::O1);
+        assert!(t.degraded_from.is_none());
+        assert!(!t.render().contains("degraded from"));
+        t.degraded_from = Some(OptLevel::O3);
+        let table = t.render();
+        assert!(table.contains("degraded from -O3"), "{table}");
+        assert!(table.contains("fell back to -O1"), "{table}");
     }
 
     #[test]

@@ -26,6 +26,7 @@ mod pjrt {
 
     use anyhow::{anyhow, Context, Result};
 
+    use crate::sync::lock_unpoisoned;
     use crate::tensor::{DType, Tensor};
 
     pub struct Runtime {
@@ -50,7 +51,7 @@ mod pjrt {
             path: &Path,
         ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
             let key = path.display().to_string();
-            if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            if let Some(exe) = lock_unpoisoned(&self.cache).get(&key) {
                 return Ok(exe.clone());
             }
             let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
@@ -59,7 +60,7 @@ mod pjrt {
             let exe = std::sync::Arc::new(
                 self.client.compile(&comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?,
             );
-            self.cache.lock().unwrap().insert(key, exe.clone());
+            lock_unpoisoned(&self.cache).insert(key, exe.clone());
             Ok(exe)
         }
 
@@ -69,18 +70,18 @@ mod pjrt {
             key: &str,
             comp: &xla::XlaComputation,
         ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-            if let Some(exe) = self.cache.lock().unwrap().get(key) {
+            if let Some(exe) = lock_unpoisoned(&self.cache).get(key) {
                 return Ok(exe.clone());
             }
             let exe = std::sync::Arc::new(
                 self.client.compile(comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?,
             );
-            self.cache.lock().unwrap().insert(key.to_string(), exe.clone());
+            lock_unpoisoned(&self.cache).insert(key.to_string(), exe.clone());
             Ok(exe)
         }
 
         pub fn cache_len(&self) -> usize {
-            self.cache.lock().unwrap().len()
+            lock_unpoisoned(&self.cache).len()
         }
 
         /// Execute with tensor inputs; returns the flattened outputs.

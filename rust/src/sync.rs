@@ -1,0 +1,90 @@
+//! Poison-tolerant locking, shared by every layer (std-only, no deps).
+//!
+//! A `std::sync::Mutex` is *poisoned* when a thread panics while holding
+//! it; every later `.lock().unwrap()` then panics too, turning one
+//! contained fault into a process-wide cascade. All of this crate's
+//! mutex-guarded shared state — the program cache, the kernel-pool job
+//! slot, the tuning registry, the admission queue, reference cells, the
+//! PJRT executable cache — is mutated only in whole-value or
+//! all-or-nothing steps: a panic between `lock` and `drop` can abandon a
+//! *stale* value but never a torn one. For such state, poisoning carries
+//! no information worth dying for, so the crate-wide rule is to ride
+//! through it with [`lock_unpoisoned`] (and [`wait_unpoisoned`] for
+//! condvar waits, which re-acquire the same mutex and can observe the
+//! same poison).
+//!
+//! State that is *not* panic-safe (none today) must keep `.unwrap()` and
+//! say why at the call site.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock a mutex, riding through poison. See the module docs for why this
+/// is safe for every mutex in this crate.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Block on a condvar, riding through poison on re-acquisition — the
+/// condvar analogue of [`lock_unpoisoned`].
+pub fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    /// The satellite's regression test: poison a mutex by panicking while
+    /// holding it, then keep using it from other code paths.
+    #[test]
+    fn survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41usize));
+        let m2 = m.clone();
+        let panicked = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("deliberate: poison the lock");
+        })
+        .join();
+        assert!(panicked.is_err(), "helper thread must have panicked");
+        assert!(m.is_poisoned(), "lock must actually be poisoned");
+
+        // A raw unwrap would panic here; the recovering lock proceeds and
+        // the guarded value is intact (the panicking thread never wrote).
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 41);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 42);
+    }
+
+    #[test]
+    fn condvar_wait_rides_through_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = pair.clone();
+        // Poison the mutex first…
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("deliberate: poison before the wait");
+        })
+        .join();
+        assert!(pair.0.is_poisoned());
+        // …then wait on it anyway: the waiter must wake and observe the
+        // flag flip rather than panic on the poisoned re-acquire.
+        let p3 = pair.clone();
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            *lock_unpoisoned(&p3.0) = true;
+            p3.1.notify_all();
+        });
+        let mut g = lock_unpoisoned(&pair.0);
+        while !*g {
+            g = wait_unpoisoned(&pair.1, g);
+        }
+        drop(g);
+        waker.join().unwrap();
+    }
+}

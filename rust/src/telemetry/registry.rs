@@ -51,6 +51,19 @@ pub mod names {
     /// Distinct (op, shape) tile-schedule decisions made by the tuner
     /// (`tensor::tune::ensure` — the `TuneKernels` pass and lazy launches).
     pub const TUNED_SCHEDULES_TOTAL: &str = "relay_tuned_schedules_total";
+    /// Compile attempts that failed, labeled by `kind`: `panic` (the
+    /// compiler unwound — caught by the cache's panic guard), `error` (a
+    /// typed pipeline/lowering error), `negative_cache` (fast-failed
+    /// against a remembered bad key without recompiling).
+    pub const COMPILE_FAILURES_TOTAL: &str = "relay_compile_failures_total";
+    /// Executions served below the requested optimization tier, labeled by
+    /// `level` — the tier that actually ran (`"1"` = the -O1 retry rung,
+    /// `"0"` = the interpreter floor).
+    pub const DEGRADED_EXECUTIONS_TOTAL: &str = "relay_degraded_executions_total";
+    /// Per-bucket compile circuit-breaker state, labeled by `bucket` and
+    /// `scope`: 0 = closed (compiles allowed), 1 = open (serving last-good
+    /// / interpreter only), 2 = half-open (one probe in flight).
+    pub const BREAKER_STATE: &str = "relay_breaker_state";
     pub const REQUEST_SECONDS: &str = "relay_request_seconds";
     pub const QUEUE_WAIT_SECONDS: &str = "relay_queue_wait_seconds";
     pub const BATCH_FORM_SECONDS: &str = "relay_batch_form_seconds";

@@ -84,6 +84,12 @@ pub struct RequestSpan {
     /// `batch_size` are 0; deadline spans have a real `queue_wait` but no
     /// batch or execute phases.
     pub outcome: Outcome,
+    /// `Some(level-digit)` when the batch was served by a degraded
+    /// artifact instead of the requested tier (`"1"` = the -O1 retry,
+    /// `"0"` = the interpreter floor); `None` on the healthy path. Carried
+    /// into the chrome-trace `args` so fallback batches are visually
+    /// attributable.
+    pub compile_fallback: Option<&'static str>,
 }
 
 /// Destination for completed spans. Implementations must tolerate calls
@@ -165,11 +171,15 @@ fn push_event(
         buf.push_str(",\n");
     }
     *first = false;
+    let fallback = match span.compile_fallback {
+        Some(level) => format!(",\"compile_fallback\":\"{level}\""),
+        None => String::new(),
+    };
     let _ = write!(
         buf,
         "{{\"name\":\"{name}\",\"cat\":\"request\",\"ph\":\"X\",\"ts\":{ts},\
          \"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"req\":{},\"batch\":{},\
-         \"compile_hit\":{},\"outcome\":\"{}\"}}}}",
+         \"compile_hit\":{},\"outcome\":\"{}\"{fallback}}}}}",
         dur.as_micros(),
         span.worker,
         span.id,
@@ -232,6 +242,7 @@ mod tests {
             execute: Duration::from_micros(90),
             total: Duration::from_micros(560),
             outcome: Outcome::Ok,
+            compile_fallback: None,
         }
     }
 
@@ -267,6 +278,7 @@ mod tests {
             let mut hit = span(8);
             hit.compile = Duration::ZERO;
             hit.compile_hit = true;
+            hit.compile_fallback = Some("0");
             w.record(&hit);
         }
         let text = std::fs::read_to_string(&path).expect("read trace file");
@@ -278,6 +290,10 @@ mod tests {
         assert!(text.contains("\"name\":\"execute\""));
         assert!(text.contains("\"req\":7"));
         assert!(text.contains("\"outcome\":\"ok\""));
+        // The degraded span carries the fallback annotation; the healthy
+        // one omits the key entirely.
+        assert!(text.contains("\"compile_fallback\":\"0\""));
+        assert_eq!(text.matches("compile_fallback").count(), 4);
         // Cache-hit span: no compile event for request 8.
         assert_eq!(text.matches("\"name\":\"compile\"").count(), 1);
         // Events are comma-separated: n events → n-1 separators (9 events:

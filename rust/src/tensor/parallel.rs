@@ -33,6 +33,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
+use crate::sync::{lock_unpoisoned, wait_unpoisoned};
+
 /// Upper bound on pool width: tensor kernels stop scaling long before
 /// this on the shapes the zoo serves, and a runaway env value must not
 /// spawn hundreds of threads.
@@ -151,7 +153,11 @@ fn worker_loop() {
     let mut seen = 0u64;
     loop {
         let job = {
-            let mut g = p.slot.lock().unwrap();
+            // Ride through poison: a chunk closure that panicked on some
+            // other thread poisons the slot mutex, but the (generation,
+            // job) pair is always written atomically under the lock, so
+            // the pool keeps serving later regions.
+            let mut g = lock_unpoisoned(&p.slot);
             loop {
                 if g.0 != seen {
                     seen = g.0;
@@ -159,7 +165,7 @@ fn worker_loop() {
                         break j;
                     }
                 }
-                g = p.work.wait(g).unwrap();
+                g = wait_unpoisoned(&p.work, g);
             }
         };
         job.run_chunks();
@@ -188,7 +194,7 @@ pub fn parallel_for(n_chunks: usize, chunk: impl Fn(usize) + Sync) {
         done: AtomicUsize::new(0),
     });
     {
-        let mut g = p.slot.lock().unwrap();
+        let mut g = lock_unpoisoned(&p.slot);
         g.0 += 1;
         g.1 = Some(job.clone());
         p.work.notify_all();
@@ -199,7 +205,7 @@ pub fn parallel_for(n_chunks: usize, chunk: impl Fn(usize) + Sync) {
     while job.done.load(Ordering::SeqCst) < job.n_chunks {
         std::thread::yield_now();
     }
-    let mut g = p.slot.lock().unwrap();
+    let mut g = lock_unpoisoned(&p.slot);
     // Retire only our own job: a concurrent caller may have published a
     // newer one into the slot (it still completes — its caller runs every
     // chunk itself if no worker picks it up).

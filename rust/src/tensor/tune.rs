@@ -26,6 +26,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::Tensor;
+use crate::sync::lock_unpoisoned;
 
 /// Cache-block extents for the tiled GEMM kernels: `mc` rows of the
 /// output are processed per parallel chunk, over `kc`-deep slices of the
@@ -130,7 +131,7 @@ fn gemm_dims_of(dims: &[usize]) -> (usize, usize, usize) {
 /// entry, then the batch-polymorphic entry (`m = 0`), then the heuristic.
 /// Never blocks compile-time probing into the launch path.
 pub fn schedule_for(op: &'static str, dims: &[usize]) -> Schedule {
-    let reg = registry().lock().unwrap();
+    let reg = lock_unpoisoned(registry());
     if let Some(s) = reg.get(&(op, dims.to_vec())) {
         return *s;
     }
@@ -147,7 +148,7 @@ pub fn schedule_for(op: &'static str, dims: &[usize]) -> Schedule {
 /// The registered schedule's label, if this (op, shape) was tuned at
 /// compile time — `None` falls back to the heuristic label at the caller.
 pub fn tuned_label(op: &'static str, dims: &[usize]) -> Option<String> {
-    let reg = registry().lock().unwrap();
+    let reg = lock_unpoisoned(registry());
     reg.get(&(op, dims.to_vec()))
         .or_else(|| {
             if dims.len() == 3 {
@@ -165,7 +166,7 @@ pub fn tuned_label(op: &'static str, dims: &[usize]) -> Option<String> {
 /// heuristic, stores the decision, and bumps
 /// `relay_tuned_schedules_total`.
 pub fn ensure(op: &'static str, dims: Vec<usize>) -> TunedKernel {
-    if let Some(s) = registry().lock().unwrap().get(&(op, dims.clone())) {
+    if let Some(s) = lock_unpoisoned(registry()).get(&(op, dims.clone())) {
         return TunedKernel { op, dims, schedule: *s };
     }
     let schedule = if probe_enabled() && is_gemm(op) {
@@ -173,7 +174,7 @@ pub fn ensure(op: &'static str, dims: Vec<usize>) -> TunedKernel {
     } else {
         heuristic(op, &dims)
     };
-    let mut reg = registry().lock().unwrap();
+    let mut reg = lock_unpoisoned(registry());
     let fresh = reg.insert((op, dims.clone()), schedule).is_none();
     drop(reg);
     if fresh {
@@ -186,7 +187,7 @@ pub fn ensure(op: &'static str, dims: Vec<usize>) -> TunedKernel {
 
 /// Number of decisions currently in the registry (test/bench hook).
 pub fn tuned_count() -> usize {
-    registry().lock().unwrap().len()
+    lock_unpoisoned(registry()).len()
 }
 
 fn is_gemm(op: &str) -> bool {

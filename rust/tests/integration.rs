@@ -381,3 +381,102 @@ fn serving_front_door_survives_overload_faults_and_deadlines_end_to_end() {
     assert_eq!(r.gauge_with(names::QUEUE_DEPTH, labels).get(), 0);
     assert_eq!(r.gauge_with(names::WORKERS_ALIVE, labels).get(), 0);
 }
+
+#[test]
+fn hostile_wire_input_gets_typed_replies_and_never_panics_a_worker() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use relay::coordinator::server::{
+        classify_line, serve_handle, ServerConfig, MAX_LINE_BYTES,
+    };
+    use relay::eval::Executor;
+    use relay::telemetry::registry::names;
+
+    let port = 7972;
+    let cfg = ServerConfig {
+        port,
+        artifact_dir: "definitely-missing-artifacts".into(),
+        executor: Executor::Vm,
+        max_batch: 2,
+        workers: 1,
+        ..Default::default()
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = serve_handle(cfg, stop).expect("front door failed to start");
+    let stats = handle.stats();
+
+    // Open a raw connection, send exactly `bytes`, read one reply line.
+    let send_raw = |bytes: &[u8]| -> std::io::Result<String> {
+        let mut s = TcpStream::connect(("127.0.0.1", port))?;
+        s.set_read_timeout(Some(Duration::from_secs(10)))?;
+        s.set_write_timeout(Some(Duration::from_secs(10)))?;
+        s.write_all(bytes)?;
+        let mut reply = String::new();
+        BufReader::new(s).read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    };
+
+    // Table of hostile request lines: each must come back as a typed
+    // `error:` reply — never a hang, never a worker panic, never a guess
+    // at what the client meant.
+    let oversized = {
+        // MAX_LINE_BYTES + 1 digits and no newline: over budget while
+        // still streaming, so the bounded reader must cut it off.
+        let mut b = vec![b'7'; MAX_LINE_BYTES + 1];
+        b.push(b'0');
+        b
+    };
+    let cases: &[(&str, &[u8], &str)] = &[
+        (
+            "deadline prefix without separator",
+            b"deadline_ms=5\n",
+            "error: malformed deadline prefix",
+        ),
+        ("empty deadline value", b"deadline_ms=;1,2\n", "error: bad deadline_ms"),
+        (
+            "non-numeric deadline value",
+            b"deadline_ms=abc;1,2\n",
+            "error: bad deadline_ms",
+        ),
+        (
+            "negative deadline value",
+            b"deadline_ms=-4;1,2\n",
+            "error: bad deadline_ms",
+        ),
+        ("non-utf8 bytes", b"\xff\xfe\x01\n", "error: request is not valid utf-8"),
+        ("oversized request line", &oversized, "error: request line too long"),
+    ];
+    for (name, bytes, want) in cases {
+        let reply = send_raw(bytes).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            reply.starts_with(want),
+            "{name}: expected a reply starting {want:?}, got {reply:?}"
+        );
+    }
+
+    // Mid-line disconnect: partial request, then the client vanishes. The
+    // server must treat it as a clean close (no reply owed, no panic).
+    {
+        let mut s = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+        s.write_all(b"deadline_ms=").expect("partial write");
+        drop(s);
+    }
+    std::thread::sleep(Duration::from_millis(50));
+
+    // After all of the above the fleet is fully healthy: a real request
+    // still gets a prediction, the worker never died, nothing respawned.
+    let reply = classify_line(port, &[0.5_f32; 8], None).expect("follow-up");
+    assert!(reply.parse::<i64>().is_ok(), "fleet unhealthy after hostile input: {reply:?}");
+    assert_eq!(stats.panics.load(Ordering::Relaxed), 0, "hostile input panicked a worker");
+    let r = relay::telemetry::registry();
+    let p = port.to_string();
+    let labels: &[(&str, &str)] = &[("port", &p)];
+    assert_eq!(r.counter_with(names::WORKER_RESPAWNS_TOTAL, labels).get(), 0);
+    assert_eq!(r.gauge_with(names::WORKERS_ALIVE, labels).get(), 1);
+    handle.shutdown();
+    assert_eq!(r.gauge_with(names::WORKERS_ALIVE, labels).get(), 0);
+}
